@@ -1,0 +1,62 @@
+//! Quickstart: load the AOT artifacts, train the paper's CNN for a few
+//! iterations with DeCo-SGD on a simulated WAN, and print what DeCo chose.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use deco::config::{wan_network, ExperimentConfig, StopConfig};
+use deco::deco::{solve, DecoInput};
+use deco::exp::ExpEnv;
+use deco::strategy::StrategyKind;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    // 1. What would DeCo pick for GPT-2 on a 100 Mbps / 100 ms WAN?
+    let pick = solve(&DecoInput {
+        s_g: 124e6 * 32.0,
+        a: 1e8,
+        b: 0.1,
+        t_comp: 0.5,
+    });
+    println!(
+        "DeCo for GPT-2@(100 Mbps, 100 ms): tau*={} delta*={:.3}",
+        pick.tau, pick.delta
+    );
+
+    // 2. Train the CNN end to end (real PJRT gradients, virtual WAN clock).
+    let cfg = ExperimentConfig {
+        task: "cnn_fmnist".into(),
+        workers: 4,
+        gamma: 0.05,
+        strategy: StrategyKind::DecoSgd { update_every: 10 },
+        network: wan_network(1e8, 0.2, 1),
+        stop: StopConfig {
+            max_iters: 60,
+            loss_target: None,
+            max_virtual_time: None,
+        },
+        seed: 1,
+        t_comp: Some(0.04),
+        s_g_bits: None,
+        log_every: 10,
+        block_topk: false,
+        clip_norm: Some(5.0),
+    };
+    let mut env = ExpEnv::new();
+    let res = env.run(&cfg)?;
+    println!("\niter  vtime(s)  loss      tau  delta");
+    for r in &res.records {
+        println!(
+            "{:>4}  {:>8.1}  {:<8.4}  {:>3}  {:.3}",
+            r.iter, r.time, r.loss, r.tau, r.delta
+        );
+    }
+    println!(
+        "\ntrained {} iters in {:.1}s of virtual WAN time; final loss {:.4}",
+        res.total_iters,
+        res.total_time,
+        res.final_loss()
+    );
+    Ok(())
+}

@@ -1,0 +1,221 @@
+"""AOT compile path: lower every L2/L1 module to HLO *text* + manifest.json.
+
+Run once via `make artifacts`; python is never on the rust hot path. Emits:
+
+  artifacts/grad_<model>.hlo.txt      (params, x, y) -> (loss, grad)
+  artifacts/compress_<d>_<delta>.hlo.txt  (g, e) -> (delta_vec, e_new)
+                                      pallas blockwise top-k EF, palette delta
+  artifacts/sgd_apply_<d>.hlo.txt     (x, upd, lr[1]) -> (x_new)
+  artifacts/manifest.json             module table + per-model tensor layout
+
+HLO TEXT is the interchange format, NOT `.serialize()` / StableHLO bytes: the
+xla crate's bundled xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit
+instruction ids); the text parser reassigns ids. We lower through
+stablehlo -> XlaComputation -> as_hlo_text with return_tuple=True, matching
+/opt/xla-example/gen_hlo.py, and unwrap with to_tuple<N>() in rust.
+
+Incremental: a module is re-lowered only if missing or older than the newest
+python source under python/compile/ (make also guards at the target level).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import sgd_apply as sgd_apply_mod
+from .kernels import topk_ef
+from .params import BLOCK
+
+# palette of compression ratios the HLO compress path is compiled for;
+# DeCo's delta* is snapped to this palette when the PJRT compressor is used
+# (the rust hot path supports arbitrary delta natively).
+DELTA_PALETTE = [0.01, 0.02, 0.05, 0.1, 0.2, 0.5]
+# demo/compare dimension for the standalone compress + apply modules
+COMPRESS_DIM = 65536
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_grad_module(mdef: model_mod.ModelDef) -> str:
+    p = jax.ShapeDtypeStruct((mdef.spec.total,), jnp.float32)
+    x = jax.ShapeDtypeStruct(mdef.x_shape, DTYPES[mdef.x_dtype])
+    y = jax.ShapeDtypeStruct(mdef.y_shape, jnp.int32)
+
+    def fn(params, xx, yy):
+        loss, grad = mdef.loss_and_grad(params, xx, yy)
+        return loss, grad
+
+    return to_hlo_text(jax.jit(fn).lower(p, x, y))
+
+
+def lower_compress_module(dim: int, delta: float) -> tuple[str, int]:
+    k = topk_ef.k_for_delta(delta, BLOCK)
+    g = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    e = jax.ShapeDtypeStruct((dim,), jnp.float32)
+
+    def fn(gg, ee):
+        return topk_ef.compress_ef(gg, ee, k=k, block=BLOCK)
+
+    return to_hlo_text(jax.jit(fn).lower(g, e)), k
+
+
+def lower_apply_module(dim: int) -> str:
+    x = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    u = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    lr = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    def fn(xx, uu, ll):
+        return (sgd_apply_mod.sgd_apply(xx, uu, ll),)
+
+    return to_hlo_text(jax.jit(fn).lower(x, u, lr))
+
+
+def delta_tag(delta: float) -> str:
+    return f"{delta:g}".replace(".", "p")
+
+
+def build_artifacts(out_dir: Path, models: list[str] | None = None,
+                    force: bool = False, verbose: bool = True) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    src_dir = Path(__file__).parent
+    stamp = max(p.stat().st_mtime for p in src_dir.rglob("*.py"))
+
+    def stale(path: Path) -> bool:
+        return force or not path.exists() or path.stat().st_mtime < stamp \
+            or path.stat().st_size == 0
+
+    registry = model_mod.build_registry()
+    if models:
+        registry = {k: v for k, v in registry.items() if k in models}
+
+    # merge with an existing manifest so partial (--models) builds never
+    # drop entries for artifacts that are already on disk
+    mpath_prev = out_dir / "manifest.json"
+    manifest: dict = {"block": BLOCK, "modules": {}, "models": {}}
+    if mpath_prev.exists():
+        try:
+            prev = json.loads(mpath_prev.read_text())
+            if prev.get("block") == BLOCK:
+                for sect in ("modules", "models"):
+                    for name, entry in prev.get(sect, {}).items():
+                        keep = sect == "models" or (
+                            out_dir / entry.get("file", "")).exists()
+                        if keep:
+                            manifest[sect][name] = entry
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    for name, mdef in registry.items():
+        fname = f"grad_{name}.hlo.txt"
+        path = out_dir / fname
+        if stale(path):
+            if verbose:
+                print(f"[aot] lowering grad_{name} (P={mdef.spec.total}) ...",
+                      flush=True)
+            path.write_text(lower_grad_module(mdef))
+        manifest["modules"][f"grad_{name}"] = {
+            "file": fname, "kind": "grad", "model": name,
+            "inputs": [
+                {"name": "params", "shape": [mdef.spec.total], "dtype": "f32"},
+                {"name": "x", "shape": list(mdef.x_shape),
+                 "dtype": mdef.x_dtype},
+                {"name": "y", "shape": list(mdef.y_shape), "dtype": "i32"},
+            ],
+            "outputs": [
+                {"name": "loss", "shape": [], "dtype": "f32"},
+                {"name": "grad", "shape": [mdef.spec.total], "dtype": "f32"},
+            ],
+        }
+        manifest["models"][name] = {
+            "task": mdef.task,
+            "param_count": mdef.spec.total,
+            "batch": mdef.batch,
+            "x_shape": list(mdef.x_shape),
+            "x_dtype": mdef.x_dtype,
+            "y_shape": list(mdef.y_shape),
+            "grad_bits": mdef.spec.total * 32,
+            "meta": mdef.meta,
+            "tensors": mdef.spec.to_manifest(),
+        }
+
+    # palette compress modules (pallas L1 lowered into HLO)
+    for delta in DELTA_PALETTE:
+        fname = f"compress_{COMPRESS_DIM}_{delta_tag(delta)}.hlo.txt"
+        path = out_dir / fname
+        k = topk_ef.k_for_delta(delta, BLOCK)
+        if stale(path):
+            if verbose:
+                print(f"[aot] lowering compress d={COMPRESS_DIM} "
+                      f"delta={delta} (k={k}) ...", flush=True)
+            text, k = lower_compress_module(COMPRESS_DIM, delta)
+            path.write_text(text)
+        manifest["modules"][f"compress_{delta_tag(delta)}"] = {
+            "file": fname, "kind": "compress", "dim": COMPRESS_DIM,
+            "delta": delta, "block": BLOCK, "k_per_block": k,
+            "inputs": [
+                {"name": "g", "shape": [COMPRESS_DIM], "dtype": "f32"},
+                {"name": "e", "shape": [COMPRESS_DIM], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"name": "delta_vec", "shape": [COMPRESS_DIM], "dtype": "f32"},
+                {"name": "e_new", "shape": [COMPRESS_DIM], "dtype": "f32"},
+            ],
+        }
+
+    # fused sgd apply
+    fname = f"sgd_apply_{COMPRESS_DIM}.hlo.txt"
+    path = out_dir / fname
+    if stale(path):
+        if verbose:
+            print(f"[aot] lowering sgd_apply d={COMPRESS_DIM} ...", flush=True)
+        path.write_text(lower_apply_module(COMPRESS_DIM))
+    manifest["modules"]["sgd_apply"] = {
+        "file": fname, "kind": "apply", "dim": COMPRESS_DIM,
+        "inputs": [
+            {"name": "x", "shape": [COMPRESS_DIM], "dtype": "f32"},
+            {"name": "upd", "shape": [COMPRESS_DIM], "dtype": "f32"},
+            {"name": "lr", "shape": [1], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "x_new", "shape": [COMPRESS_DIM], "dtype": "f32"},
+        ],
+    }
+
+    mpath = out_dir / "manifest.json"
+    mpath.write_text(json.dumps(manifest, indent=1))
+    if verbose:
+        total = sum((out_dir / m["file"]).stat().st_size
+                    for m in manifest["modules"].values())
+        print(f"[aot] {len(manifest['modules'])} modules, "
+              f"{total / 1e6:.1f} MB of HLO text, manifest -> {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output dir")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="subset of models to lower (default: all)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    build_artifacts(Path(args.out), args.models, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These define the *specification* the Pallas kernels (and the rust hot-path
+reimplementation in `rust/src/compress/`) must match bit-for-bit:
+
+Blockwise Top-k error-feedback compression (the paper's `C_delta` + EF fused):
+    a      = g + e                  (error-compensated gradient)
+    keep the k largest |a| per block of size BLOCK, ties broken by LOWER
+    index first (deterministic, so rust/jax/pallas agree exactly)
+    delta  = a * mask               (what gets transmitted)
+    e_new  = a - delta              (error carried to the next round)
+
+Tie-break spec: with thr = k-th largest |a| in the block,
+    * every |a| >  thr is selected;
+    * of the entries with |a| == thr, the first (k - #gt) in index order.
+
+Fused SGD apply:  x_new = x - lr * upd.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_mask_1d(absa: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Deterministic top-k mask over a 1-D block, lower index wins ties."""
+    n = absa.shape[0]
+    if k >= n:
+        return jnp.ones_like(absa, dtype=bool)
+    # threshold = k-th largest value
+    thr = jnp.sort(absa)[n - k]
+    gt = absa > thr
+    n_gt = jnp.sum(gt)
+    eq = absa == thr
+    take_eq = k - n_gt  # how many ties we may keep
+    eq_rank = jnp.cumsum(eq)  # 1-based rank among ties
+    sel_eq = eq & (eq_rank <= take_eq)
+    return gt | sel_eq
+
+
+def compress_ef_ref(g: jnp.ndarray, e: jnp.ndarray, block: int, k: int):
+    """Reference blockwise top-k EF compression over flat f32[d]."""
+    d = g.shape[0]
+    assert d % block == 0, "flat length must be padded to a block multiple"
+    a = g + e
+    ab = a.reshape(d // block, block)
+    absa = jnp.abs(ab)
+    masks = jnp.stack([topk_mask_1d(absa[i], k) for i in range(d // block)])
+    delta = jnp.where(masks, ab, 0.0).reshape(d)
+    e_new = a - delta
+    return delta, e_new
+
+
+def compress_ef_ref_vmap(g: jnp.ndarray, e: jnp.ndarray, block: int, k: int):
+    """Same spec, vectorized over blocks (used as the L2 jax path)."""
+    import jax
+
+    d = g.shape[0]
+    a = g + e
+    ab = a.reshape(d // block, block)
+    masks = jax.vmap(lambda row: topk_mask_1d(jnp.abs(row), k))(ab)
+    delta = jnp.where(masks, ab, 0.0).reshape(d)
+    return delta, a - delta
+
+
+def exact_topk_ref(a: np.ndarray, k: int) -> np.ndarray:
+    """Global (non-blockwise) exact top-k with the same tie-break, numpy.
+
+    The oracle the rust `compress::topk` production path is tested against.
+    """
+    n = a.shape[0]
+    if k >= n:
+        return a.copy()
+    absa = np.abs(a)
+    # argsort on (-|a|, index) == stable sort of -|a|
+    order = np.argsort(-absa, kind="stable")
+    keep = order[:k]
+    out = np.zeros_like(a)
+    out[keep] = a[keep]
+    return out
+
+
+def sgd_apply_ref(x: jnp.ndarray, upd: jnp.ndarray, lr: float) -> jnp.ndarray:
+    return x - lr * upd

@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: fused SGD parameter update `x' = x - lr * upd`.
+
+Trivial arithmetic, but expressing it as a Pallas kernel keeps the whole
+apply step a single pass over HBM (read x, read upd, write x') instead of a
+scaled-mul temporary + subtract — the same fusion XLA would need a fusion
+pass to discover. lr arrives as a (1,)-shaped operand broadcast to every
+block (scalars-as-arrays is the portable pattern under interpret=True).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _sgd_apply_kernel(x_ref, upd_ref, lr_ref, out_ref):
+    out_ref[...] = x_ref[...] - lr_ref[0] * upd_ref[...]
+
+
+def sgd_apply(x: jnp.ndarray, upd: jnp.ndarray, lr: jnp.ndarray,
+              *, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """x, upd: f32[d] with d % block == 0; lr: f32[1]. Returns f32[d]."""
+    d = x.shape[0]
+    assert d % block == 0, f"d={d} must be a multiple of block={block}"
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    lr_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _sgd_apply_kernel,
+        grid=(d // block,),
+        in_specs=[spec, spec, lr_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(x, upd, lr)

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: fused blockwise Top-k + error-feedback compression.
+
+This is the paper's gradient-compression hot-spot (`Delta = C_delta(g + e)`,
+`e' = (g + e) - Delta`, Sec. 2.2.2) expressed as a single Pallas kernel so the
+error-compensated gradient streams through VMEM exactly once per block.
+
+TPU adaptation of the usual GPU Top-k (see DESIGN.md §Hardware-Adaptation):
+GPU implementations radix-select across warps with per-thread scatters; the
+TPU has no scatter unit, so we tile the flat gradient into VMEM-sized blocks
+(BlockSpec over a 1-D grid) and compute a *threshold mask* per block with
+vector-unit-friendly ops (sort, compare, cumsum) instead of data movement.
+`k` is a compile-time constant (one artifact per palette delta — see aot.py);
+the selection rule matches kernels/ref.py (and the rust `BlockTopK`) exactly,
+including the lower-index-wins tie-break, so all three implementations are
+bit-identical.
+
+interpret=True is mandatory on this image: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget note (see DESIGN.md §Perf / EXPERIMENTS.md §Perf): per grid step
+# the kernel holds g, e, a, |a|, the sorted copy, and the two outputs in VMEM:
+# 7 * BLOCK * 4 B. With BLOCK = 1024 that is 28 KiB — far under the ~16 MiB
+# VMEM of a TPU core, leaving room for the compiler to double-buffer the
+# HBM->VMEM pipeline across grid steps. Larger BLOCK (8-64K) amortizes grid
+# overhead; BLOCK=1024 is chosen to match the rust hot path's cache tiling.
+DEFAULT_BLOCK = 1024
+
+
+def _topk_ef_kernel(g_ref, e_ref, delta_ref, enew_ref, *, k: int):
+    """One block: select k largest |g+e|, emit transmitted part + new error."""
+    a = g_ref[...] + e_ref[...]
+    absa = jnp.abs(a)
+    n = absa.shape[0]
+    if k >= n:
+        delta_ref[...] = a
+        enew_ref[...] = jnp.zeros_like(a)
+        return
+    # Threshold = k-th largest |a|; sort is the TPU-friendly selection
+    # primitive (vectorized bitonic under the hood, no scatters).
+    thr = jnp.sort(absa)[n - k]
+    gt = absa > thr
+    n_gt = jnp.sum(gt)
+    eq = absa == thr
+    # lower-index-wins tie-break: keep the first (k - n_gt) ties
+    sel_eq = eq & (jnp.cumsum(eq) <= k - n_gt)
+    mask = gt | sel_eq
+    delta = jnp.where(mask, a, 0.0)
+    delta_ref[...] = delta
+    enew_ref[...] = a - delta
+
+
+def compress_ef(g: jnp.ndarray, e: jnp.ndarray, *, k: int,
+                block: int = DEFAULT_BLOCK) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused blockwise top-k EF compress over flat f32[d], d % block == 0.
+
+    Returns (delta, e_new). delta has exactly min(k, block) non-zeros per
+    block; the achieved compression ratio is k/block.
+    """
+    d = g.shape[0]
+    assert d % block == 0, f"d={d} must be a multiple of block={block}"
+    grid = (d // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = [
+        jax.ShapeDtypeStruct((d,), g.dtype),
+        jax.ShapeDtypeStruct((d,), g.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(_topk_ef_kernel, k=k),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(g, e)
+
+
+def k_for_delta(delta: float, block: int = DEFAULT_BLOCK) -> int:
+    """Per-block k for a target compression ratio delta (ceil, >= 1)."""
+    import math
+
+    return max(1, min(block, math.ceil(delta * block)))

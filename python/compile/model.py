@@ -1,0 +1,323 @@
+"""L2: the paper's training workloads as flat-parameter JAX models.
+
+The paper evaluates CNN@FashionMNIST, CNN@CIFAR-10, ViT@ImageNet and
+GPT@Wikitext (Sec. 5.1 / C.2). We implement the same three architectures —
+the paper's exact 2conv+2fc CNN, a ViT, and a decoder-only GPT — each exposed
+through ONE interface that the rust coordinator consumes via PJRT:
+
+    loss_and_grad : (params f32[P], x, y) -> (loss f32[], grad f32[P])
+
+P is padded to a multiple of params.BLOCK so the L1 blockwise compressor and
+the rust hot path never need a remainder path. `aot.py` lowers one
+`grad_<model>` HLO module per (model, batch) and records the tensor layout in
+artifacts/manifest.json so rust can initialize parameters without python.
+
+Model sizes are configurable; the registry at the bottom defines the variants
+the experiments use (tiny ones for tests; the paper-scale gradient sizes are
+what `timesim` uses for the time model).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def attention(x: jnp.ndarray, wqkv: jnp.ndarray, wo: jnp.ndarray,
+              n_head: int, causal: bool) -> jnp.ndarray:
+    """Multi-head self-attention. x: [B,T,D], wqkv: [D,3D], wo: [D,D]."""
+    B, T, D = x.shape
+    hd = D // n_head
+    qkv = x @ wqkv  # [B,T,3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # [B,T,D] -> [B,H,T,hd]
+        return t.reshape(B, T, n_head, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)  # [B,H,T,T]
+    if causal:
+        mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+        att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, D)
+    return out @ wo
+
+
+def transformer_block(x, p, prefix: str, n_head: int,
+                      causal: bool) -> jnp.ndarray:
+    ln1g, ln1b = p[f"{prefix}/ln1_g"], p[f"{prefix}/ln1_b"]
+    ln2g, ln2b = p[f"{prefix}/ln2_g"], p[f"{prefix}/ln2_b"]
+    x = x + attention(layer_norm(x, ln1g, ln1b), p[f"{prefix}/wqkv"],
+                      p[f"{prefix}/wo"], n_head, causal)
+    h = layer_norm(x, ln2g, ln2b)
+    h = jax.nn.gelu(h @ p[f"{prefix}/w1"] + p[f"{prefix}/b1"])
+    return x + h @ p[f"{prefix}/w2"] + p[f"{prefix}/b2"]
+
+
+def _add_block_params(spec: ParamSpec, prefix: str, d: int, ff: int) -> None:
+    spec.add(f"{prefix}/ln1_g", (d,), "ones")
+    spec.add(f"{prefix}/ln1_b", (d,), "zeros")
+    spec.add(f"{prefix}/wqkv", (d, 3 * d))
+    spec.add(f"{prefix}/wo", (d, d))
+    spec.add(f"{prefix}/ln2_g", (d,), "ones")
+    spec.add(f"{prefix}/ln2_b", (d,), "zeros")
+    spec.add(f"{prefix}/w1", (d, ff))
+    spec.add(f"{prefix}/b1", (ff,), "zeros")
+    spec.add(f"{prefix}/w2", (ff, d))
+    spec.add(f"{prefix}/b2", (d,), "zeros")
+
+
+# ---------------------------------------------------------------------------
+# CNN — the paper's 2 conv + 2 fc architecture (Sec. C.2)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CnnConfig:
+    height: int = 28
+    width: int = 28
+    channels: int = 1
+    classes: int = 10
+    c1: int = 16
+    c2: int = 32
+    hidden: int = 128
+
+    def build_spec(self) -> ParamSpec:
+        s = ParamSpec()
+        s.add("conv1/w", (3, 3, self.channels, self.c1))
+        s.add("conv1/b", (self.c1,), "zeros")
+        s.add("conv2/w", (3, 3, self.c1, self.c2))
+        s.add("conv2/b", (self.c2,), "zeros")
+        fh, fw = self.height // 4, self.width // 4
+        s.add("fc1/w", (fh * fw * self.c2, self.hidden))
+        s.add("fc1/b", (self.hidden,), "zeros")
+        s.add("fc2/w", (self.hidden, self.classes))
+        s.add("fc2/b", (self.classes,), "zeros")
+        return s.finalize()
+
+
+def _conv2d(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(cfg: CnnConfig, spec: ParamSpec, flat: jnp.ndarray,
+                x: jnp.ndarray) -> jnp.ndarray:
+    p = spec.unflatten(flat)
+    h = jax.nn.relu(_conv2d(x, p["conv1/w"], p["conv1/b"]))
+    h = _maxpool2(h)
+    h = jax.nn.relu(_conv2d(h, p["conv2/w"], p["conv2/b"]))
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["fc1/w"] + p["fc1/b"])
+    return h @ p["fc2/w"] + p["fc2/b"]
+
+
+# ---------------------------------------------------------------------------
+# ViT (Sec. 5.1: ViT-Base in the paper; size configurable here)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class VitConfig:
+    image: int = 32
+    channels: int = 3
+    patch: int = 4
+    d_model: int = 64
+    n_layer: int = 2
+    n_head: int = 4
+    ff: int = 128
+    classes: int = 10
+
+    @property
+    def n_patch(self) -> int:
+        return (self.image // self.patch) ** 2
+
+    def build_spec(self) -> ParamSpec:
+        s = ParamSpec()
+        pd = self.patch * self.patch * self.channels
+        s.add("embed/w", (pd, self.d_model))
+        s.add("embed/b", (self.d_model,), "zeros")
+        s.add("cls", (1, 1, self.d_model), std=0.02)
+        s.add("pos", (1, self.n_patch + 1, self.d_model), std=0.02)
+        for i in range(self.n_layer):
+            _add_block_params(s, f"blk{i}", self.d_model, self.ff)
+        s.add("head/ln_g", (self.d_model,), "ones")
+        s.add("head/ln_b", (self.d_model,), "zeros")
+        s.add("head/w", (self.d_model, self.classes))
+        s.add("head/b", (self.classes,), "zeros")
+        return s.finalize()
+
+
+def vit_forward(cfg: VitConfig, spec: ParamSpec, flat: jnp.ndarray,
+                x: jnp.ndarray) -> jnp.ndarray:
+    p = spec.unflatten(flat)
+    B = x.shape[0]
+    g = cfg.image // cfg.patch
+    # [B,H,W,C] -> [B, n_patch, patch*patch*C]
+    xp = x.reshape(B, g, cfg.patch, g, cfg.patch, cfg.channels)
+    xp = xp.transpose(0, 1, 3, 2, 4, 5).reshape(B, g * g, -1)
+    h = xp @ p["embed/w"] + p["embed/b"]
+    cls = jnp.broadcast_to(p["cls"], (B, 1, cfg.d_model))
+    h = jnp.concatenate([cls, h], axis=1) + p["pos"]
+    for i in range(cfg.n_layer):
+        h = transformer_block(h, p, f"blk{i}", cfg.n_head, causal=False)
+    h = layer_norm(h[:, 0], p["head/ln_g"], p["head/ln_b"])
+    return h @ p["head/w"] + p["head/b"]
+
+
+# ---------------------------------------------------------------------------
+# GPT (decoder-only; paper uses GPT-2 small 124M)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GptConfig:
+    vocab: int = 512
+    seq: int = 128
+    d_model: int = 128
+    n_layer: int = 2
+    n_head: int = 4
+    ff: int = 512
+
+    def build_spec(self) -> ParamSpec:
+        s = ParamSpec()
+        s.add("wte", (self.vocab, self.d_model), std=0.02)
+        s.add("wpe", (self.seq, self.d_model), std=0.02)
+        for i in range(self.n_layer):
+            _add_block_params(s, f"blk{i}", self.d_model, self.ff)
+        s.add("ln_f/g", (self.d_model,), "ones")
+        s.add("ln_f/b", (self.d_model,), "zeros")
+        return s.finalize()
+
+
+def gpt_forward(cfg: GptConfig, spec: ParamSpec, flat: jnp.ndarray,
+                tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: i32[B, T] -> logits f32[B, T, vocab] (tied embedding head)."""
+    p = spec.unflatten(flat)
+    h = p["wte"][tokens] + p["wpe"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layer):
+        h = transformer_block(h, p, f"blk{i}", cfg.n_head, causal=True)
+    h = layer_norm(h, p["ln_f/g"], p["ln_f/b"])
+    return h @ p["wte"].T
+
+
+# ---------------------------------------------------------------------------
+# model registry — ties everything together for aot.py and the tests
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ModelDef:
+    name: str
+    task: str  # "image" | "lm"
+    spec: ParamSpec
+    loss_and_grad: Callable  # (flat, x, y) -> (loss, grad)
+    batch: int
+    x_shape: Tuple[int, ...]
+    x_dtype: str
+    y_shape: Tuple[int, ...]
+    meta: dict
+
+
+def _image_model(name: str, cfg, fwd, batch: int, extra: dict) -> ModelDef:
+    spec = cfg.build_spec()
+
+    def loss_fn(flat, x, y):
+        return cross_entropy(fwd(cfg, spec, flat, x), y)
+
+    def loss_and_grad(flat, x, y):
+        return jax.value_and_grad(loss_fn)(flat, x, y)
+
+    h, w, c = (cfg.height, cfg.width, cfg.channels) \
+        if isinstance(cfg, CnnConfig) else (cfg.image, cfg.image, cfg.channels)
+    return ModelDef(
+        name=name, task="image", spec=spec, loss_and_grad=loss_and_grad,
+        batch=batch, x_shape=(batch, h, w, c), x_dtype="f32",
+        y_shape=(batch,),
+        meta={"classes": cfg.classes, **extra})
+
+
+def _gpt_model(name: str, cfg: GptConfig, batch: int) -> ModelDef:
+    spec = cfg.build_spec()
+
+    def loss_fn(flat, x, y):
+        logits = gpt_forward(cfg, spec, flat, x)
+        return cross_entropy(logits, y)
+
+    def loss_and_grad(flat, x, y):
+        return jax.value_and_grad(loss_fn)(flat, x, y)
+
+    return ModelDef(
+        name=name, task="lm", spec=spec, loss_and_grad=loss_and_grad,
+        batch=batch, x_shape=(batch, cfg.seq), x_dtype="i32",
+        y_shape=(batch, cfg.seq),
+        meta={"vocab": cfg.vocab, "seq": cfg.seq, "d_model": cfg.d_model,
+              "n_layer": cfg.n_layer, "dataset": "synthetic-wikitext"})
+
+
+def build_registry() -> Dict[str, ModelDef]:
+    """All model variants. Keep tiny ones first — they drive the tests."""
+    reg: Dict[str, ModelDef] = {}
+
+    # paper's CNN on FashionMNIST-shaped and CIFAR-10-shaped inputs
+    reg["cnn_fmnist"] = _image_model(
+        "cnn_fmnist", CnnConfig(28, 28, 1, 10), cnn_forward, batch=32,
+        extra={"dataset": "synthetic-fmnist"})
+    reg["cnn_cifar"] = _image_model(
+        "cnn_cifar", CnnConfig(32, 32, 3, 10), cnn_forward, batch=32,
+        extra={"dataset": "synthetic-cifar10"})
+
+    # ViT (tiny stand-in for ViT-Base; paper-scale S_g handled by timesim)
+    reg["vit_tiny"] = _image_model(
+        "vit_tiny", VitConfig(32, 3, 4, 64, 2, 4, 128, 10), vit_forward,
+        batch=16, extra={"dataset": "synthetic-imagenet32"})
+
+    # GPT variants: mini for fast loops, small for the e2e example
+    reg["gpt_mini"] = _gpt_model(
+        "gpt_mini", GptConfig(vocab=512, seq=64, d_model=128, n_layer=2,
+                              n_head=4, ff=512), batch=8)
+    reg["gpt_small"] = _gpt_model(
+        "gpt_small", GptConfig(vocab=512, seq=128, d_model=256, n_layer=4,
+                               n_head=8, ff=1024), batch=4)
+    return reg
+
+
+def numerical_grad(loss_fn, flat: np.ndarray, x, y, idx, eps=1e-3):
+    """Central-difference gradient at selected indices (test oracle)."""
+    out = []
+    for i in idx:
+        fp = flat.copy(); fp[i] += eps
+        fm = flat.copy(); fm[i] -= eps
+        out.append((float(loss_fn(fp, x, y)) - float(loss_fn(fm, x, y)))
+                   / (2 * eps))
+    return np.array(out)

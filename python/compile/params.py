@@ -1,0 +1,98 @@
+"""Flat-parameter machinery shared by all L2 models.
+
+Every model exposes its parameters as ONE contiguous f32[P] vector (padded to
+a multiple of BLOCK so the L1 blockwise compressor never needs a remainder
+path). The rust coordinator only ever sees that flat vector: it owns the
+parameter buffer, receives flat gradients from the PJRT `grad_*` modules, and
+runs compression / error-feedback / SGD on flat f32 slices.
+
+The spec (tensor name, shape, offset, init) is serialized into
+artifacts/manifest.json so rust can initialize parameters itself without any
+python at runtime.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Block size of the L1 blockwise compressor; flat params are padded to a
+# multiple of this so every module in the stack agrees on sizes.
+BLOCK = 1024
+
+
+@dataclass
+class TensorSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "normal" | "zeros" | "ones"
+    std: float = 0.0
+    offset: int = 0
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclass
+class ParamSpec:
+    tensors: List[TensorSpec] = field(default_factory=list)
+
+    def add(self, name: str, shape: Tuple[int, ...], init: str = "normal",
+            std: float | None = None) -> None:
+        if std is None:
+            # fan-in scaled init by default
+            fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else (shape[0] if shape else 1)
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+        self.tensors.append(TensorSpec(name, tuple(shape), init, float(std)))
+
+    def finalize(self) -> "ParamSpec":
+        """Assign offsets and append a pad tensor up to a BLOCK multiple."""
+        off = 0
+        for t in self.tensors:
+            t.offset = off
+            off += t.size
+        pad = (-off) % BLOCK
+        if pad:
+            t = TensorSpec("_pad", (pad,), "zeros", 0.0, off)
+            self.tensors.append(t)
+            off += pad
+        self._total = off
+        self._index = {t.name: t for t in self.tensors}
+        return self
+
+    @property
+    def total(self) -> int:
+        return self._total
+
+    def slice(self, flat: jnp.ndarray, name: str) -> jnp.ndarray:
+        t = self._index[name]
+        return flat[t.offset:t.offset + t.size].reshape(t.shape)
+
+    def unflatten(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        return {t.name: self.slice(flat, t.name) for t in self.tensors
+                if t.name != "_pad"}
+
+    def init_flat(self, seed: int) -> np.ndarray:
+        """Numpy init (used by tests; rust re-implements from the manifest)."""
+        rng = np.random.default_rng(seed)
+        out = np.zeros(self.total, dtype=np.float32)
+        for t in self.tensors:
+            if t.init == "normal":
+                out[t.offset:t.offset + t.size] = (
+                    rng.standard_normal(t.size).astype(np.float32) * t.std)
+            elif t.init == "ones":
+                out[t.offset:t.offset + t.size] = 1.0
+            # zeros: already zero
+        return out
+
+    def to_manifest(self) -> List[dict]:
+        return [
+            {"name": t.name, "shape": list(t.shape), "offset": t.offset,
+             "size": t.size, "init": t.init, "std": t.std}
+            for t in self.tensors
+        ]

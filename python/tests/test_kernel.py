@@ -1,0 +1,140 @@
+# pytest: Pallas kernels vs pure-jnp ref — the CORE correctness signal.
+#
+# hypothesis sweeps shapes / deltas / seeds and asserts the pallas kernel
+# matches the ref oracle bit-for-bit (both are deterministic specs), plus the
+# paper's compressor contract (Lemma 2) and the EF bookkeeping invariant.
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.kernels import ref, sgd_apply, topk_ef  # noqa: E402
+from compile.params import BLOCK  # noqa: E402
+
+
+def _rand(n: int, seed: int, scale: float = 1.0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# pallas kernel vs ref oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nblocks=st.integers(1, 6),
+    k=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+    block_pow=st.integers(5, 9),  # block in {32 .. 512}
+)
+def test_pallas_matches_ref(nblocks, k, seed, block_pow):
+    block = 2 ** block_pow
+    k = min(k, block)
+    d = nblocks * block
+    g, e = _rand(d, seed), _rand(d, seed + 1, 0.5)
+    d_pl, e_pl = topk_ef.compress_ef(g, e, k=k, block=block)
+    d_rf, e_rf = ref.compress_ef_ref(g, e, block, k)
+    np.testing.assert_array_equal(np.asarray(d_pl), np.asarray(d_rf))
+    np.testing.assert_array_equal(np.asarray(e_pl), np.asarray(e_rf))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, BLOCK))
+def test_nnz_exactly_k_per_block(seed, k):
+    d = 4 * BLOCK
+    g, e = _rand(d, seed), _rand(d, seed + 7)
+    delta, _ = topk_ef.compress_ef(g, e, k=k)
+    nz = (np.asarray(delta).reshape(-1, BLOCK) != 0).sum(axis=1)
+    # ties at zero can only reduce the count below k if the block has zeros
+    assert (nz <= k).all()
+    assert (nz == k).all() or float(np.abs(np.asarray(g + e)).min()) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 128))
+def test_ef_invariant_and_lemma2(seed, k):
+    """delta + e_new == g + e exactly, and ||C(a)-a||^2 <= (1-k/B)||a||^2."""
+    d = 2 * BLOCK
+    g, e = _rand(d, seed), _rand(d, seed + 3)
+    delta, e_new = topk_ef.compress_ef(g, e, k=k)
+    a = np.asarray(g + e, dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(delta) + np.asarray(e_new), a)
+    # Lemma 2 with the blockwise ratio k/BLOCK
+    lhs = float(np.sum(np.asarray(e_new) ** 2))
+    rhs = (1.0 - k / BLOCK) * float(np.sum(a.astype(np.float64) ** 2))
+    assert lhs <= rhs + 1e-4
+
+
+def test_selected_are_largest():
+    g = _rand(BLOCK, 42)
+    e = jnp.zeros_like(g)
+    k = 33
+    delta, _ = topk_ef.compress_ef(g, e, k=k)
+    kept = np.abs(np.asarray(delta))
+    dropped_max = np.abs(np.asarray(g))[kept == 0].max()
+    kept_min = kept[kept > 0].min()
+    assert kept_min >= dropped_max
+
+
+def test_tie_break_lower_index_wins():
+    """All-equal magnitudes: the FIRST k must be selected."""
+    a = jnp.ones(BLOCK, dtype=jnp.float32)
+    delta, _ = topk_ef.compress_ef(a, jnp.zeros_like(a), k=10)
+    nz = np.nonzero(np.asarray(delta))[0]
+    np.testing.assert_array_equal(nz, np.arange(10))
+
+
+def test_k_full_block_is_identity():
+    g = _rand(BLOCK, 5)
+    e = _rand(BLOCK, 6)
+    delta, e_new = topk_ef.compress_ef(g, e, k=BLOCK)
+    np.testing.assert_array_equal(np.asarray(delta), np.asarray(g + e))
+    assert not np.asarray(e_new).any()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-3, 1e3),
+       lr=st.floats(1e-5, 1.0))
+def test_sgd_apply_matches_ref(seed, scale, lr):
+    d = 2 * BLOCK
+    x, u = _rand(d, seed, scale), _rand(d, seed + 1, scale)
+    out = sgd_apply.sgd_apply(x, u, jnp.asarray([lr], jnp.float32))
+    # one f32 ULP of slack: interpret-mode fuses the mul-sub differently
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.sgd_apply_ref(x, u, np.float32(lr))),
+        rtol=2e-7 * 8, atol=1e-6 * scale)
+
+
+# ---------------------------------------------------------------------------
+# exact (global) top-k oracle sanity — the spec rust's production path uses
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 500), seed=st.integers(0, 2**31 - 1))
+def test_exact_topk_ref_properties(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(n).astype(np.float32)
+    k = max(1, n // 7)
+    out = ref.exact_topk_ref(a, k)
+    nz = np.nonzero(out)[0]
+    assert len(nz) == min(k, n)
+    # every kept magnitude >= every dropped magnitude
+    if len(nz) < n:
+        assert np.abs(out[nz]).min() >= np.abs(a[out == 0]).max() - 0.0
+    # kept values pass through unchanged
+    np.testing.assert_array_equal(out[nz], a[nz])
+
+
+def test_k_for_delta():
+    assert topk_ef.k_for_delta(1.0) == BLOCK
+    assert topk_ef.k_for_delta(0.5) == BLOCK // 2
+    assert topk_ef.k_for_delta(1e-9) == 1  # floor at 1
+    assert topk_ef.k_for_delta(0.05) == 52  # ceil(0.05*1024)

@@ -1,0 +1,140 @@
+# pytest: L2 model correctness — shapes, analytic grad vs numerical diff,
+# flat-parameter layout, loss behaviour under a few SGD steps.
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile import model as model_mod  # noqa: E402
+from compile.params import BLOCK, ParamSpec  # noqa: E402
+
+REG = model_mod.build_registry()
+SMALL = ["cnn_fmnist", "vit_tiny", "gpt_mini"]
+
+
+def _batch(mdef, seed=0):
+    rng = np.random.default_rng(seed)
+    if mdef.x_dtype == "f32":
+        x = rng.standard_normal(mdef.x_shape).astype(np.float32)
+        y = rng.integers(0, mdef.meta["classes"], mdef.y_shape).astype(np.int32)
+    else:
+        x = rng.integers(0, mdef.meta["vocab"], mdef.x_shape).astype(np.int32)
+        y = rng.integers(0, mdef.meta["vocab"], mdef.y_shape).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_shapes_and_finite(name):
+    mdef = REG[name]
+    flat = jnp.asarray(mdef.spec.init_flat(0))
+    x, y = _batch(mdef)
+    loss, grad = mdef.loss_and_grad(flat, x, y)
+    assert loss.shape == ()
+    assert grad.shape == (mdef.spec.total,)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(grad)).all()
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_param_count_padded(name):
+    mdef = REG[name]
+    assert mdef.spec.total % BLOCK == 0
+    # offsets are contiguous and non-overlapping
+    off = 0
+    for t in mdef.spec.tensors:
+        assert t.offset == off
+        off += t.size
+    assert off == mdef.spec.total
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_pad_gradient_is_zero(name):
+    """The padding tail must never receive gradient."""
+    mdef = REG[name]
+    pad = [t for t in mdef.spec.tensors if t.name == "_pad"]
+    if not pad:
+        pytest.skip("model size is an exact BLOCK multiple")
+    flat = jnp.asarray(mdef.spec.init_flat(1))
+    x, y = _batch(mdef, 1)
+    _, grad = mdef.loss_and_grad(flat, x, y)
+    tail = np.asarray(grad)[pad[0].offset:]
+    assert not tail.any()
+
+
+@pytest.mark.parametrize("name", ["cnn_fmnist", "gpt_mini"])
+def test_grad_matches_numerical(name):
+    mdef = REG[name]
+    flat = mdef.spec.init_flat(2)
+    x, y = _batch(mdef, 2)
+
+    def loss_fn(f, xx, yy):
+        loss, _ = mdef.loss_and_grad(jnp.asarray(f), xx, yy)
+        return loss
+
+    _, grad = mdef.loss_and_grad(jnp.asarray(flat), x, y)
+    grad = np.asarray(grad)
+    rng = np.random.default_rng(3)
+    # probe a few non-pad coordinates with non-trivial gradient
+    nz = np.nonzero(np.abs(grad) > 1e-4)[0]
+    idx = rng.choice(nz, size=min(6, len(nz)), replace=False)
+    num = model_mod.numerical_grad(loss_fn, flat, x, y, idx)
+    np.testing.assert_allclose(grad[idx], num, rtol=0.08, atol=2e-3)
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_loss_decreases_under_sgd(name):
+    mdef = REG[name]
+    flat = jnp.asarray(mdef.spec.init_flat(4))
+    x, y = _batch(mdef, 4)
+    step = jax.jit(lambda f: mdef.loss_and_grad(f, x, y))
+    l0, g = step(flat)
+    lr = 0.05
+    for _ in range(20):
+        flat = flat - lr * g
+        loss, g = step(flat)
+    assert float(loss) < float(l0)
+
+
+def test_cross_entropy_uniform():
+    """CE of uniform logits == log(C)."""
+    logits = jnp.zeros((7, 10))
+    y = jnp.arange(7, dtype=jnp.int32) % 10
+    assert abs(float(model_mod.cross_entropy(logits, y)) - np.log(10)) < 1e-5
+
+
+def test_attention_causality():
+    """Future tokens must not influence past positions in the GPT."""
+    mdef = REG["gpt_mini"]
+    flat = jnp.asarray(mdef.spec.init_flat(5))
+    rng = np.random.default_rng(5)
+    vocab = mdef.meta["vocab"]
+    t1 = rng.integers(0, vocab, mdef.x_shape).astype(np.int32)
+    t2 = t1.copy()
+    t2[:, -1] = (t2[:, -1] + 1) % vocab  # perturb only the last token
+    from compile.model import GptConfig, gpt_forward
+
+    cfg = GptConfig(vocab=vocab, seq=mdef.meta["seq"],
+                    d_model=mdef.meta["d_model"],
+                    n_layer=mdef.meta["n_layer"], n_head=4, ff=512)
+    l1 = gpt_forward(cfg, mdef.spec, flat, jnp.asarray(t1))
+    l2 = gpt_forward(cfg, mdef.spec, flat, jnp.asarray(t2))
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]))
+
+
+def test_init_flat_deterministic():
+    spec = ParamSpec()
+    spec.add("w", (8, 8))
+    spec.add("b", (8,), "zeros")
+    spec.finalize()
+    a, b = spec.init_flat(9), spec.init_flat(9)
+    np.testing.assert_array_equal(a, b)
+    assert spec.total % BLOCK == 0

@@ -1,0 +1,67 @@
+# pytest: flat-parameter machinery — offsets, padding, init distributions.
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.params import BLOCK, ParamSpec  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=st.lists(
+    st.tuples(st.integers(1, 7), st.integers(1, 7)), min_size=1, max_size=8))
+def test_offsets_contiguous_and_padded(shapes):
+    spec = ParamSpec()
+    for i, sh in enumerate(shapes):
+        spec.add(f"t{i}", sh)
+    spec.finalize()
+    off = 0
+    for t in spec.tensors:
+        assert t.offset == off
+        off += t.size
+    assert off == spec.total
+    assert spec.total % BLOCK == 0
+
+
+def test_unflatten_views_match_slices():
+    spec = ParamSpec()
+    spec.add("a", (3, 4))
+    spec.add("b", (5,), "zeros")
+    spec.finalize()
+    flat = np.arange(spec.total, dtype=np.float32)
+    import jax.numpy as jnp
+
+    views = spec.unflatten(jnp.asarray(flat))
+    np.testing.assert_array_equal(
+        np.asarray(views["a"]).ravel(), flat[:12])
+    np.testing.assert_array_equal(np.asarray(views["b"]), flat[12:17])
+    assert "_pad" not in views
+
+
+def test_init_distributions():
+    spec = ParamSpec()
+    spec.add("w", (100, 100), "normal", std=0.3)
+    spec.add("g", (64,), "ones")
+    spec.add("b", (64,), "zeros")
+    spec.finalize()
+    flat = spec.init_flat(7)
+    w = flat[:10000]
+    assert abs(float(np.std(w)) - 0.3) < 0.02
+    assert (flat[10000:10064] == 1.0).all()
+    assert (flat[10064:10128] == 0.0).all()
+    # pad stays zero
+    pad = [t for t in spec.tensors if t.name == "_pad"][0]
+    assert not flat[pad.offset:].any()
+
+
+def test_default_std_is_fan_in_scaled():
+    spec = ParamSpec()
+    spec.add("w", (64, 32))
+    spec.finalize()
+    t = spec.tensors[0]
+    assert abs(t.std - 1 / np.sqrt(64)) < 1e-9

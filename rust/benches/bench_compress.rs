@@ -1,0 +1,80 @@
+//! Compression hot path — the per-iteration gradient-path cost the paper's
+//! δ·S_g accounting assumes is negligible. Tracks TopK / BlockTopK / RandK /
+//! Quantize selection throughput across gradient sizes plus the fused EF
+//! step and the sparse codec. (In-tree harness; criterion is not in the
+//! offline vendored set.)
+
+use deco::compress::{
+    BlockTopK, Compressor, ErrorFeedback, QuantizeQ8, RandK, SparseVec, TopK,
+};
+use deco::util::bench::{black_box, Bench};
+use deco::util::Rng;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+fn bench_compressors() {
+    let b = Bench::new("compress");
+    for &n in &[65_536usize, 1 << 20, 4 << 20] {
+        let base = randvec(n, 1);
+        let compressors: Vec<(&str, Box<dyn Compressor>)> = vec![
+            ("topk_0.05", Box::new(TopK::new(0.05))),
+            ("block_topk_0.05", Box::new(BlockTopK::new(0.05))),
+            ("randk_0.05", Box::new(RandK::new(0.05))),
+            ("quantize_q8", Box::new(QuantizeQ8::new())),
+        ];
+        for (name, comp) in compressors {
+            let mut rng = Rng::new(2);
+            let mut buf = base.clone();
+            b.bench_bytes(
+                &format!("{name}/{n}"),
+                (n * 4) as u64,
+                || {
+                    buf.copy_from_slice(&base);
+                    black_box(comp.compress(&mut buf, &mut rng));
+                },
+            );
+        }
+    }
+}
+
+fn bench_ef_step() {
+    let b = Bench::new("ef_step");
+    for &n in &[65_536usize, 1 << 20] {
+        let g = randvec(n, 3);
+        let comp = TopK::new(0.05);
+        let mut ef = ErrorFeedback::new(n);
+        let mut rng = Rng::new(4);
+        let mut buf = g.clone();
+        b.bench_bytes(&format!("topk_0.05/{n}"), (n * 4) as u64, || {
+            buf.copy_from_slice(&g);
+            black_box(ef.step(&mut buf, &comp, &mut rng));
+        });
+    }
+}
+
+fn bench_sparse_codec() {
+    let b = Bench::new("sparse_codec");
+    let n = 1 << 20;
+    let mut buf = randvec(n, 5);
+    let mut rng = Rng::new(6);
+    TopK::new(0.05).compress(&mut buf, &mut rng);
+    b.bench_bytes("encode_1M_d0.05", (n * 4) as u64, || {
+        black_box(SparseVec::encode_with_capacity(&buf, n / 20 + 1));
+    });
+    let sv = SparseVec::encode(&buf);
+    let mut acc = vec![0.0f32; n];
+    b.bench("aggregate_1M_d0.05", || {
+        sv.add_into_scaled(&mut acc, 0.25);
+        black_box(acc[0]);
+    });
+}
+
+fn main() {
+    println!("== bench_compress (gradient hot path) ==");
+    bench_compressors();
+    bench_ef_step();
+    bench_sparse_codec();
+}

@@ -1,0 +1,27 @@
+//! DeCo (Algorithm 1) solve cost — this runs inside the training loop every
+//! E iterations, so it must be microseconds (the paper claims O(T/E) total
+//! overhead, independent of n).
+
+use deco::deco::solve::{solve, solve_brute_force, DecoInput};
+use deco::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("== bench_deco (Algorithm 1 solver) ==");
+    let b = Bench::new("deco_solve");
+    for (name, inp) in [
+        ("gpt2_wan", DecoInput { s_g: 124e6 * 32.0, a: 1e8, b: 0.1, t_comp: 0.5 }),
+        ("vit_wan", DecoInput { s_g: 86e6 * 32.0, a: 5e8, b: 1.0, t_comp: 0.25 }),
+        (
+            "extreme_latency",
+            DecoInput { s_g: 124e6 * 32.0, a: 1e7, b: 2.0, t_comp: 0.05 },
+        ),
+    ] {
+        b.bench(&format!("fast/{name}"), || {
+            black_box(solve(&inp));
+        });
+    }
+    let inp = DecoInput { s_g: 124e6 * 32.0, a: 1e8, b: 0.1, t_comp: 0.5 };
+    b.bench("brute_force_400", || {
+        black_box(solve_brute_force(&inp, 400));
+    });
+}

@@ -1,0 +1,57 @@
+//! End-to-end coordinator iteration — the full DD-EF-SGD hot loop (gradient
+//! oracle → EF+Top-k → sparse aggregate → apply → virtual clock) on the
+//! analytic quadratic oracle, isolating L3 overhead from PJRT compute.
+//! One shape per paper experiment (Fig. 4 / Fig. 5 / Table 1 runs are
+//! sequences of exactly these iterations).
+
+use deco::config::{wan_network, ExperimentConfig, StopConfig};
+use deco::coordinator::TrainLoop;
+use deco::optim::Quadratic;
+use deco::strategy::StrategyKind;
+use deco::util::bench::{black_box, Bench};
+
+fn run_iters(dim: usize, workers: usize, iters: usize, kind: StrategyKind) -> f64 {
+    let oracle = Quadratic::new(dim, workers, 2.0, 0.2, 1.0, 0.5, 3);
+    let cfg = ExperimentConfig {
+        task: "quadratic".into(),
+        workers,
+        gamma: 0.2,
+        strategy: kind,
+        network: wan_network(1e8, 0.2, 1),
+        stop: StopConfig { max_iters: iters, loss_target: None, max_virtual_time: None },
+        seed: 3,
+        t_comp: Some(0.05),
+        s_g_bits: Some(124e6 * 32.0),
+        log_every: usize::MAX, // exclude loss evals: hot loop only
+        block_topk: false,
+        clip_norm: Some(5.0),
+    };
+    let params = cfg.train_params(dim);
+    let mut tl = TrainLoop::new(oracle, cfg.strategy.build(), cfg.network.link(), params);
+    tl.run("bench").total_time
+}
+
+fn main() {
+    println!("== bench_pipeline (DD-EF-SGD iteration hot loop) ==");
+    let b = Bench::new("pipeline");
+    for &dim in &[4096usize, 65_536, 1 << 20] {
+        b.bench_bytes(
+            &format!("deco_100iters_4w/{dim}"),
+            (dim * 4 * 4 * 100) as u64, // gradients moved per measured run
+            || {
+                black_box(run_iters(
+                    dim,
+                    4,
+                    100,
+                    StrategyKind::DecoSgd { update_every: 20 },
+                ));
+            },
+        );
+    }
+    for kind in StrategyKind::paper_baselines() {
+        let label = kind.label();
+        b.bench(&format!("strategies_64k/{label}"), || {
+            black_box(run_iters(65_536, 4, 50, kind.clone()));
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! PJRT runtime benches — gradient-module execution (the L2 compute the
+//! virtual clock prices as T_comp) and the AOT-lowered L1 Pallas compress
+//! kernel vs the rust hot-path compressor on identical inputs.
+//!
+//! Skips gracefully (empty run) when `artifacts/` has not been built.
+
+use deco::compress::{BlockTopK, Compressor};
+use deco::runtime::client::BatchInput;
+use deco::runtime::{default_artifacts_dir, Runtime};
+use deco::util::bench::{black_box, Bench};
+use deco::util::Rng;
+
+fn main() {
+    println!("== bench_runtime (PJRT grad + pallas compress) ==");
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench_runtime: artifacts missing, run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::load(&dir).expect("runtime");
+    let b = Bench::new("pjrt");
+
+    // grad module execution — one training-step of the CNN
+    let exec = rt.grad_exec("cnn_fmnist").expect("grad exec");
+    let m = exec.model.clone();
+    let params = m.init_flat(1);
+    let mut rng = Rng::new(2);
+    let xlen: usize = m.x_shape.iter().product();
+    let x: Vec<f32> = (0..xlen).map(|_| rng.normal_f32()).collect();
+    let y: Vec<i32> = (0..m.y_shape.iter().product::<usize>())
+        .map(|_| rng.below(10) as i32)
+        .collect();
+    let mut grad = vec![0.0f32; m.param_count];
+    b.bench("grad_cnn_fmnist", || {
+        black_box(
+            exec.run(&params, BatchInput::F32(&x), &y, &mut grad).unwrap(),
+        );
+    });
+
+    // L1 pallas compress kernel (AOT) vs rust BlockTopK, same spec
+    let comp = rt.compress_exec("compress_0p05").expect("compress exec");
+    let dim = comp.dim;
+    let g: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+    let e: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+    b.bench("pallas_compress_64k_d0.05", || {
+        black_box(comp.run(&g, &e).unwrap());
+    });
+    let rust_comp = BlockTopK::new(0.05);
+    let mut rng2 = Rng::new(3);
+    let mut buf = g.clone();
+    b.bench("rust_blocktopk_64k_d0.05", || {
+        buf.copy_from_slice(&g);
+        black_box(rust_comp.compress(&mut buf, &mut rng2));
+    });
+
+    // fused sgd apply module
+    let apply = rt.apply_exec().expect("apply exec");
+    let x2: Vec<f32> = (0..apply.dim).map(|_| rng.normal_f32()).collect();
+    let u2: Vec<f32> = (0..apply.dim).map(|_| rng.normal_f32()).collect();
+    b.bench("pallas_sgd_apply_64k", || {
+        black_box(apply.run(&x2, &u2, 0.1).unwrap());
+    });
+}

@@ -1,0 +1,49 @@
+//! Timeline model benches — the Eq. 19 recurrence and trace-driven link
+//! integration that price every training iteration (also regenerates the
+//! Fig. 1 grid end-to-end to keep its cost visible).
+
+use deco::netsim::{BandwidthTrace, Link, TraceKind};
+use deco::timesim::{t_avg_closed_form, EventSim, PipelineParams};
+use deco::util::bench::{black_box, Bench};
+
+fn params() -> PipelineParams {
+    PipelineParams {
+        a: 1e8,
+        b: 0.2,
+        delta: 0.05,
+        tau: 2,
+        t_comp: 0.35,
+        s_g: 124e6 * 32.0,
+    }
+}
+
+fn main() {
+    println!("== bench_timesim (Theorem 3 machinery) ==");
+    let b = Bench::new("timesim");
+    let p = params();
+    b.bench("event_sim_10k_iters", || {
+        black_box(EventSim::run(&p, 10_000).total_time());
+    });
+    b.bench("closed_form", || {
+        black_box(t_avg_closed_form(&p));
+    });
+    let link = Link::new(
+        BandwidthTrace::new(TraceKind::Ou {
+            mean_bps: 1e8,
+            sigma_bps: 2e7,
+            theta: 0.3,
+            seed: 1,
+        }),
+        0.2,
+    );
+    b.bench("ou_trace_transfer_1k", || {
+        let mut t = 0.0;
+        for _ in 0..1000 {
+            t = link.arrival(t, 10_000_000);
+        }
+        black_box(t);
+    });
+    b.bench("fig1_heatmap_grid", || {
+        black_box(deco::exp::fig1::run(0.5, 124e6 * 32.0));
+    });
+}

@@ -1,0 +1,150 @@
+//! Blockwise Top-k — the rust twin of the L1 Pallas kernel
+//! (`python/compile/kernels/topk_ef.py`).
+//!
+//! Selects `k = ceil(delta * BLOCK)` entries per BLOCK-sized tile with the
+//! shared tie-break spec, so the output is bit-identical to the Pallas
+//! kernel and to the jnp oracle (verified against
+//! `artifacts/golden_compress.json`). Blockwise selection is what a TPU can
+//! do without scatters — and on CPU it is also the cache-friendly variant:
+//! each 4 KiB tile is touched exactly once.
+
+use super::{Compressor, k_for_delta};
+use crate::util::Rng;
+use crate::BLOCK;
+use std::cell::RefCell;
+
+#[derive(Debug)]
+pub struct BlockTopK {
+    delta: f64,
+    block: usize,
+    k: usize,
+    scratch: RefCell<Vec<u32>>,
+}
+
+impl Clone for BlockTopK {
+    fn clone(&self) -> Self {
+        Self::with_block(self.delta, self.block)
+    }
+}
+
+impl BlockTopK {
+    pub fn new(delta: f64) -> Self {
+        Self::with_block(delta, BLOCK)
+    }
+
+    pub fn with_block(delta: f64, block: usize) -> Self {
+        assert!(delta > 0.0 && delta <= 1.0, "delta must be in (0,1]");
+        assert!(block > 0);
+        let k = k_for_delta(delta, block);
+        Self { delta, block, k, scratch: RefCell::new(Vec::new()) }
+    }
+
+    pub fn k_per_block(&self) -> usize {
+        self.k
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Compress one block in place; returns kept count. Same spec as
+    /// `TopK::apply` restricted to the tile (integer-key selection, see
+    /// `topk::abs_key`).
+    fn apply_block(&self, a: &mut [f32]) -> usize {
+        #[inline]
+        fn abs_key(x: f32) -> u32 {
+            x.to_bits() & 0x7FFF_FFFF
+        }
+        let n = a.len();
+        let k = self.k.min(n);
+        if k >= n {
+            return n;
+        }
+        let (thr, n_gt) = {
+            let mut keys = self.scratch.borrow_mut();
+            keys.clear();
+            keys.extend(a.iter().map(|x| abs_key(*x)));
+            let (left, thr, _) =
+                keys.select_nth_unstable_by(k - 1, |x, y| y.cmp(x));
+            let thr = *thr;
+            (thr, left.iter().filter(|&&x| x > thr).count())
+        };
+        let mut take_eq = k - n_gt;
+        let mut kept = 0usize;
+        for x in a.iter_mut() {
+            let m = abs_key(*x);
+            if m > thr {
+                kept += 1;
+            } else if m == thr && take_eq > 0 {
+                take_eq -= 1;
+                kept += 1;
+            } else {
+                *x = 0.0;
+            }
+        }
+        kept
+    }
+}
+
+impl Compressor for BlockTopK {
+    fn name(&self) -> &'static str {
+        "block_topk"
+    }
+
+    fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    fn compress(&self, a: &mut [f32], _rng: &mut Rng) -> usize {
+        let mut kept = 0usize;
+        let mut chunks = a.chunks_exact_mut(self.block);
+        for chunk in &mut chunks {
+            kept += self.apply_block(chunk);
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            kept += self.apply_block(rem);
+        }
+        kept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn k_per_block_everywhere() {
+        let c = BlockTopK::with_block(0.05, 256); // k = 13
+        let mut rng = Rng::new(1);
+        let mut a: Vec<f32> = (0..1024).map(|_| rng.normal_f32()).collect();
+        let kept = c.compress(&mut a, &mut rng);
+        assert_eq!(kept, 4 * 13);
+        for blk in a.chunks(256) {
+            assert_eq!(blk.iter().filter(|&&x| x != 0.0).count(), 13);
+        }
+    }
+
+    #[test]
+    fn remainder_block_handled() {
+        let c = BlockTopK::with_block(0.5, 100);
+        let mut rng = Rng::new(2);
+        let mut a: Vec<f32> = (0..250).map(|_| rng.normal_f32()).collect();
+        let kept = c.compress(&mut a, &mut rng);
+        // blocks: 100,100,50 -> k=50,50,min(50,50)=25? k=ceil(.5*100)=50,
+        // remainder block of 50 keeps min(50, 50)=50 -> all of it
+        assert_eq!(kept, 50 + 50 + 50);
+    }
+
+    #[test]
+    fn matches_global_topk_when_one_block() {
+        let mut rng = Rng::new(3);
+        let orig: Vec<f32> = (0..512).map(|_| rng.normal_f32()).collect();
+        let mut a1 = orig.clone();
+        let mut a2 = orig.clone();
+        BlockTopK::with_block(0.1, 512).compress(&mut a1, &mut rng);
+        super::super::TopK::new(0.1).compress(&mut a2, &mut rng);
+        assert_eq!(a1, a2);
+    }
+}

@@ -1,0 +1,159 @@
+//! Error feedback (EF) — the paper's Sec. 2.2.2 update rules:
+//!
+//! ```text
+//! Delta_t^i = C_delta(g_t^i + e_t^i)
+//! e_{t+1}^i = g_t^i + e_t^i - Delta_t^i
+//! ```
+//!
+//! One `ErrorFeedback` instance per worker. `step` is the gradient-path hot
+//! call: it adds the carried error into the (mutable) gradient buffer, runs
+//! the compressor in place, and recovers the new error without any extra
+//! allocation (the caller's buffer becomes Delta; e is updated from the
+//! difference). The invariant `Delta + e_new == g + e_old` holds *bitwise*
+//! because e_new is computed as exactly `a - Delta` with Delta ∈ {a_i, 0}.
+
+use super::Compressor;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback {
+    e: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(dim: usize) -> Self {
+        Self { e: vec![0.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.e.len()
+    }
+
+    pub fn error(&self) -> &[f32] {
+        &self.e
+    }
+
+    /// Squared norm of the carried error (the `||e_t||^2` the theory bounds).
+    pub fn error_norm_sq(&self) -> f64 {
+        crate::util::stats::l2_norm_sq(&self.e)
+    }
+
+    /// Reset carried error (used when delta/tau switch discontinuously would
+    /// invalidate stale error — DeCo keeps it by default, matching Algo 2).
+    pub fn reset(&mut self) {
+        self.e.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Hot call: `g` enters as the raw gradient, leaves as `Delta`.
+    /// Returns the number of transmitted (non-zero budget) entries.
+    pub fn step(
+        &mut self,
+        g: &mut [f32],
+        comp: &dyn Compressor,
+        rng: &mut Rng,
+    ) -> usize {
+        assert_eq!(g.len(), self.e.len(), "gradient/eF dim mismatch");
+        // a = g + e  (into the gradient buffer)
+        for (gi, ei) in g.iter_mut().zip(self.e.iter()) {
+            *gi += *ei;
+        }
+        // stash a into e (so after in-place compression we can recover it)
+        self.e.copy_from_slice(g);
+        let kept = comp.compress(g, rng);
+        // e_new = a - Delta ; for selection compressors this is exact:
+        // kept coords -> 0, dropped coords -> a_i
+        for (ei, di) in self.e.iter_mut().zip(g.iter()) {
+            *ei -= *di;
+        }
+        kept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{BlockTopK, Identity, RandK, TopK};
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn ef_invariant_bitwise() {
+        // Delta + e_new == g + e_old exactly, across iterations
+        let n = 2048;
+        let mut ef = ErrorFeedback::new(n);
+        let comp = TopK::new(0.05);
+        let mut rng = Rng::new(1);
+        for t in 0..10 {
+            let g = randvec(n, 100 + t);
+            let e_old = ef.error().to_vec();
+            let mut buf = g.clone();
+            ef.step(&mut buf, &comp, &mut rng);
+            for i in 0..n {
+                let a = g[i] + e_old[i];
+                assert_eq!(buf[i] + ef.error()[i], a, "i={i} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_never_accumulates_error() {
+        let n = 256;
+        let mut ef = ErrorFeedback::new(n);
+        let mut rng = Rng::new(2);
+        for t in 0..5 {
+            let mut g = randvec(n, t);
+            ef.step(&mut g, &Identity, &mut rng);
+            assert_eq!(ef.error_norm_sq(), 0.0);
+        }
+    }
+
+    #[test]
+    fn error_bounded_under_repeated_compression() {
+        // Lemma 7's premise: with top-k EF the error stays bounded
+        // (geometric contraction), it must not blow up over many steps.
+        let n = 4096;
+        let mut ef = ErrorFeedback::new(n);
+        let comp = BlockTopK::new(0.05);
+        let mut rng = Rng::new(3);
+        let mut max_norm: f64 = 0.0;
+        for t in 0..300 {
+            let mut g = randvec(n, 7000 + t);
+            ef.step(&mut g, &comp, &mut rng);
+            max_norm = max_norm.max(ef.error_norm_sq());
+        }
+        // ||g||^2 ~ n; the EF bound is ~ (2/delta)*(1-delta)/(1-(1-d/2)) * n
+        // with delta=0.05 that's O(40n); assert we stay well inside 100n.
+        assert!(
+            max_norm < 100.0 * n as f64,
+            "error diverged: {max_norm} vs n={n}"
+        );
+    }
+
+    #[test]
+    fn randk_ef_invariant() {
+        let n = 512;
+        let mut ef = ErrorFeedback::new(n);
+        let comp = RandK::new(0.1);
+        let mut rng = Rng::new(4);
+        let g = randvec(n, 9);
+        let mut buf = g.clone();
+        ef.step(&mut buf, &comp, &mut rng);
+        for i in 0..n {
+            assert_eq!(buf[i] + ef.error()[i], g[i]);
+        }
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut ef = ErrorFeedback::new(64);
+        let mut g = randvec(64, 10);
+        let mut rng = Rng::new(5);
+        ef.step(&mut g, &TopK::new(0.1), &mut rng);
+        assert!(ef.error_norm_sq() > 0.0);
+        ef.reset();
+        assert_eq!(ef.error_norm_sq(), 0.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Hybrid compressor — CocktailSGD-style [21] stacking of random
+//! sparsification and 8-bit quantization under one EF loop.
+//!
+//! The paper's CocktailSGD baseline is modeled strategically (static (τ, δ)
+//! from one DeCo solve) with Top-k, matching its appendix description; this
+//! module provides the *operator* CocktailSGD actually ships — random-k
+//! followed by stochastic Q8 on the survivors — for the compressor ablation
+//! (`exp ablation --which compressor`). Wire size: 8 bits/value + 32-bit
+//! index per kept entry + one scale per chunk.
+
+use super::{k_for_delta, Compressor};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct HybridRandKQ8 {
+    /// sparsification ratio (fraction of coordinates kept)
+    delta: f64,
+}
+
+impl HybridRandKQ8 {
+    pub fn new(delta: f64) -> Self {
+        assert!(delta > 0.0 && delta <= 1.0);
+        Self { delta }
+    }
+
+    /// Effective bit-ratio vs dense f32: delta × (8 + 32)/32 (value+index).
+    pub fn effective_ratio(&self) -> f64 {
+        self.delta * (8.0 + 32.0) / 32.0
+    }
+}
+
+impl Compressor for HybridRandKQ8 {
+    fn name(&self) -> &'static str {
+        "hybrid_randk_q8"
+    }
+
+    fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    fn compress(&self, a: &mut [f32], rng: &mut Rng) -> usize {
+        let n = a.len();
+        let k = k_for_delta(self.delta, n);
+        // 1. random-k mask
+        if k < n {
+            let keep = rng.sample_indices(n, k);
+            let mut mask = vec![false; n];
+            for &i in &keep {
+                mask[i as usize] = true;
+            }
+            for (x, m) in a.iter_mut().zip(&mask) {
+                if !*m {
+                    *x = 0.0;
+                }
+            }
+        }
+        // 2. stochastic Q8 on survivors (per-call scale over the non-zeros)
+        let maxabs = a.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        if maxabs > 0.0 {
+            let scale = maxabs / 127.0;
+            for x in a.iter_mut() {
+                if *x != 0.0 {
+                    let q = *x / scale;
+                    let lo = q.floor();
+                    let p = q - lo;
+                    let q = if rng.next_f32() < p { lo + 1.0 } else { lo };
+                    *x = q.clamp(-127.0, 127.0) * scale;
+                }
+            }
+        }
+        k.min(n)
+    }
+
+    fn wire_bits(&self, kept: usize, _d: usize) -> u64 {
+        kept as u64 * (8 + 32) + 32 // values + indices + scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::ErrorFeedback;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn keeps_at_most_k_nonzeros() {
+        let mut rng = Rng::new(1);
+        let mut a = randvec(1000, 2);
+        let c = HybridRandKQ8::new(0.1);
+        let kept = c.compress(&mut a, &mut rng);
+        assert_eq!(kept, 100);
+        // quantization can round small survivors to exactly 0
+        assert!(a.iter().filter(|&&x| x != 0.0).count() <= 100);
+    }
+
+    #[test]
+    fn quantization_error_bounded_on_survivors() {
+        let mut rng = Rng::new(3);
+        let orig = randvec(512, 4);
+        let mut a = orig.clone();
+        let c = HybridRandKQ8::new(1.0); // no sparsification: pure Q8
+        c.compress(&mut a, &mut rng);
+        let maxabs = orig.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let step = maxabs / 127.0;
+        for (o, q) in orig.iter().zip(&a) {
+            assert!((o - q).abs() <= step + 1e-6);
+        }
+    }
+
+    #[test]
+    fn ef_keeps_hybrid_stable() {
+        // error stays bounded across many rounds despite the double lossy op
+        let n = 4096;
+        let mut ef = ErrorFeedback::new(n);
+        let c = HybridRandKQ8::new(0.05);
+        let mut rng = Rng::new(5);
+        let mut worst = 0.0f64;
+        for t in 0..200 {
+            let mut g = randvec(n, 100 + t);
+            ef.step(&mut g, &c, &mut rng);
+            worst = worst.max(ef.error_norm_sq());
+        }
+        assert!(worst < 200.0 * n as f64, "EF diverged: {worst}");
+    }
+
+    #[test]
+    fn wire_accounting() {
+        let c = HybridRandKQ8::new(0.1);
+        assert_eq!(c.wire_bits(100, 1000), 100 * 40 + 32);
+        assert!((c.effective_ratio() - 0.125).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,105 @@
+//! Gradient compression substrate — the paper's `C_delta(·)` operators plus
+//! the error-feedback bookkeeping (Sec. 2.2.2) and a sparse wire codec.
+//!
+//! The selection rule is a single *specification* shared by three
+//! implementations that are cross-checked in tests:
+//! 1. the pure-jnp oracle (`python/compile/kernels/ref.py`),
+//! 2. the L1 Pallas kernel (`python/compile/kernels/topk_ef.py`), and
+//! 3. the rust hot path here.
+//!
+//! Spec (deterministic, lower index wins ties): given magnitudes `|a|` and a
+//! budget `k`, select every entry with `|a| > thr` (thr = k-th largest), then
+//! the first `k − #gt` entries with `|a| == thr` in index order.
+
+pub mod blockwise;
+pub mod ef;
+pub mod hybrid;
+pub mod quantize;
+pub mod randk;
+pub mod sparse;
+pub mod topk;
+
+pub use blockwise::BlockTopK;
+pub use ef::ErrorFeedback;
+pub use hybrid::HybridRandKQ8;
+pub use quantize::QuantizeQ8;
+pub use randk::RandK;
+pub use sparse::{SparseVec, COO_BITS_PER_ENTRY};
+pub use topk::TopK;
+
+use crate::util::Rng;
+
+/// A gradient compressor with ratio `delta = (transmitted elements) / d`.
+///
+/// `compress` zeroes the dropped coordinates **in place** and returns the
+/// number of elements kept (so the caller can account transmitted bits).
+/// Implementations must be deterministic given `rng` state.
+pub trait Compressor: Send {
+    /// Human-readable name for metrics/CSV.
+    fn name(&self) -> &'static str;
+
+    /// Nominal compression ratio in (0, 1].
+    fn delta(&self) -> f64;
+
+    /// Keep approximately `delta * a.len()` entries of `a`, zeroing the
+    /// rest in place. Returns the exact number kept.
+    fn compress(&self, a: &mut [f32], rng: &mut Rng) -> usize;
+
+    /// Bits on the wire for `kept` entries of a length-`d` vector.
+    /// Sparse methods pay index+value per entry; dense methods override.
+    fn wire_bits(&self, kept: usize, _d: usize) -> u64 {
+        (kept as u64) * COO_BITS_PER_ENTRY
+    }
+}
+
+/// Identity compressor (`delta = 1`): D-SGD / DGA path. Wire format is the
+/// dense vector — 32 bits per element, no index overhead.
+#[derive(Clone, Debug, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn delta(&self) -> f64 {
+        1.0
+    }
+
+    fn compress(&self, a: &mut [f32], _rng: &mut Rng) -> usize {
+        a.len()
+    }
+
+    fn wire_bits(&self, _kept: usize, d: usize) -> u64 {
+        (d as u64) * 32
+    }
+}
+
+/// Budget for a ratio over a length: `ceil(delta * n)`, clamped to [1, n].
+/// Matches `python/compile/kernels/topk_ef.py::k_for_delta`.
+pub fn k_for_delta(delta: f64, n: usize) -> usize {
+    ((delta * n as f64).ceil() as usize).clamp(1, n.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_for_delta_matches_python() {
+        assert_eq!(k_for_delta(1.0, 1024), 1024);
+        assert_eq!(k_for_delta(0.5, 1024), 512);
+        assert_eq!(k_for_delta(1e-9, 1024), 1);
+        assert_eq!(k_for_delta(0.05, 1024), 52);
+    }
+
+    #[test]
+    fn identity_keeps_everything() {
+        let mut a = vec![1.0f32, -2.0, 3.0];
+        let mut rng = Rng::new(0);
+        let kept = Identity.compress(&mut a, &mut rng);
+        assert_eq!(kept, 3);
+        assert_eq!(a, vec![1.0, -2.0, 3.0]);
+        assert_eq!(Identity.wire_bits(3, 3), 96);
+    }
+}

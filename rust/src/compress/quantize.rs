@@ -1,0 +1,105 @@
+//! Stochastic 8-bit quantization (QSGD-style, per-chunk scale).
+//!
+//! An ablation compressor: hybrid schemes (CocktailSGD [21]) stack random
+//! sparsification with quantization. Quantization keeps every coordinate but
+//! shrinks each to 8 bits, so `delta()` reports the *bit* ratio 8/32 = 0.25
+//! and `wire_bits` accounts 8 bits/element + one f32 scale per chunk.
+
+use super::Compressor;
+use crate::util::Rng;
+
+const CHUNK: usize = 1024;
+
+#[derive(Clone, Debug, Default)]
+pub struct QuantizeQ8;
+
+impl QuantizeQ8 {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Quantize one chunk to int8 levels stochastically, dequantize back.
+    fn roundtrip_chunk(a: &mut [f32], rng: &mut Rng) {
+        let maxabs = a.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        if maxabs == 0.0 {
+            return;
+        }
+        let scale = maxabs / 127.0;
+        for x in a.iter_mut() {
+            let q = *x / scale; // in [-127, 127]
+            let lo = q.floor();
+            let p = q - lo; // prob of rounding up
+            let q = if (rng.next_f32()) < p { lo + 1.0 } else { lo };
+            *x = q.clamp(-127.0, 127.0) * scale;
+        }
+    }
+}
+
+impl Compressor for QuantizeQ8 {
+    fn name(&self) -> &'static str {
+        "quantize_q8"
+    }
+
+    fn delta(&self) -> f64 {
+        8.0 / 32.0
+    }
+
+    fn compress(&self, a: &mut [f32], rng: &mut Rng) -> usize {
+        for chunk in a.chunks_mut(CHUNK) {
+            Self::roundtrip_chunk(chunk, rng);
+        }
+        a.len()
+    }
+
+    fn wire_bits(&self, _kept: usize, d: usize) -> u64 {
+        let chunks = d.div_ceil(CHUNK) as u64;
+        (d as u64) * 8 + chunks * 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantization_error_bounded() {
+        let mut rng = Rng::new(21);
+        let orig: Vec<f32> = (0..2048).map(|_| rng.normal_f32() * 3.0).collect();
+        let mut a = orig.clone();
+        QuantizeQ8.compress(&mut a, &mut rng);
+        let maxabs = orig.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let step = maxabs / 127.0;
+        for (o, q) in orig.iter().zip(&a) {
+            assert!((o - q).abs() <= step + 1e-6, "o={o} q={q} step={step}");
+        }
+    }
+
+    #[test]
+    fn unbiased_rounding() {
+        let mut rng = Rng::new(22);
+        let orig = vec![0.333f32; 512];
+        let mut acc = 0.0f64;
+        let trials = 2000;
+        for _ in 0..trials {
+            let mut a = orig.clone();
+            QuantizeQ8::roundtrip_chunk(&mut a, &mut rng);
+            acc += a.iter().map(|&x| x as f64).sum::<f64>() / a.len() as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - 0.333).abs() < 1e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn wire_bits_quarter_rate() {
+        let q = QuantizeQ8;
+        assert_eq!(q.wire_bits(4096, 4096), 4096 * 8 + 4 * 32);
+    }
+
+    #[test]
+    fn zero_vector_passthrough() {
+        let mut a = vec![0.0f32; 64];
+        let mut rng = Rng::new(23);
+        QuantizeQ8.compress(&mut a, &mut rng);
+        assert!(a.iter().all(|&x| x == 0.0));
+    }
+}

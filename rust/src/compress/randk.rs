@@ -1,0 +1,116 @@
+//! Rand-k sparsification — unbiased-when-scaled random coordinate selection.
+//!
+//! Kept for baseline ablations (CocktailSGD's sparsifier is random-k); the
+//! paper's default is Top-k. `scale` controls whether the kept entries are
+//! rescaled by d/k (the unbiased estimator) or passed through (the EF
+//! convention, default — error feedback already compensates bias).
+
+use super::Compressor;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RandK {
+    delta: f64,
+    scale: bool,
+}
+
+impl RandK {
+    pub fn new(delta: f64) -> Self {
+        assert!(delta > 0.0 && delta <= 1.0);
+        Self { delta, scale: false }
+    }
+
+    pub fn unbiased(delta: f64) -> Self {
+        assert!(delta > 0.0 && delta <= 1.0);
+        Self { delta, scale: true }
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> &'static str {
+        if self.scale { "randk_unbiased" } else { "randk" }
+    }
+
+    fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    fn compress(&self, a: &mut [f32], rng: &mut Rng) -> usize {
+        let n = a.len();
+        let k = super::k_for_delta(self.delta, n);
+        if k >= n {
+            return n;
+        }
+        // keep-mask via partial Fisher-Yates over indices
+        let keep = rng.sample_indices(n, k);
+        let mut mask = vec![false; n];
+        for &i in &keep {
+            mask[i as usize] = true;
+        }
+        let factor = if self.scale { n as f32 / k as f32 } else { 1.0 };
+        for (x, m) in a.iter_mut().zip(&mask) {
+            if *m {
+                *x *= factor;
+            } else {
+                *x = 0.0;
+            }
+        }
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_k_random_entries() {
+        let mut rng = Rng::new(11);
+        let mut a: Vec<f32> = (1..=1000).map(|i| i as f32).collect();
+        let c = RandK::new(0.1);
+        let kept = c.compress(&mut a, &mut rng);
+        assert_eq!(kept, 100);
+        assert_eq!(a.iter().filter(|&&x| x != 0.0).count(), 100);
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        // E[C(a)] == a for the scaled variant: average many draws
+        let n = 64;
+        let a: Vec<f32> = (0..n).map(|i| (i as f32) - 31.5).collect();
+        let c = RandK::unbiased(0.25);
+        let mut rng = Rng::new(12);
+        let trials = 4000;
+        let mut acc = vec![0.0f64; n];
+        for _ in 0..trials {
+            let mut b = a.clone();
+            c.compress(&mut b, &mut rng);
+            for (s, v) in acc.iter_mut().zip(&b) {
+                *s += *v as f64;
+            }
+        }
+        for (s, orig) in acc.iter().zip(&a) {
+            let mean = s / trials as f64;
+            // estimator variance: Var = (1/delta - 1) * orig^2; allow 5 sigma
+            let sigma =
+                ((3.0 * (*orig as f64).powi(2)) / trials as f64).sqrt();
+            assert!(
+                (mean - *orig as f64).abs() < 5.0 * sigma + 0.05,
+                "mean={mean} orig={orig} sigma={sigma}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_rng_state() {
+        let a0: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let c = RandK::new(0.2);
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        let mut a1 = a0.clone();
+        let mut a2 = a0.clone();
+        c.compress(&mut a1, &mut r1);
+        c.compress(&mut a2, &mut r2);
+        assert_eq!(a1, a2);
+    }
+}

@@ -1,0 +1,200 @@
+//! Global Top-k sparsification — the paper's default compressor (Sec. 2.2.2,
+//! footnote 5) on the production hot path.
+//!
+//! Selection is O(d): one `select_nth_unstable` pass over a scratch copy of
+//! the magnitudes to find the k-th largest (`thr`), then one linear pass
+//! applying the shared tie-break spec (see `compress::mod`). No sort of the
+//! full vector, no allocation after the scratch buffer warms up.
+
+use super::Compressor;
+use crate::util::Rng;
+use std::cell::RefCell;
+
+/// Magnitude as a totally-ordered integer key: for finite f32, the bit
+/// pattern of `|x|` is monotone in `|x|` (sign bit cleared), so integer
+/// `select_nth_unstable` — no comparator callbacks, branch-predictable —
+/// replaces float comparisons on the hot path (§Perf: ~2.5x on selection).
+#[inline]
+fn abs_key(x: f32) -> u32 {
+    x.to_bits() & 0x7FFF_FFFF
+}
+
+/// Global (whole-vector) top-k by magnitude.
+#[derive(Debug)]
+pub struct TopK {
+    delta: f64,
+    // scratch reused across calls; RefCell keeps `compress(&self)` — one
+    // TopK instance is owned per worker, never shared across threads.
+    scratch: RefCell<Vec<u32>>,
+}
+
+impl Clone for TopK {
+    fn clone(&self) -> Self {
+        Self::new(self.delta)
+    }
+}
+
+impl TopK {
+    pub fn new(delta: f64) -> Self {
+        assert!(delta > 0.0 && delta <= 1.0, "delta must be in (0,1]");
+        Self { delta, scratch: RefCell::new(Vec::new()) }
+    }
+
+    /// The k-th largest magnitude of `a` (as an integer key) plus the count
+    /// of entries STRICTLY greater — counted inside the k-element left
+    /// partition the selection already produced, O(k) instead of O(n).
+    fn threshold(&self, a: &[f32], k: usize) -> (u32, usize) {
+        let mut keys = self.scratch.borrow_mut();
+        keys.clear();
+        keys.extend(a.iter().map(|x| abs_key(*x)));
+        let idx = k - 1; // k-th largest == index k-1 in descending order
+        let (left, thr, _) =
+            keys.select_nth_unstable_by(idx, |x, y| y.cmp(x));
+        let thr = *thr;
+        let n_gt = left.iter().filter(|&&x| x > thr).count();
+        (thr, n_gt)
+    }
+
+    /// Apply the shared selection spec in place; returns entries kept.
+    pub fn apply(&self, a: &mut [f32], k: usize) -> usize {
+        let n = a.len();
+        if k >= n {
+            return n;
+        }
+        let (thr, n_gt) = self.threshold(a, k);
+        let mut take_eq = k - n_gt;
+        // single pass: zero everything not selected (ties: first kept)
+        let mut kept = 0usize;
+        for x in a.iter_mut() {
+            let m = abs_key(*x);
+            if m > thr {
+                kept += 1;
+            } else if m == thr && take_eq > 0 {
+                take_eq -= 1;
+                kept += 1;
+            } else {
+                *x = 0.0;
+            }
+        }
+        kept
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    fn compress(&self, a: &mut [f32], _rng: &mut Rng) -> usize {
+        let k = super::k_for_delta(self.delta, a.len());
+        self.apply(a, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn keeps_exactly_k() {
+        let c = TopK::new(0.1);
+        for n in [10, 100, 1000, 4096] {
+            let mut a = randvec(n, n as u64);
+            let mut rng = Rng::new(0);
+            let kept = c.compress(&mut a, &mut rng);
+            let k = super::super::k_for_delta(0.1, n);
+            assert_eq!(kept, k);
+            assert_eq!(a.iter().filter(|&&x| x != 0.0).count(), k);
+        }
+    }
+
+    #[test]
+    fn kept_are_largest() {
+        let orig = randvec(512, 3);
+        let mut a = orig.clone();
+        let c = TopK::new(0.25);
+        let mut rng = Rng::new(0);
+        c.compress(&mut a, &mut rng);
+        let kept_min = a
+            .iter()
+            .filter(|&&x| x != 0.0)
+            .map(|x| x.abs())
+            .fold(f32::INFINITY, f32::min);
+        let dropped_max = orig
+            .iter()
+            .zip(&a)
+            .filter(|(_, &kept)| kept == 0.0)
+            .map(|(o, _)| o.abs())
+            .fold(0.0f32, f32::max);
+        assert!(kept_min >= dropped_max);
+    }
+
+    #[test]
+    fn tie_break_lower_index() {
+        let mut a = vec![1.0f32; 16];
+        let c = TopK::new(0.25); // k = 4
+        let mut rng = Rng::new(0);
+        let kept = c.compress(&mut a, &mut rng);
+        assert_eq!(kept, 4);
+        assert_eq!(&a[..4], &[1.0; 4]);
+        assert!(a[4..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn values_pass_through_unchanged() {
+        let orig = randvec(256, 5);
+        let mut a = orig.clone();
+        let c = TopK::new(0.5);
+        let mut rng = Rng::new(0);
+        c.compress(&mut a, &mut rng);
+        for (o, v) in orig.iter().zip(&a) {
+            assert!(*v == 0.0 || v == o);
+        }
+    }
+
+    #[test]
+    fn delta_one_is_identity() {
+        let orig = randvec(128, 6);
+        let mut a = orig.clone();
+        let c = TopK::new(1.0);
+        let mut rng = Rng::new(0);
+        assert_eq!(c.compress(&mut a, &mut rng), 128);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn lemma2_contract() {
+        // ||C(a) - a||^2 <= (1 - delta) ||a||^2  (Lemma 2, deterministic
+        // for top-k)
+        for seed in 0..20 {
+            let orig = randvec(1000, seed);
+            for delta in [0.01, 0.1, 0.5, 0.9] {
+                let mut a = orig.clone();
+                let c = TopK::new(delta);
+                let mut rng = Rng::new(0);
+                c.compress(&mut a, &mut rng);
+                let err: f64 = orig
+                    .iter()
+                    .zip(&a)
+                    .map(|(o, v)| ((o - v) as f64).powi(2))
+                    .sum();
+                let norm: f64 = orig.iter().map(|x| (*x as f64).powi(2)).sum();
+                assert!(
+                    err <= (1.0 - delta) * norm + 1e-9,
+                    "seed={seed} delta={delta}: {err} > {}",
+                    (1.0 - delta) * norm
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,430 @@
+//! Experiment configuration — JSON-serializable descriptions of a training
+//! run (task, workers, strategy, network, stopping rules), plus the presets
+//! mirroring the paper's settings. The `repro train --config x.json` path
+//! and all `exp` generators build runs through this.
+//!
+//! (Config files are JSON rather than TOML because the build is fully
+//! offline and the JSON codec is in-tree — see `util::json`.)
+
+use crate::deco::DecoInput;
+use crate::netsim::{BandwidthTrace, Link, TraceKind};
+use crate::strategy::StrategyKind;
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// model name from the manifest ("gpt_mini", "cnn_fmnist", ...) or
+    /// "quadratic" / "logistic" for the analytic testbeds
+    pub task: String,
+    pub workers: usize,
+    pub gamma: f32,
+    pub strategy: StrategyKind,
+    pub network: NetworkConfig,
+    pub stop: StopConfig,
+    pub seed: u64,
+    /// pin compute time per iteration (s); None = measure wall time
+    pub t_comp: Option<f64>,
+    /// pin gradient size (bits); None = 32 × model params
+    pub s_g_bits: Option<f64>,
+    pub log_every: usize,
+    /// use the blockwise (Pallas-identical) compressor
+    pub block_topk: bool,
+    /// per-worker global-norm gradient clipping (None = off)
+    pub clip_norm: Option<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct NetworkConfig {
+    pub trace: TraceKind,
+    pub latency_s: f64,
+}
+
+impl NetworkConfig {
+    pub fn link(&self) -> Link {
+        Link::new(BandwidthTrace::new(self.trace.clone()), self.latency_s)
+    }
+
+    /// Nominal mean bandwidth (bits/s) for fallback priors.
+    pub fn nominal_bps(&self) -> f64 {
+        match &self.trace {
+            TraceKind::Constant { bps } => *bps,
+            TraceKind::Sine { mean_bps, .. } => *mean_bps,
+            TraceKind::Ou { mean_bps, .. } => *mean_bps,
+            TraceKind::Markov { levels_bps, .. } => {
+                levels_bps.iter().sum::<f64>() / levels_bps.len().max(1) as f64
+            }
+            TraceKind::Samples { bps, .. } => {
+                bps.iter().sum::<f64>() / bps.len().max(1) as f64
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace", trace_to_json(&self.trace)),
+            ("latency_s", Json::num(self.latency_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            trace: trace_from_json(j.req("trace").map_err(err)?)?,
+            latency_s: j.req_f64("latency_s").map_err(err)?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct StopConfig {
+    pub max_iters: usize,
+    pub loss_target: Option<f64>,
+    pub max_virtual_time: Option<f64>,
+}
+
+fn err(msg: String) -> anyhow::Error {
+    anyhow!(msg)
+}
+
+fn opt_num(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(|v| v.as_f64())
+}
+
+pub fn trace_to_json(t: &TraceKind) -> Json {
+    match t {
+        TraceKind::Constant { bps } => Json::obj(vec![
+            ("kind", Json::str("constant")),
+            ("bps", Json::num(*bps)),
+        ]),
+        TraceKind::Sine { mean_bps, amp_bps, period_s } => Json::obj(vec![
+            ("kind", Json::str("sine")),
+            ("mean_bps", Json::num(*mean_bps)),
+            ("amp_bps", Json::num(*amp_bps)),
+            ("period_s", Json::num(*period_s)),
+        ]),
+        TraceKind::Ou { mean_bps, sigma_bps, theta, seed } => Json::obj(vec![
+            ("kind", Json::str("ou")),
+            ("mean_bps", Json::num(*mean_bps)),
+            ("sigma_bps", Json::num(*sigma_bps)),
+            ("theta", Json::num(*theta)),
+            ("seed", Json::num(*seed as f64)),
+        ]),
+        TraceKind::Markov { levels_bps, dwell_s, seed } => Json::obj(vec![
+            ("kind", Json::str("markov")),
+            (
+                "levels_bps",
+                Json::arr(levels_bps.iter().map(|&v| Json::num(v))),
+            ),
+            ("dwell_s", Json::num(*dwell_s)),
+            ("seed", Json::num(*seed as f64)),
+        ]),
+        TraceKind::Samples { times_s, bps } => Json::obj(vec![
+            ("kind", Json::str("samples")),
+            ("times_s", Json::arr(times_s.iter().map(|&v| Json::num(v)))),
+            ("bps", Json::arr(bps.iter().map(|&v| Json::num(v)))),
+        ]),
+    }
+}
+
+pub fn trace_from_json(j: &Json) -> Result<TraceKind> {
+    let kind = j.req_str("kind").map_err(err)?;
+    let nums = |key: &str| -> Result<Vec<f64>> {
+        Ok(j.req(key)
+            .map_err(err)?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'{key}' not an array"))?
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect())
+    };
+    Ok(match kind {
+        "constant" => TraceKind::Constant { bps: j.req_f64("bps").map_err(err)? },
+        "sine" => TraceKind::Sine {
+            mean_bps: j.req_f64("mean_bps").map_err(err)?,
+            amp_bps: j.req_f64("amp_bps").map_err(err)?,
+            period_s: j.req_f64("period_s").map_err(err)?,
+        },
+        "ou" => TraceKind::Ou {
+            mean_bps: j.req_f64("mean_bps").map_err(err)?,
+            sigma_bps: j.req_f64("sigma_bps").map_err(err)?,
+            theta: j.req_f64("theta").map_err(err)?,
+            seed: j.req_f64("seed").map_err(err)? as u64,
+        },
+        "markov" => TraceKind::Markov {
+            levels_bps: nums("levels_bps")?,
+            dwell_s: j.req_f64("dwell_s").map_err(err)?,
+            seed: j.req_f64("seed").map_err(err)? as u64,
+        },
+        "samples" => TraceKind::Samples { times_s: nums("times_s")?, bps: nums("bps")? },
+        other => return Err(anyhow!("unknown trace kind '{other}'")),
+    })
+}
+
+pub fn strategy_to_json(s: &StrategyKind) -> Json {
+    match s {
+        StrategyKind::DSgd => Json::obj(vec![("kind", Json::str("d_sgd"))]),
+        StrategyKind::DEfSgd { delta } => Json::obj(vec![
+            ("kind", Json::str("d_ef_sgd")),
+            ("delta", Json::num(*delta)),
+        ]),
+        StrategyKind::DdSgd { tau } => Json::obj(vec![
+            ("kind", Json::str("dd_sgd")),
+            ("tau", Json::num(*tau as f64)),
+        ]),
+        StrategyKind::Accordion { delta_low, delta_high } => Json::obj(vec![
+            ("kind", Json::str("accordion")),
+            ("delta_low", Json::num(*delta_low)),
+            ("delta_high", Json::num(*delta_high)),
+        ]),
+        StrategyKind::CocktailSgd => {
+            Json::obj(vec![("kind", Json::str("cocktail_sgd"))])
+        }
+        StrategyKind::DecoSgd { update_every } => Json::obj(vec![
+            ("kind", Json::str("deco_sgd")),
+            ("update_every", Json::num(*update_every as f64)),
+        ]),
+    }
+}
+
+pub fn strategy_from_json(j: &Json) -> Result<StrategyKind> {
+    Ok(match j.req_str("kind").map_err(err)? {
+        "d_sgd" => StrategyKind::DSgd,
+        "d_ef_sgd" => StrategyKind::DEfSgd {
+            delta: j.req_f64("delta").map_err(err)?,
+        },
+        "dd_sgd" => StrategyKind::DdSgd {
+            tau: j.req_usize("tau").map_err(err)?,
+        },
+        "accordion" => StrategyKind::Accordion {
+            delta_low: j.req_f64("delta_low").map_err(err)?,
+            delta_high: j.req_f64("delta_high").map_err(err)?,
+        },
+        "cocktail_sgd" => StrategyKind::CocktailSgd,
+        "deco_sgd" => StrategyKind::DecoSgd {
+            update_every: j.req_usize("update_every").map_err(err)?,
+        },
+        other => return Err(anyhow!("unknown strategy kind '{other}'")),
+    })
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("task", Json::str(&self.task)),
+            ("workers", Json::num(self.workers as f64)),
+            ("gamma", Json::num(self.gamma as f64)),
+            ("strategy", strategy_to_json(&self.strategy)),
+            ("network", self.network.to_json()),
+            (
+                "stop",
+                Json::obj(vec![
+                    ("max_iters", Json::num(self.stop.max_iters as f64)),
+                    (
+                        "loss_target",
+                        self.stop
+                            .loss_target
+                            .map(Json::num)
+                            .unwrap_or(Json::Null),
+                    ),
+                    (
+                        "max_virtual_time",
+                        self.stop
+                            .max_virtual_time
+                            .map(Json::num)
+                            .unwrap_or(Json::Null),
+                    ),
+                ]),
+            ),
+            ("seed", Json::num(self.seed as f64)),
+            ("log_every", Json::num(self.log_every as f64)),
+            ("block_topk", Json::Bool(self.block_topk)),
+        ];
+        if let Some(t) = self.t_comp {
+            pairs.push(("t_comp", Json::num(t)));
+        }
+        if let Some(s) = self.s_g_bits {
+            pairs.push(("s_g_bits", Json::num(s)));
+        }
+        if let Some(c) = self.clip_norm {
+            pairs.push(("clip_norm", Json::num(c)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let stop = j.req("stop").map_err(err)?;
+        Ok(Self {
+            task: j.req_str("task").map_err(err)?.to_string(),
+            workers: j.req_usize("workers").map_err(err)?,
+            gamma: j.req_f64("gamma").map_err(err)? as f32,
+            strategy: strategy_from_json(j.req("strategy").map_err(err)?)?,
+            network: NetworkConfig::from_json(j.req("network").map_err(err)?)?,
+            stop: StopConfig {
+                max_iters: stop.req_usize("max_iters").map_err(err)?,
+                loss_target: opt_num(stop, "loss_target"),
+                max_virtual_time: opt_num(stop, "max_virtual_time"),
+            },
+            seed: opt_num(j, "seed").unwrap_or(0.0) as u64,
+            t_comp: opt_num(j, "t_comp"),
+            s_g_bits: opt_num(j, "s_g_bits"),
+            log_every: opt_num(j, "log_every").unwrap_or(10.0) as usize,
+            block_topk: j.get("block_topk").and_then(|v| v.as_bool()).unwrap_or(false),
+            clip_norm: opt_num(j, "clip_norm"),
+        })
+    }
+
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing experiment config: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Fallback DeCo inputs before the monitor warms up.
+    pub fn fallback(&self, s_g: f64, t_comp: f64) -> DecoInput {
+        DecoInput {
+            s_g,
+            a: self.network.nominal_bps(),
+            b: self.network.latency_s,
+            t_comp,
+        }
+    }
+
+    /// Translate into [`crate::coordinator::TrainParams`].
+    pub fn train_params(&self, dim: usize) -> crate::coordinator::TrainParams {
+        let s_g = self.s_g_bits.unwrap_or(dim as f64 * 32.0);
+        let t_comp_prior = self.t_comp.unwrap_or(0.1);
+        crate::coordinator::TrainParams {
+            gamma: self.gamma,
+            max_iters: self.stop.max_iters,
+            log_every: self.log_every,
+            loss_target: self.stop.loss_target,
+            max_virtual_time: self.stop.max_virtual_time,
+            t_comp_override: self.t_comp,
+            s_g_override: Some(s_g),
+            paper_wire: true,
+            block_topk: self.block_topk,
+            clip_norm: self.clip_norm,
+            seed: self.seed,
+            fallback: self.fallback(s_g, t_comp_prior),
+            monitor_alpha: 0.3,
+        }
+    }
+}
+
+/// Paper-style WAN preset: OU bandwidth around `mean_bps`, latency `b`.
+pub fn wan_network(mean_bps: f64, latency_s: f64, seed: u64) -> NetworkConfig {
+    NetworkConfig {
+        trace: TraceKind::Ou {
+            mean_bps,
+            sigma_bps: 0.25 * mean_bps,
+            theta: 0.2,
+            seed,
+        },
+        latency_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ExperimentConfig {
+        ExperimentConfig {
+            task: "gpt_mini".into(),
+            workers: 4,
+            gamma: 0.1,
+            strategy: StrategyKind::DecoSgd { update_every: 20 },
+            network: wan_network(1e8, 0.2, 1),
+            stop: StopConfig {
+                max_iters: 100,
+                loss_target: Some(3.0),
+                max_virtual_time: None,
+            },
+            seed: 7,
+            t_comp: Some(0.35),
+            s_g_bits: Some(124e6 * 32.0),
+            log_every: 10,
+            block_topk: false,
+            clip_norm: Some(2.0),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = sample();
+        let text = c.to_json().to_string_pretty();
+        let back = ExperimentConfig::from_json(
+            &Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.task, c.task);
+        assert_eq!(back.strategy, c.strategy);
+        assert_eq!(back.network.latency_s, 0.2);
+        assert_eq!(back.stop.loss_target, Some(3.0));
+        assert_eq!(back.t_comp, Some(0.35));
+        assert_eq!(back.seed, 7);
+    }
+
+    #[test]
+    fn all_strategies_roundtrip() {
+        for s in [
+            StrategyKind::DSgd,
+            StrategyKind::DEfSgd { delta: 0.1 },
+            StrategyKind::DdSgd { tau: 3 },
+            StrategyKind::Accordion { delta_low: 0.01, delta_high: 0.3 },
+            StrategyKind::CocktailSgd,
+            StrategyKind::DecoSgd { update_every: 5 },
+        ] {
+            let j = strategy_to_json(&s);
+            assert_eq!(strategy_from_json(&j).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn all_traces_roundtrip() {
+        for t in [
+            TraceKind::Constant { bps: 1e8 },
+            TraceKind::Sine { mean_bps: 1e8, amp_bps: 1e7, period_s: 5.0 },
+            TraceKind::Ou { mean_bps: 1e8, sigma_bps: 1e7, theta: 0.2, seed: 3 },
+            TraceKind::Markov {
+                levels_bps: vec![1e7, 1e8],
+                dwell_s: 2.0,
+                seed: 4,
+            },
+            TraceKind::Samples {
+                times_s: vec![0.0, 1.0],
+                bps: vec![1e8, 2e8],
+            },
+        ] {
+            let j = trace_to_json(&t);
+            assert_eq!(trace_from_json(&j).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn nominal_bandwidths() {
+        assert_eq!(wan_network(1e8, 0.1, 0).nominal_bps(), 1e8);
+        let c = NetworkConfig {
+            trace: TraceKind::Markov {
+                levels_bps: vec![1e8, 3e8],
+                dwell_s: 1.0,
+                seed: 0,
+            },
+            latency_s: 0.1,
+        };
+        assert_eq!(c.nominal_bps(), 2e8);
+    }
+
+    #[test]
+    fn train_params_pass_through() {
+        let c = sample();
+        let tp = c.train_params(470_016);
+        assert_eq!(tp.t_comp_override, Some(0.35));
+        assert_eq!(tp.s_g_override, Some(124e6 * 32.0));
+        assert_eq!(tp.loss_target, Some(3.0));
+        assert_eq!(tp.fallback.b, 0.2);
+    }
+}

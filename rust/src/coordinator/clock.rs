@@ -1,0 +1,117 @@
+//! Virtual wall clock — the incremental, trace-driven form of the Eq. 19
+//! recurrence. The training loop advances it one iteration at a time with
+//! whatever (T_comp, τ, wire bits) that iteration actually used, which is
+//! how DeCo's *dynamic* (τ_t, δ_t) trajectory gets faithfully priced.
+
+use crate::netsim::Link;
+
+#[derive(Debug)]
+pub struct VirtualClock {
+    link: Link,
+    /// TS_k, TM_k of the previous iteration
+    ts_prev: f64,
+    tm_prev: f64,
+    /// full TC history (indexed k-1) for the τ-delayed max
+    tc: Vec<f64>,
+}
+
+/// What one tick reports back to the trainer.
+#[derive(Clone, Copy, Debug)]
+pub struct Tick {
+    /// computation end of iteration k
+    pub ts: f64,
+    /// transmission end (what the monitor samples bandwidth from)
+    pub tm: f64,
+    /// arrival — the iteration's contribution to total training time
+    pub tc: f64,
+    /// pure transmission duration of this iteration's message
+    pub tx_secs: f64,
+}
+
+impl VirtualClock {
+    pub fn new(link: Link) -> Self {
+        Self { link, ts_prev: 0.0, tm_prev: 0.0, tc: Vec::new() }
+    }
+
+    pub fn link(&self) -> &Link {
+        &self.link
+    }
+
+    /// Advance one iteration (k = self.tc.len() + 1, 1-based).
+    pub fn tick(&mut self, t_comp: f64, tau: usize, bits: u64) -> Tick {
+        let k = self.tc.len() + 1;
+        let tc_delayed = if k as i64 - 1 - tau as i64 >= 1 {
+            self.tc[k - 2 - tau]
+        } else {
+            0.0
+        };
+        let ts = t_comp + tc_delayed.max(self.ts_prev);
+        let start = self.tm_prev.max(ts);
+        let tm = self.link.transfer_end(start, bits);
+        let tc = tm + self.link.latency();
+        self.ts_prev = ts;
+        self.tm_prev = tm;
+        self.tc.push(tc);
+        Tick { ts, tm, tc, tx_secs: tm - start }
+    }
+
+    pub fn iters(&self) -> usize {
+        self.tc.len()
+    }
+
+    /// Total elapsed virtual time (TC of the last iteration).
+    pub fn now(&self) -> f64 {
+        *self.tc.last().unwrap_or(&0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::BandwidthTrace;
+    use crate::timesim::{EventSim, PipelineParams};
+
+    #[test]
+    fn matches_event_sim_with_constant_params() {
+        let p = PipelineParams {
+            a: 1e8,
+            b: 0.2,
+            delta: 0.1,
+            tau: 2,
+            t_comp: 0.05,
+            s_g: 1e9,
+        };
+        let mut clock = VirtualClock::new(Link::new(
+            BandwidthTrace::constant(p.a),
+            p.b,
+        ));
+        let bits = (p.delta * p.s_g) as u64;
+        for _ in 0..300 {
+            clock.tick(p.t_comp, p.tau, bits);
+        }
+        let sim = EventSim::run(&p, 300);
+        assert!(
+            (clock.now() - sim.total_time()).abs() < 1e-6,
+            "{} vs {}",
+            clock.now(),
+            sim.total_time()
+        );
+    }
+
+    #[test]
+    fn time_is_monotone_under_dynamic_params() {
+        let mut clock = VirtualClock::new(Link::new(
+            BandwidthTrace::constant(5e7),
+            0.1,
+        ));
+        let mut prev = 0.0;
+        for k in 1..100usize {
+            let tau = k % 4;
+            let bits = 1_000_000 + (k as u64 % 7) * 500_000;
+            let t = clock.tick(0.02 + 0.001 * (k % 3) as f64, tau, bits);
+            assert!(t.tc >= prev);
+            assert!(t.tm >= t.ts);
+            prev = t.tc;
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator — the DD-EF-SGD training pipeline (Algorithm 2) over n
+//! data-parallel workers, with delayed aggregation, error-feedback Top-k
+//! compression, the DeCo controller, a trace-driven virtual clock, and
+//! metrics. This is the paper's *system* contribution.
+//!
+//! Execution model (see DESIGN.md): the n workers are simulated inside one
+//! process — each owns a data shard, an EF error vector and a delay queue;
+//! gradients come from a [`crate::optim::GradOracle`] (PJRT-backed for the
+//! real models, analytic for the theory experiments). Time is *virtual*:
+//! computation cost is measured (or pinned) per iteration and communication
+//! cost is integrated over the bandwidth trace by the Eq. 19 recurrence —
+//! exactly the quantity the paper's tables report — while the training
+//! mathematics (losses, gradients, EF states) is executed for real.
+
+pub mod clock;
+pub mod pipeline;
+pub mod worker;
+
+pub use clock::VirtualClock;
+pub use pipeline::{TrainLoop, TrainParams};
+pub use worker::WorkerState;

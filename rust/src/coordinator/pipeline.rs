@@ -1,0 +1,386 @@
+//! The training loop — DD-EF-SGD (Algorithm 2) with pluggable strategy,
+//! gradient oracle, and network. One instance = one training run.
+//!
+//! Per iteration t (1-based):
+//! 1. ask the [`Strategy`] for (τ_t, δ_t) — DeCo-SGD refreshes from the
+//!    monitor every E iterations here;
+//! 2. every worker computes g_t at the *current* x_t (the paper's Fig. 2
+//!    overlap: computation of step t runs while older messages are in
+//!    flight) and enqueues it;
+//! 3. every worker pops g_{t−τ}, runs the fused EF + Top-k step, yielding
+//!    the sparse Δ_t^i;
+//! 4. the leader aggregates `x_{t+1} = x_t − γ/n Σ_i Δ_t^i`;
+//! 5. the virtual clock prices the iteration via the Eq. 19 recurrence over
+//!    the bandwidth trace; the monitor observes the transfer and feeds the
+//!    next DeCo solve.
+//!
+//! Losses/gradients are *real* (PJRT or analytic oracle); only time is
+//! virtual — see DESIGN.md §Hardware-Adaptation.
+
+use super::{VirtualClock, WorkerState};
+use crate::compress::{BlockTopK, Compressor, Identity, TopK};
+use crate::deco::DecoInput;
+use crate::metrics::{Record, RunResult};
+use crate::netsim::{Link, NetworkMonitor};
+use crate::optim::GradOracle;
+use crate::strategy::{Strategy, StrategyCtx};
+use crate::util::stats::l2_norm;
+
+/// Knobs for one training run.
+#[derive(Clone, Debug)]
+pub struct TrainParams {
+    /// stepsize γ
+    pub gamma: f32,
+    pub max_iters: usize,
+    /// full-loss evaluation cadence (iterations)
+    pub log_every: usize,
+    /// stop once the logged loss reaches this value
+    pub loss_target: Option<f64>,
+    /// stop once the virtual clock passes this (s)
+    pub max_virtual_time: Option<f64>,
+    /// pin the per-iteration compute time instead of measuring wall time
+    pub t_comp_override: Option<f64>,
+    /// pin the gradient size (bits) — lets small proxy models be priced at
+    /// paper scale (e.g. GPT-2's 124M × 32 bits)
+    pub s_g_override: Option<f64>,
+    /// paper's wire accounting (δ·S_g bits) instead of the COO codec size
+    pub paper_wire: bool,
+    /// use the blockwise (L1-kernel-identical) compressor instead of global
+    /// top-k
+    pub block_topk: bool,
+    /// global-norm gradient clipping applied per worker before EF (standard
+    /// transformer practice; keeps aggressive (δ, τ) inside the stable
+    /// region at practical stepsizes)
+    pub clip_norm: Option<f64>,
+    pub seed: u64,
+    /// network priors used before the monitor has samples
+    pub fallback: DecoInput,
+    pub monitor_alpha: f64,
+}
+
+impl Default for TrainParams {
+    fn default() -> Self {
+        Self {
+            gamma: 0.05,
+            max_iters: 500,
+            log_every: 10,
+            loss_target: None,
+            max_virtual_time: None,
+            t_comp_override: None,
+            s_g_override: None,
+            paper_wire: true,
+            block_topk: false,
+            clip_norm: None,
+            seed: 0,
+            fallback: DecoInput { s_g: 1e9, a: 1e8, b: 0.1, t_comp: 0.1 },
+            monitor_alpha: 0.3,
+        }
+    }
+}
+
+pub struct TrainLoop<O: GradOracle> {
+    oracle: O,
+    strategy: Box<dyn Strategy>,
+    clock: VirtualClock,
+    monitor: NetworkMonitor,
+    workers: Vec<WorkerState>,
+    /// the global model (flat, padded)
+    x: Vec<f32>,
+    agg: Vec<f32>,
+    params: TrainParams,
+    /// gradient bits at δ=1
+    s_g: f64,
+}
+
+impl<O: GradOracle> TrainLoop<O> {
+    pub fn new(
+        oracle: O,
+        strategy: Box<dyn Strategy>,
+        link: Link,
+        params: TrainParams,
+    ) -> Self {
+        let dim = oracle.dim();
+        let n = oracle.workers();
+        let x = oracle.init();
+        assert_eq!(x.len(), dim);
+        let workers = (0..n)
+            .map(|i| WorkerState::new(i, dim, params.seed ^ 0x77))
+            .collect();
+        let s_g = params.s_g_override.unwrap_or(dim as f64 * 32.0);
+        let monitor = NetworkMonitor::new(params.monitor_alpha);
+        Self {
+            oracle,
+            strategy,
+            clock: VirtualClock::new(link),
+            monitor,
+            workers,
+            x,
+            agg: vec![0.0; dim],
+            params,
+            s_g,
+        }
+    }
+
+    pub fn model(&self) -> &[f32] {
+        &self.x
+    }
+
+    pub fn monitor(&self) -> &NetworkMonitor {
+        &self.monitor
+    }
+
+    fn make_compressor(&self, delta: f64) -> Box<dyn Compressor> {
+        if delta >= 1.0 {
+            Box::new(Identity)
+        } else if self.params.block_topk {
+            Box::new(BlockTopK::new(delta))
+        } else {
+            Box::new(TopK::new(delta))
+        }
+    }
+
+    /// Run to completion. `task`/`method` label the result.
+    pub fn run(&mut self, task: &str) -> RunResult {
+        let n = self.workers.len();
+        let mut records = Vec::new();
+        let mut last_grad_norm: Option<f64> = None;
+        let method = self.strategy.name().to_string();
+
+        for t in 1..=self.params.max_iters {
+            // 1. strategy decides (τ_t, δ_t)
+            let ctx = StrategyCtx {
+                iter: t,
+                monitor: &self.monitor,
+                s_g: self.s_g,
+                grad_norm: last_grad_norm,
+                fallback: self.params.fallback,
+            };
+            let (tau, delta) = self.strategy.params(&ctx);
+            let comp = self.make_compressor(delta);
+
+            // 2. compute gradients at x_t on every worker
+            let wall0 = std::time::Instant::now();
+            let mut norm_acc = 0.0f64;
+            let mut loss_acc = 0.0f64;
+            for w in 0..n {
+                let ws = &mut self.workers[w];
+                let loss =
+                    self.oracle.grad(w, t, &self.x, ws.grad_buffer());
+                loss_acc += loss;
+                let norm = l2_norm(ws.grad_buffer());
+                norm_acc += norm;
+                if let Some(clip) = self.params.clip_norm {
+                    if norm > clip {
+                        let s = (clip / norm) as f32;
+                        ws.grad_buffer().iter_mut().for_each(|v| *v *= s);
+                    }
+                }
+                ws.push_gradient();
+            }
+            let measured =
+                wall0.elapsed().as_secs_f64() / n as f64; // per-worker
+            let t_comp = self.params.t_comp_override.unwrap_or(measured);
+            last_grad_norm = Some(norm_acc / n as f64);
+            let _ = loss_acc;
+
+            // 3. pop + EF-compress; 4. aggregate
+            self.agg.iter_mut().for_each(|v| *v = 0.0);
+            let mut any = false;
+            let mut kept_total = 0usize;
+            for ws in self.workers.iter_mut() {
+                if let Some((sv, kept)) = ws.pop_compress(tau, comp.as_ref())
+                {
+                    sv.add_into_scaled(&mut self.agg, 1.0 / n as f32);
+                    kept_total += kept;
+                    any = true;
+                }
+            }
+            if any {
+                let gamma = self.params.gamma;
+                for (xi, ai) in self.x.iter_mut().zip(&self.agg) {
+                    *xi -= gamma * ai;
+                }
+            }
+
+            // 5. price the iteration and feed the monitor
+            let bits = if self.params.paper_wire {
+                (delta.min(1.0) * self.s_g) as u64
+            } else {
+                // honest wire accounting (COO indices, quantized payloads,
+                // headers), averaged over workers and scaled from the proxy
+                // model's dimension up to the pinned paper-scale S_g
+                let proxy_bits =
+                    comp.wire_bits(kept_total / n.max(1), self.x.len());
+                let scale = self.s_g / (self.x.len() as f64 * 32.0);
+                (proxy_bits as f64 * scale) as u64
+            };
+            let tick = self.clock.tick(t_comp, tau, bits);
+            if bits > 0 && tick.tx_secs > 0.0 {
+                self.monitor.observe_transfer(bits, tick.tx_secs);
+            }
+            self.monitor.observe_latency(self.clock.link().latency());
+            self.monitor.observe_compute(t_comp);
+
+            // 6. metrics + stopping
+            if t % self.params.log_every == 0 || t == self.params.max_iters {
+                let loss = self.oracle.loss(&self.x);
+                records.push(Record {
+                    iter: t,
+                    time: tick.tc,
+                    loss,
+                    tau,
+                    delta,
+                    grad_norm: last_grad_norm.unwrap_or(0.0),
+                    bandwidth: self.monitor.bandwidth().unwrap_or(0.0),
+                });
+                if let Some(target) = self.params.loss_target {
+                    if loss <= target {
+                        break;
+                    }
+                }
+                // divergence guard: a strategy whose (δ, τ) violates the
+                // stepsize condition can blow up — stop pricing iterations
+                // once the loss is no longer finite
+                if !loss.is_finite() {
+                    break;
+                }
+            }
+            if let Some(tmax) = self.params.max_virtual_time {
+                if self.clock.now() >= tmax {
+                    break;
+                }
+            }
+        }
+
+        RunResult {
+            method,
+            task: task.to_string(),
+            workers: n,
+            total_time: self.clock.now(),
+            total_iters: self.clock.iters(),
+            records,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::BandwidthTrace;
+    use crate::optim::Quadratic;
+    use crate::strategy::StrategyKind;
+
+    // Stability note: Theorem 1's stepsize condition γ ≤ 1/(4L√(φ/δ))
+    // genuinely binds — aggressive (δ, τ) with a large γ diverges on the
+    // quadratic. Tests therefore run in the stable regime (small L, small γ)
+    // and the experiments pick per-task γ the same way the paper tunes lr.
+    const S_G: f64 = 1e8; // bits
+    const T_COMP: f64 = 0.2;
+
+    fn quad() -> Quadratic {
+        Quadratic::new(256, 4, 1.0, 0.2, 0.3, 0.3, 11)
+    }
+
+    fn link(bps: f64, lat: f64) -> Link {
+        Link::new(BandwidthTrace::constant(bps), lat)
+    }
+
+    fn params() -> TrainParams {
+        TrainParams {
+            gamma: 0.005,
+            max_iters: 4000,
+            log_every: 25,
+            t_comp_override: Some(T_COMP),
+            s_g_override: Some(S_G),
+            fallback: DecoInput { s_g: S_G, a: 2e7, b: 0.2, t_comp: T_COMP },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_strategies_converge_on_quadratic() {
+        let l0 = {
+            let mut q = quad();
+            let x = q.init();
+            q.loss(&x)
+        };
+        for kind in StrategyKind::paper_baselines() {
+            let mut tl =
+                TrainLoop::new(quad(), kind.build(), link(2e7, 0.2), params());
+            let res = tl.run("quad");
+            assert!(
+                res.final_loss() < 0.7 * l0,
+                "{}: {} -> {}",
+                kind.label(),
+                l0,
+                res.final_loss()
+            );
+        }
+    }
+
+    #[test]
+    fn dsgd_time_matches_serial_model() {
+        // D-SGD: every iteration costs T_comp + S_g/a + b on the virtual
+        // clock
+        let mut tl = TrainLoop::new(
+            quad(),
+            StrategyKind::DSgd.build(),
+            link(2e7, 0.2),
+            TrainParams { max_iters: 50, ..params() },
+        );
+        let res = tl.run("quad");
+        let per_iter = T_COMP + S_G / 2e7 + 0.2;
+        assert!(
+            (res.total_time - 50.0 * per_iter).abs() / (50.0 * per_iter)
+                < 1e-6,
+            "{} vs {}",
+            res.total_time,
+            50.0 * per_iter
+        );
+    }
+
+    #[test]
+    fn deco_is_faster_than_dsgd_to_same_loss() {
+        // the paper's headline, miniature: same loss target, DeCo-SGD needs
+        // less virtual time than D-SGD under WAN conditions
+        let l0 = {
+            let mut q = quad();
+            let x = q.init();
+            q.loss(&x)
+        };
+        let target = 0.6 * l0;
+        let run = |kind: StrategyKind| {
+            let mut tl = TrainLoop::new(
+                quad(),
+                kind.build(),
+                link(2e7, 0.2),
+                TrainParams { loss_target: Some(target), ..params() },
+            );
+            tl.run("quad")
+        };
+        let dsgd = run(StrategyKind::DSgd);
+        let deco = run(StrategyKind::DecoSgd { update_every: 20 });
+        let t_dsgd = dsgd.time_to_loss(target).expect("dsgd reaches");
+        let t_deco = deco.time_to_loss(target).expect("deco reaches");
+        assert!(
+            t_deco < t_dsgd,
+            "deco {t_deco} should beat dsgd {t_dsgd}"
+        );
+    }
+
+    #[test]
+    fn records_are_monotone_in_time() {
+        let mut tl = TrainLoop::new(
+            quad(),
+            StrategyKind::DecoSgd { update_every: 10 }.build(),
+            link(5e6, 0.3),
+            TrainParams { max_iters: 100, ..params() },
+        );
+        let res = tl.run("quad");
+        for w in res.records.windows(2) {
+            assert!(w[1].time > w[0].time);
+            assert!(w[1].iter > w[0].iter);
+        }
+        assert!(res.total_iters <= 100);
+    }
+}

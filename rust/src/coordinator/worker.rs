@@ -1,0 +1,173 @@
+//! Per-worker state: data-shard identity, the EF error vector, and the
+//! delay queue that realizes staleness τ (Sec. 2.2.3).
+//!
+//! The queue discipline handles *dynamic* τ (DeCo changes it mid-run):
+//! each iteration pushes the fresh gradient and pops the front gradient
+//! whenever the queue holds more than the current τ entries — so after a τ
+//! increase the pipeline silently stretches (a few iterations without
+//! updates), and after a decrease it drains one extra gradient per step
+//! until the new depth is reached. Both transients match what a real
+//! asynchronous sender would do.
+
+use crate::compress::{Compressor, ErrorFeedback, SparseVec};
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+#[derive(Debug)]
+pub struct WorkerState {
+    pub id: usize,
+    ef: ErrorFeedback,
+    queue: VecDeque<Vec<f32>>,
+    /// recycled gradient buffers — the delay queue reaches steady state
+    /// after τ iterations and then churns zero allocations (§Perf)
+    free: Vec<Vec<f32>>,
+    rng: Rng,
+    /// scratch buffer reused across iterations (hot-path, no allocs)
+    scratch: Vec<f32>,
+}
+
+impl WorkerState {
+    pub fn new(id: usize, dim: usize, seed: u64) -> Self {
+        Self {
+            id,
+            ef: ErrorFeedback::new(dim),
+            queue: VecDeque::new(),
+            free: Vec::new(),
+            rng: Rng::new(seed ^ (id as u64).wrapping_mul(0x2545F4914F6CDD1D)),
+            scratch: vec![0.0; dim],
+        }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn error_norm_sq(&self) -> f64 {
+        self.ef.error_norm_sq()
+    }
+
+    /// Mutable view of the scratch gradient buffer the oracle writes into.
+    pub fn grad_buffer(&mut self) -> &mut [f32] {
+        &mut self.scratch
+    }
+
+    /// Push the freshly-computed gradient (copies out of the scratch into
+    /// a recycled buffer — steady state allocates nothing).
+    pub fn push_gradient(&mut self) {
+        let mut g = self.free.pop().unwrap_or_else(|| {
+            Vec::with_capacity(self.scratch.len())
+        });
+        g.clear();
+        g.extend_from_slice(&self.scratch);
+        self.queue.push_back(g);
+    }
+
+    /// If the queue is deeper than `tau`, pop the oldest gradient, run the
+    /// EF + compression step, and return the sparse message (plus kept
+    /// count). Returns `None` while the pipeline is still filling.
+    pub fn pop_compress(
+        &mut self,
+        tau: usize,
+        comp: &dyn Compressor,
+    ) -> Option<(SparseVec, usize)> {
+        if self.queue.len() <= tau {
+            return None;
+        }
+        let mut g = self.queue.pop_front().expect("non-empty");
+        let kept = self.ef.step(&mut g, comp, &mut self.rng);
+        let sv = SparseVec::encode_with_capacity(&g, kept);
+        self.free.push(g); // recycle for future pushes
+        Some((sv, kept))
+    }
+
+    /// Drop all queued gradients and carried error (full restart).
+    pub fn reset(&mut self) {
+        self.queue.clear();
+        self.ef.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, TopK};
+
+    #[test]
+    fn staleness_is_exactly_tau() {
+        // with constant τ, the gradient popped at iteration t was pushed at
+        // t − τ
+        let dim = 8;
+        let mut w = WorkerState::new(0, dim, 1);
+        let tau = 3usize;
+        let comp = Identity;
+        for t in 0..20usize {
+            // stamp the gradient with its iteration index
+            w.grad_buffer().iter_mut().for_each(|v| *v = t as f32);
+            w.push_gradient();
+            match w.pop_compress(tau, &comp) {
+                None => assert!(t < tau, "pipeline should emit from t=τ"),
+                Some((sv, _)) => {
+                    let dense = sv.decode();
+                    assert_eq!(dense[0] as usize, t - tau, "wrong staleness");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tau_increase_stalls_then_resumes() {
+        let dim = 4;
+        let mut w = WorkerState::new(0, dim, 2);
+        let comp = Identity;
+        for t in 0..5usize {
+            w.grad_buffer().iter_mut().for_each(|v| *v = t as f32);
+            w.push_gradient();
+            w.pop_compress(1, &comp);
+        }
+        // queue now holds 1 entry; raising τ to 4 stalls pops
+        for t in 5..8usize {
+            w.grad_buffer().iter_mut().for_each(|v| *v = t as f32);
+            w.push_gradient();
+            assert!(w.pop_compress(4, &comp).is_none() || t == 7);
+        }
+    }
+
+    #[test]
+    fn tau_decrease_drains() {
+        let dim = 4;
+        let mut w = WorkerState::new(0, dim, 3);
+        let comp = Identity;
+        for t in 0..6usize {
+            w.grad_buffer().iter_mut().for_each(|v| *v = t as f32);
+            w.push_gradient();
+            w.pop_compress(5, &comp); // deep queue: pops only once len > 5
+        }
+        // 6 pushes, one pop at t=5 (len hit 6 > τ=5)
+        assert_eq!(w.queue_len(), 5);
+        // τ drops to 0: each call pops one, so repeated calls drain
+        let mut drained = 0;
+        while w.pop_compress(0, &comp).is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, 5);
+    }
+
+    #[test]
+    fn compression_applies_ef() {
+        let dim = 1024;
+        let mut w = WorkerState::new(0, dim, 4);
+        let comp = TopK::new(0.1);
+        let mut rng = Rng::new(9);
+        for _ in 0..3 {
+            let buf = w.grad_buffer();
+            for v in buf.iter_mut() {
+                *v = rng.normal_f32();
+            }
+            w.push_gradient();
+            let (sv, kept) = w.pop_compress(0, &comp).unwrap();
+            assert_eq!(kept, 103); // ceil(0.1 * 1024)
+            assert_eq!(sv.nnz(), kept);
+        }
+        assert!(w.error_norm_sq() > 0.0, "EF must carry error");
+    }
+}

@@ -1,0 +1,22 @@
+//! Synthetic datasets — stand-ins for FashionMNIST / CIFAR-10 / ImageNet /
+//! Wikitext (see DESIGN.md §Hardware-Adaptation for why the substitution
+//! preserves the paper's claims: the evaluation compares *time-to-target
+//! between methods*, which depends on gradient dynamics and network state,
+//! not on the specific corpus).
+//!
+//! Both generators are deterministic functions of (seed, index) and shard
+//! across `n` workers by interleaving, so every experiment is reproducible
+//! and worker shards are disjoint (the paper's data-parallel setting).
+
+pub mod image;
+pub mod text;
+
+pub use image::{ImageBatch, SyntheticImages};
+pub use text::{LmBatch, SyntheticCorpus};
+
+/// A worker's view of a dataset: batch `t` for worker `i` must be
+/// deterministic so re-runs and baselines see identical data streams.
+pub trait Sharded {
+    type Batch;
+    fn batch(&self, worker: usize, iter: usize) -> Self::Batch;
+}

@@ -1,0 +1,51 @@
+//! DeCo (Algorithm 1) — joint selection of delay staleness `τ*` and
+//! compression ratio `δ*` from the network state `(a, b)`, the gradient
+//! size `S_g`, and the measured compute time `T_comp`.
+//!
+//! The objective is the convergence-governing factor from Theorem 1,
+//!
+//! ```text
+//! φ(δ, τ) = (1 − δ) / ( δ · (1 − δ/2)^τ )
+//! ```
+//!
+//! minimized subject to the bubble-free-pipeline condition
+//! `T_avg = T_comp` (Eq. 10/11), which by Remark 4 pins
+//! `δ*(τ) = min{ (τ·T_comp − b)·a/S_g, T_comp·a/S_g, 1 }` and restricts
+//! `τ ∈ [⌈b/T_comp⌉, ⌈(b + S_g/a)/T_comp⌉]`. The traversal picks the φ-minimal
+//! pair, ties going to the smallest τ (freshest gradients), exactly like the
+//! paper's pseudo-code (which iterates τ downward and keeps `φ ≤ φ_min`).
+
+pub mod phi;
+pub mod solve;
+
+pub use phi::{log_phi, phi, phi_prime};
+pub use solve::{solve, DecoInput, DecoOutput};
+
+/// Snap a continuous δ* to the AOT palette (the HLO compress modules are
+/// compiled for fixed k — see python/compile/aot.py::DELTA_PALETTE). Picks
+/// the smallest palette entry ≥ δ* (never undershoots the bubble-free
+/// condition from above; falls back to the largest entry below if δ* exceeds
+/// the whole palette, i.e. 1.0 handled by caller via `delta >= 1`).
+pub fn snap_to_palette(delta: f64, palette: &[f64]) -> f64 {
+    debug_assert!(!palette.is_empty());
+    let mut sorted: Vec<f64> = palette.to_vec();
+    sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    for &p in &sorted {
+        if p >= delta {
+            return p;
+        }
+    }
+    *sorted.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn snap_picks_ceiling_entry() {
+        let pal = [0.01, 0.02, 0.05, 0.1, 0.2, 0.5];
+        assert_eq!(super::snap_to_palette(0.03, &pal), 0.05);
+        assert_eq!(super::snap_to_palette(0.05, &pal), 0.05);
+        assert_eq!(super::snap_to_palette(0.001, &pal), 0.01);
+        assert_eq!(super::snap_to_palette(0.9, &pal), 0.5);
+    }
+}

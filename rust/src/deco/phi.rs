@@ -1,0 +1,119 @@
+//! The φ factor of Theorem 1 — the quantity DeCo minimizes.
+//!
+//! φ(δ, τ) = (1−δ) / (δ·(1−δ/2)^τ) blows up double-exponentially fast in τ
+//! for small δ (the paper's headline: *staleness exponentially amplifies
+//! compression noise*). Comparisons therefore run in log space.
+
+/// φ(δ, τ). Returns 0 for δ = 1 (degradation to DD-SGD, Remark 2) and +∞
+/// for δ ≤ 0.
+pub fn phi(delta: f64, tau: usize) -> f64 {
+    if delta >= 1.0 {
+        return 0.0;
+    }
+    if delta <= 0.0 {
+        return f64::INFINITY;
+    }
+    log_phi(delta, tau).exp()
+}
+
+/// ln φ(δ, τ) — overflow-free ordering key.
+pub fn log_phi(delta: f64, tau: usize) -> f64 {
+    if delta >= 1.0 {
+        return f64::NEG_INFINITY;
+    }
+    if delta <= 0.0 {
+        return f64::INFINITY;
+    }
+    (1.0 - delta).ln() - delta.ln() - tau as f64 * (1.0 - delta / 2.0).ln()
+}
+
+/// The federated-learning / small-model variant from Remark 1:
+/// φ'(δ, τ) = (1−δ) / (δ²·(1−δ/2)^τ).
+pub fn phi_prime(delta: f64, tau: usize) -> f64 {
+    if delta >= 1.0 {
+        return 0.0;
+    }
+    if delta <= 0.0 {
+        return f64::INFINITY;
+    }
+    ((1.0 - delta).ln() - 2.0 * delta.ln()
+        - tau as f64 * (1.0 - delta / 2.0).ln())
+    .exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degradation_cases() {
+        // δ=1 → φ=0 (DD-SGD); τ=0 → φ=(1-δ)/δ (D-EF-SGD)
+        assert_eq!(phi(1.0, 5), 0.0);
+        for delta in [0.01, 0.1, 0.5] {
+            let expect = (1.0 - delta) / delta;
+            assert!((phi(delta, 0) - expect).abs() / expect < 1e-12);
+        }
+    }
+
+    #[test]
+    fn exponential_amplification_in_tau() {
+        // φ(δ, τ+1)/φ(δ, τ) == 1/(1-δ/2) — the exponential factor the paper
+        // is the first to expose
+        let delta = 0.05;
+        let ratio = 1.0 / (1.0 - delta / 2.0);
+        for tau in [0usize, 1, 5, 20, 100] {
+            let r = phi(delta, tau + 1) / phi(delta, tau);
+            assert!((r - ratio).abs() < 1e-9, "tau={tau}: {r} vs {ratio}");
+        }
+    }
+
+    #[test]
+    fn delta_derivative_matches_analytic_sign() {
+        // d ln φ / dδ = -1/(1-δ) - 1/δ + τ/(2-δ). For τ=0 this is always
+        // negative (φ strictly decreasing); for large τ it changes sign
+        // (down, up, then down again near δ→1) — the numeric values must
+        // agree with the analytic derivative's sign everywhere.
+        for tau in [0usize, 2, 10, 40] {
+            for i in 1..199 {
+                let d = i as f64 / 200.0;
+                let analytic =
+                    -1.0 / (1.0 - d) - 1.0 / d + tau as f64 / (2.0 - d);
+                let h = 1e-6;
+                let numeric = (log_phi(d + h, tau) - log_phi(d - h, tau))
+                    / (2.0 * h);
+                assert!(
+                    (numeric - analytic).abs()
+                        < 1e-3 * analytic.abs().max(1.0),
+                    "tau={tau} delta={d}: {numeric} vs {analytic}"
+                );
+                if tau == 0 {
+                    assert!(analytic < 0.0, "phi(·,0) must be decreasing");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn log_phi_consistent_with_phi() {
+        for (d, t) in [(0.01, 3usize), (0.2, 7), (0.77, 0)] {
+            assert!((log_phi(d, t).exp() - phi(d, t)).abs() / phi(d, t) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn log_phi_handles_huge_tau_without_overflow() {
+        let lp = log_phi(0.01, 400_000);
+        assert!(lp.is_finite());
+        assert!(phi(0.01, 400_000).is_infinite()); // exp overflows, log fine
+    }
+
+    #[test]
+    fn phi_prime_dominates_phi() {
+        // φ' = φ/δ ≥ φ for δ ≤ 1
+        for (d, t) in [(0.05, 2usize), (0.3, 5), (0.9, 1)] {
+            assert!(phi_prime(d, t) >= phi(d, t));
+            let expect = phi(d, t) / d;
+            assert!((phi_prime(d, t) - expect).abs() / expect < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Algorithm 1 (DeCo) — traverse the feasible τ range, compute δ*(τ) from
+//! Remark 4, and return the φ-minimal pair.
+
+use super::phi::log_phi;
+
+
+/// Network / workload state consumed by DeCo (Algorithm 1 inputs).
+#[derive(Clone, Copy, Debug)]
+pub struct DecoInput {
+    /// gradient size, bits
+    pub s_g: f64,
+    /// bandwidth, bits/s
+    pub a: f64,
+    /// end-to-end latency, s
+    pub b: f64,
+    /// computation time per iteration, s
+    pub t_comp: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecoOutput {
+    pub tau: usize,
+    pub delta: f64,
+    /// ln φ at the optimum (−∞ when δ*=1, i.e. no compression needed)
+    pub log_phi: f64,
+}
+
+/// Remark 4: the largest δ that keeps the pipeline bubble-free at staleness
+/// τ. Returns `None` when even δ→0 cannot (τ·T_comp ≤ b: the delay cannot
+/// cover the latency alone).
+pub fn delta_star(inp: &DecoInput, tau: usize) -> Option<f64> {
+    let by_delay = (tau as f64 * inp.t_comp - inp.b) * inp.a / inp.s_g;
+    let by_rate = inp.t_comp * inp.a / inp.s_g;
+    let d = by_delay.min(by_rate).min(1.0);
+    (d > 0.0).then_some(d)
+}
+
+/// The feasible τ range of Eq. 11: `[⌈b/T_comp⌉, ⌈(b + S_g/a)/T_comp⌉]`.
+pub fn tau_range(inp: &DecoInput) -> (usize, usize) {
+    let lo = (inp.b / inp.t_comp).ceil() as usize;
+    let hi = ((inp.b + inp.s_g / inp.a) / inp.t_comp).ceil() as usize;
+    (lo, hi.max(lo))
+}
+
+/// Algorithm 1. Iterates τ from high to low (like the paper's pseudo-code)
+/// keeping `φ ≤ φ_min`, so ties resolve to the smallest τ. Always returns a
+/// valid output: if no (τ, δ) in range is feasible (degenerate network), it
+/// falls back to `τ = ⌈b/T_comp⌉ + 1, δ = δ*` or ultimately (τ_lo, 1.0).
+pub fn solve(inp: &DecoInput) -> DecoOutput {
+    assert!(inp.s_g > 0.0 && inp.a > 0.0 && inp.t_comp > 0.0 && inp.b >= 0.0);
+    let (lo, hi) = tau_range(inp);
+    let mut best: Option<DecoOutput> = None;
+    // high -> low, keep on <=: ties prefer smaller τ (fresher gradients)
+    for tau in (lo..=hi).rev() {
+        let Some(delta) = delta_star(inp, tau) else { continue };
+        let lp = log_phi(delta, tau);
+        if best.map_or(true, |b| lp <= b.log_phi) {
+            best = Some(DecoOutput { tau, delta, log_phi: lp });
+        }
+    }
+    best.unwrap_or_else(|| {
+        // degenerate: even the largest feasible τ gives δ*(τ) <= 0 — means
+        // τ·T_comp ≤ b across the whole range (only possible at lo == hi
+        // with extreme b). Push τ one beyond until positive.
+        let mut tau = hi + 1;
+        loop {
+            if let Some(delta) = delta_star(inp, tau) {
+                return DecoOutput { tau, delta, log_phi: log_phi(delta, tau) };
+            }
+            tau += 1;
+            if tau > hi + 1_000_000 {
+                return DecoOutput { tau: lo, delta: 1.0, log_phi: f64::NEG_INFINITY };
+            }
+        }
+    })
+}
+
+/// EXTENSION (beyond the paper — see DESIGN.md): Remark 4 takes
+/// δ = δ*(τ) as the per-τ optimum, implicitly assuming φ(·, τ) is
+/// decreasing. That holds on the paper's operating range, but
+/// `d ln φ/dδ = −1/(1−δ) − 1/δ + τ/(2−δ)` changes sign for large τ:
+/// past the stationary point, *less* aggressive compression would
+/// converge faster at zero time cost (any δ ≤ δ*(τ) keeps the pipeline
+/// bubble-free). `solve_refined` minimizes φ over the full feasible
+/// interval (0, δ*(τ)] per τ via ternary search on ln φ, and never does
+/// worse than Algorithm 1.
+pub fn solve_refined(inp: &DecoInput) -> DecoOutput {
+    let (lo, hi) = tau_range(inp);
+    let mut best: Option<DecoOutput> = None;
+    for tau in (lo..=hi).rev() {
+        let Some(dmax) = delta_star(inp, tau) else { continue };
+        // ternary-search the unimodal-on-(0, dmax] region; log_phi is
+        // decreasing then increasing on (0, min(dmax, stationary)], so a
+        // bounded ternary search finds the interior min (or the edge).
+        let (mut a, mut b) = (1e-6, dmax);
+        for _ in 0..80 {
+            let m1 = a + (b - a) / 3.0;
+            let m2 = b - (b - a) / 3.0;
+            if log_phi(m1, tau) <= log_phi(m2, tau) {
+                b = m2;
+            } else {
+                a = m1;
+            }
+        }
+        let delta = ((a + b) / 2.0).min(dmax);
+        // candidates: interior optimum and the Remark-4 edge
+        for d in [delta, dmax] {
+            let lp = log_phi(d, tau);
+            if best.map_or(true, |bst| lp <= bst.log_phi) {
+                best = Some(DecoOutput { tau, delta: d, log_phi: lp });
+            }
+        }
+    }
+    best.unwrap_or_else(|| solve(inp))
+}
+
+/// Brute-force reference: grid-search δ on a fine grid for every τ in a wide
+/// range, honoring the same bubble-free constraint. Used by tests to verify
+/// `solve` is optimal among feasible pairs.
+pub fn solve_brute_force(inp: &DecoInput, grid: usize) -> DecoOutput {
+    let (lo, hi) = tau_range(inp);
+    let mut best = DecoOutput { tau: lo, delta: 1.0, log_phi: f64::INFINITY };
+    for tau in lo..=hi {
+        let Some(dmax) = delta_star(inp, tau) else { continue };
+        // φ is decreasing in δ, so the constrained optimum for this τ is at
+        // δ = δ*(τ); the grid verifies that claim numerically.
+        for i in 1..=grid {
+            let d = dmax * i as f64 / grid as f64;
+            let lp = log_phi(d, tau);
+            if lp < best.log_phi
+                || (lp == best.log_phi && tau < best.tau)
+            {
+                best = DecoOutput { tau, delta: d, log_phi: lp };
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inp(s_g: f64, a: f64, b: f64, t_comp: f64) -> DecoInput {
+        DecoInput { s_g, a, b, t_comp }
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let cases = [
+            inp(124e6 * 32.0, 1e8, 0.1, 0.5),  // GPT-2 on 100 Mbps / 100 ms
+            inp(124e6 * 32.0, 5e8, 0.1, 0.5),
+            inp(124e6 * 32.0, 1e8, 1.0, 0.5),
+            inp(124e6 * 32.0, 5e8, 1.0, 0.5),
+            inp(86e6 * 32.0, 1e8, 0.2, 0.3),   // ViT-Base
+            inp(1e9, 1e9, 0.05, 0.01),
+        ];
+        for c in cases {
+            let fast = solve(&c);
+            let brute = solve_brute_force(&c, 400);
+            assert_eq!(fast.tau, brute.tau, "{c:?}");
+            assert!(
+                (fast.delta - brute.delta).abs() / brute.delta < 0.01,
+                "{c:?}: {} vs {}",
+                fast.delta,
+                brute.delta
+            );
+            assert!(fast.log_phi <= brute.log_phi + 1e-9);
+        }
+    }
+
+    #[test]
+    fn bubble_free_condition_holds() {
+        // T_avg(τ*, δ*) == T_comp per Theorem 3's closed form
+        use crate::timesim::model::{t_avg_closed_form, PipelineParams};
+        let c = inp(124e6 * 32.0, 1e8, 0.1, 0.5);
+        let out = solve(&c);
+        let p = PipelineParams {
+            a: c.a,
+            b: c.b,
+            delta: out.delta,
+            tau: out.tau,
+            t_comp: c.t_comp,
+            s_g: c.s_g,
+        };
+        let tavg = t_avg_closed_form(&p);
+        assert!(
+            (tavg - c.t_comp).abs() / c.t_comp < 1e-6,
+            "T_avg={tavg} != T_comp={}",
+            c.t_comp
+        );
+    }
+
+    #[test]
+    fn good_network_needs_no_compression() {
+        // LAN-like: δ* should hit 1.0 (or very near) and τ small
+        let c = inp(1e6 * 32.0, 1e10, 0.001, 0.1);
+        let out = solve(&c);
+        assert!(out.delta > 0.99, "delta={}", out.delta);
+        assert!(out.tau <= 1);
+    }
+
+    #[test]
+    fn worse_bandwidth_smaller_delta() {
+        let base = inp(124e6 * 32.0, 5e8, 0.1, 0.5);
+        let slow = inp(124e6 * 32.0, 1e8, 0.1, 0.5);
+        let d_base = solve(&base).delta;
+        let d_slow = solve(&slow).delta;
+        assert!(d_slow < d_base, "{d_slow} !< {d_base}");
+    }
+
+    #[test]
+    fn higher_latency_larger_tau() {
+        let low = inp(124e6 * 32.0, 1e8, 0.1, 0.5);
+        let high = inp(124e6 * 32.0, 1e8, 1.0, 0.5);
+        assert!(solve(&high).tau > solve(&low).tau);
+    }
+
+    #[test]
+    fn paper_table3_orders_of_magnitude() {
+        // Table 3 reports (τ*, δ*) = (2, 0.02) for GPT at a=0.1 Gbps,
+        // b=0.1 s and (3, 0.02) at b=1.0 s. With T_comp ~= b/τ* scale
+        // (paper's A40 testbed, GPT-2 124M, batch 5), our solver should land
+        // in the same ballpark: τ in [1, 6], δ in [0.005, 0.1].
+        let s_g = 124e6 * 32.0;
+        let t_comp = 0.35; // ~paper-scale step time
+        for (a, b) in [(1e8, 0.1), (5e8, 0.1), (1e8, 1.0), (5e8, 1.0)] {
+            let out = solve(&inp(s_g, a, b, t_comp));
+            assert!(out.tau >= 1 && out.tau <= 6, "tau={} at ({a},{b})", out.tau);
+            assert!(
+                out.delta >= 0.004 && out.delta <= 0.2,
+                "delta={} at ({a},{b})",
+                out.delta
+            );
+        }
+    }
+
+    #[test]
+    fn refined_never_worse_and_beats_brute_force_region() {
+        // refined == Algorithm 1 on the paper's operating range, and at
+        // least as good everywhere (including large-τ regimes where
+        // Remark 4's edge choice is suboptimal)
+        let cases = [
+            inp(124e6 * 32.0, 1e8, 0.1, 0.5),
+            inp(124e6 * 32.0, 5e8, 1.0, 0.5),
+            inp(86e6 * 32.0, 1e8, 0.2, 0.3),
+            // latency-dominated: huge τ -> φ non-monotone in δ
+            inp(1e8, 1e9, 5.0, 0.05),
+            inp(1e7, 1e9, 2.0, 0.02),
+        ];
+        for c in cases {
+            let alg1 = solve(&c);
+            let refined = solve_refined(&c);
+            assert!(
+                refined.log_phi <= alg1.log_phi + 1e-9,
+                "{c:?}: refined {} worse than alg1 {}",
+                refined.log_phi,
+                alg1.log_phi
+            );
+            let brute = solve_brute_force(&c, 800);
+            assert!(
+                refined.log_phi <= brute.log_phi + 1e-6,
+                "{c:?}: refined {} vs brute {}",
+                refined.log_phi,
+                brute.log_phi
+            );
+        }
+    }
+
+    #[test]
+    fn tau_range_sane() {
+        let c = inp(1e9, 1e8, 0.5, 0.1);
+        let (lo, hi) = tau_range(&c);
+        assert_eq!(lo, 5); // ceil(0.5/0.1)
+        assert_eq!(hi, 105); // ceil((0.5 + 10)/0.1)
+    }
+
+    #[test]
+    fn degenerate_latency_dominated_still_returns() {
+        // absurdly high latency: b >> everything
+        let c = inp(1e6, 1e9, 100.0, 0.001);
+        let out = solve(&c);
+        assert!(out.delta > 0.0 && out.delta <= 1.0);
+        assert!(out.tau >= (c.b / c.t_comp) as usize);
+    }
+}

@@ -1,0 +1,101 @@
+//! Fig. 1 — heatmap of D-SGD throughput efficiency (%) over (latency,
+//! bandwidth), 4 nodes training GPT-2. Efficiency = throughput at (x, y)
+//! divided by the compute-bound maximum, i.e. `T_comp / T_avg` of plain
+//! D-SGD. Regenerated from the Theorem-3 model (the paper measured it; the
+//! model's validity is established by `exp thm3`).
+
+use crate::exp::results_dir;
+use crate::timesim::model::dsgd_throughput_efficiency;
+
+pub struct Fig1Out {
+    pub latencies_s: Vec<f64>,
+    pub bandwidths_bps: Vec<f64>,
+    /// efficiency[lat][bw] in [0, 1]
+    pub efficiency: Vec<Vec<f64>>,
+}
+
+pub fn run(t_comp: f64, s_g_bits: f64) -> Fig1Out {
+    // paper's axes: latency 0–1000 ms, bandwidth ~0.1–10 Gbps
+    let latencies_s: Vec<f64> =
+        [0.0, 0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0].to_vec();
+    let bandwidths_bps: Vec<f64> = [
+        0.1e9, 0.2e9, 0.5e9, 1e9, 2e9, 4e9, 6e9, 8e9, 10e9,
+    ]
+    .to_vec();
+    let efficiency = latencies_s
+        .iter()
+        .map(|&b| {
+            bandwidths_bps
+                .iter()
+                .map(|&a| dsgd_throughput_efficiency(a, b, t_comp, s_g_bits))
+                .collect()
+        })
+        .collect();
+    Fig1Out { latencies_s, bandwidths_bps, efficiency }
+}
+
+pub fn main(t_comp: f64) -> anyhow::Result<()> {
+    let s_g = 124e6 * 32.0; // GPT-2 124M f32 gradients
+    let out = run(t_comp, s_g);
+    println!(
+        "Fig.1 — D-SGD throughput efficiency (%), GPT-2 124M, T_comp={t_comp}s"
+    );
+    print!("{:>9} |", "lat\\bw");
+    for a in &out.bandwidths_bps {
+        print!("{:>7.1}G", a / 1e9);
+    }
+    println!();
+    println!("{}", "-".repeat(11 + 8 * out.bandwidths_bps.len()));
+    let mut csv = String::from("latency_s,bandwidth_bps,efficiency\n");
+    for (i, b) in out.latencies_s.iter().enumerate() {
+        print!("{:>8.2}s |", b);
+        for (j, a) in out.bandwidths_bps.iter().enumerate() {
+            let e = out.efficiency[i][j];
+            print!("{:>7.1}%", e * 100.0);
+            csv.push_str(&format!("{b},{a},{e:.6}\n"));
+        }
+        println!();
+    }
+    let path = results_dir().join("fig1_heatmap.csv");
+    std::fs::write(&path, csv)?;
+    println!("\nwrote {path:?}");
+    println!(
+        "paper check: efficiency <= ~50% below 2 Gbps at 200 ms -> {:.1}%",
+        run(t_comp, s_g).efficiency[3][4] * 100.0
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heatmap_shape_matches_paper() {
+        let out = run(2.0, 124e6 * 32.0);
+        // efficiency decreases with latency (rows) and increases with
+        // bandwidth (cols)
+        for j in 0..out.bandwidths_bps.len() {
+            for i in 1..out.latencies_s.len() {
+                assert!(out.efficiency[i][j] <= out.efficiency[i - 1][j] + 1e-12);
+            }
+        }
+        for i in 0..out.latencies_s.len() {
+            for j in 1..out.bandwidths_bps.len() {
+                assert!(out.efficiency[i][j] >= out.efficiency[i][j - 1] - 1e-12);
+            }
+        }
+        // paper's headline: the ~50% contour passes through
+        // (2 Gbps, 200 ms)
+        let i200 = out.latencies_s.iter().position(|&b| b == 0.2).unwrap();
+        let j2g = out.bandwidths_bps.iter().position(|&a| a == 2e9).unwrap();
+        let mid = out.efficiency[i200][j2g];
+        assert!((0.35..=0.65).contains(&mid), "mid={mid}");
+        // best corner far better than worst corner
+        let best = out.efficiency[0][out.bandwidths_bps.len() - 1];
+        let worst = out.efficiency[out.latencies_s.len() - 1][0];
+        assert!(best > 0.75, "best={best}");
+        assert!(worst < 0.2, "worst={worst}");
+        assert!(best > 3.0 * worst);
+    }
+}

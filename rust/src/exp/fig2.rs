@@ -1,0 +1,84 @@
+//! Fig. 2 — running timelines for D-SGD, D-EF-SGD, DD-SGD and DD-EF-SGD
+//! under one network condition, showing how compression shrinks the `=`
+//! segments and staleness overlaps them with compute.
+
+use crate::exp::results_dir;
+use crate::timesim::timeline::{render_ascii, rows};
+use crate::timesim::PipelineParams;
+
+pub fn variants(
+    a: f64,
+    b: f64,
+    t_comp: f64,
+    s_g: f64,
+    delta: f64,
+    tau: usize,
+) -> Vec<(&'static str, PipelineParams)> {
+    vec![
+        ("D-SGD", PipelineParams { a, b, delta: 1.0, tau: 0, t_comp, s_g }),
+        ("D-EF-SGD", PipelineParams { a, b, delta, tau: 0, t_comp, s_g }),
+        ("DD-SGD", PipelineParams { a, b, delta: 1.0, tau, t_comp, s_g }),
+        ("DD-EF-SGD", PipelineParams { a, b, delta, tau, t_comp, s_g }),
+    ]
+}
+
+pub fn main() -> anyhow::Result<()> {
+    let (a, b, t_comp, s_g) = (1e9, 0.3, 0.25, 124e6 * 32.0);
+    let (delta, tau) = (0.1, 2);
+    println!(
+        "Fig.2 — running timelines (a={} Gbps, b={b}s, T_comp={t_comp}s, \
+         delta={delta}, tau={tau})",
+        a / 1e9
+    );
+    println!("legend: # compute   = transmit   . latency\n");
+    let mut csv =
+        String::from("variant,iter,comp_start,comp_end,tx_start,tx_end,arrival\n");
+    for (name, p) in variants(a, b, t_comp, s_g, delta, tau) {
+        println!("{name}  (T_avg model: {:.3}s/iter)", crate::timesim::t_avg_closed_form(&p));
+        println!("{}", render_ascii(&p, 8, 100));
+        for r in rows(&p, 8) {
+            csv.push_str(&format!(
+                "{name},{},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
+                r.iter, r.comp_start, r.comp_end, r.tx_start, r.tx_end, r.arrival
+            ));
+        }
+    }
+    let path = results_dir().join("fig2_timelines.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timesim::{t_avg_closed_form, EventSim};
+
+    #[test]
+    fn variant_ordering_matches_fig2() {
+        // D-SGD slowest; adding EF or delay speeds it up; both together
+        // fastest — under WAN conditions
+        let vs = variants(1e9, 0.3, 0.25, 124e6 * 32.0, 0.1, 2);
+        let times: Vec<f64> = vs
+            .iter()
+            .map(|(_, p)| EventSim::run(p, 200).total_time())
+            .collect();
+        let (dsgd, defsgd, ddsgd, ddefsgd) =
+            (times[0], times[1], times[2], times[3]);
+        assert!(defsgd < dsgd, "compression must help");
+        assert!(ddsgd < dsgd, "delay must help");
+        assert!(ddefsgd < defsgd && ddefsgd < ddsgd, "both best");
+    }
+
+    #[test]
+    fn closed_form_matches_each_variant() {
+        for (_, p) in variants(5e8, 0.2, 0.3, 86e6 * 32.0, 0.05, 3) {
+            let sim = EventSim::run(&p, 4000).t_avg();
+            let model = t_avg_closed_form(&p);
+            assert!(
+                (sim - model).abs() / model < 0.02,
+                "{p:?}: {sim} vs {model}"
+            );
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Fig. 4 — training time to target across the four model@dataset pairs for
+//! the five methods (4 workers, WAN network). Prints the bar-chart data and
+//! the D-SGD / CocktailSGD speed-ups the paper headlines.
+
+use crate::config::wan_network;
+use crate::exp::runner::{ExpEnv, TaskSpec};
+use crate::exp::{results_dir, speedup};
+use crate::metrics::format_table;
+
+pub fn main(tasks: &[String], scale: f64, workers: usize) -> anyhow::Result<()> {
+    let mut env = ExpEnv::new();
+    let all = TaskSpec::paper_tasks();
+    let selected: Vec<TaskSpec> = if tasks.is_empty() {
+        all
+    } else {
+        all.into_iter()
+            .filter(|t| tasks.iter().any(|n| n == t.name))
+            .collect()
+    };
+    let mut rows = Vec::new();
+    let mut csv = String::from(
+        "task,method,time_to_target,total_iters,final_loss\n",
+    );
+    for task in &selected {
+        // paper Sec. 5.2 network: ~200 ms latency, dynamic sub-Gbps
+        // bandwidth drifting on tens of seconds (their Fig. 6 traces)
+        let net = crate::config::NetworkConfig {
+            trace: crate::netsim::TraceKind::Markov {
+                levels_bps: vec![8e7, 2e8, 4e8],
+                dwell_s: 40.0,
+                seed: 11,
+            },
+            latency_s: 0.2,
+        };
+        let _ = wan_network; // OU preset kept for the docs
+        let results = env.sweep_strategies(task, workers, &net, scale)?;
+        let time_of = |label: &str| {
+            results
+                .iter()
+                .find(|(l, _)| *l == label)
+                .and_then(|(_, r)| r.time_to_loss(task.loss_target))
+        };
+        let t_dsgd = time_of("D-SGD");
+        let t_cocktail = time_of("CocktailSGD");
+        let t_deco = time_of("DeCo-SGD");
+        for (label, r) in &results {
+            let t = r.time_to_loss(task.loss_target);
+            csv.push_str(&format!(
+                "{},{},{},{},{:.5}\n",
+                task.name,
+                label,
+                t.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+                r.total_iters,
+                r.final_loss()
+            ));
+            rows.push(vec![
+                task.label.to_string(),
+                label.to_string(),
+                t.map(|v| format!("{v:.1}s")).unwrap_or_else(|| "-".into()),
+                r.total_iters.to_string(),
+                format!("{:.4}", r.final_loss()),
+            ]);
+        }
+        rows.push(vec![
+            task.label.to_string(),
+            "speedup".into(),
+            format!(
+                "vs D-SGD {} | vs Cocktail {}",
+                speedup(t_dsgd, t_deco),
+                speedup(t_cocktail, t_deco)
+            ),
+            String::new(),
+            String::new(),
+        ]);
+    }
+    println!("Fig.4 — time-to-target, {workers} workers, WAN (0.2 Gbps OU, 200 ms)\n");
+    println!(
+        "{}",
+        format_table(
+            &["task", "method", "time-to-target", "iters", "final-loss"],
+            &rows
+        )
+    );
+    let path = results_dir().join("fig4_training_time.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {path:?}");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Fig. 5 / appendix Fig. 7–8 — scalability: time-to-target as the worker
+//! count scales 4 → 32 (fixed 200 ms latency, ~100 Mbps fluctuating
+//! bandwidth), for GPT and ViT tasks.
+
+use crate::config::wan_network;
+use crate::exp::runner::{ExpEnv, TaskSpec};
+use crate::exp::{results_dir, speedup};
+use crate::metrics::format_table;
+
+pub fn main(scale: f64, node_counts: &[usize]) -> anyhow::Result<()> {
+    let mut env = ExpEnv::new();
+    let counts: Vec<usize> = if node_counts.is_empty() {
+        vec![4, 8, 16, 32]
+    } else {
+        node_counts.to_vec()
+    };
+    let tasks: Vec<TaskSpec> = ["gpt_wikitext", "vit_imagenet"]
+        .iter()
+        .filter_map(|n| TaskSpec::by_name(n))
+        .collect();
+    let mut rows = Vec::new();
+    let mut csv =
+        String::from("task,workers,method,time_to_target,total_iters\n");
+    for task in &tasks {
+        for &n in &counts {
+            // paper Sec. 5.3: 200 ms, bandwidth fluctuating around 100 Mbps
+            let net = crate::config::NetworkConfig {
+                trace: crate::netsim::TraceKind::Markov {
+                    levels_bps: vec![5e7, 1e8, 2e8],
+                    dwell_s: 40.0,
+                    seed: 13 + n as u64,
+                },
+                latency_s: 0.2,
+            };
+            let _ = wan_network;
+            let results = env.sweep_strategies(task, n, &net, scale)?;
+            let time_of = |label: &str| {
+                results
+                    .iter()
+                    .find(|(l, _)| *l == label)
+                    .and_then(|(_, r)| r.time_to_loss(task.loss_target))
+            };
+            let (t_dsgd, t_cocktail, t_deco) = (
+                time_of("D-SGD"),
+                time_of("CocktailSGD"),
+                time_of("DeCo-SGD"),
+            );
+            for (label, r) in &results {
+                let t = r.time_to_loss(task.loss_target);
+                csv.push_str(&format!(
+                    "{},{},{},{},{}\n",
+                    task.name,
+                    n,
+                    label,
+                    t.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+                    r.total_iters
+                ));
+            }
+            rows.push(vec![
+                task.label.to_string(),
+                n.to_string(),
+                t_deco
+                    .map(|v| format!("{v:.1}s"))
+                    .unwrap_or_else(|| "-".into()),
+                speedup(t_dsgd, t_deco),
+                speedup(t_cocktail, t_deco),
+            ]);
+        }
+    }
+    println!("Fig.5 — scalability (200 ms, ~100 Mbps OU)\n");
+    println!(
+        "{}",
+        format_table(
+            &["task", "n", "DeCo time", "speedup vs D-SGD", "vs Cocktail"],
+            &rows
+        )
+    );
+    let path = results_dir().join("fig5_scalability.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {path:?}");
+    Ok(())
+}

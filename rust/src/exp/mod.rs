@@ -1,0 +1,44 @@
+//! Experiment generators — one per table/figure in the paper (see DESIGN.md
+//! §4 for the index). Each prints the same rows/series the paper reports and
+//! writes CSV next to it under `results/`.
+//!
+//! | id     | paper artifact                                  |
+//! |--------|--------------------------------------------------|
+//! | fig1   | D-SGD throughput-efficiency heatmap              |
+//! | fig2   | running timelines of D-SGD variants              |
+//! | fig4   | time-to-target across model@dataset pairs        |
+//! | fig5   | scalability n = 4..32 (also appendix Fig. 7/8)   |
+//! | fig6   | bandwidth trace + adaptive δ(t) (appendix C.3)   |
+//! | table1 | training time under (a, b) grid (also Table 3)   |
+//! | thm3   | validation: closed form vs event recurrence      |
+//! | phi    | validation: iterations-to-ε ordering follows φ   |
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod phi;
+pub mod runner;
+pub mod table1;
+pub mod thm3;
+
+pub use runner::{ExpEnv, TaskSpec};
+
+use std::path::PathBuf;
+
+/// Where experiment CSVs land.
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Shared speed-ups formatting: baseline_time / method_time.
+pub fn speedup(baseline: Option<f64>, method: Option<f64>) -> String {
+    match (baseline, method) {
+        (Some(b), Some(m)) if m > 0.0 => format!("{:.2}x", b / m),
+        _ => "-".into(),
+    }
+}

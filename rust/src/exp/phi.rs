@@ -1,0 +1,258 @@
+//! φ validation — the paper's central theoretical claim (Theorem 1/2,
+//! Remark 1): the convergence of DD-EF-SGD is governed by
+//! `φ(δ, τ) = (1−δ)/(δ(1−δ/2)^τ)` — *staleness exponentially amplifies
+//! compression noise*. On the strongly-convex quadratic testbed the
+//! cleanest observable is the **steady-state excess loss** (noise floor),
+//! which the theory predicts scales with `φ·(ζ²/δ + σ²)` (the `φ' = φ/δ`
+//! variant when heterogeneity dominates, Remark 1):
+//!
+//! * δ-sweep at fixed τ — floor grows as δ shrinks, tracking φ';
+//! * τ-sweep at fixed δ — floor creeps up linearly-ish for small τ, then
+//!   *explodes* once `(1−δ/2)^{−τ}` takes over (and finally diverges),
+//!   which is exactly the paper's headline amplification.
+//!
+//! `iters_to_target` (time-to-ε) is also provided and used by the
+//! theory_playground example.
+
+use crate::compress::{ErrorFeedback, TopK};
+use crate::deco::phi::{phi, phi_prime};
+use crate::exp::results_dir;
+use crate::optim::{GradOracle, Quadratic};
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+pub struct PhiRow {
+    pub delta: f64,
+    pub tau: usize,
+    pub phi: f64,
+    pub phi_prime: f64,
+    /// steady-state excess loss E[f(x) − f*] at the noise floor
+    pub floor: f64,
+}
+
+fn testbed() -> Quadratic {
+    Quadratic::new(512, 4, 0.5, 0.1, 0.3, 1.0, 31)
+}
+
+/// Run DD-EF-SGD and return the steady-state excess loss (mean over the
+/// tail third of the run). Returns +inf when the trajectory diverges.
+pub fn steady_state_excess(
+    oracle: &mut Quadratic,
+    delta: f64,
+    tau: usize,
+    gamma: f32,
+    iters: usize,
+) -> f64 {
+    let dim = oracle.dim();
+    let n = oracle.workers();
+    let f_star = oracle.f_star();
+    let comp = TopK::new(delta);
+    let mut efs: Vec<ErrorFeedback> =
+        (0..n).map(|_| ErrorFeedback::new(dim)).collect();
+    let mut queues: Vec<VecDeque<Vec<f32>>> =
+        (0..n).map(|_| VecDeque::new()).collect();
+    let mut rng = Rng::new(0x9191);
+    let mut x = oracle.init();
+    let mut g = vec![0.0f32; dim];
+    let mut agg = vec![0.0f32; dim];
+    let mut tail_sum = 0.0f64;
+    let mut tail_n = 0usize;
+    for t in 1..=iters {
+        for w in 0..n {
+            oracle.grad(w, t, &x, &mut g);
+            queues[w].push_back(g.clone());
+        }
+        agg.iter_mut().for_each(|v| *v = 0.0);
+        let mut any = false;
+        let scale = 1.0 / n as f32;
+        for w in 0..n {
+            if queues[w].len() > tau {
+                let mut old = queues[w].pop_front().unwrap();
+                efs[w].step(&mut old, &comp, &mut rng);
+                for (a, v) in agg.iter_mut().zip(&old) {
+                    *a += scale * *v;
+                }
+                any = true;
+            }
+        }
+        if any {
+            for (xi, ai) in x.iter_mut().zip(&agg) {
+                *xi -= gamma * ai;
+            }
+        }
+        if t > iters - iters / 3 && t % 10 == 0 {
+            let l = oracle.loss(&x);
+            if !l.is_finite() {
+                return f64::INFINITY;
+            }
+            tail_sum += l - f_star;
+            tail_n += 1;
+        }
+    }
+    if tail_n == 0 { f64::INFINITY } else { tail_sum / tail_n as f64 }
+}
+
+/// Iterations until `loss <= target` (used by theory_playground).
+pub fn iters_to_target(
+    oracle: &mut Quadratic,
+    delta: f64,
+    tau: usize,
+    gamma: f32,
+    target: f64,
+    max_iters: usize,
+) -> (Option<usize>, f64) {
+    let dim = oracle.dim();
+    let n = oracle.workers();
+    let comp = TopK::new(delta);
+    let mut efs: Vec<ErrorFeedback> =
+        (0..n).map(|_| ErrorFeedback::new(dim)).collect();
+    let mut queues: Vec<VecDeque<Vec<f32>>> =
+        (0..n).map(|_| VecDeque::new()).collect();
+    let mut rng = Rng::new(0x9191);
+    let mut x = oracle.init();
+    let mut g = vec![0.0f32; dim];
+    let mut agg = vec![0.0f32; dim];
+    let mut last = f64::INFINITY;
+    for t in 1..=max_iters {
+        for w in 0..n {
+            oracle.grad(w, t, &x, &mut g);
+            queues[w].push_back(g.clone());
+        }
+        agg.iter_mut().for_each(|v| *v = 0.0);
+        let mut any = false;
+        let scale = 1.0 / n as f32;
+        for w in 0..n {
+            if queues[w].len() > tau {
+                let mut old = queues[w].pop_front().unwrap();
+                efs[w].step(&mut old, &comp, &mut rng);
+                for (a, v) in agg.iter_mut().zip(&old) {
+                    *a += scale * *v;
+                }
+                any = true;
+            }
+        }
+        if any {
+            for (xi, ai) in x.iter_mut().zip(&agg) {
+                *xi -= gamma * ai;
+            }
+        }
+        if t % 10 == 0 {
+            last = oracle.loss(&x);
+            if last <= target {
+                return (Some(t), last);
+            }
+            if !last.is_finite() {
+                return (None, last);
+            }
+        }
+    }
+    (None, last)
+}
+
+pub fn delta_sweep(gamma: f32, tau: usize, iters: usize) -> Vec<PhiRow> {
+    [1.0, 0.5, 0.2, 0.1, 0.05, 0.02]
+        .iter()
+        .map(|&delta| {
+            let mut o = testbed();
+            PhiRow {
+                delta,
+                tau,
+                phi: phi(delta, tau),
+                phi_prime: phi_prime(delta, tau),
+                floor: steady_state_excess(&mut o, delta, tau, gamma, iters),
+            }
+        })
+        .collect()
+}
+
+pub fn tau_sweep(gamma: f32, delta: f64, iters: usize) -> Vec<PhiRow> {
+    [0usize, 8, 16, 24, 32, 48]
+        .iter()
+        .map(|&tau| {
+            let mut o = testbed();
+            PhiRow {
+                delta,
+                tau,
+                phi: phi(delta, tau),
+                phi_prime: phi_prime(delta, tau),
+                floor: steady_state_excess(&mut o, delta, tau, gamma, iters),
+            }
+        })
+        .collect()
+}
+
+fn print_rows(rows: &[PhiRow], csv: &mut String) {
+    println!(
+        "{:>7} {:>4} {:>12} {:>12} {:>14}",
+        "delta", "tau", "phi", "phi'", "excess floor"
+    );
+    for r in rows {
+        let f = if r.floor.is_finite() {
+            format!("{:.6}", r.floor)
+        } else {
+            "diverged".into()
+        };
+        println!(
+            "{:>7} {:>4} {:>12.2} {:>12.2} {:>14}",
+            r.delta, r.tau, r.phi, r.phi_prime, f
+        );
+        csv.push_str(&format!(
+            "{},{},{},{},{}\n",
+            r.delta, r.tau, r.phi, r.phi_prime, r.floor
+        ));
+    }
+}
+
+pub fn main() -> anyhow::Result<()> {
+    let gamma = 0.1;
+    let iters = 4000;
+    let mut csv = String::from("delta,tau,phi,phi_prime,excess_floor\n");
+    println!(
+        "phi — steady-state excess loss vs phi (quadratic testbed, \
+         gamma={gamma}, L=0.5, mu=0.1, sigma=0.3, zeta=1.0)\n"
+    );
+    println!("== delta sweep at tau=8 (floor tracks phi' = phi/delta) ==");
+    print_rows(&delta_sweep(gamma, 8, iters), &mut csv);
+    println!(
+        "\n== tau sweep at delta=0.2 (exponential amplification: the floor \
+         explodes once (1-delta/2)^-tau dominates) =="
+    );
+    print_rows(&tau_sweep(gamma, 0.2, iters), &mut csv);
+    let path = results_dir().join("phi_validation.csv");
+    std::fs::write(&path, csv)?;
+    println!("\nwrote {path:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn floor_tracks_phi_in_delta() {
+        // more aggressive compression (smaller δ) ⇒ strictly larger noise
+        // floor at fixed τ
+        let rows = super::delta_sweep(0.1, 8, 2500);
+        let f = |d: f64| {
+            rows.iter().find(|r| r.delta == d).unwrap().floor
+        };
+        assert!(f(0.02) > f(0.1), "{} !> {}", f(0.02), f(0.1));
+        assert!(f(0.1) > f(1.0), "{} !> {}", f(0.1), f(1.0));
+        assert!(f(1.0).is_finite());
+    }
+
+    #[test]
+    fn staleness_amplifies_exponentially() {
+        // the paper's headline: at fixed δ the floor is nearly flat for
+        // small τ, then explodes
+        let rows = super::tau_sweep(0.1, 0.2, 2500);
+        let f = |t: usize| rows.iter().find(|r| r.tau == t).unwrap().floor;
+        assert!(f(8) < 10.0 * f(0), "small tau must be benign");
+        assert!(
+            f(32) > 5.0 * f(0),
+            "tau=32 floor {} should dwarf tau=0 {}",
+            f(32),
+            f(0)
+        );
+        // far tail diverges or is far worse still
+        assert!(!f(48).is_finite() || f(48) > 10.0 * f(32));
+    }
+}

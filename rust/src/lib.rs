@@ -1,0 +1,35 @@
+//! DeCo-SGD — reproduction of *"DECo-SGD: Joint Optimization of Delay
+//! Staleness and Gradient Compression Ratio for Distributed SGD"* (a.k.a.
+//! *"Taming Latency and Bandwidth"*, CS.LG 2025) as a rust + JAX + Pallas
+//! three-layer stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** — the distributed-training coordinator: worker
+//!   pipeline with delayed aggregation, error-feedback Top-k compression on
+//!   the gradient hot path, the DeCo adaptive controller, a WAN network
+//!   simulator, the Theorem-3 timeline model, metrics, config and CLI.
+//! * **L2/L1 (python, build-time only)** — JAX models (CNN / ViT / GPT) and
+//!   Pallas kernels AOT-lowered to HLO text under `artifacts/`, loaded and
+//!   executed here through the PJRT CPU client ([`runtime`]). Python never
+//!   runs at training time.
+//!
+//! Entry points: the `repro` binary (experiment CLI), `examples/`, and the
+//! public modules below.
+
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod deco;
+pub mod exp;
+pub mod metrics;
+pub mod netsim;
+pub mod optim;
+pub mod runtime;
+pub mod strategy;
+pub mod timesim;
+pub mod util;
+
+/// Block size shared with the L1 Pallas kernel and the flat-parameter
+/// padding convention (python/compile/params.py::BLOCK).
+pub const BLOCK: usize = 1024;

@@ -1,0 +1,237 @@
+//! `repro` — the DeCo-SGD experiment launcher (hand-rolled CLI; the offline
+//! vendored crate set has no clap).
+//!
+//! ```text
+//! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|all> [--scale F]
+//!           [--tasks t1 t2] [--nodes 4 8] [--workers N] [--task NAME]
+//!           [--t-comp F]
+//! repro train --config cfg.json [--out run.csv]
+//! repro deco --a BPS --b S --t-comp S --s-g BITS
+//! repro artifacts
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use deco::config::ExperimentConfig;
+use deco::deco::{solve, DecoInput};
+use deco::exp;
+
+/// Minimal flag parser: `--key value...` plus positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, Vec<String>>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags: std::collections::HashMap<String, Vec<String>> =
+            std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let mut vals = Vec::new();
+                while i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    vals.push(argv[i + 1].clone());
+                    i += 1;
+                }
+                flags.entry(key.replace('-', "_")).or_default().extend(vals);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Self { positional, flags }
+    }
+
+    fn flag_f64(&self, key: &str) -> Option<f64> {
+        self.flags.get(key)?.first()?.parse().ok()
+    }
+
+    fn flag_usize(&self, key: &str) -> Option<usize> {
+        self.flags.get(key)?.first()?.parse().ok()
+    }
+
+    fn flag_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key)?.first().map(|s| s.as_str())
+    }
+
+    fn flag_vec(&self, key: &str) -> Vec<String> {
+        self.flags.get(key).cloned().unwrap_or_default()
+    }
+
+    fn req_f64(&self, key: &str) -> Result<f64> {
+        self.flag_f64(key)
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+}
+
+const USAGE: &str = "\
+repro — DeCo-SGD paper reproduction CLI
+
+USAGE:
+  repro exp <id> [--scale F] [--tasks T..] [--nodes N..] [--workers N]
+                 [--task NAME] [--t-comp F]
+      ids: fig1 fig2 fig4 fig5 fig6 table1 thm3 phi ablation all
+  repro train --config cfg.json [--out run.csv]
+  repro deco --a BPS --b SECONDS --t-comp SECONDS --s-g BITS
+  repro artifacts
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..]);
+    match cmd {
+        "exp" => {
+            let id = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("exp needs an id\n{USAGE}"))?
+                .clone();
+            let scale = args.flag_f64("scale").unwrap_or(1.0);
+            let tasks = args.flag_vec("tasks");
+            let nodes: Vec<usize> = args
+                .flag_vec("nodes")
+                .iter()
+                .filter_map(|s| s.parse().ok())
+                .collect();
+            let workers = args.flag_usize("workers").unwrap_or(4);
+            let task =
+                args.flag_str("task").unwrap_or("gpt_wikitext").to_string();
+            let t_comp = args.flag_f64("t_comp").unwrap_or(2.0);
+            match id.as_str() {
+                "fig1" => exp::fig1::main(t_comp)?,
+                "fig2" => exp::fig2::main()?,
+                "fig4" => exp::fig4::main(&tasks, scale, workers)?,
+                "fig5" => exp::fig5::main(scale, &nodes)?,
+                "fig6" => exp::fig6::main(&task, scale)?,
+                "table1" => exp::table1::main(scale, &tasks)?,
+                "thm3" => exp::thm3::main()?,
+                "phi" => exp::phi::main()?,
+                "ablation" => {
+                    let which =
+                        args.flag_str("which").unwrap_or("all").to_string();
+                    exp::ablation::main(&which)?;
+                }
+                "all" => {
+                    exp::fig1::main(t_comp)?;
+                    exp::fig2::main()?;
+                    exp::thm3::main()?;
+                    exp::phi::main()?;
+                    exp::fig4::main(&tasks, scale, workers)?;
+                    exp::fig5::main(scale, &nodes)?;
+                    exp::fig6::main(&task, scale)?;
+                    exp::table1::main(scale, &tasks)?;
+                }
+                other => bail!("unknown experiment id '{other}'\n{USAGE}"),
+            }
+        }
+        "train" => {
+            let config = args
+                .flag_str("config")
+                .ok_or_else(|| anyhow!("train needs --config\n{USAGE}"))?;
+            let cfg = ExperimentConfig::from_json_file(config)?;
+            let mut env = exp::ExpEnv::new();
+            let res = env.run(&cfg)?;
+            println!(
+                "{}: {} iters, {:.1}s virtual, final loss {:.5}",
+                res.method,
+                res.total_iters,
+                res.total_time,
+                res.final_loss()
+            );
+            if let Some(target) = cfg.stop.loss_target {
+                match res.time_to_loss(target) {
+                    Some(t) => println!("time-to-target({target}) = {t:.2}s"),
+                    None => println!("target {target} not reached"),
+                }
+            }
+            if let Some(path) = args.flag_str("out") {
+                res.write_csv(path)?;
+                println!("wrote {path}");
+            }
+        }
+        "deco" => {
+            let a = args.req_f64("a")?;
+            let b = args.req_f64("b")?;
+            let t_comp = args.req_f64("t_comp")?;
+            let s_g = args.req_f64("s_g")?;
+            let out = solve(&DecoInput { s_g, a, b, t_comp });
+            println!(
+                "tau* = {}, delta* = {:.4}  (ln phi = {:.3})",
+                out.tau, out.delta, out.log_phi
+            );
+            println!(
+                "T_avg at the optimum = T_comp = {t_comp}s  (bubble-free); \
+                 transmission per iter = {:.3}s",
+                out.delta * s_g / a
+            );
+        }
+        "artifacts" => {
+            let dir = deco::runtime::default_artifacts_dir();
+            let m = deco::runtime::Manifest::load(&dir)?;
+            println!("artifacts at {dir:?}: block={}", m.block);
+            let mut names: Vec<_> = m.modules.keys().collect();
+            names.sort();
+            for name in names {
+                let e = &m.modules[name];
+                println!("  {name:<24} {} ({})", e.file, e.kind);
+            }
+            let mut mnames: Vec<_> = m.models.keys().collect();
+            mnames.sort();
+            for name in mnames {
+                let e = &m.models[name];
+                println!(
+                    "  model {name:<18} P={} batch={} task={}",
+                    e.param_count, e.batch, e.task
+                );
+            }
+        }
+        "--help" | "-h" | "help" => print!("{USAGE}"),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn parse(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&v)
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("fig4 --scale 0.5 --tasks gpt_wikitext vit_imagenet");
+        assert_eq!(a.positional, vec!["fig4"]);
+        assert_eq!(a.flag_f64("scale"), Some(0.5));
+        assert_eq!(
+            a.flag_vec("tasks"),
+            vec!["gpt_wikitext".to_string(), "vit_imagenet".to_string()]
+        );
+    }
+
+    #[test]
+    fn dashes_normalize_to_underscores() {
+        let a = parse("deco --t-comp 0.35 --s-g 3.9e9");
+        assert_eq!(a.flag_f64("t_comp"), Some(0.35));
+        assert_eq!(a.flag_f64("s_g"), Some(3.9e9));
+        assert!(a.req_f64("t_comp").is_ok());
+        assert!(a.req_f64("missing").is_err());
+    }
+
+    #[test]
+    fn empty_flag_and_numbers() {
+        let a = parse("exp fig5 --nodes 4 8 16 --workers 2");
+        assert_eq!(a.flag_usize("workers"), Some(2));
+        assert_eq!(a.flag_vec("nodes").len(), 3);
+        assert_eq!(a.flag_str("absent"), None);
+    }
+}

@@ -1,0 +1,216 @@
+//! Run metrics: per-iteration records, time-to-target extraction (the
+//! paper's headline quantity), and CSV/JSON writers for the experiment
+//! generators.
+
+
+use std::io::Write;
+use std::path::Path;
+
+/// One logged training step.
+#[derive(Clone, Copy, Debug)]
+pub struct Record {
+    pub iter: usize,
+    /// virtual wall-clock (s) when this iteration's update *arrived*
+    pub time: f64,
+    /// global loss (or train-loss proxy, see `RunResult::loss_kind`)
+    pub loss: f64,
+    pub tau: usize,
+    pub delta: f64,
+    pub grad_norm: f64,
+    /// instantaneous bandwidth estimate when logged (bits/s, 0 if unknown)
+    pub bandwidth: f64,
+}
+
+/// A completed training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub method: String,
+    pub task: String,
+    pub workers: usize,
+    pub records: Vec<Record>,
+    /// total virtual time at the last executed iteration
+    pub total_time: f64,
+    pub total_iters: usize,
+}
+
+impl RunResult {
+    /// First virtual time at which the loss reaches `target` (≤), linearly
+    /// interpolated between the straddling records. `None` if never reached.
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        let mut prev: Option<&Record> = None;
+        for r in &self.records {
+            if r.loss <= target {
+                return Some(match prev {
+                    Some(p) if p.loss > r.loss => {
+                        let w = (p.loss - target) / (p.loss - r.loss);
+                        p.time + w * (r.time - p.time)
+                    }
+                    _ => r.time,
+                });
+            }
+            prev = Some(r);
+        }
+        None
+    }
+
+    /// First iteration index reaching the loss target.
+    pub fn iters_to_loss(&self, target: f64) -> Option<usize> {
+        self.records.iter().find(|r| r.loss <= target).map(|r| r.iter)
+    }
+
+    /// Perplexity convenience for LM tasks: time to `exp(loss) <= ppl`.
+    pub fn time_to_ppl(&self, ppl: f64) -> Option<f64> {
+        self.time_to_loss(ppl.ln())
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.records.last().map(|r| r.loss).unwrap_or(f64::NAN)
+    }
+
+    /// Best (minimum) loss seen.
+    pub fn best_loss(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.loss)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "iter,time,loss,tau,delta,grad_norm,bandwidth\n",
+        );
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{},{:.4},{:.6},{:.0}\n",
+                r.iter, r.time, r.loss, r.tau, r.delta, r.grad_norm, r.bandwidth
+            ));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("task", Json::str(&self.task)),
+            ("workers", Json::num(self.workers as f64)),
+            ("total_time", Json::num(self.total_time)),
+            ("total_iters", Json::num(self.total_iters as f64)),
+            (
+                "records",
+                Json::arr(self.records.iter().map(|r| {
+                    Json::obj(vec![
+                        ("iter", Json::num(r.iter as f64)),
+                        ("time", Json::num(r.time)),
+                        ("loss", Json::num(r.loss)),
+                        ("tau", Json::num(r.tau as f64)),
+                        ("delta", Json::num(r.delta)),
+                        ("grad_norm", Json::num(r.grad_norm)),
+                        ("bandwidth", Json::num(r.bandwidth)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().to_string_pretty().as_bytes())
+    }
+}
+
+/// Pretty-print a table of (method, value) rows — the experiment CLIs all
+/// report through this.
+pub fn format_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, time: f64, loss: f64) -> Record {
+        Record { iter, time, loss, tau: 0, delta: 1.0, grad_norm: 0.0, bandwidth: 0.0 }
+    }
+
+    #[test]
+    fn time_to_loss_interpolates() {
+        let run = RunResult {
+            records: vec![rec(0, 0.0, 10.0), rec(10, 1.0, 6.0), rec(20, 2.0, 2.0)],
+            ..Default::default()
+        };
+        // target 4.0 is halfway between 6.0@1s and 2.0@2s
+        let t = run.time_to_loss(4.0).unwrap();
+        assert!((t - 1.5).abs() < 1e-12, "t={t}");
+        assert_eq!(run.time_to_loss(10.0), Some(0.0));
+        assert_eq!(run.time_to_loss(1.0), None);
+        assert_eq!(run.iters_to_loss(6.0), Some(10));
+    }
+
+    #[test]
+    fn ppl_is_exp_loss() {
+        let run = RunResult {
+            records: vec![rec(0, 0.0, 4.0), rec(1, 1.0, 3.0)],
+            ..Default::default()
+        };
+        assert_eq!(run.time_to_ppl(3.0f64.exp()), Some(1.0));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let run = RunResult {
+            method: "deco".into(),
+            records: vec![rec(1, 0.5, 2.0)],
+            ..Default::default()
+        };
+        let csv = run.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("iter,time,loss"));
+    }
+
+    #[test]
+    fn table_formatting_aligns() {
+        let t = format_table(
+            &["method", "time"],
+            &[
+                vec!["dsgd".into(), "100.0".into()],
+                vec!["deco-sgd".into(), "19.7".into()],
+            ],
+        );
+        assert!(t.contains("deco-sgd"));
+        assert_eq!(t.lines().count(), 4);
+    }
+}

@@ -1,0 +1,142 @@
+//! Heterogeneous network fabric — one link per worker.
+//!
+//! The paper's Limitations section explicitly defers "device heterogeneity
+//! (different bandwidth/latency per node)". This extension implements the
+//! substrate and the natural semantics for the synchronous DD-EF-SGD
+//! pipeline: the aggregation of iteration k completes when the **slowest**
+//! worker's message arrives, so the effective (a, b) the DeCo controller
+//! should plan with are the bottleneck worker's. `exp ablation --which
+//! heterogeneity` quantifies how much a straggler erodes DeCo's gains.
+
+use super::link::Link;
+use super::trace::BandwidthTrace;
+
+pub struct Fabric {
+    links: Vec<Link>,
+}
+
+impl Fabric {
+    pub fn new(links: Vec<Link>) -> Self {
+        assert!(!links.is_empty());
+        Self { links }
+    }
+
+    /// Homogeneous fabric: `n` copies of the same trace/latency.
+    pub fn homogeneous(n: usize, trace: BandwidthTrace, latency_s: f64) -> Self {
+        Self::new(
+            (0..n)
+                .map(|_| Link::new(trace.clone(), latency_s))
+                .collect(),
+        )
+    }
+
+    /// One straggler: worker 0 gets `frac` of the bandwidth and `mult`× the
+    /// latency of everyone else.
+    pub fn with_straggler(
+        n: usize,
+        trace: BandwidthTrace,
+        latency_s: f64,
+        frac: f64,
+        mult: f64,
+    ) -> Self {
+        let mut links = Vec::with_capacity(n);
+        for i in 0..n {
+            if i == 0 {
+                // scale the trace by sampling: wrap as Samples over a grid
+                let times: Vec<f64> = (0..2048).map(|k| k as f64 * 0.5).collect();
+                let bps: Vec<f64> =
+                    times.iter().map(|&t| trace.at(t) * frac).collect();
+                links.push(Link::new(
+                    BandwidthTrace::new(super::trace::TraceKind::Samples {
+                        times_s: times,
+                        bps,
+                    }),
+                    latency_s * mult,
+                ));
+            } else {
+                links.push(Link::new(trace.clone(), latency_s));
+            }
+        }
+        Self::new(links)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn link(&self, worker: usize) -> &Link {
+        &self.links[worker]
+    }
+
+    /// Arrival time of the synchronous aggregation: max over per-worker
+    /// arrivals of a message of `bits` started at `start`.
+    pub fn sync_arrival(&self, start: f64, bits: u64) -> f64 {
+        self.links
+            .iter()
+            .map(|l| l.arrival(start, bits))
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// The bottleneck link's parameters at time `t` — what DeCo should plan
+    /// with under heterogeneity (min bandwidth, max latency).
+    pub fn bottleneck(&self, t: f64) -> (f64, f64) {
+        let a = self
+            .links
+            .iter()
+            .map(|l| l.bandwidth_at(t))
+            .fold(f64::INFINITY, f64::min);
+        let b = self
+            .links
+            .iter()
+            .map(|l| l.latency())
+            .fold(f64::NEG_INFINITY, f64::max);
+        (a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_sync_equals_single_link() {
+        let f = Fabric::homogeneous(4, BandwidthTrace::constant(1e8), 0.1);
+        let single = Link::new(BandwidthTrace::constant(1e8), 0.1);
+        assert_eq!(
+            f.sync_arrival(2.0, 10_000_000),
+            single.arrival(2.0, 10_000_000)
+        );
+        assert_eq!(f.workers(), 4);
+    }
+
+    #[test]
+    fn straggler_dominates_sync() {
+        let f = Fabric::with_straggler(
+            4,
+            BandwidthTrace::constant(1e8),
+            0.1,
+            0.25, // quarter bandwidth
+            2.0,  // double latency
+        );
+        let healthy = Link::new(BandwidthTrace::constant(1e8), 0.1);
+        let bits = 50_000_000;
+        let sync = f.sync_arrival(0.0, bits);
+        assert!(sync > healthy.arrival(0.0, bits));
+        // straggler transfer: 4x time + 0.2 latency
+        assert!((sync - (bits as f64 / 2.5e7 + 0.2)).abs() < 0.05, "{sync}");
+    }
+
+    #[test]
+    fn bottleneck_reports_worst_case() {
+        let f = Fabric::with_straggler(
+            3,
+            BandwidthTrace::constant(2e8),
+            0.05,
+            0.5,
+            3.0,
+        );
+        let (a, b) = f.bottleneck(1.0);
+        assert!((a - 1e8).abs() / 1e8 < 0.01, "a={a}");
+        assert!((b - 0.15).abs() < 1e-9, "b={b}");
+    }
+}

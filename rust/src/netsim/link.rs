@@ -1,0 +1,132 @@
+//! A WAN link with end-to-end latency `b` and time-varying bandwidth `a(t)`.
+//!
+//! `transfer_end` integrates `∫ a(t) dt = bits` over the trace so that
+//! transmissions started during a bandwidth dip genuinely take longer —
+//! the effect DeCo-SGD's adaptivity exploits. The paper's model
+//! (`delta·S_g/a + b`) is the constant-trace special case, asserted in tests.
+
+use super::trace::BandwidthTrace;
+
+/// Integration step for varying-bandwidth transfers (s).
+const INT_DT: f64 = 0.01;
+
+#[derive(Clone, Debug)]
+pub struct Link {
+    trace: BandwidthTrace,
+    latency_s: f64,
+}
+
+impl Link {
+    pub fn new(trace: BandwidthTrace, latency_s: f64) -> Self {
+        assert!(latency_s >= 0.0);
+        Self { trace, latency_s }
+    }
+
+    pub fn latency(&self) -> f64 {
+        self.latency_s
+    }
+
+    pub fn trace(&self) -> &BandwidthTrace {
+        &self.trace
+    }
+
+    /// Instantaneous bandwidth (bits/s).
+    pub fn bandwidth_at(&self, t: f64) -> f64 {
+        self.trace.at(t)
+    }
+
+    /// Time when a transfer of `bits` *finishes leaving the sender* if it
+    /// starts at `start` (transmission time only, no latency).
+    pub fn transfer_end(&self, start: f64, bits: u64) -> f64 {
+        if bits == 0 {
+            return start;
+        }
+        let mut remaining = bits as f64;
+        let mut t = start;
+        // fast path: constant traces solve in closed form
+        if let super::trace::TraceKind::Constant { bps } = self.trace.kind() {
+            return start + remaining / bps;
+        }
+        loop {
+            let rate = self.trace.at(t);
+            let sent = rate * INT_DT;
+            if sent >= remaining {
+                return t + remaining / rate;
+            }
+            remaining -= sent;
+            t += INT_DT;
+        }
+    }
+
+    /// Arrival time at the receiver: transmission end + latency.
+    pub fn arrival(&self, start: f64, bits: u64) -> f64 {
+        self.transfer_end(start, bits) + self.latency_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::trace::TraceKind;
+
+    #[test]
+    fn constant_matches_closed_form() {
+        let link = Link::new(BandwidthTrace::constant(1e8), 0.1);
+        // 1e8 bits over 1e8 bps = 1 s
+        let end = link.transfer_end(5.0, 100_000_000);
+        assert!((end - 6.0).abs() < 1e-9);
+        assert!((link.arrival(5.0, 100_000_000) - 6.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bits_instant() {
+        let link = Link::new(BandwidthTrace::constant(1e8), 0.25);
+        assert_eq!(link.transfer_end(3.0, 0), 3.0);
+        assert!((link.arrival(3.0, 0) - 3.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn varying_bandwidth_integrates() {
+        // square-ish sine: mean 1e8; sending exactly one period's worth of
+        // bits takes ~ one period
+        let link = Link::new(
+            BandwidthTrace::new(TraceKind::Sine {
+                mean_bps: 1e8,
+                amp_bps: 9e7,
+                period_s: 2.0,
+            }),
+            0.0,
+        );
+        let end = link.transfer_end(0.0, 200_000_000); // one period at mean
+        assert!((end - 2.0).abs() < 0.1, "end={end}");
+    }
+
+    #[test]
+    fn slower_trace_takes_longer() {
+        let fast = Link::new(BandwidthTrace::constant(2e8), 0.0);
+        let slow = Link::new(BandwidthTrace::constant(5e7), 0.0);
+        let bits = 50_000_000;
+        assert!(slow.transfer_end(0.0, bits) > fast.transfer_end(0.0, bits));
+    }
+
+    #[test]
+    fn monotone_in_start_time() {
+        let link = Link::new(
+            BandwidthTrace::new(TraceKind::Ou {
+                mean_bps: 1e8,
+                sigma_bps: 3e7,
+                theta: 0.5,
+                seed: 42,
+            }),
+            0.05,
+        );
+        let mut prev = 0.0;
+        for i in 0..50 {
+            let s = i as f64 * 0.3;
+            let e = link.arrival(s, 10_000_000);
+            assert!(e >= s + 0.05);
+            assert!(e >= prev - 1e-9 || e >= s, "arrivals should not regress");
+            prev = e;
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! WAN network simulator — the substitute for the paper's docker-tc testbed
+//! (Sec. C.1): dynamic bandwidth traces, a varying-rate link that integrates
+//! transfer time, and the monitor whose (a, b) estimates feed DeCo.
+
+pub mod fabric;
+pub mod link;
+pub mod monitor;
+pub mod trace;
+
+pub use fabric::Fabric;
+pub use link::Link;
+pub use monitor::NetworkMonitor;
+pub use trace::{BandwidthTrace, TraceKind};

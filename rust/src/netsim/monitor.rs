@@ -1,0 +1,134 @@
+//! Network monitor — the "Get a, b from the network" step of Algorithm 2.
+//!
+//! Workers observe completed transfers (bits, duration) and iteration
+//! compute times; the monitor maintains EWMA estimates that the DeCo
+//! controller polls every `E` iterations. In a real deployment this is an
+//! RTT probe + throughput sampling; in the simulator the observations come
+//! from the event timeline, optionally with multiplicative measurement
+//! noise to exercise DeCo's robustness (ablation `exp phi --noise`).
+
+use crate::util::{Ewma, Rng};
+
+#[derive(Clone, Debug)]
+pub struct NetworkMonitor {
+    bw: Ewma,
+    lat: Ewma,
+    comp: Ewma,
+    /// multiplicative measurement noise (0 = exact)
+    noise: f64,
+    rng: Rng,
+}
+
+impl NetworkMonitor {
+    pub fn new(alpha: f64) -> Self {
+        Self {
+            bw: Ewma::new(alpha),
+            lat: Ewma::new(alpha),
+            comp: Ewma::new(alpha),
+            noise: 0.0,
+            rng: Rng::new(0xC0FFEE),
+        }
+    }
+
+    pub fn with_noise(mut self, noise: f64, seed: u64) -> Self {
+        self.noise = noise;
+        self.rng = Rng::new(seed);
+        self
+    }
+
+    fn jitter(&mut self, x: f64) -> f64 {
+        if self.noise == 0.0 {
+            x
+        } else {
+            x * (1.0 + self.noise * self.rng.normal()).max(0.05)
+        }
+    }
+
+    /// A transfer of `bits` took `secs` of pure transmission time.
+    pub fn observe_transfer(&mut self, bits: u64, secs: f64) {
+        if secs > 0.0 && bits > 0 {
+            let sample = bits as f64 / secs;
+            let sample = self.jitter(sample);
+            self.bw.update(sample);
+        }
+    }
+
+    /// Direct bandwidth sample (bits/s), e.g. from an active probe.
+    pub fn observe_bandwidth(&mut self, bps: f64) {
+        let s = self.jitter(bps);
+        self.bw.update(s);
+    }
+
+    pub fn observe_latency(&mut self, secs: f64) {
+        let s = self.jitter(secs);
+        self.lat.update(s);
+    }
+
+    pub fn observe_compute(&mut self, secs: f64) {
+        self.comp.update(secs);
+    }
+
+    /// Estimated bandwidth `a` (bits/s).
+    pub fn bandwidth(&self) -> Option<f64> {
+        self.bw.get()
+    }
+
+    /// Estimated end-to-end latency `b` (s).
+    pub fn latency(&self) -> Option<f64> {
+        self.lat.get()
+    }
+
+    /// Estimated per-iteration compute time `T_comp` (s).
+    pub fn compute_time(&self) -> Option<f64> {
+        self.comp.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimates_converge_to_truth() {
+        let mut m = NetworkMonitor::new(0.3);
+        for _ in 0..100 {
+            m.observe_transfer(100_000_000, 1.0); // 1e8 bps
+            m.observe_latency(0.2);
+            m.observe_compute(0.05);
+        }
+        assert!((m.bandwidth().unwrap() - 1e8).abs() < 1e3);
+        assert!((m.latency().unwrap() - 0.2).abs() < 1e-9);
+        assert!((m.compute_time().unwrap() - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracks_bandwidth_shift() {
+        let mut m = NetworkMonitor::new(0.5);
+        for _ in 0..20 {
+            m.observe_bandwidth(1e8);
+        }
+        for _ in 0..20 {
+            m.observe_bandwidth(2e7);
+        }
+        let est = m.bandwidth().unwrap();
+        assert!((est - 2e7).abs() / 2e7 < 0.01, "est={est}");
+    }
+
+    #[test]
+    fn noise_does_not_bias_much() {
+        let mut m = NetworkMonitor::new(0.05).with_noise(0.2, 9);
+        for _ in 0..2000 {
+            m.observe_bandwidth(1e8);
+        }
+        let est = m.bandwidth().unwrap();
+        assert!((est - 1e8).abs() / 1e8 < 0.15, "est={est}");
+    }
+
+    #[test]
+    fn ignores_degenerate_observations() {
+        let mut m = NetworkMonitor::new(0.3);
+        m.observe_transfer(0, 1.0);
+        m.observe_transfer(100, 0.0);
+        assert!(m.bandwidth().is_none());
+    }
+}

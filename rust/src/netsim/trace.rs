@@ -1,0 +1,223 @@
+//! Bandwidth traces `a(t)` in bits/s.
+//!
+//! The paper's experiments run under "dynamic low bandwidth, average
+//! bandwidth <= 1 Gbps" (Sec. C.2, Fig. 6). We provide:
+//! * `Constant` — the Table-1 grid points;
+//! * `Sine` — smooth periodic variation (Fig. 6's visual shape);
+//! * `Ou` — mean-reverting Ornstein-Uhlenbeck, the standard stochastic
+//!   model for measured WAN throughput;
+//! * `Markov` — regime-switching (congestion episodes), heavier tails;
+//! * `File`-style piecewise-linear samples for replaying external traces.
+//!
+//! All traces are deterministic functions of (seed, t) — OU and Markov
+//! pre-generate samples on a fixed grid and interpolate, so `at()` is pure
+//! and the event simulator can integrate over them reproducibly.
+
+use crate::util::Rng;
+
+
+/// Trace configuration (serde-friendly, lives in experiment TOML).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceKind {
+    Constant { bps: f64 },
+    Sine { mean_bps: f64, amp_bps: f64, period_s: f64 },
+    Ou { mean_bps: f64, sigma_bps: f64, theta: f64, seed: u64 },
+    Markov { levels_bps: Vec<f64>, dwell_s: f64, seed: u64 },
+    Samples { times_s: Vec<f64>, bps: Vec<f64> },
+}
+
+/// A realized bandwidth trace.
+#[derive(Clone, Debug)]
+pub struct BandwidthTrace {
+    kind: TraceKind,
+    /// pre-generated grid for stochastic kinds: (dt, samples)
+    grid: Option<(f64, Vec<f64>)>,
+    floor: f64,
+}
+
+/// Grid resolution for stochastic traces (s).
+const GRID_DT: f64 = 0.05;
+/// Pre-generated horizon (s); beyond it the trace wraps around, keeping
+/// long experiments stationary without unbounded memory.
+const GRID_HORIZON: f64 = 4096.0;
+
+impl BandwidthTrace {
+    pub fn new(kind: TraceKind) -> Self {
+        let grid = match &kind {
+            TraceKind::Ou { mean_bps, sigma_bps, theta, seed } => {
+                Some((GRID_DT, Self::gen_ou(*mean_bps, *sigma_bps, *theta, *seed)))
+            }
+            TraceKind::Markov { levels_bps, dwell_s, seed } => {
+                Some((GRID_DT, Self::gen_markov(levels_bps, *dwell_s, *seed)))
+            }
+            _ => None,
+        };
+        // never allow a dead link: floor at 1 kbps
+        Self { kind, grid, floor: 1e3 }
+    }
+
+    pub fn constant(bps: f64) -> Self {
+        Self::new(TraceKind::Constant { bps })
+    }
+
+    pub fn kind(&self) -> &TraceKind {
+        &self.kind
+    }
+
+    fn gen_ou(mean: f64, sigma: f64, theta: f64, seed: u64) -> Vec<f64> {
+        let n = (GRID_HORIZON / GRID_DT) as usize;
+        let mut rng = Rng::new(seed);
+        let mut x = mean;
+        let mut out = Vec::with_capacity(n);
+        let sq = sigma * (2.0 * theta * GRID_DT).sqrt();
+        for _ in 0..n {
+            out.push(x);
+            x += theta * (mean - x) * GRID_DT + sq * rng.normal();
+            x = x.max(0.02 * mean); // reflect at 2% of mean
+        }
+        out
+    }
+
+    fn gen_markov(levels: &[f64], dwell_s: f64, seed: u64) -> Vec<f64> {
+        assert!(!levels.is_empty());
+        let n = (GRID_HORIZON / GRID_DT) as usize;
+        let mut rng = Rng::new(seed);
+        let mut state = rng.below(levels.len());
+        let p_switch = (GRID_DT / dwell_s).min(1.0);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(levels[state]);
+            if rng.next_f64() < p_switch {
+                state = rng.below(levels.len());
+            }
+        }
+        out
+    }
+
+    /// Bandwidth at absolute time `t` (bits/s). Pure function.
+    pub fn at(&self, t: f64) -> f64 {
+        let v = match &self.kind {
+            TraceKind::Constant { bps } => *bps,
+            TraceKind::Sine { mean_bps, amp_bps, period_s } => {
+                mean_bps + amp_bps * (std::f64::consts::TAU * t / period_s).sin()
+            }
+            TraceKind::Samples { times_s, bps } => {
+                Self::interp(times_s, bps, t)
+            }
+            _ => {
+                let (dt, samples) = self.grid.as_ref().unwrap();
+                let i = ((t / dt) as usize) % samples.len();
+                samples[i]
+            }
+        };
+        v.max(self.floor)
+    }
+
+    fn interp(ts: &[f64], vs: &[f64], t: f64) -> f64 {
+        if ts.is_empty() {
+            return 0.0;
+        }
+        if t <= ts[0] {
+            return vs[0];
+        }
+        if t >= *ts.last().unwrap() {
+            return *vs.last().unwrap();
+        }
+        let i = ts.partition_point(|&x| x <= t) - 1;
+        let w = (t - ts[i]) / (ts[i + 1] - ts[i]);
+        vs[i] * (1.0 - w) + vs[i + 1] * w
+    }
+
+    /// Mean bandwidth over [t0, t1] (trapezoid on a fine grid).
+    pub fn mean_over(&self, t0: f64, t1: f64) -> f64 {
+        let n = 200;
+        let dt = (t1 - t0) / n as f64;
+        let sum: f64 = (0..=n).map(|i| self.at(t0 + i as f64 * dt)).sum();
+        sum / (n + 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_everywhere() {
+        let t = BandwidthTrace::constant(1e8);
+        assert_eq!(t.at(0.0), 1e8);
+        assert_eq!(t.at(1e6), 1e8);
+    }
+
+    #[test]
+    fn sine_bounds_and_mean() {
+        let t = BandwidthTrace::new(TraceKind::Sine {
+            mean_bps: 1e8,
+            amp_bps: 5e7,
+            period_s: 10.0,
+        });
+        for i in 0..1000 {
+            let v = t.at(i as f64 * 0.037);
+            assert!((5e7 - 1.0..=1.5e8 + 1.0).contains(&v));
+        }
+        let m = t.mean_over(0.0, 10.0);
+        assert!((m - 1e8).abs() < 2e6, "mean={m}");
+    }
+
+    #[test]
+    fn ou_stationary_stats() {
+        let t = BandwidthTrace::new(TraceKind::Ou {
+            mean_bps: 1e8,
+            sigma_bps: 2e7,
+            theta: 0.5,
+            seed: 5,
+        });
+        let m = t.mean_over(0.0, 2000.0);
+        assert!((m - 1e8).abs() < 1e7, "mean={m}");
+        // never below floor, never absurd
+        for i in 0..10_000 {
+            let v = t.at(i as f64 * 0.21);
+            assert!(v > 0.0 && v < 1e9);
+        }
+    }
+
+    #[test]
+    fn markov_visits_levels() {
+        let levels = vec![5e7, 1e8, 2e8];
+        let t = BandwidthTrace::new(TraceKind::Markov {
+            levels_bps: levels.clone(),
+            dwell_s: 1.0,
+            seed: 6,
+        });
+        let mut seen = [false; 3];
+        for i in 0..20_000 {
+            let v = t.at(i as f64 * 0.05);
+            for (j, &l) in levels.iter().enumerate() {
+                if (v - l).abs() < 1.0 {
+                    seen[j] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "levels visited: {seen:?}");
+    }
+
+    #[test]
+    fn samples_interpolate() {
+        let t = BandwidthTrace::new(TraceKind::Samples {
+            times_s: vec![0.0, 10.0],
+            bps: vec![1e8, 2e8],
+        });
+        assert_eq!(t.at(-1.0), 1e8);
+        assert!((t.at(5.0) - 1.5e8).abs() < 1.0);
+        assert_eq!(t.at(11.0), 2e8);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let k = TraceKind::Ou { mean_bps: 1e8, sigma_bps: 1e7, theta: 0.3, seed: 77 };
+        let a = BandwidthTrace::new(k.clone());
+        let b = BandwidthTrace::new(k);
+        for i in 0..100 {
+            assert_eq!(a.at(i as f64 * 1.3), b.at(i as f64 * 1.3));
+        }
+    }
+}

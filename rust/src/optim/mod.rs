@@ -1,0 +1,44 @@
+//! Analytic optimization testbeds + the gradient-oracle abstraction.
+//!
+//! [`GradOracle`] is the seam between the coordinator and the compute layer:
+//! the PJRT-backed oracle (`runtime::PjrtOracle`) runs the real L2/L1 HLO
+//! modules; the testbeds here ([`Quadratic`], [`Logistic`]) provide
+//! closed-form gradients with controllable σ (gradient noise), ζ (worker
+//! heterogeneity), L and µ — so the theory experiments (`exp phi`,
+//! convergence-rate validation) run thousands of steps in milliseconds.
+
+pub mod logistic;
+pub mod quadratic;
+
+pub use logistic::Logistic;
+pub use quadratic::Quadratic;
+
+use crate::util::Rng;
+
+/// A distributed gradient oracle over a flat parameter vector.
+pub trait GradOracle {
+    /// Parameter dimension (padded to the compressor block size by callers
+    /// that need it; testbeds can use any dim).
+    fn dim(&self) -> usize;
+
+    /// Number of workers.
+    fn workers(&self) -> usize;
+
+    /// Stochastic gradient of worker `i`'s local loss at `x` for iteration
+    /// `iter`, written into `out`. Returns the local loss estimate.
+    fn grad(&mut self, worker: usize, iter: usize, x: &[f32], out: &mut [f32]) -> f64;
+
+    /// Full (deterministic) global loss — for metrics, not on the hot path.
+    fn loss(&mut self, x: &[f32]) -> f64;
+
+    /// A fresh parameter vector at the canonical init.
+    fn init(&self) -> Vec<f32>;
+}
+
+/// Convenience wrapper for seeding per-worker noise streams.
+pub(crate) fn worker_rng(seed: u64, worker: usize, iter: usize) -> Rng {
+    Rng::new(
+        seed ^ (worker as u64).wrapping_mul(0xA24BAED4963EE407)
+            ^ (iter as u64).wrapping_mul(0x9FB21C651E98DF25),
+    )
+}

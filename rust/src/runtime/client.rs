@@ -1,0 +1,180 @@
+//! PJRT client wrapper: compile-once executables for the grad / compress /
+//! apply modules with typed, flat-buffer call interfaces.
+
+use super::manifest::{Manifest, ModelEntry, ModuleEntry};
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// The process-wide PJRT runtime: CPU client + artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, manifest })
+    }
+
+    fn compile(&self, entry: &ModuleEntry) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", entry.file))
+    }
+
+    /// Compile the gradient module of `model`.
+    pub fn grad_exec(&self, model: &str) -> Result<GradExec> {
+        let entry = self.manifest.module(&format!("grad_{model}"))?;
+        let minfo = self.manifest.model(model)?.clone();
+        let exe = self.compile(entry)?;
+        Ok(GradExec { exe, model: minfo })
+    }
+
+    /// Compile a palette compress module by manifest name
+    /// (e.g. "compress_0p05").
+    pub fn compress_exec(&self, name: &str) -> Result<CompressExec> {
+        let entry = self.manifest.module(name)?;
+        if entry.kind != "compress" {
+            return Err(anyhow!("{name} is not a compress module"));
+        }
+        let exe = self.compile(entry)?;
+        Ok(CompressExec {
+            exe,
+            dim: entry.dim.unwrap(),
+            delta: entry.delta.unwrap(),
+            k_per_block: entry.k_per_block.unwrap(),
+        })
+    }
+
+    pub fn apply_exec(&self) -> Result<ApplyExec> {
+        let entry = self.manifest.module("sgd_apply")?;
+        let exe = self.compile(entry)?;
+        Ok(ApplyExec { exe, dim: entry.dim.unwrap() })
+    }
+}
+
+/// `(params f32[P], x, y) -> (loss f32[], grad f32[P])`.
+pub struct GradExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub model: ModelEntry,
+}
+
+/// Model input batch, matching the model's `x_dtype`.
+pub enum BatchInput<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl GradExec {
+    /// Execute one gradient step; writes the flat gradient into `grad_out`
+    /// and returns the scalar loss.
+    pub fn run(
+        &self,
+        params: &[f32],
+        x: BatchInput,
+        y: &[i32],
+        grad_out: &mut [f32],
+    ) -> Result<f32> {
+        let p = self.model.param_count;
+        assert_eq!(params.len(), p);
+        assert_eq!(grad_out.len(), p);
+        let dims_x: Vec<i64> =
+            self.model.x_shape.iter().map(|&d| d as i64).collect();
+        let dims_y: Vec<i64> =
+            self.model.y_shape.iter().map(|&d| d as i64).collect();
+        let lit_p = xla::Literal::vec1(params);
+        let lit_x = match x {
+            BatchInput::F32(v) => xla::Literal::vec1(v)
+                .reshape(&dims_x)
+                .map_err(|e| anyhow!("x reshape: {e:?}"))?,
+            BatchInput::I32(v) => xla::Literal::vec1(v)
+                .reshape(&dims_x)
+                .map_err(|e| anyhow!("x reshape: {e:?}"))?,
+        };
+        let lit_y = xla::Literal::vec1(y)
+            .reshape(&dims_y)
+            .map_err(|e| anyhow!("y reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit_p, lit_x, lit_y])
+            .map_err(|e| anyhow!("grad execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (loss, grad) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("grad output tuple: {e:?}"))?;
+        grad.copy_raw_to(grad_out)
+            .map_err(|e| anyhow!("grad copy: {e:?}"))?;
+        let loss: f32 = loss
+            .get_first_element()
+            .map_err(|e| anyhow!("loss scalar: {e:?}"))?;
+        Ok(loss)
+    }
+}
+
+/// `(g f32[d], e f32[d]) -> (delta f32[d], e_new f32[d])` — the L1 Pallas
+/// blockwise Top-k EF kernel, AOT-lowered. One executable per palette δ.
+pub struct CompressExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub dim: usize,
+    pub delta: f64,
+    pub k_per_block: usize,
+}
+
+impl CompressExec {
+    pub fn run(&self, g: &[f32], e: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        assert_eq!(g.len(), self.dim);
+        assert_eq!(e.len(), self.dim);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(g),
+                xla::Literal::vec1(e),
+            ])
+            .map_err(|e| anyhow!("compress execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (delta, e_new) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("compress output tuple: {e:?}"))?;
+        Ok((
+            delta.to_vec().map_err(|e| anyhow!("delta vec: {e:?}"))?,
+            e_new.to_vec().map_err(|e| anyhow!("e_new vec: {e:?}"))?,
+        ))
+    }
+}
+
+/// `(x f32[d], upd f32[d], lr f32[1]) -> x_new f32[d]` — fused SGD apply.
+pub struct ApplyExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub dim: usize,
+}
+
+impl ApplyExec {
+    pub fn run(&self, x: &[f32], upd: &[f32], lr: f32) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), self.dim);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(x),
+                xla::Literal::vec1(upd),
+                xla::Literal::vec1(&[lr]),
+            ])
+            .map_err(|e| anyhow!("apply execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let x_new = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("apply output tuple: {e:?}"))?;
+        x_new.to_vec().map_err(|e| anyhow!("x_new vec: {e:?}"))
+    }
+}

@@ -1,0 +1,289 @@
+//! `artifacts/manifest.json` schema — the contract between aot.py and the
+//! rust runtime (module table, tensor layout, init spec). Parsed with the
+//! in-tree JSON codec (`util::json`).
+
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// compressor block size (must equal crate::BLOCK)
+    pub block: usize,
+    pub modules: HashMap<String, ModuleEntry>,
+    pub models: HashMap<String, ModelEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModuleEntry {
+    pub file: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub dim: Option<usize>,
+    pub delta: Option<f64>,
+    pub k_per_block: Option<usize>,
+    pub inputs: Vec<IoEntry>,
+    pub outputs: Vec<IoEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub task: String,
+    pub param_count: usize,
+    pub batch: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: String,
+    pub y_shape: Vec<usize>,
+    pub grad_bits: u64,
+    pub meta: Json,
+    pub tensors: Vec<TensorEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: String,
+    pub std: f64,
+}
+
+fn err(msg: String) -> anyhow::Error {
+    anyhow!(msg)
+}
+
+fn usizes(j: &Json, key: &str) -> Result<Vec<usize>> {
+    Ok(j.req(key)
+        .map_err(err)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'{key}' not an array"))?
+        .iter()
+        .filter_map(|v| v.as_usize())
+        .collect())
+}
+
+fn parse_io(j: &Json) -> Result<IoEntry> {
+    Ok(IoEntry {
+        name: j.req_str("name").map_err(err)?.to_string(),
+        shape: usizes(j, "shape")?,
+        dtype: j.req_str("dtype").map_err(err)?.to_string(),
+    })
+}
+
+fn parse_module(j: &Json) -> Result<ModuleEntry> {
+    let ios = |key: &str| -> Result<Vec<IoEntry>> {
+        j.req(key)
+            .map_err(err)?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'{key}' not an array"))?
+            .iter()
+            .map(parse_io)
+            .collect()
+    };
+    Ok(ModuleEntry {
+        file: j.req_str("file").map_err(err)?.to_string(),
+        kind: j.req_str("kind").map_err(err)?.to_string(),
+        model: j.get("model").and_then(|v| v.as_str()).map(String::from),
+        dim: j.get("dim").and_then(|v| v.as_usize()),
+        delta: j.get("delta").and_then(|v| v.as_f64()),
+        k_per_block: j.get("k_per_block").and_then(|v| v.as_usize()),
+        inputs: ios("inputs")?,
+        outputs: ios("outputs")?,
+    })
+}
+
+fn parse_model(j: &Json) -> Result<ModelEntry> {
+    let tensors = j
+        .req("tensors")
+        .map_err(err)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'tensors' not an array"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorEntry {
+                name: t.req_str("name").map_err(err)?.to_string(),
+                shape: usizes(t, "shape")?,
+                offset: t.req_usize("offset").map_err(err)?,
+                size: t.req_usize("size").map_err(err)?,
+                init: t.req_str("init").map_err(err)?.to_string(),
+                std: t.req_f64("std").map_err(err)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelEntry {
+        task: j.req_str("task").map_err(err)?.to_string(),
+        param_count: j.req_usize("param_count").map_err(err)?,
+        batch: j.req_usize("batch").map_err(err)?,
+        x_shape: usizes(j, "x_shape")?,
+        x_dtype: j.req_str("x_dtype").map_err(err)?.to_string(),
+        y_shape: usizes(j, "y_shape")?,
+        grad_bits: j.req_f64("grad_bits").map_err(err)? as u64,
+        meta: j.get("meta").cloned().unwrap_or(Json::Null),
+        tensors,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing manifest.json: {e}"))?;
+        let block = j.req_usize("block").map_err(err)?;
+        if block != crate::BLOCK {
+            return Err(anyhow!(
+                "manifest block {block} != crate BLOCK {}",
+                crate::BLOCK
+            ));
+        }
+        let mut modules = HashMap::new();
+        for (name, m) in j
+            .req("modules")
+            .map_err(err)?
+            .as_obj()
+            .ok_or_else(|| anyhow!("'modules' not an object"))?
+        {
+            modules.insert(
+                name.clone(),
+                parse_module(m).with_context(|| format!("module {name}"))?,
+            );
+        }
+        let mut models = HashMap::new();
+        for (name, m) in j
+            .req("models")
+            .map_err(err)?
+            .as_obj()
+            .ok_or_else(|| anyhow!("'models' not an object"))?
+        {
+            models.insert(
+                name.clone(),
+                parse_model(m).with_context(|| format!("model {name}"))?,
+            );
+        }
+        Ok(Manifest { block, modules, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleEntry> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| anyhow!("module '{name}' not in manifest"))
+    }
+
+    /// The compress-module palette: (delta, module name), ascending delta.
+    pub fn compress_palette(&self) -> Vec<(f64, String)> {
+        let mut out: Vec<(f64, String)> = self
+            .modules
+            .iter()
+            .filter(|(_, m)| m.kind == "compress")
+            .map(|(n, m)| (m.delta.unwrap_or(1.0), n.clone()))
+            .collect();
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out
+    }
+}
+
+impl ModelEntry {
+    /// Initialize a flat parameter vector per the manifest tensor specs —
+    /// the rust mirror of `python/compile/params.py::init_flat` (same
+    /// *distributions*, independent stream; training starts from scratch so
+    /// bit equality with python is not required).
+    pub fn init_flat(&self, seed: u64) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.param_count];
+        let mut rng = crate::util::Rng::new(seed ^ 0x1217);
+        for t in &self.tensors {
+            let dst = &mut out[t.offset..t.offset + t.size];
+            match t.init.as_str() {
+                "normal" => rng.fill_normal_f32(dst, t.std as f32),
+                "ones" => dst.iter_mut().for_each(|v| *v = 1.0),
+                _ => {} // zeros
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("gpt_mini"));
+        assert!(m.modules.contains_key("grad_gpt_mini"));
+        let gm = m.model("gpt_mini").unwrap();
+        assert_eq!(gm.param_count % crate::BLOCK, 0);
+        assert_eq!(gm.grad_bits, gm.param_count as u64 * 32);
+        // tensor table covers the vector contiguously
+        let mut off = 0;
+        for t in &gm.tensors {
+            assert_eq!(t.offset, off);
+            off += t.size;
+        }
+        assert_eq!(off, gm.param_count);
+        assert!(!m.compress_palette().is_empty());
+        // compress entries carry their k
+        for (delta, name) in m.compress_palette() {
+            let e = m.module(&name).unwrap();
+            assert_eq!(e.kind, "compress");
+            assert!(delta > 0.0 && delta <= 1.0);
+            assert!(e.k_per_block.unwrap() >= 1);
+        }
+    }
+
+    #[test]
+    fn init_flat_respects_spec() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let gm = m.model("gpt_mini").unwrap();
+        let flat = gm.init_flat(3);
+        assert_eq!(flat.len(), gm.param_count);
+        for t in &gm.tensors {
+            let sl = &flat[t.offset..t.offset + t.size];
+            match t.init.as_str() {
+                "zeros" => assert!(sl.iter().all(|&v| v == 0.0), "{}", t.name),
+                "ones" => assert!(sl.iter().all(|&v| v == 1.0), "{}", t.name),
+                "normal" => {
+                    let std = crate::util::stats::l2_norm(sl)
+                        / (sl.len() as f64).sqrt();
+                    assert!(
+                        std > 0.2 * t.std && std < 5.0 * t.std,
+                        "{}: std {std} vs spec {}",
+                        t.name,
+                        t.std
+                    );
+                }
+                other => panic!("unknown init {other}"),
+            }
+        }
+    }
+}

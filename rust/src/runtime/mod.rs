@@ -1,0 +1,26 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py` and executes them on
+//! the CPU PJRT client via the `xla` crate. This is the only place the L3
+//! coordinator touches compiled L2/L1 code; python never runs here.
+//!
+//! Interchange is HLO *text* (see aot.py / /opt/xla-example/README.md): the
+//! text parser reassigns instruction ids, dodging the 64-bit-id protos that
+//! xla_extension 0.5.1 rejects.
+
+pub mod client;
+pub mod manifest;
+pub mod oracle;
+
+pub use client::{ApplyExec, CompressExec, GradExec, Runtime};
+pub use manifest::{Manifest, ModelEntry, ModuleEntry, TensorEntry};
+pub use oracle::{DataSource, PjrtOracle};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$REPO/artifacts` next to the binary's CWD,
+/// overridable with `DECO_ARTIFACTS`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("DECO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

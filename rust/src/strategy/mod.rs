@@ -1,0 +1,330 @@
+//! Training strategies — the paper's baselines (Sec. 5.1) and DeCo-SGD
+//! itself, all as policies emitting `(τ_t, δ_t)` per iteration on top of the
+//! same DD-EF-SGD pipeline (`coordinator::TrainLoop`). This mirrors the
+//! paper's framing: every method is a point (or trajectory) in the
+//! (staleness, compression) plane.
+//!
+//! * `DSgd` — τ=0, δ=1 (exact baseline).
+//! * `DEfSgd` — τ=0, fixed δ (compression only).
+//! * `DdSgd` — fixed τ, δ=1 (DGA with K=1, latency hiding only).
+//! * `Accordion` — τ=0, δ switches between low/high by critical-regime
+//!   detection on the gradient norm (Agarwal et al.).
+//! * `CocktailSgd` — static (τ, δ) chosen once by DeCo (the paper's
+//!   "DeCo-SGD with E = ∞" description of its CocktailSGD baseline).
+//! * `DecoSgd` — Algorithm 2: re-run DeCo every E iterations on monitored
+//!   (a, b, T_comp).
+
+use crate::deco::{solve, DecoInput, DecoOutput};
+use crate::netsim::NetworkMonitor;
+
+
+/// What a strategy can see when deciding (τ_t, δ_t).
+pub struct StrategyCtx<'a> {
+    pub iter: usize,
+    pub monitor: &'a NetworkMonitor,
+    /// gradient size, bits
+    pub s_g: f64,
+    /// latest average gradient norm (for Accordion)
+    pub grad_norm: Option<f64>,
+    /// fallback network params when the monitor has no samples yet
+    pub fallback: DecoInput,
+}
+
+impl StrategyCtx<'_> {
+    /// Best current estimate of the DeCo inputs.
+    pub fn deco_input(&self) -> DecoInput {
+        DecoInput {
+            s_g: self.s_g,
+            a: self.monitor.bandwidth().unwrap_or(self.fallback.a),
+            b: self.monitor.latency().unwrap_or(self.fallback.b),
+            t_comp: self
+                .monitor
+                .compute_time()
+                .unwrap_or(self.fallback.t_comp),
+        }
+    }
+}
+
+/// A policy over (staleness, compression ratio).
+pub trait Strategy: Send {
+    fn name(&self) -> &'static str;
+    /// Decide (τ, δ) for iteration `ctx.iter` (1-based).
+    fn params(&mut self, ctx: &StrategyCtx) -> (usize, f64);
+}
+
+/// Serde-friendly strategy selector for configs / CLI.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StrategyKind {
+    DSgd,
+    DEfSgd { delta: f64 },
+    DdSgd { tau: usize },
+    Accordion { delta_low: f64, delta_high: f64 },
+    CocktailSgd,
+    DecoSgd { update_every: usize },
+}
+
+impl StrategyKind {
+    pub fn build(&self) -> Box<dyn Strategy> {
+        match self {
+            Self::DSgd => Box::new(DSgd),
+            Self::DEfSgd { delta } => Box::new(DEfSgd { delta: *delta }),
+            Self::DdSgd { tau } => Box::new(DdSgd { tau: *tau }),
+            Self::Accordion { delta_low, delta_high } => {
+                Box::new(Accordion::new(*delta_low, *delta_high))
+            }
+            Self::CocktailSgd => Box::new(CocktailSgd { chosen: None }),
+            Self::DecoSgd { update_every } => {
+                Box::new(DecoSgd::new(*update_every))
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::DSgd => "D-SGD",
+            Self::DEfSgd { .. } => "D-EF-SGD",
+            Self::DdSgd { .. } => "DGA",
+            Self::Accordion { .. } => "Accordion",
+            Self::CocktailSgd => "CocktailSGD",
+            Self::DecoSgd { .. } => "DeCo-SGD",
+        }
+    }
+
+    /// The five-method comparison set the paper's figures use.
+    pub fn paper_baselines() -> Vec<StrategyKind> {
+        vec![
+            Self::DSgd,
+            Self::Accordion { delta_low: 0.02, delta_high: 0.2 },
+            Self::DdSgd { tau: 2 },
+            Self::CocktailSgd,
+            Self::DecoSgd { update_every: 20 },
+        ]
+    }
+}
+
+pub struct DSgd;
+
+impl Strategy for DSgd {
+    fn name(&self) -> &'static str {
+        "D-SGD"
+    }
+
+    fn params(&mut self, _ctx: &StrategyCtx) -> (usize, f64) {
+        (0, 1.0)
+    }
+}
+
+pub struct DEfSgd {
+    pub delta: f64,
+}
+
+impl Strategy for DEfSgd {
+    fn name(&self) -> &'static str {
+        "D-EF-SGD"
+    }
+
+    fn params(&mut self, _ctx: &StrategyCtx) -> (usize, f64) {
+        (0, self.delta)
+    }
+}
+
+pub struct DdSgd {
+    pub tau: usize,
+}
+
+impl Strategy for DdSgd {
+    fn name(&self) -> &'static str {
+        "DGA"
+    }
+
+    fn params(&mut self, _ctx: &StrategyCtx) -> (usize, f64) {
+        (self.tau, 1.0)
+    }
+}
+
+/// Accordion: low compression (δ_high) inside "critical regimes" — when the
+/// gradient norm is changing fast — and aggressive compression otherwise.
+pub struct Accordion {
+    delta_low: f64,
+    delta_high: f64,
+    prev_norm: Option<f64>,
+    critical: bool,
+    /// relative norm change that flags a critical regime
+    eta: f64,
+}
+
+impl Accordion {
+    pub fn new(delta_low: f64, delta_high: f64) -> Self {
+        assert!(delta_low <= delta_high);
+        Self { delta_low, delta_high, prev_norm: None, critical: true, eta: 0.2 }
+    }
+}
+
+impl Strategy for Accordion {
+    fn name(&self) -> &'static str {
+        "Accordion"
+    }
+
+    fn params(&mut self, ctx: &StrategyCtx) -> (usize, f64) {
+        if let Some(norm) = ctx.grad_norm {
+            if let Some(prev) = self.prev_norm {
+                let rel = ((norm - prev) / prev.max(1e-12)).abs();
+                self.critical = rel > self.eta;
+            }
+            self.prev_norm = Some(norm);
+        }
+        let delta = if self.critical { self.delta_high } else { self.delta_low };
+        (0, delta)
+    }
+}
+
+/// CocktailSGD baseline per the paper's appendix: fixed (τ, δ) chosen by one
+/// DeCo solve at t=1 (E = ∞).
+pub struct CocktailSgd {
+    chosen: Option<DecoOutput>,
+}
+
+impl Strategy for CocktailSgd {
+    fn name(&self) -> &'static str {
+        "CocktailSGD"
+    }
+
+    fn params(&mut self, ctx: &StrategyCtx) -> (usize, f64) {
+        let out = *self
+            .chosen
+            .get_or_insert_with(|| solve(&ctx.deco_input()));
+        (out.tau, out.delta)
+    }
+}
+
+/// DeCo-SGD (Algorithm 2).
+pub struct DecoSgd {
+    update_every: usize,
+    current: Option<DecoOutput>,
+}
+
+impl DecoSgd {
+    pub fn new(update_every: usize) -> Self {
+        Self { update_every: update_every.max(1), current: None }
+    }
+
+    pub fn current(&self) -> Option<DecoOutput> {
+        self.current
+    }
+}
+
+impl Strategy for DecoSgd {
+    fn name(&self) -> &'static str {
+        "DeCo-SGD"
+    }
+
+    fn params(&mut self, ctx: &StrategyCtx) -> (usize, f64) {
+        // Algorithm 2: `if t mod E == 1 { τ, δ = DeCo(...) }`
+        if self.current.is_none() || ctx.iter % self.update_every == 1 {
+            self.current = Some(solve(&ctx.deco_input()));
+        }
+        let out = self.current.unwrap();
+        (out.tau, out.delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(monitor: &'a NetworkMonitor, iter: usize) -> StrategyCtx<'a> {
+        StrategyCtx {
+            iter,
+            monitor,
+            s_g: 124e6 * 32.0,
+            grad_norm: None,
+            fallback: DecoInput { s_g: 124e6 * 32.0, a: 1e8, b: 0.1, t_comp: 0.5 },
+        }
+    }
+
+    #[test]
+    fn static_strategies() {
+        let m = NetworkMonitor::new(0.3);
+        assert_eq!(DSgd.params(&ctx(&m, 1)), (0, 1.0));
+        assert_eq!(DEfSgd { delta: 0.1 }.params(&ctx(&m, 1)), (0, 0.1));
+        assert_eq!(DdSgd { tau: 3 }.params(&ctx(&m, 1)), (3, 1.0));
+    }
+
+    #[test]
+    fn cocktail_freezes_first_solution() {
+        let mut m = NetworkMonitor::new(0.9);
+        let mut s = CocktailSgd { chosen: None };
+        let first = s.params(&ctx(&m, 1));
+        // bandwidth collapses afterwards; cocktail must not react
+        for _ in 0..50 {
+            m.observe_bandwidth(1e6);
+        }
+        assert_eq!(s.params(&ctx(&m, 100)), first);
+    }
+
+    #[test]
+    fn deco_adapts_to_bandwidth_collapse() {
+        let mut m = NetworkMonitor::new(0.9);
+        for _ in 0..10 {
+            m.observe_bandwidth(5e8);
+            m.observe_latency(0.1);
+            m.observe_compute(0.5);
+        }
+        let mut s = DecoSgd::new(10);
+        let (_, d0) = s.params(&ctx(&m, 1));
+        for _ in 0..50 {
+            m.observe_bandwidth(2e7); // 25x drop
+        }
+        let (_, d1) = s.params(&ctx(&m, 11)); // 11 % 10 == 1 -> refresh
+        assert!(d1 < d0, "delta should shrink: {d0} -> {d1}");
+    }
+
+    #[test]
+    fn deco_updates_only_on_schedule() {
+        let mut m = NetworkMonitor::new(0.9);
+        for _ in 0..5 {
+            m.observe_bandwidth(5e8);
+            m.observe_latency(0.1);
+            m.observe_compute(0.5);
+        }
+        let mut s = DecoSgd::new(100);
+        let p1 = s.params(&ctx(&m, 1));
+        for _ in 0..50 {
+            m.observe_bandwidth(1e6);
+        }
+        // iter 55: not ≡ 1 mod 100, must keep the old choice
+        assert_eq!(s.params(&ctx(&m, 55)), p1);
+        assert_ne!(s.params(&ctx(&m, 101)), p1);
+    }
+
+    #[test]
+    fn accordion_switches_on_norm_shift() {
+        let m = NetworkMonitor::new(0.3);
+        let mut s = Accordion::new(0.01, 0.5);
+        let mk = |iter, norm| StrategyCtx {
+            iter,
+            monitor: &m,
+            s_g: 1e9,
+            grad_norm: Some(norm),
+            fallback: DecoInput { s_g: 1e9, a: 1e8, b: 0.1, t_comp: 0.5 },
+        };
+        s.params(&mk(1, 10.0));
+        // stable norms -> non-critical -> aggressive delta
+        let (_, d) = s.params(&mk(2, 10.01));
+        assert_eq!(d, 0.01);
+        // sharp change -> critical -> conservative delta
+        let (_, d) = s.params(&mk(3, 20.0));
+        assert_eq!(d, 0.5);
+    }
+
+    #[test]
+    fn kind_builds_all() {
+        for k in StrategyKind::paper_baselines() {
+            let mut s = k.build();
+            let m = NetworkMonitor::new(0.3);
+            let (tau, delta) = s.params(&ctx(&m, 1));
+            assert!(delta > 0.0 && delta <= 1.0);
+            assert!(tau <= 1000);
+        }
+    }
+}

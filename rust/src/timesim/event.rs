@@ -1,0 +1,275 @@
+//! Exact event recurrence of Eq. 19 — the ground truth the closed form
+//! approximates, and (in trace-driven form) the virtual clock the training
+//! loop runs on.
+//!
+//! ```text
+//! TC_k     = TM_k + b
+//! TS_{k+1} = T_comp + max{ TC_{k-τ}, TS_k }
+//! TM_{k+1} = δ·S_g/a + max{ TM_k, TS_{k+1} }
+//! ```
+//! with `TS_0 = TM_0 = 0`, `TC_k = 0` for `k ≤ 0`. The indexing follows the
+//! paper exactly (1-based `k`), so `T_avg = TC_t / t`.
+
+use super::model::PipelineParams;
+use crate::netsim::Link;
+
+/// Per-iteration timeline: computation end, transmission end, arrival.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IterTimes {
+    pub ts: f64,
+    pub tm: f64,
+    pub tc: f64,
+}
+
+/// Constant-(a, b) recurrence simulator.
+#[derive(Clone, Debug)]
+pub struct EventSim {
+    /// rows[k-1] holds iteration k (1-based per the paper)
+    rows: Vec<IterTimes>,
+}
+
+impl EventSim {
+    /// Run `iters` iterations of the recurrence with fixed parameters.
+    pub fn run(p: &PipelineParams, iters: usize) -> Self {
+        let mut rows: Vec<IterTimes> = Vec::with_capacity(iters);
+        let tx = p.t_tx();
+        for k in 1..=iters {
+            let ts_prev = if k == 1 { 0.0 } else { rows[k - 2].ts };
+            let tm_prev = if k == 1 { 0.0 } else { rows[k - 2].tm };
+            // TC_{k-1-τ} (arrival of the gradient this step must wait for)
+            let tc_delayed = if k as i64 - 1 - p.tau as i64 >= 1 {
+                rows[k - 2 - p.tau].tc
+            } else {
+                0.0
+            };
+            let ts = p.t_comp + tc_delayed.max(ts_prev);
+            let tm = tx + tm_prev.max(ts);
+            let tc = tm + p.b;
+            rows.push(IterTimes { ts, tm, tc });
+        }
+        Self { rows }
+    }
+
+    /// Trace-driven generalization: transmission time integrates over a
+    /// [`Link`]'s bandwidth trace instead of a constant `a`. `bits(k)` gives
+    /// the wire size of iteration k (so δ may vary per iteration — this is
+    /// what DD-EF-SGD under DeCo does).
+    pub fn run_on_link(
+        link: &Link,
+        t_comp: impl Fn(usize) -> f64,
+        tau: impl Fn(usize) -> usize,
+        bits: impl Fn(usize) -> u64,
+        iters: usize,
+    ) -> Self {
+        let mut rows: Vec<IterTimes> = Vec::with_capacity(iters);
+        for k in 1..=iters {
+            let ts_prev = if k == 1 { 0.0 } else { rows[k - 2].ts };
+            let tm_prev = if k == 1 { 0.0 } else { rows[k - 2].tm };
+            let tk = tau(k);
+            let tc_delayed = if k as i64 - 1 - tk as i64 >= 1 {
+                rows[k - 2 - tk].tc
+            } else {
+                0.0
+            };
+            let ts = t_comp(k) + tc_delayed.max(ts_prev);
+            let start = tm_prev.max(ts);
+            let tm = link.transfer_end(start, bits(k));
+            let tc = tm + link.latency();
+            rows.push(IterTimes { ts, tm, tc });
+        }
+        Self { rows }
+    }
+
+    pub fn rows(&self) -> &[IterTimes] {
+        &self.rows
+    }
+
+    pub fn iters(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// `TC_t` of the final iteration (total elapsed time).
+    pub fn total_time(&self) -> f64 {
+        self.rows.last().map(|r| r.tc).unwrap_or(0.0)
+    }
+
+    /// Measured average iteration time `TC_t / t` (Theorem 3's quantity).
+    pub fn t_avg(&self) -> f64 {
+        self.total_time() / self.iters().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::BandwidthTrace;
+    use crate::timesim::model::{approx_error_bound, t_avg_closed_form};
+
+    fn p(a: f64, b: f64, delta: f64, tau: usize, t_comp: f64, s_g: f64) -> PipelineParams {
+        PipelineParams { a, b, delta, tau, t_comp, s_g }
+    }
+
+    #[test]
+    fn dsgd_serial_exact() {
+        // τ=0, δ=1: each iteration is exactly T_comp + tx + b after the
+        // previous arrival
+        let pp = p(1e8, 0.1, 1.0, 0, 0.05, 1e7);
+        let sim = EventSim::run(&pp, 100);
+        let per_iter = 0.05 + 0.1 + 0.1;
+        assert!((sim.total_time() - 100.0 * per_iter).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theorem3_bound_holds_all_regimes() {
+        // sweep the four proof cases; |TC_t - t*T_avg'| <= bound
+        let cases = [
+            p(1e8, 0.1, 0.01, 8, 0.5, 1e8),  // case 1
+            p(1e6, 0.05, 1.0, 20, 0.01, 1e8), // case 2
+            p(1e8, 1.0, 0.05, 2, 0.3, 1e9),  // case 3-ish
+            p(1e7, 0.5, 0.5, 1, 0.05, 1e8),  // case 4-ish
+            p(5e7, 0.2, 0.1, 3, 0.1, 4e9),
+        ];
+        for pp in cases {
+            let t = 3000;
+            let sim = EventSim::run(&pp, t);
+            let lhs = (sim.total_time() - t as f64 * t_avg_closed_form(&pp)).abs();
+            let bound = approx_error_bound(&pp) + 1e-9;
+            // the paper proves O(1) absolute deviation; allow 3x slack for
+            // the pre-periodic transient
+            assert!(
+                lhs <= 3.0 * bound,
+                "params {pp:?}: |TC_t - t*T'| = {lhs} > 3*{bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn t_avg_converges_to_closed_form() {
+        let pp = p(1e8, 0.3, 0.1, 2, 0.1, 2e9);
+        let closed = t_avg_closed_form(&pp);
+        let sim = EventSim::run(&pp, 5000);
+        assert!(
+            (sim.t_avg() - closed).abs() / closed < 0.01,
+            "sim={} closed={closed}",
+            sim.t_avg()
+        );
+    }
+
+    #[test]
+    fn monotone_timeline() {
+        let pp = p(1e7, 0.2, 0.2, 3, 0.05, 1e9);
+        let sim = EventSim::run(&pp, 200);
+        for w in sim.rows().windows(2) {
+            assert!(w[1].ts >= w[0].ts);
+            assert!(w[1].tm >= w[0].tm);
+            assert!(w[1].tc >= w[0].tc);
+        }
+        for r in sim.rows() {
+            assert!(r.tm >= r.ts);
+            assert!(r.tc > r.tm);
+        }
+    }
+
+    #[test]
+    fn link_run_matches_constant_recurrence() {
+        let pp = p(1e8, 0.15, 0.2, 2, 0.07, 1e9);
+        let sim1 = EventSim::run(&pp, 500);
+        let link = Link::new(BandwidthTrace::constant(pp.a), pp.b);
+        let bits = (pp.delta * pp.s_g) as u64;
+        let sim2 = EventSim::run_on_link(
+            &link,
+            |_| pp.t_comp,
+            |_| pp.tau,
+            |_| bits,
+            500,
+        );
+        assert!(
+            (sim1.total_time() - sim2.total_time()).abs() < 1e-6,
+            "{} vs {}",
+            sim1.total_time(),
+            sim2.total_time()
+        );
+    }
+
+    #[test]
+    fn larger_tau_never_slower() {
+        for tau in 0..6usize {
+            let pp0 = p(2e7, 0.4, 0.3, tau, 0.05, 1e9);
+            let pp1 = p(2e7, 0.4, 0.3, tau + 1, 0.05, 1e9);
+            let t0 = EventSim::run(&pp0, 1000).total_time();
+            let t1 = EventSim::run(&pp1, 1000).total_time();
+            assert!(t1 <= t0 + 1e-6, "tau {tau}->{}: {t0} -> {t1}", tau + 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod periodicity_tests {
+    use super::*;
+    use crate::timesim::model::{classify, Regime};
+
+    /// Cases 3/4 of the Theorem 3 proof: when τ cannot hide the round trip,
+    /// the sequence {TS_{k+1} − TS_k} becomes (τ+1)-periodic with period sum
+    /// T_comp + b + δS_g/a.
+    #[test]
+    fn intermediate_delay_regime_is_tau_plus_1_periodic() {
+        let cases = [
+            // Case 3: T_comp > tx, τ·T_comp <= tx + b
+            PipelineParams { a: 1e9, b: 1.0, delta: 0.2, tau: 2, t_comp: 0.4, s_g: 1e9 },
+            // Case 4: T_comp < tx, τ·tx <= T_comp + b
+            PipelineParams { a: 1e8, b: 1.0, delta: 0.5, tau: 1, t_comp: 0.1, s_g: 1e8 },
+        ];
+        for p in cases {
+            assert_eq!(classify(&p), Regime::Periodic, "{p:?}");
+            let sim = EventSim::run(&p, 400);
+            let rows = sim.rows();
+            let period = p.tau + 1;
+            let expect = p.t_comp + p.b + p.t_tx();
+            // skip the transient, then check TS_{k+(τ+1)} − TS_k == period sum
+            for k in 50..(rows.len() - period) {
+                let d = rows[k + period].ts - rows[k].ts;
+                assert!(
+                    (d - expect).abs() < 1e-9,
+                    "{p:?}: TS diff {d} != {expect} at k={k}"
+                );
+            }
+        }
+    }
+
+    /// Case 1: computation-dominated — TS_k == k·T_comp exactly after the
+    /// proof's induction (for all k, from the start).
+    #[test]
+    fn computation_dominated_ts_is_linear() {
+        let p = PipelineParams {
+            a: 1e9, b: 0.05, delta: 0.01, tau: 4, t_comp: 0.5, s_g: 1e9,
+        };
+        assert_eq!(classify(&p), Regime::ComputationDominated);
+        let sim = EventSim::run(&p, 200);
+        for (i, r) in sim.rows().iter().enumerate() {
+            let k = (i + 1) as f64;
+            assert!(
+                (r.ts - k * p.t_comp).abs() < 1e-9,
+                "TS_{k} = {} != {}",
+                r.ts,
+                k * p.t_comp
+            );
+        }
+    }
+
+    /// Case 2: communication-dominated — steady-state TM spacing equals the
+    /// transmission time.
+    #[test]
+    fn communication_dominated_tm_spacing_is_tx() {
+        let p = PipelineParams {
+            a: 1e7, b: 0.05, delta: 1.0, tau: 20, t_comp: 0.01, s_g: 1e8,
+        };
+        assert_eq!(classify(&p), Regime::CommunicationDominated);
+        let sim = EventSim::run(&p, 300);
+        let rows = sim.rows();
+        let tx = p.t_tx();
+        for k in 100..rows.len() - 1 {
+            let d = rows[k + 1].tm - rows[k].tm;
+            assert!((d - tx).abs() < 1e-9, "TM spacing {d} != {tx} at {k}");
+        }
+    }
+}

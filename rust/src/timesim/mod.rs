@@ -1,0 +1,16 @@
+//! Timeline model of DD-EF-SGD — Theorem 3 and its surroundings.
+//!
+//! * [`event`] — the exact Eq. 19 recurrence over `TS_k` (computation end),
+//!   `TM_k` (transmission end) and `TC_k` (arrival) with constant (a, b),
+//!   plus a trace-driven generalization used by the virtual training clock.
+//! * [`model`] — the closed-form `T_avg` approximation, the four-regime
+//!   classifier from the proof, and the throughput-efficiency map (Fig. 1).
+//! * [`timeline`] — per-iteration segment renderer for Fig. 2.
+
+pub mod event;
+pub mod model;
+pub mod timeline;
+
+pub use event::{EventSim, IterTimes};
+pub use model::{t_avg_closed_form, PipelineParams, Regime};
+pub use timeline::{render_ascii, TimelineRow};

@@ -1,0 +1,106 @@
+//! Fig. 2 — per-iteration running timelines of D-SGD and its variants.
+//!
+//! Produces both a structured row form (for CSV) and an ASCII rendering of
+//! the compute / transmit / latency segments, one lane per iteration index,
+//! matching the paper's figure qualitatively.
+
+use super::event::EventSim;
+use super::model::PipelineParams;
+
+
+#[derive(Clone, Debug)]
+pub struct TimelineRow {
+    pub iter: usize,
+    pub comp_start: f64,
+    pub comp_end: f64,
+    pub tx_start: f64,
+    pub tx_end: f64,
+    pub arrival: f64,
+}
+
+/// Extract segment rows from an event simulation.
+pub fn rows(p: &PipelineParams, iters: usize) -> Vec<TimelineRow> {
+    let sim = EventSim::run(p, iters);
+    let tx = p.t_tx();
+    sim.rows()
+        .iter()
+        .enumerate()
+        .map(|(i, r)| TimelineRow {
+            iter: i + 1,
+            comp_start: r.ts - p.t_comp,
+            comp_end: r.ts,
+            tx_start: r.tm - tx,
+            tx_end: r.tm,
+            arrival: r.tc,
+        })
+        .collect()
+}
+
+/// ASCII rendering: one line per iteration, `#` = compute, `=` = transmit,
+/// `.` = latency in flight.
+pub fn render_ascii(p: &PipelineParams, iters: usize, width: usize) -> String {
+    let rws = rows(p, iters);
+    let horizon = rws.last().map(|r| r.arrival).unwrap_or(1.0);
+    let scale = width as f64 / horizon;
+    let mut out = String::new();
+    for r in &rws {
+        let mut line = vec![b' '; width + 1];
+        let put = |line: &mut Vec<u8>, a: f64, b: f64, c: u8| {
+            let i0 = (a * scale).round() as usize;
+            let i1 = ((b * scale).round() as usize).min(width);
+            for ch in line[i0.min(width)..i1].iter_mut() {
+                *ch = c;
+            }
+        };
+        put(&mut line, r.comp_start, r.comp_end, b'#');
+        put(&mut line, r.tx_start, r.tx_end, b'=');
+        put(&mut line, r.tx_end, r.arrival, b'.');
+        out.push_str(&format!(
+            "it{:>3} |{}|\n",
+            r.iter,
+            String::from_utf8(line).unwrap()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_consistent() {
+        let p = PipelineParams {
+            a: 1e8,
+            b: 0.2,
+            delta: 0.1,
+            tau: 2,
+            t_comp: 0.05,
+            s_g: 1e9,
+        };
+        let rws = rows(&p, 12);
+        assert_eq!(rws.len(), 12);
+        for r in &rws {
+            assert!(r.comp_end - r.comp_start - p.t_comp < 1e-12);
+            assert!(r.tx_start >= r.comp_end - 1e-9 || r.iter == 1);
+            assert!((r.arrival - r.tx_end - p.b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ascii_renders_nonempty() {
+        let p = PipelineParams {
+            a: 1e8,
+            b: 0.1,
+            delta: 1.0,
+            tau: 0,
+            t_comp: 0.1,
+            s_g: 1e8,
+        };
+        let s = render_ascii(&p, 6, 80);
+        assert_eq!(s.lines().count(), 6);
+        assert!(s.contains('#'));
+        assert!(s.contains('='));
+        assert!(s.contains('.'));
+    }
+}

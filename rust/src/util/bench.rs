@@ -1,0 +1,194 @@
+//! Mini bench harness (criterion is not in the offline vendored set, so the
+//! `cargo bench` targets use this): warmup, adaptive iteration count,
+//! median/mean/σ over samples, throughput reporting, and a stable text
+//! output format the perf pass diff's against.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    group: String,
+    /// minimum measurement time per benchmark
+    min_time: Duration,
+    samples: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub std_ns: f64,
+    pub iters_per_sample: u64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // fast mode for CI smoke: DECO_BENCH_FAST=1 shrinks measurement time
+        let fast = std::env::var("DECO_BENCH_FAST").is_ok();
+        Self {
+            group: group.to_string(),
+            min_time: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(400)
+            },
+            samples: if fast { 5 } else { 15 },
+        }
+    }
+
+    /// Time `f`, which performs ONE logical operation per call.
+    pub fn bench(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        // warmup + calibrate iters per sample
+        let t0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while t0.elapsed() < self.min_time / 4 {
+            f();
+            calib_iters += 1;
+        }
+        let per_call = (t0.elapsed().as_nanos() as f64
+            / calib_iters.max(1) as f64)
+            .max(1.0);
+        let target_sample_ns =
+            (self.min_time.as_nanos() as f64 / self.samples as f64).max(1e5);
+        let iters = ((target_sample_ns / per_call) as u64).max(1);
+
+        let mut sample_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let s = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_ns.push(s.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
+        let median = sample_ns[sample_ns.len() / 2];
+        let var = sample_ns
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / sample_ns.len() as f64;
+        let res = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            mean_ns: mean,
+            median_ns: median,
+            std_ns: var.sqrt(),
+            iters_per_sample: iters,
+        };
+        println!("{}", format_result(&res, None));
+        res
+    }
+
+    /// Like `bench` but also reports bytes/s throughput.
+    pub fn bench_bytes(
+        &self,
+        name: &str,
+        bytes: u64,
+        mut f: impl FnMut(),
+    ) -> BenchResult {
+        let res = self.bench_quiet(name, &mut f);
+        println!("{}", format_result(&res, Some(bytes)));
+        res
+    }
+
+    fn bench_quiet(&self, name: &str, f: &mut impl FnMut()) -> BenchResult {
+        // same as bench() without printing — bench() prints its own line
+        let t0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while t0.elapsed() < self.min_time / 4 {
+            f();
+            calib_iters += 1;
+        }
+        let per_call = (t0.elapsed().as_nanos() as f64
+            / calib_iters.max(1) as f64)
+            .max(1.0);
+        let target_sample_ns =
+            (self.min_time.as_nanos() as f64 / self.samples as f64).max(1e5);
+        let iters = ((target_sample_ns / per_call) as u64).max(1);
+        let mut sample_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let s = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_ns.push(s.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
+        let median = sample_ns[sample_ns.len() / 2];
+        let var = sample_ns
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / sample_ns.len() as f64;
+        BenchResult {
+            name: format!("{}/{}", self.group, name),
+            mean_ns: mean,
+            median_ns: median,
+            std_ns: var.sqrt(),
+            iters_per_sample: iters,
+        }
+    }
+}
+
+fn human_time(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn format_result(r: &BenchResult, bytes: Option<u64>) -> String {
+    let mut line = format!(
+        "{:<44} {:>12} (median {:>12}, sd {:>10})",
+        r.name,
+        human_time(r.mean_ns),
+        human_time(r.median_ns),
+        human_time(r.std_ns),
+    );
+    if let Some(b) = bytes {
+        let gbps = b as f64 / r.median_ns; // bytes/ns == GB/s
+        line.push_str(&format!("  {:>8.2} GB/s", gbps));
+    }
+    line
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        std::env::set_var("DECO_BENCH_FAST", "1");
+        let b = Bench::new("test");
+        let mut acc = 0u64;
+        let r = b.bench("noop_loop", || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters_per_sample >= 1);
+        black_box(acc);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_time(500.0).contains("ns"));
+        assert!(human_time(5e4).contains("us"));
+        assert!(human_time(5e7).contains("ms"));
+        assert!(human_time(5e9).contains("s"));
+    }
+}

