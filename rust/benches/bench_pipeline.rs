@@ -3,14 +3,26 @@
 //! analytic quadratic oracle, isolating L3 overhead from PJRT compute.
 //! One shape per paper experiment (Fig. 4 / Fig. 5 / Table 1 runs are
 //! sequences of exactly these iterations).
+//!
+//! Each shape runs twice — `serial` (pool size 1) and `pool` (machine
+//! default) — and the speedup line at the end is the parallel-engine
+//! acceptance number. Steady state is allocation-free either way:
+//! compressors cached per δ, gradient + sparse buffers recycled per worker.
 
 use deco::config::{wan_network, ExperimentConfig, StopConfig};
 use deco::coordinator::TrainLoop;
 use deco::optim::Quadratic;
 use deco::strategy::StrategyKind;
 use deco::util::bench::{black_box, Bench};
+use deco::util::WorkerPool;
 
-fn run_iters(dim: usize, workers: usize, iters: usize, kind: StrategyKind) -> f64 {
+fn run_iters(
+    dim: usize,
+    workers: usize,
+    iters: usize,
+    kind: StrategyKind,
+    threads: Option<usize>,
+) -> f64 {
     let oracle = Quadratic::new(dim, workers, 2.0, 0.2, 1.0, 0.5, 3);
     let cfg = ExperimentConfig {
         task: "quadratic".into(),
@@ -26,32 +38,57 @@ fn run_iters(dim: usize, workers: usize, iters: usize, kind: StrategyKind) -> f6
         block_topk: false,
         clip_norm: Some(5.0),
     };
-    let params = cfg.train_params(dim);
+    let mut params = cfg.train_params(dim);
+    params.threads = threads;
     let mut tl = TrainLoop::new(oracle, cfg.strategy.build(), cfg.network.link(), params);
     tl.run("bench").total_time
 }
 
 fn main() {
     println!("== bench_pipeline (DD-EF-SGD iteration hot loop) ==");
+    println!(
+        "pool default: {} threads\n",
+        WorkerPool::default_threads()
+    );
     let b = Bench::new("pipeline");
-    for &dim in &[4096usize, 65_536, 1 << 20] {
-        b.bench_bytes(
-            &format!("deco_100iters_4w/{dim}"),
-            (dim * 4 * 4 * 100) as u64, // gradients moved per measured run
+    // fewer iterations at bigger dims keeps per-call time comparable
+    let shapes: &[(usize, usize, usize)] = &[
+        (4096, 4, 100),
+        (65_536, 4, 50),
+        (1 << 20, 4, 10),
+        (65_536, 16, 25),
+    ];
+    let mut speedups = Vec::new();
+    for &(dim, workers, iters) in shapes {
+        let deco = || StrategyKind::DecoSgd { update_every: 20 };
+        let bytes = (dim * 4 * workers * iters) as u64; // gradients moved
+        let serial = b.bench_bytes(
+            &format!("deco_{iters}iters_{workers}w_serial/{dim}"),
+            bytes,
             || {
-                black_box(run_iters(
-                    dim,
-                    4,
-                    100,
-                    StrategyKind::DecoSgd { update_every: 20 },
-                ));
+                black_box(run_iters(dim, workers, iters, deco(), Some(1)));
             },
         );
+        let pooled = b.bench_bytes(
+            &format!("deco_{iters}iters_{workers}w_pool/{dim}"),
+            bytes,
+            || {
+                black_box(run_iters(dim, workers, iters, deco(), None));
+            },
+        );
+        speedups.push((
+            format!("{workers}w/{dim}"),
+            serial.median_ns / pooled.median_ns,
+        ));
     }
     for kind in StrategyKind::paper_baselines() {
         let label = kind.label();
         b.bench(&format!("strategies_64k/{label}"), || {
-            black_box(run_iters(65_536, 4, 50, kind.clone()));
+            black_box(run_iters(65_536, 4, 50, kind.clone(), None));
         });
+    }
+    println!("\n-- parallel speedup (serial median / pool median) --");
+    for (shape, s) in &speedups {
+        println!("pipeline/speedup {shape}: {s:.2}x");
     }
 }

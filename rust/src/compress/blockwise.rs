@@ -11,14 +11,15 @@
 use super::{Compressor, k_for_delta};
 use crate::util::Rng;
 use crate::BLOCK;
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 #[derive(Debug)]
 pub struct BlockTopK {
     delta: f64,
     block: usize,
     k: usize,
-    scratch: RefCell<Vec<u32>>,
+    // uncontended (one instance cached per worker); exists to be `Sync`
+    scratch: Mutex<Vec<u32>>,
 }
 
 impl Clone for BlockTopK {
@@ -36,7 +37,7 @@ impl BlockTopK {
         assert!(delta > 0.0 && delta <= 1.0, "delta must be in (0,1]");
         assert!(block > 0);
         let k = k_for_delta(delta, block);
-        Self { delta, block, k, scratch: RefCell::new(Vec::new()) }
+        Self { delta, block, k, scratch: Mutex::new(Vec::new()) }
     }
 
     pub fn k_per_block(&self) -> usize {
@@ -61,13 +62,14 @@ impl BlockTopK {
             return n;
         }
         let (thr, n_gt) = {
-            let mut keys = self.scratch.borrow_mut();
+            let mut keys = self.scratch.lock().expect("blocktopk scratch");
             keys.clear();
             keys.extend(a.iter().map(|x| abs_key(*x)));
-            let (left, thr, _) =
-                keys.select_nth_unstable_by(k - 1, |x, y| y.cmp(x));
+            // ascending order statistic at n − k == the k-th largest; see
+            // topk::threshold for why the strict count scans only `right`
+            let (_, thr, right) = keys.select_nth_unstable(n - k);
             let thr = *thr;
-            (thr, left.iter().filter(|&&x| x > thr).count())
+            (thr, right.iter().filter(|&&x| x > thr).count())
         };
         let mut take_eq = k - n_gt;
         let mut kept = 0usize;

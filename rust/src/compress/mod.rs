@@ -33,8 +33,10 @@ use crate::util::Rng;
 ///
 /// `compress` zeroes the dropped coordinates **in place** and returns the
 /// number of elements kept (so the caller can account transmitted bits).
-/// Implementations must be deterministic given `rng` state.
-pub trait Compressor: Send {
+/// Implementations must be deterministic given `rng` state, and `Sync`: the
+/// parallel worker phase shares one instance per worker across pool threads
+/// (selection scratch, where present, hides behind an uncontended mutex).
+pub trait Compressor: Send + Sync + std::fmt::Debug {
     /// Human-readable name for metrics/CSV.
     fn name(&self) -> &'static str;
 
@@ -81,6 +83,73 @@ pub fn k_for_delta(delta: f64, n: usize) -> usize {
     ((delta * n as f64).ceil() as usize).clamp(1, n.max(1))
 }
 
+/// The training pipeline's compressor for a `(δ, blockwise)` choice:
+/// `Identity` at δ ≥ 1 (D-SGD / DGA), otherwise Top-k (paper default) or
+/// its blockwise Pallas-identical twin.
+pub fn make_compressor(delta: f64, block_topk: bool) -> Box<dyn Compressor> {
+    if delta >= 1.0 {
+        Box::new(Identity)
+    } else if block_topk {
+        Box::new(BlockTopK::new(delta))
+    } else {
+        Box::new(TopK::new(delta))
+    }
+}
+
+/// Per-(δ, blockwise) compressor cache. The training loop used to re-box a
+/// fresh compressor every iteration, so Top-k's "warm scratch" never
+/// actually warmed and the steady state allocated every step. Fixed-δ
+/// strategies hit one entry forever (zero alloc); adaptive strategies
+/// (DeCo re-solves against drifting monitor estimates, so δ is effectively
+/// continuous) evict FIFO at [`CompressorCache::CAPACITY`], paying one
+/// small allocation per re-solve instead of per iteration — and bounding
+/// memory, since each Top-k instance lazily warms a dim-sized scratch
+/// (§Perf in DESIGN.md). One cache lives in each
+/// [`crate::coordinator::WorkerState`] (keeping scratch thread-local) and
+/// one on the leader for wire accounting.
+#[derive(Debug, Default)]
+pub struct CompressorCache {
+    entries: Vec<(u64, bool, Box<dyn Compressor>)>,
+}
+
+impl CompressorCache {
+    /// Max cached entries; oldest is evicted first. Small on purpose: a
+    /// run only ever interleaves a few δ values at once, and an evicted
+    /// compressor frees its warm scratch.
+    pub const CAPACITY: usize = 8;
+
+    pub fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    /// Distinct `(δ, blockwise)` pairs cached so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The cached compressor for `(delta, block_topk)`, built on first use.
+    pub fn get(&mut self, delta: f64, block_topk: bool) -> &dyn Compressor {
+        let key = delta.to_bits();
+        if let Some(i) = self
+            .entries
+            .iter()
+            .position(|(k, b, _)| *k == key && *b == block_topk)
+        {
+            return self.entries[i].2.as_ref();
+        }
+        if self.entries.len() >= Self::CAPACITY {
+            self.entries.remove(0); // FIFO eviction
+        }
+        self.entries
+            .push((key, block_topk, make_compressor(delta, block_topk)));
+        self.entries.last().unwrap().2.as_ref()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +160,41 @@ mod tests {
         assert_eq!(k_for_delta(0.5, 1024), 512);
         assert_eq!(k_for_delta(1e-9, 1024), 1);
         assert_eq!(k_for_delta(0.05, 1024), 52);
+    }
+
+    #[test]
+    fn compressor_cache_reuses_instances() {
+        let mut cache = CompressorCache::new();
+        assert!(cache.is_empty());
+        assert_eq!(cache.get(0.05, false).name(), "topk");
+        assert_eq!(cache.get(1.0, false).name(), "identity");
+        assert_eq!(cache.get(0.05, true).name(), "block_topk");
+        assert_eq!(cache.len(), 3);
+        // revisiting the same (δ, blockwise) pairs allocates nothing new
+        for _ in 0..10 {
+            cache.get(0.05, false);
+            cache.get(1.0, false);
+            cache.get(0.05, true);
+        }
+        assert_eq!(cache.len(), 3);
+        assert!((cache.get(0.05, false).delta() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compressor_cache_is_bounded() {
+        // a drifting δ (DeCo against a live monitor) must not grow the
+        // cache — and with it a warm scratch per entry — without bound
+        let mut cache = CompressorCache::new();
+        for i in 0..100 {
+            let delta = 0.01 + i as f64 * 1e-4;
+            assert_eq!(cache.get(delta, false).name(), "topk");
+            assert!(cache.len() <= CompressorCache::CAPACITY);
+        }
+        assert_eq!(cache.len(), CompressorCache::CAPACITY);
+        // the most recent entry is still cached (no eviction on hit)
+        let len = cache.len();
+        cache.get(0.01 + 99.0 * 1e-4, false);
+        assert_eq!(cache.len(), len);
     }
 
     #[test]

@@ -21,28 +21,33 @@ pub struct SparseVec {
 impl SparseVec {
     /// Encode the non-zeros of `a`.
     pub fn encode(a: &[f32]) -> Self {
-        let mut idx = Vec::new();
-        let mut val = Vec::new();
-        for (i, &x) in a.iter().enumerate() {
-            if x != 0.0 {
-                idx.push(i as u32);
-                val.push(x);
-            }
-        }
-        Self { dim: a.len() as u32, idx, val }
+        Self::encode_with_capacity(a, 0)
     }
 
     /// Encode with a pre-sized allocation (hot-path variant).
     pub fn encode_with_capacity(a: &[f32], cap: usize) -> Self {
-        let mut idx = Vec::with_capacity(cap);
-        let mut val = Vec::with_capacity(cap);
+        let mut sv = Self {
+            dim: 0,
+            idx: Vec::with_capacity(cap),
+            val: Vec::with_capacity(cap),
+        };
+        sv.encode_into(a);
+        sv
+    }
+
+    /// Re-encode `a` into this message's existing buffers. The steady-state
+    /// hot path: per-worker messages are recycled across iterations, so
+    /// after the capacity high-water mark is reached this allocates nothing.
+    pub fn encode_into(&mut self, a: &[f32]) {
+        self.dim = a.len() as u32;
+        self.idx.clear();
+        self.val.clear();
         for (i, &x) in a.iter().enumerate() {
             if x != 0.0 {
-                idx.push(i as u32);
-                val.push(x);
+                self.idx.push(i as u32);
+                self.val.push(x);
             }
         }
-        Self { dim: a.len() as u32, idx, val }
     }
 
     pub fn nnz(&self) -> usize {
@@ -61,6 +66,29 @@ impl SparseVec {
         debug_assert_eq!(out.len(), self.dim as usize);
         for (&i, &v) in self.idx.iter().zip(&self.val) {
             out[i as usize] += scale * v;
+        }
+    }
+
+    /// Entry range `[i0, i1)` holding indices in `[lo, hi)`. Encoding emits
+    /// indices in ascending order, so shard boundaries are two binary
+    /// searches — this is what makes the leader's sharded reduction O(log k)
+    /// per (worker, shard) pair plus the actual adds.
+    pub fn index_range(&self, lo: u32, hi: u32) -> (usize, usize) {
+        let i0 = self.idx.partition_point(|&i| i < lo);
+        let i1 = self.idx.partition_point(|&i| i < hi);
+        (i0, i1)
+    }
+
+    /// Sharded `add_into_scaled`: `out` is the contiguous shard of the
+    /// dense target starting at global index `lo`; only entries landing in
+    /// the shard are added. Reducing every worker's message shard-by-shard
+    /// in fixed worker order performs the *same additions in the same order
+    /// per coordinate* as the serial path, so results are bit-identical.
+    pub fn add_shard_into_scaled(&self, lo: u32, out: &mut [f32], scale: f32) {
+        let hi = lo + out.len() as u32;
+        let (i0, i1) = self.index_range(lo, hi);
+        for e in i0..i1 {
+            out[(self.idx[e] - lo) as usize] += scale * self.val[e];
         }
     }
 
@@ -110,6 +138,75 @@ mod tests {
         assert_eq!(acc[1], 1.0);
         assert_eq!(acc[3], -1.5);
         assert_eq!(acc[7], 0.5);
+    }
+
+    #[test]
+    fn encode_into_recycles_buffers() {
+        let mut sv = SparseVec::default();
+        sv.encode_into(&[0.0, 1.0, 0.0, -2.0]);
+        assert_eq!(sv.dim, 4);
+        assert_eq!(sv.idx, vec![1, 3]);
+        assert_eq!(sv.val, vec![1.0, -2.0]);
+        let cap = sv.idx.capacity();
+        // re-encode a same-or-smaller message: no reallocation
+        sv.encode_into(&[3.0, 0.0, 0.0, 0.0]);
+        assert_eq!(sv.idx, vec![0]);
+        assert_eq!(sv.val, vec![3.0]);
+        assert_eq!(sv.idx.capacity(), cap);
+        assert_eq!(sv.decode(), vec![3.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn shard_add_matches_dense_add() {
+        let sv = SparseVec {
+            dim: 10,
+            idx: vec![0, 3, 4, 9],
+            val: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let mut dense = vec![0.0f32; 10];
+        sv.add_into_scaled(&mut dense, 0.5);
+        // shard at every chunk size, including ones that don't divide dim
+        for chunk in 1..=11usize {
+            let mut sharded = vec![0.0f32; 10];
+            for (i, out) in sharded.chunks_mut(chunk).enumerate() {
+                sv.add_shard_into_scaled((i * chunk) as u32, out, 0.5);
+            }
+            assert_eq!(sharded, dense, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn shard_edges_empty_and_all_mass_in_one() {
+        // all mass in the middle shard; flanking shards must stay untouched
+        let sv = SparseVec { dim: 12, idx: vec![4, 5, 6], val: vec![1.0; 3] };
+        let mut lo = vec![0.0f32; 4];
+        let mut mid = vec![0.0f32; 4];
+        let mut hi = vec![0.0f32; 4];
+        sv.add_shard_into_scaled(0, &mut lo, 1.0);
+        sv.add_shard_into_scaled(4, &mut mid, 1.0);
+        sv.add_shard_into_scaled(8, &mut hi, 1.0);
+        assert_eq!(lo, vec![0.0; 4]);
+        assert_eq!(mid, vec![1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(hi, vec![0.0; 4]);
+        // empty message: any shard is a no-op
+        let empty = SparseVec::encode(&[0.0; 12]);
+        let mut out = vec![7.0f32; 6];
+        empty.add_shard_into_scaled(6, &mut out, 1.0);
+        assert_eq!(out, vec![7.0; 6]);
+        assert_eq!(empty.index_range(0, 12), (0, 0));
+    }
+
+    #[test]
+    fn index_range_boundaries() {
+        let sv = SparseVec {
+            dim: 8,
+            idx: vec![1, 2, 5, 7],
+            val: vec![1.0; 4],
+        };
+        assert_eq!(sv.index_range(0, 8), (0, 4));
+        assert_eq!(sv.index_range(2, 6), (1, 3));
+        assert_eq!(sv.index_range(3, 5), (2, 2)); // empty shard
+        assert_eq!(sv.index_range(7, 8), (3, 4));
     }
 
     #[test]

@@ -1,14 +1,15 @@
 //! Global Top-k sparsification — the paper's default compressor (Sec. 2.2.2,
 //! footnote 5) on the production hot path.
 //!
-//! Selection is O(d): one `select_nth_unstable` pass over a scratch copy of
-//! the magnitudes to find the k-th largest (`thr`), then one linear pass
-//! applying the shared tie-break spec (see `compress::mod`). No sort of the
-//! full vector, no allocation after the scratch buffer warms up.
+//! Selection is O(d): one ascending `select_nth_unstable` pass over a
+//! scratch copy of the magnitudes to find the k-th largest (the order
+//! statistic at index `d − k`), then one linear pass applying the shared
+//! tie-break spec (see `compress::mod`). No sort of the full vector, no
+//! comparator callbacks, no allocation after the scratch buffer warms up.
 
 use super::Compressor;
 use crate::util::Rng;
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 /// Magnitude as a totally-ordered integer key: for finite f32, the bit
 /// pattern of `|x|` is monotone in `|x|` (sign bit cleared), so integer
@@ -23,9 +24,10 @@ fn abs_key(x: f32) -> u32 {
 #[derive(Debug)]
 pub struct TopK {
     delta: f64,
-    // scratch reused across calls; RefCell keeps `compress(&self)` — one
-    // TopK instance is owned per worker, never shared across threads.
-    scratch: RefCell<Vec<u32>>,
+    // scratch reused across calls behind `compress(&self)`; one TopK
+    // instance is cached per worker, so the mutex is uncontended — it only
+    // exists to make the instance `Sync` for the parallel worker phase.
+    scratch: Mutex<Vec<u32>>,
 }
 
 impl Clone for TopK {
@@ -37,21 +39,22 @@ impl Clone for TopK {
 impl TopK {
     pub fn new(delta: f64) -> Self {
         assert!(delta > 0.0 && delta <= 1.0, "delta must be in (0,1]");
-        Self { delta, scratch: RefCell::new(Vec::new()) }
+        Self { delta, scratch: Mutex::new(Vec::new()) }
     }
 
     /// The k-th largest magnitude of `a` (as an integer key) plus the count
-    /// of entries STRICTLY greater — counted inside the k-element left
-    /// partition the selection already produced, O(k) instead of O(n).
+    /// of entries STRICTLY greater. Ascending `select_nth_unstable` at
+    /// index `n − k` — the pure integer-key selection the module docs
+    /// promise — leaves every entry ≥ thr in the right partition, so the
+    /// strict count is O(k) instead of O(n).
     fn threshold(&self, a: &[f32], k: usize) -> (u32, usize) {
-        let mut keys = self.scratch.borrow_mut();
+        let mut keys = self.scratch.lock().expect("topk scratch");
         keys.clear();
         keys.extend(a.iter().map(|x| abs_key(*x)));
-        let idx = k - 1; // k-th largest == index k-1 in descending order
-        let (left, thr, _) =
-            keys.select_nth_unstable_by(idx, |x, y| y.cmp(x));
+        let n = keys.len();
+        let (_, thr, right) = keys.select_nth_unstable(n - k);
         let thr = *thr;
-        let n_gt = left.iter().filter(|&&x| x > thr).count();
+        let n_gt = right.iter().filter(|&&x| x > thr).count();
         (thr, n_gt)
     }
 

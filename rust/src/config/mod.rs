@@ -310,6 +310,7 @@ impl ExperimentConfig {
             seed: self.seed,
             fallback: self.fallback(s_g, t_comp_prior),
             monitor_alpha: 0.3,
+            threads: None,
         }
     }
 }

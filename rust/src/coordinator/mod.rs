@@ -11,6 +11,12 @@
 //! cost is integrated over the bandwidth trace by the Eq. 19 recurrence —
 //! exactly the quantity the paper's tables report — while the training
 //! mathematics (losses, gradients, EF states) is executed for real.
+//!
+//! Real wall-clock execution is parallel (DESIGN.md §Parallel-Execution):
+//! the per-worker phase (gradient + clip + enqueue + EF/Top-k) fans out
+//! over a [`crate::util::WorkerPool`], and leader aggregation shards the
+//! model dimension across the same pool — with a fixed worker-order
+//! reduction per shard so every pool size produces bit-identical runs.
 
 pub mod clock;
 pub mod pipeline;

@@ -6,25 +6,42 @@
 //!    monitor every E iterations here;
 //! 2. every worker computes g_t at the *current* x_t (the paper's Fig. 2
 //!    overlap: computation of step t runs while older messages are in
-//!    flight) and enqueues it;
-//! 3. every worker pops g_{t−τ}, runs the fused EF + Top-k step, yielding
-//!    the sparse Δ_t^i;
-//! 4. the leader aggregates `x_{t+1} = x_t − γ/n Σ_i Δ_t^i`;
+//!    flight), enqueues it, and
+//! 3. pops g_{t−τ} and runs the fused EF + Top-k step, yielding the sparse
+//!    Δ_t^i — steps 2+3 execute as ONE parallel phase over the worker pool,
+//!    one worker per thread, since each [`WorkerState`] owns all the state
+//!    its phase touches;
+//! 4. the leader aggregates `x_{t+1} = x_t − γ/n Σ_i Δ_t^i` — sharded over
+//!    the model dimension across the pool for large models, reducing every
+//!    worker's message in fixed worker order per shard so the result is
+//!    bit-identical to the serial reduction (DESIGN.md
+//!    §Parallel-Execution);
 //! 5. the virtual clock prices the iteration via the Eq. 19 recurrence over
 //!    the bandwidth trace; the monitor observes the transfer and feeds the
 //!    next DeCo solve.
 //!
 //! Losses/gradients are *real* (PJRT or analytic oracle); only time is
-//! virtual — see DESIGN.md §Hardware-Adaptation.
+//! virtual — see DESIGN.md §Hardware-Adaptation. The steady state is
+//! allocation-free: compressors are cached per δ, and gradient + sparse
+//! message buffers are recycled per worker (§Perf).
 
 use super::{VirtualClock, WorkerState};
-use crate::compress::{BlockTopK, Compressor, Identity, TopK};
+use crate::compress::{Compressor, CompressorCache};
 use crate::deco::DecoInput;
 use crate::metrics::{Record, RunResult};
 use crate::netsim::{Link, NetworkMonitor};
 use crate::optim::GradOracle;
 use crate::strategy::{Strategy, StrategyCtx};
 use crate::util::stats::l2_norm;
+use crate::util::WorkerPool;
+
+/// Below this many total gradient elements (workers × dim) the worker phase
+/// runs inline: spawning scoped threads costs more than the phase itself.
+const PAR_MIN_WORK: usize = 1 << 14;
+
+/// Minimum model dimension for sharded leader aggregation; smaller models
+/// reduce serially (the reduction is a single memory-bound pass).
+const SHARD_MIN_DIM: usize = 1 << 16;
 
 /// Knobs for one training run.
 #[derive(Clone, Debug)]
@@ -56,6 +73,12 @@ pub struct TrainParams {
     /// network priors used before the monitor has samples
     pub fallback: DecoInput,
     pub monitor_alpha: f64,
+    /// worker-pool size; `None` = machine default
+    /// ([`WorkerPool::default_threads`]), `Some(1)` = fully serial. With
+    /// `t_comp_override` pinned, results are bit-identical at every
+    /// setting; with measured compute time they differ exactly as much as
+    /// wall-clock timing does (DESIGN.md §Parallel-Execution).
+    pub threads: Option<usize>,
 }
 
 impl Default for TrainParams {
@@ -74,6 +97,7 @@ impl Default for TrainParams {
             seed: 0,
             fallback: DecoInput { s_g: 1e9, a: 1e8, b: 0.1, t_comp: 0.1 },
             monitor_alpha: 0.3,
+            threads: None,
         }
     }
 }
@@ -87,6 +111,9 @@ pub struct TrainLoop<O: GradOracle> {
     /// the global model (flat, padded)
     x: Vec<f32>,
     agg: Vec<f32>,
+    pool: WorkerPool,
+    /// leader-side compressor cache, used only for honest wire accounting
+    wire_comps: CompressorCache,
     params: TrainParams,
     /// gradient bits at δ=1
     s_g: f64,
@@ -108,6 +135,10 @@ impl<O: GradOracle> TrainLoop<O> {
             .collect();
         let s_g = params.s_g_override.unwrap_or(dim as f64 * 32.0);
         let monitor = NetworkMonitor::new(params.monitor_alpha);
+        let pool = match params.threads {
+            Some(t) => WorkerPool::new(t),
+            None => WorkerPool::with_default_parallelism(),
+        };
         Self {
             oracle,
             strategy,
@@ -116,6 +147,8 @@ impl<O: GradOracle> TrainLoop<O> {
             workers,
             x,
             agg: vec![0.0; dim],
+            pool,
+            wire_comps: CompressorCache::new(),
             params,
             s_g,
         }
@@ -129,22 +162,21 @@ impl<O: GradOracle> TrainLoop<O> {
         &self.monitor
     }
 
-    fn make_compressor(&self, delta: f64) -> Box<dyn Compressor> {
-        if delta >= 1.0 {
-            Box::new(Identity)
-        } else if self.params.block_topk {
-            Box::new(BlockTopK::new(delta))
-        } else {
-            Box::new(TopK::new(delta))
-        }
+    /// Pool size this loop runs its phases on.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
-    /// Run to completion. `task`/`method` label the result.
+    /// Run to completion. `task` labels the result.
     pub fn run(&mut self, task: &str) -> RunResult {
         let n = self.workers.len();
+        let dim = self.x.len();
         let mut records = Vec::new();
         let mut last_grad_norm: Option<f64> = None;
         let method = self.strategy.name().to_string();
+        let serial = WorkerPool::serial();
+        let par_workers = self.pool.threads() > 1 && n * dim >= PAR_MIN_WORK;
+        let par_shards = self.pool.threads() > 1 && dim >= SHARD_MIN_DIM;
 
         for t in 1..=self.params.max_iters {
             // 1. strategy decides (τ_t, δ_t)
@@ -156,50 +188,89 @@ impl<O: GradOracle> TrainLoop<O> {
                 fallback: self.params.fallback,
             };
             let (tau, delta) = self.strategy.params(&ctx);
-            let comp = self.make_compressor(delta);
 
-            // 2. compute gradients at x_t on every worker
-            let wall0 = std::time::Instant::now();
-            let mut norm_acc = 0.0f64;
-            let mut loss_acc = 0.0f64;
-            for w in 0..n {
-                let ws = &mut self.workers[w];
-                let loss =
-                    self.oracle.grad(w, t, &self.x, ws.grad_buffer());
-                loss_acc += loss;
-                let norm = l2_norm(ws.grad_buffer());
-                norm_acc += norm;
-                if let Some(clip) = self.params.clip_norm {
-                    if norm > clip {
-                        let s = (clip / norm) as f32;
-                        ws.grad_buffer().iter_mut().for_each(|v| *v *= s);
+            // 2+3. worker phase, fanned out over the pool: gradient at x_t,
+            // clip, enqueue; pop g_{t−τ}, EF + compress into the recycled
+            // per-worker message. Safe to parallelize: each WorkerState
+            // owns its EF vector, queue, RNG, scratch, and compressor cache.
+            {
+                let oracle = &self.oracle;
+                let x = &self.x[..];
+                let clip = self.params.clip_norm;
+                let block_topk = self.params.block_topk;
+                let pool = if par_workers { &self.pool } else { &serial };
+                pool.for_each_chunk_mut(&mut self.workers, |_, chunk| {
+                    for ws in chunk.iter_mut() {
+                        let wall = std::time::Instant::now();
+                        let loss = oracle.grad(ws.id, t, x, ws.grad_buffer());
+                        ws.comp_secs = wall.elapsed().as_secs_f64();
+                        let norm = l2_norm(ws.grad_buffer());
+                        ws.last_loss = loss;
+                        ws.last_grad_norm = norm;
+                        if let Some(clip) = clip {
+                            if norm > clip {
+                                let s = (clip / norm) as f32;
+                                ws.grad_buffer()
+                                    .iter_mut()
+                                    .for_each(|v| *v *= s);
+                            }
+                        }
+                        ws.push_gradient();
+                        let _ = ws.pop_compress_cached(tau, delta, block_topk);
                     }
-                }
-                ws.push_gradient();
+                });
             }
-            let measured =
-                wall0.elapsed().as_secs_f64() / n as f64; // per-worker
-            let t_comp = self.params.t_comp_override.unwrap_or(measured);
-            last_grad_norm = Some(norm_acc / n as f64);
-            let _ = loss_acc;
 
-            // 3. pop + EF-compress; 4. aggregate
-            self.agg.iter_mut().for_each(|v| *v = 0.0);
-            let mut any = false;
+            // leader reduction of the phase outputs, in fixed worker order
+            // so the f64 sums are bit-identical at any pool size
+            let mut loss_acc = 0.0f64;
+            let mut norm_acc = 0.0f64;
+            let mut comp_acc = 0.0f64;
             let mut kept_total = 0usize;
-            for ws in self.workers.iter_mut() {
-                if let Some((sv, kept)) = ws.pop_compress(tau, comp.as_ref())
-                {
-                    sv.add_into_scaled(&mut self.agg, 1.0 / n as f32);
+            let mut any = false;
+            for ws in &self.workers {
+                loss_acc += ws.last_loss;
+                norm_acc += ws.last_grad_norm;
+                comp_acc += ws.comp_secs;
+                if let Some(kept) = ws.message_kept() {
                     kept_total += kept;
                     any = true;
                 }
             }
+            let t_comp = self
+                .params
+                .t_comp_override
+                .unwrap_or(comp_acc / n as f64);
+            last_grad_norm = Some(norm_acc / n as f64);
+            let train_loss = loss_acc / n as f64;
+
+            // 4. aggregate + apply: sharded across the pool for large
+            // models (ascending COO indices make shard boundaries two
+            // binary searches), serial otherwise — identical arithmetic
             if any {
                 let gamma = self.params.gamma;
-                for (xi, ai) in self.x.iter_mut().zip(&self.agg) {
-                    *xi -= gamma * ai;
-                }
+                let scale = 1.0 / n as f32;
+                let workers = &self.workers;
+                let pool = if par_shards { &self.pool } else { &serial };
+                pool.zip_chunk_mut(
+                    &mut self.agg,
+                    &mut self.x,
+                    |start, agg_s, x_s| {
+                        agg_s.iter_mut().for_each(|v| *v = 0.0);
+                        for ws in workers {
+                            if let Some(sv) = ws.message() {
+                                sv.add_shard_into_scaled(
+                                    start as u32,
+                                    agg_s,
+                                    scale,
+                                );
+                            }
+                        }
+                        for (xi, ai) in x_s.iter_mut().zip(agg_s.iter()) {
+                            *xi -= gamma * *ai;
+                        }
+                    },
+                );
             }
 
             // 5. price the iteration and feed the monitor
@@ -209,9 +280,10 @@ impl<O: GradOracle> TrainLoop<O> {
                 // honest wire accounting (COO indices, quantized payloads,
                 // headers), averaged over workers and scaled from the proxy
                 // model's dimension up to the pinned paper-scale S_g
-                let proxy_bits =
-                    comp.wire_bits(kept_total / n.max(1), self.x.len());
-                let scale = self.s_g / (self.x.len() as f64 * 32.0);
+                let comp: &dyn Compressor =
+                    self.wire_comps.get(delta, self.params.block_topk);
+                let proxy_bits = comp.wire_bits(kept_total / n.max(1), dim);
+                let scale = self.s_g / (dim as f64 * 32.0);
                 (proxy_bits as f64 * scale) as u64
             };
             let tick = self.clock.tick(t_comp, tau, bits);
@@ -221,13 +293,22 @@ impl<O: GradOracle> TrainLoop<O> {
             self.monitor.observe_latency(self.clock.link().latency());
             self.monitor.observe_compute(t_comp);
 
-            // 6. metrics + stopping
-            if t % self.params.log_every == 0 || t == self.params.max_iters {
+            // 6. metrics + stopping. The average training loss doubles as a
+            // divergence guard: a strategy whose (δ, τ) violates the
+            // stepsize condition blows up, and the per-iteration train loss
+            // catches it *between* log_every boundaries instead of pricing
+            // garbage iterations until the next full evaluation.
+            let diverged = !train_loss.is_finite();
+            if t % self.params.log_every == 0
+                || t == self.params.max_iters
+                || diverged
+            {
                 let loss = self.oracle.loss(&self.x);
                 records.push(Record {
                     iter: t,
                     time: tick.tc,
                     loss,
+                    train_loss,
                     tau,
                     delta,
                     grad_norm: last_grad_norm.unwrap_or(0.0),
@@ -238,10 +319,7 @@ impl<O: GradOracle> TrainLoop<O> {
                         break;
                     }
                 }
-                // divergence guard: a strategy whose (δ, τ) violates the
-                // stepsize condition can blow up — stop pricing iterations
-                // once the loss is no longer finite
-                if !loss.is_finite() {
+                if diverged || !loss.is_finite() {
                     break;
                 }
             }
@@ -300,7 +378,7 @@ mod tests {
     #[test]
     fn all_strategies_converge_on_quadratic() {
         let l0 = {
-            let mut q = quad();
+            let q = quad();
             let x = q.init();
             q.loss(&x)
         };
@@ -344,7 +422,7 @@ mod tests {
         // the paper's headline, miniature: same loss target, DeCo-SGD needs
         // less virtual time than D-SGD under WAN conditions
         let l0 = {
-            let mut q = quad();
+            let q = quad();
             let x = q.init();
             q.loss(&x)
         };
@@ -382,5 +460,47 @@ mod tests {
             assert!(w[1].iter > w[0].iter);
         }
         assert!(res.total_iters <= 100);
+    }
+
+    #[test]
+    fn records_carry_finite_train_loss() {
+        let mut tl = TrainLoop::new(
+            quad(),
+            StrategyKind::DecoSgd { update_every: 10 }.build(),
+            link(2e7, 0.2),
+            TrainParams { max_iters: 100, ..params() },
+        );
+        let res = tl.run("quad");
+        assert!(!res.records.is_empty());
+        for r in &res.records {
+            assert!(r.train_loss.is_finite());
+            assert!(r.train_loss > 0.0, "quadratic losses are positive");
+        }
+    }
+
+    #[test]
+    fn divergence_guard_trips_between_log_boundaries() {
+        // γ far above the Theorem 1 bound with aggressive (δ, τ): the run
+        // must stop at the first non-finite train loss even though
+        // log_every would only evaluate at iteration 4000
+        let mut tl = TrainLoop::new(
+            Quadratic::new(256, 4, 8.0, 0.2, 0.3, 0.3, 11),
+            StrategyKind::DEfSgd { delta: 0.01 }.build(),
+            link(2e7, 0.2),
+            TrainParams {
+                gamma: 5.0,
+                max_iters: 4000,
+                log_every: 4000,
+                ..params()
+            },
+        );
+        let res = tl.run("quad");
+        assert!(
+            res.total_iters < 4000,
+            "guard never tripped: ran {} iters",
+            res.total_iters
+        );
+        let last = res.records.last().expect("divergence record");
+        assert!(!last.train_loss.is_finite() || !last.loss.is_finite());
     }
 }

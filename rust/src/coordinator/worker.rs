@@ -8,8 +8,15 @@
 //! updates), and after a decrease it drains one extra gradient per step
 //! until the new depth is reached. Both transients match what a real
 //! asynchronous sender would do.
+//!
+//! Parallel-execution contract (DESIGN.md §Parallel-Execution): a
+//! `WorkerState` owns *everything* its per-iteration phase touches — EF
+//! vector, delay queue, RNG, gradient scratch, compressor cache, and the
+//! outgoing message buffer — so the pool may run one worker per thread with
+//! no sharing and no locks. The leader reads the phase outputs
+//! (`last_loss`, `last_grad_norm`, `message()`) only after the phase joins.
 
-use crate::compress::{Compressor, ErrorFeedback, SparseVec};
+use crate::compress::{Compressor, CompressorCache, ErrorFeedback, SparseVec};
 use crate::util::Rng;
 use std::collections::VecDeque;
 
@@ -24,6 +31,18 @@ pub struct WorkerState {
     rng: Rng,
     /// scratch buffer reused across iterations (hot-path, no allocs)
     scratch: Vec<f32>,
+    /// outgoing sparse message, recycled across iterations (§Perf)
+    msg: SparseVec,
+    /// entries kept in `msg` this iteration; `None` while the pipeline fills
+    msg_kept: Option<usize>,
+    /// per-(δ, blockwise) compressor instances — cached so Top-k's scratch
+    /// actually warms instead of being re-boxed every iteration
+    comps: CompressorCache,
+    /// worker-phase outputs, read by the leader between phases
+    pub last_loss: f64,
+    pub last_grad_norm: f64,
+    /// wall-clock seconds this worker spent in the gradient oracle
+    pub comp_secs: f64,
 }
 
 impl WorkerState {
@@ -35,6 +54,12 @@ impl WorkerState {
             free: Vec::new(),
             rng: Rng::new(seed ^ (id as u64).wrapping_mul(0x2545F4914F6CDD1D)),
             scratch: vec![0.0; dim],
+            msg: SparseVec::default(),
+            msg_kept: None,
+            comps: CompressorCache::new(),
+            last_loss: 0.0,
+            last_grad_norm: 0.0,
+            comp_secs: 0.0,
         }
     }
 
@@ -62,9 +87,51 @@ impl WorkerState {
         self.queue.push_back(g);
     }
 
-    /// If the queue is deeper than `tau`, pop the oldest gradient, run the
-    /// EF + compression step, and return the sparse message (plus kept
-    /// count). Returns `None` while the pipeline is still filling.
+    /// Hot-path pop: if the queue is deeper than `tau`, pop the oldest
+    /// gradient, run the EF step through the *cached* compressor for
+    /// `(delta, block_topk)`, and encode the result into the recycled
+    /// message buffer (readable via [`Self::message`] until the next call).
+    /// Returns the kept count, `None` while the pipeline is still filling.
+    pub fn pop_compress_cached(
+        &mut self,
+        tau: usize,
+        delta: f64,
+        block_topk: bool,
+    ) -> Option<usize> {
+        self.msg_kept = None;
+        if self.queue.len() <= tau {
+            return None;
+        }
+        let mut g = self.queue.pop_front().expect("non-empty");
+        let comp = self.comps.get(delta, block_topk);
+        let kept = self.ef.step(&mut g, comp, &mut self.rng);
+        self.msg.encode_into(&g);
+        self.free.push(g); // recycle for future pushes
+        self.msg_kept = Some(kept);
+        Some(kept)
+    }
+
+    /// The message produced by the last [`Self::pop_compress_cached`], if
+    /// one was emitted this iteration.
+    pub fn message(&self) -> Option<&SparseVec> {
+        self.msg_kept.map(|_| &self.msg)
+    }
+
+    /// Kept-entry count of the current message, if one was emitted.
+    pub fn message_kept(&self) -> Option<usize> {
+        self.msg_kept
+    }
+
+    /// Distinct compressors cached so far (steady state: one per δ value
+    /// the strategy has visited — the zero-alloc invariant benches check).
+    pub fn compressor_cache_len(&self) -> usize {
+        self.comps.len()
+    }
+
+    /// Allocating variant with a caller-supplied compressor — the
+    /// single-message path tests and property checks drive directly.
+    /// Returns the sparse message (plus kept count) or `None` while the
+    /// pipeline is still filling.
     pub fn pop_compress(
         &mut self,
         tau: usize,
@@ -80,10 +147,12 @@ impl WorkerState {
         Some((sv, kept))
     }
 
-    /// Drop all queued gradients and carried error (full restart).
+    /// Drop all queued gradients, carried error, and any pending message
+    /// (full restart).
     pub fn reset(&mut self) {
         self.queue.clear();
         self.ef.reset();
+        self.msg_kept = None;
     }
 }
 
@@ -112,6 +181,49 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn cached_pop_matches_explicit_compressor() {
+        // the zero-alloc cached path and the allocating compat path produce
+        // identical messages given identical state
+        let dim = 512;
+        let delta = 0.1;
+        let mut a = WorkerState::new(0, dim, 7);
+        let mut b = WorkerState::new(0, dim, 7);
+        let comp = TopK::new(delta);
+        let mut rng = Rng::new(3);
+        for t in 0..6usize {
+            let g: Vec<f32> = (0..dim)
+                .map(|i| rng.normal_f32() + (t + i) as f32 * 1e-6)
+                .collect();
+            a.grad_buffer().copy_from_slice(&g);
+            a.push_gradient();
+            b.grad_buffer().copy_from_slice(&g);
+            b.push_gradient();
+            let ka = a.pop_compress_cached(1, delta, false);
+            let kb = b.pop_compress(1, &comp).map(|(sv, k)| {
+                assert_eq!(Some(&sv), a.message());
+                k
+            });
+            assert_eq!(ka, kb, "t={t}");
+        }
+        assert_eq!(a.compressor_cache_len(), 1);
+    }
+
+    #[test]
+    fn message_cleared_while_pipeline_fills() {
+        let mut w = WorkerState::new(0, 16, 2);
+        w.grad_buffer().iter_mut().for_each(|v| *v = 1.0);
+        w.push_gradient();
+        assert_eq!(w.pop_compress_cached(0, 1.0, false), Some(16));
+        assert!(w.message().is_some());
+        // deepening τ stalls the pipeline: the stale message must vanish
+        w.grad_buffer().iter_mut().for_each(|v| *v = 2.0);
+        w.push_gradient();
+        assert_eq!(w.pop_compress_cached(5, 1.0, false), None);
+        assert!(w.message().is_none());
+        assert_eq!(w.message_kept(), None);
     }
 
     #[test]

@@ -115,7 +115,7 @@ pub fn compressor(out_csv: &mut String) -> Vec<Vec<String>> {
     ];
     let mut rows = Vec::new();
     for (name, comp) in comps {
-        let mut oracle = Quadratic::new(1024, 4, 0.5, 0.1, 0.3, 1.0, 31);
+        let oracle = Quadratic::new(1024, 4, 0.5, 0.1, 0.3, 1.0, 31);
         use crate::compress::ErrorFeedback;
         use crate::optim::GradOracle;
         use std::collections::VecDeque;

@@ -8,7 +8,8 @@ use crate::metrics::RunResult;
 use crate::optim::{GradOracle, Logistic, Quadratic};
 use crate::runtime::{PjrtOracle, Runtime};
 use crate::strategy::StrategyKind;
-use anyhow::Result;
+use crate::util::WorkerPool;
+use anyhow::{anyhow, Result};
 
 /// A benchmark task: the model, its loss target, and the *paper-scale*
 /// pinned time parameters (`t_comp`, `S_g`) so the virtual clock prices
@@ -161,24 +162,16 @@ impl ExpEnv {
             );
         }
         let res = match cfg.task.as_str() {
-            "quadratic" => {
-                let oracle = Quadratic::new(
-                    4096, cfg.workers, 0.5, 0.1, 0.3, 0.2, cfg.seed,
-                );
-                self.run_with(oracle, cfg)
-            }
-            "logistic" => {
-                let oracle = Logistic::new(
-                    512, cfg.workers, 400, 32, 1e-4, 1.0, cfg.seed,
-                );
-                self.run_with(oracle, cfg)
-            }
+            "quadratic" | "logistic" => Self::run_analytic(cfg, None),
             model => {
                 let rt = self.runtime()?;
                 let exec = rt.grad_exec(model)?;
                 let oracle = PjrtOracle::new(exec, cfg.workers, cfg.seed)
                     .with_eval_batches(6);
-                self.run_with(oracle, cfg)
+                // PJRT executables are single-threaded-owned: pin the loop
+                // to a serial pool so the worker phase never calls the
+                // executable concurrently
+                Self::run_with(oracle, cfg, Some(1))
             }
         };
         if self.verbose {
@@ -194,13 +187,38 @@ impl ExpEnv {
         res
     }
 
+    /// The analytic tasks, runnable without `&self` (no PJRT runtime) —
+    /// which is what lets whole strategy sweeps move onto the pool.
+    /// `threads` sizes the inner training loop's pool.
+    fn run_analytic(
+        cfg: &ExperimentConfig,
+        threads: Option<usize>,
+    ) -> Result<RunResult> {
+        match cfg.task.as_str() {
+            "quadratic" => Self::run_with(
+                Quadratic::new(4096, cfg.workers, 0.5, 0.1, 0.3, 0.2, cfg.seed),
+                cfg,
+                threads,
+            ),
+            "logistic" => Self::run_with(
+                Logistic::new(512, cfg.workers, 400, 32, 1e-4, 1.0, cfg.seed),
+                cfg,
+                threads,
+            ),
+            other => Err(anyhow!("task '{other}' has no analytic oracle")),
+        }
+    }
+
     fn run_with<O: GradOracle>(
-        &self,
         oracle: O,
         cfg: &ExperimentConfig,
+        threads: Option<usize>,
     ) -> Result<RunResult> {
         let dim = oracle.dim();
-        let params = cfg.train_params(dim);
+        let mut params = cfg.train_params(dim);
+        if threads.is_some() {
+            params.threads = threads;
+        }
         let mut tl = TrainLoop::new(
             oracle,
             cfg.strategy.build(),
@@ -212,6 +230,13 @@ impl ExpEnv {
 
     /// Run the paper's five-method sweep on one task/network; returns
     /// (label, result) pairs in paper order.
+    ///
+    /// Analytic tasks run the five independent `TrainLoop`s concurrently on
+    /// the pool (one run per thread, each loop internally serial — run-level
+    /// parallelism beats iteration-level here and avoids oversubscription),
+    /// so a whole figure's sweep costs one slowest-run wall-clock. PJRT
+    /// tasks fall back to the serial path: executables are
+    /// single-threaded-owned.
     pub fn sweep_strategies(
         &mut self,
         task: &TaskSpec,
@@ -219,8 +244,46 @@ impl ExpEnv {
         network: &NetworkConfig,
         scale: f64,
     ) -> Result<Vec<(&'static str, RunResult)>> {
+        let kinds = StrategyKind::paper_baselines();
+        let analytic = matches!(task.model, "quadratic" | "logistic");
+        let pool = WorkerPool::new(
+            WorkerPool::default_threads().min(kinds.len()),
+        );
+        if analytic && pool.threads() > 1 {
+            if self.verbose {
+                eprintln!(
+                    "[sweep] task={} — {} strategies across {} threads",
+                    task.name,
+                    kinds.len(),
+                    pool.threads()
+                );
+            }
+            let runs = pool.map(kinds.len(), |i| {
+                let cfg =
+                    task.config(workers, kinds[i].clone(), network.clone(), scale);
+                Self::run_analytic(&cfg, Some(1))
+            });
+            let mut out = Vec::new();
+            for (kind, res) in kinds.iter().zip(runs) {
+                let r = res?;
+                if self.verbose {
+                    eprintln!(
+                        "[run] task={} strategy={} n={} -> iters={} \
+                         vtime={:.1}s loss={:.4}",
+                        task.name,
+                        kind.label(),
+                        workers,
+                        r.total_iters,
+                        r.total_time,
+                        r.final_loss()
+                    );
+                }
+                out.push((kind.label(), r));
+            }
+            return Ok(out);
+        }
         let mut out = Vec::new();
-        for kind in StrategyKind::paper_baselines() {
+        for kind in kinds {
             let label = kind.label();
             let cfg = task.config(workers, kind, network.clone(), scale);
             out.push((label, self.run(&cfg)?));

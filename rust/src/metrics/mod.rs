@@ -7,13 +7,17 @@ use std::io::Write;
 use std::path::Path;
 
 /// One logged training step.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Record {
     pub iter: usize,
     /// virtual wall-clock (s) when this iteration's update *arrived*
     pub time: f64,
-    /// global loss (or train-loss proxy, see `RunResult::loss_kind`)
+    /// full (deterministic) global loss from the oracle's evaluation pass
     pub loss: f64,
+    /// average per-worker *training* loss of this iteration's minibatches —
+    /// already computed by the gradient pass, and the signal the
+    /// between-boundary divergence guard watches
+    pub train_loss: f64,
     pub tau: usize,
     pub delta: f64,
     pub grad_norm: f64,
@@ -22,7 +26,7 @@ pub struct Record {
 }
 
 /// A completed training run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RunResult {
     pub method: String,
     pub task: String,
@@ -77,12 +81,19 @@ impl RunResult {
 
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "iter,time,loss,tau,delta,grad_norm,bandwidth\n",
+            "iter,time,loss,train_loss,tau,delta,grad_norm,bandwidth\n",
         );
         for r in &self.records {
             s.push_str(&format!(
-                "{},{:.6},{:.6},{},{:.4},{:.6},{:.0}\n",
-                r.iter, r.time, r.loss, r.tau, r.delta, r.grad_norm, r.bandwidth
+                "{},{:.6},{:.6},{:.6},{},{:.4},{:.6},{:.0}\n",
+                r.iter,
+                r.time,
+                r.loss,
+                r.train_loss,
+                r.tau,
+                r.delta,
+                r.grad_norm,
+                r.bandwidth
             ));
         }
         s
@@ -108,6 +119,7 @@ impl RunResult {
                         ("iter", Json::num(r.iter as f64)),
                         ("time", Json::num(r.time)),
                         ("loss", Json::num(r.loss)),
+                        ("train_loss", Json::num(r.train_loss)),
                         ("tau", Json::num(r.tau as f64)),
                         ("delta", Json::num(r.delta)),
                         ("grad_norm", Json::num(r.grad_norm)),
@@ -163,7 +175,16 @@ mod tests {
     use super::*;
 
     fn rec(iter: usize, time: f64, loss: f64) -> Record {
-        Record { iter, time, loss, tau: 0, delta: 1.0, grad_norm: 0.0, bandwidth: 0.0 }
+        Record {
+            iter,
+            time,
+            loss,
+            train_loss: loss,
+            tau: 0,
+            delta: 1.0,
+            grad_norm: 0.0,
+            bandwidth: 0.0,
+        }
     }
 
     #[test]

@@ -95,14 +95,14 @@ impl GradOracle for Logistic {
         self.workers
     }
 
-    fn grad(&mut self, worker: usize, iter: usize, x: &[f32], out: &mut [f32]) -> f64 {
+    fn grad(&self, worker: usize, iter: usize, x: &[f32], out: &mut [f32]) -> f64 {
         let n = self.labels[worker].len();
         let mut rng = worker_rng(self.seed, worker, iter);
         let rows: Vec<usize> = (0..self.batch).map(|_| rng.below(n)).collect();
         self.grad_on(worker, &rows, x, out)
     }
 
-    fn loss(&mut self, x: &[f32]) -> f64 {
+    fn loss(&self, x: &[f32]) -> f64 {
         let mut buf = vec![0.0f32; self.dim];
         let mut total = 0.0f64;
         for w in 0..self.workers {
@@ -123,7 +123,7 @@ mod tests {
 
     #[test]
     fn sgd_learns_the_separator() {
-        let mut p = Logistic::new(20, 4, 200, 16, 1e-3, 0.0, 3);
+        let p = Logistic::new(20, 4, 200, 16, 1e-3, 0.0, 3);
         let mut x = p.init();
         let l0 = p.loss(&x);
         let mut g = vec![0.0f32; 20];
@@ -145,7 +145,7 @@ mod tests {
 
     #[test]
     fn deterministic_minibatches() {
-        let mut p = Logistic::new(10, 2, 50, 8, 0.0, 0.0, 4);
+        let p = Logistic::new(10, 2, 50, 8, 0.0, 0.0, 4);
         let x = vec![0.1f32; 10];
         let mut g1 = vec![0.0f32; 10];
         let mut g2 = vec![0.0f32; 10];
@@ -156,7 +156,7 @@ mod tests {
 
     #[test]
     fn skew_creates_heterogeneity() {
-        let mut p = Logistic::new(16, 4, 100, 100, 0.0, 4.0, 5);
+        let p = Logistic::new(16, 4, 100, 100, 0.0, 4.0, 5);
         let x = vec![0.05f32; 16];
         let mut norms = Vec::new();
         let mut g = vec![0.0f32; 16];

@@ -16,7 +16,18 @@ pub use quadratic::Quadratic;
 use crate::util::Rng;
 
 /// A distributed gradient oracle over a flat parameter vector.
-pub trait GradOracle {
+///
+/// `Send + Sync` with `&self` methods: the coordinator's worker phase calls
+/// `grad` concurrently from the pool (one worker id per thread), and the
+/// experiment sweeps move whole training loops onto pool threads. All
+/// oracles here are deterministic functions of `(worker, iter, x)` with no
+/// interior mutability, so sharing is free. An oracle over a handle that
+/// is not thread-safe (e.g. real PJRT executables under the `pjrt`
+/// feature, which are single-threaded-owned) must wrap it to satisfy the
+/// bound — a `Mutex` around the executable is the straightforward route;
+/// the coordinator already pins such runs to a serial pool so the lock
+/// stays uncontended.
+pub trait GradOracle: Send + Sync {
     /// Parameter dimension (padded to the compressor block size by callers
     /// that need it; testbeds can use any dim).
     fn dim(&self) -> usize;
@@ -25,11 +36,12 @@ pub trait GradOracle {
     fn workers(&self) -> usize;
 
     /// Stochastic gradient of worker `i`'s local loss at `x` for iteration
-    /// `iter`, written into `out`. Returns the local loss estimate.
-    fn grad(&mut self, worker: usize, iter: usize, x: &[f32], out: &mut [f32]) -> f64;
+    /// `iter`, written into `out`. Returns the local loss estimate. May be
+    /// called concurrently for distinct workers.
+    fn grad(&self, worker: usize, iter: usize, x: &[f32], out: &mut [f32]) -> f64;
 
     /// Full (deterministic) global loss — for metrics, not on the hot path.
-    fn loss(&mut self, x: &[f32]) -> f64;
+    fn loss(&self, x: &[f32]) -> f64;
 
     /// A fresh parameter vector at the canonical init.
     fn init(&self) -> Vec<f32>;

@@ -114,7 +114,7 @@ impl GradOracle for Quadratic {
         self.workers
     }
 
-    fn grad(&mut self, worker: usize, iter: usize, x: &[f32], out: &mut [f32]) -> f64 {
+    fn grad(&self, worker: usize, iter: usize, x: &[f32], out: &mut [f32]) -> f64 {
         let mut rng = worker_rng(self.seed, worker, iter);
         let c = &self.centers[worker * self.dim..(worker + 1) * self.dim];
         let noise_per_coord = (self.sigma / (self.dim as f64).sqrt()) as f32;
@@ -127,7 +127,7 @@ impl GradOracle for Quadratic {
         loss
     }
 
-    fn loss(&mut self, x: &[f32]) -> f64 {
+    fn loss(&self, x: &[f32]) -> f64 {
         self.loss_det(x)
     }
 
@@ -149,7 +149,7 @@ mod tests {
 
     #[test]
     fn gradient_noise_variance_matches_sigma() {
-        let mut q = Quadratic::new(64, 4, 1.0, 1.0, 2.0, 0.0, 5);
+        let q = Quadratic::new(64, 4, 1.0, 1.0, 2.0, 0.0, 5);
         let x = vec![0.0f32; 64];
         let mut g = vec![0.0f32; 64];
         let mut acc = 0.0f64;
@@ -165,7 +165,7 @@ mod tests {
 
     #[test]
     fn heterogeneity_spreads_worker_gradients() {
-        let mut q = Quadratic::new(32, 8, 2.0, 0.5, 0.0, 3.0, 6);
+        let q = Quadratic::new(32, 8, 2.0, 0.5, 0.0, 3.0, 6);
         let x = vec![0.0f32; 32];
         let mut g = vec![0.0f32; 32];
         let mut norms = Vec::new();
@@ -188,7 +188,7 @@ mod tests {
 
     #[test]
     fn gd_converges_at_condition_rate() {
-        let mut q = Quadratic::new(16, 2, 4.0, 1.0, 0.0, 0.0, 7);
+        let q = Quadratic::new(16, 2, 4.0, 1.0, 0.0, 0.0, 7);
         let mut x = q.init();
         let mut g = vec![0.0f32; 16];
         let gamma = 1.0 / q.l() as f32 / 2.0;

@@ -4,6 +4,13 @@
 use super::manifest::{Manifest, ModelEntry, ModuleEntry};
 use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+// Default (offline) builds bind `xla::` to the in-tree stub, which fails
+// cleanly at `PjRtClient::cpu()`; the `pjrt` feature rebinds it to the real
+// vendored bindings with the identical surface.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
 
 /// The process-wide PJRT runtime: CPU client + artifact directory.
 pub struct Runtime {
@@ -36,7 +43,7 @@ impl Runtime {
         let entry = self.manifest.module(&format!("grad_{model}"))?;
         let minfo = self.manifest.model(model)?.clone();
         let exe = self.compile(entry)?;
-        Ok(GradExec { exe, model: minfo })
+        Ok(GradExec { exe: Mutex::new(exe), model: minfo })
     }
 
     /// Compile a palette compress module by manifest name
@@ -64,7 +71,10 @@ impl Runtime {
 
 /// `(params f32[P], x, y) -> (loss f32[], grad f32[P])`.
 pub struct GradExec {
-    exe: xla::PjRtLoadedExecutable,
+    // PJRT executables are single-threaded-owned; the mutex makes GradExec
+    // `Sync` for the `GradOracle: Send + Sync` bound. The coordinator pins
+    // PJRT-backed runs to a serial pool, so the lock is uncontended.
+    exe: Mutex<xla::PjRtLoadedExecutable>,
     pub model: ModelEntry,
 }
 
@@ -105,6 +115,8 @@ impl GradExec {
             .map_err(|e| anyhow!("y reshape: {e:?}"))?;
         let result = self
             .exe
+            .lock()
+            .expect("pjrt exec lock")
             .execute::<xla::Literal>(&[lit_p, lit_x, lit_y])
             .map_err(|e| anyhow!("grad execute: {e:?}"))?[0][0]
             .to_literal_sync()

@@ -10,6 +10,10 @@
 pub mod client;
 pub mod manifest;
 pub mod oracle;
+/// Offline stand-in for the external `xla` crate; swapped out by the
+/// `pjrt` feature (see client.rs).
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla_stub;
 
 pub use client::{ApplyExec, CompressExec, GradExec, Runtime};
 pub use manifest::{Manifest, ModelEntry, ModuleEntry, TensorEntry};

@@ -106,7 +106,7 @@ impl GradOracle for PjrtOracle {
     }
 
     fn grad(
-        &mut self,
+        &self,
         worker: usize,
         iter: usize,
         x: &[f32],
@@ -115,7 +115,7 @@ impl GradOracle for PjrtOracle {
         self.run_batch(worker, iter, x, out)
     }
 
-    fn loss(&mut self, x: &[f32]) -> f64 {
+    fn loss(&self, x: &[f32]) -> f64 {
         // held-out estimate: shard id past the training workers
         let mut buf = vec![0.0f32; self.dim()];
         let mut acc = 0.0;

@@ -1,0 +1,134 @@
+//! Offline stand-in for the external `xla` crate (PJRT bindings,
+//! xla_extension 0.5.1). The vendored native toolchain is not part of the
+//! default build, so `client.rs` aliases this module as `xla` unless the
+//! `pjrt` feature is enabled; the API surface mirrors exactly what
+//! `client.rs` uses, and every entry point fails with [`Unavailable`] so
+//! `Runtime::load` returns a clean error and everything analytic —
+//! quadratic/logistic oracles, the DeCo controller, the full simulator —
+//! keeps working with zero native dependencies. Integration tests and
+//! benches already skip when `artifacts/` is absent, so the stub never even
+//! gets exercised there.
+
+use std::path::Path;
+
+/// The error every stub call returns.
+#[derive(Clone, Copy, Debug)]
+pub struct Unavailable;
+
+impl std::fmt::Display for Unavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PJRT runtime unavailable: built without the `pjrt` feature \
+             (offline xla stub)"
+        )
+    }
+}
+
+impl std::error::Error for Unavailable {}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(
+        _path: impl AsRef<Path>,
+    ) -> Result<Self, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_v: &[T]) -> Self {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn copy_raw_to(&self, _out: &mut [f32]) -> Result<(), Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn get_first_element<T: Default>(&self) -> Result<T, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = format!("{err} / {err:?}");
+        assert!(msg.contains("pjrt"));
+    }
+
+    #[test]
+    fn literal_surface_compiles_and_fails() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_tuple2().is_err());
+        assert!(lit.get_first_element::<f32>().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}

@@ -38,44 +38,9 @@ impl Bench {
 
     /// Time `f`, which performs ONE logical operation per call.
     pub fn bench(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
-        // warmup + calibrate iters per sample
-        let t0 = Instant::now();
-        let mut calib_iters: u64 = 0;
-        while t0.elapsed() < self.min_time / 4 {
-            f();
-            calib_iters += 1;
-        }
-        let per_call = (t0.elapsed().as_nanos() as f64
-            / calib_iters.max(1) as f64)
-            .max(1.0);
-        let target_sample_ns =
-            (self.min_time.as_nanos() as f64 / self.samples as f64).max(1e5);
-        let iters = ((target_sample_ns / per_call) as u64).max(1);
-
-        let mut sample_ns: Vec<f64> = Vec::with_capacity(self.samples);
-        for _ in 0..self.samples {
-            let s = Instant::now();
-            for _ in 0..iters {
-                f();
-            }
-            sample_ns.push(s.elapsed().as_nanos() as f64 / iters as f64);
-        }
-        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
-        let median = sample_ns[sample_ns.len() / 2];
-        let var = sample_ns
-            .iter()
-            .map(|x| (x - mean) * (x - mean))
-            .sum::<f64>()
-            / sample_ns.len() as f64;
-        let res = BenchResult {
-            name: format!("{}/{}", self.group, name),
-            mean_ns: mean,
-            median_ns: median,
-            std_ns: var.sqrt(),
-            iters_per_sample: iters,
-        };
+        let res = self.bench_quiet(name, &mut f);
         println!("{}", format_result(&res, None));
+        dump_json(&res, None);
         res
     }
 
@@ -88,11 +53,12 @@ impl Bench {
     ) -> BenchResult {
         let res = self.bench_quiet(name, &mut f);
         println!("{}", format_result(&res, Some(bytes)));
+        dump_json(&res, Some(bytes));
         res
     }
 
     fn bench_quiet(&self, name: &str, f: &mut impl FnMut()) -> BenchResult {
-        // same as bench() without printing — bench() prints its own line
+        // warmup + calibrate iters per sample
         let t0 = Instant::now();
         let mut calib_iters: u64 = 0;
         while t0.elapsed() < self.min_time / 4 {
@@ -129,6 +95,33 @@ impl Bench {
             iters_per_sample: iters,
         }
     }
+}
+
+/// When `DECO_BENCH_JSON=path` is set, append one JSON object per result —
+/// `scripts/bench.sh` consolidates these into `BENCH_pipeline.json` so PRs
+/// have a machine-readable perf trajectory to diff against.
+fn dump_json(r: &BenchResult, bytes: Option<u64>) {
+    use std::io::Write;
+    let Ok(path) = std::env::var("DECO_BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+    else {
+        return;
+    };
+    let throughput = bytes
+        .map(|b| format!(",\"bytes_per_sec\":{:.0}", b as f64 / r.median_ns * 1e9))
+        .unwrap_or_default();
+    let _ = writeln!(
+        f,
+        "{{\"name\":\"{}\",\"mean_ns\":{:.1},\"median_ns\":{:.1},\
+         \"std_ns\":{:.1},\"iters_per_sample\":{}{}}}",
+        r.name, r.mean_ns, r.median_ns, r.std_ns, r.iters_per_sample, throughput
+    );
 }
 
 fn human_time(ns: f64) -> String {

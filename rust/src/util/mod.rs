@@ -1,13 +1,16 @@
 //! Small shared substrate: deterministic RNG, streaming statistics, a JSON
-//! codec, a bench harness, and a property-testing helper — all in-tree
-//! because this repo builds fully offline (see Cargo.toml).
+//! codec, a bench harness, a scoped worker pool, and a property-testing
+//! helper — all in-tree because this repo builds fully offline (see
+//! Cargo.toml).
 
 pub mod bench;
 pub mod check;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 
 pub use json::Json;
+pub use pool::WorkerPool;
 pub use rng::{Rng, SplitMix64};
 pub use stats::{Ewma, OnlineStats};

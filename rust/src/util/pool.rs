@@ -1,0 +1,261 @@
+//! Scoped worker pool — the std-only parallel substrate for the coordinator
+//! hot loop and the experiment sweeps (DESIGN.md §Parallel-Execution).
+//!
+//! Built on [`std::thread::scope`], so parallel regions may borrow stack
+//! data (worker states, model shards) without `Arc` or lifetime erasure.
+//! The pool object itself is just a reusable size policy: each region
+//! spawns scoped threads and joins them before returning, which keeps the
+//! API safe and panic-propagating at the cost of a thread spawn per region
+//! (~tens of µs) — negligible against the ≥ ms-scale regions the training
+//! loop hands it, and the loop falls back to inline execution below
+//! [`crate::coordinator`]'s size thresholds.
+//!
+//! Determinism contract: none of these primitives change *what* is
+//! computed, only *where*. Work is split into contiguous chunks with fixed
+//! boundaries (a pure function of `len` and `threads`), and `map` returns
+//! results in input order, so callers that reduce in a fixed order get
+//! bit-identical results at any pool size.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A reusable scoped-thread worker pool.
+#[derive(Clone, Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool running `threads` ways (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// Pool size 1: every primitive runs inline on the caller.
+    pub const fn serial() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// Sized from the machine: `available_parallelism`, capped at 16 (the
+    /// per-region spawn cost grows linearly with threads and the hot-loop
+    /// shapes saturate well before that).
+    pub fn with_default_parallelism() -> Self {
+        Self::new(Self::default_threads())
+    }
+
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(16)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `items` into ≤ `threads` contiguous chunks and run
+    /// `f(start_index, chunk)` on each in parallel. Chunk boundaries depend
+    /// only on `(items.len(), threads)`.
+    pub fn for_each_chunk_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let parts = self.threads.min(n);
+        if parts == 1 {
+            f(0, items);
+            return;
+        }
+        let chunk = n.div_ceil(parts);
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut chunks = items.chunks_mut(chunk);
+            let first = chunks.next().expect("n > 0");
+            for (i, c) in chunks.enumerate() {
+                let start = (i + 1) * chunk;
+                s.spawn(move || f(start, c));
+            }
+            // the caller works the first chunk instead of idling at the
+            // scope join — one fewer spawn per region
+            f(0, first);
+        });
+    }
+
+    /// Like [`Self::for_each_chunk_mut`] over two equal-length slices
+    /// chunked identically: `f(start_index, a_chunk, b_chunk)`. This is the
+    /// sharded-aggregation primitive — `a` is the reduction buffer, `b` the
+    /// model, and each shard is owned by exactly one thread.
+    pub fn zip_chunk_mut<A, B, F>(&self, a: &mut [A], b: &mut [B], f: F)
+    where
+        A: Send,
+        B: Send,
+        F: Fn(usize, &mut [A], &mut [B]) + Sync,
+    {
+        assert_eq!(a.len(), b.len(), "zip_chunk_mut: length mismatch");
+        let n = a.len();
+        if n == 0 {
+            return;
+        }
+        let parts = self.threads.min(n);
+        if parts == 1 {
+            f(0, a, b);
+            return;
+        }
+        let chunk = n.div_ceil(parts);
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut pairs = a.chunks_mut(chunk).zip(b.chunks_mut(chunk));
+            let (fa, fb) = pairs.next().expect("n > 0");
+            for (i, (ca, cb)) in pairs.enumerate() {
+                let start = (i + 1) * chunk;
+                s.spawn(move || f(start, ca, cb));
+            }
+            f(0, fa, fb);
+        });
+    }
+
+    /// Parallel `(0..n).map(f)` preserving input order. Indices are handed
+    /// out dynamically (work stealing over an atomic counter), so uneven
+    /// tasks — e.g. training runs of different lengths — load-balance.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.threads == 1 || n == 1 {
+            return (0..n).map(|i| f(i)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let mut pairs: Vec<(usize, T)> = Vec::with_capacity(n);
+        std::thread::scope(|s| {
+            let f = &f;
+            let next = &next;
+            let helpers = self.threads.min(n) - 1;
+            let handles: Vec<_> = (0..helpers)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut local = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, f(i)));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                pairs.push((i, f(i)));
+            }
+            for h in handles {
+                pairs.extend(h.join().expect("pool worker panicked"));
+            }
+        });
+        pairs.sort_by_key(|p| p.0);
+        pairs.into_iter().map(|p| p.1).collect()
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::with_default_parallelism()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_run_concurrently_and_cover_items() {
+        // with >= items worth of threads, every item lands in its own chunk
+        let pool = WorkerPool::new(4);
+        let mask = AtomicU64::new(0);
+        let mut items = [0u64, 1, 2, 3];
+        pool.for_each_chunk_mut(&mut items, |start, chunk| {
+            assert_eq!(chunk.len(), 1);
+            mask.fetch_or(1 << (start as u64), Ordering::Relaxed);
+        });
+        assert_eq!(mask.load(Ordering::Relaxed), 0b1111);
+    }
+
+    #[test]
+    fn chunks_touch_each_item_once_with_correct_index() {
+        for threads in [1usize, 2, 3, 8] {
+            for n in [0usize, 1, 5, 16, 17] {
+                let pool = WorkerPool::new(threads);
+                let mut items: Vec<usize> = vec![usize::MAX; n];
+                pool.for_each_chunk_mut(&mut items, |start, chunk| {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = start + j; // global index
+                    }
+                });
+                let want: Vec<usize> = (0..n).collect();
+                assert_eq!(items, want, "threads={threads} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn zip_chunks_align() {
+        for threads in [1usize, 2, 5] {
+            let pool = WorkerPool::new(threads);
+            let n = 23;
+            let mut a: Vec<u32> = (0..n as u32).collect();
+            let mut b: Vec<u32> = vec![0; n];
+            pool.zip_chunk_mut(&mut a, &mut b, |start, ca, cb| {
+                assert_eq!(ca.len(), cb.len());
+                for (j, (x, y)) in ca.iter_mut().zip(cb.iter_mut()).enumerate()
+                {
+                    assert_eq!(*x as usize, start + j);
+                    *y = *x * 2;
+                }
+            });
+            let want: Vec<u32> = (0..n as u32).map(|v| v * 2).collect();
+            assert_eq!(b, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let out = pool.map(37, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+        assert!(WorkerPool::new(4).map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::serial();
+        assert_eq!(pool.threads(), 1);
+        let caller = std::thread::current().id();
+        let mut items = [0u8; 3];
+        pool.for_each_chunk_mut(&mut items, |_, _| {
+            assert_eq!(std::thread::current().id(), caller);
+        });
+    }
+
+    #[test]
+    fn default_sizing_sane() {
+        let t = WorkerPool::default_threads();
+        assert!(t >= 1 && t <= 16);
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+    }
+}

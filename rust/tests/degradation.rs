@@ -46,7 +46,7 @@ fn cfg(strategy: StrategyKind, iters: usize) -> ExperimentConfig {
 
 /// Reference DD-EF-SGD with explicit state, mirroring the paper's Algo 2.
 fn reference_run(delta: f64, tau: usize, iters: usize) -> Vec<f32> {
-    let mut oracle = oracle();
+    let oracle = oracle();
     let n = oracle.workers();
     let dim = oracle.dim();
     let mut x = oracle.init();

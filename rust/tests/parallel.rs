@@ -1,0 +1,113 @@
+//! Parallel-execution determinism (DESIGN.md §Parallel-Execution): the
+//! worker pool must change *where* work runs, never *what* is computed.
+//! A run with pool size 1 and the same run with a multi-thread pool must
+//! agree bit-for-bit — final model, every record, and the virtual clock —
+//! across strategies that exercise dynamic (τ, δ), the sharded aggregation
+//! path (dim ≥ the shard threshold), and both compressor families.
+
+use deco::config::{wan_network, ExperimentConfig, NetworkConfig, StopConfig};
+use deco::coordinator::TrainLoop;
+use deco::metrics::RunResult;
+use deco::optim::Quadratic;
+use deco::strategy::StrategyKind;
+
+fn cfg(strategy: StrategyKind, block_topk: bool) -> ExperimentConfig {
+    ExperimentConfig {
+        task: "quadratic".into(),
+        workers: 4,
+        gamma: 0.01,
+        strategy,
+        network: wan_network(1e8, 0.2, 5),
+        stop: StopConfig {
+            max_iters: 40,
+            loss_target: None,
+            max_virtual_time: None,
+        },
+        seed: 13,
+        t_comp: Some(0.05),
+        s_g_bits: Some(124e6 * 32.0),
+        log_every: 5,
+        block_topk,
+        clip_norm: Some(5.0),
+    }
+}
+
+/// dim 65_536 crosses the sharded-aggregation threshold AND the parallel
+/// worker-phase threshold, so a multi-thread pool exercises both engines.
+fn run(c: &ExperimentConfig, threads: usize) -> (Vec<f32>, RunResult) {
+    let dim = 65_536;
+    let oracle = Quadratic::new(dim, c.workers, 0.5, 0.1, 0.3, 0.2, c.seed);
+    let mut params = c.train_params(dim);
+    params.threads = Some(threads);
+    let mut tl =
+        TrainLoop::new(oracle, c.strategy.build(), c.network.link(), params);
+    assert_eq!(tl.threads(), threads.max(1));
+    let res = tl.run("det");
+    (tl.model().to_vec(), res)
+}
+
+fn assert_identical(c: &ExperimentConfig, label: &str) {
+    let (x1, r1) = run(c, 1);
+    assert!(!r1.records.is_empty(), "{label}: no records");
+    assert!(r1.final_loss().is_finite(), "{label}: diverged");
+    for threads in [2usize, 4, 7] {
+        let (xt, rt) = run(c, threads);
+        assert_eq!(x1, xt, "{label}: model diverges at {threads} threads");
+        assert_eq!(
+            r1.records, rt.records,
+            "{label}: records diverge at {threads} threads"
+        );
+        assert_eq!(
+            r1.total_time.to_bits(),
+            rt.total_time.to_bits(),
+            "{label}: virtual clock diverges at {threads} threads"
+        );
+        assert_eq!(r1.total_iters, rt.total_iters, "{label}: iter count");
+    }
+}
+
+#[test]
+fn deco_dynamic_tau_delta_bit_identical() {
+    assert_identical(
+        &cfg(StrategyKind::DecoSgd { update_every: 10 }, false),
+        "deco-sgd/topk",
+    );
+}
+
+#[test]
+fn fixed_compression_bit_identical_blockwise() {
+    assert_identical(
+        &cfg(StrategyKind::DEfSgd { delta: 0.05 }, true),
+        "d-ef-sgd/block_topk",
+    );
+}
+
+#[test]
+fn dense_identity_path_bit_identical() {
+    // δ = 1 (Identity wire): exercises the dense-message sharding edge
+    assert_identical(&cfg(StrategyKind::DdSgd { tau: 2 }, false), "dga/dense");
+}
+
+#[test]
+fn sweep_parallelism_matches_serial_runs() {
+    // the runner-level sweep (runs-on-threads) must equal one-by-one runs
+    use deco::exp::{ExpEnv, TaskSpec};
+    let mut env = ExpEnv::new();
+    env.verbose = false;
+    let task = TaskSpec::quadratic();
+    let net: NetworkConfig = wan_network(1e8, 0.2, 3);
+    let swept = env.sweep_strategies(&task, 4, &net, 0.05).unwrap();
+    assert_eq!(swept.len(), 5);
+    for (label, res) in &swept {
+        let kind = StrategyKind::paper_baselines()
+            .into_iter()
+            .find(|k| k.label() == *label)
+            .unwrap();
+        let one = env.run(&task.config(4, kind, net.clone(), 0.05)).unwrap();
+        assert_eq!(
+            one.records, res.records,
+            "{label}: sweep-parallel run differs from direct run"
+        );
+        assert_eq!(one.total_time.to_bits(), res.total_time.to_bits());
+    }
+}

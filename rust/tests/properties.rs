@@ -105,6 +105,67 @@ fn prop_sparse_roundtrip() {
 }
 
 #[test]
+fn prop_sharded_reduction_bit_identical() {
+    // the leader's sharded sparse reduction (fixed worker order per shard)
+    // must match the serial reduction bit-for-bit for ANY shard geometry:
+    // empty shards, all mass in one shard, dim not divisible by the count,
+    // more shards than dims
+    forall("sharded_reduction", 120, |g| {
+        let dim = g.size(1, 4000);
+        let nw = g.size(1, 6);
+        let msgs: Vec<SparseVec> = (0..nw)
+            .map(|w| {
+                let mut a = g.normal_vec(dim, 1.0);
+                match w % 3 {
+                    // dense-ish message
+                    0 => {}
+                    // random sparsity (can be fully empty)
+                    1 => a.iter_mut().for_each(|v| {
+                        if g.bool() {
+                            *v = 0.0;
+                        }
+                    }),
+                    // all mass in one narrow stripe → most shards empty
+                    _ => {
+                        let lo = g.size(0, dim - 1);
+                        let hi = (lo + g.size(1, 16)).min(dim);
+                        for (i, v) in a.iter_mut().enumerate() {
+                            if i < lo || i >= hi {
+                                *v = 0.0;
+                            }
+                        }
+                    }
+                }
+                SparseVec::encode(&a)
+            })
+            .collect();
+        let scale = 1.0 / nw as f32;
+        let mut serial = vec![0.0f32; dim];
+        for sv in &msgs {
+            sv.add_into_scaled(&mut serial, scale);
+        }
+        let shards = g.size(1, 12); // may exceed dim
+        let chunk = dim.div_ceil(shards);
+        let mut sharded = vec![0.0f32; dim];
+        for (i, out) in sharded.chunks_mut(chunk).enumerate() {
+            for sv in &msgs {
+                sv.add_shard_into_scaled((i * chunk) as u32, out, scale);
+            }
+        }
+        for j in 0..dim {
+            if serial[j].to_bits() != sharded[j].to_bits() {
+                return Err(format!(
+                    "bit mismatch at {j}: {} vs {} (dim={dim} nw={nw} \
+                     shards={shards})",
+                    serial[j], sharded[j]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_worker_staleness_exact() {
     // whatever constant τ, the gradient applied at iteration t was computed
     // at t − τ
@@ -242,6 +303,7 @@ fn prop_json_roundtrip_arbitrary_runresults() {
                     iter: i,
                     time: g.f64(0.0, 1e4),
                     loss: g.f64(-10.0, 10.0),
+                    train_loss: g.f64(-10.0, 10.0),
                     tau: g.size(0, 9),
                     delta: g.f64(0.001, 1.0),
                     grad_norm: g.f64(0.0, 100.0),

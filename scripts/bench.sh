@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Run the five bench_* targets and consolidate one machine-readable
+# BENCH_pipeline.json at the repo root (ns/iter + bytes/s per shape) so
+# future PRs have a perf trajectory to compare against.
+#
+#   scripts/bench.sh                # fast mode (default; CI-sized)
+#   DECO_BENCH_FAST=0 scripts/bench.sh   # full measurement windows
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+: "${DECO_BENCH_FAST:=1}"
+if [ "$DECO_BENCH_FAST" = "0" ]; then
+  unset DECO_BENCH_FAST
+else
+  export DECO_BENCH_FAST
+fi
+
+jsonl="$(mktemp)"
+trap 'rm -f "$jsonl"' EXIT
+export DECO_BENCH_JSON="$jsonl"
+
+for target in bench_compress bench_deco bench_timesim bench_runtime bench_pipeline; do
+  echo "### cargo bench --bench $target"
+  cargo bench --bench "$target"
+done
+
+{
+  echo '{'
+  echo '  "generated_by": "scripts/bench.sh",'
+  echo "  \"host_parallelism\": $(nproc 2>/dev/null || echo 1),"
+  echo '  "results": ['
+  awk 'NR > 1 { print prev "," } { prev = "    " $0 } END { if (NR > 0) print prev }' "$jsonl"
+  echo '  ]'
+  echo '}'
+} > BENCH_pipeline.json
+
+echo "wrote BENCH_pipeline.json ($(grep -c '"name"' BENCH_pipeline.json) results)"
