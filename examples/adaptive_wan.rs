@@ -1,12 +1,15 @@
-//! Adaptive WAN training (the Fig. 6 scenario): DeCo-SGD under a
-//! regime-switching bandwidth trace, printing the (bandwidth, delta, tau)
-//! trajectory so you can watch the controller react to congestion episodes.
+//! Adaptive WAN training (the Fig. 6 scenario, now on a heterogeneous
+//! fabric): DeCo-SGD under a regime-switching bandwidth trace with one
+//! straggler worker (half bandwidth, 2x latency). The run is priced at the
+//! slowest worker's arrival, and the controller plans on the *monitored
+//! bottleneck* (a, b) — watch delta/tau react to both the congestion
+//! episodes and the straggler.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example adaptive_wan
 //! ```
 
-use deco::config::{ExperimentConfig, NetworkConfig, StopConfig};
+use deco::config::{ExperimentConfig, FabricSpec, NetworkConfig, StopConfig};
 use deco::exp::ExpEnv;
 use deco::netsim::TraceKind;
 use deco::strategy::StrategyKind;
@@ -20,7 +23,13 @@ fn main() -> Result<()> {
             seed: 99,
         },
         latency_s: 0.2,
+        // worker 0 is a straggler: half the bandwidth, double the latency;
+        // its link gates every synchronous aggregation
+        fabric: FabricSpec::Straggler { frac: 0.5, mult: 2.0 },
     };
+    let fabric = net.build_fabric(4)?;
+    let (a_bot, b_bot) = fabric.bottleneck(0.0);
+    let (a_mean, b_mean) = fabric.mean(0.0);
     let cfg = ExperimentConfig {
         task: "cnn_fmnist".into(),
         workers: 4,
@@ -41,7 +50,17 @@ fn main() -> Result<()> {
     };
     let mut env = ExpEnv::new();
     let res = env.run(&cfg)?;
-    println!("DeCo-SGD under regime-switching bandwidth (30/100/300 Mbps):\n");
+    println!(
+        "DeCo-SGD on a straggler fabric under regime-switching bandwidth \
+         (30/100/300 Mbps):"
+    );
+    println!(
+        "  t=0 bottleneck: {:.0} Mbps / {:.2}s   mean link: {:.0} Mbps / {:.2}s\n",
+        a_bot / 1e6,
+        b_bot,
+        a_mean / 1e6,
+        b_mean
+    );
     println!(
         "{:>5} {:>9} {:>12} {:>7} {:>5} {:>9}",
         "iter", "vtime", "bw_est Mbps", "delta", "tau", "loss"
@@ -60,7 +79,8 @@ fn main() -> Result<()> {
         );
     }
     println!(
-        "\n{} iters, {:.0}s virtual; delta adapted across bandwidth regimes",
+        "\n{} iters, {:.0}s virtual; delta adapted to the monitored \
+         bottleneck across bandwidth regimes",
         res.total_iters, res.total_time
     );
     Ok(())

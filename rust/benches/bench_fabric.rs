@@ -1,0 +1,57 @@
+//! Fabric hot path (DESIGN.md §Network-Fabric): `sync_arrival` across the
+//! worker counts the scalability experiments use, and the fabric
+//! virtual-clock tick versus the single-link clock — the per-iteration
+//! overhead the pipeline pays for per-worker pricing.
+//!
+//! `scripts/bench.sh` consolidates these into `BENCH_fabric.json`.
+
+use deco::coordinator::VirtualClock;
+use deco::netsim::{BandwidthTrace, Fabric, Link, TraceKind};
+use deco::util::bench::{black_box, Bench};
+
+/// Rebuild the clock periodically so the TC history stays bounded while
+/// the bench harness spins millions of ticks.
+const RESET_EVERY: usize = 100_000;
+
+fn bench_clock(b: &Bench, name: &str, make: impl Fn() -> VirtualClock) {
+    let mut clock = make();
+    b.bench(name, || {
+        if clock.iters() >= RESET_EVERY {
+            clock = make();
+        }
+        black_box(clock.tick(0.05, 2, 4_000_000));
+    });
+}
+
+fn main() {
+    println!("== bench_fabric (per-worker link pricing) ==");
+    let b = Bench::new("fabric");
+    for &n in &[4usize, 16, 32] {
+        let fabric = Fabric::homogeneous(
+            n,
+            BandwidthTrace::new(TraceKind::Sine {
+                mean_bps: 1e8,
+                amp_bps: 3e7,
+                period_s: 7.0,
+            }),
+            0.1,
+        );
+        let mut t = 0.0f64;
+        b.bench(&format!("sync_arrival/n{n}"), || {
+            t = (t + 0.05) % 1000.0;
+            black_box(fabric.sync_arrival(t, 5_000_000));
+        });
+    }
+    bench_clock(&b, "clock_tick/single_link", || {
+        VirtualClock::single_link(Link::new(BandwidthTrace::constant(1e8), 0.1))
+    });
+    for &n in &[4usize, 16, 32] {
+        bench_clock(&b, &format!("clock_tick/fabric_n{n}"), || {
+            VirtualClock::new(Fabric::homogeneous(
+                n,
+                BandwidthTrace::constant(1e8),
+                0.1,
+            ))
+        });
+    }
+}

@@ -7,7 +7,7 @@
 //! offline and the JSON codec is in-tree — see `util::json`.)
 
 use crate::deco::DecoInput;
-use crate::netsim::{BandwidthTrace, Link, TraceKind};
+use crate::netsim::{BandwidthTrace, Fabric, Link, TraceKind};
 use crate::strategy::StrategyKind;
 use crate::util::Json;
 use anyhow::{anyhow, Context, Result};
@@ -35,36 +35,109 @@ pub struct ExperimentConfig {
     pub clip_norm: Option<f64>,
 }
 
-#[derive(Clone, Debug)]
-pub struct NetworkConfig {
+/// How the per-worker [`Fabric`] is derived from the base trace/latency —
+/// the serde-friendly heterogeneity scenario layer (DESIGN.md
+/// §Network-Fabric).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum FabricSpec {
+    /// every worker gets an identical copy of the base link (bit-identical
+    /// to the former single shared link)
+    #[default]
+    Homogeneous,
+    /// worker 0 gets `frac`× the base bandwidth (lazily scaled trace) and
+    /// `mult`× the base latency
+    Straggler { frac: f64, mult: f64 },
+    /// explicit worker groups, each with its own trace kind and latency
+    /// (multi-region topologies); group sizes must sum to the run's worker
+    /// count
+    Regions { groups: Vec<RegionSpec> },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegionSpec {
+    pub workers: usize,
     pub trace: TraceKind,
     pub latency_s: f64,
 }
 
+#[derive(Clone, Debug)]
+pub struct NetworkConfig {
+    pub trace: TraceKind,
+    pub latency_s: f64,
+    /// per-worker heterogeneity applied on top of the base trace/latency
+    pub fabric: FabricSpec,
+}
+
 impl NetworkConfig {
+    /// Homogeneous network from a base trace + latency.
+    pub fn homogeneous(trace: TraceKind, latency_s: f64) -> Self {
+        Self { trace, latency_s, fabric: FabricSpec::Homogeneous }
+    }
+
+    /// The base link (region specs aside, the non-straggler link).
     pub fn link(&self) -> Link {
         Link::new(BandwidthTrace::new(self.trace.clone()), self.latency_s)
     }
 
-    /// Nominal mean bandwidth (bits/s) for fallback priors.
+    /// Realize the per-worker fabric for a run with `n` workers.
+    pub fn build_fabric(&self, n: usize) -> Result<Fabric> {
+        Ok(match &self.fabric {
+            FabricSpec::Homogeneous => Fabric::homogeneous(
+                n,
+                BandwidthTrace::new(self.trace.clone()),
+                self.latency_s,
+            ),
+            FabricSpec::Straggler { frac, mult } => {
+                if !(frac.is_finite() && mult.is_finite())
+                    || *frac <= 0.0
+                    || *mult <= 0.0
+                {
+                    return Err(anyhow!(
+                        "straggler fabric needs finite frac > 0 and \
+                         mult > 0 (got frac={frac}, mult={mult})"
+                    ));
+                }
+                Fabric::with_straggler(
+                    n,
+                    BandwidthTrace::new(self.trace.clone()),
+                    self.latency_s,
+                    *frac,
+                    *mult,
+                )
+            }
+            FabricSpec::Regions { groups } => {
+                let total: usize = groups.iter().map(|g| g.workers).sum();
+                if total != n {
+                    return Err(anyhow!(
+                        "fabric regions cover {total} workers but the run \
+                         has {n}"
+                    ));
+                }
+                let mut links = Vec::with_capacity(n);
+                for g in groups {
+                    for _ in 0..g.workers {
+                        links.push(Link::new(
+                            BandwidthTrace::new(g.trace.clone()),
+                            g.latency_s,
+                        ));
+                    }
+                }
+                Fabric::new(links)
+            }
+        })
+    }
+
+    /// Nominal mean bandwidth (bits/s) of the base trace, for fallback
+    /// priors.
     pub fn nominal_bps(&self) -> f64 {
-        match &self.trace {
-            TraceKind::Constant { bps } => *bps,
-            TraceKind::Sine { mean_bps, .. } => *mean_bps,
-            TraceKind::Ou { mean_bps, .. } => *mean_bps,
-            TraceKind::Markov { levels_bps, .. } => {
-                levels_bps.iter().sum::<f64>() / levels_bps.len().max(1) as f64
-            }
-            TraceKind::Samples { bps, .. } => {
-                bps.iter().sum::<f64>() / bps.len().max(1) as f64
-            }
-        }
+        nominal_of(&self.trace)
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("trace", trace_to_json(&self.trace)),
             ("latency_s", Json::num(self.latency_s)),
+            ("fabric", fabric_to_json(&self.fabric)),
         ])
     }
 
@@ -72,7 +145,26 @@ impl NetworkConfig {
         Ok(Self {
             trace: trace_from_json(j.req("trace").map_err(err)?)?,
             latency_s: j.req_f64("latency_s").map_err(err)?,
+            fabric: match j.get("fabric") {
+                Some(f) => fabric_from_json(f)?,
+                None => FabricSpec::Homogeneous,
+            },
         })
+    }
+}
+
+fn nominal_of(trace: &TraceKind) -> f64 {
+    match trace {
+        TraceKind::Constant { bps } => *bps,
+        TraceKind::Sine { mean_bps, .. } => *mean_bps,
+        TraceKind::Ou { mean_bps, .. } => *mean_bps,
+        TraceKind::Markov { levels_bps, .. } => {
+            levels_bps.iter().sum::<f64>() / levels_bps.len().max(1) as f64
+        }
+        TraceKind::Samples { bps, .. } => {
+            bps.iter().sum::<f64>() / bps.len().max(1) as f64
+        }
+        TraceKind::Scaled { inner, frac } => frac * nominal_of(inner),
     }
 }
 
@@ -124,7 +216,65 @@ pub fn trace_to_json(t: &TraceKind) -> Json {
             ("times_s", Json::arr(times_s.iter().map(|&v| Json::num(v)))),
             ("bps", Json::arr(bps.iter().map(|&v| Json::num(v)))),
         ]),
+        TraceKind::Scaled { inner, frac } => Json::obj(vec![
+            ("kind", Json::str("scaled")),
+            ("frac", Json::num(*frac)),
+            ("inner", trace_to_json(inner)),
+        ]),
     }
+}
+
+pub fn fabric_to_json(f: &FabricSpec) -> Json {
+    match f {
+        FabricSpec::Homogeneous => {
+            Json::obj(vec![("kind", Json::str("homogeneous"))])
+        }
+        FabricSpec::Straggler { frac, mult } => Json::obj(vec![
+            ("kind", Json::str("straggler")),
+            ("frac", Json::num(*frac)),
+            ("mult", Json::num(*mult)),
+        ]),
+        FabricSpec::Regions { groups } => Json::obj(vec![
+            ("kind", Json::str("regions")),
+            (
+                "groups",
+                Json::arr(groups.iter().map(|g| {
+                    Json::obj(vec![
+                        ("workers", Json::num(g.workers as f64)),
+                        ("trace", trace_to_json(&g.trace)),
+                        ("latency_s", Json::num(g.latency_s)),
+                    ])
+                })),
+            ),
+        ]),
+    }
+}
+
+pub fn fabric_from_json(j: &Json) -> Result<FabricSpec> {
+    Ok(match j.req_str("kind").map_err(err)? {
+        "homogeneous" => FabricSpec::Homogeneous,
+        "straggler" => FabricSpec::Straggler {
+            frac: j.req_f64("frac").map_err(err)?,
+            mult: j.req_f64("mult").map_err(err)?,
+        },
+        "regions" => {
+            let arr = j
+                .req("groups")
+                .map_err(err)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("'groups' not an array"))?;
+            let mut groups = Vec::with_capacity(arr.len());
+            for g in arr {
+                groups.push(RegionSpec {
+                    workers: g.req_usize("workers").map_err(err)?,
+                    trace: trace_from_json(g.req("trace").map_err(err)?)?,
+                    latency_s: g.req_f64("latency_s").map_err(err)?,
+                });
+            }
+            FabricSpec::Regions { groups }
+        }
+        other => return Err(anyhow!("unknown fabric kind '{other}'")),
+    })
 }
 
 pub fn trace_from_json(j: &Json) -> Result<TraceKind> {
@@ -157,6 +307,10 @@ pub fn trace_from_json(j: &Json) -> Result<TraceKind> {
             seed: j.req_f64("seed").map_err(err)? as u64,
         },
         "samples" => TraceKind::Samples { times_s: nums("times_s")?, bps: nums("bps")? },
+        "scaled" => TraceKind::Scaled {
+            inner: Box::new(trace_from_json(j.req("inner").map_err(err)?)?),
+            frac: j.req_f64("frac").map_err(err)?,
+        },
         other => return Err(anyhow!("unknown trace kind '{other}'")),
     })
 }
@@ -310,6 +464,7 @@ impl ExperimentConfig {
             seed: self.seed,
             fallback: self.fallback(s_g, t_comp_prior),
             monitor_alpha: 0.3,
+            plan: crate::strategy::PlanBasis::Bottleneck,
             threads: None,
         }
     }
@@ -325,6 +480,7 @@ pub fn wan_network(mean_bps: f64, latency_s: f64, seed: u64) -> NetworkConfig {
             seed,
         },
         latency_s,
+        fabric: FabricSpec::Homogeneous,
     }
 }
 
@@ -415,8 +571,112 @@ mod tests {
                 seed: 0,
             },
             latency_s: 0.1,
+            fabric: FabricSpec::Homogeneous,
         };
         assert_eq!(c.nominal_bps(), 2e8);
+        // scaled traces report the scaled nominal
+        let s = NetworkConfig::homogeneous(
+            TraceKind::Scaled {
+                inner: Box::new(TraceKind::Constant { bps: 2e8 }),
+                frac: 0.25,
+            },
+            0.1,
+        );
+        assert_eq!(s.nominal_bps(), 5e7);
+    }
+
+    #[test]
+    fn fabric_specs_roundtrip() {
+        for f in [
+            FabricSpec::Homogeneous,
+            FabricSpec::Straggler { frac: 0.25, mult: 2.0 },
+            FabricSpec::Regions {
+                groups: vec![
+                    RegionSpec {
+                        workers: 2,
+                        trace: TraceKind::Constant { bps: 1e8 },
+                        latency_s: 0.05,
+                    },
+                    RegionSpec {
+                        workers: 2,
+                        trace: TraceKind::Ou {
+                            mean_bps: 5e7,
+                            sigma_bps: 1e7,
+                            theta: 0.2,
+                            seed: 3,
+                        },
+                        latency_s: 0.4,
+                    },
+                ],
+            },
+        ] {
+            let j = fabric_to_json(&f);
+            let text = j.to_string_pretty();
+            let back =
+                fabric_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn network_config_fabric_roundtrips_and_defaults() {
+        let mut c = wan_network(1e8, 0.2, 1);
+        c.fabric = FabricSpec::Straggler { frac: 0.1, mult: 3.0 };
+        let back = NetworkConfig::from_json(
+            &Json::parse(&c.to_json().to_string_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.fabric, c.fabric);
+        // configs written before the fabric layer default to homogeneous
+        let legacy = Json::parse(
+            "{\"trace\": {\"kind\": \"constant\", \"bps\": 1e8}, \
+             \"latency_s\": 0.2}",
+        )
+        .unwrap();
+        let parsed = NetworkConfig::from_json(&legacy).unwrap();
+        assert_eq!(parsed.fabric, FabricSpec::Homogeneous);
+    }
+
+    #[test]
+    fn build_fabric_realizes_specs() {
+        let mut c = NetworkConfig::homogeneous(
+            TraceKind::Constant { bps: 1e8 },
+            0.1,
+        );
+        let f = c.build_fabric(4).unwrap();
+        assert_eq!(f.workers(), 4);
+        assert_eq!(f.bottleneck(0.0), (1e8, 0.1));
+
+        c.fabric = FabricSpec::Straggler { frac: 0.5, mult: 2.0 };
+        let f = c.build_fabric(4).unwrap();
+        assert_eq!(f.bottleneck(0.0), (5e7, 0.2));
+
+        c.fabric = FabricSpec::Regions {
+            groups: vec![
+                RegionSpec {
+                    workers: 3,
+                    trace: TraceKind::Constant { bps: 2e8 },
+                    latency_s: 0.05,
+                },
+                RegionSpec {
+                    workers: 1,
+                    trace: TraceKind::Constant { bps: 2e7 },
+                    latency_s: 0.3,
+                },
+            ],
+        };
+        let f = c.build_fabric(4).unwrap();
+        assert_eq!(f.bottleneck(0.0), (2e7, 0.3));
+        // group sizes must cover the worker count exactly
+        assert!(c.build_fabric(5).is_err());
+
+        // degenerate straggler values from user config error, not panic
+        for (frac, mult) in
+            [(0.0, 2.0), (-0.5, 1.0), (0.5, 0.0), (f64::NAN, 1.0)]
+        {
+            c.fabric = FabricSpec::Straggler { frac, mult };
+            assert!(c.build_fabric(4).is_err(), "frac={frac} mult={mult}");
+        }
     }
 
     #[test]

@@ -1,40 +1,106 @@
-//! Virtual wall clock — the incremental, trace-driven form of the Eq. 19
-//! recurrence. The training loop advances it one iteration at a time with
-//! whatever (T_comp, τ, wire bits) that iteration actually used, which is
-//! how DeCo's *dynamic* (τ_t, δ_t) trajectory gets faithfully priced.
+//! Virtual wall clock — the incremental, trace-driven, **fabric**-driven
+//! form of the Eq. 19 recurrence. The training loop advances it one
+//! iteration at a time with whatever (T_comp, τ, wire bits) that iteration
+//! actually used, which is how DeCo's *dynamic* (τ_t, δ_t) trajectory gets
+//! faithfully priced.
+//!
+//! Per-worker semantics (DESIGN.md §Network-Fabric): every worker i sends
+//! its message over its own [`Link`], so each keeps its own transmission
+//! timeline `TM_k^i`; the synchronous aggregation of iteration k completes
+//! at the **slowest** worker's arrival `TC_k = max_i (TM_k^i + b_i)`, and
+//! that sync arrival is what the delayed-gradient wait `TC_{k−1−τ}` sees.
+//! With a homogeneous fabric every per-worker timeline is identical, so the
+//! recurrence is bit-identical to the former single-link clock (enforced by
+//! `tests/fabric.rs`). This is THE Eq. 19 implementation:
+//! `timesim::EventSim::run_on_fabric` / `run_on_link` delegate here.
 
-use crate::netsim::Link;
+use crate::netsim::{Fabric, Link};
 
 #[derive(Debug)]
 pub struct VirtualClock {
-    link: Link,
-    /// TS_k, TM_k of the previous iteration
+    fabric: Fabric,
+    /// all links share one trace config + latency (homogeneous fabric):
+    /// every per-worker timeline is provably identical, so one transfer
+    /// integration per tick suffices — the hot-path fast path that keeps
+    /// per-worker pricing free for the paper's default scenarios
+    uniform: bool,
+    /// TS_k of the previous iteration (computation is in lockstep)
     ts_prev: f64,
-    tm_prev: f64,
-    /// full TC history (indexed k-1) for the τ-delayed max
+    /// per-worker TM_k of the previous iteration
+    tm_prev: Vec<f64>,
+    /// full sync-arrival history TC_k (indexed k-1) for the τ-delayed max
     tc: Vec<f64>,
+    /// per-worker times of the last tick (metrics / per-link monitoring)
+    worker_last: Vec<WorkerTick>,
+    /// cumulative per-worker transmission seconds (straggler accounting)
+    tx_total: Vec<f64>,
 }
 
-/// What one tick reports back to the trainer.
+/// What one tick reports back to the trainer (the slowest worker's view —
+/// the pair that gates the aggregation).
 #[derive(Clone, Copy, Debug)]
 pub struct Tick {
     /// computation end of iteration k
     pub ts: f64,
-    /// transmission end (what the monitor samples bandwidth from)
+    /// transmission end of the slowest-arriving worker
     pub tm: f64,
-    /// arrival — the iteration's contribution to total training time
+    /// sync arrival — the iteration's contribution to total training time
     pub tc: f64,
-    /// pure transmission duration of this iteration's message
+    /// pure transmission duration of the slowest-arriving worker's message
+    pub tx_secs: f64,
+}
+
+/// One worker's timeline entry for the last tick.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerTick {
+    /// transmission end TM_k^i
+    pub tm: f64,
+    /// arrival TC_k^i = TM_k^i + b_i
+    pub tc: f64,
+    /// pure transmission duration of this worker's message
     pub tx_secs: f64,
 }
 
 impl VirtualClock {
-    pub fn new(link: Link) -> Self {
-        Self { link, ts_prev: 0.0, tm_prev: 0.0, tc: Vec::new() }
+    pub fn new(fabric: Fabric) -> Self {
+        let n = fabric.workers();
+        let first = fabric.link(0);
+        let uniform = fabric.links().iter().all(|l| {
+            l.latency() == first.latency()
+                && l.trace().kind() == first.trace().kind()
+        });
+        Self {
+            fabric,
+            uniform,
+            ts_prev: 0.0,
+            tm_prev: vec![0.0; n],
+            tc: Vec::new(),
+            worker_last: vec![WorkerTick::default(); n],
+            tx_total: vec![0.0; n],
+        }
     }
 
-    pub fn link(&self) -> &Link {
-        &self.link
+    /// Single-link compatibility constructor (a 1-worker fabric).
+    pub fn single_link(link: Link) -> Self {
+        Self::new(Fabric::new(vec![link]))
+    }
+
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
+    pub fn workers(&self) -> usize {
+        self.tm_prev.len()
+    }
+
+    /// Per-worker (TM, TC, tx) of the last tick.
+    pub fn worker_ticks(&self) -> &[WorkerTick] {
+        &self.worker_last
+    }
+
+    /// Cumulative transmission seconds per worker.
+    pub fn tx_totals(&self) -> &[f64] {
+        &self.tx_total
     }
 
     /// Advance one iteration (k = self.tc.len() + 1, 1-based).
@@ -46,20 +112,56 @@ impl VirtualClock {
             0.0
         };
         let ts = t_comp + tc_delayed.max(self.ts_prev);
-        let start = self.tm_prev.max(ts);
-        let tm = self.link.transfer_end(start, bits);
-        let tc = tm + self.link.latency();
+        let slowest = if self.uniform {
+            // identical links + identical histories (by induction from the
+            // all-zero start): worker 0's times ARE every worker's times —
+            // one transfer integration instead of n, bit-identical result
+            let link = self.fabric.link(0);
+            let start = self.tm_prev[0].max(ts);
+            let tm = link.transfer_end(start, bits);
+            let wt =
+                WorkerTick { tm, tc: tm + link.latency(), tx_secs: tm - start };
+            self.tm_prev.fill(tm);
+            for (total, last) in
+                self.tx_total.iter_mut().zip(self.worker_last.iter_mut())
+            {
+                *total += wt.tx_secs;
+                *last = wt;
+            }
+            wt
+        } else {
+            let mut slowest = WorkerTick {
+                tm: f64::NEG_INFINITY,
+                tc: f64::NEG_INFINITY,
+                tx_secs: 0.0,
+            };
+            for (i, link) in self.fabric.links().iter().enumerate() {
+                let start = self.tm_prev[i].max(ts);
+                let tm = link.transfer_end(start, bits);
+                let wt = WorkerTick {
+                    tm,
+                    tc: tm + link.latency(),
+                    tx_secs: tm - start,
+                };
+                self.tm_prev[i] = tm;
+                self.tx_total[i] += wt.tx_secs;
+                self.worker_last[i] = wt;
+                if wt.tc > slowest.tc {
+                    slowest = wt;
+                }
+            }
+            slowest
+        };
         self.ts_prev = ts;
-        self.tm_prev = tm;
-        self.tc.push(tc);
-        Tick { ts, tm, tc, tx_secs: tm - start }
+        self.tc.push(slowest.tc);
+        Tick { ts, tm: slowest.tm, tc: slowest.tc, tx_secs: slowest.tx_secs }
     }
 
     pub fn iters(&self) -> usize {
         self.tc.len()
     }
 
-    /// Total elapsed virtual time (TC of the last iteration).
+    /// Total elapsed virtual time (sync TC of the last iteration).
     pub fn now(&self) -> f64 {
         *self.tc.last().unwrap_or(&0.0)
     }
@@ -81,7 +183,7 @@ mod tests {
             t_comp: 0.05,
             s_g: 1e9,
         };
-        let mut clock = VirtualClock::new(Link::new(
+        let mut clock = VirtualClock::single_link(Link::new(
             BandwidthTrace::constant(p.a),
             p.b,
         ));
@@ -100,7 +202,7 @@ mod tests {
 
     #[test]
     fn time_is_monotone_under_dynamic_params() {
-        let mut clock = VirtualClock::new(Link::new(
+        let mut clock = VirtualClock::single_link(Link::new(
             BandwidthTrace::constant(5e7),
             0.1,
         ));
@@ -113,5 +215,67 @@ mod tests {
             assert!(t.tm >= t.ts);
             prev = t.tc;
         }
+    }
+
+    #[test]
+    fn homogeneous_fabric_bit_identical_to_single_link() {
+        let trace = BandwidthTrace::constant(2e7);
+        let link = Link::new(trace.clone(), 0.15);
+        let mut single = VirtualClock::single_link(link.clone());
+        let mut fab = VirtualClock::new(Fabric::replicate(link, 5));
+        // semantically identical fabric that defeats the uniform detector
+        // (one link wears a no-op Scaled(1.0) wrapper), forcing the general
+        // per-link loop — it must match the fast path bit-for-bit
+        let mut mixed = VirtualClock::new(Fabric::new(vec![
+            Link::new(trace.clone(), 0.15),
+            Link::new(trace.clone(), 0.15),
+            Link::new(trace.clone(), 0.15),
+            Link::new(trace.clone(), 0.15),
+            Link::new(trace.scaled(1.0), 0.15),
+        ]));
+        for k in 1..=400usize {
+            let tau = k % 3;
+            let bits = 500_000 + (k as u64 % 11) * 250_000;
+            let a = single.tick(0.07, tau, bits);
+            let b = fab.tick(0.07, tau, bits);
+            let c = mixed.tick(0.07, tau, bits);
+            assert_eq!(a.ts.to_bits(), b.ts.to_bits(), "k={k}");
+            assert_eq!(a.tm.to_bits(), b.tm.to_bits(), "k={k}");
+            assert_eq!(a.tc.to_bits(), b.tc.to_bits(), "k={k}");
+            assert_eq!(a.tx_secs.to_bits(), b.tx_secs.to_bits(), "k={k}");
+            assert_eq!(a.tc.to_bits(), c.tc.to_bits(), "k={k} (general loop)");
+            assert_eq!(a.tm.to_bits(), c.tm.to_bits(), "k={k} (general loop)");
+        }
+        assert_eq!(single.now().to_bits(), fab.now().to_bits());
+        assert_eq!(single.now().to_bits(), mixed.now().to_bits());
+    }
+
+    #[test]
+    fn straggler_gates_sync_arrival() {
+        let fabric = Fabric::with_straggler(
+            4,
+            BandwidthTrace::constant(1e8),
+            0.1,
+            0.25,
+            2.0,
+        );
+        let mut clock = VirtualClock::new(fabric);
+        for _ in 0..50 {
+            let tick = clock.tick(0.05, 1, 4_000_000);
+            let wts = clock.worker_ticks();
+            // the sync arrival is exactly the slowest worker's arrival
+            let max_tc =
+                wts.iter().map(|w| w.tc).fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(tick.tc.to_bits(), max_tc.to_bits());
+            // worker 0 (quarter bandwidth, double latency) is the straggler
+            assert_eq!(tick.tc.to_bits(), wts[0].tc.to_bits());
+            for w in &wts[1..] {
+                assert!(w.tc <= tick.tc);
+                assert!(w.tx_secs < wts[0].tx_secs);
+            }
+        }
+        // the straggler accumulated 4x the healthy transmission time
+        let tx = clock.tx_totals();
+        assert!((tx[0] / tx[1] - 4.0).abs() < 1e-6, "{tx:?}");
     }
 }

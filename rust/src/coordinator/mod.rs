@@ -8,9 +8,12 @@
 //! gradients come from a [`crate::optim::GradOracle`] (PJRT-backed for the
 //! real models, analytic for the theory experiments). Time is *virtual*:
 //! computation cost is measured (or pinned) per iteration and communication
-//! cost is integrated over the bandwidth trace by the Eq. 19 recurrence —
-//! exactly the quantity the paper's tables report — while the training
-//! mathematics (losses, gradients, EF states) is executed for real.
+//! cost is priced on a per-worker [`crate::netsim::Fabric`] by the
+//! fabric-driven Eq. 19 recurrence (each worker transmits over its own
+//! link; the aggregation completes at the slowest arrival — DESIGN.md
+//! §Network-Fabric) — exactly the quantity the paper's tables report —
+//! while the training mathematics (losses, gradients, EF states) is
+//! executed for real.
 //!
 //! Real wall-clock execution is parallel (DESIGN.md §Parallel-Execution):
 //! the per-worker phase (gradient + clip + enqueue + EF/Top-k) fans out
@@ -22,6 +25,6 @@ pub mod clock;
 pub mod pipeline;
 pub mod worker;
 
-pub use clock::VirtualClock;
+pub use clock::{Tick, VirtualClock, WorkerTick};
 pub use pipeline::{TrainLoop, TrainParams};
 pub use worker::WorkerState;

@@ -16,9 +16,12 @@
 //!    worker's message in fixed worker order per shard so the result is
 //!    bit-identical to the serial reduction (DESIGN.md
 //!    §Parallel-Execution);
-//! 5. the virtual clock prices the iteration via the Eq. 19 recurrence over
-//!    the bandwidth trace; the monitor observes the transfer and feeds the
-//!    next DeCo solve.
+//! 5. the virtual clock prices the iteration via the fabric-driven Eq. 19
+//!    recurrence — every worker transmits over its own [`Fabric`] link and
+//!    the aggregation completes at the slowest arrival — and each link's
+//!    monitor observes its own transfer, feeding the next DeCo solve with
+//!    the monitored bottleneck (or mean-link) view (DESIGN.md
+//!    §Network-Fabric).
 //!
 //! Losses/gradients are *real* (PJRT or analytic oracle); only time is
 //! virtual — see DESIGN.md §Hardware-Adaptation. The steady state is
@@ -29,9 +32,9 @@ use super::{VirtualClock, WorkerState};
 use crate::compress::{Compressor, CompressorCache};
 use crate::deco::DecoInput;
 use crate::metrics::{Record, RunResult};
-use crate::netsim::{Link, NetworkMonitor};
+use crate::netsim::{Fabric, FabricMonitor, Link};
 use crate::optim::GradOracle;
-use crate::strategy::{Strategy, StrategyCtx};
+use crate::strategy::{PlanBasis, Strategy, StrategyCtx};
 use crate::util::stats::l2_norm;
 use crate::util::WorkerPool;
 
@@ -73,6 +76,11 @@ pub struct TrainParams {
     /// network priors used before the monitor has samples
     pub fallback: DecoInput,
     pub monitor_alpha: f64,
+    /// which aggregate of the per-link monitors the strategy plans on:
+    /// the bottleneck `(min a, max b)` (default — the pair that gates the
+    /// synchronous aggregation) or the heterogeneity-blind mean link (the
+    /// `exp hetero` control arm). Identical on a homogeneous fabric.
+    pub plan: PlanBasis,
     /// worker-pool size; `None` = machine default
     /// ([`WorkerPool::default_threads`]), `Some(1)` = fully serial. With
     /// `t_comp_override` pinned, results are bit-identical at every
@@ -97,6 +105,7 @@ impl Default for TrainParams {
             seed: 0,
             fallback: DecoInput { s_g: 1e9, a: 1e8, b: 0.1, t_comp: 0.1 },
             monitor_alpha: 0.3,
+            plan: PlanBasis::Bottleneck,
             threads: None,
         }
     }
@@ -106,7 +115,7 @@ pub struct TrainLoop<O: GradOracle> {
     oracle: O,
     strategy: Box<dyn Strategy>,
     clock: VirtualClock,
-    monitor: NetworkMonitor,
+    monitor: FabricMonitor,
     workers: Vec<WorkerState>,
     /// the global model (flat, padded)
     x: Vec<f32>,
@@ -120,21 +129,40 @@ pub struct TrainLoop<O: GradOracle> {
 }
 
 impl<O: GradOracle> TrainLoop<O> {
+    /// Single shared link for all workers — the homogeneous compatibility
+    /// constructor: builds an n-way replicated [`Fabric`], which prices
+    /// bit-identically to the former single-link path.
     pub fn new(
         oracle: O,
         strategy: Box<dyn Strategy>,
         link: Link,
         params: TrainParams,
     ) -> Self {
+        let n = oracle.workers();
+        Self::with_fabric(oracle, strategy, Fabric::replicate(link, n), params)
+    }
+
+    /// One [`Fabric`] link per worker — the general heterogeneous form.
+    pub fn with_fabric(
+        oracle: O,
+        strategy: Box<dyn Strategy>,
+        fabric: Fabric,
+        params: TrainParams,
+    ) -> Self {
         let dim = oracle.dim();
         let n = oracle.workers();
+        assert_eq!(
+            fabric.workers(),
+            n,
+            "fabric must have exactly one link per worker"
+        );
         let x = oracle.init();
         assert_eq!(x.len(), dim);
         let workers = (0..n)
             .map(|i| WorkerState::new(i, dim, params.seed ^ 0x77))
             .collect();
         let s_g = params.s_g_override.unwrap_or(dim as f64 * 32.0);
-        let monitor = NetworkMonitor::new(params.monitor_alpha);
+        let monitor = FabricMonitor::new(n, params.monitor_alpha, params.seed);
         let pool = match params.threads {
             Some(t) => WorkerPool::new(t),
             None => WorkerPool::with_default_parallelism(),
@@ -142,7 +170,7 @@ impl<O: GradOracle> TrainLoop<O> {
         Self {
             oracle,
             strategy,
-            clock: VirtualClock::new(link),
+            clock: VirtualClock::new(fabric),
             monitor,
             workers,
             x,
@@ -158,8 +186,13 @@ impl<O: GradOracle> TrainLoop<O> {
         &self.x
     }
 
-    pub fn monitor(&self) -> &NetworkMonitor {
+    pub fn monitor(&self) -> &FabricMonitor {
         &self.monitor
+    }
+
+    /// The virtual clock (per-worker timelines, sync arrivals).
+    pub fn clock(&self) -> &VirtualClock {
+        &self.clock
     }
 
     /// Pool size this loop runs its phases on.
@@ -186,6 +219,7 @@ impl<O: GradOracle> TrainLoop<O> {
                 s_g: self.s_g,
                 grad_norm: last_grad_norm,
                 fallback: self.params.fallback,
+                plan: self.params.plan,
             };
             let (tau, delta) = self.strategy.params(&ctx);
 
@@ -287,10 +321,19 @@ impl<O: GradOracle> TrainLoop<O> {
                 (proxy_bits as f64 * scale) as u64
             };
             let tick = self.clock.tick(t_comp, tau, bits);
-            if bits > 0 && tick.tx_secs > 0.0 {
-                self.monitor.observe_transfer(bits, tick.tx_secs);
+            // each worker's link monitor observes its own transfer and
+            // latency — on a homogeneous fabric every estimator sees the
+            // same stream the former single monitor did
+            if bits > 0 {
+                for (i, wt) in self.clock.worker_ticks().iter().enumerate() {
+                    if wt.tx_secs > 0.0 {
+                        self.monitor.observe_transfer(i, bits, wt.tx_secs);
+                    }
+                }
             }
-            self.monitor.observe_latency(self.clock.link().latency());
+            for (i, link) in self.clock.fabric().links().iter().enumerate() {
+                self.monitor.observe_latency_for(i, link.latency());
+            }
             self.monitor.observe_compute(t_comp);
 
             // 6. metrics + stopping. The average training loss doubles as a

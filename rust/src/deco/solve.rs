@@ -17,6 +17,42 @@ pub struct DecoInput {
     pub t_comp: f64,
 }
 
+impl DecoInput {
+    /// Plan on the **bottleneck** of per-link `(a, b)` pairs — min
+    /// bandwidth, max latency: the link that gates the synchronous
+    /// aggregation on a heterogeneous fabric (DESIGN.md §Network-Fabric).
+    pub fn bottleneck(
+        s_g: f64,
+        t_comp: f64,
+        links: impl IntoIterator<Item = (f64, f64)>,
+    ) -> Self {
+        let (mut a, mut b) = (f64::INFINITY, f64::NEG_INFINITY);
+        for (ai, bi) in links {
+            a = a.min(ai);
+            b = b.max(bi);
+        }
+        assert!(a.is_finite() && b.is_finite(), "needs at least one link");
+        Self { s_g, a, b, t_comp }
+    }
+
+    /// Plan on the **mean link** — what a heterogeneity-blind controller
+    /// sees (the `exp hetero` control arm).
+    pub fn mean_link(
+        s_g: f64,
+        t_comp: f64,
+        links: impl IntoIterator<Item = (f64, f64)>,
+    ) -> Self {
+        let (mut sa, mut sb, mut n) = (0.0, 0.0, 0usize);
+        for (ai, bi) in links {
+            sa += ai;
+            sb += bi;
+            n += 1;
+        }
+        assert!(n > 0, "needs at least one link");
+        Self { s_g, a: sa / n as f64, b: sb / n as f64, t_comp }
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DecoOutput {
     pub tau: usize,
@@ -189,6 +225,28 @@ mod tests {
             "T_avg={tavg} != T_comp={}",
             c.t_comp
         );
+    }
+
+    #[test]
+    fn bottleneck_and_mean_link_inputs() {
+        let links = [(1e7, 0.9), (1e8, 0.1), (1e8, 0.1), (1e8, 0.1)];
+        let bot = DecoInput::bottleneck(1e9, 0.2, links);
+        assert_eq!(bot.a, 1e7);
+        assert_eq!(bot.b, 0.9);
+        let mean = DecoInput::mean_link(1e9, 0.2, links);
+        assert!((mean.a - 7.75e7).abs() < 1.0);
+        assert!((mean.b - 0.3).abs() < 1e-12);
+        // blind planning is strictly more optimistic under a straggler: it
+        // tolerates a larger delta than the gating link can afford
+        let d_bot = solve(&bot).delta;
+        let d_mean = solve(&mean).delta;
+        assert!(d_mean > d_bot, "mean {d_mean} <= bottleneck {d_bot}");
+        // identical links: the two views coincide
+        let homo = [(1e8, 0.1); 4];
+        let hb = DecoInput::bottleneck(1e9, 0.2, homo);
+        let hm = DecoInput::mean_link(1e9, 0.2, homo);
+        assert_eq!(hb.a, hm.a);
+        assert_eq!(hb.b, hm.b);
     }
 
     #[test]

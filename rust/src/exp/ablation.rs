@@ -37,14 +37,14 @@ pub fn e_update(out_csv: &mut String) -> anyhow::Result<Vec<Vec<String>>> {
     let mut env = ExpEnv::new();
     env.verbose = false;
     let task = quad_task();
-    let net = NetworkConfig {
-        trace: crate::netsim::TraceKind::Markov {
+    let net = NetworkConfig::homogeneous(
+        crate::netsim::TraceKind::Markov {
             levels_bps: vec![2e7, 1e8, 4e8],
             dwell_s: 25.0,
             seed: 5,
         },
-        latency_s: 0.2,
-    };
+        0.2,
+    );
     let mut rows = Vec::new();
     for e in [1usize, 5, 20, 100, usize::MAX / 2] {
         let label = if e > 1_000_000 { "inf (Cocktail)".to_string() } else { e.to_string() };
@@ -200,15 +200,20 @@ pub fn wire(out_csv: &mut String) -> anyhow::Result<Vec<Vec<String>>> {
     Ok(rows)
 }
 
-/// Heterogeneity: straggler fabric, DeCo planning on nominal vs bottleneck.
+/// Heterogeneity: straggler fabric, DeCo planning on the mean link vs the
+/// bottleneck. This is the analytic (single-transfer) view; `exp hetero`
+/// runs the full severity × strategy training sweep.
 pub fn heterogeneity(out_csv: &mut String) -> Vec<Vec<String>> {
     use crate::netsim::BandwidthTrace;
     let n = 4;
-    let bits = (0.05 * 124e6 * 32.0) as u64;
+    let s_g = 124e6 * 32.0;
+    let bits = (0.05 * s_g) as u64;
     let mut rows = Vec::new();
-    for (label, frac, mult) in
-        [("homogeneous", 1.0, 1.0), ("straggler 1/4 bw", 0.25, 1.0), ("straggler 1/4 bw + 2x lat", 0.25, 2.0)]
-    {
+    for (label, frac, mult) in [
+        ("homogeneous", 1.0, 1.0),
+        ("straggler 1/4 bw", 0.25, 1.0),
+        ("straggler 1/4 bw + 2x lat", 0.25, 2.0),
+    ] {
         let fabric = Fabric::with_straggler(
             n,
             BandwidthTrace::constant(1e8),
@@ -216,19 +221,23 @@ pub fn heterogeneity(out_csv: &mut String) -> Vec<Vec<String>> {
             frac,
             mult,
         );
-        let healthy = fabric.link(1).arrival(0.0, bits) ;
+        let healthy = fabric.link(1).arrival(0.0, bits);
         let sync = fabric.sync_arrival(0.0, bits);
         let (a_bot, b_bot) = fabric.bottleneck(0.0);
-        let plan = solve(&DecoInput { s_g: 124e6 * 32.0, a: a_bot, b: b_bot, t_comp: 0.35 });
+        let plan = solve(&DecoInput { s_g, a: a_bot, b: b_bot, t_comp: 0.35 });
+        let (a_mean, b_mean) = fabric.mean(0.0);
+        let blind =
+            solve(&DecoInput { s_g, a: a_mean, b: b_mean, t_comp: 0.35 });
         out_csv.push_str(&format!(
-            "heterogeneity,{label},{sync:.3},{healthy:.3},{},{:.4}\n",
-            plan.tau, plan.delta
+            "heterogeneity,{label},{sync:.3},{healthy:.3},{},{:.4},{},{:.4}\n",
+            plan.tau, plan.delta, blind.tau, blind.delta
         ));
         rows.push(vec![
             label.into(),
-            format!("{:.2}s", sync),
-            format!("{:.2}s", healthy),
+            format!("{sync:.2}s"),
+            format!("{healthy:.2}s"),
             format!("tau={} delta={:.4}", plan.tau, plan.delta),
+            format!("tau={} delta={:.4}", blind.tau, blind.delta),
         ]);
     }
     rows
@@ -276,7 +285,13 @@ pub fn main(which: &str) -> anyhow::Result<()> {
         println!(
             "{}",
             format_table(
-                &["fabric", "sync arrival", "healthy link", "DeCo@bottleneck"],
+                &[
+                    "fabric",
+                    "sync arrival",
+                    "healthy link",
+                    "DeCo@bottleneck",
+                    "DeCo@mean-link",
+                ],
                 &heterogeneity(&mut csv)
             )
         );

@@ -24,14 +24,14 @@ pub fn main(tasks: &[String], scale: f64, workers: usize) -> anyhow::Result<()> 
     for task in &selected {
         // paper Sec. 5.2 network: ~200 ms latency, dynamic sub-Gbps
         // bandwidth drifting on tens of seconds (their Fig. 6 traces)
-        let net = crate::config::NetworkConfig {
-            trace: crate::netsim::TraceKind::Markov {
+        let net = crate::config::NetworkConfig::homogeneous(
+            crate::netsim::TraceKind::Markov {
                 levels_bps: vec![8e7, 2e8, 4e8],
                 dwell_s: 40.0,
                 seed: 11,
             },
-            latency_s: 0.2,
-        };
+            0.2,
+        );
         let _ = wan_network; // OU preset kept for the docs
         let results = env.sweep_strategies(task, workers, &net, scale)?;
         let time_of = |label: &str| {

@@ -24,14 +24,14 @@ pub fn main(scale: f64, node_counts: &[usize]) -> anyhow::Result<()> {
     for task in &tasks {
         for &n in &counts {
             // paper Sec. 5.3: 200 ms, bandwidth fluctuating around 100 Mbps
-            let net = crate::config::NetworkConfig {
-                trace: crate::netsim::TraceKind::Markov {
+            let net = crate::config::NetworkConfig::homogeneous(
+                crate::netsim::TraceKind::Markov {
                     levels_bps: vec![5e7, 1e8, 2e8],
                     dwell_s: 40.0,
                     seed: 13 + n as u64,
                 },
-                latency_s: 0.2,
-            };
+                0.2,
+            );
             let _ = wan_network;
             let results = env.sweep_strategies(task, n, &net, scale)?;
             let time_of = |label: &str| {

@@ -13,14 +13,14 @@ pub fn main(task_name: &str, scale: f64) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown task {task_name}"))?;
     let mut env = ExpEnv::new();
     // strongly varying bandwidth so the adaptation is visible
-    let net = crate::config::NetworkConfig {
-        trace: crate::netsim::TraceKind::Markov {
+    let net = crate::config::NetworkConfig::homogeneous(
+        crate::netsim::TraceKind::Markov {
             levels_bps: vec![4e7, 1e8, 2.5e8],
             dwell_s: 30.0,
             seed: 17,
         },
-        latency_s: 0.2,
-    };
+        0.2,
+    );
     let _ = wan_network(1e8, 0.2, 0); // (kept for docs symmetry)
     let cfg = task.config(
         4,

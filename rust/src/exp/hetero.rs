@@ -1,0 +1,254 @@
+//! `exp hetero` — heterogeneity study (beyond the paper: its Limitations
+//! section defers per-node bandwidth/latency heterogeneity).
+//!
+//! Sweeps straggler severity × strategy on a per-worker fabric: worker 0's
+//! link gets `frac`× the bandwidth and `mult`× the latency of the others,
+//! and the fabric-driven Eq. 19 recurrence prices every iteration at the
+//! **slowest** worker's arrival. The interesting comparison is DeCo-SGD
+//! planning on the monitored **bottleneck** `(min a, max b)` — which is
+//! what actually gates the synchronous aggregation — versus the same
+//! controller planning on the heterogeneity-blind **mean link**. The
+//! mean-link planner overestimates the usable bandwidth (δ too large, so
+//! the straggler's transmission outlasts T_comp) and underestimates the
+//! gating latency (τ too small, so every iteration stalls on the delayed
+//! aggregation); the bottleneck planner keeps the pipeline bubble-free at
+//! the straggler's pace. The `recovery` column is
+//! `t(mean-link) / t(bottleneck)` — how much fabric-aware planning wins
+//! back.
+//!
+//! Deterministic by construction: constant base trace, pinned T_comp, the
+//! analytic quadratic oracle.
+
+use crate::config::{FabricSpec, NetworkConfig};
+use crate::coordinator::{TrainLoop, TrainParams};
+use crate::deco::DecoInput;
+use crate::exp::{results_dir, speedup};
+use crate::metrics::{format_table, RunResult};
+use crate::netsim::TraceKind;
+use crate::optim::Quadratic;
+use crate::strategy::{PlanBasis, StrategyKind};
+use crate::util::WorkerPool;
+
+/// Base (healthy-link) network: 100 Mbps, 150 ms — WAN-ish but fast enough
+/// that the straggler, not the base link, is the story.
+const BASE_BPS: f64 = 1e8;
+const BASE_LAT: f64 = 0.15;
+/// Pinned per-iteration compute time (s).
+const T_COMP: f64 = 0.2;
+/// Pinned gradient size (bits): 20 Mbit ⇒ a full gradient takes exactly
+/// one T_comp on a healthy link, so both the δ and the τ channel of the
+/// planner matter.
+const S_G: f64 = 2e7;
+const GAMMA: f32 = 0.02;
+/// Same loss target as the quadratic TaskSpec.
+const TARGET: f64 = 0.18;
+
+/// Severity ladder: (label, frac, mult) for the straggler link. Labels are
+/// comma-free — they land in the first CSV column verbatim.
+fn severities(mult: f64) -> Vec<(String, f64, f64)> {
+    vec![
+        ("homogeneous".into(), 1.0, 1.0),
+        (format!("bw 1/2 + lat {mult:.0}x"), 0.5, mult),
+        (format!("bw 1/4 + lat {mult:.0}x"), 0.25, mult),
+        (format!("bw 1/10 + lat {mult:.0}x"), 0.1, mult),
+    ]
+}
+
+/// One training run on the straggler fabric. `dim` is exposed so the unit
+/// test can shrink the oracle.
+pub fn run_one(
+    frac: f64,
+    mult: f64,
+    kind: StrategyKind,
+    plan: PlanBasis,
+    workers: usize,
+    dim: usize,
+    max_iters: usize,
+) -> anyhow::Result<RunResult> {
+    let fabric_spec = if frac == 1.0 && mult == 1.0 {
+        FabricSpec::Homogeneous
+    } else {
+        FabricSpec::Straggler { frac, mult }
+    };
+    let net = NetworkConfig {
+        trace: TraceKind::Constant { bps: BASE_BPS },
+        latency_s: BASE_LAT,
+        fabric: fabric_spec,
+    };
+    let fabric = net.build_fabric(workers)?;
+    let oracle = Quadratic::new(dim, workers, 0.5, 0.1, 0.3, 0.2, 7);
+    let params = TrainParams {
+        gamma: GAMMA,
+        max_iters,
+        log_every: 5,
+        loss_target: Some(TARGET),
+        max_virtual_time: None,
+        t_comp_override: Some(T_COMP),
+        s_g_override: Some(S_G),
+        paper_wire: true,
+        block_topk: false,
+        clip_norm: None,
+        seed: 7,
+        fallback: DecoInput { s_g: S_G, a: BASE_BPS, b: BASE_LAT, t_comp: T_COMP },
+        monitor_alpha: 0.3,
+        plan,
+        // runs fan out run-level over the pool (like sweep_strategies);
+        // each inner loop stays serial to avoid oversubscription
+        threads: Some(1),
+    };
+    let mut tl = TrainLoop::with_fabric(oracle, kind.build(), fabric, params);
+    Ok(tl.run("quadratic"))
+}
+
+pub fn main(scale: f64, workers: usize, mult: f64) -> anyhow::Result<()> {
+    let max_iters = ((6000.0 * scale) as usize).max(50);
+    let dim = 4096;
+    let arms: Vec<(&str, StrategyKind, PlanBasis)> = vec![
+        ("D-SGD", StrategyKind::DSgd, PlanBasis::Bottleneck),
+        ("CocktailSGD", StrategyKind::CocktailSgd, PlanBasis::Bottleneck),
+        (
+            "DeCo (mean-link)",
+            StrategyKind::DecoSgd { update_every: 20 },
+            PlanBasis::MeanLink,
+        ),
+        (
+            "DeCo (bottleneck)",
+            StrategyKind::DecoSgd { update_every: 20 },
+            PlanBasis::Bottleneck,
+        ),
+    ];
+    let mut rows = Vec::new();
+    let mut csv = String::from(
+        "severity,frac,mult,strategy,time_to_target,total_iters\n",
+    );
+    println!(
+        "exp hetero — straggler severity x strategy on a {workers}-worker \
+         fabric\n(base {:.0} Mbps / {BASE_LAT} s, straggler = worker 0; \
+         time-to-loss {TARGET} on the quadratic)\n",
+        BASE_BPS / 1e6
+    );
+    // all severity × arm runs are independent analytic TrainLoops: fan
+    // them out run-level over the pool (the sweep_strategies pattern) and
+    // assemble the table in combo order afterwards
+    let sevs = severities(mult);
+    let n_combos = sevs.len() * arms.len();
+    let pool = WorkerPool::new(WorkerPool::default_threads().min(n_combos));
+    eprintln!("[hetero] {n_combos} runs across {} threads", pool.threads());
+    let results = pool.map(n_combos, |i| {
+        let (_, frac, smult) = &sevs[i / arms.len()];
+        let (_, kind, plan) = &arms[i % arms.len()];
+        run_one(*frac, *smult, kind.clone(), *plan, workers, dim, max_iters)
+    });
+    let mut results = results.into_iter();
+    for (label, frac, smult) in &sevs {
+        let mut times: Vec<Option<f64>> = Vec::new();
+        let mut cells = vec![label.clone()];
+        for (arm, _, _) in &arms {
+            let res = results.next().expect("one result per combo")?;
+            let t = res.time_to_loss(TARGET);
+            csv.push_str(&format!(
+                "{label},{frac},{smult},{arm},{},{}\n",
+                t.map(|v| format!("{v:.2}"))
+                    .unwrap_or_else(|| "-".into()),
+                res.total_iters
+            ));
+            cells.push(
+                t.map(|v| format!("{v:.1}s"))
+                    .unwrap_or_else(|| "-".into()),
+            );
+            times.push(t);
+        }
+        // recovery: how much the fabric-aware planner wins back over the
+        // heterogeneity-blind one (mean-link time / bottleneck time)
+        cells.push(speedup(times[2], times[3]));
+        rows.push(cells);
+    }
+    println!(
+        "{}",
+        format_table(
+            &[
+                "straggler",
+                "D-SGD",
+                "CocktailSGD",
+                "DeCo (mean-link)",
+                "DeCo (bottleneck)",
+                "recovery",
+            ],
+            &rows
+        )
+    );
+    let path = results_dir().join("hetero_straggler.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_table_shapes() {
+        let s = severities(6.0);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].1, 1.0);
+        assert!(s.windows(2).all(|w| w[1].1 < w[0].1), "fracs decrease");
+    }
+
+    #[test]
+    fn homogeneous_plans_agree() {
+        // with identical links the two planning bases coincide, so the
+        // recovery ratio of the homogeneous row is ~1
+        let bot = run_one(
+            1.0,
+            1.0,
+            StrategyKind::DecoSgd { update_every: 20 },
+            PlanBasis::Bottleneck,
+            4,
+            512,
+            3000,
+        )
+        .unwrap();
+        let mean = run_one(
+            1.0,
+            1.0,
+            StrategyKind::DecoSgd { update_every: 20 },
+            PlanBasis::MeanLink,
+            4,
+            512,
+            3000,
+        )
+        .unwrap();
+        let tb = bot.time_to_loss(TARGET).expect("bottleneck reaches");
+        let tm = mean.time_to_loss(TARGET).expect("mean reaches");
+        assert!(
+            ((tb - tm) / tb).abs() < 1e-6,
+            "homogeneous: {tb} vs {tm}"
+        );
+    }
+
+    #[test]
+    fn bottleneck_beats_mean_link_under_straggler() {
+        // the headline: under a straggler, fabric-aware DeCo reaches the
+        // target sooner than mean-link DeCo
+        let kind = StrategyKind::DecoSgd { update_every: 20 };
+        let bot = run_one(
+            0.5,
+            6.0,
+            kind.clone(),
+            PlanBasis::Bottleneck,
+            4,
+            512,
+            6000,
+        )
+        .unwrap();
+        let mean =
+            run_one(0.5, 6.0, kind, PlanBasis::MeanLink, 4, 512, 6000).unwrap();
+        let tb = bot.time_to_loss(TARGET).expect("bottleneck reaches");
+        let tm = mean.time_to_loss(TARGET).expect("mean-link reaches");
+        assert!(
+            tb < tm,
+            "bottleneck-aware {tb:.1}s should beat mean-link {tm:.1}s"
+        );
+    }
+}

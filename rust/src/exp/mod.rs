@@ -12,6 +12,9 @@
 //! | table1 | training time under (a, b) grid (also Table 3)   |
 //! | thm3   | validation: closed form vs event recurrence      |
 //! | phi    | validation: iterations-to-ε ordering follows φ   |
+//! | hetero | straggler severity × strategy on a per-worker    |
+//! |        | fabric: bottleneck vs mean-link DeCo planning    |
+//! |        | (beyond the paper — its deferred limitation)     |
 
 pub mod ablation;
 pub mod fig1;
@@ -19,6 +22,7 @@ pub mod fig2;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod hetero;
 pub mod phi;
 pub mod runner;
 pub mod table1;

@@ -219,10 +219,14 @@ impl ExpEnv {
         if threads.is_some() {
             params.threads = threads;
         }
-        let mut tl = TrainLoop::new(
+        // every run is priced on a per-worker fabric; the homogeneous spec
+        // replicates the base link and stays bit-identical to the former
+        // single shared link (tests/fabric.rs)
+        let fabric = cfg.network.build_fabric(cfg.workers)?;
+        let mut tl = TrainLoop::with_fabric(
             oracle,
             cfg.strategy.build(),
-            cfg.network.link(),
+            fabric,
             params,
         );
         Ok(tl.run(&cfg.task))

@@ -26,15 +26,15 @@ pub fn main(scale: f64, tasks: &[String]) -> anyhow::Result<()> {
     );
     for task in &all {
         for &(a, b) in &conditions() {
-            let net = NetworkConfig {
-                // Table 1 uses *average* bandwidth a with slow dynamics
-                trace: TraceKind::Markov {
+            // Table 1 uses *average* bandwidth a with slow dynamics
+            let net = NetworkConfig::homogeneous(
+                TraceKind::Markov {
                     levels_bps: vec![0.6 * a, a, 1.4 * a],
                     dwell_s: 40.0,
                     seed: 23,
                 },
-                latency_s: b,
-            };
+                b,
+            );
             // What DeCo would pick under the nominal conditions (Table 3)
             let pick = solve(&DecoInput {
                 s_g: task.s_g_bits,

@@ -2,9 +2,9 @@
 //! vendored crate set has no clap).
 //!
 //! ```text
-//! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|all> [--scale F]
-//!           [--tasks t1 t2] [--nodes 4 8] [--workers N] [--task NAME]
-//!           [--t-comp F]
+//! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|hetero|all>
+//!           [--scale F] [--tasks t1 t2] [--nodes 4 8] [--workers N]
+//!           [--task NAME] [--t-comp F] [--mult F]
 //! repro train --config cfg.json [--out run.csv]
 //! repro deco --a BPS --b S --t-comp S --s-g BITS
 //! repro artifacts
@@ -71,8 +71,10 @@ repro — DeCo-SGD paper reproduction CLI
 
 USAGE:
   repro exp <id> [--scale F] [--tasks T..] [--nodes N..] [--workers N]
-                 [--task NAME] [--t-comp F]
-      ids: fig1 fig2 fig4 fig5 fig6 table1 thm3 phi ablation all
+                 [--task NAME] [--t-comp F] [--mult F]
+      ids: fig1 fig2 fig4 fig5 fig6 table1 thm3 phi ablation hetero all
+      hetero: straggler severity x strategy sweep on a per-worker fabric
+              (--workers N, --mult F = straggler latency multiplier)
   repro train --config cfg.json [--out run.csv]
   repro deco --a BPS --b SECONDS --t-comp SECONDS --s-g BITS
   repro artifacts
@@ -117,6 +119,10 @@ fn main() -> Result<()> {
                     let which =
                         args.flag_str("which").unwrap_or("all").to_string();
                     exp::ablation::main(&which)?;
+                }
+                "hetero" => {
+                    let mult = args.flag_f64("mult").unwrap_or(6.0);
+                    exp::hetero::main(scale, workers, mult)?;
                 }
                 "all" => {
                     exp::fig1::main(t_comp)?;

@@ -1,16 +1,20 @@
 //! Heterogeneous network fabric — one link per worker.
 //!
 //! The paper's Limitations section explicitly defers "device heterogeneity
-//! (different bandwidth/latency per node)". This extension implements the
-//! substrate and the natural semantics for the synchronous DD-EF-SGD
-//! pipeline: the aggregation of iteration k completes when the **slowest**
-//! worker's message arrives, so the effective (a, b) the DeCo controller
-//! should plan with are the bottleneck worker's. `exp ablation --which
-//! heterogeneity` quantifies how much a straggler erodes DeCo's gains.
+//! (different bandwidth/latency per node)". The fabric is the pricing
+//! substrate for every training run (DESIGN.md §Network-Fabric): the
+//! synchronous aggregation of iteration k completes when the **slowest**
+//! worker's message arrives (`sync_arrival` / the fabric-driven Eq. 19
+//! recurrence in `coordinator::VirtualClock`), so the effective (a, b) the
+//! DeCo controller should plan with are the bottleneck worker's. A
+//! homogeneous fabric collapses bit-identically to the former single-link
+//! path (enforced by `tests/fabric.rs`); `exp hetero` quantifies how much
+//! bottleneck-aware planning recovers under a straggler.
 
 use super::link::Link;
 use super::trace::BandwidthTrace;
 
+#[derive(Clone, Debug)]
 pub struct Fabric {
     links: Vec<Link>,
 }
@@ -30,8 +34,16 @@ impl Fabric {
         )
     }
 
+    /// `n` copies of an existing link — the compatibility bridge for the
+    /// single-`Link` constructors.
+    pub fn replicate(link: Link, n: usize) -> Self {
+        Self::new(vec![link; n])
+    }
+
     /// One straggler: worker 0 gets `frac` of the bandwidth and `mult`× the
-    /// latency of everyone else.
+    /// latency of everyone else. The straggler's trace is the *lazily
+    /// scaled* base trace ([`super::trace::TraceKind::Scaled`]), so it keeps
+    /// the base trace's full temporal resolution and horizon.
     pub fn with_straggler(
         n: usize,
         trace: BandwidthTrace,
@@ -39,20 +51,11 @@ impl Fabric {
         frac: f64,
         mult: f64,
     ) -> Self {
+        assert!(frac > 0.0 && mult > 0.0);
         let mut links = Vec::with_capacity(n);
         for i in 0..n {
             if i == 0 {
-                // scale the trace by sampling: wrap as Samples over a grid
-                let times: Vec<f64> = (0..2048).map(|k| k as f64 * 0.5).collect();
-                let bps: Vec<f64> =
-                    times.iter().map(|&t| trace.at(t) * frac).collect();
-                links.push(Link::new(
-                    BandwidthTrace::new(super::trace::TraceKind::Samples {
-                        times_s: times,
-                        bps,
-                    }),
-                    latency_s * mult,
-                ));
+                links.push(Link::new(trace.scaled(frac), latency_s * mult));
             } else {
                 links.push(Link::new(trace.clone(), latency_s));
             }
@@ -66,6 +69,10 @@ impl Fabric {
 
     pub fn link(&self, worker: usize) -> &Link {
         &self.links[worker]
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
     }
 
     /// Arrival time of the synchronous aggregation: max over per-worker
@@ -92,11 +99,21 @@ impl Fabric {
             .fold(f64::NEG_INFINITY, f64::max);
         (a, b)
     }
+
+    /// Mean-link parameters at time `t` — what a heterogeneity-blind
+    /// controller would plan with (the `exp hetero` control arm).
+    pub fn mean(&self, t: f64) -> (f64, f64) {
+        let n = self.links.len() as f64;
+        let a = self.links.iter().map(|l| l.bandwidth_at(t)).sum::<f64>() / n;
+        let b = self.links.iter().map(|l| l.latency()).sum::<f64>() / n;
+        (a, b)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::netsim::TraceKind;
 
     #[test]
     fn homogeneous_sync_equals_single_link() {
@@ -107,6 +124,14 @@ mod tests {
             single.arrival(2.0, 10_000_000)
         );
         assert_eq!(f.workers(), 4);
+    }
+
+    #[test]
+    fn replicate_matches_homogeneous() {
+        let link = Link::new(BandwidthTrace::constant(5e7), 0.2);
+        let f = Fabric::replicate(link.clone(), 3);
+        assert_eq!(f.workers(), 3);
+        assert_eq!(f.sync_arrival(1.0, 1_000_000), link.arrival(1.0, 1_000_000));
     }
 
     #[test]
@@ -127,6 +152,23 @@ mod tests {
     }
 
     #[test]
+    fn straggler_keeps_trace_dynamics() {
+        // a sine faster than the old 0.5 s resampling grid, probed past the
+        // old 1024 s horizon: the scaled link must track frac × base exactly
+        let base = BandwidthTrace::new(TraceKind::Sine {
+            mean_bps: 1e8,
+            amp_bps: 4e7,
+            period_s: 0.3,
+        });
+        let f = Fabric::with_straggler(2, base.clone(), 0.1, 0.5, 1.0);
+        for i in 0..400 {
+            let t = 0.07 * i as f64 + if i % 3 == 0 { 1500.0 } else { 0.0 };
+            assert_eq!(f.link(0).bandwidth_at(t), (base.at(t) * 0.5).max(1e3));
+            assert_eq!(f.link(1).bandwidth_at(t), base.at(t));
+        }
+    }
+
+    #[test]
     fn bottleneck_reports_worst_case() {
         let f = Fabric::with_straggler(
             3,
@@ -138,5 +180,8 @@ mod tests {
         let (a, b) = f.bottleneck(1.0);
         assert!((a - 1e8).abs() / 1e8 < 0.01, "a={a}");
         assert!((b - 0.15).abs() < 1e-9, "b={b}");
+        let (am, bm) = f.mean(1.0);
+        assert!(am > a && am < 2e8, "mean bw between bottleneck and best");
+        assert!(bm > 0.05 && bm < b, "mean latency between best and worst");
     }
 }

@@ -43,8 +43,8 @@ impl Link {
         }
         let mut remaining = bits as f64;
         let mut t = start;
-        // fast path: constant traces solve in closed form
-        if let super::trace::TraceKind::Constant { bps } = self.trace.kind() {
+        // fast path: constant traces (possibly `Scaled`) solve in closed form
+        if let Some(bps) = self.trace.as_constant() {
             return start + remaining / bps;
         }
         loop {

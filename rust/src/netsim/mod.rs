@@ -1,6 +1,8 @@
 //! WAN network simulator — the substitute for the paper's docker-tc testbed
-//! (Sec. C.1): dynamic bandwidth traces, a varying-rate link that integrates
-//! transfer time, and the monitor whose (a, b) estimates feed DeCo.
+//! (Sec. C.1): dynamic bandwidth traces, varying-rate links that integrate
+//! transfer time, the per-worker [`Fabric`] every training run is priced
+//! on, and the per-link monitors whose aggregate (a, b) estimates feed
+//! DeCo (DESIGN.md §Network-Fabric).
 
 pub mod fabric;
 pub mod link;
@@ -9,5 +11,5 @@ pub mod trace;
 
 pub use fabric::Fabric;
 pub use link::Link;
-pub use monitor::NetworkMonitor;
+pub use monitor::{FabricMonitor, NetworkMonitor};
 pub use trace::{BandwidthTrace, TraceKind};

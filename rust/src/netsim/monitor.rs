@@ -1,11 +1,21 @@
-//! Network monitor — the "Get a, b from the network" step of Algorithm 2.
+//! Network monitors — the "Get a, b from the network" step of Algorithm 2.
 //!
 //! Workers observe completed transfers (bits, duration) and iteration
-//! compute times; the monitor maintains EWMA estimates that the DeCo
+//! compute times; the monitors maintain EWMA estimates that the DeCo
 //! controller polls every `E` iterations. In a real deployment this is an
 //! RTT probe + throughput sampling; in the simulator the observations come
 //! from the event timeline, optionally with multiplicative measurement
 //! noise to exercise DeCo's robustness (ablation `exp phi --noise`).
+//!
+//! [`NetworkMonitor`] estimates ONE link. [`FabricMonitor`] holds one
+//! estimator per worker link plus the aggregate views a strategy plans on:
+//! the monitored **bottleneck** `(min bandwidth, max latency)` — the pair
+//! that actually gates the synchronous aggregation on a
+//! [`super::Fabric`] — and the heterogeneity-blind **mean-link** view kept
+//! as the `exp hetero` control arm. With identical links every per-link
+//! estimator carries identical state, so the bottleneck aggregates are
+//! bit-identical to the former single-monitor path (DESIGN.md
+//! §Network-Fabric).
 
 use crate::util::{Ewma, Rng};
 
@@ -15,24 +25,25 @@ pub struct NetworkMonitor {
     lat: Ewma,
     comp: Ewma,
     /// multiplicative measurement noise (0 = exact)
-    noise: f64,
+    pub(crate) noise: f64,
     rng: Rng,
 }
 
 impl NetworkMonitor {
-    pub fn new(alpha: f64) -> Self {
+    /// `seed` drives the measurement-noise RNG — derive it from the run
+    /// seed so noisy-monitor ablations vary across seeds.
+    pub fn new(alpha: f64, seed: u64) -> Self {
         Self {
             bw: Ewma::new(alpha),
             lat: Ewma::new(alpha),
             comp: Ewma::new(alpha),
             noise: 0.0,
-            rng: Rng::new(0xC0FFEE),
+            rng: Rng::new(seed),
         }
     }
 
-    pub fn with_noise(mut self, noise: f64, seed: u64) -> Self {
+    pub fn with_noise(mut self, noise: f64) -> Self {
         self.noise = noise;
-        self.rng = Rng::new(seed);
         self
     }
 
@@ -84,13 +95,130 @@ impl NetworkMonitor {
     }
 }
 
+/// Per-link estimators plus the aggregate views DeCo plans on.
+#[derive(Clone, Debug)]
+pub struct FabricMonitor {
+    links: Vec<NetworkMonitor>,
+    /// compute time is a property of the iteration, not of any link
+    comp: Ewma,
+}
+
+impl FabricMonitor {
+    /// One estimator per worker link; each link's noise RNG stream is
+    /// derived from the run `seed` and the link index.
+    pub fn new(n: usize, alpha: f64, seed: u64) -> Self {
+        assert!(n > 0);
+        Self {
+            links: (0..n)
+                .map(|i| {
+                    NetworkMonitor::new(
+                        alpha,
+                        seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+                    )
+                })
+                .collect(),
+            comp: Ewma::new(alpha),
+        }
+    }
+
+    /// Apply multiplicative measurement noise to every per-link estimator.
+    pub fn with_noise(mut self, noise: f64) -> Self {
+        for m in &mut self.links {
+            m.noise = noise;
+        }
+        self
+    }
+
+    pub fn links(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn link(&self, worker: usize) -> &NetworkMonitor {
+        &self.links[worker]
+    }
+
+    /// Worker `worker` finished a transfer of `bits` in `secs` of pure
+    /// transmission time.
+    pub fn observe_transfer(&mut self, worker: usize, bits: u64, secs: f64) {
+        self.links[worker].observe_transfer(bits, secs);
+    }
+
+    /// Latency sample for one worker's link.
+    pub fn observe_latency_for(&mut self, worker: usize, secs: f64) {
+        self.links[worker].observe_latency(secs);
+    }
+
+    pub fn observe_compute(&mut self, secs: f64) {
+        self.comp.update(secs);
+    }
+
+    /// Broadcast a bandwidth probe to every link (tests / active probing).
+    pub fn observe_bandwidth(&mut self, bps: f64) {
+        for m in &mut self.links {
+            m.observe_bandwidth(bps);
+        }
+    }
+
+    /// Broadcast a latency probe to every link (tests / active probing).
+    pub fn observe_latency(&mut self, secs: f64) {
+        for m in &mut self.links {
+            m.observe_latency(secs);
+        }
+    }
+
+    /// Aggregate bandwidth `a`: the monitored **bottleneck** (min over
+    /// links with an estimate).
+    pub fn bandwidth(&self) -> Option<f64> {
+        self.links
+            .iter()
+            .filter_map(|m| m.bandwidth())
+            .reduce(f64::min)
+    }
+
+    /// Aggregate latency `b`: the monitored **bottleneck** (max over links
+    /// with an estimate).
+    pub fn latency(&self) -> Option<f64> {
+        self.links
+            .iter()
+            .filter_map(|m| m.latency())
+            .reduce(f64::max)
+    }
+
+    /// Mean-link bandwidth — the heterogeneity-blind control view.
+    pub fn mean_bandwidth(&self) -> Option<f64> {
+        Self::mean(self.links.iter().filter_map(|m| m.bandwidth()))
+    }
+
+    /// Mean-link latency — the heterogeneity-blind control view.
+    pub fn mean_latency(&self) -> Option<f64> {
+        Self::mean(self.links.iter().filter_map(|m| m.latency()))
+    }
+
+    fn mean(vals: impl Iterator<Item = f64>) -> Option<f64> {
+        let (mut sum, mut n) = (0.0, 0usize);
+        for v in vals {
+            sum += v;
+            n += 1;
+        }
+        if n > 0 {
+            Some(sum / n as f64)
+        } else {
+            None
+        }
+    }
+
+    pub fn compute_time(&self) -> Option<f64> {
+        self.comp.get()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn estimates_converge_to_truth() {
-        let mut m = NetworkMonitor::new(0.3);
+        let mut m = NetworkMonitor::new(0.3, 0);
         for _ in 0..100 {
             m.observe_transfer(100_000_000, 1.0); // 1e8 bps
             m.observe_latency(0.2);
@@ -103,7 +231,7 @@ mod tests {
 
     #[test]
     fn tracks_bandwidth_shift() {
-        let mut m = NetworkMonitor::new(0.5);
+        let mut m = NetworkMonitor::new(0.5, 0);
         for _ in 0..20 {
             m.observe_bandwidth(1e8);
         }
@@ -116,7 +244,7 @@ mod tests {
 
     #[test]
     fn noise_does_not_bias_much() {
-        let mut m = NetworkMonitor::new(0.05).with_noise(0.2, 9);
+        let mut m = NetworkMonitor::new(0.05, 9).with_noise(0.2);
         for _ in 0..2000 {
             m.observe_bandwidth(1e8);
         }
@@ -125,10 +253,80 @@ mod tests {
     }
 
     #[test]
+    fn noise_stream_follows_seed() {
+        // same observations, different seeds => different noisy estimates
+        let run = |seed: u64| {
+            let mut m = NetworkMonitor::new(0.3, seed).with_noise(0.3);
+            for _ in 0..10 {
+                m.observe_bandwidth(1e8);
+            }
+            m.bandwidth().unwrap()
+        };
+        assert_ne!(run(1), run(2));
+        assert_eq!(run(7), run(7), "same seed must replay exactly");
+    }
+
+    #[test]
     fn ignores_degenerate_observations() {
-        let mut m = NetworkMonitor::new(0.3);
+        let mut m = NetworkMonitor::new(0.3, 0);
         m.observe_transfer(0, 1.0);
         m.observe_transfer(100, 0.0);
         assert!(m.bandwidth().is_none());
+    }
+
+    #[test]
+    fn fabric_monitor_bottleneck_and_mean() {
+        let mut fm = FabricMonitor::new(3, 0.5, 0);
+        assert_eq!(fm.links(), 3);
+        assert!(fm.bandwidth().is_none() && fm.latency().is_none());
+        for _ in 0..30 {
+            fm.observe_transfer(0, 10_000_000, 1.0); // 1e7 bps straggler
+            fm.observe_transfer(1, 100_000_000, 1.0); // 1e8
+            fm.observe_transfer(2, 100_000_000, 1.0); // 1e8
+            fm.observe_latency_for(0, 0.6);
+            fm.observe_latency_for(1, 0.1);
+            fm.observe_latency_for(2, 0.1);
+            fm.observe_compute(0.2);
+        }
+        let a = fm.bandwidth().unwrap();
+        let b = fm.latency().unwrap();
+        assert!((a - 1e7).abs() < 1.0, "bottleneck bw {a}");
+        assert!((b - 0.6).abs() < 1e-9, "bottleneck lat {b}");
+        let am = fm.mean_bandwidth().unwrap();
+        let bm = fm.mean_latency().unwrap();
+        assert!((am - 7e7).abs() < 1.0, "mean bw {am}");
+        assert!((bm - 0.8 / 3.0).abs() < 1e-9, "mean lat {bm}");
+        assert!((fm.compute_time().unwrap() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fabric_monitor_homogeneous_matches_single() {
+        // identical links => aggregates bit-identical to one NetworkMonitor
+        let mut single = NetworkMonitor::new(0.3, 0);
+        let mut fm = FabricMonitor::new(4, 0.3, 0);
+        for k in 0..50u64 {
+            let bits = 1_000_000 + k * 31_337;
+            let secs = 0.01 + (k as f64) * 1e-4;
+            single.observe_transfer(bits, secs);
+            single.observe_latency(0.2);
+            single.observe_compute(0.05);
+            for w in 0..4 {
+                fm.observe_transfer(w, bits, secs);
+                fm.observe_latency_for(w, 0.2);
+            }
+            fm.observe_compute(0.05);
+        }
+        assert_eq!(
+            fm.bandwidth().unwrap().to_bits(),
+            single.bandwidth().unwrap().to_bits()
+        );
+        assert_eq!(
+            fm.latency().unwrap().to_bits(),
+            single.latency().unwrap().to_bits()
+        );
+        assert_eq!(
+            fm.compute_time().unwrap().to_bits(),
+            single.compute_time().unwrap().to_bits()
+        );
     }
 }

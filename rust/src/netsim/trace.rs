@@ -24,12 +24,23 @@ pub enum TraceKind {
     Ou { mean_bps: f64, sigma_bps: f64, theta: f64, seed: u64 },
     Markov { levels_bps: Vec<f64>, dwell_s: f64, seed: u64 },
     Samples { times_s: Vec<f64>, bps: Vec<f64> },
+    /// Lazy multiplicative scaling: `at(t) = frac · inner.at(t)`. Keeps the
+    /// inner trace's full resolution and horizon (no resampling grid) —
+    /// this is how straggler fabrics derive a slow link from the base
+    /// trace without flattening sub-grid dynamics.
+    Scaled { inner: Box<TraceKind>, frac: f64 },
 }
 
 /// A realized bandwidth trace.
 #[derive(Clone, Debug)]
 pub struct BandwidthTrace {
     kind: TraceKind,
+    /// `kind` with all `Scaled` wrappers peeled off — populated only when
+    /// `kind` actually carries a wrapper, so plain traces don't duplicate
+    /// their payload vectors
+    base: Option<TraceKind>,
+    /// product of the peeled `Scaled` fractions (1.0 for unwrapped kinds)
+    scale: f64,
     /// pre-generated grid for stochastic kinds: (dt, samples)
     grid: Option<(f64, Vec<f64>)>,
     floor: f64,
@@ -43,7 +54,14 @@ const GRID_HORIZON: f64 = 4096.0;
 
 impl BandwidthTrace {
     pub fn new(kind: TraceKind) -> Self {
-        let grid = match &kind {
+        let (base, scale) = match &kind {
+            TraceKind::Scaled { .. } => {
+                let (b, s) = Self::flatten(&kind);
+                (Some(b), s)
+            }
+            _ => (None, 1.0),
+        };
+        let grid = match base.as_ref().unwrap_or(&kind) {
             TraceKind::Ou { mean_bps, sigma_bps, theta, seed } => {
                 Some((GRID_DT, Self::gen_ou(*mean_bps, *sigma_bps, *theta, *seed)))
             }
@@ -53,15 +71,49 @@ impl BandwidthTrace {
             _ => None,
         };
         // never allow a dead link: floor at 1 kbps
-        Self { kind, grid, floor: 1e3 }
+        Self { kind, base, scale, grid, floor: 1e3 }
+    }
+
+    /// Peel nested `Scaled` wrappers into (base kind, accumulated factor).
+    fn flatten(kind: &TraceKind) -> (TraceKind, f64) {
+        match kind {
+            TraceKind::Scaled { inner, frac } => {
+                let (base, f) = Self::flatten(inner);
+                (base, f * frac)
+            }
+            other => (other.clone(), 1.0),
+        }
     }
 
     pub fn constant(bps: f64) -> Self {
         Self::new(TraceKind::Constant { bps })
     }
 
+    /// This trace scaled by `frac`, lazily: full resolution, no resampling.
+    pub fn scaled(&self, frac: f64) -> Self {
+        Self::new(TraceKind::Scaled {
+            inner: Box::new(self.kind.clone()),
+            frac,
+        })
+    }
+
     pub fn kind(&self) -> &TraceKind {
         &self.kind
+    }
+
+    /// The evaluated kind: `kind` with any `Scaled` wrappers peeled off.
+    fn base(&self) -> &TraceKind {
+        self.base.as_ref().unwrap_or(&self.kind)
+    }
+
+    /// `Some(effective bps)` when the trace is constant in time (possibly
+    /// through `Scaled` wrappers) — the closed-form transfer fast path.
+    pub fn as_constant(&self) -> Option<f64> {
+        if let TraceKind::Constant { bps } = self.base() {
+            Some((bps * self.scale).max(self.floor))
+        } else {
+            None
+        }
     }
 
     fn gen_ou(mean: f64, sigma: f64, theta: f64, seed: u64) -> Vec<f64> {
@@ -96,7 +148,7 @@ impl BandwidthTrace {
 
     /// Bandwidth at absolute time `t` (bits/s). Pure function.
     pub fn at(&self, t: f64) -> f64 {
-        let v = match &self.kind {
+        let v = match self.base() {
             TraceKind::Constant { bps } => *bps,
             TraceKind::Sine { mean_bps, amp_bps, period_s } => {
                 mean_bps + amp_bps * (std::f64::consts::TAU * t / period_s).sin()
@@ -110,7 +162,7 @@ impl BandwidthTrace {
                 samples[i]
             }
         };
-        v.max(self.floor)
+        (v * self.scale).max(self.floor)
     }
 
     fn interp(ts: &[f64], vs: &[f64], t: f64) -> f64 {
@@ -209,6 +261,66 @@ mod tests {
         assert_eq!(t.at(-1.0), 1e8);
         assert!((t.at(5.0) - 1.5e8).abs() < 1.0);
         assert_eq!(t.at(11.0), 2e8);
+    }
+
+    #[test]
+    fn scaled_preserves_full_resolution() {
+        // a fast sine (period 0.2 s) scaled by 0.25: every sample is exactly
+        // frac × the inner value — no 0.5 s resampling grid, no horizon cap
+        let inner = BandwidthTrace::new(TraceKind::Sine {
+            mean_bps: 1e8,
+            amp_bps: 5e7,
+            period_s: 0.2,
+        });
+        let scaled = inner.scaled(0.25);
+        for i in 0..500 {
+            // probe sub-grid offsets and times far past the old 1024 s wrap
+            let t = i as f64 * 0.013 + if i % 2 == 0 { 0.0 } else { 2000.0 };
+            let want = (inner.at(t) * 0.25).max(1e3);
+            assert_eq!(scaled.at(t), want, "t={t}");
+        }
+    }
+
+    #[test]
+    fn scaled_nests_multiplicatively() {
+        let t = BandwidthTrace::constant(1e8).scaled(0.5).scaled(0.5);
+        assert_eq!(t.at(3.0), 0.25 * 1e8);
+        assert_eq!(t.as_constant(), Some(0.25 * 1e8));
+    }
+
+    #[test]
+    fn scaled_stochastic_shares_inner_stream() {
+        // scaling an OU trace must not change the realized sample path —
+        // only its amplitude (the old resampling grid broke this)
+        let kind = TraceKind::Ou {
+            mean_bps: 1e8,
+            sigma_bps: 2e7,
+            theta: 0.4,
+            seed: 12,
+        };
+        let inner = BandwidthTrace::new(kind.clone());
+        let scaled = BandwidthTrace::new(TraceKind::Scaled {
+            inner: Box::new(kind),
+            frac: 0.1,
+        });
+        for i in 0..1000 {
+            let t = i as f64 * 0.037;
+            let want = (inner.at(t) * 0.1).max(1e3);
+            assert_eq!(scaled.at(t), want);
+        }
+    }
+
+    #[test]
+    fn unscaled_constant_fast_path() {
+        let t = BandwidthTrace::constant(2e8);
+        assert_eq!(t.as_constant(), Some(2e8));
+        let s = BandwidthTrace::new(TraceKind::Sine {
+            mean_bps: 1e8,
+            amp_bps: 1e7,
+            period_s: 3.0,
+        });
+        assert_eq!(s.as_constant(), None);
+        assert_eq!(s.scaled(0.5).as_constant(), None);
     }
 
     #[test]

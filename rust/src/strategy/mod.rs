@@ -15,28 +15,53 @@
 //!   (a, b, T_comp).
 
 use crate::deco::{solve, DecoInput, DecoOutput};
-use crate::netsim::NetworkMonitor;
+use crate::netsim::FabricMonitor;
 
+/// Which aggregate of the per-link monitors a strategy plans on.
+///
+/// On a heterogeneous [`crate::netsim::Fabric`] the synchronous aggregation
+/// is gated by the slowest link, so the `(a, b)` DeCo should consume are
+/// the monitored **bottleneck** (min bandwidth, max latency). `MeanLink`
+/// is what a heterogeneity-blind controller sees — kept as the control arm
+/// of `exp hetero`. On a homogeneous fabric the two coincide.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlanBasis {
+    #[default]
+    Bottleneck,
+    MeanLink,
+}
 
 /// What a strategy can see when deciding (τ_t, δ_t).
 pub struct StrategyCtx<'a> {
     pub iter: usize,
-    pub monitor: &'a NetworkMonitor,
+    /// per-link estimators + aggregate views
+    pub monitor: &'a FabricMonitor,
     /// gradient size, bits
     pub s_g: f64,
     /// latest average gradient norm (for Accordion)
     pub grad_norm: Option<f64>,
     /// fallback network params when the monitor has no samples yet
     pub fallback: DecoInput,
+    /// which monitor aggregate to plan on
+    pub plan: PlanBasis,
 }
 
 impl StrategyCtx<'_> {
-    /// Best current estimate of the DeCo inputs.
+    /// Best current estimate of the DeCo inputs under the chosen
+    /// [`PlanBasis`].
     pub fn deco_input(&self) -> DecoInput {
+        let (a, b) = match self.plan {
+            PlanBasis::Bottleneck => {
+                (self.monitor.bandwidth(), self.monitor.latency())
+            }
+            PlanBasis::MeanLink => {
+                (self.monitor.mean_bandwidth(), self.monitor.mean_latency())
+            }
+        };
         DecoInput {
             s_g: self.s_g,
-            a: self.monitor.bandwidth().unwrap_or(self.fallback.a),
-            b: self.monitor.latency().unwrap_or(self.fallback.b),
+            a: a.unwrap_or(self.fallback.a),
+            b: b.unwrap_or(self.fallback.b),
             t_comp: self
                 .monitor
                 .compute_time()
@@ -232,19 +257,20 @@ impl Strategy for DecoSgd {
 mod tests {
     use super::*;
 
-    fn ctx<'a>(monitor: &'a NetworkMonitor, iter: usize) -> StrategyCtx<'a> {
+    fn ctx<'a>(monitor: &'a FabricMonitor, iter: usize) -> StrategyCtx<'a> {
         StrategyCtx {
             iter,
             monitor,
             s_g: 124e6 * 32.0,
             grad_norm: None,
             fallback: DecoInput { s_g: 124e6 * 32.0, a: 1e8, b: 0.1, t_comp: 0.5 },
+            plan: PlanBasis::Bottleneck,
         }
     }
 
     #[test]
     fn static_strategies() {
-        let m = NetworkMonitor::new(0.3);
+        let m = FabricMonitor::new(1, 0.3, 0);
         assert_eq!(DSgd.params(&ctx(&m, 1)), (0, 1.0));
         assert_eq!(DEfSgd { delta: 0.1 }.params(&ctx(&m, 1)), (0, 0.1));
         assert_eq!(DdSgd { tau: 3 }.params(&ctx(&m, 1)), (3, 1.0));
@@ -252,7 +278,7 @@ mod tests {
 
     #[test]
     fn cocktail_freezes_first_solution() {
-        let mut m = NetworkMonitor::new(0.9);
+        let mut m = FabricMonitor::new(1, 0.9, 0);
         let mut s = CocktailSgd { chosen: None };
         let first = s.params(&ctx(&m, 1));
         // bandwidth collapses afterwards; cocktail must not react
@@ -264,7 +290,7 @@ mod tests {
 
     #[test]
     fn deco_adapts_to_bandwidth_collapse() {
-        let mut m = NetworkMonitor::new(0.9);
+        let mut m = FabricMonitor::new(1, 0.9, 0);
         for _ in 0..10 {
             m.observe_bandwidth(5e8);
             m.observe_latency(0.1);
@@ -281,7 +307,7 @@ mod tests {
 
     #[test]
     fn deco_updates_only_on_schedule() {
-        let mut m = NetworkMonitor::new(0.9);
+        let mut m = FabricMonitor::new(1, 0.9, 0);
         for _ in 0..5 {
             m.observe_bandwidth(5e8);
             m.observe_latency(0.1);
@@ -299,7 +325,7 @@ mod tests {
 
     #[test]
     fn accordion_switches_on_norm_shift() {
-        let m = NetworkMonitor::new(0.3);
+        let m = FabricMonitor::new(1, 0.3, 0);
         let mut s = Accordion::new(0.01, 0.5);
         let mk = |iter, norm| StrategyCtx {
             iter,
@@ -307,6 +333,7 @@ mod tests {
             s_g: 1e9,
             grad_norm: Some(norm),
             fallback: DecoInput { s_g: 1e9, a: 1e8, b: 0.1, t_comp: 0.5 },
+            plan: PlanBasis::Bottleneck,
         };
         s.params(&mk(1, 10.0));
         // stable norms -> non-critical -> aggressive delta
@@ -321,10 +348,36 @@ mod tests {
     fn kind_builds_all() {
         for k in StrategyKind::paper_baselines() {
             let mut s = k.build();
-            let m = NetworkMonitor::new(0.3);
+            let m = FabricMonitor::new(1, 0.3, 0);
             let (tau, delta) = s.params(&ctx(&m, 1));
             assert!(delta > 0.0 && delta <= 1.0);
             assert!(tau <= 1000);
         }
+    }
+
+    #[test]
+    fn plan_basis_selects_monitor_aggregate() {
+        // 3-link fabric with a straggler on link 0
+        let mut m = FabricMonitor::new(3, 0.5, 0);
+        for _ in 0..20 {
+            m.observe_transfer(0, 10_000_000, 1.0); // 1e7 bps
+            m.observe_transfer(1, 100_000_000, 1.0); // 1e8
+            m.observe_transfer(2, 100_000_000, 1.0); // 1e8
+            m.observe_latency_for(0, 0.9);
+            m.observe_latency_for(1, 0.1);
+            m.observe_latency_for(2, 0.1);
+            m.observe_compute(0.2);
+        }
+        let bot = StrategyCtx { plan: PlanBasis::Bottleneck, ..ctx(&m, 1) }
+            .deco_input();
+        let mean = StrategyCtx { plan: PlanBasis::MeanLink, ..ctx(&m, 1) }
+            .deco_input();
+        assert!((bot.a - 1e7).abs() < 1.0, "bottleneck a {}", bot.a);
+        assert!((bot.b - 0.9).abs() < 1e-9, "bottleneck b {}", bot.b);
+        assert!((mean.a - 7e7).abs() < 1.0, "mean a {}", mean.a);
+        assert!((mean.b - 1.1 / 3.0).abs() < 1e-9, "mean b {}", mean.b);
+        // the mean-link planner overestimates the usable bandwidth and
+        // underestimates the gating latency — the exp hetero failure mode
+        assert!(mean.a > bot.a && mean.b < bot.b);
     }
 }

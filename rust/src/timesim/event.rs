@@ -11,7 +11,8 @@
 //! paper exactly (1-based `k`), so `T_avg = TC_t / t`.
 
 use super::model::PipelineParams;
-use crate::netsim::Link;
+use crate::coordinator::VirtualClock;
+use crate::netsim::{Fabric, Link};
 
 /// Per-iteration timeline: computation end, transmission end, arrival.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -50,10 +51,32 @@ impl EventSim {
         Self { rows }
     }
 
-    /// Trace-driven generalization: transmission time integrates over a
-    /// [`Link`]'s bandwidth trace instead of a constant `a`. `bits(k)` gives
-    /// the wire size of iteration k (so δ may vary per iteration — this is
-    /// what DD-EF-SGD under DeCo does).
+    /// Trace-driven generalization on a per-worker [`Fabric`]: every worker
+    /// transmits over its own link and iteration k's aggregation completes
+    /// at the **slowest** worker's arrival. `bits(k)` gives the wire size of
+    /// iteration k (so δ may vary per iteration — this is what DD-EF-SGD
+    /// under DeCo does). Delegates to [`VirtualClock`] — the single Eq. 19
+    /// implementation both the event simulator and the training loop share
+    /// (DESIGN.md §Network-Fabric). The reported `tm` is the slowest
+    /// worker's transmission end.
+    pub fn run_on_fabric(
+        fabric: Fabric,
+        t_comp: impl Fn(usize) -> f64,
+        tau: impl Fn(usize) -> usize,
+        bits: impl Fn(usize) -> u64,
+        iters: usize,
+    ) -> Self {
+        let mut clock = VirtualClock::new(fabric);
+        let mut rows: Vec<IterTimes> = Vec::with_capacity(iters);
+        for k in 1..=iters {
+            let t = clock.tick(t_comp(k), tau(k), bits(k));
+            rows.push(IterTimes { ts: t.ts, tm: t.tm, tc: t.tc });
+        }
+        Self { rows }
+    }
+
+    /// Single shared link: a 1-worker fabric (the pre-fabric behavior,
+    /// bit-identical to it).
     pub fn run_on_link(
         link: &Link,
         t_comp: impl Fn(usize) -> f64,
@@ -61,23 +84,13 @@ impl EventSim {
         bits: impl Fn(usize) -> u64,
         iters: usize,
     ) -> Self {
-        let mut rows: Vec<IterTimes> = Vec::with_capacity(iters);
-        for k in 1..=iters {
-            let ts_prev = if k == 1 { 0.0 } else { rows[k - 2].ts };
-            let tm_prev = if k == 1 { 0.0 } else { rows[k - 2].tm };
-            let tk = tau(k);
-            let tc_delayed = if k as i64 - 1 - tk as i64 >= 1 {
-                rows[k - 2 - tk].tc
-            } else {
-                0.0
-            };
-            let ts = t_comp(k) + tc_delayed.max(ts_prev);
-            let start = tm_prev.max(ts);
-            let tm = link.transfer_end(start, bits(k));
-            let tc = tm + link.latency();
-            rows.push(IterTimes { ts, tm, tc });
-        }
-        Self { rows }
+        Self::run_on_fabric(
+            Fabric::new(vec![link.clone()]),
+            t_comp,
+            tau,
+            bits,
+            iters,
+        )
     }
 
     pub fn rows(&self) -> &[IterTimes] {
@@ -189,6 +202,49 @@ mod tests {
             sim1.total_time(),
             sim2.total_time()
         );
+    }
+
+    #[test]
+    fn fabric_run_homogeneous_matches_link_run() {
+        let link = Link::new(BandwidthTrace::constant(5e7), 0.2);
+        let bits = |k: usize| 1_000_000 + (k as u64 % 5) * 300_000;
+        let sim1 = EventSim::run_on_link(&link, |_| 0.05, |k| k % 3, bits, 300);
+        let sim2 = EventSim::run_on_fabric(
+            Fabric::replicate(link.clone(), 6),
+            |_| 0.05,
+            |k| k % 3,
+            bits,
+            300,
+        );
+        assert_eq!(sim1.iters(), sim2.iters());
+        for (a, b) in sim1.rows().iter().zip(sim2.rows()) {
+            assert_eq!(a.ts.to_bits(), b.ts.to_bits());
+            assert_eq!(a.tm.to_bits(), b.tm.to_bits());
+            assert_eq!(a.tc.to_bits(), b.tc.to_bits());
+        }
+    }
+
+    #[test]
+    fn straggler_fabric_never_faster() {
+        let trace = BandwidthTrace::constant(1e8);
+        let homo = EventSim::run_on_fabric(
+            crate::netsim::Fabric::homogeneous(4, trace.clone(), 0.1),
+            |_| 0.05,
+            |_| 2,
+            |_| 8_000_000,
+            200,
+        );
+        let strag = EventSim::run_on_fabric(
+            crate::netsim::Fabric::with_straggler(4, trace, 0.1, 0.25, 2.0),
+            |_| 0.05,
+            |_| 2,
+            |_| 8_000_000,
+            200,
+        );
+        for (h, s) in homo.rows().iter().zip(strag.rows()) {
+            assert!(s.tc >= h.tc);
+        }
+        assert!(strag.total_time() > homo.total_time());
     }
 
     #[test]

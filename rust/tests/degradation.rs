@@ -17,10 +17,7 @@ fn oracle() -> Quadratic {
 }
 
 fn net() -> NetworkConfig {
-    NetworkConfig {
-        trace: TraceKind::Constant { bps: 1e8 },
-        latency_s: 0.1,
-    }
+    NetworkConfig::homogeneous(TraceKind::Constant { bps: 1e8 }, 0.1)
 }
 
 fn cfg(strategy: StrategyKind, iters: usize) -> ExperimentConfig {

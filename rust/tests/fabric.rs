@@ -1,0 +1,215 @@
+//! Fabric-substrate regression tests (DESIGN.md §Network-Fabric):
+//!
+//! * determinism contract — a homogeneous fabric prices bit-identically to
+//!   the pre-refactor single shared `Link`, across serial and pooled
+//!   execution (final model, every record, virtual-clock totals), checked
+//!   both against the compatibility constructor and against an inline
+//!   replay of the legacy single-link Eq. 19 recurrence;
+//! * the headline heterogeneity claim — under a straggler, DeCo planning
+//!   on the monitored bottleneck (a, b) reaches the loss target sooner
+//!   than the same controller planning on the mean link.
+
+use deco::coordinator::{TrainLoop, TrainParams};
+use deco::deco::solve::DecoInput;
+use deco::metrics::RunResult;
+use deco::netsim::{BandwidthTrace, Fabric, Link};
+use deco::optim::{GradOracle, Quadratic};
+use deco::strategy::{PlanBasis, StrategyKind};
+
+const S_G: f64 = 1e8;
+const T_COMP: f64 = 0.05;
+
+fn params(max_iters: usize) -> TrainParams {
+    TrainParams {
+        gamma: 0.005,
+        max_iters,
+        log_every: 10,
+        t_comp_override: Some(T_COMP),
+        s_g_override: Some(S_G),
+        fallback: DecoInput { s_g: S_G, a: 2e7, b: 0.2, t_comp: T_COMP },
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+fn quad(dim: usize) -> Quadratic {
+    Quadratic::new(dim, 4, 1.0, 0.2, 0.3, 0.3, 11)
+}
+
+fn run_fabric(
+    fabric: Fabric,
+    kind: StrategyKind,
+    mut p: TrainParams,
+    dim: usize,
+    threads: usize,
+) -> (Vec<f32>, RunResult) {
+    p.threads = Some(threads);
+    let mut tl = TrainLoop::with_fabric(quad(dim), kind.build(), fabric, p);
+    let res = tl.run("fabric");
+    (tl.model().to_vec(), res)
+}
+
+/// The pre-refactor virtual clock: ONE shared link, the scalar Eq. 19
+/// recurrence. Static (τ, δ) so the wire bits are constant.
+fn legacy_single_link_total(
+    link: &Link,
+    t_comp: f64,
+    tau: usize,
+    bits: u64,
+    iters: usize,
+) -> f64 {
+    let (mut ts_prev, mut tm_prev) = (0.0f64, 0.0f64);
+    let mut tc: Vec<f64> = Vec::new();
+    for k in 1..=iters {
+        let tc_delayed = if k as i64 - 1 - tau as i64 >= 1 {
+            tc[k - 2 - tau]
+        } else {
+            0.0
+        };
+        let ts = t_comp + tc_delayed.max(ts_prev);
+        let start = tm_prev.max(ts);
+        let tm = link.transfer_end(start, bits);
+        ts_prev = ts;
+        tm_prev = tm;
+        tc.push(tm + link.latency());
+    }
+    *tc.last().unwrap()
+}
+
+#[test]
+fn homogeneous_fabric_matches_legacy_recurrence_bitwise() {
+    // static strategies => constant wire bits, so the legacy single-link
+    // replay must reproduce the fabric clock's total time bit-for-bit
+    let link = Link::new(BandwidthTrace::constant(2e7), 0.2);
+    let cases: Vec<(StrategyKind, usize, u64)> = vec![
+        // (strategy, tau, bits = (delta.min(1)*S_G) as u64)
+        (StrategyKind::DEfSgd { delta: 0.1 }, 0, (0.1 * S_G) as u64),
+        (StrategyKind::DdSgd { tau: 3 }, 3, S_G as u64),
+        (StrategyKind::DSgd, 0, S_G as u64),
+    ];
+    for (kind, tau, bits) in cases {
+        let iters = 60;
+        let (_, res) = run_fabric(
+            Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2),
+            kind.clone(),
+            params(iters),
+            256,
+            1,
+        );
+        assert_eq!(res.total_iters, iters, "{kind:?} stopped early");
+        let legacy = legacy_single_link_total(&link, T_COMP, tau, bits, iters);
+        assert_eq!(
+            res.total_time.to_bits(),
+            legacy.to_bits(),
+            "{kind:?}: fabric clock {} != legacy single-link {legacy}",
+            res.total_time
+        );
+    }
+}
+
+#[test]
+fn homogeneous_fabric_equals_single_link_constructor() {
+    // TrainLoop::new(link) (the compatibility path) and an explicitly built
+    // homogeneous fabric must agree bit-for-bit — serial AND pooled
+    // (dim 65_536 crosses both parallel-engine thresholds)
+    let dim = 65_536;
+    let p = TrainParams { max_iters: 30, ..params(30) };
+    let kind = StrategyKind::DecoSgd { update_every: 10 };
+    let link = Link::new(BandwidthTrace::constant(2e7), 0.2);
+    let mut base = TrainLoop::new(
+        quad(dim),
+        kind.build(),
+        link.clone(),
+        TrainParams { threads: Some(1), ..p.clone() },
+    );
+    let base_res = base.run("fabric");
+    let base_model = base.model().to_vec();
+    assert!(base_res.final_loss().is_finite());
+    for threads in [1usize, 4] {
+        let (model, res) = run_fabric(
+            Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2),
+            kind.clone(),
+            p.clone(),
+            dim,
+            threads,
+        );
+        assert_eq!(model, base_model, "model diverges at {threads} threads");
+        assert_eq!(res.records, base_res.records, "{threads} threads");
+        assert_eq!(
+            res.total_time.to_bits(),
+            base_res.total_time.to_bits(),
+            "virtual clock diverges at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn straggler_fabric_prices_slower_than_homogeneous() {
+    let homo = run_fabric(
+        Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2),
+        StrategyKind::DEfSgd { delta: 0.1 },
+        params(50),
+        256,
+        1,
+    )
+    .1;
+    let strag = run_fabric(
+        Fabric::with_straggler(4, BandwidthTrace::constant(2e7), 0.2, 0.25, 2.0),
+        StrategyKind::DEfSgd { delta: 0.1 },
+        params(50),
+        256,
+        1,
+    )
+    .1;
+    assert_eq!(homo.total_iters, strag.total_iters);
+    assert!(
+        strag.total_time > homo.total_time,
+        "straggler {} should cost more than homogeneous {}",
+        strag.total_time,
+        homo.total_time
+    );
+}
+
+#[test]
+fn bottleneck_planning_beats_mean_link_under_latency_straggler() {
+    // latency-dominated straggler: same bandwidth everywhere, worker 0 at
+    // 9x the latency. Both planners settle on delta = 1 (bandwidth is
+    // plentiful for the 1 Mbit gradient), so the runs differ ONLY through
+    // tau: the bottleneck planner covers the straggler's 0.9 s round trip
+    // (tau = 5, bubble-free at T_comp), the mean-link planner plans for
+    // 0.3 s (tau = 2) and stalls on the delayed aggregation every
+    // iteration.
+    let fabric = || {
+        Fabric::with_straggler(4, BandwidthTrace::constant(1e8), 0.1, 1.0, 9.0)
+    };
+    let p = TrainParams {
+        gamma: 0.005,
+        max_iters: 2000,
+        log_every: 25,
+        t_comp_override: Some(0.2),
+        s_g_override: Some(1e6),
+        fallback: DecoInput { s_g: 1e6, a: 1e8, b: 0.1, t_comp: 0.2 },
+        seed: 11,
+        ..Default::default()
+    };
+    let kind = StrategyKind::DecoSgd { update_every: 10 };
+    let oracle = quad(256);
+    let target = 0.6 * oracle.loss(&oracle.init());
+    let run = |plan: PlanBasis| {
+        let mut tl = TrainLoop::with_fabric(
+            quad(256),
+            kind.build(),
+            fabric(),
+            TrainParams { plan, loss_target: Some(target), ..p.clone() },
+        );
+        tl.run("hetero")
+    };
+    let bot = run(PlanBasis::Bottleneck);
+    let mean = run(PlanBasis::MeanLink);
+    let tb = bot.time_to_loss(target).expect("bottleneck plan reaches");
+    let tm = mean.time_to_loss(target).expect("mean plan reaches");
+    assert!(
+        tb < 0.95 * tm,
+        "bottleneck-aware {tb:.1}s should clearly beat mean-link {tm:.1}s"
+    );
+}

@@ -6,7 +6,7 @@ use deco::compress::{
 };
 use deco::coordinator::{VirtualClock, WorkerState};
 use deco::deco::solve::{delta_star, solve, tau_range, DecoInput};
-use deco::netsim::{BandwidthTrace, Link};
+use deco::netsim::{BandwidthTrace, Fabric, Link, TraceKind};
 use deco::timesim::{t_avg_closed_form, EventSim, PipelineParams};
 use deco::util::check::{forall, Gen};
 use deco::util::Rng;
@@ -193,6 +193,51 @@ fn prop_worker_staleness_exact() {
 }
 
 #[test]
+fn prop_fabric_sync_arrival_dominates_links() {
+    // sync_arrival == max over per-link arrivals, >= every link, and at
+    // n = 1 it degenerates to that link's arrival exactly
+    forall("fabric_sync_arrival", 120, |g| {
+        let n = g.size(1, 6);
+        let links: Vec<Link> = (0..n)
+            .map(|_| {
+                let lat = g.f64(0.0, 1.0);
+                let trace = if g.bool() {
+                    BandwidthTrace::constant(g.f64(1e6, 1e9))
+                } else {
+                    BandwidthTrace::new(TraceKind::Sine {
+                        mean_bps: g.f64(1e7, 5e8),
+                        amp_bps: g.f64(0.0, 9e6),
+                        period_s: g.f64(0.5, 20.0),
+                    })
+                };
+                Link::new(trace, lat)
+            })
+            .collect();
+        let start = g.f64(0.0, 50.0);
+        let bits = g.size(0, 200_000_000) as u64;
+        let per_link: Vec<f64> =
+            links.iter().map(|l| l.arrival(start, bits)).collect();
+        let fabric = Fabric::new(links);
+        let sync = fabric.sync_arrival(start, bits);
+        for (i, &a) in per_link.iter().enumerate() {
+            if sync < a {
+                return Err(format!(
+                    "sync {sync} < link {i} arrival {a} (n={n})"
+                ));
+            }
+        }
+        let max = per_link.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if sync.to_bits() != max.to_bits() {
+            return Err(format!("sync {sync} != max arrival {max}"));
+        }
+        if n == 1 && sync.to_bits() != per_link[0].to_bits() {
+            return Err("n=1 sync must equal the single arrival".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_clock_matches_event_sim() {
     // incremental VirtualClock == batch EventSim for any constant params
     forall("clock_vs_eventsim", 60, |g| {
@@ -205,7 +250,7 @@ fn prop_clock_matches_event_sim() {
             s_g: g.f64(1e6, 5e9),
         };
         let iters = g.size(5, 300);
-        let mut clock = VirtualClock::new(Link::new(
+        let mut clock = VirtualClock::single_link(Link::new(
             BandwidthTrace::constant(p.a),
             p.b,
         ));

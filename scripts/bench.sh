@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# Run the five bench_* targets and consolidate one machine-readable
-# BENCH_pipeline.json at the repo root (ns/iter + bytes/s per shape) so
-# future PRs have a perf trajectory to compare against.
+# Run the bench_* targets and consolidate machine-readable perf trajectories
+# at the repo root so future PRs have something to compare against:
+#   BENCH_pipeline.json — compress / deco / timesim / runtime / pipeline
+#   BENCH_fabric.json   — fabric sync_arrival + fabric-clock overhead vs
+#                         single-link at n in {4, 16, 32}
 #
 #   scripts/bench.sh                # fast mode (default; CI-sized)
 #   DECO_BENCH_FAST=0 scripts/bench.sh   # full measurement windows
@@ -16,22 +18,30 @@ else
 fi
 
 jsonl="$(mktemp)"
-trap 'rm -f "$jsonl"' EXIT
-export DECO_BENCH_JSON="$jsonl"
+fab_jsonl="$(mktemp)"
+trap 'rm -f "$jsonl" "$fab_jsonl"' EXIT
 
+consolidate() {
+  # consolidate <jsonl> <out.json>
+  {
+    echo '{'
+    echo '  "generated_by": "scripts/bench.sh",'
+    echo "  \"host_parallelism\": $(nproc 2>/dev/null || echo 1),"
+    echo '  "results": ['
+    awk 'NR > 1 { print prev "," } { prev = "    " $0 } END { if (NR > 0) print prev }' "$1"
+    echo '  ]'
+    echo '}'
+  } > "$2"
+  echo "wrote $2 ($(grep -c '"name"' "$2") results)"
+}
+
+export DECO_BENCH_JSON="$jsonl"
 for target in bench_compress bench_deco bench_timesim bench_runtime bench_pipeline; do
   echo "### cargo bench --bench $target"
   cargo bench --bench "$target"
 done
+consolidate "$jsonl" BENCH_pipeline.json
 
-{
-  echo '{'
-  echo '  "generated_by": "scripts/bench.sh",'
-  echo "  \"host_parallelism\": $(nproc 2>/dev/null || echo 1),"
-  echo '  "results": ['
-  awk 'NR > 1 { print prev "," } { prev = "    " $0 } END { if (NR > 0) print prev }' "$jsonl"
-  echo '  ]'
-  echo '}'
-} > BENCH_pipeline.json
-
-echo "wrote BENCH_pipeline.json ($(grep -c '"name"' BENCH_pipeline.json) results)"
+echo "### cargo bench --bench bench_fabric"
+DECO_BENCH_JSON="$fab_jsonl" cargo bench --bench bench_fabric
+consolidate "$fab_jsonl" BENCH_fabric.json
