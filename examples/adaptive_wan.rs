@@ -47,6 +47,8 @@ fn main() -> Result<()> {
         log_every: 5,
         block_topk: false,
         clip_norm: Some(5.0),
+        churn: deco::elastic::ChurnSpec::None,
+        drain: deco::elastic::DrainPolicy::Drop,
     };
     let mut env = ExpEnv::new();
     let res = env.run(&cfg)?;

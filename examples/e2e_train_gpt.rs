@@ -38,6 +38,8 @@ fn main() -> Result<()> {
         log_every: 10,
         block_topk: false,
         clip_norm: Some(5.0),
+        churn: deco::elastic::ChurnSpec::None,
+        drain: deco::elastic::DrainPolicy::Drop,
     };
 
     println!("=== e2e: {model}, {steps} steps, 4 workers, OU WAN 100 Mbps / 200 ms ===");

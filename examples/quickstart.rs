@@ -42,6 +42,8 @@ fn main() -> Result<()> {
         log_every: 10,
         block_topk: false,
         clip_norm: Some(5.0),
+        churn: deco::elastic::ChurnSpec::None,
+        drain: deco::elastic::DrainPolicy::Drop,
     };
     let mut env = ExpEnv::new();
     let res = env.run(&cfg)?;

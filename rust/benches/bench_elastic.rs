@@ -1,0 +1,98 @@
+//! Elastic-membership hot path (DESIGN.md §Elasticity): the masked
+//! virtual-clock tick and the membership-aware aggregation bookkeeping
+//! versus the static-fabric baseline, at the worker counts the scalability
+//! experiments use — the per-iteration overhead the pipeline pays for
+//! dynamic membership.
+//!
+//! `scripts/bench.sh` consolidates these into `BENCH_elastic.json`.
+
+use deco::coordinator::VirtualClock;
+use deco::elastic::{ChurnEvent, ChurnSpec, Membership, TimedEvent};
+use deco::netsim::{BandwidthTrace, Fabric};
+use deco::util::bench::{black_box, Bench};
+
+/// Rebuild the clock periodically so the TC history stays bounded while
+/// the bench harness spins millions of ticks.
+const RESET_EVERY: usize = 100_000;
+
+fn fabric(n: usize) -> Fabric {
+    Fabric::homogeneous(n, BandwidthTrace::constant(1e8), 0.1)
+}
+
+fn main() {
+    println!("== bench_elastic (membership-aware pricing) ==");
+    let b = Bench::new("elastic");
+    for &n in &[4usize, 16, 32] {
+        // static baseline: the all-active tick (uniform fast path)
+        let mut clock = VirtualClock::new(fabric(n));
+        b.bench(&format!("clock_tick/static_n{n}"), || {
+            if clock.iters() >= RESET_EVERY {
+                clock = VirtualClock::new(fabric(n));
+            }
+            black_box(clock.tick(0.05, 2, 4_000_000));
+        });
+
+        // all-active mask: the membership check without any churn
+        let mut clock = VirtualClock::new(fabric(n));
+        let mask = vec![true; n];
+        b.bench(&format!("clock_tick/masked_all_n{n}"), || {
+            if clock.iters() >= RESET_EVERY {
+                clock = VirtualClock::new(fabric(n));
+            }
+            black_box(clock.tick_members(0.05, 2, 4_000_000, Some(&mask)));
+        });
+
+        // churned mask: one worker departed — the general per-link loop
+        let mut clock = VirtualClock::new(fabric(n));
+        let mut mask = vec![true; n];
+        mask[0] = false;
+        b.bench(&format!("clock_tick/churned_n{n}"), || {
+            if clock.iters() >= RESET_EVERY {
+                clock = VirtualClock::new(fabric(n));
+            }
+            black_box(clock.tick_members(0.05, 2, 4_000_000, Some(&mask)));
+        });
+
+        // membership bookkeeping: the per-iteration aggregation counts
+        let mut m = Membership::new(n);
+        m.leave(0, false);
+        b.bench(&format!("membership_counts/n{n}"), || {
+            black_box(m.active_count());
+            black_box(m.member_count());
+            black_box(m.epoch());
+        });
+    }
+
+    // churn compilation cost (done once per run): a dense random schedule
+    let spec = ChurnSpec::Random {
+        leave_rate_per_100s: 4.0,
+        mean_down_s: 20.0,
+        outage_rate_per_100s: 3.0,
+        outage_s: 10.0,
+        horizon_s: 1000.0,
+        seed: 7,
+    };
+    b.bench("churn_compile/random_n16", || {
+        black_box(spec.compile(16).unwrap());
+    });
+    let scripted = ChurnSpec::Scripted {
+        events: (0..64)
+            .flat_map(|i| {
+                let t = 10.0 * i as f64;
+                [
+                    TimedEvent {
+                        t: t + 2.0,
+                        event: ChurnEvent::Leave { worker: i % 3 },
+                    },
+                    TimedEvent {
+                        t: t + 7.0,
+                        event: ChurnEvent::Rejoin { worker: i % 3 },
+                    },
+                ]
+            })
+            .collect(),
+    };
+    b.bench("churn_compile/scripted_128ev_n4", || {
+        black_box(scripted.compile(4).unwrap());
+    });
+}

@@ -37,6 +37,8 @@ fn run_iters(
         log_every: usize::MAX, // exclude loss evals: hot loop only
         block_topk: false,
         clip_norm: Some(5.0),
+        churn: deco::elastic::ChurnSpec::None,
+        drain: deco::elastic::DrainPolicy::Drop,
     };
     let mut params = cfg.train_params(dim);
     params.threads = threads;

@@ -44,6 +44,18 @@ impl ErrorFeedback {
         self.e.iter_mut().for_each(|x| *x = 0.0);
     }
 
+    /// Fold a whole gradient into the carried error. This is how the delay
+    /// queue drains an extra in-flight gradient after a τ decrease: instead
+    /// of dropping the gradient (losing its mass) or sending a second
+    /// message (violating one-message-per-iteration), its mass re-emits
+    /// through later compressed messages via the EF loop.
+    pub fn absorb(&mut self, g: &[f32]) {
+        assert_eq!(g.len(), self.e.len(), "gradient/eF dim mismatch");
+        for (ei, gi) in self.e.iter_mut().zip(g.iter()) {
+            *ei += *gi;
+        }
+    }
+
     /// Hot call: `g` enters as the raw gradient, leaves as `Delta`.
     /// Returns the number of transmitted (non-zero budget) entries.
     pub fn step(
@@ -144,6 +156,25 @@ mod tests {
         for i in 0..n {
             assert_eq!(buf[i] + ef.error()[i], g[i]);
         }
+    }
+
+    #[test]
+    fn absorb_adds_to_error_and_reemits() {
+        let n = 64;
+        let mut ef = ErrorFeedback::new(n);
+        let g = randvec(n, 11);
+        ef.absorb(&g);
+        for i in 0..n {
+            assert_eq!(ef.error()[i], g[i]);
+        }
+        // an Identity step flushes the absorbed mass into the next message
+        let mut rng = Rng::new(6);
+        let mut zero = vec![0.0f32; n];
+        ef.step(&mut zero, &Identity, &mut rng);
+        for i in 0..n {
+            assert_eq!(zero[i], g[i], "absorbed mass must re-emit");
+        }
+        assert_eq!(ef.error_norm_sq(), 0.0);
     }
 
     #[test]

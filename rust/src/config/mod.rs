@@ -7,7 +7,8 @@
 //! offline and the JSON codec is in-tree — see `util::json`.)
 
 use crate::deco::DecoInput;
-use crate::netsim::{BandwidthTrace, Fabric, Link, TraceKind};
+use crate::elastic::{ChurnEvent, ChurnSpec, DrainPolicy, TimedEvent};
+use crate::netsim::{BandwidthTrace, DegradeWindow, Fabric, Link, TraceKind};
 use crate::strategy::StrategyKind;
 use crate::util::Json;
 use anyhow::{anyhow, Context, Result};
@@ -33,6 +34,11 @@ pub struct ExperimentConfig {
     pub block_topk: bool,
     /// per-worker global-norm gradient clipping (None = off)
     pub clip_norm: Option<f64>,
+    /// churn scenario (elastic subsystem); `ChurnSpec::None` = static run
+    pub churn: ChurnSpec,
+    /// what happens to a leaving worker's in-flight gradients
+    /// (serde: `"drop"` | `"drain"`, default drop)
+    pub drain: DrainPolicy,
 }
 
 /// How the per-worker [`Fabric`] is derived from the base trace/latency —
@@ -165,6 +171,8 @@ fn nominal_of(trace: &TraceKind) -> f64 {
             bps.iter().sum::<f64>() / bps.len().max(1) as f64
         }
         TraceKind::Scaled { inner, frac } => frac * nominal_of(inner),
+        // fault windows are transient: the nominal is the healthy rate
+        TraceKind::Windowed { inner, .. } => nominal_of(inner),
     }
 }
 
@@ -220,6 +228,20 @@ pub fn trace_to_json(t: &TraceKind) -> Json {
             ("kind", Json::str("scaled")),
             ("frac", Json::num(*frac)),
             ("inner", trace_to_json(inner)),
+        ]),
+        TraceKind::Windowed { inner, windows } => Json::obj(vec![
+            ("kind", Json::str("windowed")),
+            ("inner", trace_to_json(inner)),
+            (
+                "windows",
+                Json::arr(windows.iter().map(|w| {
+                    Json::obj(vec![
+                        ("start_s", Json::num(w.start_s)),
+                        ("end_s", Json::num(w.end_s)),
+                        ("frac", Json::num(w.frac)),
+                    ])
+                })),
+            ),
         ]),
     }
 }
@@ -311,7 +333,151 @@ pub fn trace_from_json(j: &Json) -> Result<TraceKind> {
             inner: Box::new(trace_from_json(j.req("inner").map_err(err)?)?),
             frac: j.req_f64("frac").map_err(err)?,
         },
+        "windowed" => {
+            let arr = j
+                .req("windows")
+                .map_err(err)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("'windows' not an array"))?;
+            let mut windows = Vec::with_capacity(arr.len());
+            for w in arr {
+                windows.push(DegradeWindow {
+                    start_s: w.req_f64("start_s").map_err(err)?,
+                    end_s: w.req_f64("end_s").map_err(err)?,
+                    frac: w.req_f64("frac").map_err(err)?,
+                });
+            }
+            TraceKind::Windowed {
+                inner: Box::new(trace_from_json(j.req("inner").map_err(err)?)?),
+                windows,
+            }
+        }
         other => return Err(anyhow!("unknown trace kind '{other}'")),
+    })
+}
+
+pub fn churn_to_json(c: &ChurnSpec) -> Json {
+    match c {
+        ChurnSpec::None => Json::obj(vec![("kind", Json::str("none"))]),
+        ChurnSpec::Scripted { events } => Json::obj(vec![
+            ("kind", Json::str("scripted")),
+            (
+                "events",
+                Json::arr(events.iter().map(|ev| {
+                    let mut pairs = vec![("t", Json::num(ev.t))];
+                    match &ev.event {
+                        ChurnEvent::Leave { worker } => {
+                            pairs.push(("event", Json::str("leave")));
+                            pairs.push(("worker", Json::num(*worker as f64)));
+                        }
+                        ChurnEvent::Rejoin { worker } => {
+                            pairs.push(("event", Json::str("rejoin")));
+                            pairs.push(("worker", Json::num(*worker as f64)));
+                        }
+                        ChurnEvent::LinkOutage { worker, secs } => {
+                            pairs.push(("event", Json::str("link_outage")));
+                            pairs.push(("worker", Json::num(*worker as f64)));
+                            pairs.push(("secs", Json::num(*secs)));
+                        }
+                        ChurnEvent::LinkDegrade { worker, frac, secs } => {
+                            pairs.push(("event", Json::str("link_degrade")));
+                            pairs.push(("worker", Json::num(*worker as f64)));
+                            pairs.push(("frac", Json::num(*frac)));
+                            pairs.push(("secs", Json::num(*secs)));
+                        }
+                    }
+                    Json::obj(pairs)
+                })),
+            ),
+        ]),
+        ChurnSpec::Random {
+            leave_rate_per_100s,
+            mean_down_s,
+            outage_rate_per_100s,
+            outage_s,
+            horizon_s,
+            seed,
+        } => Json::obj(vec![
+            ("kind", Json::str("random")),
+            ("leave_rate_per_100s", Json::num(*leave_rate_per_100s)),
+            ("mean_down_s", Json::num(*mean_down_s)),
+            ("outage_rate_per_100s", Json::num(*outage_rate_per_100s)),
+            ("outage_s", Json::num(*outage_s)),
+            ("horizon_s", Json::num(*horizon_s)),
+            // string, not number: a u64 seed above 2^53 would silently
+            // round through f64 and compile a different timeline on reload
+            ("seed", Json::str(seed.to_string())),
+        ]),
+    }
+}
+
+/// Parse a u64 seed that may be a JSON string (lossless, what we write) or
+/// a number (hand-written configs; rejected when it can't round-trip).
+fn seed_from_json(j: &Json, key: &str) -> Result<u64> {
+    let v = j.req(key).map_err(err)?;
+    if let Some(s) = v.as_str() {
+        return s
+            .parse()
+            .map_err(|e| anyhow!("'{key}' = {s:?} is not a u64: {e}"));
+    }
+    let f = v
+        .as_f64()
+        .ok_or_else(|| anyhow!("'{key}' must be a u64 string or integer"))?;
+    const EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    if !(f.is_finite() && f >= 0.0 && f.fract() == 0.0 && f <= EXACT) {
+        return Err(anyhow!(
+            "'{key}' = {f} is not an exactly-representable u64; write it \
+             as a string"
+        ));
+    }
+    Ok(f as u64)
+}
+
+pub fn churn_from_json(j: &Json) -> Result<ChurnSpec> {
+    Ok(match j.req_str("kind").map_err(err)? {
+        "none" => ChurnSpec::None,
+        "scripted" => {
+            let arr = j
+                .req("events")
+                .map_err(err)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("'events' not an array"))?;
+            let mut events = Vec::with_capacity(arr.len());
+            for e in arr {
+                let t = e.req_f64("t").map_err(err)?;
+                let worker = e.req_usize("worker").map_err(err)?;
+                let event = match e.req_str("event").map_err(err)? {
+                    "leave" => ChurnEvent::Leave { worker },
+                    "rejoin" => ChurnEvent::Rejoin { worker },
+                    "link_outage" => ChurnEvent::LinkOutage {
+                        worker,
+                        secs: e.req_f64("secs").map_err(err)?,
+                    },
+                    "link_degrade" => ChurnEvent::LinkDegrade {
+                        worker,
+                        frac: e.req_f64("frac").map_err(err)?,
+                        secs: e.req_f64("secs").map_err(err)?,
+                    },
+                    other => {
+                        return Err(anyhow!("unknown churn event '{other}'"))
+                    }
+                };
+                events.push(TimedEvent { t, event });
+            }
+            ChurnSpec::Scripted { events }
+        }
+        "random" => {
+            let f = |key| j.req_f64(key).map_err(err);
+            ChurnSpec::Random {
+                leave_rate_per_100s: f("leave_rate_per_100s")?,
+                mean_down_s: f("mean_down_s")?,
+                outage_rate_per_100s: f("outage_rate_per_100s")?,
+                outage_s: f("outage_s")?,
+                horizon_s: f("horizon_s")?,
+                seed: seed_from_json(j, "seed")?,
+            }
+        }
+        other => return Err(anyhow!("unknown churn kind '{other}'")),
     })
 }
 
@@ -338,6 +504,10 @@ pub fn strategy_to_json(s: &StrategyKind) -> Json {
             ("kind", Json::str("deco_sgd")),
             ("update_every", Json::num(*update_every as f64)),
         ]),
+        StrategyKind::DecoEvent { update_every } => Json::obj(vec![
+            ("kind", Json::str("deco_event")),
+            ("update_every", Json::num(*update_every as f64)),
+        ]),
     }
 }
 
@@ -356,6 +526,9 @@ pub fn strategy_from_json(j: &Json) -> Result<StrategyKind> {
         },
         "cocktail_sgd" => StrategyKind::CocktailSgd,
         "deco_sgd" => StrategyKind::DecoSgd {
+            update_every: j.req_usize("update_every").map_err(err)?,
+        },
+        "deco_event" => StrategyKind::DecoEvent {
             update_every: j.req_usize("update_every").map_err(err)?,
         },
         other => return Err(anyhow!("unknown strategy kind '{other}'")),
@@ -403,6 +576,12 @@ impl ExperimentConfig {
         if let Some(c) = self.clip_norm {
             pairs.push(("clip_norm", Json::num(c)));
         }
+        if !self.churn.is_none() {
+            pairs.push(("churn", churn_to_json(&self.churn)));
+        }
+        if self.drain == DrainPolicy::Drain {
+            pairs.push(("drain", Json::str("drain")));
+        }
         Json::obj(pairs)
     }
 
@@ -425,6 +604,25 @@ impl ExperimentConfig {
             log_every: opt_num(j, "log_every").unwrap_or(10.0) as usize,
             block_topk: j.get("block_topk").and_then(|v| v.as_bool()).unwrap_or(false),
             clip_norm: opt_num(j, "clip_norm"),
+            churn: match j.get("churn") {
+                Some(c) => churn_from_json(c)?,
+                None => ChurnSpec::None,
+            },
+            drain: match j.get("drain") {
+                None => DrainPolicy::Drop,
+                Some(v) => match v.as_str() {
+                    Some("drop") => DrainPolicy::Drop,
+                    Some("drain") => DrainPolicy::Drain,
+                    Some(other) => {
+                        return Err(anyhow!("unknown drain policy '{other}'"))
+                    }
+                    None => {
+                        return Err(anyhow!(
+                            "'drain' must be \"drop\" or \"drain\""
+                        ))
+                    }
+                },
+            },
         })
     }
 
@@ -466,6 +664,8 @@ impl ExperimentConfig {
             monitor_alpha: 0.3,
             plan: crate::strategy::PlanBasis::Bottleneck,
             threads: None,
+            churn: self.churn.clone(),
+            drain: self.drain,
         }
     }
 }
@@ -506,6 +706,8 @@ mod tests {
             log_every: 10,
             block_topk: false,
             clip_norm: Some(2.0),
+            churn: ChurnSpec::None,
+            drain: DrainPolicy::Drop,
         }
     }
 
@@ -534,10 +736,142 @@ mod tests {
             StrategyKind::Accordion { delta_low: 0.01, delta_high: 0.3 },
             StrategyKind::CocktailSgd,
             StrategyKind::DecoSgd { update_every: 5 },
+            StrategyKind::DecoEvent { update_every: 7 },
         ] {
             let j = strategy_to_json(&s);
             assert_eq!(strategy_from_json(&j).unwrap(), s);
         }
+    }
+
+    #[test]
+    fn churn_specs_roundtrip() {
+        for c in [
+            ChurnSpec::None,
+            ChurnSpec::Scripted {
+                events: vec![
+                    TimedEvent {
+                        t: 10.0,
+                        event: ChurnEvent::Leave { worker: 0 },
+                    },
+                    TimedEvent {
+                        t: 40.0,
+                        event: ChurnEvent::Rejoin { worker: 0 },
+                    },
+                    TimedEvent {
+                        t: 55.0,
+                        event: ChurnEvent::LinkOutage { worker: 2, secs: 15.0 },
+                    },
+                    TimedEvent {
+                        t: 90.0,
+                        event: ChurnEvent::LinkDegrade {
+                            worker: 1,
+                            frac: 0.3,
+                            secs: 20.0,
+                        },
+                    },
+                ],
+            },
+            ChurnSpec::Random {
+                leave_rate_per_100s: 2.0,
+                mean_down_s: 30.0,
+                outage_rate_per_100s: 1.0,
+                outage_s: 12.0,
+                horizon_s: 600.0,
+                seed: 9,
+            },
+            // seeds above 2^53 must survive the round trip losslessly
+            ChurnSpec::Random {
+                leave_rate_per_100s: 2.0,
+                mean_down_s: 30.0,
+                outage_rate_per_100s: 0.0,
+                outage_s: 0.0,
+                horizon_s: 600.0,
+                seed: (1u64 << 53) + 1,
+            },
+        ] {
+            let j = churn_to_json(&c);
+            let text = j.to_string_pretty();
+            let back = churn_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, c);
+        }
+        // numeric seeds stay accepted for hand-written configs, but only
+        // when they round-trip exactly; wrong-typed drain keys error
+        let hand = Json::parse(
+            "{\"kind\": \"random\", \"leave_rate_per_100s\": 1.0, \
+             \"mean_down_s\": 10.0, \"outage_rate_per_100s\": 0.0, \
+             \"outage_s\": 0.0, \"horizon_s\": 100.0, \"seed\": 42}",
+        )
+        .unwrap();
+        assert!(matches!(
+            churn_from_json(&hand).unwrap(),
+            ChurnSpec::Random { seed: 42, .. }
+        ));
+        let lossy = Json::parse(
+            "{\"kind\": \"random\", \"leave_rate_per_100s\": 1.0, \
+             \"mean_down_s\": 10.0, \"outage_rate_per_100s\": 0.0, \
+             \"outage_s\": 0.0, \"horizon_s\": 100.0, \"seed\": -1}",
+        )
+        .unwrap();
+        assert!(churn_from_json(&lossy).is_err());
+    }
+
+    #[test]
+    fn experiment_config_carries_churn_and_defaults_to_none() {
+        let mut c = sample();
+        c.churn = ChurnSpec::Random {
+            leave_rate_per_100s: 1.0,
+            mean_down_s: 10.0,
+            outage_rate_per_100s: 0.5,
+            outage_s: 5.0,
+            horizon_s: 200.0,
+            seed: 3,
+        };
+        c.drain = DrainPolicy::Drain;
+        let text = c.to_json().to_string_pretty();
+        let back =
+            ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.churn, c.churn);
+        assert_eq!(back.drain, DrainPolicy::Drain);
+        let tp = back.train_params(512);
+        assert_eq!(tp.churn, c.churn);
+        assert_eq!(tp.drain, DrainPolicy::Drain);
+        // pre-elastic configs (no churn/drain keys) parse to the defaults
+        let legacy = sample();
+        let text = legacy.to_json().to_string_pretty();
+        assert!(!text.contains("churn") && !text.contains("drain"));
+        let parsed =
+            ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(parsed.churn.is_none());
+        assert_eq!(parsed.drain, DrainPolicy::Drop);
+        // unknown policies and wrong-typed keys error instead of silently
+        // falling back to Drop
+        let bad = Json::parse(
+            &text.replacen('{', "{\"drain\": \"flush\",", 1),
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+        let bad_type =
+            Json::parse(&text.replacen('{', "{\"drain\": true,", 1)).unwrap();
+        assert!(ExperimentConfig::from_json(&bad_type).is_err());
+    }
+
+    #[test]
+    fn windowed_trace_roundtrips() {
+        let t = TraceKind::Windowed {
+            inner: Box::new(TraceKind::Constant { bps: 1e8 }),
+            windows: vec![
+                DegradeWindow { start_s: 5.0, end_s: 10.0, frac: 0.0 },
+                DegradeWindow { start_s: 20.0, end_s: 30.0, frac: 0.5 },
+            ],
+        };
+        let j = trace_to_json(&t);
+        let back =
+            trace_from_json(&Json::parse(&j.to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back, t);
+        // a windowed constant still reports the inner nominal bandwidth
+        let c = NetworkConfig::homogeneous(t, 0.1);
+        assert_eq!(c.nominal_bps(), 1e8);
     }
 
     #[test]

@@ -103,8 +103,41 @@ impl VirtualClock {
         &self.tx_total
     }
 
-    /// Advance one iteration (k = self.tc.len() + 1, 1-based).
+    /// Advance one iteration (k = self.tc.len() + 1, 1-based) with every
+    /// worker transmitting.
     pub fn tick(&mut self, t_comp: f64, tau: usize, bits: u64) -> Tick {
+        self.tick_members(t_comp, tau, bits, None)
+    }
+
+    /// Advance one iteration over the *active* worker set (elastic
+    /// membership, DESIGN.md §Elasticity). `active = None` means all
+    /// workers and is exactly [`Self::tick`]. With a mask, only masked-in
+    /// workers transmit: a departed worker's timeline freezes (its
+    /// `tm_prev` goes stale, harmlessly dominated by `max(·, TS_k)` on
+    /// rejoin) and the sync arrival is the max over active arrivals only.
+    /// Masked-out workers report a zeroed [`WorkerTick`] so per-link
+    /// monitors see no phantom transfers. The first masked tick latches the
+    /// clock off the uniform fast path permanently — per-worker histories
+    /// may diverge from then on — which is why an all-true-forever run
+    /// (`ChurnSpec::none()`) stays bit-identical to [`Self::tick`].
+    pub fn tick_members(
+        &mut self,
+        t_comp: f64,
+        tau: usize,
+        bits: u64,
+        active: Option<&[bool]>,
+    ) -> Tick {
+        let all_active = match active {
+            None => true,
+            Some(m) => {
+                assert_eq!(m.len(), self.tm_prev.len(), "mask/worker mismatch");
+                assert!(m.iter().any(|&a| a), "active set must be non-empty");
+                m.iter().all(|&a| a)
+            }
+        };
+        if !all_active {
+            self.uniform = false;
+        }
         let k = self.tc.len() + 1;
         let tc_delayed = if k as i64 - 1 - tau as i64 >= 1 {
             self.tc[k - 2 - tau]
@@ -136,6 +169,13 @@ impl VirtualClock {
                 tx_secs: 0.0,
             };
             for (i, link) in self.fabric.links().iter().enumerate() {
+                if let Some(m) = active {
+                    if !m[i] {
+                        // departed: timeline frozen, no phantom transfer
+                        self.worker_last[i] = WorkerTick::default();
+                        continue;
+                    }
+                }
                 let start = self.tm_prev[i].max(ts);
                 let tm = link.transfer_end(start, bits);
                 let wt = WorkerTick {
@@ -248,6 +288,67 @@ mod tests {
         }
         assert_eq!(single.now().to_bits(), fab.now().to_bits());
         assert_eq!(single.now().to_bits(), mixed.now().to_bits());
+    }
+
+    #[test]
+    fn all_true_mask_is_bit_identical_to_tick() {
+        // the determinism contract at the clock level: a mask that never
+        // masks anyone out must not perturb a single bit (fast path intact)
+        let fabric = || {
+            Fabric::with_straggler(
+                4,
+                BandwidthTrace::constant(1e8),
+                0.1,
+                0.5,
+                2.0,
+            )
+        };
+        let mut plain = VirtualClock::new(fabric());
+        let mut masked = VirtualClock::new(fabric());
+        let mask = vec![true; 4];
+        for k in 1..=200usize {
+            let bits = 1_000_000 + (k as u64 % 5) * 300_000;
+            let a = plain.tick(0.05, k % 3, bits);
+            let b = masked.tick_members(0.05, k % 3, bits, Some(&mask));
+            assert_eq!(a.tc.to_bits(), b.tc.to_bits(), "k={k}");
+            assert_eq!(a.tm.to_bits(), b.tm.to_bits(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn masked_straggler_stops_gating_and_rejoins_stale_free() {
+        let fabric = Fabric::with_straggler(
+            4,
+            BandwidthTrace::constant(1e8),
+            0.1,
+            0.25,
+            2.0,
+        );
+        let mut clock = VirtualClock::new(fabric);
+        let bits = 4_000_000u64;
+        // straggler present: it gates the sync arrival
+        let mut mask = vec![true; 4];
+        let t0 = clock.tick_members(0.05, 1, bits, Some(&mask));
+        assert_eq!(t0.tc.to_bits(), clock.worker_ticks()[0].tc.to_bits());
+        // straggler departs: sync snaps to the healthy links' pace and its
+        // WorkerTick zeroes (no phantom transfer for the monitors)
+        mask[0] = false;
+        let t1 = clock.tick_members(0.05, 1, bits, Some(&mask));
+        let healthy = clock.worker_ticks()[1];
+        assert_eq!(t1.tc.to_bits(), healthy.tc.to_bits());
+        assert_eq!(clock.worker_ticks()[0].tx_secs, 0.0);
+        let tx0_frozen = clock.tx_totals()[0];
+        for _ in 0..20 {
+            clock.tick_members(0.05, 1, bits, Some(&mask));
+        }
+        assert_eq!(clock.tx_totals()[0], tx0_frozen, "timeline frozen");
+        // rejoin: the stale tm_prev is dominated by TS, so the straggler
+        // resumes gating immediately without time travel
+        mask[0] = true;
+        let t2 = clock.tick_members(0.05, 1, bits, Some(&mask));
+        assert_eq!(t2.tc.to_bits(), clock.worker_ticks()[0].tc.to_bits());
+        assert!(t2.tc > t1.tc);
+        assert!(clock.tx_totals()[0] > tx0_frozen);
     }
 
     #[test]

@@ -31,6 +31,9 @@
 use super::{VirtualClock, WorkerState};
 use crate::compress::{Compressor, CompressorCache};
 use crate::deco::DecoInput;
+use crate::elastic::{
+    ChurnEvent, ChurnSpec, ChurnTimeline, DrainPolicy, MemberState, Membership,
+};
 use crate::metrics::{Record, RunResult};
 use crate::netsim::{Fabric, FabricMonitor, Link};
 use crate::optim::GradOracle;
@@ -87,6 +90,12 @@ pub struct TrainParams {
     /// setting; with measured compute time they differ exactly as much as
     /// wall-clock timing does (DESIGN.md §Parallel-Execution).
     pub threads: Option<usize>,
+    /// churn schedule (elastic subsystem, DESIGN.md §Elasticity).
+    /// `ChurnSpec::None` — the default — keeps the run bit-identical to a
+    /// fabric-only run, serial and pooled (`tests/elastic.rs`).
+    pub churn: ChurnSpec,
+    /// what happens to a leaving worker's in-flight delayed gradients
+    pub drain: DrainPolicy,
 }
 
 impl Default for TrainParams {
@@ -107,6 +116,8 @@ impl Default for TrainParams {
             monitor_alpha: 0.3,
             plan: PlanBasis::Bottleneck,
             threads: None,
+            churn: ChurnSpec::None,
+            drain: DrainPolicy::Drop,
         }
     }
 }
@@ -126,6 +137,18 @@ pub struct TrainLoop<O: GradOracle> {
     params: TrainParams,
     /// gradient bits at δ=1
     s_g: f64,
+    /// elastic membership state machine (all-active forever on a static run)
+    membership: Membership,
+    /// Active|Draining mask — the workers the clock prices and the per-link
+    /// monitors observe; kept in lockstep with `membership`
+    member_mask: Vec<bool>,
+    /// compiled churn schedule (fault windows are already baked into the
+    /// clock's fabric; membership events fire as the clock passes them)
+    churn: ChurnTimeline,
+    churn_cursor: usize,
+    /// fault-window close times, each an epoch bump for re-planning
+    window_ends: Vec<f64>,
+    window_cursor: usize,
 }
 
 impl<O: GradOracle> TrainLoop<O> {
@@ -143,12 +166,27 @@ impl<O: GradOracle> TrainLoop<O> {
     }
 
     /// One [`Fabric`] link per worker — the general heterogeneous form.
+    /// Panics on an invalid churn spec (programmatic misuse, like the
+    /// fabric/worker-count asserts); config-driven callers should use
+    /// [`Self::try_with_fabric`] to surface the error instead.
     pub fn with_fabric(
         oracle: O,
         strategy: Box<dyn Strategy>,
         fabric: Fabric,
         params: TrainParams,
     ) -> Self {
+        Self::try_with_fabric(oracle, strategy, fabric, params)
+            .expect("invalid churn spec")
+    }
+
+    /// [`Self::with_fabric`] that surfaces an invalid `params.churn` as an
+    /// error — the path for specs that came from user configs.
+    pub fn try_with_fabric(
+        oracle: O,
+        strategy: Box<dyn Strategy>,
+        mut fabric: Fabric,
+        params: TrainParams,
+    ) -> anyhow::Result<Self> {
         let dim = oracle.dim();
         let n = oracle.workers();
         assert_eq!(
@@ -167,7 +205,10 @@ impl<O: GradOracle> TrainLoop<O> {
             Some(t) => WorkerPool::new(t),
             None => WorkerPool::with_default_parallelism(),
         };
-        Self {
+        let churn = params.churn.compile(n)?;
+        churn.bake_windows(&mut fabric);
+        let window_ends = churn.window_ends();
+        Ok(Self {
             oracle,
             strategy,
             clock: VirtualClock::new(fabric),
@@ -179,7 +220,13 @@ impl<O: GradOracle> TrainLoop<O> {
             wire_comps: CompressorCache::new(),
             params,
             s_g,
-        }
+            membership: Membership::new(n),
+            member_mask: vec![true; n],
+            churn,
+            churn_cursor: 0,
+            window_ends,
+            window_cursor: 0,
+        })
     }
 
     pub fn model(&self) -> &[f32] {
@@ -200,6 +247,66 @@ impl<O: GradOracle> TrainLoop<O> {
         self.pool.threads()
     }
 
+    /// Elastic membership state (all-active forever on a static run).
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    /// Depart `worker` immediately under `policy`. Apply BEFORE pricing —
+    /// the churn driver calls this; exposed for tests and external drivers.
+    fn depart(&mut self, worker: usize, drain: DrainPolicy) {
+        let flush =
+            drain == DrainPolicy::Drain && self.workers[worker].queue_len() > 0;
+        self.membership.leave(worker, flush);
+        if !flush {
+            // Drop policy (or nothing in flight): fully departed now
+            self.workers[worker].suspend();
+            self.member_mask[worker] = false;
+            self.monitor.set_active(worker, false);
+        }
+    }
+
+    /// Fire every churn event whose virtual time the clock has passed.
+    /// Membership transitions apply here; fault windows were baked into
+    /// the fabric at construction, so their start/end only bump the epoch
+    /// (event-triggered strategies re-plan on it).
+    fn apply_churn_events(&mut self) {
+        if self.churn.is_empty() {
+            return;
+        }
+        let now = self.clock.now();
+        loop {
+            let Some(ev) = self.churn.events().get(self.churn_cursor) else {
+                break;
+            };
+            if ev.t > now {
+                break;
+            }
+            let event = ev.event.clone();
+            self.churn_cursor += 1;
+            match event {
+                ChurnEvent::Leave { worker } => {
+                    self.depart(worker, self.params.drain);
+                }
+                ChurnEvent::Rejoin { worker } => {
+                    self.membership.rejoin(worker);
+                    self.member_mask[worker] = true;
+                    self.monitor.set_active(worker, true);
+                }
+                ChurnEvent::LinkOutage { .. }
+                | ChurnEvent::LinkDegrade { .. } => {
+                    self.membership.bump();
+                }
+            }
+        }
+        while self.window_cursor < self.window_ends.len()
+            && self.window_ends[self.window_cursor] <= now
+        {
+            self.membership.bump();
+            self.window_cursor += 1;
+        }
+    }
+
     /// Run to completion. `task` labels the result.
     pub fn run(&mut self, task: &str) -> RunResult {
         let n = self.workers.len();
@@ -212,6 +319,10 @@ impl<O: GradOracle> TrainLoop<O> {
         let par_shards = self.pool.threads() > 1 && dim >= SHARD_MIN_DIM;
 
         for t in 1..=self.params.max_iters {
+            // 0. elastic: fire churn events the virtual clock has passed,
+            // so the strategy already sees the new membership epoch
+            self.apply_churn_events();
+
             // 1. strategy decides (τ_t, δ_t)
             let ctx = StrategyCtx {
                 iter: t,
@@ -220,6 +331,8 @@ impl<O: GradOracle> TrainLoop<O> {
                 grad_norm: last_grad_norm,
                 fallback: self.params.fallback,
                 plan: self.params.plan,
+                membership_epoch: self.membership.epoch(),
+                active_workers: self.membership.active_count(),
             };
             let (tau, delta) = self.strategy.params(&ctx);
 
@@ -227,14 +340,27 @@ impl<O: GradOracle> TrainLoop<O> {
             // clip, enqueue; pop g_{t−τ}, EF + compress into the recycled
             // per-worker message. Safe to parallelize: each WorkerState
             // owns its EF vector, queue, RNG, scratch, and compressor cache.
+            // Draining workers flush one in-flight gradient instead of
+            // computing; departed workers sit out (their state is retained
+            // for a warm rejoin — DESIGN.md §Elasticity).
             {
                 let oracle = &self.oracle;
                 let x = &self.x[..];
                 let clip = self.params.clip_norm;
                 let block_topk = self.params.block_topk;
+                let membership = &self.membership;
                 let pool = if par_workers { &self.pool } else { &serial };
                 pool.for_each_chunk_mut(&mut self.workers, |_, chunk| {
                     for ws in chunk.iter_mut() {
+                        let state = membership.state(ws.id);
+                        if state == MemberState::Departed {
+                            continue;
+                        }
+                        if state == MemberState::Draining {
+                            ws.comp_secs = 0.0;
+                            let _ = ws.drain_compress_cached(delta, block_topk);
+                            continue;
+                        }
                         let wall = std::time::Instant::now();
                         let loss = oracle.grad(ws.id, t, x, ws.grad_buffer());
                         ws.comp_secs = wall.elapsed().as_secs_f64();
@@ -256,34 +382,42 @@ impl<O: GradOracle> TrainLoop<O> {
             }
 
             // leader reduction of the phase outputs, in fixed worker order
-            // so the f64 sums are bit-identical at any pool size
+            // so the f64 sums are bit-identical at any pool size; loss /
+            // norm / compute averages run over the *active* set, messages
+            // (incl. draining flushes) aggregate over the member set
             let mut loss_acc = 0.0f64;
             let mut norm_acc = 0.0f64;
             let mut comp_acc = 0.0f64;
             let mut kept_total = 0usize;
             let mut any = false;
             for ws in &self.workers {
-                loss_acc += ws.last_loss;
-                norm_acc += ws.last_grad_norm;
-                comp_acc += ws.comp_secs;
+                if self.membership.is_active(ws.id) {
+                    loss_acc += ws.last_loss;
+                    norm_acc += ws.last_grad_norm;
+                    comp_acc += ws.comp_secs;
+                }
                 if let Some(kept) = ws.message_kept() {
                     kept_total += kept;
                     any = true;
                 }
             }
+            let n_active = self.membership.active_count();
+            let n_members = self.membership.member_count();
             let t_comp = self
                 .params
                 .t_comp_override
-                .unwrap_or(comp_acc / n as f64);
-            last_grad_norm = Some(norm_acc / n as f64);
-            let train_loss = loss_acc / n as f64;
+                .unwrap_or(comp_acc / n_active as f64);
+            last_grad_norm = Some(norm_acc / n_active as f64);
+            let train_loss = loss_acc / n_active as f64;
 
             // 4. aggregate + apply: sharded across the pool for large
             // models (ascending COO indices make shard boundaries two
-            // binary searches), serial otherwise — identical arithmetic
+            // binary searches), serial otherwise — identical arithmetic.
+            // The γ/n average runs over the members whose gradient shares
+            // this iteration carries (= n on a static run).
             if any {
                 let gamma = self.params.gamma;
-                let scale = 1.0 / n as f32;
+                let scale = 1.0 / n_members as f32;
                 let workers = &self.workers;
                 let pool = if par_shards { &self.pool } else { &serial };
                 pool.zip_chunk_mut(
@@ -307,34 +441,56 @@ impl<O: GradOracle> TrainLoop<O> {
                 );
             }
 
-            // 5. price the iteration and feed the monitor
+            // 5. price the iteration over the member set and feed the
+            // monitor (departed workers neither transmit nor observe)
             let bits = if self.params.paper_wire {
                 (delta.min(1.0) * self.s_g) as u64
             } else {
                 // honest wire accounting (COO indices, quantized payloads,
-                // headers), averaged over workers and scaled from the proxy
+                // headers), averaged over members and scaled from the proxy
                 // model's dimension up to the pinned paper-scale S_g
                 let comp: &dyn Compressor =
                     self.wire_comps.get(delta, self.params.block_topk);
-                let proxy_bits = comp.wire_bits(kept_total / n.max(1), dim);
+                let proxy_bits =
+                    comp.wire_bits(kept_total / n_members.max(1), dim);
                 let scale = self.s_g / (dim as f64 * 32.0);
                 (proxy_bits as f64 * scale) as u64
             };
-            let tick = self.clock.tick(t_comp, tau, bits);
-            // each worker's link monitor observes its own transfer and
-            // latency — on a homogeneous fabric every estimator sees the
-            // same stream the former single monitor did
+            let tick = self.clock.tick_members(
+                t_comp,
+                tau,
+                bits,
+                Some(&self.member_mask),
+            );
+            // each member's link monitor observes its own transfer and
+            // latency — on a static homogeneous fabric every estimator sees
+            // the same stream the former single monitor did
             if bits > 0 {
                 for (i, wt) in self.clock.worker_ticks().iter().enumerate() {
-                    if wt.tx_secs > 0.0 {
+                    if self.member_mask[i] && wt.tx_secs > 0.0 {
                         self.monitor.observe_transfer(i, bits, wt.tx_secs);
                     }
                 }
             }
             for (i, link) in self.clock.fabric().links().iter().enumerate() {
-                self.monitor.observe_latency_for(i, link.latency());
+                if self.member_mask[i] {
+                    self.monitor.observe_latency_for(i, link.latency());
+                }
             }
             self.monitor.observe_compute(t_comp);
+
+            // a draining worker whose pipeline just emptied departs fully —
+            // after the tick that priced its final message
+            for w in 0..n {
+                if self.membership.state(w) == MemberState::Draining
+                    && self.workers[w].queue_len() == 0
+                {
+                    self.membership.finish_drain(w);
+                    self.workers[w].suspend();
+                    self.member_mask[w] = false;
+                    self.monitor.set_active(w, false);
+                }
+            }
 
             // 6. metrics + stopping. The average training loss doubles as a
             // divergence guard: a strategy whose (δ, τ) violates the

@@ -5,9 +5,20 @@
 //! each iteration pushes the fresh gradient and pops the front gradient
 //! whenever the queue holds more than the current τ entries — so after a τ
 //! increase the pipeline silently stretches (a few iterations without
-//! updates), and after a decrease it drains one extra gradient per step
-//! until the new depth is reached. Both transients match what a real
-//! asynchronous sender would do.
+//! updates), and after a decrease it drains exactly one extra gradient per
+//! step until the new depth is reached (the extra in-flight gradient is
+//! folded into the EF error via [`ErrorFeedback::absorb`], so its mass
+//! re-emits through later compressed messages instead of being lost). Both
+//! transients match what a real asynchronous sender would do;
+//! `tests/properties.rs::prop_delay_queue_transients` checks them against
+//! an explicit queue model.
+//!
+//! Elasticity (DESIGN.md §Elasticity): a departed worker's `WorkerState` is
+//! *retained* — EF vector, delay queue, RNG — so a `Rejoin` resumes warm.
+//! While departing under the `Drain` policy the worker stops computing but
+//! keeps emitting its in-flight gradients one per iteration
+//! ([`Self::drain_compress_cached`]); under `Drop` it merely clears its
+//! pending message ([`Self::suspend`]) and the queue freezes in place.
 //!
 //! Parallel-execution contract (DESIGN.md §Parallel-Execution): a
 //! `WorkerState` owns *everything* its per-iteration phase touches — EF
@@ -103,12 +114,24 @@ impl WorkerState {
             return None;
         }
         let mut g = self.queue.pop_front().expect("non-empty");
+        self.drain_extra(tau);
         let comp = self.comps.get(delta, block_topk);
         let kept = self.ef.step(&mut g, comp, &mut self.rng);
         self.msg.encode_into(&g);
         self.free.push(g); // recycle for future pushes
         self.msg_kept = Some(kept);
         Some(kept)
+    }
+
+    /// τ decreased below the realized pipeline depth: drain exactly ONE
+    /// extra in-flight gradient this step, folding it into the EF error so
+    /// its mass re-emits through later compressed messages (module docs).
+    fn drain_extra(&mut self, tau: usize) {
+        if self.queue.len() > tau {
+            let extra = self.queue.pop_front().expect("non-empty");
+            self.ef.absorb(&extra);
+            self.free.push(extra);
+        }
     }
 
     /// The message produced by the last [`Self::pop_compress_cached`], if
@@ -141,10 +164,37 @@ impl WorkerState {
             return None;
         }
         let mut g = self.queue.pop_front().expect("non-empty");
+        self.drain_extra(tau);
         let kept = self.ef.step(&mut g, comp, &mut self.rng);
         let sv = SparseVec::encode_with_capacity(&g, kept);
         self.free.push(g); // recycle for future pushes
         Some((sv, kept))
+    }
+
+    /// Departure drain (elastic `Drain` policy): pop the oldest in-flight
+    /// gradient regardless of τ and emit it as this iteration's message —
+    /// the worker has stopped computing, its pipeline is flushing. Returns
+    /// `None` once the queue is empty (the worker is fully departed).
+    pub fn drain_compress_cached(
+        &mut self,
+        delta: f64,
+        block_topk: bool,
+    ) -> Option<usize> {
+        self.msg_kept = None;
+        let mut g = self.queue.pop_front()?;
+        let comp = self.comps.get(delta, block_topk);
+        let kept = self.ef.step(&mut g, comp, &mut self.rng);
+        self.msg.encode_into(&g);
+        self.free.push(g);
+        self.msg_kept = Some(kept);
+        Some(kept)
+    }
+
+    /// Clear any pending outgoing message (the worker departed — `Drop`
+    /// policy — or finished draining). EF vector and delay queue stay put:
+    /// the warm-rejoin contract (module docs).
+    pub fn suspend(&mut self) {
+        self.msg_kept = None;
     }
 
     /// Drop all queued gradients, carried error, and any pending message
@@ -245,7 +295,7 @@ mod tests {
     }
 
     #[test]
-    fn tau_decrease_drains() {
+    fn tau_decrease_drains_one_extra_per_step() {
         let dim = 4;
         let mut w = WorkerState::new(0, dim, 3);
         let comp = Identity;
@@ -256,12 +306,82 @@ mod tests {
         }
         // 6 pushes, one pop at t=5 (len hit 6 > τ=5)
         assert_eq!(w.queue_len(), 5);
-        // τ drops to 0: each call pops one, so repeated calls drain
-        let mut drained = 0;
-        while w.pop_compress(0, &comp).is_some() {
-            drained += 1;
+        // τ drops to 2 mid-run: each step (push + pop) shrinks the queue by
+        // exactly one — the drained extra is absorbed into EF, not lost
+        for (step, want_len) in [(0usize, 4usize), (1, 3), (2, 2)] {
+            w.grad_buffer().iter_mut().for_each(|v| *v = 10.0 + step as f32);
+            w.push_gradient();
+            assert!(w.pop_compress(2, &comp).is_some(), "step {step}");
+            assert_eq!(w.queue_len(), want_len, "step {step}");
         }
-        assert_eq!(drained, 5);
+        assert!(w.error_norm_sq() > 0.0, "drained mass parks in EF");
+        // at the new depth the queue holds steady again
+        w.grad_buffer().iter_mut().for_each(|v| *v = 20.0);
+        w.push_gradient();
+        assert!(w.pop_compress(2, &comp).is_some());
+        assert_eq!(w.queue_len(), 2);
+    }
+
+    #[test]
+    fn drained_gradient_mass_reemits_via_ef() {
+        // total emitted mass over a τ decrease equals total pushed mass:
+        // nothing is dropped, the extra pops come back through EF
+        let dim = 4;
+        let mut w = WorkerState::new(0, dim, 5);
+        let comp = Identity;
+        let mut pushed = 0.0f64;
+        let mut emitted = 0.0f64;
+        let mut step = |w: &mut WorkerState, tau: usize, val: f32| {
+            w.grad_buffer().iter_mut().for_each(|v| *v = val);
+            pushed += val as f64 * dim as f64;
+            w.push_gradient();
+            if let Some((sv, _)) = w.pop_compress(tau, &comp) {
+                emitted += sv.decode().iter().map(|&v| v as f64).sum::<f64>();
+            }
+        };
+        for t in 0..8 {
+            step(&mut w, 4, 1.0 + t as f32);
+        }
+        for t in 8..20 {
+            step(&mut w, 0, 1.0 + t as f32); // τ collapse: drains kick in
+        }
+        assert_eq!(w.queue_len(), 0);
+        assert!(
+            (pushed - emitted).abs() < 1e-3,
+            "pushed {pushed} != emitted {emitted}"
+        );
+    }
+
+    #[test]
+    fn departure_drain_flushes_then_suspend_clears() {
+        let dim = 8;
+        let mut w = WorkerState::new(0, dim, 4);
+        for t in 0..4usize {
+            w.grad_buffer().iter_mut().for_each(|v| *v = t as f32);
+            w.push_gradient();
+            w.pop_compress_cached(3, 1.0, false);
+        }
+        assert_eq!(w.queue_len(), 3);
+        // Drain policy: one in-flight gradient per call, FIFO order
+        for want in 1..=3usize {
+            let kept = w.drain_compress_cached(1.0, false);
+            assert_eq!(kept, Some(dim));
+            let msg = w.message().expect("drain emits");
+            assert_eq!(msg.decode()[0], want as f32);
+        }
+        assert_eq!(w.queue_len(), 0);
+        assert_eq!(w.drain_compress_cached(1.0, false), None);
+        assert!(w.message().is_none(), "empty drain leaves no message");
+        // Drop policy / departure: suspend clears the message, keeps EF
+        w.grad_buffer().iter_mut().for_each(|v| *v = 9.0);
+        w.push_gradient();
+        w.pop_compress_cached(0, 0.5, false);
+        assert!(w.message().is_some());
+        let err = w.error_norm_sq();
+        w.suspend();
+        assert!(w.message().is_none());
+        assert_eq!(w.error_norm_sq(), err, "EF retained for warm rejoin");
+        assert_eq!(w.queue_len(), 0);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! Remark 4, and return the φ-minimal pair.
 
 use super::phi::log_phi;
+use crate::netsim::Fabric;
 
 
 /// Network / workload state consumed by DeCo (Algorithm 1 inputs).
@@ -50,6 +51,40 @@ impl DecoInput {
         }
         assert!(n > 0, "needs at least one link");
         Self { s_g, a: sa / n as f64, b: sb / n as f64, t_comp }
+    }
+
+    /// The bottleneck of the fabric's **active** links at time `t` — the
+    /// membership-aware planning view under churn (DESIGN.md §Elasticity):
+    /// a departed straggler stops constraining the plan, a rejoined one
+    /// constrains it again.
+    ///
+    /// This is the *ground-truth* fabric view, for programmatic planning
+    /// and analysis (like [`Self::bottleneck`]/[`Self::mean_link`]). The
+    /// training loop itself plans on the *monitored* active-set view:
+    /// `netsim::FabricMonitor` applies the same membership mask to its
+    /// per-link EWMA estimators.
+    pub fn bottleneck_fabric(
+        s_g: f64,
+        t_comp: f64,
+        fabric: &Fabric,
+        t: f64,
+        active: &[bool],
+    ) -> Self {
+        let (a, b) = fabric.bottleneck_active(t, active);
+        Self { s_g, a, b, t_comp }
+    }
+
+    /// The mean of the fabric's **active** links at time `t` — the
+    /// heterogeneity-blind control view under churn.
+    pub fn mean_link_fabric(
+        s_g: f64,
+        t_comp: f64,
+        fabric: &Fabric,
+        t: f64,
+        active: &[bool],
+    ) -> Self {
+        let (a, b) = fabric.mean_active(t, active);
+        Self { s_g, a, b, t_comp }
     }
 }
 
@@ -247,6 +282,30 @@ mod tests {
         let hm = DecoInput::mean_link(1e9, 0.2, homo);
         assert_eq!(hb.a, hm.a);
         assert_eq!(hb.b, hm.b);
+    }
+
+    #[test]
+    fn fabric_constructors_follow_the_active_set() {
+        use crate::netsim::{BandwidthTrace, Fabric};
+        let fabric = Fabric::with_straggler(
+            4,
+            BandwidthTrace::constant(1e8),
+            0.1,
+            0.1, // tenth bandwidth
+            9.0, // 9x latency
+        );
+        let all = vec![true; 4];
+        let bot = DecoInput::bottleneck_fabric(1e9, 0.2, &fabric, 0.0, &all);
+        assert_eq!(bot.a, 1e7);
+        assert!((bot.b - 0.9).abs() < 1e-12);
+        // straggler departs: the active-set plan relaxes to the healthy links
+        let mask = vec![false, true, true, true];
+        let gone = DecoInput::bottleneck_fabric(1e9, 0.2, &fabric, 0.0, &mask);
+        assert_eq!(gone.a, 1e8);
+        assert!((gone.b - 0.1).abs() < 1e-12);
+        assert!(solve(&gone).delta > solve(&bot).delta);
+        let mean = DecoInput::mean_link_fabric(1e9, 0.2, &fabric, 0.0, &mask);
+        assert_eq!(mean.a, 1e8, "healthy links are identical");
     }
 
     #[test]

@@ -1,0 +1,296 @@
+//! Churn events and the compiled per-run timeline.
+//!
+//! A [`ChurnTimeline`] is the *realized* schedule one training run
+//! executes: time-sorted [`TimedEvent`]s, validated against the worker
+//! count (membership must never empty, leaves/rejoins must alternate).
+//! Link-level events (`LinkOutage` / `LinkDegrade`) are baked into the
+//! fabric as lazy [`DegradeWindow`]s *before* the run
+//! ([`ChurnTimeline::bake_windows`]), so the virtual clock, the monitors,
+//! and the fabric's bottleneck/mean views all price the same degraded
+//! bandwidth without any per-tick bookkeeping; membership events
+//! (`Leave` / `Rejoin`) are applied by the training loop as the virtual
+//! clock passes their timestamps.
+
+use crate::netsim::{DegradeWindow, Fabric};
+use anyhow::{anyhow, Result};
+
+/// One membership or link fault (times live on the [`TimedEvent`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChurnEvent {
+    /// The worker departs (preemption / dropout). Its `WorkerState` is
+    /// retained for a warm rejoin; its in-flight gradients follow the run's
+    /// [`super::DrainPolicy`].
+    Leave { worker: usize },
+    /// A departed worker resumes with its retained EF vector, delay queue,
+    /// and warm monitor estimators.
+    Rejoin { worker: usize },
+    /// The worker's link is down for `secs`: bandwidth pinned to the trace
+    /// floor, so in-flight transfers stall until the window ends.
+    LinkOutage { worker: usize, secs: f64 },
+    /// The worker's link runs at `frac`× bandwidth for `secs`.
+    LinkDegrade { worker: usize, frac: f64, secs: f64 },
+}
+
+impl ChurnEvent {
+    pub fn worker(&self) -> usize {
+        match *self {
+            Self::Leave { worker }
+            | Self::Rejoin { worker }
+            | Self::LinkOutage { worker, .. }
+            | Self::LinkDegrade { worker, .. } => worker,
+        }
+    }
+}
+
+/// An event stamped with the virtual time (s) at which it fires.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimedEvent {
+    pub t: f64,
+    pub event: ChurnEvent,
+}
+
+/// A compiled, time-sorted churn schedule for one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChurnTimeline {
+    /// sorted ascending by `t`; ties keep insertion order (stable sort)
+    events: Vec<TimedEvent>,
+}
+
+impl ChurnTimeline {
+    /// An empty timeline — the [`super::ChurnSpec::None`] realization.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Sort (stably, by time) without validating. Use
+    /// [`Self::validated`] for schedules from user configs.
+    pub fn new(mut events: Vec<TimedEvent>) -> Self {
+        events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        Self { events }
+    }
+
+    /// Sort and validate against a run with `n` workers: worker indices in
+    /// range, finite non-negative times, positive durations, alternating
+    /// leave/rejoin per worker, and — the invariant the whole coordinator
+    /// leans on — the active set never empties.
+    pub fn validated(events: Vec<TimedEvent>, n: usize) -> Result<Self> {
+        let tl = Self::new(events);
+        tl.validate(n)?;
+        Ok(tl)
+    }
+
+    pub fn events(&self) -> &[TimedEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    fn validate(&self, n: usize) -> Result<()> {
+        let mut active = vec![true; n];
+        let mut count = n;
+        for ev in &self.events {
+            let w = ev.event.worker();
+            if w >= n {
+                return Err(anyhow!(
+                    "churn event names worker {w} but the run has {n}"
+                ));
+            }
+            if !(ev.t.is_finite() && ev.t >= 0.0) {
+                return Err(anyhow!("churn event time {} invalid", ev.t));
+            }
+            match ev.event {
+                ChurnEvent::Leave { .. } => {
+                    if !active[w] {
+                        return Err(anyhow!(
+                            "worker {w} leaves at t={} but is already \
+                             departed",
+                            ev.t
+                        ));
+                    }
+                    if count == 1 {
+                        return Err(anyhow!(
+                            "churn schedule empties the active set at t={}",
+                            ev.t
+                        ));
+                    }
+                    active[w] = false;
+                    count -= 1;
+                }
+                ChurnEvent::Rejoin { .. } => {
+                    if active[w] {
+                        return Err(anyhow!(
+                            "worker {w} rejoins at t={} but is active",
+                            ev.t
+                        ));
+                    }
+                    active[w] = true;
+                    count += 1;
+                }
+                ChurnEvent::LinkOutage { secs, .. } => {
+                    if !(secs.is_finite() && secs > 0.0) {
+                        return Err(anyhow!("outage duration {secs} invalid"));
+                    }
+                }
+                ChurnEvent::LinkDegrade { frac, secs, .. } => {
+                    if !(secs.is_finite() && secs > 0.0) {
+                        return Err(anyhow!(
+                            "degrade duration {secs} invalid"
+                        ));
+                    }
+                    if !(frac.is_finite() && (0.0..=1.0).contains(&frac)) {
+                        return Err(anyhow!("degrade frac {frac} invalid"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The degrade/outage windows this schedule puts on `worker`'s link
+    /// (outages are `frac = 0` windows — the trace floor keeps the link
+    /// integrable).
+    pub fn windows_for(&self, worker: usize) -> Vec<DegradeWindow> {
+        self.events
+            .iter()
+            .filter_map(|ev| match ev.event {
+                ChurnEvent::LinkOutage { worker: w, secs } if w == worker => {
+                    Some(DegradeWindow {
+                        start_s: ev.t,
+                        end_s: ev.t + secs,
+                        frac: 0.0,
+                    })
+                }
+                ChurnEvent::LinkDegrade { worker: w, frac, secs }
+                    if w == worker =>
+                {
+                    Some(DegradeWindow {
+                        start_s: ev.t,
+                        end_s: ev.t + secs,
+                        frac,
+                    })
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Bake every outage/degrade window into the fabric's links, so the
+    /// clock's transfer integration, the per-link monitors, and the
+    /// bottleneck/mean fabric views all see the same time-varying picture.
+    pub fn bake_windows(&self, fabric: &mut Fabric) {
+        for w in 0..fabric.workers() {
+            let wins = self.windows_for(w);
+            if !wins.is_empty() {
+                let link = fabric.link(w).with_windows(wins);
+                fabric.set_link(w, link);
+            }
+        }
+    }
+
+    /// Times at which an outage/degrade window *closes* — the training loop
+    /// bumps the membership epoch there too, so event-triggered DeCo
+    /// re-plans when the fault clears, not just when it strikes.
+    pub fn window_ends(&self) -> Vec<f64> {
+        let mut ends: Vec<f64> = self
+            .events
+            .iter()
+            .filter_map(|ev| match ev.event {
+                ChurnEvent::LinkOutage { secs, .. }
+                | ChurnEvent::LinkDegrade { secs, .. } => Some(ev.t + secs),
+                _ => None,
+            })
+            .collect();
+        ends.sort_by(f64::total_cmp);
+        ends
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{BandwidthTrace, Link};
+
+    fn leave(t: f64, worker: usize) -> TimedEvent {
+        TimedEvent { t, event: ChurnEvent::Leave { worker } }
+    }
+
+    fn rejoin(t: f64, worker: usize) -> TimedEvent {
+        TimedEvent { t, event: ChurnEvent::Rejoin { worker } }
+    }
+
+    #[test]
+    fn sorts_by_time() {
+        let tl = ChurnTimeline::new(vec![leave(5.0, 1), rejoin(2.0, 0)]);
+        assert_eq!(tl.events()[0].t, 2.0);
+        assert_eq!(tl.events()[1].t, 5.0);
+    }
+
+    #[test]
+    fn validates_membership_transitions() {
+        // double leave
+        assert!(
+            ChurnTimeline::validated(vec![leave(1.0, 0), leave(2.0, 0)], 4)
+                .is_err()
+        );
+        // rejoin while active
+        assert!(ChurnTimeline::validated(vec![rejoin(1.0, 2)], 4).is_err());
+        // out-of-range worker
+        assert!(ChurnTimeline::validated(vec![leave(1.0, 7)], 4).is_err());
+        // emptying the active set
+        assert!(ChurnTimeline::validated(
+            vec![leave(1.0, 0), leave(2.0, 1)],
+            2
+        )
+        .is_err());
+        // a legal leave/rejoin cycle passes
+        let ok = ChurnTimeline::validated(
+            vec![leave(1.0, 0), rejoin(3.0, 0), leave(4.0, 0)],
+            2,
+        );
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn windows_extract_and_bake() {
+        let tl = ChurnTimeline::validated(
+            vec![
+                TimedEvent {
+                    t: 10.0,
+                    event: ChurnEvent::LinkOutage { worker: 1, secs: 5.0 },
+                },
+                TimedEvent {
+                    t: 30.0,
+                    event: ChurnEvent::LinkDegrade {
+                        worker: 1,
+                        frac: 0.5,
+                        secs: 10.0,
+                    },
+                },
+            ],
+            3,
+        )
+        .unwrap();
+        let wins = tl.windows_for(1);
+        assert_eq!(wins.len(), 2);
+        assert_eq!(wins[0].end_s, 15.0);
+        assert_eq!(wins[1].frac, 0.5);
+        assert!(tl.windows_for(0).is_empty());
+        assert_eq!(tl.window_ends(), vec![15.0, 40.0]);
+
+        let mut fabric = Fabric::replicate(
+            Link::new(BandwidthTrace::constant(1e8), 0.1),
+            3,
+        );
+        tl.bake_windows(&mut fabric);
+        // worker 1 collapses to the floor during the outage, halves during
+        // the degrade, and is healthy otherwise; others are untouched
+        assert_eq!(fabric.link(1).bandwidth_at(12.0), 1e3);
+        assert_eq!(fabric.link(1).bandwidth_at(35.0), 5e7);
+        assert_eq!(fabric.link(1).bandwidth_at(50.0), 1e8);
+        assert_eq!(fabric.link(0).bandwidth_at(12.0), 1e8);
+        assert!(fabric.link(0).trace().as_constant().is_some());
+        assert!(fabric.link(1).trace().as_constant().is_none());
+    }
+}

@@ -1,0 +1,150 @@
+//! The membership state machine the training loop prices and aggregates
+//! over, plus the **epoch** counter event-triggered DeCo re-plans on.
+//!
+//! Per worker: `Active` (computing, transmitting) → `Draining` (departed
+//! under [`super::DrainPolicy::Drain`]; still flushing its delay queue one
+//! gradient per iteration) → `Departed` (fully absent; its `WorkerState`
+//! and monitor estimators are retained for a warm rejoin) → `Active` again
+//! on rejoin. Every transition — and every link outage/degrade window
+//! boundary, via [`Membership::bump`] — advances the epoch, which is the
+//! single signal `strategy::StrategyCtx` exposes for re-planning.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberState {
+    Active,
+    Draining,
+    Departed,
+}
+
+#[derive(Clone, Debug)]
+pub struct Membership {
+    state: Vec<MemberState>,
+    epoch: u64,
+}
+
+impl Membership {
+    /// All `n` workers active, epoch 0.
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Self { state: vec![MemberState::Active; n], epoch: 0 }
+    }
+
+    /// Monotone change counter: bumped on every membership transition and
+    /// every fault-window boundary. Strategies re-plan when it moves.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn n(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn state(&self, worker: usize) -> MemberState {
+        self.state[worker]
+    }
+
+    pub fn is_active(&self, worker: usize) -> bool {
+        self.state[worker] == MemberState::Active
+    }
+
+    /// Workers currently computing gradients.
+    pub fn active_count(&self) -> usize {
+        self.state
+            .iter()
+            .filter(|&&s| s == MemberState::Active)
+            .count()
+    }
+
+    /// Workers whose messages are being aggregated (active + draining) —
+    /// the divisor of the leader's `γ/n_eff` average.
+    pub fn member_count(&self) -> usize {
+        self.state
+            .iter()
+            .filter(|&&s| s != MemberState::Departed)
+            .count()
+    }
+
+    /// A worker departs. `drain = true` routes it through `Draining`
+    /// (in-flight gradients flush first); `false` departs it immediately.
+    pub fn leave(&mut self, worker: usize, drain: bool) {
+        assert_eq!(
+            self.state[worker],
+            MemberState::Active,
+            "leave of a non-active worker (timeline not validated?)"
+        );
+        self.state[worker] = if drain {
+            MemberState::Draining
+        } else {
+            MemberState::Departed
+        };
+        self.epoch += 1;
+    }
+
+    /// A draining worker's queue emptied: it is now fully departed.
+    pub fn finish_drain(&mut self, worker: usize) {
+        assert_eq!(self.state[worker], MemberState::Draining);
+        self.state[worker] = MemberState::Departed;
+        self.epoch += 1;
+    }
+
+    /// A departed (or still-draining) worker resumes computing.
+    pub fn rejoin(&mut self, worker: usize) {
+        assert_ne!(
+            self.state[worker],
+            MemberState::Active,
+            "rejoin of an active worker (timeline not validated?)"
+        );
+        self.state[worker] = MemberState::Active;
+        self.epoch += 1;
+    }
+
+    /// Epoch bump without a membership transition — fault-window
+    /// boundaries, where the effective `(a, b)` changes under the planner.
+    pub fn bump(&mut self) {
+        self.epoch += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transitions_and_counts() {
+        let mut m = Membership::new(4);
+        assert_eq!(m.epoch(), 0);
+        assert_eq!(m.active_count(), 4);
+        assert_eq!(m.member_count(), 4);
+
+        m.leave(1, true);
+        assert_eq!(m.state(1), MemberState::Draining);
+        assert_eq!(m.active_count(), 3);
+        assert_eq!(m.member_count(), 4, "draining still aggregates");
+        assert_eq!(m.epoch(), 1);
+
+        m.finish_drain(1);
+        assert_eq!(m.state(1), MemberState::Departed);
+        assert_eq!(m.member_count(), 3);
+        assert_eq!(m.epoch(), 2);
+
+        m.leave(0, false);
+        assert_eq!(m.state(0), MemberState::Departed);
+        assert_eq!(m.member_count(), 2);
+
+        m.rejoin(1);
+        assert!(m.is_active(1));
+        assert_eq!(m.active_count(), 2);
+        assert_eq!(m.epoch(), 4);
+
+        m.bump();
+        assert_eq!(m.epoch(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn leave_twice_panics() {
+        let mut m = Membership::new(2);
+        m.leave(0, false);
+        m.leave(0, false);
+    }
+}

@@ -1,0 +1,50 @@
+//! Elastic membership & fault injection (DESIGN.md §Elasticity) — the
+//! dynamic-membership layer over the per-worker [`crate::netsim::Fabric`].
+//!
+//! The paper (and PR 2's fabric) assume a fixed worker set and always-up
+//! links; real cross-region deployments see preemptions, dropouts, and
+//! transient link outages (cf. CrossPipe's cross-datacenter setting and the
+//! delay-compensation line of work). This module makes that hostile
+//! environment a first-class scenario family:
+//!
+//! * [`ChurnEvent`] — `Leave` / `Rejoin` / `LinkOutage` / `LinkDegrade`,
+//!   stamped with virtual times into a [`ChurnTimeline`];
+//! * [`ChurnSpec`] — the serde scenario layer (mirroring
+//!   `config::FabricSpec`): `none`, `scripted` event lists, or seeded
+//!   `random` churn compiled deterministically into a timeline;
+//! * [`Membership`] — the active/draining/departed state machine the
+//!   training loop prices and aggregates over, with a monotone **epoch**
+//!   counter that event-triggered DeCo re-plans on;
+//! * [`DrainPolicy`] — what happens to a departed worker's in-flight
+//!   delayed gradients: `Drop` freezes them in the retained queue (the
+//!   default — absence looks like a pipeline stall), `Drain` flushes them
+//!   one per iteration before the worker fully departs.
+//!
+//! Determinism contract: [`ChurnSpec::None`] compiles to an empty timeline
+//! and the training loop's elastic path degenerates bit-identically to a
+//! fabric-only run (serial and pooled — `tests/elastic.rs`); a fixed seed
+//! compiles to an identical event timeline every time.
+
+pub mod event;
+pub mod membership;
+pub mod spec;
+
+pub use event::{ChurnEvent, ChurnTimeline, TimedEvent};
+pub use membership::{MemberState, Membership};
+pub use spec::ChurnSpec;
+
+/// What happens to a leaving worker's in-flight delayed gradients
+/// (DESIGN.md §Elasticity). Either way its EF vector and delay queue are
+/// retained, so a [`ChurnEvent::Rejoin`] resumes warm.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DrainPolicy {
+    /// The queue freezes in place: no pops while departed, and the worker
+    /// stops contributing the moment it leaves. On rejoin the backlog
+    /// resumes as if the absence were a pipeline stall.
+    #[default]
+    Drop,
+    /// The worker stops computing but keeps emitting its queued gradients,
+    /// one per iteration, until the pipeline is empty — the in-flight
+    /// messages complete delivery — and only then fully departs.
+    Drain,
+}

@@ -1,0 +1,283 @@
+//! `ChurnSpec` — the scenario layer for churn, mirroring
+//! `config::FabricSpec`: a JSON-serializable description (see
+//! `config::churn_to_json` / `churn_from_json`) compiled into a concrete
+//! [`ChurnTimeline`] for one run.
+//!
+//! Compilation is **deterministic**: `Scripted` is sorted + validated
+//! verbatim, and `Random` draws every arrival from per-worker RNG streams
+//! derived from the spec seed, so a fixed seed yields the identical event
+//! timeline on every compile (`tests/elastic.rs`).
+
+use super::event::{ChurnEvent, ChurnTimeline, TimedEvent};
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum ChurnSpec {
+    /// No events: the run degenerates bit-identically to a fabric-only run.
+    #[default]
+    None,
+    /// Explicit event list (scenario files, the `exp churn` arms).
+    Scripted { events: Vec<TimedEvent> },
+    /// Seeded random churn: per-worker Poisson leave/rejoin cycles and link
+    /// outages over a horizon, compiled deterministically from the seed.
+    /// Leaves that would empty the active set are dropped (with their
+    /// paired rejoin) at compile time.
+    Random {
+        /// expected departures per worker per 100 s of virtual time
+        leave_rate_per_100s: f64,
+        /// mean downtime before a departed worker rejoins (s, exponential)
+        mean_down_s: f64,
+        /// expected link outages per worker per 100 s
+        outage_rate_per_100s: f64,
+        /// duration of each link outage (s)
+        outage_s: f64,
+        /// horizon over which events are generated (s)
+        horizon_s: f64,
+        seed: u64,
+    },
+}
+
+impl ChurnSpec {
+    /// The no-churn spec (the determinism-contract baseline).
+    pub fn none() -> Self {
+        Self::None
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, Self::None)
+    }
+
+    /// Compile into the validated, time-sorted timeline a run with `n`
+    /// workers executes.
+    pub fn compile(&self, n: usize) -> Result<ChurnTimeline> {
+        match self {
+            Self::None => Ok(ChurnTimeline::empty()),
+            Self::Scripted { events } => {
+                ChurnTimeline::validated(events.clone(), n)
+            }
+            Self::Random {
+                leave_rate_per_100s,
+                mean_down_s,
+                outage_rate_per_100s,
+                outage_s,
+                horizon_s,
+                seed,
+            } => {
+                for (name, v) in [
+                    ("leave_rate_per_100s", *leave_rate_per_100s),
+                    ("mean_down_s", *mean_down_s),
+                    ("outage_rate_per_100s", *outage_rate_per_100s),
+                    ("outage_s", *outage_s),
+                    ("horizon_s", *horizon_s),
+                ] {
+                    if !(v.is_finite() && v >= 0.0) {
+                        return Err(anyhow!(
+                            "random churn: {name} = {v} invalid"
+                        ));
+                    }
+                }
+                // a positive rate with a zero paired duration would
+                // silently compile to NO events — reject the mislabeled
+                // "churn" run instead
+                if *leave_rate_per_100s > 0.0 && *mean_down_s <= 0.0 {
+                    return Err(anyhow!(
+                        "random churn: leave_rate_per_100s > 0 requires \
+                         mean_down_s > 0"
+                    ));
+                }
+                if *outage_rate_per_100s > 0.0 && *outage_s <= 0.0 {
+                    return Err(anyhow!(
+                        "random churn: outage_rate_per_100s > 0 requires \
+                         outage_s > 0"
+                    ));
+                }
+                Ok(compile_random(
+                    n,
+                    *leave_rate_per_100s,
+                    *mean_down_s,
+                    *outage_rate_per_100s,
+                    *outage_s,
+                    *horizon_s,
+                    *seed,
+                ))
+            }
+        }
+    }
+}
+
+/// Per-worker RNG stream `salt` derived from the spec seed.
+fn stream(seed: u64, worker: usize, salt: u64) -> Rng {
+    Rng::new(
+        seed ^ (worker as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+            ^ salt.wrapping_mul(0xD1B54A32D192ED03),
+    )
+}
+
+/// Exponential draw with mean 1 (clamped away from exact zero).
+fn exp1(rng: &mut Rng) -> f64 {
+    (-(1.0 - rng.next_f64()).ln()).max(1e-9)
+}
+
+fn compile_random(
+    n: usize,
+    leave_rate_per_100s: f64,
+    mean_down_s: f64,
+    outage_rate_per_100s: f64,
+    outage_s: f64,
+    horizon_s: f64,
+    seed: u64,
+) -> ChurnTimeline {
+    let mut events = Vec::new();
+    for w in 0..n {
+        // leave/rejoin cycles: exponential up-time gaps, exponential
+        // downtime with mean `mean_down_s`
+        let leave_rate = leave_rate_per_100s / 100.0;
+        if leave_rate > 0.0 && mean_down_s > 0.0 {
+            let mut rng = stream(seed, w, 1);
+            let mut t = exp1(&mut rng) / leave_rate;
+            while t < horizon_s {
+                let down = mean_down_s * exp1(&mut rng);
+                events.push(TimedEvent {
+                    t,
+                    event: ChurnEvent::Leave { worker: w },
+                });
+                // the paired rejoin always exists (events past the run's
+                // end simply never fire), so leaves/rejoins alternate
+                events.push(TimedEvent {
+                    t: t + down,
+                    event: ChurnEvent::Rejoin { worker: w },
+                });
+                t = t + down + exp1(&mut rng) / leave_rate;
+            }
+        }
+        // link outages: exponential gaps, fixed duration, non-overlapping
+        let outage_rate = outage_rate_per_100s / 100.0;
+        if outage_rate > 0.0 && outage_s > 0.0 {
+            let mut rng = stream(seed, w, 2);
+            let mut t = exp1(&mut rng) / outage_rate;
+            while t < horizon_s {
+                events.push(TimedEvent {
+                    t,
+                    event: ChurnEvent::LinkOutage { worker: w, secs: outage_s },
+                });
+                t += outage_s + exp1(&mut rng) / outage_rate;
+            }
+        }
+    }
+    // enforce the never-empty invariant: drop any leave that would empty
+    // the active set, together with its paired rejoin
+    let sorted = ChurnTimeline::new(events);
+    let mut count = n;
+    let mut skip_rejoin = vec![0usize; n];
+    let mut kept = Vec::with_capacity(sorted.events().len());
+    for ev in sorted.events() {
+        match ev.event {
+            ChurnEvent::Leave { worker } => {
+                if count == 1 {
+                    skip_rejoin[worker] += 1;
+                    continue;
+                }
+                count -= 1;
+                kept.push(ev.clone());
+            }
+            ChurnEvent::Rejoin { worker } => {
+                if skip_rejoin[worker] > 0 {
+                    skip_rejoin[worker] -= 1;
+                    continue;
+                }
+                count += 1;
+                kept.push(ev.clone());
+            }
+            _ => kept.push(ev.clone()),
+        }
+    }
+    ChurnTimeline::validated(kept, n)
+        .expect("random compilation preserves the membership invariants")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_spec(seed: u64) -> ChurnSpec {
+        ChurnSpec::Random {
+            leave_rate_per_100s: 3.0,
+            mean_down_s: 20.0,
+            outage_rate_per_100s: 2.0,
+            outage_s: 10.0,
+            horizon_s: 500.0,
+            seed,
+        }
+    }
+
+    #[test]
+    fn none_compiles_empty() {
+        assert!(ChurnSpec::none().compile(4).unwrap().is_empty());
+        assert!(ChurnSpec::default().is_none());
+    }
+
+    #[test]
+    fn random_is_deterministic_in_the_seed() {
+        let a = random_spec(7).compile(4).unwrap();
+        let b = random_spec(7).compile(4).unwrap();
+        assert_eq!(a, b, "same seed must compile the same timeline");
+        assert!(!a.is_empty(), "these rates should produce events");
+        let c = random_spec(8).compile(4).unwrap();
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn random_never_empties_even_one_worker() {
+        // n = 1: every leave would empty the set, so all must be dropped
+        let tl = random_spec(3).compile(1).unwrap();
+        assert!(tl
+            .events()
+            .iter()
+            .all(|e| !matches!(e.event, ChurnEvent::Leave { .. })));
+    }
+
+    #[test]
+    fn random_rejects_degenerate_params() {
+        let bad = ChurnSpec::Random {
+            leave_rate_per_100s: f64::NAN,
+            mean_down_s: 10.0,
+            outage_rate_per_100s: 0.0,
+            outage_s: 0.0,
+            horizon_s: 100.0,
+            seed: 0,
+        };
+        assert!(bad.compile(4).is_err());
+        // a positive rate with a zero paired duration would be a silent
+        // no-op "churn" run — rejected, not compiled to nothing
+        let silent_leaves = ChurnSpec::Random {
+            leave_rate_per_100s: 4.0,
+            mean_down_s: 0.0,
+            outage_rate_per_100s: 0.0,
+            outage_s: 0.0,
+            horizon_s: 100.0,
+            seed: 0,
+        };
+        assert!(silent_leaves.compile(4).is_err());
+        let silent_outages = ChurnSpec::Random {
+            leave_rate_per_100s: 0.0,
+            mean_down_s: 0.0,
+            outage_rate_per_100s: 2.0,
+            outage_s: 0.0,
+            horizon_s: 100.0,
+            seed: 0,
+        };
+        assert!(silent_outages.compile(4).is_err());
+    }
+
+    #[test]
+    fn scripted_validates() {
+        let bad = ChurnSpec::Scripted {
+            events: vec![TimedEvent {
+                t: 1.0,
+                event: ChurnEvent::Rejoin { worker: 0 },
+            }],
+        };
+        assert!(bad.compile(4).is_err());
+    }
+}

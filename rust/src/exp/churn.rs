@@ -1,0 +1,365 @@
+//! `exp churn` — elastic-membership study (beyond the paper: it assumes a
+//! fixed worker set and always-up links; real cross-region training sees
+//! preemptions and transient outages).
+//!
+//! Sweeps churn rate × outage duration × strategy on the straggler fabric:
+//! worker 0 (the bottleneck: ¼ bandwidth, 4× latency) cyclically leaves and
+//! rejoins, and worker 1's link optionally suffers outages while the
+//! straggler is present. Every membership event moves the effective
+//! bottleneck `(a, b)` under the planner: when the straggler departs, the
+//! active set is healthy and the conservative plan (tiny δ, deep τ) wastes
+//! convergence per iteration; when it rejoins, a stale aggressive plan
+//! stalls every iteration on the slow link. The comparison is **DeCo
+//! (event)** — re-solving the moment the membership epoch moves — against
+//! **DeCo (boundary)**, the same controller waiting for its `E` boundary
+//! (E = 400 iterations ≈ 80 s here, so events routinely strike mid-window).
+//! The `recovery` column is `t(boundary) / t(event)`: how much
+//! event-triggered re-planning wins back. `slowdown` is the degradation of
+//! each arm against its own calm (no-churn) run.
+//!
+//! Deterministic by construction: constant base trace, pinned T_comp, the
+//! analytic quadratic oracle, and a seeded churn compiler —
+//! `tests/elastic.rs` asserts two sweeps produce byte-identical CSV.
+
+use crate::config::{FabricSpec, NetworkConfig};
+use crate::coordinator::{TrainLoop, TrainParams};
+use crate::deco::DecoInput;
+use crate::elastic::{ChurnEvent, ChurnSpec, TimedEvent};
+use crate::exp::{results_dir, speedup};
+use crate::metrics::{format_table, RunResult};
+use crate::netsim::TraceKind;
+use crate::optim::Quadratic;
+use crate::strategy::{PlanBasis, StrategyKind};
+use crate::util::WorkerPool;
+
+/// Base (healthy-link) network: 100 Mbps, 150 ms — same as `exp hetero`.
+const BASE_BPS: f64 = 1e8;
+const BASE_LAT: f64 = 0.15;
+/// Straggler severity for worker 0: ¼ bandwidth, 4× latency.
+const STRAG_FRAC: f64 = 0.25;
+const STRAG_MULT: f64 = 4.0;
+/// Pinned per-iteration compute time (s).
+const T_COMP: f64 = 0.2;
+/// Pinned gradient size (bits): a full gradient costs exactly one T_comp on
+/// a healthy link, so both planner channels (δ and τ) matter.
+const S_G: f64 = 2e7;
+const GAMMA: f32 = 0.02;
+/// Same loss target as the quadratic TaskSpec.
+const TARGET: f64 = 0.18;
+/// DeCo refresh period (iterations): ≈ 80 s of virtual time at T_comp, so
+/// churn events routinely strike mid-window and boundary-only re-planning
+/// runs stale for most of it.
+const UPDATE_EVERY: usize = 400;
+/// Upper bound on any arm's per-iteration virtual time in this setup
+/// (T_comp 0.2 + straggler transmission 0.8 + latency 0.6, with outage
+/// stalls amortized well under the slack) — sizes the churn horizon so
+/// events cover the *whole* run at any `--scale`.
+const PER_ITER_BOUND_S: f64 = 2.0;
+
+/// Churn generation horizon for a run of `max_iters` iterations:
+/// comfortably past the slowest arm's end, so no scenario silently goes
+/// calm partway through a long run.
+fn horizon_for(max_iters: usize) -> f64 {
+    max_iters as f64 * PER_ITER_BOUND_S
+}
+
+/// Scripted periodic churn over `[0, horizon_s)`: each cycle the straggler
+/// (worker 0) leaves at 25% and rejoins at 75% of the cycle; with
+/// `outage_s > 0`, worker 1's link goes down right after the rejoin (while
+/// the straggler gates the pipeline — the compound-fault case).
+pub fn cycle_spec(cycle_s: f64, outage_s: f64, horizon_s: f64) -> ChurnSpec {
+    let mut events = Vec::new();
+    let mut t = 0.0;
+    while t + cycle_s <= horizon_s {
+        events.push(TimedEvent {
+            t: t + 0.25 * cycle_s,
+            event: ChurnEvent::Leave { worker: 0 },
+        });
+        events.push(TimedEvent {
+            t: t + 0.75 * cycle_s,
+            event: ChurnEvent::Rejoin { worker: 0 },
+        });
+        if outage_s > 0.0 {
+            events.push(TimedEvent {
+                t: t + 0.8 * cycle_s,
+                event: ChurnEvent::LinkOutage { worker: 1, secs: outage_s },
+            });
+        }
+        t += cycle_s;
+    }
+    ChurnSpec::Scripted { events }
+}
+
+/// One training run on the straggler fabric under `spec`. `dim` is exposed
+/// so the tests can shrink the oracle.
+pub fn run_one(
+    spec: &ChurnSpec,
+    kind: StrategyKind,
+    workers: usize,
+    dim: usize,
+    max_iters: usize,
+    seed: u64,
+) -> anyhow::Result<RunResult> {
+    let net = NetworkConfig {
+        trace: TraceKind::Constant { bps: BASE_BPS },
+        latency_s: BASE_LAT,
+        fabric: FabricSpec::Straggler { frac: STRAG_FRAC, mult: STRAG_MULT },
+    };
+    let fabric = net.build_fabric(workers)?;
+    let oracle = Quadratic::new(dim, workers, 0.5, 0.1, 0.3, 0.2, seed);
+    let params = TrainParams {
+        gamma: GAMMA,
+        max_iters,
+        log_every: 5,
+        loss_target: Some(TARGET),
+        t_comp_override: Some(T_COMP),
+        s_g_override: Some(S_G),
+        seed,
+        fallback: DecoInput { s_g: S_G, a: BASE_BPS, b: BASE_LAT, t_comp: T_COMP },
+        plan: PlanBasis::Bottleneck,
+        // runs fan out run-level over the pool (the sweep_strategies
+        // pattern); each inner loop stays serial
+        threads: Some(1),
+        churn: spec.clone(),
+        ..Default::default()
+    };
+    let mut tl =
+        TrainLoop::try_with_fabric(oracle, kind.build(), fabric, params)?;
+    Ok(tl.run("quadratic"))
+}
+
+fn arms() -> Vec<(&'static str, StrategyKind)> {
+    vec![
+        ("D-SGD", StrategyKind::DSgd),
+        ("DeCo (boundary)", StrategyKind::DecoSgd { update_every: UPDATE_EVERY }),
+        ("DeCo (event)", StrategyKind::DecoEvent { update_every: UPDATE_EVERY }),
+    ]
+}
+
+/// Scenario ladder: (label, spec). Labels are comma-free — they land in
+/// the first CSV column verbatim. `(cycle_s, outage_s)` = (0, 0) encodes
+/// the calm row and the seeded-random row.
+fn scenarios(seed: u64, horizon_s: f64) -> Vec<(String, f64, f64, ChurnSpec)> {
+    let mut out = vec![("calm".to_string(), 0.0, 0.0, ChurnSpec::None)];
+    for cycle_s in [120.0, 60.0] {
+        for outage_s in [0.0, 15.0] {
+            let label = if outage_s > 0.0 {
+                format!("cycle {cycle_s:.0}s + outage {outage_s:.0}s")
+            } else {
+                format!("cycle {cycle_s:.0}s")
+            };
+            out.push((
+                label,
+                cycle_s,
+                outage_s,
+                cycle_spec(cycle_s, outage_s, horizon_s),
+            ));
+        }
+    }
+    out.push((
+        "random churn".to_string(),
+        0.0,
+        10.0,
+        ChurnSpec::Random {
+            leave_rate_per_100s: 2.0,
+            mean_down_s: 25.0,
+            outage_rate_per_100s: 1.0,
+            outage_s: 10.0,
+            horizon_s,
+            seed,
+        },
+    ));
+    out
+}
+
+/// The full sweep: returns `(csv, table_rows)`. Deterministic in
+/// `(scale, workers, dim, seed)` — the determinism contract `tests/
+/// elastic.rs` checks byte-for-byte.
+pub fn sweep(
+    scale: f64,
+    workers: usize,
+    dim: usize,
+    seed: u64,
+) -> anyhow::Result<(String, Vec<Vec<String>>)> {
+    let max_iters = ((6000.0 * scale) as usize).max(50);
+    let arms = arms();
+    let sc = scenarios(seed, horizon_for(max_iters));
+    let n_combos = sc.len() * arms.len();
+    let pool = WorkerPool::new(WorkerPool::default_threads().min(n_combos));
+    eprintln!("[churn] {n_combos} runs across {} threads", pool.threads());
+    let results = pool.map(n_combos, |i| {
+        let (_, _, _, spec) = &sc[i / arms.len()];
+        let (_, kind) = &arms[i % arms.len()];
+        run_one(spec, kind.clone(), workers, dim, max_iters, seed)
+    });
+    let mut results = results.into_iter();
+    let mut csv = String::from(
+        "scenario,cycle_s,outage_s,strategy,time_to_target,total_iters,\
+         slowdown_vs_calm\n",
+    );
+    let mut rows = Vec::new();
+    // calm times per arm, for the degradation column
+    let mut calm: Vec<Option<f64>> = Vec::new();
+    for (label, cycle_s, outage_s, _) in &sc {
+        let mut cells = vec![label.clone()];
+        let mut times: Vec<Option<f64>> = Vec::new();
+        for (ai, (arm, _)) in arms.iter().enumerate() {
+            let res = results.next().expect("one result per combo")?;
+            let t = res.time_to_loss(TARGET);
+            if label == "calm" {
+                calm.push(t);
+            }
+            let slowdown = match (calm.get(ai).copied().flatten(), t) {
+                (Some(c), Some(t)) if c > 0.0 => format!("{:.2}", t / c),
+                _ => "-".into(),
+            };
+            csv.push_str(&format!(
+                "{label},{cycle_s},{outage_s},{arm},{},{},{slowdown}\n",
+                t.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+                res.total_iters
+            ));
+            cells.push(
+                t.map(|v| format!("{v:.1}s")).unwrap_or_else(|| "-".into()),
+            );
+            times.push(t);
+        }
+        // recovery of event-triggered re-planning over boundary-only
+        cells.push(speedup(times[1], times[2]));
+        rows.push(cells);
+    }
+    Ok((csv, rows))
+}
+
+pub fn main(scale: f64, workers: usize, seed: u64) -> anyhow::Result<()> {
+    println!(
+        "exp churn — churn rate x outage duration x strategy on a \
+         {workers}-worker straggler fabric\n(base {:.0} Mbps / {BASE_LAT} s; \
+         worker 0 = straggler at 1/4 bw, 4x lat, cycling leave/rejoin; \
+         time-to-loss {TARGET} on the quadratic; DeCo E = {UPDATE_EVERY})\n",
+        BASE_BPS / 1e6
+    );
+    let (csv, rows) = sweep(scale, workers, 4096, seed)?;
+    println!(
+        "{}",
+        format_table(
+            &["scenario", "D-SGD", "DeCo (boundary)", "DeCo (event)", "recovery"],
+            &rows
+        )
+    );
+    let path = results_dir().join("churn.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_ladder_shape() {
+        let sc = scenarios(7, 2000.0);
+        assert_eq!(sc.len(), 6);
+        assert!(sc[0].3.is_none());
+        assert!(sc.iter().all(|(label, ..)| !label.contains(',')));
+        // every scripted spec compiles for a 4-worker run
+        for (_, _, _, spec) in &sc {
+            assert!(spec.compile(4).is_ok());
+        }
+    }
+
+    #[test]
+    fn horizon_scales_with_run_length() {
+        // churn must cover the whole run at any --scale: the last scripted
+        // cycle starts within one cycle of the per-iteration time bound
+        for max_iters in [300usize, 6000, 18000] {
+            let h = horizon_for(max_iters);
+            assert!(h >= max_iters as f64 * PER_ITER_BOUND_S);
+            let tl = cycle_spec(120.0, 15.0, h).compile(4).unwrap();
+            let last = tl.events().last().unwrap().t;
+            assert!(
+                last >= h - 2.0 * 120.0,
+                "events end at {last} but the horizon is {h}"
+            );
+        }
+    }
+
+    #[test]
+    fn cycle_spec_alternates_and_repeats() {
+        let spec = cycle_spec(100.0, 10.0, 2000.0);
+        let tl = spec.compile(4).unwrap();
+        let leaves = tl
+            .events()
+            .iter()
+            .filter(|e| matches!(e.event, ChurnEvent::Leave { .. }))
+            .count();
+        let rejoins = tl
+            .events()
+            .iter()
+            .filter(|e| matches!(e.event, ChurnEvent::Rejoin { .. }))
+            .count();
+        assert_eq!(leaves, rejoins);
+        assert_eq!(leaves, 20, "2000 s horizon / 100 s cycle");
+        assert_eq!(tl.events()[0].t, 25.0);
+    }
+
+    #[test]
+    fn event_triggered_beats_boundary_under_churn() {
+        // the headline: with the straggler cycling, event-triggered DeCo
+        // reaches the target sooner than boundary-only DeCo
+        let spec = cycle_spec(120.0, 0.0, horizon_for(6000));
+        let boundary = run_one(
+            &spec,
+            StrategyKind::DecoSgd { update_every: UPDATE_EVERY },
+            4,
+            512,
+            6000,
+            7,
+        )
+        .unwrap();
+        let event = run_one(
+            &spec,
+            StrategyKind::DecoEvent { update_every: UPDATE_EVERY },
+            4,
+            512,
+            6000,
+            7,
+        )
+        .unwrap();
+        let tb = boundary.time_to_loss(TARGET).expect("boundary reaches");
+        let te = event.time_to_loss(TARGET).expect("event reaches");
+        assert!(
+            te < tb,
+            "event-triggered {te:.1}s should beat boundary-only {tb:.1}s"
+        );
+    }
+
+    #[test]
+    fn calm_run_makes_event_and_boundary_identical() {
+        // with no churn the epoch never moves, so the two DeCo arms are the
+        // same controller — bit-identical runs
+        let b = run_one(
+            &ChurnSpec::None,
+            StrategyKind::DecoSgd { update_every: UPDATE_EVERY },
+            4,
+            256,
+            800,
+            7,
+        )
+        .unwrap();
+        let e = run_one(
+            &ChurnSpec::None,
+            StrategyKind::DecoEvent { update_every: UPDATE_EVERY },
+            4,
+            256,
+            800,
+            7,
+        )
+        .unwrap();
+        assert_eq!(b.total_iters, e.total_iters);
+        assert_eq!(b.total_time.to_bits(), e.total_time.to_bits());
+        for (rb, re) in b.records.iter().zip(e.records.iter()) {
+            assert_eq!(rb.loss.to_bits(), re.loss.to_bits());
+        }
+    }
+}

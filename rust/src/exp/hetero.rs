@@ -95,6 +95,7 @@ pub fn run_one(
         // runs fan out run-level over the pool (like sweep_strategies);
         // each inner loop stays serial to avoid oversubscription
         threads: Some(1),
+        ..Default::default()
     };
     let mut tl = TrainLoop::with_fabric(oracle, kind.build(), fabric, params);
     Ok(tl.run("quadratic"))

@@ -15,8 +15,12 @@
 //! | hetero | straggler severity × strategy on a per-worker    |
 //! |        | fabric: bottleneck vs mean-link DeCo planning    |
 //! |        | (beyond the paper — its deferred limitation)     |
+//! | churn  | worker churn × link outages on the elastic       |
+//! |        | fabric: event-triggered vs boundary-only DeCo    |
+//! |        | re-planning (beyond the paper)                   |
 
 pub mod ablation;
+pub mod churn;
 pub mod fig1;
 pub mod fig2;
 pub mod fig4;

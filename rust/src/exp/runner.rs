@@ -126,6 +126,8 @@ impl TaskSpec {
             log_every: 5,
             block_topk: false,
             clip_norm: self.clip_norm,
+            churn: crate::elastic::ChurnSpec::None,
+            drain: crate::elastic::DrainPolicy::Drop,
         }
     }
 }
@@ -221,14 +223,15 @@ impl ExpEnv {
         }
         // every run is priced on a per-worker fabric; the homogeneous spec
         // replicates the base link and stays bit-identical to the former
-        // single shared link (tests/fabric.rs)
+        // single shared link (tests/fabric.rs). try_with_fabric surfaces
+        // an invalid config-driven churn spec as an error, not a panic.
         let fabric = cfg.network.build_fabric(cfg.workers)?;
-        let mut tl = TrainLoop::with_fabric(
+        let mut tl = TrainLoop::try_with_fabric(
             oracle,
             cfg.strategy.build(),
             fabric,
             params,
-        );
+        )?;
         Ok(tl.run(&cfg.task))
     }
 

@@ -21,6 +21,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod deco;
+pub mod elastic;
 pub mod exp;
 pub mod metrics;
 pub mod netsim;

@@ -2,9 +2,9 @@
 //! vendored crate set has no clap).
 //!
 //! ```text
-//! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|hetero|all>
+//! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|hetero|churn|all>
 //!           [--scale F] [--tasks t1 t2] [--nodes 4 8] [--workers N]
-//!           [--task NAME] [--t-comp F] [--mult F]
+//!           [--task NAME] [--t-comp F] [--mult F] [--seed N]
 //! repro train --config cfg.json [--out run.csv]
 //! repro deco --a BPS --b S --t-comp S --s-g BITS
 //! repro artifacts
@@ -71,10 +71,13 @@ repro — DeCo-SGD paper reproduction CLI
 
 USAGE:
   repro exp <id> [--scale F] [--tasks T..] [--nodes N..] [--workers N]
-                 [--task NAME] [--t-comp F] [--mult F]
-      ids: fig1 fig2 fig4 fig5 fig6 table1 thm3 phi ablation hetero all
+                 [--task NAME] [--t-comp F] [--mult F] [--seed N]
+      ids: fig1 fig2 fig4 fig5 fig6 table1 thm3 phi ablation hetero churn all
       hetero: straggler severity x strategy sweep on a per-worker fabric
               (--workers N, --mult F = straggler latency multiplier)
+      churn:  worker churn x link outages x strategy on the elastic fabric —
+              event-triggered vs boundary-only DeCo re-planning
+              (--workers N, --seed N drives the random-churn row)
   repro train --config cfg.json [--out run.csv]
   repro deco --a BPS --b SECONDS --t-comp SECONDS --s-g BITS
   repro artifacts
@@ -123,6 +126,10 @@ fn main() -> Result<()> {
                 "hetero" => {
                     let mult = args.flag_f64("mult").unwrap_or(6.0);
                     exp::hetero::main(scale, workers, mult)?;
+                }
+                "churn" => {
+                    let seed = args.flag_usize("seed").unwrap_or(7) as u64;
+                    exp::churn::main(scale, workers, seed)?;
                 }
                 "all" => {
                     exp::fig1::main(t_comp)?;

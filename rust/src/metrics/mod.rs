@@ -100,6 +100,8 @@ impl RunResult {
     }
 
     pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        ensure_parent(path)?;
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_csv().as_bytes())
     }
@@ -131,9 +133,22 @@ impl RunResult {
     }
 
     pub fn write_json(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        ensure_parent(path)?;
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_json().to_string_pretty().as_bytes())
     }
+}
+
+/// Create the parent directory of `path` if it doesn't exist yet, so
+/// `repro train --out results/nested/x.csv` works on a fresh checkout.
+fn ensure_parent(path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    Ok(())
 }
 
 /// Pretty-print a table of (method, value) rows — the experiment CLIs all
@@ -220,6 +235,26 @@ mod tests {
         let csv = run.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("iter,time,loss"));
+    }
+
+    #[test]
+    fn writers_create_missing_parent_dirs() {
+        let run = RunResult {
+            method: "deco".into(),
+            records: vec![rec(1, 0.5, 2.0)],
+            ..Default::default()
+        };
+        let base = std::env::temp_dir().join(format!(
+            "deco_metrics_test_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let csv_path = base.join("nested/deeper/run.csv");
+        run.write_csv(&csv_path).expect("csv into fresh nested dir");
+        let json_path = base.join("other/run.json");
+        run.write_json(&json_path).expect("json into fresh nested dir");
+        assert!(csv_path.exists() && json_path.exists());
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

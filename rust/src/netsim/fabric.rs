@@ -75,6 +75,12 @@ impl Fabric {
         &self.links
     }
 
+    /// Replace one worker's link — how churn schedules bake outage/degrade
+    /// windows into the fabric before a run (elastic subsystem).
+    pub fn set_link(&mut self, worker: usize, link: Link) {
+        self.links[worker] = link;
+    }
+
     /// Arrival time of the synchronous aggregation: max over per-worker
     /// arrivals of a message of `bits` started at `start`.
     pub fn sync_arrival(&self, start: f64, bits: u64) -> f64 {
@@ -107,6 +113,39 @@ impl Fabric {
         let a = self.links.iter().map(|l| l.bandwidth_at(t)).sum::<f64>() / n;
         let b = self.links.iter().map(|l| l.latency()).sum::<f64>() / n;
         (a, b)
+    }
+
+    /// The bottleneck over the *active* subset of workers — the
+    /// membership-aware planning view under churn (DESIGN.md §Elasticity).
+    /// Panics if the mask is empty or all-false: an empty active set has no
+    /// bottleneck (the elastic layer never lets membership empty).
+    pub fn bottleneck_active(&self, t: f64, active: &[bool]) -> (f64, f64) {
+        assert_eq!(active.len(), self.links.len());
+        let (mut a, mut b) = (f64::INFINITY, f64::NEG_INFINITY);
+        for (link, &on) in self.links.iter().zip(active) {
+            if on {
+                a = a.min(link.bandwidth_at(t));
+                b = b.max(link.latency());
+            }
+        }
+        assert!(a.is_finite(), "active set must be non-empty");
+        (a, b)
+    }
+
+    /// Mean-link parameters over the *active* subset — the
+    /// heterogeneity-blind control view under churn.
+    pub fn mean_active(&self, t: f64, active: &[bool]) -> (f64, f64) {
+        assert_eq!(active.len(), self.links.len());
+        let (mut sa, mut sb, mut n) = (0.0, 0.0, 0usize);
+        for (link, &on) in self.links.iter().zip(active) {
+            if on {
+                sa += link.bandwidth_at(t);
+                sb += link.latency();
+                n += 1;
+            }
+        }
+        assert!(n > 0, "active set must be non-empty");
+        (sa / n as f64, sb / n as f64)
     }
 }
 
@@ -166,6 +205,34 @@ mod tests {
             assert_eq!(f.link(0).bandwidth_at(t), (base.at(t) * 0.5).max(1e3));
             assert_eq!(f.link(1).bandwidth_at(t), base.at(t));
         }
+    }
+
+    #[test]
+    fn active_views_skip_departed_workers() {
+        let f = Fabric::with_straggler(
+            4,
+            BandwidthTrace::constant(1e8),
+            0.1,
+            0.25,
+            2.0,
+        );
+        let all = vec![true; 4];
+        assert_eq!(f.bottleneck_active(0.0, &all), f.bottleneck(0.0));
+        assert_eq!(f.mean_active(0.0, &all), f.mean(0.0));
+        // straggler (worker 0) departed: the active bottleneck is healthy
+        let mask = vec![false, true, true, true];
+        assert_eq!(f.bottleneck_active(0.0, &mask), (1e8, 0.1));
+        let (am, bm) = f.mean_active(0.0, &mask);
+        assert_eq!(am, 1e8);
+        assert!((bm - 0.1).abs() < 1e-12, "bm={bm}");
+    }
+
+    #[test]
+    fn set_link_replaces_one_worker() {
+        let mut f = Fabric::homogeneous(3, BandwidthTrace::constant(1e8), 0.1);
+        f.set_link(1, Link::new(BandwidthTrace::constant(1e7), 0.4));
+        assert_eq!(f.bottleneck(0.0), (1e7, 0.4));
+        assert_eq!(f.link(0).latency(), 0.1);
     }
 
     #[test]

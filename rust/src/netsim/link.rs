@@ -5,7 +5,7 @@
 //! the effect DeCo-SGD's adaptivity exploits. The paper's model
 //! (`delta·S_g/a + b`) is the constant-trace special case, asserted in tests.
 
-use super::trace::BandwidthTrace;
+use super::trace::{BandwidthTrace, DegradeWindow};
 
 /// Integration step for varying-bandwidth transfers (s).
 const INT_DT: f64 = 0.01;
@@ -30,6 +30,13 @@ impl Link {
         &self.trace
     }
 
+    /// This link with degrade/outage `windows` baked into its trace (same
+    /// latency). How churn schedules realize `LinkOutage`/`LinkDegrade`
+    /// events — see `elastic::ChurnTimeline::bake_windows`.
+    pub fn with_windows(&self, windows: Vec<DegradeWindow>) -> Link {
+        Link::new(self.trace.windowed(windows), self.latency_s)
+    }
+
     /// Instantaneous bandwidth (bits/s).
     pub fn bandwidth_at(&self, t: f64) -> f64 {
         self.trace.at(t)
@@ -46,6 +53,21 @@ impl Link {
         // fast path: constant traces (possibly `Scaled`) solve in closed form
         if let Some(bps) = self.trace.as_constant() {
             return start + remaining / bps;
+        }
+        // constant base with fault windows: the closed form still holds
+        // whenever the transfer interval touches no window (the rate is the
+        // healthy constant throughout, so the end time is exact and nothing
+        // after it matters)
+        if let Some(bps) = self.trace.constant_base() {
+            let end = start + remaining / bps;
+            let clear = self
+                .trace
+                .windows()
+                .iter()
+                .all(|w| w.start_s >= end || w.end_s <= start);
+            if clear {
+                return end;
+            }
         }
         loop {
             let rate = self.trace.at(t);
@@ -83,6 +105,32 @@ mod tests {
         let link = Link::new(BandwidthTrace::constant(1e8), 0.25);
         assert_eq!(link.transfer_end(3.0, 0), 3.0);
         assert!((link.arrival(3.0, 0) - 3.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windowed_constant_fast_path_outside_windows_only() {
+        use crate::netsim::DegradeWindow;
+        let link = Link::new(
+            BandwidthTrace::constant(1e8)
+                .windowed(vec![DegradeWindow {
+                    start_s: 10.0,
+                    end_s: 20.0,
+                    frac: 0.0,
+                }]),
+            0.1,
+        );
+        // clear of the window: exact closed form (1e7 bits at 1e8 = 0.1 s)
+        let end = link.transfer_end(5.0, 10_000_000);
+        assert_eq!(end, 5.1);
+        // ends exactly at the window start: still closed form
+        assert_eq!(link.transfer_end(9.9, 10_000_000), 10.0);
+        // overlapping the outage: stalls through it (integration path)
+        let stalled = link.transfer_end(9.95, 10_000_000);
+        assert!(
+            stalled > 20.0,
+            "transfer must stall through the outage, got {stalled}"
+        );
+        assert!(stalled < 20.2, "and finish shortly after, got {stalled}");
     }
 
     #[test]

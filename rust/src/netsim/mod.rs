@@ -12,4 +12,4 @@ pub mod trace;
 pub use fabric::Fabric;
 pub use link::Link;
 pub use monitor::{FabricMonitor, NetworkMonitor};
-pub use trace::{BandwidthTrace, TraceKind};
+pub use trace::{BandwidthTrace, DegradeWindow, TraceKind};

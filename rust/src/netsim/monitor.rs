@@ -101,6 +101,11 @@ pub struct FabricMonitor {
     links: Vec<NetworkMonitor>,
     /// compute time is a property of the iteration, not of any link
     comp: Ewma,
+    /// membership mask (elastic subsystem, DESIGN.md §Elasticity): departed
+    /// workers keep their estimator state — a `Rejoin` resumes the warm
+    /// EWMAs — but are excluded from every aggregate view, so a strategy
+    /// always plans on the *active-set* fabric.
+    active: Vec<bool>,
 }
 
 impl FabricMonitor {
@@ -118,7 +123,20 @@ impl FabricMonitor {
                 })
                 .collect(),
             comp: Ewma::new(alpha),
+            active: vec![true; n],
         }
+    }
+
+    /// Membership change: `false` freezes the worker's estimator out of the
+    /// aggregates (its state is retained for a warm rejoin), `true` folds
+    /// it back in.
+    pub fn set_active(&mut self, worker: usize, active: bool) {
+        self.active[worker] = active;
+    }
+
+    /// Workers currently folded into the aggregate views.
+    pub fn active_links(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
     }
 
     /// Apply multiplicative measurement noise to every per-link estimator.
@@ -166,32 +184,36 @@ impl FabricMonitor {
         }
     }
 
-    /// Aggregate bandwidth `a`: the monitored **bottleneck** (min over
-    /// links with an estimate).
-    pub fn bandwidth(&self) -> Option<f64> {
+    /// Active links in estimator order — the stream every aggregate view
+    /// draws from.
+    fn active_monitors(&self) -> impl Iterator<Item = &NetworkMonitor> {
         self.links
             .iter()
-            .filter_map(|m| m.bandwidth())
-            .reduce(f64::min)
+            .zip(self.active.iter())
+            .filter(|(_, &a)| a)
+            .map(|(m, _)| m)
     }
 
-    /// Aggregate latency `b`: the monitored **bottleneck** (max over links
-    /// with an estimate).
+    /// Aggregate bandwidth `a`: the monitored **bottleneck** (min over
+    /// active links with an estimate).
+    pub fn bandwidth(&self) -> Option<f64> {
+        self.active_monitors().filter_map(|m| m.bandwidth()).reduce(f64::min)
+    }
+
+    /// Aggregate latency `b`: the monitored **bottleneck** (max over active
+    /// links with an estimate).
     pub fn latency(&self) -> Option<f64> {
-        self.links
-            .iter()
-            .filter_map(|m| m.latency())
-            .reduce(f64::max)
+        self.active_monitors().filter_map(|m| m.latency()).reduce(f64::max)
     }
 
     /// Mean-link bandwidth — the heterogeneity-blind control view.
     pub fn mean_bandwidth(&self) -> Option<f64> {
-        Self::mean(self.links.iter().filter_map(|m| m.bandwidth()))
+        Self::mean(self.active_monitors().filter_map(|m| m.bandwidth()))
     }
 
     /// Mean-link latency — the heterogeneity-blind control view.
     pub fn mean_latency(&self) -> Option<f64> {
-        Self::mean(self.links.iter().filter_map(|m| m.latency()))
+        Self::mean(self.active_monitors().filter_map(|m| m.latency()))
     }
 
     fn mean(vals: impl Iterator<Item = f64>) -> Option<f64> {
@@ -297,6 +319,30 @@ mod tests {
         assert!((am - 7e7).abs() < 1.0, "mean bw {am}");
         assert!((bm - 0.8 / 3.0).abs() < 1e-9, "mean lat {bm}");
         assert!((fm.compute_time().unwrap() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn departed_worker_leaves_the_aggregates_and_rejoins_warm() {
+        let mut fm = FabricMonitor::new(3, 0.5, 0);
+        for _ in 0..30 {
+            fm.observe_transfer(0, 10_000_000, 1.0); // 1e7 bps straggler
+            fm.observe_transfer(1, 100_000_000, 1.0);
+            fm.observe_transfer(2, 100_000_000, 1.0);
+            fm.observe_latency_for(0, 0.6);
+            fm.observe_latency_for(1, 0.1);
+            fm.observe_latency_for(2, 0.1);
+        }
+        assert!((fm.bandwidth().unwrap() - 1e7).abs() < 1.0);
+        // the straggler departs: bottleneck snaps to the healthy links
+        fm.set_active(0, false);
+        assert_eq!(fm.active_links(), 2);
+        assert!((fm.bandwidth().unwrap() - 1e8).abs() < 1.0);
+        assert!((fm.latency().unwrap() - 0.1).abs() < 1e-9);
+        assert!((fm.mean_bandwidth().unwrap() - 1e8).abs() < 1.0);
+        // rejoin: the warm estimator folds straight back in, no re-warmup
+        fm.set_active(0, true);
+        assert!((fm.bandwidth().unwrap() - 1e7).abs() < 1.0);
+        assert!((fm.latency().unwrap() - 0.6).abs() < 1e-9);
     }
 
     #[test]

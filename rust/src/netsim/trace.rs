@@ -16,6 +16,24 @@
 use crate::util::Rng;
 
 
+/// One degrade/outage window on a link: bandwidth is multiplied by `frac`
+/// on `[start_s, end_s)`. `frac = 0` models a full outage — the trace floor
+/// keeps the link barely alive, so an in-flight transfer stalls for the
+/// window instead of dividing by zero, and completes once the window ends
+/// (DESIGN.md §Elasticity).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DegradeWindow {
+    pub start_s: f64,
+    pub end_s: f64,
+    pub frac: f64,
+}
+
+impl DegradeWindow {
+    pub fn contains(&self, t: f64) -> bool {
+        t >= self.start_s && t < self.end_s
+    }
+}
+
 /// Trace configuration (serde-friendly, lives in experiment TOML).
 #[derive(Clone, Debug, PartialEq)]
 pub enum TraceKind {
@@ -29,18 +47,25 @@ pub enum TraceKind {
     /// this is how straggler fabrics derive a slow link from the base
     /// trace without flattening sub-grid dynamics.
     Scaled { inner: Box<TraceKind>, frac: f64 },
+    /// Lazy time-windowed degradation: `at(t) = inner.at(t) · Π frac` over
+    /// the windows containing `t`, full resolution like [`Self::Scaled`].
+    /// This is how churn schedules bake link outages/degrades into the
+    /// fabric (elastic subsystem, DESIGN.md §Elasticity).
+    Windowed { inner: Box<TraceKind>, windows: Vec<DegradeWindow> },
 }
 
 /// A realized bandwidth trace.
 #[derive(Clone, Debug)]
 pub struct BandwidthTrace {
     kind: TraceKind,
-    /// `kind` with all `Scaled` wrappers peeled off — populated only when
-    /// `kind` actually carries a wrapper, so plain traces don't duplicate
-    /// their payload vectors
+    /// `kind` with all `Scaled`/`Windowed` wrappers peeled off — populated
+    /// only when `kind` actually carries a wrapper, so plain traces don't
+    /// duplicate their payload vectors
     base: Option<TraceKind>,
     /// product of the peeled `Scaled` fractions (1.0 for unwrapped kinds)
     scale: f64,
+    /// all peeled `Windowed` windows (empty for unwrapped kinds)
+    windows: Vec<DegradeWindow>,
     /// pre-generated grid for stochastic kinds: (dt, samples)
     grid: Option<(f64, Vec<f64>)>,
     floor: f64,
@@ -54,12 +79,12 @@ const GRID_HORIZON: f64 = 4096.0;
 
 impl BandwidthTrace {
     pub fn new(kind: TraceKind) -> Self {
-        let (base, scale) = match &kind {
-            TraceKind::Scaled { .. } => {
-                let (b, s) = Self::flatten(&kind);
-                (Some(b), s)
+        let (base, scale, windows) = match &kind {
+            TraceKind::Scaled { .. } | TraceKind::Windowed { .. } => {
+                let (b, s, w) = Self::flatten(&kind);
+                (Some(b), s, w)
             }
-            _ => (None, 1.0),
+            _ => (None, 1.0, Vec::new()),
         };
         let grid = match base.as_ref().unwrap_or(&kind) {
             TraceKind::Ou { mean_bps, sigma_bps, theta, seed } => {
@@ -71,17 +96,23 @@ impl BandwidthTrace {
             _ => None,
         };
         // never allow a dead link: floor at 1 kbps
-        Self { kind, base, scale, grid, floor: 1e3 }
+        Self { kind, base, scale, windows, grid, floor: 1e3 }
     }
 
-    /// Peel nested `Scaled` wrappers into (base kind, accumulated factor).
-    fn flatten(kind: &TraceKind) -> (TraceKind, f64) {
+    /// Peel nested `Scaled`/`Windowed` wrappers into
+    /// (base kind, accumulated factor, accumulated windows).
+    fn flatten(kind: &TraceKind) -> (TraceKind, f64, Vec<DegradeWindow>) {
         match kind {
             TraceKind::Scaled { inner, frac } => {
-                let (base, f) = Self::flatten(inner);
-                (base, f * frac)
+                let (base, f, w) = Self::flatten(inner);
+                (base, f * frac, w)
             }
-            other => (other.clone(), 1.0),
+            TraceKind::Windowed { inner, windows } => {
+                let (base, f, mut w) = Self::flatten(inner);
+                w.extend(windows.iter().copied());
+                (base, f, w)
+            }
+            other => (other.clone(), 1.0, Vec::new()),
         }
     }
 
@@ -97,6 +128,24 @@ impl BandwidthTrace {
         })
     }
 
+    /// This trace with degrade/outage `windows` applied, lazily: full
+    /// resolution, no resampling. Empty windows return the trace unchanged.
+    pub fn windowed(&self, windows: Vec<DegradeWindow>) -> Self {
+        if windows.is_empty() {
+            return self.clone();
+        }
+        Self::new(TraceKind::Windowed {
+            inner: Box::new(self.kind.clone()),
+            windows,
+        })
+    }
+
+    /// The degrade/outage windows carried by this trace (empty unless a
+    /// churn schedule baked some in).
+    pub fn windows(&self) -> &[DegradeWindow] {
+        &self.windows
+    }
+
     pub fn kind(&self) -> &TraceKind {
         &self.kind
     }
@@ -108,7 +157,22 @@ impl BandwidthTrace {
 
     /// `Some(effective bps)` when the trace is constant in time (possibly
     /// through `Scaled` wrappers) — the closed-form transfer fast path.
+    /// Windowed traces are never constant: the windows vary in time.
     pub fn as_constant(&self) -> Option<f64> {
+        if self.windows.is_empty() {
+            self.constant_base()
+        } else {
+            None
+        }
+    }
+
+    /// `Some(healthy bps)` when the trace is constant *outside* its fault
+    /// windows (constant base through `Scaled`/`Windowed` wrappers). A
+    /// transfer whose interval touches no window still solves in closed
+    /// form at this rate — the fast path that keeps churn runs from
+    /// integrating every healthy-period transfer
+    /// ([`super::Link::transfer_end`]).
+    pub fn constant_base(&self) -> Option<f64> {
         if let TraceKind::Constant { bps } = self.base() {
             Some((bps * self.scale).max(self.floor))
         } else {
@@ -162,7 +226,13 @@ impl BandwidthTrace {
                 samples[i]
             }
         };
-        (v * self.scale).max(self.floor)
+        let mut v = v * self.scale;
+        for w in &self.windows {
+            if w.contains(t) {
+                v *= w.frac;
+            }
+        }
+        v.max(self.floor)
     }
 
     fn interp(ts: &[f64], vs: &[f64], t: f64) -> f64 {
@@ -321,6 +391,51 @@ mod tests {
         });
         assert_eq!(s.as_constant(), None);
         assert_eq!(s.scaled(0.5).as_constant(), None);
+    }
+
+    #[test]
+    fn windowed_degrades_inside_window_only() {
+        let t = BandwidthTrace::constant(1e8).windowed(vec![
+            DegradeWindow { start_s: 10.0, end_s: 20.0, frac: 0.5 },
+            DegradeWindow { start_s: 30.0, end_s: 40.0, frac: 0.0 },
+        ]);
+        assert_eq!(t.at(5.0), 1e8);
+        assert_eq!(t.at(10.0), 5e7); // window start is inclusive
+        assert_eq!(t.at(19.99), 5e7);
+        assert_eq!(t.at(20.0), 1e8); // window end is exclusive
+        // full outage: clamped to the 1 kbps floor, never zero
+        assert_eq!(t.at(35.0), 1e3);
+        assert_eq!(t.at(45.0), 1e8);
+        // windowed traces lose the constant fast path
+        assert_eq!(t.as_constant(), None);
+        assert_eq!(t.windows().len(), 2);
+    }
+
+    #[test]
+    fn windowed_composes_with_scaled() {
+        // scale and windows commute: both are lazy multiplicative wrappers
+        let inner = BandwidthTrace::new(TraceKind::Sine {
+            mean_bps: 1e8,
+            amp_bps: 4e7,
+            period_s: 0.3,
+        });
+        let wrapped = inner
+            .scaled(0.5)
+            .windowed(vec![DegradeWindow { start_s: 2.0, end_s: 4.0, frac: 0.25 }]);
+        for i in 0..300 {
+            let t = i as f64 * 0.021;
+            let base = inner.at(t) * 0.5;
+            let want = if (2.0..4.0).contains(&t) { base * 0.25 } else { base };
+            assert_eq!(wrapped.at(t), want.max(1e3), "t={t}");
+        }
+    }
+
+    #[test]
+    fn empty_windows_are_identity() {
+        let t = BandwidthTrace::constant(2e8);
+        let w = t.windowed(Vec::new());
+        assert_eq!(w.as_constant(), Some(2e8));
+        assert_eq!(w.kind(), t.kind());
     }
 
     #[test]

@@ -34,7 +34,8 @@ pub enum PlanBasis {
 /// What a strategy can see when deciding (τ_t, δ_t).
 pub struct StrategyCtx<'a> {
     pub iter: usize,
-    /// per-link estimators + aggregate views
+    /// per-link estimators + aggregate views (restricted to the active
+    /// membership — departed workers' estimators are excluded)
     pub monitor: &'a FabricMonitor,
     /// gradient size, bits
     pub s_g: f64,
@@ -44,6 +45,16 @@ pub struct StrategyCtx<'a> {
     pub fallback: DecoInput,
     /// which monitor aggregate to plan on
     pub plan: PlanBasis,
+    /// membership epoch (elastic subsystem): bumped on every churn event —
+    /// leave, rejoin, drain completion, fault-window boundary. 0 forever on
+    /// a static run. Event-triggered DeCo re-plans the moment it moves.
+    pub membership_epoch: u64,
+    /// size of the active worker set (= all workers on a static run).
+    /// The built-in strategies key re-planning off the epoch alone — the
+    /// network view already reflects membership through the monitor — but
+    /// fan-in-aware policies (e.g. variance-scaled δ at small n) read the
+    /// size here.
+    pub active_workers: usize,
 }
 
 impl StrategyCtx<'_> {
@@ -86,6 +97,10 @@ pub enum StrategyKind {
     Accordion { delta_low: f64, delta_high: f64 },
     CocktailSgd,
     DecoSgd { update_every: usize },
+    /// DeCo-SGD with event-triggered re-planning: same E-boundary refresh,
+    /// plus an immediate re-solve whenever the membership epoch moves
+    /// (`exp churn` compares this against boundary-only `DecoSgd`).
+    DecoEvent { update_every: usize },
 }
 
 impl StrategyKind {
@@ -101,6 +116,9 @@ impl StrategyKind {
             Self::DecoSgd { update_every } => {
                 Box::new(DecoSgd::new(*update_every))
             }
+            Self::DecoEvent { update_every } => {
+                Box::new(DecoSgd::event_triggered(*update_every))
+            }
         }
     }
 
@@ -112,6 +130,7 @@ impl StrategyKind {
             Self::Accordion { .. } => "Accordion",
             Self::CocktailSgd => "CocktailSGD",
             Self::DecoSgd { .. } => "DeCo-SGD",
+            Self::DecoEvent { .. } => "DeCo-SGD (event)",
         }
     }
 
@@ -222,15 +241,34 @@ impl Strategy for CocktailSgd {
     }
 }
 
-/// DeCo-SGD (Algorithm 2).
+/// DeCo-SGD (Algorithm 2), optionally with event-triggered re-planning on
+/// membership changes (the elastic subsystem's re-planning hook).
 pub struct DecoSgd {
     update_every: usize,
     current: Option<DecoOutput>,
+    /// re-solve immediately when `ctx.membership_epoch` moves instead of
+    /// waiting for the next `E` boundary
+    event_triggered: bool,
+    seen_epoch: u64,
 }
 
 impl DecoSgd {
     pub fn new(update_every: usize) -> Self {
-        Self { update_every: update_every.max(1), current: None }
+        Self {
+            update_every: update_every.max(1),
+            current: None,
+            event_triggered: false,
+            seen_epoch: 0,
+        }
+    }
+
+    /// Boundary refresh *plus* an immediate re-solve on every membership
+    /// epoch change — departed stragglers stop constraining the plan the
+    /// iteration after they leave, and a rejoining bottleneck is planned
+    /// around at once instead of stalling every iteration until the next
+    /// `E` boundary.
+    pub fn event_triggered(update_every: usize) -> Self {
+        Self { event_triggered: true, ..Self::new(update_every) }
     }
 
     pub fn current(&self) -> Option<DecoOutput> {
@@ -244,8 +282,15 @@ impl Strategy for DecoSgd {
     }
 
     fn params(&mut self, ctx: &StrategyCtx) -> (usize, f64) {
-        // Algorithm 2: `if t mod E == 1 { τ, δ = DeCo(...) }`
-        if self.current.is_none() || ctx.iter % self.update_every == 1 {
+        let epoch_moved =
+            self.event_triggered && ctx.membership_epoch != self.seen_epoch;
+        self.seen_epoch = ctx.membership_epoch;
+        // Algorithm 2: `if t mod E == 1 { τ, δ = DeCo(...) }` — extended
+        // with the membership-event trigger
+        if self.current.is_none()
+            || ctx.iter % self.update_every == 1
+            || epoch_moved
+        {
             self.current = Some(solve(&ctx.deco_input()));
         }
         let out = self.current.unwrap();
@@ -265,6 +310,8 @@ mod tests {
             grad_norm: None,
             fallback: DecoInput { s_g: 124e6 * 32.0, a: 1e8, b: 0.1, t_comp: 0.5 },
             plan: PlanBasis::Bottleneck,
+            membership_epoch: 0,
+            active_workers: 1,
         }
     }
 
@@ -334,6 +381,8 @@ mod tests {
             grad_norm: Some(norm),
             fallback: DecoInput { s_g: 1e9, a: 1e8, b: 0.1, t_comp: 0.5 },
             plan: PlanBasis::Bottleneck,
+            membership_epoch: 0,
+            active_workers: 1,
         };
         s.params(&mk(1, 10.0));
         // stable norms -> non-critical -> aggressive delta
@@ -346,13 +395,47 @@ mod tests {
 
     #[test]
     fn kind_builds_all() {
-        for k in StrategyKind::paper_baselines() {
+        let mut kinds = StrategyKind::paper_baselines();
+        kinds.push(StrategyKind::DecoEvent { update_every: 20 });
+        for k in kinds {
             let mut s = k.build();
             let m = FabricMonitor::new(1, 0.3, 0);
             let (tau, delta) = s.params(&ctx(&m, 1));
             assert!(delta > 0.0 && delta <= 1.0);
             assert!(tau <= 1000);
         }
+    }
+
+    #[test]
+    fn event_triggered_deco_replans_on_epoch_move() {
+        let mut m = FabricMonitor::new(1, 0.9, 0);
+        for _ in 0..10 {
+            m.observe_bandwidth(5e8);
+            m.observe_latency(0.1);
+            m.observe_compute(0.5);
+        }
+        let mut boundary = DecoSgd::new(1000);
+        let mut event = DecoSgd::event_triggered(1000);
+        let p0b = boundary.params(&ctx(&m, 1));
+        let p0e = event.params(&ctx(&m, 1));
+        assert_eq!(p0b, p0e, "identical before any epoch movement");
+        // the network collapses AND a membership event fires mid-window
+        for _ in 0..50 {
+            m.observe_bandwidth(2e7);
+        }
+        let moved = StrategyCtx { membership_epoch: 1, ..ctx(&m, 55) };
+        assert_eq!(
+            boundary.params(&StrategyCtx { membership_epoch: 1, ..ctx(&m, 55) }),
+            p0b,
+            "boundary-only must wait for the E boundary"
+        );
+        let p1e = event.params(&moved);
+        assert_ne!(p1e, p0e, "event-triggered re-plans immediately");
+        // stable epoch afterwards: no extra solves (same params hold)
+        assert_eq!(
+            event.params(&StrategyCtx { membership_epoch: 1, ..ctx(&m, 56) }),
+            p1e
+        );
     }
 
     #[test]

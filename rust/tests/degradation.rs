@@ -38,6 +38,8 @@ fn cfg(strategy: StrategyKind, iters: usize) -> ExperimentConfig {
         log_every: iters, // only final record
         block_topk: false,
         clip_norm: None,
+        churn: deco::elastic::ChurnSpec::None,
+        drain: deco::elastic::DrainPolicy::Drop,
     }
 }
 

@@ -1,0 +1,249 @@
+//! Elastic-subsystem regression tests (DESIGN.md §Elasticity):
+//!
+//! * determinism contract — a `ChurnSpec::none()` run is bit-identical to
+//!   a fabric-only run (serial AND pooled), and still matches the
+//!   pre-fabric scalar Eq. 19 replay on a homogeneous fabric; a fixed seed
+//!   compiles the identical event timeline and produces byte-identical
+//!   `results/churn.csv` content across two sweeps;
+//! * membership pricing — a departed straggler stops gating the virtual
+//!   clock, a rejoin warm-resumes it;
+//! * drain-vs-drop policy — `Drain` flushes the in-flight delayed
+//!   gradients into the model, `Drop` freezes them, both deterministically.
+
+use deco::coordinator::{TrainLoop, TrainParams};
+use deco::deco::solve::DecoInput;
+use deco::elastic::{ChurnEvent, ChurnSpec, DrainPolicy, TimedEvent};
+use deco::metrics::RunResult;
+use deco::netsim::{BandwidthTrace, Fabric, Link};
+use deco::optim::Quadratic;
+use deco::strategy::StrategyKind;
+
+const S_G: f64 = 1e8;
+const T_COMP: f64 = 0.05;
+
+fn params(max_iters: usize) -> TrainParams {
+    TrainParams {
+        gamma: 0.005,
+        max_iters,
+        log_every: 10,
+        t_comp_override: Some(T_COMP),
+        s_g_override: Some(S_G),
+        fallback: DecoInput { s_g: S_G, a: 2e7, b: 0.2, t_comp: T_COMP },
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+fn quad(dim: usize) -> Quadratic {
+    Quadratic::new(dim, 4, 1.0, 0.2, 0.3, 0.3, 11)
+}
+
+fn run_churn(
+    fabric: Fabric,
+    kind: StrategyKind,
+    mut p: TrainParams,
+    dim: usize,
+    threads: usize,
+) -> (Vec<f32>, RunResult) {
+    p.threads = Some(threads);
+    let mut tl = TrainLoop::with_fabric(quad(dim), kind.build(), fabric, p);
+    let res = tl.run("elastic");
+    (tl.model().to_vec(), res)
+}
+
+fn leave(t: f64, worker: usize) -> TimedEvent {
+    TimedEvent { t, event: ChurnEvent::Leave { worker } }
+}
+
+fn rejoin(t: f64, worker: usize) -> TimedEvent {
+    TimedEvent { t, event: ChurnEvent::Rejoin { worker } }
+}
+
+#[test]
+fn churn_none_is_bit_identical_to_fabric_only_run() {
+    // dim 65_536 crosses both parallel-engine thresholds, DeCo exercises
+    // dynamic (τ, δ): the elastic machinery with an empty timeline must
+    // not perturb one bit, at any pool size
+    let dim = 65_536;
+    let kind = StrategyKind::DecoSgd { update_every: 10 };
+    let fabric =
+        || Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2);
+    let base = run_churn(fabric(), kind.clone(), params(30), dim, 1);
+    for threads in [1usize, 4] {
+        let p = TrainParams { churn: ChurnSpec::none(), ..params(30) };
+        let (model, res) = run_churn(fabric(), kind.clone(), p, dim, threads);
+        assert_eq!(model, base.0, "model diverges at {threads} threads");
+        assert_eq!(res.records, base.1.records, "{threads} threads");
+        assert_eq!(
+            res.total_time.to_bits(),
+            base.1.total_time.to_bits(),
+            "virtual clock diverges at {threads} threads"
+        );
+    }
+}
+
+/// The pre-fabric virtual clock: ONE shared link, the scalar Eq. 19
+/// recurrence (static (τ, δ) so wire bits are constant).
+fn legacy_single_link_total(
+    link: &Link,
+    t_comp: f64,
+    tau: usize,
+    bits: u64,
+    iters: usize,
+) -> f64 {
+    let (mut ts_prev, mut tm_prev) = (0.0f64, 0.0f64);
+    let mut tc: Vec<f64> = Vec::new();
+    for k in 1..=iters {
+        let tc_delayed = if k as i64 - 1 - tau as i64 >= 1 {
+            tc[k - 2 - tau]
+        } else {
+            0.0
+        };
+        let ts = t_comp + tc_delayed.max(ts_prev);
+        let start = tm_prev.max(ts);
+        let tm = link.transfer_end(start, bits);
+        ts_prev = ts;
+        tm_prev = tm;
+        tc.push(tm + link.latency());
+    }
+    *tc.last().unwrap()
+}
+
+#[test]
+fn churn_none_matches_legacy_single_link_recurrence() {
+    let link = Link::new(BandwidthTrace::constant(2e7), 0.2);
+    let iters = 60;
+    let p = TrainParams { churn: ChurnSpec::none(), ..params(iters) };
+    let (_, res) = run_churn(
+        Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2),
+        StrategyKind::DEfSgd { delta: 0.1 },
+        p,
+        256,
+        1,
+    );
+    assert_eq!(res.total_iters, iters);
+    let legacy =
+        legacy_single_link_total(&link, T_COMP, 0, (0.1 * S_G) as u64, iters);
+    assert_eq!(
+        res.total_time.to_bits(),
+        legacy.to_bits(),
+        "elastic-but-empty pricing {} != legacy single-link {legacy}",
+        res.total_time
+    );
+}
+
+#[test]
+fn fixed_seed_compiles_identical_timelines() {
+    let spec = |seed| ChurnSpec::Random {
+        leave_rate_per_100s: 3.0,
+        mean_down_s: 20.0,
+        outage_rate_per_100s: 2.0,
+        outage_s: 10.0,
+        horizon_s: 400.0,
+        seed,
+    };
+    let a = spec(7).compile(4).unwrap();
+    let b = spec(7).compile(4).unwrap();
+    assert_eq!(a, b, "fixed seed ⇒ identical event timeline");
+    assert!(!a.is_empty());
+    assert_ne!(a, spec(8).compile(4).unwrap());
+}
+
+#[test]
+fn churn_sweep_csv_is_deterministic() {
+    // two full sweeps (same seed) must produce byte-identical CSV — what
+    // `repro exp churn` writes to results/churn.csv
+    let (csv1, rows1) = deco::exp::churn::sweep(0.25, 4, 256, 7).unwrap();
+    let (csv2, rows2) = deco::exp::churn::sweep(0.25, 4, 256, 7).unwrap();
+    assert_eq!(csv1, csv2, "sweep CSV must be deterministic in the seed");
+    assert_eq!(rows1, rows2);
+    assert!(csv1.starts_with("scenario,cycle_s,outage_s,strategy,"));
+    // 6 scenarios × 3 arms + header
+    assert_eq!(csv1.lines().count(), 1 + 6 * 3);
+}
+
+#[test]
+fn straggler_departure_speeds_the_clock_and_rejoin_slows_it() {
+    // D-SGD (static plan, constant bits) on a straggler fabric: worker 0
+    // (quarter bandwidth) gates every aggregation at ~20 s/iteration.
+    // Departed forever ⇒ healthy pace; a leave/rejoin cycle lands between.
+    let fabric = || {
+        Fabric::with_straggler(4, BandwidthTrace::constant(2e7), 0.2, 0.25, 2.0)
+    };
+    let iters = 100;
+    let run = |spec: ChurnSpec| {
+        let p = TrainParams { churn: spec, ..params(iters) };
+        run_churn(fabric(), StrategyKind::DSgd, p, 256, 1)
+    };
+    let (_, none) = run(ChurnSpec::none());
+    let (_, gone) = run(ChurnSpec::Scripted { events: vec![leave(30.0, 0)] });
+    let (_, cycle) = run(ChurnSpec::Scripted {
+        events: vec![leave(30.0, 0), rejoin(300.0, 0)],
+    });
+    assert_eq!(none.total_iters, iters);
+    assert_eq!(gone.total_iters, iters);
+    assert!(
+        gone.total_time < 0.5 * none.total_time,
+        "departed straggler must stop gating: {} vs {}",
+        gone.total_time,
+        none.total_time
+    );
+    assert!(
+        cycle.total_time > gone.total_time
+            && cycle.total_time < none.total_time,
+        "leave+rejoin lands between: {} / {} / {}",
+        gone.total_time,
+        cycle.total_time,
+        none.total_time
+    );
+}
+
+#[test]
+fn membership_state_reflects_the_schedule() {
+    let fabric =
+        Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2);
+    let p = TrainParams {
+        churn: ChurnSpec::Scripted {
+            events: vec![leave(2.0, 1), leave(4.0, 3), rejoin(8.0, 1)],
+        },
+        ..params(60)
+    };
+    let mut tl =
+        TrainLoop::with_fabric(quad(256), StrategyKind::DSgd.build(), fabric, p);
+    let res = tl.run("elastic");
+    assert!(res.final_loss().is_finite());
+    let m = tl.membership();
+    assert!(m.is_active(1), "worker 1 rejoined");
+    assert!(!m.is_active(3), "worker 3 stayed departed");
+    assert_eq!(m.active_count(), 3);
+    assert_eq!(m.epoch(), 3, "three membership events fired");
+}
+
+#[test]
+fn drain_flushes_in_flight_gradients_drop_freezes_them() {
+    // DGA at τ=3 keeps 3 gradients in flight; worker 0 leaves mid-run.
+    // Drain applies those gradients (different final model than Drop),
+    // and each policy is deterministic run-to-run.
+    let fabric =
+        || Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2);
+    let kind = StrategyKind::DdSgd { tau: 3 };
+    let run = |policy: DrainPolicy| {
+        let p = TrainParams {
+            churn: ChurnSpec::Scripted { events: vec![leave(100.0, 0)] },
+            drain: policy,
+            ..params(80)
+        };
+        run_churn(fabric(), kind.clone(), p, 256, 1)
+    };
+    let (drop1, _) = run(DrainPolicy::Drop);
+    let (drop2, _) = run(DrainPolicy::Drop);
+    let (drain1, drain_res) = run(DrainPolicy::Drain);
+    let (drain2, _) = run(DrainPolicy::Drain);
+    assert_eq!(drop1, drop2, "Drop is deterministic");
+    assert_eq!(drain1, drain2, "Drain is deterministic");
+    assert_ne!(
+        drop1, drain1,
+        "the flushed in-flight gradients must reach the model"
+    );
+    assert!(drain_res.final_loss().is_finite());
+}

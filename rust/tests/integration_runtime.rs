@@ -199,6 +199,8 @@ fn pjrt_oracle_end_to_end_deco_run() {
         log_every: 5,
         block_topk: true, // exercise the kernel-identical path end to end
         clip_norm: Some(5.0),
+        churn: deco::elastic::ChurnSpec::None,
+        drain: deco::elastic::DrainPolicy::Drop,
     };
     let mut env = deco::exp::ExpEnv::new();
     env.verbose = false;

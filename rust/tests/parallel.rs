@@ -29,6 +29,8 @@ fn cfg(strategy: StrategyKind, block_topk: bool) -> ExperimentConfig {
         log_every: 5,
         block_topk,
         clip_norm: Some(5.0),
+        churn: deco::elastic::ChurnSpec::None,
+        drain: deco::elastic::DrainPolicy::Drop,
     }
 }
 

@@ -193,6 +193,131 @@ fn prop_worker_staleness_exact() {
 }
 
 #[test]
+fn prop_delay_queue_transients() {
+    // the queue discipline documented in coordinator/worker.rs, checked
+    // against an explicit model under a randomly shifting τ schedule:
+    // each step pushes one gradient; a message pops iff the queue is
+    // deeper than τ, and at most ONE extra gradient drains per step when
+    // τ dropped below the realized depth (its mass folds into EF).
+    forall("delay_queue_transients", 80, |g| {
+        let dim = 4;
+        let mut w = WorkerState::new(0, dim, g.seed);
+        let comp = deco::compress::Identity;
+        let mut tau = g.size(0, 6);
+        let mut model_len = 0usize;
+        for step in 0..120usize {
+            if g.size(0, 9) == 0 {
+                tau = g.size(0, 6); // shift τ mid-run, DeCo-style
+            }
+            w.grad_buffer().iter_mut().for_each(|v| *v = step as f32);
+            w.push_gradient();
+            model_len += 1;
+            let emitted = w.pop_compress(tau, &comp).is_some();
+            let want_emit = model_len > tau;
+            if want_emit {
+                model_len -= 1; // the message pop
+                if model_len > tau {
+                    model_len -= 1; // the one-per-step extra drain
+                }
+            }
+            if emitted != want_emit {
+                return Err(format!(
+                    "step {step}: emitted={emitted}, want {want_emit} \
+                     (tau={tau})"
+                ));
+            }
+            if w.queue_len() != model_len {
+                return Err(format!(
+                    "step {step}: queue {} != model {model_len} (tau={tau})",
+                    w.queue_len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tau_shift_transient_lengths() {
+    // the two prose transients, exactly: a τ increase by Δ stretches the
+    // pipeline for exactly Δ silent steps; a decrease by Δ drains exactly
+    // one extra gradient per step for Δ steps, emitting every step
+    forall("tau_shift_transients", 60, |g| {
+        let dim = 2;
+        let comp = deco::compress::Identity;
+        let tau_a = g.size(0, 5);
+        let delta_up = g.size(1, 4);
+        let tau_b = tau_a + delta_up;
+        let mut w = WorkerState::new(0, dim, g.seed ^ 5);
+        // reach steady state at tau_a (queue depth == tau_a)
+        for t in 0..(tau_a + 8) {
+            w.grad_buffer().iter_mut().for_each(|v| *v = t as f32);
+            w.push_gradient();
+            w.pop_compress(tau_a, &comp);
+        }
+        if w.queue_len() != tau_a {
+            return Err(format!(
+                "steady depth {} != tau_a {tau_a}",
+                w.queue_len()
+            ));
+        }
+        // increase to tau_b: exactly delta_up silent steps, then emission
+        let mut silent = 0usize;
+        for step in 0..(delta_up + 3) {
+            w.grad_buffer().iter_mut().for_each(|v| *v = step as f32);
+            w.push_gradient();
+            match w.pop_compress(tau_b, &comp) {
+                None => {
+                    if step >= delta_up {
+                        return Err(format!(
+                            "still silent at step {step}, want resume at \
+                             {delta_up}"
+                        ));
+                    }
+                    silent += 1;
+                }
+                Some(_) => {
+                    if step < delta_up {
+                        return Err(format!(
+                            "emitted at step {step} < stretch {delta_up}"
+                        ));
+                    }
+                }
+            }
+        }
+        if silent != delta_up {
+            return Err(format!("{silent} silent steps, want {delta_up}"));
+        }
+        if w.queue_len() != tau_b {
+            return Err(format!("depth {} != tau_b {tau_b}", w.queue_len()));
+        }
+        // decrease back to tau_a: one extra drain per step, every step
+        // emits, depth sheds exactly one per step
+        for i in 0..delta_up {
+            w.grad_buffer().iter_mut().for_each(|v| *v = i as f32);
+            w.push_gradient();
+            if w.pop_compress(tau_a, &comp).is_none() {
+                return Err(format!("no emission during drain step {i}"));
+            }
+            let want = tau_b - 1 - i;
+            if w.queue_len() != want {
+                return Err(format!(
+                    "drain step {i}: depth {} != {want}",
+                    w.queue_len()
+                ));
+            }
+        }
+        if w.queue_len() != tau_a {
+            return Err(format!(
+                "post-drain depth {} != tau_a {tau_a}",
+                w.queue_len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_fabric_sync_arrival_dominates_links() {
     // sync_arrival == max over per-link arrivals, >= every link, and at
     // n = 1 it degenerates to that link's arrival exactly

@@ -4,6 +4,9 @@
 #   BENCH_pipeline.json — compress / deco / timesim / runtime / pipeline
 #   BENCH_fabric.json   — fabric sync_arrival + fabric-clock overhead vs
 #                         single-link at n in {4, 16, 32}
+#   BENCH_elastic.json  — membership-aware clock tick + aggregation
+#                         bookkeeping with churn vs the static-fabric
+#                         baseline at n in {4, 16, 32}
 #
 #   scripts/bench.sh                # fast mode (default; CI-sized)
 #   DECO_BENCH_FAST=0 scripts/bench.sh   # full measurement windows
@@ -19,7 +22,8 @@ fi
 
 jsonl="$(mktemp)"
 fab_jsonl="$(mktemp)"
-trap 'rm -f "$jsonl" "$fab_jsonl"' EXIT
+ela_jsonl="$(mktemp)"
+trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl"' EXIT
 
 consolidate() {
   # consolidate <jsonl> <out.json>
@@ -45,3 +49,7 @@ consolidate "$jsonl" BENCH_pipeline.json
 echo "### cargo bench --bench bench_fabric"
 DECO_BENCH_JSON="$fab_jsonl" cargo bench --bench bench_fabric
 consolidate "$fab_jsonl" BENCH_fabric.json
+
+echo "### cargo bench --bench bench_elastic"
+DECO_BENCH_JSON="$ela_jsonl" cargo bench --bench bench_elastic
+consolidate "$ela_jsonl" BENCH_elastic.json
