@@ -26,6 +26,7 @@ fn main() -> Result<()> {
         // worker 0 is a straggler: half the bandwidth, double the latency;
         // its link gates every synchronous aggregation
         fabric: FabricSpec::Straggler { frac: 0.5, mult: 2.0 },
+        topology: deco::config::TopologySpec::Flat,
     };
     let fabric = net.build_fabric(4)?;
     let (a_bot, b_bot) = fabric.bottleneck(0.0);

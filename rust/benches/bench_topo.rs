@@ -1,0 +1,82 @@
+//! Two-tier topology hot path (DESIGN.md §Topology): the hierarchical
+//! clock tick — per-member LAN pricing + per-region WAN pricing — against
+//! the flat fabric tick at the worker counts the scalability experiments
+//! use, across region counts. This is the per-iteration overhead the
+//! pipeline pays for multi-datacenter pricing.
+//!
+//! `scripts/bench.sh` consolidates these into `BENCH_topo.json`.
+
+use deco::coordinator::VirtualClock;
+use deco::netsim::{BandwidthTrace, Fabric};
+use deco::topo::{RegionTopo, Topology};
+use deco::util::bench::{black_box, Bench};
+
+/// Rebuild the clock periodically so the TC history stays bounded while
+/// the bench harness spins millions of ticks.
+const RESET_EVERY: usize = 100_000;
+
+fn lan_fabric(n: usize) -> Fabric {
+    Fabric::homogeneous(n, BandwidthTrace::constant(1e9), 0.005)
+}
+
+fn two_tier(n: usize, regions: usize) -> Topology {
+    assert_eq!(n % regions, 0);
+    let per = n / regions;
+    Topology::TwoTier {
+        regions: (0..regions)
+            .map(|r| RegionTopo {
+                members: (r * per..(r + 1) * per).collect(),
+                aggregator: r * per,
+            })
+            .collect(),
+        wan: Fabric::homogeneous(regions, BandwidthTrace::constant(2e7), 0.3),
+    }
+}
+
+fn main() {
+    println!("== bench_topo (two-tier topology pricing) ==");
+    let b = Bench::new("topo");
+    for &n in &[4usize, 16, 32] {
+        // flat baseline: the fabric tick the two-tier tick competes with
+        let mut clock = VirtualClock::new(lan_fabric(n));
+        b.bench(&format!("clock_tick/flat_n{n}"), || {
+            if clock.iters() >= RESET_EVERY {
+                clock = VirtualClock::new(lan_fabric(n));
+            }
+            black_box(clock.tick(0.05, 2, 4_000_000));
+        });
+
+        for &regions in &[2usize, 4] {
+            if n % regions != 0 {
+                continue;
+            }
+            let mut clock = VirtualClock::with_topology(
+                lan_fabric(n),
+                two_tier(n, regions),
+            )
+            .unwrap();
+            b.bench(&format!("clock_tick/two_tier_n{n}_r{regions}"), || {
+                if clock.iters() >= RESET_EVERY {
+                    clock = VirtualClock::with_topology(
+                        lan_fabric(n),
+                        two_tier(n, regions),
+                    )
+                    .unwrap();
+                }
+                black_box(clock.tick_topo(0.05, 2, 4_000_000, 400_000, None));
+            });
+        }
+    }
+
+    // flat-topology delegation: the Topology::Flat wrapper must cost
+    // nothing measurable over the plain tick
+    let mut clock =
+        VirtualClock::with_topology(lan_fabric(16), Topology::Flat).unwrap();
+    b.bench("clock_tick/flat_topology_delegate_n16", || {
+        if clock.iters() >= RESET_EVERY {
+            clock = VirtualClock::with_topology(lan_fabric(16), Topology::Flat)
+                .unwrap();
+        }
+        black_box(clock.tick_topo(0.05, 2, 4_000_000, 400_000, None));
+    });
+}

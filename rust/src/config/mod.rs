@@ -10,6 +10,7 @@ use crate::deco::DecoInput;
 use crate::elastic::{ChurnEvent, ChurnSpec, DrainPolicy, TimedEvent};
 use crate::netsim::{BandwidthTrace, DegradeWindow, Fabric, Link, TraceKind};
 use crate::strategy::StrategyKind;
+use crate::topo::{elect, RegionTopo, Topology};
 use crate::util::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
@@ -66,18 +67,39 @@ pub struct RegionSpec {
     pub latency_s: f64,
 }
 
+/// How the workers are wired into the aggregation tree — the serde
+/// scenario layer over [`crate::topo::Topology`] (DESIGN.md §Topology).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum TopologySpec {
+    /// the historical star: every worker pushes straight to the leader
+    #[default]
+    Flat,
+    /// two-tier aggregation over a [`FabricSpec::Regions`] fabric: each
+    /// `regions` group becomes one region (contiguous worker block) with
+    /// an elected aggregator, and each region crosses the WAN over its own
+    /// link built from this shared trace/latency
+    TwoTier { wan_trace: TraceKind, wan_latency_s: f64 },
+}
+
 #[derive(Clone, Debug)]
 pub struct NetworkConfig {
     pub trace: TraceKind,
     pub latency_s: f64,
     /// per-worker heterogeneity applied on top of the base trace/latency
     pub fabric: FabricSpec,
+    /// aggregation-tree wiring (flat unless configured otherwise)
+    pub topology: TopologySpec,
 }
 
 impl NetworkConfig {
     /// Homogeneous network from a base trace + latency.
     pub fn homogeneous(trace: TraceKind, latency_s: f64) -> Self {
-        Self { trace, latency_s, fabric: FabricSpec::Homogeneous }
+        Self {
+            trace,
+            latency_s,
+            fabric: FabricSpec::Homogeneous,
+            topology: TopologySpec::Flat,
+        }
     }
 
     /// The base link (region specs aside, the non-straggler link).
@@ -112,6 +134,15 @@ impl NetworkConfig {
                 )
             }
             FabricSpec::Regions { groups } => {
+                if let Some(i) =
+                    groups.iter().position(|g| g.workers == 0)
+                {
+                    // an empty group would slip through the sum check but
+                    // leave a region with nobody to elect as aggregator
+                    return Err(anyhow!(
+                        "fabric regions group {i} has workers: 0"
+                    ));
+                }
                 let total: usize = groups.iter().map(|g| g.workers).sum();
                 if total != n {
                     return Err(anyhow!(
@@ -133,6 +164,59 @@ impl NetworkConfig {
         })
     }
 
+    /// Realize the aggregation-tree [`Topology`] for a run with `n`
+    /// workers on `fabric` (the fabric built by [`Self::build_fabric`]).
+    /// [`TopologySpec::Flat`] is always valid; [`TopologySpec::TwoTier`]
+    /// requires a [`FabricSpec::Regions`] fabric — each group becomes one
+    /// region (contiguous worker block) with its aggregator elected from
+    /// the realized links ([`elect`] order), and the WAN fabric carries
+    /// one link per region built from the shared WAN trace/latency.
+    pub fn build_topology(
+        &self,
+        n: usize,
+        fabric: &Fabric,
+    ) -> Result<Topology> {
+        let TopologySpec::TwoTier { wan_trace, wan_latency_s } =
+            &self.topology
+        else {
+            return Ok(Topology::Flat);
+        };
+        let FabricSpec::Regions { groups } = &self.fabric else {
+            return Err(anyhow!(
+                "a two-tier topology requires a 'regions' fabric spec \
+                 (got {:?})",
+                self.fabric
+            ));
+        };
+        if !(wan_latency_s.is_finite() && *wan_latency_s >= 0.0) {
+            return Err(anyhow!(
+                "two-tier topology needs a finite wan_latency_s >= 0 \
+                 (got {wan_latency_s})"
+            ));
+        }
+        let mut regions = Vec::with_capacity(groups.len());
+        let mut next = 0usize;
+        for g in groups {
+            let members: Vec<usize> = (next..next + g.workers).collect();
+            next += g.workers;
+            let aggregator = elect(fabric, &members);
+            regions.push(RegionTopo { members, aggregator });
+        }
+        if next != n {
+            return Err(anyhow!(
+                "fabric regions cover {next} workers but the run has {n}"
+            ));
+        }
+        let wan = Fabric::homogeneous(
+            groups.len(),
+            BandwidthTrace::new(wan_trace.clone()),
+            *wan_latency_s,
+        );
+        let topo = Topology::TwoTier { regions, wan };
+        topo.validate(n)?;
+        Ok(topo)
+    }
+
     /// Nominal mean bandwidth (bits/s) of the base trace, for fallback
     /// priors.
     pub fn nominal_bps(&self) -> f64 {
@@ -140,11 +224,15 @@ impl NetworkConfig {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("trace", trace_to_json(&self.trace)),
             ("latency_s", Json::num(self.latency_s)),
             ("fabric", fabric_to_json(&self.fabric)),
-        ])
+        ];
+        if self.topology != TopologySpec::Flat {
+            pairs.push(("topology", topology_to_json(&self.topology)));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
@@ -155,8 +243,34 @@ impl NetworkConfig {
                 Some(f) => fabric_from_json(f)?,
                 None => FabricSpec::Homogeneous,
             },
+            topology: match j.get("topology") {
+                Some(t) => topology_from_json(t)?,
+                None => TopologySpec::Flat,
+            },
         })
     }
+}
+
+pub fn topology_to_json(t: &TopologySpec) -> Json {
+    match t {
+        TopologySpec::Flat => Json::obj(vec![("kind", Json::str("flat"))]),
+        TopologySpec::TwoTier { wan_trace, wan_latency_s } => Json::obj(vec![
+            ("kind", Json::str("two_tier")),
+            ("wan_trace", trace_to_json(wan_trace)),
+            ("wan_latency_s", Json::num(*wan_latency_s)),
+        ]),
+    }
+}
+
+pub fn topology_from_json(j: &Json) -> Result<TopologySpec> {
+    Ok(match j.req_str("kind").map_err(err)? {
+        "flat" => TopologySpec::Flat,
+        "two_tier" => TopologySpec::TwoTier {
+            wan_trace: trace_from_json(j.req("wan_trace").map_err(err)?)?,
+            wan_latency_s: j.req_f64("wan_latency_s").map_err(err)?,
+        },
+        other => return Err(anyhow!("unknown topology kind '{other}'")),
+    })
 }
 
 fn nominal_of(trace: &TraceKind) -> f64 {
@@ -508,6 +622,10 @@ pub fn strategy_to_json(s: &StrategyKind) -> Json {
             ("kind", Json::str("deco_event")),
             ("update_every", Json::num(*update_every as f64)),
         ]),
+        StrategyKind::DecoTwoTier { update_every } => Json::obj(vec![
+            ("kind", Json::str("deco_two_tier")),
+            ("update_every", Json::num(*update_every as f64)),
+        ]),
     }
 }
 
@@ -529,6 +647,9 @@ pub fn strategy_from_json(j: &Json) -> Result<StrategyKind> {
             update_every: j.req_usize("update_every").map_err(err)?,
         },
         "deco_event" => StrategyKind::DecoEvent {
+            update_every: j.req_usize("update_every").map_err(err)?,
+        },
+        "deco_two_tier" => StrategyKind::DecoTwoTier {
             update_every: j.req_usize("update_every").map_err(err)?,
         },
         other => return Err(anyhow!("unknown strategy kind '{other}'")),
@@ -681,6 +802,7 @@ pub fn wan_network(mean_bps: f64, latency_s: f64, seed: u64) -> NetworkConfig {
         },
         latency_s,
         fabric: FabricSpec::Homogeneous,
+        topology: TopologySpec::Flat,
     }
 }
 
@@ -737,6 +859,7 @@ mod tests {
             StrategyKind::CocktailSgd,
             StrategyKind::DecoSgd { update_every: 5 },
             StrategyKind::DecoEvent { update_every: 7 },
+            StrategyKind::DecoTwoTier { update_every: 9 },
         ] {
             let j = strategy_to_json(&s);
             assert_eq!(strategy_from_json(&j).unwrap(), s);
@@ -906,6 +1029,7 @@ mod tests {
             },
             latency_s: 0.1,
             fabric: FabricSpec::Homogeneous,
+            topology: TopologySpec::Flat,
         };
         assert_eq!(c.nominal_bps(), 2e8);
         // scaled traces report the scaled nominal
@@ -1011,6 +1135,134 @@ mod tests {
             c.fabric = FabricSpec::Straggler { frac, mult };
             assert!(c.build_fabric(4).is_err(), "frac={frac} mult={mult}");
         }
+    }
+
+    #[test]
+    fn regions_with_zero_workers_are_rejected() {
+        // a zero-size group can pass the sum check while leaving a region
+        // with nobody to elect as aggregator — it must error out up front
+        let mut c = NetworkConfig::homogeneous(
+            TraceKind::Constant { bps: 1e8 },
+            0.1,
+        );
+        c.fabric = FabricSpec::Regions {
+            groups: vec![
+                RegionSpec {
+                    workers: 4,
+                    trace: TraceKind::Constant { bps: 1e8 },
+                    latency_s: 0.05,
+                },
+                RegionSpec {
+                    workers: 0,
+                    trace: TraceKind::Constant { bps: 1e7 },
+                    latency_s: 0.3,
+                },
+            ],
+        };
+        let e = c.build_fabric(4).unwrap_err().to_string();
+        assert!(e.contains("workers: 0"), "{e}");
+    }
+
+    #[test]
+    fn topology_spec_roundtrips_and_defaults_to_flat() {
+        for t in [
+            TopologySpec::Flat,
+            TopologySpec::TwoTier {
+                wan_trace: TraceKind::Constant { bps: 2e7 },
+                wan_latency_s: 0.3,
+            },
+        ] {
+            let j = topology_to_json(&t);
+            let back = topology_from_json(
+                &Json::parse(&j.to_string_pretty()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back, t);
+        }
+        // a flat topology is omitted from the JSON (legacy configs parse)
+        let mut c = wan_network(1e8, 0.2, 1);
+        assert!(!c.to_json().to_string_pretty().contains("topology"));
+        c.topology = TopologySpec::TwoTier {
+            wan_trace: TraceKind::Constant { bps: 2e7 },
+            wan_latency_s: 0.3,
+        };
+        let back = NetworkConfig::from_json(
+            &Json::parse(&c.to_json().to_string_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.topology, c.topology);
+        let legacy = Json::parse(
+            "{\"trace\": {\"kind\": \"constant\", \"bps\": 1e8}, \
+             \"latency_s\": 0.2}",
+        )
+        .unwrap();
+        let parsed = NetworkConfig::from_json(&legacy).unwrap();
+        assert_eq!(parsed.topology, TopologySpec::Flat);
+    }
+
+    #[test]
+    fn build_topology_realizes_two_tier_from_regions() {
+        use crate::topo::Topology;
+        let mut c = NetworkConfig::homogeneous(
+            TraceKind::Constant { bps: 1e9 },
+            0.005,
+        );
+        c.fabric = FabricSpec::Regions {
+            groups: vec![
+                RegionSpec {
+                    workers: 2,
+                    trace: TraceKind::Constant { bps: 1e9 },
+                    latency_s: 0.005,
+                },
+                RegionSpec {
+                    workers: 3,
+                    trace: TraceKind::Constant { bps: 5e8 },
+                    latency_s: 0.01,
+                },
+            ],
+        };
+        c.topology = TopologySpec::TwoTier {
+            wan_trace: TraceKind::Constant { bps: 2e7 },
+            wan_latency_s: 0.3,
+        };
+        let fabric = c.build_fabric(5).unwrap();
+        let topo = c.build_topology(5, &fabric).unwrap();
+        let Topology::TwoTier { regions, wan } = &topo else {
+            panic!("expected two-tier")
+        };
+        assert_eq!(regions.len(), 2);
+        assert_eq!(regions[0].members, vec![0, 1]);
+        assert_eq!(regions[1].members, vec![2, 3, 4]);
+        // identical links inside a group: election keeps the lowest index
+        assert_eq!(regions[0].aggregator, 0);
+        assert_eq!(regions[1].aggregator, 2);
+        assert_eq!(wan.workers(), 2);
+        assert_eq!(wan.bottleneck(0.0), (2e7, 0.3));
+
+        // flat spec: always Ok(Flat), any fabric
+        let flat = NetworkConfig::homogeneous(
+            TraceKind::Constant { bps: 1e8 },
+            0.1,
+        );
+        let f = flat.build_fabric(4).unwrap();
+        assert!(matches!(
+            flat.build_topology(4, &f).unwrap(),
+            Topology::Flat
+        ));
+
+        // two-tier without a regions fabric errors
+        let mut bad = flat.clone();
+        bad.topology = c.topology.clone();
+        let f = bad.build_fabric(4).unwrap();
+        assert!(bad.build_topology(4, &f).is_err());
+
+        // degenerate WAN latency errors
+        c.topology = TopologySpec::TwoTier {
+            wan_trace: TraceKind::Constant { bps: 2e7 },
+            wan_latency_s: f64::NAN,
+        };
+        let f = c.build_fabric(5).unwrap();
+        assert!(c.build_topology(5, &f).is_err());
     }
 
     #[test]

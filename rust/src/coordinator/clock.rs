@@ -15,10 +15,14 @@
 //! `timesim::EventSim::run_on_fabric` / `run_on_link` delegate here.
 
 use crate::netsim::{Fabric, Link};
+use crate::topo::{elect_eligible, RegionTopo, Topology};
 
 #[derive(Debug)]
 pub struct VirtualClock {
     fabric: Fabric,
+    /// two-tier topology state; `None` prices the flat star exactly as the
+    /// pre-topology clock did (DESIGN.md §Topology)
+    two_tier: Option<TwoTierState>,
     /// all links share one trace config + latency (homogeneous fabric):
     /// every per-worker timeline is provably identical, so one transfer
     /// integration per tick suffices — the hot-path fast path that keeps
@@ -61,6 +65,44 @@ pub struct WorkerTick {
     pub tx_secs: f64,
 }
 
+/// One region's timeline entry for the last two-tier tick
+/// (DESIGN.md §Topology).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegionTick {
+    /// region sync: the partial is ready at the aggregator — the slowest
+    /// active member's intra-region arrival (≥ TS_k; TS_k itself when only
+    /// the aggregator is active)
+    pub sync: f64,
+    /// WAN transmission end of the region partial
+    pub wan_tm: f64,
+    /// WAN arrival of the region partial at the leader
+    pub wan_tc: f64,
+    /// pure WAN transmission duration of the partial
+    pub wan_tx_secs: f64,
+    /// members that transmitted over intra-region links this tick
+    /// (the aggregator's own gradient is local and never counted)
+    pub senders: usize,
+    /// false when no member of the region was active this tick — the
+    /// region emitted nothing and its WAN timeline stayed frozen
+    pub active: bool,
+}
+
+/// Per-region WAN timelines + last-tick reports of a two-tier topology.
+#[derive(Debug)]
+struct TwoTierState {
+    regions: Vec<RegionTopo>,
+    /// one link per *region* — the scarce cross-datacenter tier
+    wan: Fabric,
+    /// WAN-transmission end of the previous iteration, per region
+    wan_tm_prev: Vec<f64>,
+    region_last: Vec<RegionTick>,
+    /// cumulative WAN transmission seconds per region
+    wan_tx_total: Vec<f64>,
+    /// cumulative bits shipped across each region's WAN link — the
+    /// headline savings metric of hierarchical aggregation
+    wan_bits_total: Vec<u64>,
+}
+
 impl VirtualClock {
     pub fn new(fabric: Fabric) -> Self {
         let n = fabric.workers();
@@ -71,6 +113,7 @@ impl VirtualClock {
         });
         Self {
             fabric,
+            two_tier: None,
             uniform,
             ts_prev: 0.0,
             tm_prev: vec![0.0; n],
@@ -78,6 +121,31 @@ impl VirtualClock {
             worker_last: vec![WorkerTick::default(); n],
             tx_total: vec![0.0; n],
         }
+    }
+
+    /// Topology-aware constructor (DESIGN.md §Topology).
+    /// [`Topology::Flat`] is exactly [`Self::new`] — the flat clock stays
+    /// bit-identical to the fabric-only recurrence (`tests/topo.rs`); a
+    /// [`Topology::TwoTier`] is validated against the fabric's worker
+    /// count and priced by [`Self::tick_topo`].
+    pub fn with_topology(
+        fabric: Fabric,
+        topo: Topology,
+    ) -> anyhow::Result<Self> {
+        topo.validate(fabric.workers())?;
+        let mut clock = Self::new(fabric);
+        if let Topology::TwoTier { regions, wan } = topo {
+            let r = regions.len();
+            clock.two_tier = Some(TwoTierState {
+                regions,
+                wan,
+                wan_tm_prev: vec![0.0; r],
+                region_last: vec![RegionTick::default(); r],
+                wan_tx_total: vec![0.0; r],
+                wan_bits_total: vec![0; r],
+            });
+        }
+        Ok(clock)
     }
 
     /// Single-link compatibility constructor (a 1-worker fabric).
@@ -101,6 +169,62 @@ impl VirtualClock {
     /// Cumulative transmission seconds per worker.
     pub fn tx_totals(&self) -> &[f64] {
         &self.tx_total
+    }
+
+    /// Whether this clock prices a two-tier topology.
+    pub fn is_two_tier(&self) -> bool {
+        self.two_tier.is_some()
+    }
+
+    /// The two-tier regions (empty slice on a flat topology).
+    pub fn regions(&self) -> &[RegionTopo] {
+        self.two_tier.as_ref().map_or(&[], |tt| &tt.regions)
+    }
+
+    /// The per-region WAN fabric (None on a flat topology).
+    pub fn wan_fabric(&self) -> Option<&Fabric> {
+        self.two_tier.as_ref().map(|tt| &tt.wan)
+    }
+
+    /// Per-region (sync, WAN tm/tc/tx) of the last two-tier tick (empty
+    /// slice on a flat topology).
+    pub fn region_ticks(&self) -> &[RegionTick] {
+        self.two_tier.as_ref().map_or(&[], |tt| &tt.region_last)
+    }
+
+    /// Cumulative bits shipped over each region's WAN link.
+    pub fn wan_bits_totals(&self) -> &[u64] {
+        self.two_tier.as_ref().map_or(&[], |tt| &tt.wan_bits_total)
+    }
+
+    /// Cumulative WAN transmission seconds per region (the WAN-tier
+    /// counterpart of [`Self::tx_totals`]).
+    pub fn wan_tx_totals(&self) -> &[f64] {
+        self.two_tier.as_ref().map_or(&[], |tt| &tt.wan_tx_total)
+    }
+
+    /// Re-elect region `region`'s aggregator among its members marked
+    /// `true` in `eligible` — the churn hook: a departing aggregator hands
+    /// the role to the best-connected surviving member (`topo::elect`
+    /// order). Returns `true` if the aggregator changed; a region with no
+    /// eligible member keeps its stale aggregator and simply prices as
+    /// inactive until a rejoin. No-op on a flat topology.
+    pub fn reelect_aggregator(
+        &mut self,
+        region: usize,
+        eligible: &[bool],
+    ) -> bool {
+        let Some(tt) = self.two_tier.as_mut() else {
+            return false;
+        };
+        let members = &tt.regions[region].members;
+        let Some(new) = elect_eligible(&self.fabric, members, eligible)
+        else {
+            return false;
+        };
+        let changed = new != tt.regions[region].aggregator;
+        tt.regions[region].aggregator = new;
+        changed
     }
 
     /// Advance one iteration (k = self.tc.len() + 1, 1-based) with every
@@ -195,6 +319,114 @@ impl VirtualClock {
         self.ts_prev = ts;
         self.tc.push(slowest.tc);
         Tick { ts, tm: slowest.tm, tc: slowest.tc, tx_secs: slowest.tx_secs }
+    }
+
+    /// Advance one iteration on a two-tier topology (DESIGN.md §Topology):
+    /// each active member ships its δ_lan-compressed gradient (`lan_bits`)
+    /// over its own intra-region link; region r's partial is ready at the
+    /// slowest member arrival (the region sync), then crosses the WAN as
+    /// `wan_bits` over the region's own WAN link; the global aggregation
+    /// completes at the slowest region partial's arrival, and that arrival
+    /// is what the τ-delayed wait `TC_{k−1−τ}` sees. On a flat topology
+    /// this delegates to [`Self::tick_members`] with `lan_bits`
+    /// (bit-identical — `tests/topo.rs`) and `wan_bits` is ignored.
+    pub fn tick_topo(
+        &mut self,
+        t_comp: f64,
+        tau: usize,
+        lan_bits: u64,
+        wan_bits: u64,
+        active: Option<&[bool]>,
+    ) -> Tick {
+        if self.two_tier.is_none() {
+            return self.tick_members(t_comp, tau, lan_bits, active);
+        }
+        if let Some(m) = active {
+            assert_eq!(m.len(), self.tm_prev.len(), "mask/worker mismatch");
+            assert!(m.iter().any(|&a| a), "active set must be non-empty");
+        }
+        let k = self.tc.len() + 1;
+        let tc_delayed = if k as i64 - 1 - tau as i64 >= 1 {
+            self.tc[k - 2 - tau]
+        } else {
+            0.0
+        };
+        let ts = t_comp + tc_delayed.max(self.ts_prev);
+        let tt = self.two_tier.as_mut().expect("checked above");
+        let mut slowest = RegionTick::default();
+        let mut any_region = false;
+        for (r, region) in tt.regions.iter().enumerate() {
+            // LAN tier: every active non-aggregator member sends its
+            // compressed gradient to the aggregator; the partial is ready
+            // at the slowest arrival (the aggregator's own gradient is
+            // local, so a lone-aggregator region syncs at TS_k)
+            let mut sync = ts;
+            let mut senders = 0usize;
+            let mut any_member = false;
+            for &i in &region.members {
+                if let Some(m) = active {
+                    if !m[i] {
+                        self.worker_last[i] = WorkerTick::default();
+                        continue;
+                    }
+                }
+                any_member = true;
+                if i == region.aggregator {
+                    // local hand-off: timeline advances with TS, no wire
+                    self.tm_prev[i] = ts;
+                    self.worker_last[i] =
+                        WorkerTick { tm: ts, tc: ts, tx_secs: 0.0 };
+                    continue;
+                }
+                let link = self.fabric.link(i);
+                let start = self.tm_prev[i].max(ts);
+                let tm = link.transfer_end(start, lan_bits);
+                let wt = WorkerTick {
+                    tm,
+                    tc: tm + link.latency(),
+                    tx_secs: tm - start,
+                };
+                self.tm_prev[i] = tm;
+                self.tx_total[i] += wt.tx_secs;
+                self.worker_last[i] = wt;
+                senders += 1;
+                sync = sync.max(wt.tc);
+            }
+            if !any_member {
+                // no active member: nothing to aggregate, WAN frozen
+                tt.region_last[r] = RegionTick::default();
+                continue;
+            }
+            // WAN tier: the partial crosses the region's own WAN link
+            let wan_link = tt.wan.link(r);
+            let start = tt.wan_tm_prev[r].max(sync);
+            let wan_tm = wan_link.transfer_end(start, wan_bits);
+            let rt = RegionTick {
+                sync,
+                wan_tm,
+                wan_tc: wan_tm + wan_link.latency(),
+                wan_tx_secs: wan_tm - start,
+                senders,
+                active: true,
+            };
+            tt.wan_tm_prev[r] = wan_tm;
+            tt.wan_tx_total[r] += rt.wan_tx_secs;
+            tt.wan_bits_total[r] += wan_bits;
+            tt.region_last[r] = rt;
+            if !any_region || rt.wan_tc > slowest.wan_tc {
+                slowest = rt;
+            }
+            any_region = true;
+        }
+        assert!(any_region, "no region had an active member");
+        self.ts_prev = ts;
+        self.tc.push(slowest.wan_tc);
+        Tick {
+            ts,
+            tm: slowest.wan_tm,
+            tc: slowest.wan_tc,
+            tx_secs: slowest.wan_tx_secs,
+        }
     }
 
     pub fn iters(&self) -> usize {
@@ -349,6 +581,126 @@ mod tests {
         assert_eq!(t2.tc.to_bits(), clock.worker_ticks()[0].tc.to_bits());
         assert!(t2.tc > t1.tc);
         assert!(clock.tx_totals()[0] > tx0_frozen);
+    }
+
+    fn two_tier_clock(
+        n: usize,
+        per_region: usize,
+        lan_bps: f64,
+        lan_lat: f64,
+        wan_bps: f64,
+        wan_lat: f64,
+    ) -> VirtualClock {
+        use crate::topo::RegionTopo;
+        assert_eq!(n % per_region, 0);
+        let regions: Vec<RegionTopo> = (0..n / per_region)
+            .map(|r| RegionTopo {
+                members: (r * per_region..(r + 1) * per_region).collect(),
+                aggregator: r * per_region,
+            })
+            .collect();
+        let wan = Fabric::homogeneous(
+            regions.len(),
+            BandwidthTrace::constant(wan_bps),
+            wan_lat,
+        );
+        VirtualClock::with_topology(
+            Fabric::homogeneous(n, BandwidthTrace::constant(lan_bps), lan_lat),
+            Topology::TwoTier { regions, wan },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn flat_topology_tick_topo_is_bit_identical() {
+        let fabric = || {
+            Fabric::with_straggler(
+                4,
+                BandwidthTrace::constant(1e8),
+                0.1,
+                0.5,
+                2.0,
+            )
+        };
+        let mut plain = VirtualClock::new(fabric());
+        let mut topo =
+            VirtualClock::with_topology(fabric(), Topology::Flat).unwrap();
+        assert!(!topo.is_two_tier());
+        assert!(topo.regions().is_empty() && topo.region_ticks().is_empty());
+        for k in 1..=300usize {
+            let bits = 800_000 + (k as u64 % 7) * 300_000;
+            let a = plain.tick(0.05, k % 3, bits);
+            // wan_bits must be entirely ignored on a flat topology
+            let b = topo.tick_topo(0.05, k % 3, bits, 123_456_789, None);
+            assert_eq!(a.ts.to_bits(), b.ts.to_bits(), "k={k}");
+            assert_eq!(a.tm.to_bits(), b.tm.to_bits(), "k={k}");
+            assert_eq!(a.tc.to_bits(), b.tc.to_bits(), "k={k}");
+            assert_eq!(a.tx_secs.to_bits(), b.tx_secs.to_bits(), "k={k}");
+        }
+        assert_eq!(plain.now().to_bits(), topo.now().to_bits());
+    }
+
+    #[test]
+    fn two_tier_tick_prices_both_hops() {
+        let mut clock = two_tier_clock(4, 2, 1e8, 0.01, 1e7, 0.3);
+        let t = clock.tick_topo(0.1, 0, 1_000_000, 1_000_000, None);
+        // region sync: worker 1's LAN arrival = 0.1 + 0.01s tx + 0.01 lat
+        let rts = clock.region_ticks();
+        assert_eq!(rts.len(), 2);
+        for rt in rts {
+            assert!(rt.active);
+            assert_eq!(rt.senders, 1, "aggregator never sends over LAN");
+            assert!((rt.sync - 0.12).abs() < 1e-12, "sync={}", rt.sync);
+            // WAN: 0.1s transfer at 1e7 bps + 0.3s latency
+            assert!((rt.wan_tc - 0.52).abs() < 1e-12, "{}", rt.wan_tc);
+            assert!(rt.sync >= t.ts);
+            assert!(rt.wan_tc >= rt.sync);
+        }
+        // global sync = the slowest region's WAN arrival
+        let max_wan =
+            rts.iter().map(|r| r.wan_tc).fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(t.tc.to_bits(), max_wan.to_bits());
+        // aggregators never transmit over the LAN tier
+        assert_eq!(clock.worker_ticks()[0].tx_secs, 0.0);
+        assert_eq!(clock.worker_ticks()[2].tx_secs, 0.0);
+        assert!(clock.worker_ticks()[1].tx_secs > 0.0);
+        assert_eq!(clock.wan_bits_totals(), &[1_000_000, 1_000_000]);
+        assert!(clock.wan_tx_totals().iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn two_tier_masked_region_freezes_and_lone_aggregator_syncs_at_ts() {
+        let mut clock = two_tier_clock(4, 2, 1e8, 0.01, 1e7, 0.3);
+        let mut mask = vec![true; 4];
+        // region 1 fully departs: it emits nothing, its WAN stays frozen
+        mask[2] = false;
+        mask[3] = false;
+        let t = clock.tick_topo(0.1, 0, 1_000_000, 1_000_000, Some(&mask));
+        let rts = clock.region_ticks();
+        assert!(rts[0].active && !rts[1].active);
+        assert_eq!(t.tc.to_bits(), rts[0].wan_tc.to_bits());
+        assert_eq!(clock.wan_bits_totals()[1], 0);
+        // region 0 loses its non-aggregator member: sync collapses to TS
+        mask[1] = false;
+        let t2 = clock.tick_topo(0.1, 0, 1_000_000, 1_000_000, Some(&mask));
+        let rt = clock.region_ticks()[0];
+        assert_eq!(rt.senders, 0);
+        assert_eq!(rt.sync.to_bits(), t2.ts.to_bits());
+        assert!(t2.tc > t.tc);
+    }
+
+    #[test]
+    fn reelection_moves_the_aggregator_role() {
+        let mut clock = two_tier_clock(4, 2, 1e8, 0.01, 1e7, 0.3);
+        assert_eq!(clock.regions()[0].aggregator, 0);
+        let mut eligible = vec![true; 4];
+        eligible[0] = false;
+        assert!(clock.reelect_aggregator(0, &eligible));
+        assert_eq!(clock.regions()[0].aggregator, 1);
+        // with nobody eligible the stale aggregator stays put
+        eligible[1] = false;
+        assert!(!clock.reelect_aggregator(0, &eligible));
+        assert_eq!(clock.regions()[0].aggregator, 1);
     }
 
     #[test]

@@ -25,6 +25,6 @@ pub mod clock;
 pub mod pipeline;
 pub mod worker;
 
-pub use clock::{Tick, VirtualClock, WorkerTick};
+pub use clock::{RegionTick, Tick, VirtualClock, WorkerTick};
 pub use pipeline::{TrainLoop, TrainParams};
 pub use worker::WorkerState;

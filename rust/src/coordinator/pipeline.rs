@@ -29,17 +29,20 @@
 //! message buffers are recycled per worker (§Perf).
 
 use super::{VirtualClock, WorkerState};
-use crate::compress::{Compressor, CompressorCache};
+use crate::compress::{
+    Compressor, CompressorCache, ErrorFeedback, SparseVec,
+};
 use crate::deco::DecoInput;
 use crate::elastic::{
     ChurnEvent, ChurnSpec, ChurnTimeline, DrainPolicy, MemberState, Membership,
 };
-use crate::metrics::{Record, RunResult};
+use crate::metrics::{Record, RegionRecord, RunResult};
 use crate::netsim::{Fabric, FabricMonitor, Link};
 use crate::optim::GradOracle;
-use crate::strategy::{PlanBasis, Strategy, StrategyCtx};
+use crate::strategy::{PlanBasis, Strategy, StrategyCtx, WanCtx};
+use crate::topo::Topology;
 use crate::util::stats::l2_norm;
-use crate::util::WorkerPool;
+use crate::util::{Rng, WorkerPool};
 
 /// Below this many total gradient elements (workers × dim) the worker phase
 /// runs inline: spawning scoped threads costs more than the phase itself.
@@ -122,12 +125,82 @@ impl Default for TrainParams {
     }
 }
 
+/// The leader's sharded apply: zero the reduction buffer, sum every
+/// message (in the fixed order `msgs` yields — bit-identical at any pool
+/// size), and step the model `x -= γ · scale · Σ msgs`. One copy of the
+/// apply arithmetic serves the flat path (per-worker messages) and the
+/// two-tier path (per-region messages); the iterator factory keeps the
+/// steady state allocation-free (§Perf).
+fn apply_messages<'a, F, I>(
+    pool: &WorkerPool,
+    agg: &mut [f32],
+    x: &mut [f32],
+    gamma: f32,
+    scale: f32,
+    msgs: F,
+) where
+    F: Fn() -> I + Sync,
+    I: Iterator<Item = &'a SparseVec>,
+{
+    pool.zip_chunk_mut(agg, x, |start, agg_s, x_s| {
+        agg_s.iter_mut().for_each(|v| *v = 0.0);
+        for sv in msgs() {
+            sv.add_shard_into_scaled(start as u32, agg_s, scale);
+        }
+        for (xi, ai) in x_s.iter_mut().zip(agg_s.iter()) {
+            *xi -= gamma * *ai;
+        }
+    });
+}
+
+/// Leader-side per-region state of a two-tier run (DESIGN.md §Topology):
+/// the WAN boundary's *second* compression stage with its own
+/// error-feedback loop — the LAN tier's EF lives in each `WorkerState`,
+/// this one absorbs what δ_wan drops from the region partial.
+struct RegionState {
+    /// dense partial: the sum of the region members' LAN messages
+    partial: Vec<f32>,
+    ef: ErrorFeedback,
+    /// outgoing sparse WAN message, recycled across iterations
+    msg: SparseVec,
+    /// entries kept this iteration; `None` when the region emitted nothing
+    msg_kept: Option<usize>,
+    comps: CompressorCache,
+    rng: Rng,
+}
+
+impl RegionState {
+    fn new(dim: usize, seed: u64, region: usize) -> Self {
+        Self {
+            partial: vec![0.0; dim],
+            ef: ErrorFeedback::new(dim),
+            msg: SparseVec::default(),
+            msg_kept: None,
+            comps: CompressorCache::new(),
+            rng: Rng::new(
+                seed ^ (region as u64 + 1).wrapping_mul(0xD6E8FEB86659FD93),
+            ),
+        }
+    }
+}
+
+/// WAN-tier monitoring state of a two-tier run: one estimator per region
+/// WAN link plus the planning prior used before it warms.
+struct WanState {
+    monitor: FabricMonitor,
+    fallback: DecoInput,
+}
+
 pub struct TrainLoop<O: GradOracle> {
     oracle: O,
     strategy: Box<dyn Strategy>,
     clock: VirtualClock,
     monitor: FabricMonitor,
     workers: Vec<WorkerState>,
+    /// per-region WAN EF/compression state (empty on a flat topology)
+    region_states: Vec<RegionState>,
+    /// per-region WAN monitor + prior (None on a flat topology)
+    wan: Option<WanState>,
     /// the global model (flat, padded)
     x: Vec<f32>,
     agg: Vec<f32>,
@@ -184,7 +257,30 @@ impl<O: GradOracle> TrainLoop<O> {
     pub fn try_with_fabric(
         oracle: O,
         strategy: Box<dyn Strategy>,
+        fabric: Fabric,
+        params: TrainParams,
+    ) -> anyhow::Result<Self> {
+        Self::try_with_topology(
+            oracle,
+            strategy,
+            fabric,
+            Topology::Flat,
+            params,
+        )
+    }
+
+    /// The topology-aware constructor (DESIGN.md §Topology):
+    /// [`Topology::Flat`] is exactly [`Self::try_with_fabric`] and stays
+    /// bit-identical to it (`tests/topo.rs`); a [`Topology::TwoTier`]
+    /// prices intra-region links per member and WAN links per region, and
+    /// compresses twice (δ_lan at the workers, δ_wan at the region
+    /// boundary with its own EF state). Errors on an invalid churn spec or
+    /// a topology that doesn't partition the fabric's workers.
+    pub fn try_with_topology(
+        oracle: O,
+        strategy: Box<dyn Strategy>,
         mut fabric: Fabric,
+        topology: Topology,
         params: TrainParams,
     ) -> anyhow::Result<Self> {
         let dim = oracle.dim();
@@ -208,12 +304,37 @@ impl<O: GradOracle> TrainLoop<O> {
         let churn = params.churn.compile(n)?;
         churn.bake_windows(&mut fabric);
         let window_ends = churn.window_ends();
-        Ok(Self {
+        let (region_states, wan) = match &topology {
+            Topology::Flat => (Vec::new(), None),
+            Topology::TwoTier { regions, wan } => {
+                let states: Vec<RegionState> = (0..regions.len())
+                    .map(|r| RegionState::new(dim, params.seed ^ 0x7070, r))
+                    .collect();
+                let (a, b) = wan.bottleneck(0.0);
+                let wan_state = WanState {
+                    monitor: FabricMonitor::new(
+                        regions.len(),
+                        params.monitor_alpha,
+                        params.seed ^ 0x7A9,
+                    ),
+                    fallback: DecoInput {
+                        s_g,
+                        a,
+                        b,
+                        t_comp: params.fallback.t_comp,
+                    },
+                };
+                (states, Some(wan_state))
+            }
+        };
+        let mut tl = Self {
             oracle,
             strategy,
-            clock: VirtualClock::new(fabric),
+            clock: VirtualClock::with_topology(fabric, topology)?,
             monitor,
             workers,
+            region_states,
+            wan,
             x,
             agg: vec![0.0; dim],
             pool,
@@ -226,7 +347,11 @@ impl<O: GradOracle> TrainLoop<O> {
             churn_cursor: 0,
             window_ends,
             window_cursor: 0,
-        })
+        };
+        if tl.clock.is_two_tier() {
+            tl.mask_aggregator_monitors();
+        }
+        Ok(tl)
     }
 
     pub fn model(&self) -> &[f32] {
@@ -305,6 +430,62 @@ impl<O: GradOracle> TrainLoop<O> {
             self.membership.bump();
             self.window_cursor += 1;
         }
+        self.ensure_aggregators();
+    }
+
+    /// Elastic × topology composition (DESIGN.md §Topology): after any
+    /// membership movement, every region whose aggregator is no longer
+    /// *active* hands the role to its best-connected active member
+    /// ([`crate::topo::elect`] order); if the incumbent is fully departed
+    /// and only *draining* members remain, the role falls back to the
+    /// best-connected draining member — their in-flight flushes still flow
+    /// through the region, so pricing must never route a partial through a
+    /// node that no longer exists. A successful re-election bumps the
+    /// membership epoch so event-triggered strategies re-plan at once; a
+    /// region with nobody left keeps its stale aggregator and simply
+    /// prices as inactive until a rejoin (which re-elects here again).
+    /// Finally the LAN monitor masking is restored: aggregator links carry
+    /// no intra-region traffic, so they must sit outside the LAN-tier
+    /// aggregates (see [`Self::mask_aggregator_monitors`]).
+    fn ensure_aggregators(&mut self) {
+        if !self.clock.is_two_tier() {
+            return;
+        }
+        let n = self.member_mask.len();
+        let active: Vec<bool> =
+            (0..n).map(|w| self.membership.is_active(w)).collect();
+        for r in 0..self.clock.regions().len() {
+            let agg = self.clock.regions()[r].aggregator;
+            if active[agg] {
+                continue;
+            }
+            if self.clock.reelect_aggregator(r, &active) {
+                self.membership.bump();
+            } else if !self.member_mask[agg]
+                && self.clock.reelect_aggregator(r, &self.member_mask)
+            {
+                // no active member and the incumbent is gone: a draining
+                // member takes the role so the region's flushes keep a
+                // present aggregator
+                self.membership.bump();
+            }
+        }
+        self.mask_aggregator_monitors();
+    }
+
+    /// Restore the LAN monitor's active mask to the roles: a member link
+    /// is in the LAN-tier aggregates iff it is masked in AND not currently
+    /// an aggregator — an aggregator's link carries no LAN traffic (its
+    /// gradient is local), so neither its latency nor its possibly-stale
+    /// bandwidth estimate may shape the LAN bottleneck view the per-tier
+    /// planner consumes. Idempotent; called at construction and after
+    /// every membership movement.
+    fn mask_aggregator_monitors(&mut self) {
+        for w in 0..self.member_mask.len() {
+            let is_agg =
+                self.clock.regions().iter().any(|r| r.aggregator == w);
+            self.monitor.set_active(w, self.member_mask[w] && !is_agg);
+        }
     }
 
     /// Run to completion. `task` labels the result.
@@ -323,7 +504,11 @@ impl<O: GradOracle> TrainLoop<O> {
             // so the strategy already sees the new membership epoch
             self.apply_churn_events();
 
-            // 1. strategy decides (τ_t, δ_t)
+            // 1. strategy decides the per-tier (τ_t, δ_t): tier-blind
+            // strategies emit a flat plan (WAN uncompressed), DecoTwoTier
+            // solves each tier against its own monitored links. The worker
+            // pipeline realizes the *total* staleness; δ_lan compresses at
+            // the workers, δ_wan at the region boundary.
             let ctx = StrategyCtx {
                 iter: t,
                 monitor: &self.monitor,
@@ -333,8 +518,16 @@ impl<O: GradOracle> TrainLoop<O> {
                 plan: self.params.plan,
                 membership_epoch: self.membership.epoch(),
                 active_workers: self.membership.active_count(),
+                wan: self.wan.as_ref().map(|w| WanCtx {
+                    regions: w.monitor.links(),
+                    monitor: &w.monitor,
+                    fallback: w.fallback,
+                }),
             };
-            let (tau, delta) = self.strategy.params(&ctx);
+            let tiers = self.strategy.params_tiered(&ctx);
+            let (tau, delta) = (tiers.total_tau(), tiers.delta);
+            let wan_delta = tiers.wan_delta();
+            let two_tier = self.clock.is_two_tier();
 
             // 2+3. worker phase, fanned out over the pool: gradient at x_t,
             // clip, enqueue; pop g_{t−τ}, EF + compress into the recycled
@@ -414,35 +607,104 @@ impl<O: GradOracle> TrainLoop<O> {
             // models (ascending COO indices make shard boundaries two
             // binary searches), serial otherwise — identical arithmetic.
             // The γ/n average runs over the members whose gradient shares
-            // this iteration carries (= n on a static run).
+            // this iteration carries (= n on a static run). On a two-tier
+            // topology the reduction is hierarchical: each region sums its
+            // members' LAN messages into a dense partial and re-compresses
+            // it at δ_wan through the region's own EF state (the second
+            // compression stage — DESIGN.md §Topology), and the leader
+            // applies the region messages.
+            let mut wan_kept_total = 0usize;
+            let mut wan_msgs = 0usize;
             if any {
                 let gamma = self.params.gamma;
                 let scale = 1.0 / n_members as f32;
-                let workers = &self.workers;
                 let pool = if par_shards { &self.pool } else { &serial };
-                pool.zip_chunk_mut(
-                    &mut self.agg,
-                    &mut self.x,
-                    |start, agg_s, x_s| {
-                        agg_s.iter_mut().for_each(|v| *v = 0.0);
-                        for ws in workers {
-                            if let Some(sv) = ws.message() {
-                                sv.add_shard_into_scaled(
-                                    start as u32,
-                                    agg_s,
-                                    scale,
+                if two_tier {
+                    // region reduce + WAN-boundary EF/compress, one region
+                    // per pool thread (each RegionState owns everything its
+                    // phase touches; outputs land in per-region state, so
+                    // any pool size is bit-identical). Serial for small
+                    // models where the fan-out costs more than the work.
+                    let workers = &self.workers;
+                    let regions = self.clock.regions();
+                    let block_topk = self.params.block_topk;
+                    let rpool = if self.pool.threads() > 1
+                        && regions.len() > 1
+                        && regions.len() * dim >= PAR_MIN_WORK
+                    {
+                        &self.pool
+                    } else {
+                        &serial
+                    };
+                    rpool.for_each_chunk_mut(
+                        &mut self.region_states,
+                        |start, chunk| {
+                            for (off, rs) in chunk.iter_mut().enumerate() {
+                                let region = &regions[start + off];
+                                rs.msg_kept = None;
+                                let mut any_msg = false;
+                                rs.partial.iter_mut().for_each(|v| *v = 0.0);
+                                for &i in &region.members {
+                                    if let Some(sv) = workers[i].message() {
+                                        sv.add_into_scaled(
+                                            &mut rs.partial,
+                                            1.0,
+                                        );
+                                        any_msg = true;
+                                    }
+                                }
+                                if !any_msg {
+                                    continue;
+                                }
+                                let comp =
+                                    rs.comps.get(wan_delta, block_topk);
+                                let kept = rs.ef.step(
+                                    &mut rs.partial,
+                                    comp,
+                                    &mut rs.rng,
                                 );
+                                rs.msg.encode_into(&rs.partial);
+                                rs.msg_kept = Some(kept);
                             }
+                        },
+                    );
+                    for rs in &self.region_states {
+                        if let Some(kept) = rs.msg_kept {
+                            wan_kept_total += kept;
+                            wan_msgs += 1;
                         }
-                        for (xi, ai) in x_s.iter_mut().zip(agg_s.iter()) {
-                            *xi -= gamma * *ai;
-                        }
-                    },
-                );
+                    }
+                    let region_states = &self.region_states;
+                    apply_messages(
+                        pool,
+                        &mut self.agg,
+                        &mut self.x,
+                        gamma,
+                        scale,
+                        || {
+                            region_states
+                                .iter()
+                                .filter(|rs| rs.msg_kept.is_some())
+                                .map(|rs| &rs.msg)
+                        },
+                    );
+                } else {
+                    let workers = &self.workers;
+                    apply_messages(
+                        pool,
+                        &mut self.agg,
+                        &mut self.x,
+                        gamma,
+                        scale,
+                        || workers.iter().filter_map(|ws| ws.message()),
+                    );
+                }
             }
 
             // 5. price the iteration over the member set and feed the
-            // monitor (departed workers neither transmit nor observe)
+            // monitor (departed workers neither transmit nor observe). On
+            // a two-tier topology the LAN bits price the member →
+            // aggregator hop and the WAN bits the partial's hop.
             let bits = if self.params.paper_wire {
                 (delta.min(1.0) * self.s_g) as u64
             } else {
@@ -456,12 +718,34 @@ impl<O: GradOracle> TrainLoop<O> {
                 let scale = self.s_g / (dim as f64 * 32.0);
                 (proxy_bits as f64 * scale) as u64
             };
-            let tick = self.clock.tick_members(
-                t_comp,
-                tau,
-                bits,
-                Some(&self.member_mask),
-            );
+            let wan_bits = if !two_tier {
+                0
+            } else if self.params.paper_wire {
+                (wan_delta.min(1.0) * self.s_g) as u64
+            } else {
+                let comp: &dyn Compressor =
+                    self.wire_comps.get(wan_delta, self.params.block_topk);
+                let proxy_bits =
+                    comp.wire_bits(wan_kept_total / wan_msgs.max(1), dim);
+                let scale = self.s_g / (dim as f64 * 32.0);
+                (proxy_bits as f64 * scale) as u64
+            };
+            let tick = if two_tier {
+                self.clock.tick_topo(
+                    t_comp,
+                    tau,
+                    bits,
+                    wan_bits,
+                    Some(&self.member_mask),
+                )
+            } else {
+                self.clock.tick_members(
+                    t_comp,
+                    tau,
+                    bits,
+                    Some(&self.member_mask),
+                )
+            };
             // each member's link monitor observes its own transfer and
             // latency — on a static homogeneous fabric every estimator sees
             // the same stream the former single monitor did
@@ -478,6 +762,29 @@ impl<O: GradOracle> TrainLoop<O> {
                 }
             }
             self.monitor.observe_compute(t_comp);
+            // the WAN tier has its own per-region estimators: each active
+            // region's link observes its partial's transfer, and inactive
+            // regions leave the aggregate views (warm for reactivation)
+            if let Some(w) = self.wan.as_mut() {
+                let wan_fabric =
+                    self.clock.wan_fabric().expect("two-tier clock");
+                for (r, rt) in self.clock.region_ticks().iter().enumerate() {
+                    w.monitor.set_active(r, rt.active);
+                    if rt.active {
+                        if wan_bits > 0 && rt.wan_tx_secs > 0.0 {
+                            w.monitor.observe_transfer(
+                                r,
+                                wan_bits,
+                                rt.wan_tx_secs,
+                            );
+                        }
+                        w.monitor.observe_latency_for(
+                            r,
+                            wan_fabric.link(r).latency(),
+                        );
+                    }
+                }
+            }
 
             // a draining worker whose pipeline just emptied departs fully —
             // after the tick that priced its final message
@@ -512,6 +819,17 @@ impl<O: GradOracle> TrainLoop<O> {
                     delta,
                     grad_norm: last_grad_norm.unwrap_or(0.0),
                     bandwidth: self.monitor.bandwidth().unwrap_or(0.0),
+                    wan_delta,
+                    regions: self
+                        .clock
+                        .region_ticks()
+                        .iter()
+                        .zip(self.clock.wan_bits_totals())
+                        .map(|(rt, &wb)| RegionRecord {
+                            sync: rt.sync,
+                            wan_bits: wb,
+                        })
+                        .collect(),
                 });
                 if let Some(target) = self.params.loss_target {
                     if loss <= target {
@@ -675,6 +993,51 @@ mod tests {
             assert!(r.train_loss.is_finite());
             assert!(r.train_loss > 0.0, "quadratic losses are positive");
         }
+    }
+
+    #[test]
+    fn two_tier_run_converges_and_logs_region_columns() {
+        use crate::topo::{RegionTopo, Topology};
+        let lan = Fabric::homogeneous(4, BandwidthTrace::constant(1e9), 0.005);
+        let topo = Topology::TwoTier {
+            regions: vec![
+                RegionTopo { members: vec![0, 1], aggregator: 0 },
+                RegionTopo { members: vec![2, 3], aggregator: 2 },
+            ],
+            wan: Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.3),
+        };
+        let mut tl = TrainLoop::try_with_topology(
+            quad(),
+            StrategyKind::DecoTwoTier { update_every: 20 }.build(),
+            lan,
+            topo,
+            TrainParams { max_iters: 4000, ..params() },
+        )
+        .unwrap();
+        let l0 = {
+            let q = quad();
+            let x = q.init();
+            q.loss(&x)
+        };
+        let res = tl.run("quad");
+        assert!(res.final_loss() < 0.7 * l0, "{l0} -> {}", res.final_loss());
+        for r in &res.records {
+            assert_eq!(r.regions.len(), 2, "two region columns per record");
+            assert!(r.wan_delta > 0.0 && r.wan_delta <= 1.0);
+            for reg in &r.regions {
+                assert!(reg.sync > 0.0, "static run: regions always active");
+                assert!(reg.sync <= r.time, "partials precede the global sync");
+            }
+        }
+        // WAN bits accumulate monotonically per region
+        let first = &res.records[0];
+        let last = res.records.last().unwrap();
+        for (a, b) in first.regions.iter().zip(&last.regions) {
+            assert!(b.wan_bits > a.wan_bits);
+        }
+        // the CSV writer emits the per-region header (hard-error checked)
+        let csv = res.to_csv();
+        assert!(csv.lines().next().unwrap().contains("region1_wan_bits"));
     }
 
     #[test]

@@ -104,6 +104,7 @@ pub fn run_one(
         trace: TraceKind::Constant { bps: BASE_BPS },
         latency_s: BASE_LAT,
         fabric: FabricSpec::Straggler { frac: STRAG_FRAC, mult: STRAG_MULT },
+        topology: crate::config::TopologySpec::Flat,
     };
     let fabric = net.build_fabric(workers)?;
     let oracle = Quadratic::new(dim, workers, 0.5, 0.1, 0.3, 0.2, seed);

@@ -18,6 +18,9 @@
 //! | churn  | worker churn × link outages on the elastic       |
 //! |        | fabric: event-triggered vs boundary-only DeCo    |
 //! |        | re-planning (beyond the paper)                   |
+//! | topo   | region count × WAN:LAN ratio on the hierarchical |
+//! |        | multi-datacenter topology: two-tier DeCo vs the  |
+//! |        | flat shared-egress star (beyond the paper)       |
 
 pub mod ablation;
 pub mod churn;
@@ -31,6 +34,7 @@ pub mod phi;
 pub mod runner;
 pub mod table1;
 pub mod thm3;
+pub mod topo;
 
 pub use runner::{ExpEnv, TaskSpec};
 

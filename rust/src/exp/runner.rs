@@ -223,13 +223,17 @@ impl ExpEnv {
         }
         // every run is priced on a per-worker fabric; the homogeneous spec
         // replicates the base link and stays bit-identical to the former
-        // single shared link (tests/fabric.rs). try_with_fabric surfaces
-        // an invalid config-driven churn spec as an error, not a panic.
+        // single shared link (tests/fabric.rs). The aggregation tree comes
+        // from the topology spec — flat unless configured — and
+        // try_with_topology surfaces invalid config-driven churn or
+        // topology specs as errors, not panics.
         let fabric = cfg.network.build_fabric(cfg.workers)?;
-        let mut tl = TrainLoop::try_with_fabric(
+        let topology = cfg.network.build_topology(cfg.workers, &fabric)?;
+        let mut tl = TrainLoop::try_with_topology(
             oracle,
             cfg.strategy.build(),
             fabric,
+            topology,
             params,
         )?;
         Ok(tl.run(&cfg.task))

@@ -1,0 +1,389 @@
+//! `exp topo` — hierarchical multi-datacenter study (beyond the paper: its
+//! testbed is a flat star, but its motivating setting is training *across*
+//! data centers with cheap intra-region links and scarce WAN links).
+//!
+//! Sweeps region count × WAN:LAN bandwidth ratio × {flat D-SGD, flat
+//! DeCo, two-tier DeCo} on a region-structured network:
+//!
+//! * **two-tier** runs price members on fast LAN links (`A_LAN`, `B_LAN`)
+//!   and one full-rate WAN link per region (`ratio · A_LAN`, `B_WAN`) —
+//!   only the δ_wan-compressed region partial crosses the WAN
+//!   (DESIGN.md §Topology);
+//! * **flat** runs price the same physical network as the star the repo
+//!   used until now: every worker's gradient crosses the WAN itself, so a
+//!   region's egress bandwidth is shared by its `m` concurrent flows
+//!   (each worker link gets `ratio · A_LAN / m`) and each path pays the
+//!   full `B_LAN + B_WAN` latency.
+//!
+//! Flat DeCo plans on the monitored bottleneck of that shared star —
+//! bottleneck planning is not the limitation, the topology is: the WAN
+//! transfer budget per iteration is split m ways. Two-tier DeCo re-unifies
+//! it, so its WAN tier affords an m× larger δ_wan at the same cadence. The
+//! `speedup` column is `t(flat DeCo) / t(two-tier DeCo)` — the win grows
+//! as the WAN:LAN ratio drops and with more workers per region.
+//!
+//! Deterministic by construction: constant traces, pinned T_comp, the
+//! analytic quadratic oracle (`tests/topo.rs` asserts byte-identical CSV
+//! across two sweeps).
+
+use crate::config::{
+    FabricSpec, NetworkConfig, RegionSpec, TopologySpec,
+};
+use crate::coordinator::{TrainLoop, TrainParams};
+use crate::deco::DecoInput;
+use crate::exp::{results_dir, speedup};
+use crate::metrics::{format_table, RunResult};
+use crate::netsim::TraceKind;
+use crate::optim::Quadratic;
+use crate::strategy::StrategyKind;
+use crate::util::WorkerPool;
+
+/// Intra-region (LAN) links: 1 Gbps, 5 ms — cheap and fast.
+const A_LAN: f64 = 1e9;
+const B_LAN: f64 = 0.005;
+/// WAN latency: 300 ms — the cross-datacenter hop the paper motivates.
+const B_WAN: f64 = 0.3;
+/// Pinned per-iteration compute time (s).
+const T_COMP: f64 = 0.2;
+/// Pinned gradient size (bits): 100 Mbit — a full gradient costs 0.1 s on
+/// the LAN (half a T_comp) and is WAN-bound at every swept ratio.
+const S_G: f64 = 1e8;
+const GAMMA: f32 = 0.02;
+/// Same loss target as the quadratic TaskSpec.
+const TARGET: f64 = 0.18;
+const UPDATE_EVERY: usize = 20;
+
+/// WAN:LAN bandwidth ratio ladder, scarce last.
+const RATIOS: [f64; 3] = [0.5, 0.1, 0.02];
+
+/// The three comparison arms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopoArm {
+    /// flat star, no compression (the exact baseline)
+    FlatDsgd,
+    /// flat star, bottleneck-planned DeCo
+    FlatDeco,
+    /// two-tier topology, per-tier DeCo
+    TwoTierDeco,
+}
+
+impl TopoArm {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::FlatDsgd => "D-SGD (flat)",
+            Self::FlatDeco => "DeCo (flat)",
+            Self::TwoTierDeco => "DeCo (2-tier)",
+        }
+    }
+}
+
+/// Split `n` workers into `regions` groups (remainder spread over the
+/// leading groups).
+pub fn region_sizes(n: usize, regions: usize) -> Vec<usize> {
+    assert!(regions >= 1 && regions <= n);
+    let base = n / regions;
+    let rem = n % regions;
+    (0..regions).map(|r| base + usize::from(r < rem)).collect()
+}
+
+/// The network config of one sweep point. Flat arms see the shared-egress
+/// star (per-worker bandwidth `ratio · A_LAN / m`, full path latency);
+/// the two-tier arm sees LAN member links plus the per-region WAN spec.
+fn network(n: usize, regions: usize, ratio: f64, flat: bool) -> NetworkConfig {
+    let a_wan = ratio * A_LAN;
+    let groups = region_sizes(n, regions)
+        .into_iter()
+        .map(|m| {
+            if flat {
+                RegionSpec {
+                    workers: m,
+                    trace: TraceKind::Constant { bps: a_wan / m as f64 },
+                    latency_s: B_LAN + B_WAN,
+                }
+            } else {
+                RegionSpec {
+                    workers: m,
+                    trace: TraceKind::Constant { bps: A_LAN },
+                    latency_s: B_LAN,
+                }
+            }
+        })
+        .collect();
+    NetworkConfig {
+        trace: TraceKind::Constant { bps: if flat { a_wan } else { A_LAN } },
+        latency_s: if flat { B_LAN + B_WAN } else { B_LAN },
+        fabric: FabricSpec::Regions { groups },
+        topology: if flat {
+            TopologySpec::Flat
+        } else {
+            TopologySpec::TwoTier {
+                wan_trace: TraceKind::Constant { bps: a_wan },
+                wan_latency_s: B_WAN,
+            }
+        },
+    }
+}
+
+/// One training run at a sweep point. `dim` is exposed so the tests can
+/// shrink the oracle.
+pub fn run_one(
+    regions: usize,
+    ratio: f64,
+    arm: TopoArm,
+    workers: usize,
+    dim: usize,
+    max_iters: usize,
+) -> anyhow::Result<RunResult> {
+    let flat = arm != TopoArm::TwoTierDeco;
+    let net = network(workers, regions, ratio, flat);
+    let fabric = net.build_fabric(workers)?;
+    let topology = net.build_topology(workers, &fabric)?;
+    let kind = match arm {
+        TopoArm::FlatDsgd => StrategyKind::DSgd,
+        TopoArm::FlatDeco => {
+            StrategyKind::DecoSgd { update_every: UPDATE_EVERY }
+        }
+        TopoArm::TwoTierDeco => {
+            StrategyKind::DecoTwoTier { update_every: UPDATE_EVERY }
+        }
+    };
+    let oracle = Quadratic::new(dim, workers, 0.5, 0.1, 0.3, 0.2, 7);
+    let fallback = if flat {
+        DecoInput {
+            s_g: S_G,
+            a: ratio * A_LAN / (workers as f64 / regions as f64),
+            b: B_LAN + B_WAN,
+            t_comp: T_COMP,
+        }
+    } else {
+        DecoInput { s_g: S_G, a: A_LAN, b: B_LAN, t_comp: T_COMP }
+    };
+    let params = TrainParams {
+        gamma: GAMMA,
+        max_iters,
+        log_every: 5,
+        loss_target: Some(TARGET),
+        t_comp_override: Some(T_COMP),
+        s_g_override: Some(S_G),
+        seed: 7,
+        fallback,
+        // runs fan out run-level over the pool (the sweep_strategies
+        // pattern); each inner loop stays serial
+        threads: Some(1),
+        ..Default::default()
+    };
+    let mut tl = TrainLoop::try_with_topology(
+        oracle,
+        kind.build(),
+        fabric,
+        topology,
+        params,
+    )?;
+    Ok(tl.run("quadratic"))
+}
+
+fn arms() -> Vec<TopoArm> {
+    vec![TopoArm::FlatDsgd, TopoArm::FlatDeco, TopoArm::TwoTierDeco]
+}
+
+/// Push one checked CSV row: a row that disagrees with the header is a
+/// hard error, never silent misalignment.
+fn push_row(csv: &mut String, header_cols: usize, cells: &[String]) {
+    assert_eq!(
+        cells.len(),
+        header_cols,
+        "topo.csv row has {} cells for a {header_cols}-column header",
+        cells.len()
+    );
+    csv.push_str(&cells.join(","));
+    csv.push('\n');
+}
+
+/// The full sweep: returns `(csv, table_rows)`. Deterministic in
+/// `(scale, workers, dim)`.
+pub fn sweep(
+    scale: f64,
+    workers: usize,
+    dim: usize,
+) -> anyhow::Result<(String, Vec<Vec<String>>)> {
+    let max_iters = ((6000.0 * scale) as usize).max(50);
+    let arms = arms();
+    let region_counts: Vec<usize> =
+        [2usize, 4].into_iter().filter(|&r| r <= workers).collect();
+    let n_combos = region_counts.len() * RATIOS.len() * arms.len();
+    let pool = WorkerPool::new(WorkerPool::default_threads().min(n_combos));
+    eprintln!("[topo] {n_combos} runs across {} threads", pool.threads());
+    let results = pool.map(n_combos, |i| {
+        let arm = arms[i % arms.len()];
+        let rest = i / arms.len();
+        let ratio = RATIOS[rest % RATIOS.len()];
+        let regions = region_counts[rest / RATIOS.len()];
+        run_one(regions, ratio, arm, workers, dim, max_iters)
+    });
+    let mut results = results.into_iter();
+    const HEADER: &str = "regions,ratio,wan_bps,strategy,time_to_target,\
+                          total_iters,wan_gbits";
+    let header_cols = HEADER.split(',').count();
+    let mut csv = String::from(HEADER);
+    csv.push('\n');
+    let mut rows = Vec::new();
+    for &regions in &region_counts {
+        for &ratio in &RATIOS {
+            let mut cells =
+                vec![format!("{regions}R"), format!("1:{:.0}", 1.0 / ratio)];
+            let mut times: Vec<Option<f64>> = Vec::new();
+            for &arm in &arms {
+                let res = results.next().expect("one result per combo")?;
+                let t = res.time_to_loss(TARGET);
+                // total bits that crossed the WAN tier: per-region columns
+                // of the final record (two-tier), "-" for flat stars whose
+                // every worker flow is WAN traffic by construction
+                let wan_gbits = res
+                    .records
+                    .last()
+                    .filter(|r| !r.regions.is_empty())
+                    .map(|r| {
+                        let bits: u64 =
+                            r.regions.iter().map(|reg| reg.wan_bits).sum();
+                        format!("{:.2}", bits as f64 / 1e9)
+                    })
+                    .unwrap_or_else(|| "-".into());
+                push_row(
+                    &mut csv,
+                    header_cols,
+                    &[
+                        regions.to_string(),
+                        ratio.to_string(),
+                        format!("{:.0}", ratio * A_LAN),
+                        arm.label().to_string(),
+                        t.map(|v| format!("{v:.2}"))
+                            .unwrap_or_else(|| "-".into()),
+                        res.total_iters.to_string(),
+                        wan_gbits,
+                    ],
+                );
+                cells.push(
+                    t.map(|v| format!("{v:.1}s"))
+                        .unwrap_or_else(|| "-".into()),
+                );
+                times.push(t);
+            }
+            // how much hierarchical aggregation wins back over the flat
+            // star under the same planner
+            cells.push(speedup(times[1], times[2]));
+            rows.push(cells);
+        }
+    }
+    Ok((csv, rows))
+}
+
+pub fn main(scale: f64, workers: usize) -> anyhow::Result<()> {
+    println!(
+        "exp topo — region count x WAN:LAN ratio x strategy on a \
+         {workers}-worker multi-datacenter network\n(LAN {:.0} Mbps / \
+         {B_LAN} s per member; WAN = ratio x LAN per region, {B_WAN} s; \
+         flat stars share each region's WAN egress across its workers; \
+         time-to-loss {TARGET} on the quadratic; E = {UPDATE_EVERY})\n",
+        A_LAN / 1e6
+    );
+    let (csv, rows) = sweep(scale, workers, 4096)?;
+    println!(
+        "{}",
+        format_table(
+            &[
+                "topology",
+                "wan:lan",
+                "D-SGD (flat)",
+                "DeCo (flat)",
+                "DeCo (2-tier)",
+                "speedup",
+            ],
+            &rows
+        )
+    );
+    let path = results_dir().join("topo.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_sizes_partition_evenly() {
+        assert_eq!(region_sizes(8, 2), vec![4, 4]);
+        assert_eq!(region_sizes(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(region_sizes(7, 2), vec![4, 3]);
+        assert_eq!(region_sizes(5, 4), vec![2, 1, 1, 1]);
+        for (n, r) in [(8, 2), (7, 3), (9, 4)] {
+            assert_eq!(region_sizes(n, r).iter().sum::<usize>(), n);
+        }
+    }
+
+    #[test]
+    fn network_specs_realize_both_shapes() {
+        let flat = network(8, 2, 0.1, true);
+        let f = flat.build_fabric(8).unwrap();
+        // shared egress: 4 workers split 100 Mbps -> 25 Mbps each, full
+        // path latency
+        assert_eq!(f.bottleneck(0.0), (0.1 * A_LAN / 4.0, B_LAN + B_WAN));
+        assert!(matches!(
+            flat.build_topology(8, &f).unwrap(),
+            crate::topo::Topology::Flat
+        ));
+
+        let two = network(8, 2, 0.1, false);
+        let f = two.build_fabric(8).unwrap();
+        assert_eq!(f.bottleneck(0.0), (A_LAN, B_LAN));
+        let topo = two.build_topology(8, &f).unwrap();
+        let crate::topo::Topology::TwoTier { regions, wan } = &topo else {
+            panic!("expected two-tier")
+        };
+        assert_eq!(regions.len(), 2);
+        // the region's single WAN flow gets the full egress bandwidth
+        assert_eq!(wan.bottleneck(0.0), (0.1 * A_LAN, B_WAN));
+    }
+
+    #[test]
+    fn two_tier_beats_flat_deco_on_a_scarce_wan() {
+        // the headline: at WAN:LAN = 1:10 the flat star splits each
+        // region's egress 2 ways (δ* ≈ 0.1 per worker flow) while
+        // two-tier ships one partial at full rate (δ_wan ≈ 0.2) — the
+        // per-tier planner pays roughly half the φ penalty and must reach
+        // the target sooner
+        let flat =
+            run_one(2, 0.1, TopoArm::FlatDeco, 4, 512, 6000).unwrap();
+        let two =
+            run_one(2, 0.1, TopoArm::TwoTierDeco, 4, 512, 6000).unwrap();
+        let tf = flat.time_to_loss(TARGET).expect("flat reaches");
+        let tt = two.time_to_loss(TARGET).expect("two-tier reaches");
+        assert!(
+            tt < tf,
+            "two-tier {tt:.1}s should beat flat {tf:.1}s"
+        );
+        // and the two-tier run's records carry the per-region columns
+        let last = two.records.last().unwrap();
+        assert_eq!(last.regions.len(), 2);
+        assert!(last.regions.iter().all(|r| r.wan_bits > 0));
+        assert!(last.wan_delta < 1.0, "the WAN tier compresses");
+    }
+
+    #[test]
+    fn sweep_csv_is_rectangular() {
+        let (csv, rows) = sweep(0.02, 4, 128).unwrap();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert_eq!(header.split(',').count(), 7);
+        let mut n = 0;
+        for line in lines {
+            assert_eq!(line.split(',').count(), 7, "{line}");
+            n += 1;
+        }
+        // 2 region counts (2 and 4 both fit n=4) x 3 ratios x 3 arms
+        assert_eq!(n, 18);
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.len() == 6));
+    }
+}

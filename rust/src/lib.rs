@@ -29,6 +29,7 @@ pub mod optim;
 pub mod runtime;
 pub mod strategy;
 pub mod timesim;
+pub mod topo;
 pub mod util;
 
 /// Block size shared with the L1 Pallas kernel and the flat-parameter

@@ -2,7 +2,7 @@
 //! vendored crate set has no clap).
 //!
 //! ```text
-//! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|hetero|churn|all>
+//! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|hetero|churn|topo|all>
 //!           [--scale F] [--tasks t1 t2] [--nodes 4 8] [--workers N]
 //!           [--task NAME] [--t-comp F] [--mult F] [--seed N]
 //! repro train --config cfg.json [--out run.csv]
@@ -72,12 +72,16 @@ repro — DeCo-SGD paper reproduction CLI
 USAGE:
   repro exp <id> [--scale F] [--tasks T..] [--nodes N..] [--workers N]
                  [--task NAME] [--t-comp F] [--mult F] [--seed N]
-      ids: fig1 fig2 fig4 fig5 fig6 table1 thm3 phi ablation hetero churn all
+      ids: fig1 fig2 fig4 fig5 fig6 table1 thm3 phi ablation hetero churn
+           topo all
       hetero: straggler severity x strategy sweep on a per-worker fabric
               (--workers N, --mult F = straggler latency multiplier)
       churn:  worker churn x link outages x strategy on the elastic fabric —
               event-triggered vs boundary-only DeCo re-planning
               (--workers N, --seed N drives the random-churn row)
+      topo:   region count x WAN:LAN bandwidth ratio on the hierarchical
+              multi-datacenter topology — two-tier DeCo vs the flat
+              shared-egress star (--workers N, default 8)
   repro train --config cfg.json [--out run.csv]
   repro deco --a BPS --b SECONDS --t-comp SECONDS --s-g BITS
   repro artifacts
@@ -130,6 +134,12 @@ fn main() -> Result<()> {
                 "churn" => {
                     let seed = args.flag_usize("seed").unwrap_or(7) as u64;
                     exp::churn::main(scale, workers, seed)?;
+                }
+                "topo" => {
+                    // the multi-datacenter sweep defaults to 8 workers so
+                    // the 4-region rows keep 2 members per region
+                    let workers = args.flag_usize("workers").unwrap_or(8);
+                    exp::topo::main(scale, workers)?;
                 }
                 "all" => {
                     exp::fig1::main(t_comp)?;

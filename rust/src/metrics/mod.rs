@@ -6,8 +6,19 @@
 use std::io::Write;
 use std::path::Path;
 
-/// One logged training step.
+/// One region's entry in a logged step of a two-tier run (DESIGN.md
+/// §Topology).
 #[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RegionRecord {
+    /// absolute virtual time this region's partial was ready (0.0 while
+    /// the region had no active member)
+    pub sync: f64,
+    /// cumulative bits shipped across this region's WAN link so far
+    pub wan_bits: u64,
+}
+
+/// One logged training step.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Record {
     pub iter: usize,
     /// virtual wall-clock (s) when this iteration's update *arrived*
@@ -23,6 +34,12 @@ pub struct Record {
     pub grad_norm: f64,
     /// instantaneous bandwidth estimate when logged (bits/s, 0 if unknown)
     pub bandwidth: f64,
+    /// WAN-tier compression ratio (1.0 on flat runs / tier-blind plans)
+    pub wan_delta: f64,
+    /// per-region sync time + WAN bits (empty on flat runs). Every record
+    /// of a run must carry the same region count — the CSV/JSON writers
+    /// enforce it as a hard error.
+    pub regions: Vec<RegionRecord>,
 }
 
 /// A completed training run.
@@ -79,22 +96,73 @@ impl RunResult {
             .fold(f64::INFINITY, f64::min)
     }
 
-    pub fn to_csv(&self) -> String {
-        let mut s = String::from(
-            "iter,time,loss,train_loss,tau,delta,grad_norm,bandwidth\n",
-        );
+    /// Region count carried by this run's records. Hard error (panic) when
+    /// records disagree — a mismatched row would silently misalign every
+    /// column to its right, so the writers refuse to emit it.
+    fn region_columns(&self) -> usize {
+        let n = self.records.first().map_or(0, |r| r.regions.len());
         for r in &self.records {
-            s.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{},{:.4},{:.6},{:.0}\n",
+            assert_eq!(
+                r.regions.len(),
+                n,
+                "record at iter {} carries {} region entries but this run's \
+                 header has {n}: refusing to write misaligned CSV/JSON",
                 r.iter,
-                r.time,
-                r.loss,
-                r.train_loss,
-                r.tau,
-                r.delta,
-                r.grad_norm,
-                r.bandwidth
-            ));
+                r.regions.len()
+            );
+        }
+        n
+    }
+
+    pub fn to_csv(&self) -> String {
+        let nregions = self.region_columns();
+        let mut header = vec![
+            "iter".to_string(),
+            "time".into(),
+            "loss".into(),
+            "train_loss".into(),
+            "tau".into(),
+            "delta".into(),
+            "grad_norm".into(),
+            "bandwidth".into(),
+        ];
+        if nregions > 0 {
+            header.push("wan_delta".into());
+            for r in 0..nregions {
+                header.push(format!("region{r}_sync"));
+                header.push(format!("region{r}_wan_bits"));
+            }
+        }
+        let mut s = header.join(",");
+        s.push('\n');
+        for r in &self.records {
+            let mut cells = vec![
+                r.iter.to_string(),
+                format!("{:.6}", r.time),
+                format!("{:.6}", r.loss),
+                format!("{:.6}", r.train_loss),
+                r.tau.to_string(),
+                format!("{:.4}", r.delta),
+                format!("{:.6}", r.grad_norm),
+                format!("{:.0}", r.bandwidth),
+            ];
+            if nregions > 0 {
+                cells.push(format!("{:.4}", r.wan_delta));
+                for reg in &r.regions {
+                    cells.push(format!("{:.6}", reg.sync));
+                    cells.push(reg.wan_bits.to_string());
+                }
+            }
+            assert_eq!(
+                cells.len(),
+                header.len(),
+                "CSV row at iter {} has {} cells for a {}-column header",
+                r.iter,
+                cells.len(),
+                header.len()
+            );
+            s.push_str(&cells.join(","));
+            s.push('\n');
         }
         s
     }
@@ -108,6 +176,7 @@ impl RunResult {
 
     pub fn to_json(&self) -> crate::util::Json {
         use crate::util::Json;
+        self.region_columns(); // same hard error as the CSV writer
         Json::obj(vec![
             ("method", Json::str(&self.method)),
             ("task", Json::str(&self.task)),
@@ -117,7 +186,7 @@ impl RunResult {
             (
                 "records",
                 Json::arr(self.records.iter().map(|r| {
-                    Json::obj(vec![
+                    let mut pairs = vec![
                         ("iter", Json::num(r.iter as f64)),
                         ("time", Json::num(r.time)),
                         ("loss", Json::num(r.loss)),
@@ -126,7 +195,23 @@ impl RunResult {
                         ("delta", Json::num(r.delta)),
                         ("grad_norm", Json::num(r.grad_norm)),
                         ("bandwidth", Json::num(r.bandwidth)),
-                    ])
+                    ];
+                    if !r.regions.is_empty() {
+                        pairs.push(("wan_delta", Json::num(r.wan_delta)));
+                        pairs.push((
+                            "regions",
+                            Json::arr(r.regions.iter().map(|reg| {
+                                Json::obj(vec![
+                                    ("sync", Json::num(reg.sync)),
+                                    (
+                                        "wan_bits",
+                                        Json::num(reg.wan_bits as f64),
+                                    ),
+                                ])
+                            })),
+                        ));
+                    }
+                    Json::obj(pairs)
                 })),
             ),
         ])
@@ -199,6 +284,8 @@ mod tests {
             delta: 1.0,
             grad_norm: 0.0,
             bandwidth: 0.0,
+            wan_delta: 1.0,
+            regions: Vec::new(),
         }
     }
 
@@ -235,6 +322,57 @@ mod tests {
         let csv = run.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("iter,time,loss"));
+    }
+
+    #[test]
+    fn two_tier_csv_emits_per_region_columns() {
+        let mut r1 = rec(1, 0.5, 2.0);
+        r1.wan_delta = 0.02;
+        r1.regions = vec![
+            RegionRecord { sync: 0.12, wan_bits: 1_000_000 },
+            RegionRecord { sync: 0.11, wan_bits: 1_000_000 },
+        ];
+        let mut r2 = rec(2, 1.0, 1.5);
+        r2.wan_delta = 0.02;
+        r2.regions = vec![
+            RegionRecord { sync: 0.62, wan_bits: 2_000_000 },
+            RegionRecord { sync: 0.61, wan_bits: 2_000_000 },
+        ];
+        let run = RunResult {
+            method: "deco-2tier".into(),
+            records: vec![r1, r2],
+            ..Default::default()
+        };
+        let csv = run.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with(
+            "wan_delta,region0_sync,region0_wan_bits,region1_sync,\
+             region1_wan_bits"
+        ));
+        for line in csv.lines() {
+            assert_eq!(
+                line.split(',').count(),
+                header.split(',').count(),
+                "self-describing: every row matches the header"
+            );
+        }
+        assert!(csv.contains("2000000"));
+        // JSON carries the same per-region data
+        let json = run.to_json().to_string_pretty();
+        assert!(json.contains("\"regions\"") && json.contains("\"sync\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned")]
+    fn region_count_mismatch_is_a_hard_error() {
+        let mut r1 = rec(1, 0.5, 2.0);
+        r1.regions = vec![RegionRecord { sync: 0.1, wan_bits: 10 }];
+        let r2 = rec(2, 1.0, 1.5); // no regions: header/row mismatch
+        let run = RunResult {
+            records: vec![r1, r2],
+            ..Default::default()
+        };
+        let _ = run.to_csv();
     }
 
     #[test]

@@ -31,11 +31,58 @@ pub enum PlanBasis {
     MeanLink,
 }
 
+/// The WAN-tier planning view of a two-tier topology (DESIGN.md
+/// §Topology): per-region WAN-link estimators plus the fan-in the solver
+/// prices the cross-datacenter tier with.
+pub struct WanCtx<'a> {
+    /// number of regions — the WAN fan-in (`n_effective`): one partial
+    /// flow crosses the WAN per region regardless of how many workers sit
+    /// behind it. The built-in per-tier solver doesn't consume this
+    /// directly — fan-in is already priced implicitly by the one-flow-per-
+    /// region message sizes and the per-region clock — but fan-in-aware
+    /// policies (e.g. variance-scaled δ_wan at few regions) read it here,
+    /// mirroring `StrategyCtx::active_workers`.
+    pub regions: usize,
+    /// one estimator per *region* WAN link
+    pub monitor: &'a FabricMonitor,
+    /// WAN priors used before the WAN monitor has samples
+    pub fallback: DecoInput,
+}
+
+impl WanCtx<'_> {
+    /// Best current estimate of the WAN-tier DeCo inputs. The region
+    /// partial is still a length-d aggregate, so `s_g` (not n·s_g) prices
+    /// the WAN message; `t_comp` is the shared cadence partials emerge at.
+    pub fn deco_input(
+        &self,
+        s_g: f64,
+        t_comp: f64,
+        plan: PlanBasis,
+    ) -> DecoInput {
+        let (a, b) = match plan {
+            PlanBasis::Bottleneck => {
+                (self.monitor.bandwidth(), self.monitor.latency())
+            }
+            PlanBasis::MeanLink => {
+                (self.monitor.mean_bandwidth(), self.monitor.mean_latency())
+            }
+        };
+        DecoInput {
+            s_g,
+            a: a.unwrap_or(self.fallback.a),
+            b: b.unwrap_or(self.fallback.b),
+            t_comp,
+        }
+    }
+}
+
 /// What a strategy can see when deciding (τ_t, δ_t).
 pub struct StrategyCtx<'a> {
     pub iter: usize,
     /// per-link estimators + aggregate views (restricted to the active
-    /// membership — departed workers' estimators are excluded)
+    /// membership — departed workers' estimators are excluded). On a
+    /// two-tier topology every worker link is an intra-region link, so
+    /// this IS the LAN-tier view.
     pub monitor: &'a FabricMonitor,
     /// gradient size, bits
     pub s_g: f64,
@@ -46,8 +93,9 @@ pub struct StrategyCtx<'a> {
     /// which monitor aggregate to plan on
     pub plan: PlanBasis,
     /// membership epoch (elastic subsystem): bumped on every churn event —
-    /// leave, rejoin, drain completion, fault-window boundary. 0 forever on
-    /// a static run. Event-triggered DeCo re-plans the moment it moves.
+    /// leave, rejoin, drain completion, fault-window boundary, aggregator
+    /// re-election. 0 forever on a static run. Event-triggered DeCo
+    /// re-plans the moment it moves.
     pub membership_epoch: u64,
     /// size of the active worker set (= all workers on a static run).
     /// The built-in strategies key re-planning off the epoch alone — the
@@ -55,6 +103,42 @@ pub struct StrategyCtx<'a> {
     /// fan-in-aware policies (e.g. variance-scaled δ at small n) read the
     /// size here.
     pub active_workers: usize,
+    /// WAN-tier planning view — `Some` iff the run prices a two-tier
+    /// topology. Tier-blind strategies ignore it and their flat (τ, δ)
+    /// applies to the LAN tier with the WAN tier uncompressed.
+    pub wan: Option<WanCtx<'a>>,
+}
+
+/// A per-tier decision: the LAN pair every strategy emits, plus the WAN
+/// pair a topology-aware strategy adds on a two-tier run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierParams {
+    /// LAN-tier staleness share
+    pub tau: usize,
+    /// LAN-tier compression (worker → region aggregator)
+    pub delta: f64,
+    /// WAN tier `(τ_wan, δ_wan)` — `None` means the region partial crosses
+    /// the WAN uncompressed with no extra delay share (and on a flat
+    /// topology there is no WAN tier at all)
+    pub wan: Option<(usize, f64)>,
+}
+
+impl TierParams {
+    /// A tier-blind decision (flat topologies, legacy strategies).
+    pub fn flat(tau: usize, delta: f64) -> Self {
+        Self { tau, delta, wan: None }
+    }
+
+    /// End-to-end staleness the worker delay queues realize: each tier's
+    /// delay share covers its own hop.
+    pub fn total_tau(&self) -> usize {
+        self.tau + self.wan.map_or(0, |(t, _)| t)
+    }
+
+    /// The WAN compression ratio (1.0 = uncompressed partials).
+    pub fn wan_delta(&self) -> f64 {
+        self.wan.map_or(1.0, |(_, d)| d)
+    }
 }
 
 impl StrategyCtx<'_> {
@@ -86,6 +170,16 @@ pub trait Strategy: Send {
     fn name(&self) -> &'static str;
     /// Decide (τ, δ) for iteration `ctx.iter` (1-based).
     fn params(&mut self, ctx: &StrategyCtx) -> (usize, f64);
+
+    /// Per-tier decision for iteration `ctx.iter`. The default wraps
+    /// [`Self::params`] as a tier-blind [`TierParams`] — on a two-tier
+    /// topology that ships uncompressed partials across the WAN.
+    /// Topology-aware strategies (`DecoTwoTier`) override this; the
+    /// training loop always calls it.
+    fn params_tiered(&mut self, ctx: &StrategyCtx) -> TierParams {
+        let (tau, delta) = self.params(ctx);
+        TierParams::flat(tau, delta)
+    }
 }
 
 /// Serde-friendly strategy selector for configs / CLI.
@@ -101,6 +195,13 @@ pub enum StrategyKind {
     /// plus an immediate re-solve whenever the membership epoch moves
     /// (`exp churn` compares this against boundary-only `DecoSgd`).
     DecoEvent { update_every: usize },
+    /// Two-tier DeCo (DESIGN.md §Topology): solve the DeCo problem once
+    /// per tier — (τ_lan, δ_lan) against the worker-link view, (τ_wan,
+    /// δ_wan) against the per-region WAN view — refreshed every E
+    /// iterations and on every membership-epoch move (aggregator
+    /// re-election included). Falls back to plain DeCo-SGD behaviour on a
+    /// flat topology.
+    DecoTwoTier { update_every: usize },
 }
 
 impl StrategyKind {
@@ -119,6 +220,9 @@ impl StrategyKind {
             Self::DecoEvent { update_every } => {
                 Box::new(DecoSgd::event_triggered(*update_every))
             }
+            Self::DecoTwoTier { update_every } => {
+                Box::new(DecoTwoTier::new(*update_every))
+            }
         }
     }
 
@@ -131,6 +235,7 @@ impl StrategyKind {
             Self::CocktailSgd => "CocktailSGD",
             Self::DecoSgd { .. } => "DeCo-SGD",
             Self::DecoEvent { .. } => "DeCo-SGD (event)",
+            Self::DecoTwoTier { .. } => "DeCo-SGD (2-tier)",
         }
     }
 
@@ -298,6 +403,66 @@ impl Strategy for DecoSgd {
     }
 }
 
+/// Two-tier DeCo (DESIGN.md §Topology): one DeCo solve per tier, sharing
+/// the `T_comp` cadence — the LAN tier against the monitored worker-link
+/// view, the WAN tier against the per-region WAN view. Re-plans on the E
+/// boundary and on every membership-epoch move (a departing aggregator's
+/// re-election moves the epoch, so the plan follows the topology).
+pub struct DecoTwoTier {
+    update_every: usize,
+    current: Option<TierParams>,
+    seen_epoch: u64,
+}
+
+impl DecoTwoTier {
+    pub fn new(update_every: usize) -> Self {
+        Self { update_every: update_every.max(1), current: None, seen_epoch: 0 }
+    }
+
+    pub fn current(&self) -> Option<TierParams> {
+        self.current
+    }
+
+    fn refresh_due(&mut self, ctx: &StrategyCtx) -> bool {
+        let epoch_moved = ctx.membership_epoch != self.seen_epoch;
+        self.seen_epoch = ctx.membership_epoch;
+        self.current.is_none()
+            || ctx.iter % self.update_every == 1
+            || epoch_moved
+    }
+}
+
+impl Strategy for DecoTwoTier {
+    fn name(&self) -> &'static str {
+        "DeCo-SGD (2-tier)"
+    }
+
+    /// Tier-blind fallback (flat topologies): plain event-triggered DeCo.
+    fn params(&mut self, ctx: &StrategyCtx) -> (usize, f64) {
+        let tp = self.params_tiered(ctx);
+        (tp.total_tau(), tp.delta)
+    }
+
+    fn params_tiered(&mut self, ctx: &StrategyCtx) -> TierParams {
+        if self.refresh_due(ctx) {
+            let lan = solve(&ctx.deco_input());
+            let wan = ctx.wan.as_ref().map(|w| {
+                let t_comp = ctx
+                    .monitor
+                    .compute_time()
+                    .unwrap_or(ctx.fallback.t_comp);
+                solve(&w.deco_input(ctx.s_g, t_comp, ctx.plan))
+            });
+            self.current = Some(TierParams {
+                tau: lan.tau,
+                delta: lan.delta,
+                wan: wan.map(|w| (w.tau, w.delta)),
+            });
+        }
+        self.current.unwrap()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,6 +477,7 @@ mod tests {
             plan: PlanBasis::Bottleneck,
             membership_epoch: 0,
             active_workers: 1,
+            wan: None,
         }
     }
 
@@ -383,6 +549,7 @@ mod tests {
             plan: PlanBasis::Bottleneck,
             membership_epoch: 0,
             active_workers: 1,
+            wan: None,
         };
         s.params(&mk(1, 10.0));
         // stable norms -> non-critical -> aggressive delta
@@ -397,6 +564,7 @@ mod tests {
     fn kind_builds_all() {
         let mut kinds = StrategyKind::paper_baselines();
         kinds.push(StrategyKind::DecoEvent { update_every: 20 });
+        kinds.push(StrategyKind::DecoTwoTier { update_every: 20 });
         for k in kinds {
             let mut s = k.build();
             let m = FabricMonitor::new(1, 0.3, 0);
@@ -436,6 +604,93 @@ mod tests {
             event.params(&StrategyCtx { membership_epoch: 1, ..ctx(&m, 56) }),
             p1e
         );
+    }
+
+    #[test]
+    fn tier_params_compose() {
+        let flat = TierParams::flat(3, 0.1);
+        assert_eq!(flat.total_tau(), 3);
+        assert_eq!(flat.wan_delta(), 1.0);
+        let two = TierParams { tau: 1, delta: 0.5, wan: Some((4, 0.02)) };
+        assert_eq!(two.total_tau(), 5);
+        assert_eq!(two.wan_delta(), 0.02);
+    }
+
+    #[test]
+    fn tier_blind_strategies_default_to_flat_tiers() {
+        let m = FabricMonitor::new(1, 0.3, 0);
+        let mut s = DdSgd { tau: 3 };
+        let tp = s.params_tiered(&ctx(&m, 1));
+        assert_eq!(tp, TierParams::flat(3, 1.0));
+    }
+
+    #[test]
+    fn two_tier_deco_solves_each_tier_against_its_own_links() {
+        // LAN: fast links (1 Gbps, 5 ms); WAN: scarce (20 Mbps, 300 ms).
+        // The per-tier planner must barely compress the LAN hop and
+        // compress the WAN hop hard behind a deeper delay share.
+        let s_g = 2e8;
+        let mut lan_m = FabricMonitor::new(4, 0.5, 0);
+        let mut wan_m = FabricMonitor::new(2, 0.5, 0);
+        for _ in 0..30 {
+            lan_m.observe_bandwidth(1e9);
+            lan_m.observe_latency(0.005);
+            lan_m.observe_compute(0.2);
+            wan_m.observe_bandwidth(2e7);
+            wan_m.observe_latency(0.3);
+        }
+        let wan_fallback = DecoInput { s_g, a: 2e7, b: 0.3, t_comp: 0.2 };
+        let mk = |iter| StrategyCtx {
+            iter,
+            monitor: &lan_m,
+            s_g,
+            grad_norm: None,
+            fallback: DecoInput { s_g, a: 1e9, b: 0.005, t_comp: 0.2 },
+            plan: PlanBasis::Bottleneck,
+            membership_epoch: 0,
+            active_workers: 4,
+            wan: Some(WanCtx {
+                regions: 2,
+                monitor: &wan_m,
+                fallback: wan_fallback,
+            }),
+        };
+        let mut s = DecoTwoTier::new(100);
+        let tp = s.params_tiered(&mk(1));
+        let (wan_tau, wan_delta) = tp.wan.expect("two-tier plan");
+        assert!(tp.delta > wan_delta, "{} vs {wan_delta}", tp.delta);
+        assert!(wan_tau >= tp.tau);
+        assert_eq!(tp.total_tau(), tp.tau + wan_tau);
+        // between boundaries with a stable epoch the plan is frozen
+        assert_eq!(s.params_tiered(&mk(50)), tp);
+        // an epoch move re-plans immediately, even mid-window
+        for _ in 0..50 {
+            wan_m.observe_bandwidth(2e6); // WAN collapses 10x
+        }
+        let moved = StrategyCtx { membership_epoch: 1, ..mk(50) };
+        let tp2 = s.params_tiered(&moved);
+        assert!(
+            tp2.wan_delta() < tp.wan_delta(),
+            "{} !< {}",
+            tp2.wan_delta(),
+            tp.wan_delta()
+        );
+    }
+
+    #[test]
+    fn two_tier_deco_without_wan_ctx_matches_plain_deco() {
+        let mut m = FabricMonitor::new(1, 0.9, 0);
+        for _ in 0..10 {
+            m.observe_bandwidth(5e8);
+            m.observe_latency(0.1);
+            m.observe_compute(0.5);
+        }
+        let mut plain = DecoSgd::new(20);
+        let mut tiered = DecoTwoTier::new(20);
+        let (tau_p, delta_p) = plain.params(&ctx(&m, 1));
+        let tp = tiered.params_tiered(&ctx(&m, 1));
+        assert_eq!(tp.wan, None, "no WAN ctx -> tier-blind plan");
+        assert_eq!((tp.tau, tp.delta), (tau_p, delta_p));
     }
 
     #[test]

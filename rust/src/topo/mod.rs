@@ -1,0 +1,28 @@
+//! Hierarchical multi-datacenter topology (DESIGN.md §Topology) — the
+//! two-tier aggregation layer over the per-worker [`crate::netsim::Fabric`].
+//!
+//! The paper's premise is training *across data centers*: cheap, fast links
+//! inside a region and scarce, high-latency WAN links between them. The
+//! flat star every run priced until now sends all n worker messages
+//! straight across the worker links; this module turns a region-structured
+//! fabric into a **two-tier aggregation plan**:
+//!
+//! * each region elects a local **aggregator** ([`elect`]) that reduces its
+//!   members' (δ_lan-compressed) gradients over intra-region links;
+//! * only the **per-region partials** cross the WAN, re-compressed at their
+//!   own ratio δ_wan with their own staleness share τ_wan and a second,
+//!   per-region error-feedback state at the boundary;
+//! * the virtual clock prices the hierarchy exactly
+//!   ([`crate::coordinator::VirtualClock::tick_topo`]): a region's partial
+//!   is ready at the **slowest member's** intra-region arrival, the global
+//!   aggregation completes at the **slowest region partial's** WAN arrival.
+//!
+//! [`Topology::Flat`] is the degenerate case and stays bit-identical to the
+//! fabric-only path (`tests/topo.rs`); [`plan`] holds the per-tier DeCo
+//! decomposition the `DecoTwoTier` strategy solves.
+
+pub mod plan;
+pub mod region;
+
+pub use plan::{lan_input, wan_input, TwoTierPlan};
+pub use region::{elect, elect_eligible, RegionTopo, Topology};

@@ -1,0 +1,272 @@
+//! Region structure and aggregator election.
+//!
+//! A [`Topology`] describes how the workers of a run are wired into the
+//! aggregation tree. [`Topology::Flat`] is the historical star: every
+//! worker pushes straight to the leader over its own fabric link.
+//! [`Topology::TwoTier`] groups workers into regions, each with an elected
+//! local aggregator and a per-region WAN link (a [`Fabric`] with one link
+//! per *region*), so only region partials cross the WAN.
+
+use crate::netsim::Fabric;
+
+/// One region of a two-tier topology: its member worker indices and the
+/// member currently acting as local aggregator.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RegionTopo {
+    /// worker indices belonging to this region (ascending, non-empty)
+    pub members: Vec<usize>,
+    /// the member reducing this region's gradients; its own gradient is
+    /// local (no intra-region hop), and re-election replaces it when it
+    /// departs (DESIGN.md §Topology)
+    pub aggregator: usize,
+}
+
+impl RegionTopo {
+    pub fn contains(&self, worker: usize) -> bool {
+        self.members.contains(&worker)
+    }
+}
+
+/// The aggregation tree of a run.
+#[derive(Clone, Debug)]
+pub enum Topology {
+    /// every worker pushes straight to the leader over its own fabric link
+    /// (bit-identical to the pre-topology path — `tests/topo.rs`)
+    Flat,
+    /// two-tier: intra-region reduction at elected aggregators, then one
+    /// WAN transfer per region. `wan` has exactly one link per region.
+    TwoTier { regions: Vec<RegionTopo>, wan: Fabric },
+}
+
+impl Topology {
+    pub fn is_two_tier(&self) -> bool {
+        matches!(self, Topology::TwoTier { .. })
+    }
+
+    /// Number of regions (0 for flat).
+    pub fn region_count(&self) -> usize {
+        match self {
+            Topology::Flat => 0,
+            Topology::TwoTier { regions, .. } => regions.len(),
+        }
+    }
+
+    /// Check structural invariants against an `n`-worker run: regions
+    /// partition `0..n` (every worker in exactly one region), every
+    /// aggregator is a member of its region, and the WAN fabric carries
+    /// exactly one link per region.
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        let Topology::TwoTier { regions, wan } = self else {
+            return Ok(());
+        };
+        if regions.is_empty() {
+            anyhow::bail!("two-tier topology needs at least one region");
+        }
+        if wan.workers() != regions.len() {
+            anyhow::bail!(
+                "WAN fabric has {} links but the topology has {} regions",
+                wan.workers(),
+                regions.len()
+            );
+        }
+        let mut seen = vec![false; n];
+        for (r, region) in regions.iter().enumerate() {
+            if region.members.is_empty() {
+                anyhow::bail!("region {r} has no members");
+            }
+            if !region.contains(region.aggregator) {
+                anyhow::bail!(
+                    "region {r} aggregator {} is not one of its members",
+                    region.aggregator
+                );
+            }
+            for &w in &region.members {
+                if w >= n {
+                    anyhow::bail!(
+                        "region {r} member {w} out of range (n = {n})"
+                    );
+                }
+                if seen[w] {
+                    anyhow::bail!("worker {w} appears in two regions");
+                }
+                seen[w] = true;
+            }
+        }
+        if let Some(w) = seen.iter().position(|&s| !s) {
+            anyhow::bail!("worker {w} belongs to no region");
+        }
+        Ok(())
+    }
+
+    /// The region index of `worker` (None for flat topologies).
+    pub fn region_of(&self, worker: usize) -> Option<usize> {
+        match self {
+            Topology::Flat => None,
+            Topology::TwoTier { regions, .. } => {
+                regions.iter().position(|r| r.contains(worker))
+            }
+        }
+    }
+
+}
+
+/// Elect a region's aggregator: the member with the highest intra-region
+/// bandwidth at t = 0 — it sinks every member's message, so the
+/// best-connected node hurts least — breaking ties by lowest latency, then
+/// lowest index. Deterministic by construction.
+pub fn elect(fabric: &Fabric, members: &[usize]) -> usize {
+    elect_among(fabric, members, |_| true)
+        .expect("elect requires a non-empty member list")
+}
+
+/// [`elect`] restricted to members marked `true` in `eligible` (indexed by
+/// worker id) — the re-election form churn drives. `None` when no member
+/// is eligible.
+pub fn elect_eligible(
+    fabric: &Fabric,
+    members: &[usize],
+    eligible: &[bool],
+) -> Option<usize> {
+    elect_among(fabric, members, |w| eligible[w])
+}
+
+fn elect_among(
+    fabric: &Fabric,
+    members: &[usize],
+    eligible: impl Fn(usize) -> bool,
+) -> Option<usize> {
+    let mut best: Option<(usize, f64, f64)> = None;
+    for &w in members {
+        if !eligible(w) {
+            continue;
+        }
+        let link = fabric.link(w);
+        let (bw, lat) = (link.bandwidth_at(0.0), link.latency());
+        let better = match best {
+            None => true,
+            Some((bw_b, lat_b, _)) => {
+                bw > bw_b || (bw == bw_b && lat < lat_b)
+            }
+        };
+        // ascending member order: ties keep the lowest index
+        if better {
+            best = Some((bw, lat, w));
+        }
+    }
+    best.map(|(_, _, w)| w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{BandwidthTrace, Link};
+
+    fn fabric(links: &[(f64, f64)]) -> Fabric {
+        Fabric::new(
+            links
+                .iter()
+                .map(|&(bps, lat)| {
+                    Link::new(BandwidthTrace::constant(bps), lat)
+                })
+                .collect(),
+        )
+    }
+
+    fn two_tier(regions: Vec<RegionTopo>, n_regions: usize) -> Topology {
+        Topology::TwoTier {
+            regions,
+            wan: Fabric::homogeneous(
+                n_regions,
+                BandwidthTrace::constant(1e7),
+                0.3,
+            ),
+        }
+    }
+
+    #[test]
+    fn election_prefers_bandwidth_then_latency_then_index() {
+        let f = fabric(&[
+            (1e8, 0.1),
+            (2e8, 0.2), // fastest link wins despite higher latency
+            (2e8, 0.1),
+            (1e8, 0.1),
+        ]);
+        assert_eq!(elect(&f, &[0, 3]), 0, "tie resolves to lowest index");
+        assert_eq!(elect(&f, &[0, 1]), 1, "bandwidth dominates");
+        assert_eq!(elect(&f, &[1, 2]), 2, "latency breaks the bw tie");
+    }
+
+    #[test]
+    fn validate_catches_bad_partitions() {
+        let ok = two_tier(
+            vec![
+                RegionTopo { members: vec![0, 1], aggregator: 0 },
+                RegionTopo { members: vec![2, 3], aggregator: 3 },
+            ],
+            2,
+        );
+        assert!(ok.validate(4).is_ok());
+        assert!(Topology::Flat.validate(4).is_ok());
+
+        let overlap = two_tier(
+            vec![
+                RegionTopo { members: vec![0, 1], aggregator: 0 },
+                RegionTopo { members: vec![1, 2, 3], aggregator: 2 },
+            ],
+            2,
+        );
+        assert!(overlap.validate(4).is_err(), "worker in two regions");
+
+        let uncovered = two_tier(
+            vec![RegionTopo { members: vec![0, 1], aggregator: 0 }],
+            1,
+        );
+        assert!(uncovered.validate(3).is_err(), "worker 2 unassigned");
+
+        let foreign_agg = two_tier(
+            vec![
+                RegionTopo { members: vec![0, 1], aggregator: 2 },
+                RegionTopo { members: vec![2, 3], aggregator: 2 },
+            ],
+            2,
+        );
+        assert!(foreign_agg.validate(4).is_err());
+
+        let wan_mismatch = Topology::TwoTier {
+            regions: vec![
+                RegionTopo { members: vec![0, 1], aggregator: 0 },
+                RegionTopo { members: vec![2, 3], aggregator: 2 },
+            ],
+            wan: Fabric::homogeneous(3, BandwidthTrace::constant(1e7), 0.3),
+        };
+        assert!(wan_mismatch.validate(4).is_err());
+    }
+
+    #[test]
+    fn region_lookup_and_eligible_election() {
+        let f = fabric(&[(2e8, 0.1), (1e8, 0.1), (5e7, 0.1), (1e8, 0.1)]);
+        let topo = two_tier(
+            vec![
+                RegionTopo { members: vec![0, 1], aggregator: 0 },
+                RegionTopo { members: vec![2, 3], aggregator: 3 },
+            ],
+            2,
+        );
+        assert_eq!(topo.region_of(1), Some(0));
+        assert_eq!(topo.region_of(2), Some(1));
+        assert_eq!(Topology::Flat.region_of(1), None);
+        // the re-election primitive (what VirtualClock::reelect_aggregator
+        // drives): aggregator 0 departs -> worker 1 takes over region 0
+        let mut eligible = vec![true; 4];
+        eligible[0] = false;
+        assert_eq!(elect_eligible(&f, &[0, 1], &eligible), Some(1));
+        // an empty eligible set elects nobody (the region idles)
+        eligible[1] = false;
+        assert_eq!(elect_eligible(&f, &[0, 1], &eligible), None);
+        // unrestricted election agrees with an all-true mask
+        assert_eq!(
+            elect_eligible(&f, &[2, 3], &[true; 4]),
+            Some(elect(&f, &[2, 3]))
+        );
+    }
+}

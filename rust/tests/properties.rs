@@ -363,6 +363,96 @@ fn prop_fabric_sync_arrival_dominates_links() {
 }
 
 #[test]
+fn prop_two_tier_global_sync_dominates_region_syncs() {
+    // on a two-tier topology the global sync arrival is gated by the
+    // slowest region partial: TC_k >= wan_tc_r >= sync_r >= TS_k for every
+    // active region r, and TC_k == max_r wan_tc_r exactly
+    use deco::topo::{RegionTopo, Topology};
+    forall("two_tier_sync_dominates", 80, |g| {
+        let regions = g.size(1, 4);
+        let mut next = 0usize;
+        let mut topo_regions = Vec::with_capacity(regions);
+        let mut links = Vec::new();
+        for _ in 0..regions {
+            let m = g.size(1, 4);
+            let ids: Vec<usize> = (next..next + m).collect();
+            next += m;
+            for _ in 0..m {
+                links.push(Link::new(
+                    BandwidthTrace::constant(g.f64(1e7, 1e9)),
+                    g.f64(0.0, 0.1),
+                ));
+            }
+            topo_regions.push(RegionTopo {
+                // election order is irrelevant to the invariant: pick any
+                aggregator: ids[0],
+                members: ids,
+            });
+        }
+        let wan = Fabric::new(
+            (0..regions)
+                .map(|_| {
+                    Link::new(
+                        BandwidthTrace::constant(g.f64(1e6, 1e8)),
+                        g.f64(0.0, 1.0),
+                    )
+                })
+                .collect(),
+        );
+        let mut clock = VirtualClock::with_topology(
+            Fabric::new(links),
+            Topology::TwoTier { regions: topo_regions, wan },
+        )
+        .map_err(|e| e.to_string())?;
+        let iters = g.size(3, 40);
+        for k in 0..iters {
+            let tau = g.size(0, 4);
+            let lan_bits = g.size(0, 50_000_000) as u64;
+            let wan_bits = g.size(0, 50_000_000) as u64;
+            let t = clock.tick_topo(
+                g.f64(0.01, 0.5),
+                tau,
+                lan_bits,
+                wan_bits,
+                None,
+            );
+            let mut max_wan = f64::NEG_INFINITY;
+            for (r, rt) in clock.region_ticks().iter().enumerate() {
+                if !rt.active {
+                    return Err(format!("region {r} inactive without mask"));
+                }
+                if rt.sync < t.ts {
+                    return Err(format!(
+                        "k={k} region {r}: sync {} < TS {}",
+                        rt.sync, t.ts
+                    ));
+                }
+                if rt.wan_tc < rt.sync {
+                    return Err(format!(
+                        "k={k} region {r}: wan arrival {} < sync {}",
+                        rt.wan_tc, rt.sync
+                    ));
+                }
+                if t.tc < rt.sync {
+                    return Err(format!(
+                        "k={k} region {r}: global sync {} < region sync {}",
+                        t.tc, rt.sync
+                    ));
+                }
+                max_wan = max_wan.max(rt.wan_tc);
+            }
+            if t.tc.to_bits() != max_wan.to_bits() {
+                return Err(format!(
+                    "k={k}: global {} != max region wan arrival {max_wan}",
+                    t.tc
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_clock_matches_event_sim() {
     // incremental VirtualClock == batch EventSim for any constant params
     forall("clock_vs_eventsim", 60, |g| {
@@ -461,25 +551,37 @@ fn prop_deco_output_feasible_and_optimal() {
 
 #[test]
 fn prop_json_roundtrip_arbitrary_runresults() {
-    use deco::metrics::{Record, RunResult};
+    use deco::metrics::{Record, RegionRecord, RunResult};
     forall("metrics_json_roundtrip", 50, |g| {
         let n = g.size(0, 20);
+        // every record of a run must carry the same region count — the
+        // writers hard-error otherwise, so generate it per run
+        let regions = if g.bool() { g.size(1, 4) } else { 0 };
+        let mut records = Vec::with_capacity(n);
+        for i in 0..n {
+            records.push(Record {
+                iter: i,
+                time: g.f64(0.0, 1e4),
+                loss: g.f64(-10.0, 10.0),
+                train_loss: g.f64(-10.0, 10.0),
+                tau: g.size(0, 9),
+                delta: g.f64(0.001, 1.0),
+                grad_norm: g.f64(0.0, 100.0),
+                bandwidth: g.f64(0.0, 1e9),
+                wan_delta: g.f64(0.001, 1.0),
+                regions: (0..regions)
+                    .map(|_| RegionRecord {
+                        sync: g.f64(0.0, 1e4),
+                        wan_bits: g.size(0, 1_000_000_000) as u64,
+                    })
+                    .collect(),
+            });
+        }
         let res = RunResult {
             method: format!("m{}", g.size(0, 9)),
             task: "t".into(),
             workers: g.size(1, 32),
-            records: (0..n)
-                .map(|i| Record {
-                    iter: i,
-                    time: g.f64(0.0, 1e4),
-                    loss: g.f64(-10.0, 10.0),
-                    train_loss: g.f64(-10.0, 10.0),
-                    tau: g.size(0, 9),
-                    delta: g.f64(0.001, 1.0),
-                    grad_norm: g.f64(0.0, 100.0),
-                    bandwidth: g.f64(0.0, 1e9),
-                })
-                .collect(),
+            records,
             total_time: g.f64(0.0, 1e5),
             total_iters: n,
         };

@@ -1,0 +1,327 @@
+//! Topology-subsystem regression tests (DESIGN.md §Topology):
+//!
+//! * determinism contract — a `Topology::Flat` run is bit-identical to the
+//!   fabric-only path (serial AND pooled), and a two-tier run is
+//!   bit-identical across pool sizes;
+//! * two-tier pricing — the global sync arrival is gated by the slowest
+//!   region partial, and hierarchical aggregation beats the flat
+//!   shared-egress star on a scarce WAN;
+//! * elastic composition — a departing aggregator triggers re-election +
+//!   an epoch bump, and the run keeps converging;
+//! * config validation — two-tier specs require a regions fabric and
+//!   reject empty groups.
+
+use deco::config::{
+    FabricSpec, NetworkConfig, RegionSpec, TopologySpec,
+};
+use deco::coordinator::{TrainLoop, TrainParams};
+use deco::deco::DecoInput;
+use deco::elastic::{ChurnEvent, ChurnSpec, TimedEvent};
+use deco::metrics::RunResult;
+use deco::netsim::{BandwidthTrace, Fabric, TraceKind};
+use deco::optim::Quadratic;
+use deco::strategy::StrategyKind;
+use deco::topo::{RegionTopo, Topology};
+
+const S_G: f64 = 1e8;
+const T_COMP: f64 = 0.2;
+
+fn params(max_iters: usize) -> TrainParams {
+    TrainParams {
+        gamma: 0.005,
+        max_iters,
+        log_every: 10,
+        t_comp_override: Some(T_COMP),
+        s_g_override: Some(S_G),
+        fallback: DecoInput { s_g: S_G, a: 2e7, b: 0.2, t_comp: T_COMP },
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+fn quad(dim: usize) -> Quadratic {
+    Quadratic::new(dim, 4, 1.0, 0.2, 0.3, 0.3, 11)
+}
+
+fn lan_fabric() -> Fabric {
+    Fabric::homogeneous(4, BandwidthTrace::constant(1e9), 0.005)
+}
+
+fn two_tier() -> Topology {
+    Topology::TwoTier {
+        regions: vec![
+            RegionTopo { members: vec![0, 1], aggregator: 0 },
+            RegionTopo { members: vec![2, 3], aggregator: 2 },
+        ],
+        wan: Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.3),
+    }
+}
+
+fn run_topo(
+    fabric: Fabric,
+    topo: Topology,
+    kind: StrategyKind,
+    mut p: TrainParams,
+    dim: usize,
+    threads: usize,
+) -> (Vec<f32>, RunResult) {
+    p.threads = Some(threads);
+    let mut tl =
+        TrainLoop::try_with_topology(quad(dim), kind.build(), fabric, topo, p)
+            .unwrap();
+    let res = tl.run("topo");
+    (tl.model().to_vec(), res)
+}
+
+fn assert_bit_identical(a: &(Vec<f32>, RunResult), b: &(Vec<f32>, RunResult)) {
+    assert_eq!(a.0.len(), b.0.len());
+    for (i, (xa, xb)) in a.0.iter().zip(&b.0).enumerate() {
+        assert_eq!(xa.to_bits(), xb.to_bits(), "model diverges at {i}");
+    }
+    assert_eq!(a.1.total_iters, b.1.total_iters);
+    assert_eq!(a.1.total_time.to_bits(), b.1.total_time.to_bits());
+    assert_eq!(a.1.records.len(), b.1.records.len());
+    for (ra, rb) in a.1.records.iter().zip(&b.1.records) {
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "iter {}", ra.iter);
+        assert_eq!(ra.time.to_bits(), rb.time.to_bits(), "iter {}", ra.iter);
+        assert_eq!(ra.regions, rb.regions, "iter {}", ra.iter);
+    }
+}
+
+/// The heterogeneous fabric the flat bit-identity contract runs on: a
+/// straggler defeats the clock's uniform fast path so the general loop is
+/// what's being compared.
+fn straggler_fabric() -> Fabric {
+    Fabric::with_straggler(4, BandwidthTrace::constant(1e8), 0.1, 0.5, 2.0)
+}
+
+#[test]
+fn flat_topology_is_bit_identical_to_fabric_path() {
+    for threads in [1usize, 4] {
+        let mut p = params(600);
+        p.threads = Some(threads);
+        let mut fabric_only = TrainLoop::try_with_fabric(
+            quad(1024),
+            StrategyKind::DecoSgd { update_every: 20 }.build(),
+            straggler_fabric(),
+            p.clone(),
+        )
+        .unwrap();
+        let res_fabric = fabric_only.run("topo");
+        let topo = run_topo(
+            straggler_fabric(),
+            Topology::Flat,
+            StrategyKind::DecoSgd { update_every: 20 },
+            p,
+            1024,
+            threads,
+        );
+        assert_bit_identical(
+            &(fabric_only.model().to_vec(), res_fabric),
+            &topo,
+        );
+        // flat records carry no region columns
+        assert!(topo.1.records.iter().all(|r| r.regions.is_empty()));
+    }
+}
+
+#[test]
+fn two_tier_run_is_bit_identical_across_pool_sizes() {
+    let serial = run_topo(
+        lan_fabric(),
+        two_tier(),
+        StrategyKind::DecoTwoTier { update_every: 20 },
+        params(600),
+        4096,
+        1,
+    );
+    let pooled = run_topo(
+        lan_fabric(),
+        two_tier(),
+        StrategyKind::DecoTwoTier { update_every: 20 },
+        params(600),
+        4096,
+        4,
+    );
+    assert_bit_identical(&serial, &pooled);
+    // and every record carries both regions' columns
+    assert!(serial.1.records.iter().all(|r| r.regions.len() == 2));
+}
+
+#[test]
+fn tier_blind_strategies_run_two_tier_with_uncompressed_wan() {
+    // a legacy strategy on a two-tier topology ships uncompressed partials:
+    // the run must still complete, converge, and log wan_delta = 1
+    let (_, res) = run_topo(
+        lan_fabric(),
+        two_tier(),
+        StrategyKind::DSgd,
+        params(400),
+        512,
+        1,
+    );
+    assert_eq!(res.total_iters, 400);
+    assert!(res.records.iter().all(|r| r.wan_delta == 1.0));
+    let l0 = {
+        let q = quad(512);
+        let x = deco::optim::GradOracle::init(&q);
+        deco::optim::GradOracle::loss(&q, &x)
+    };
+    assert!(res.final_loss() < l0, "{l0} -> {}", res.final_loss());
+}
+
+#[test]
+fn departing_aggregator_reelects_and_bumps_epoch() {
+    // worker 0 (region 0's aggregator) leaves at t=30 s: region 0 must
+    // hand the role to worker 1, bump the membership epoch, and keep
+    // pricing; the rejoin at t=90 s keeps worker 1 in the role (the
+    // incumbent is still active — re-election only fires when the
+    // aggregator itself is gone, so roles stay stable across rejoins)
+    let spec = ChurnSpec::Scripted {
+        events: vec![
+            TimedEvent { t: 30.0, event: ChurnEvent::Leave { worker: 0 } },
+            TimedEvent { t: 90.0, event: ChurnEvent::Rejoin { worker: 0 } },
+        ],
+    };
+    let mut p = params(1500);
+    p.churn = spec;
+    p.threads = Some(1);
+    let mut tl = TrainLoop::try_with_topology(
+        quad(512),
+        StrategyKind::DecoTwoTier { update_every: 400 }.build(),
+        lan_fabric(),
+        two_tier(),
+        p,
+    )
+    .unwrap();
+    assert_eq!(tl.clock().regions()[0].aggregator, 0);
+    let res = tl.run("topo");
+    assert_eq!(res.total_iters, 1500);
+    // the role moved to worker 1 and stayed there; the epoch counted
+    // leave, re-election, and rejoin
+    assert_eq!(tl.clock().regions()[0].aggregator, 1);
+    assert_eq!(tl.membership().epoch(), 3);
+    // region 0 kept pricing throughout (its sync never froze at 0 while
+    // worker 1 carried the region alone)
+    assert!(res.records.iter().all(|r| r.regions[0].sync > 0.0));
+}
+
+#[test]
+fn draining_region_empties_then_prices_inactive() {
+    // drain × topology composition: both members of region 0 leave under
+    // DrainPolicy::Drain while holding in-flight gradients (τ = 2). Their
+    // flushes must keep flowing through a *present* aggregator (if the
+    // incumbent fully departs first, the role falls back to a draining
+    // member), and once the region is empty it prices as inactive —
+    // frozen WAN timeline, sync 0 — while region 1 keeps running.
+    let spec = ChurnSpec::Scripted {
+        events: vec![
+            TimedEvent { t: 30.0, event: ChurnEvent::Leave { worker: 1 } },
+            TimedEvent { t: 36.0, event: ChurnEvent::Leave { worker: 0 } },
+        ],
+    };
+    let mut p = params(100);
+    p.churn = spec;
+    p.drain = deco::elastic::DrainPolicy::Drain;
+    p.log_every = 5;
+    p.threads = Some(1);
+    let mut tl = TrainLoop::try_with_topology(
+        quad(256),
+        StrategyKind::DdSgd { tau: 2 }.build(),
+        lan_fabric(),
+        two_tier(),
+        p,
+    )
+    .unwrap();
+    let res = tl.run("topo");
+    assert_eq!(res.total_iters, 100, "run survives the region emptying");
+    // both leaves (and any drain completions / re-elections) moved the
+    // epoch at least twice
+    assert!(tl.membership().epoch() >= 2);
+    let last = res.records.last().unwrap();
+    assert_eq!(last.regions[0].sync, 0.0, "empty region prices inactive");
+    assert!(last.regions[1].sync > 0.0, "region 1 keeps running");
+    // region 0's WAN traffic froze once it emptied
+    let prev = &res.records[res.records.len() - 2];
+    assert_eq!(prev.regions[0].wan_bits, last.regions[0].wan_bits);
+    assert!(last.regions[1].wan_bits > prev.regions[1].wan_bits);
+}
+
+#[test]
+fn two_tier_beats_flat_star_on_scarce_wan() {
+    // integration form of the exp topo headline at one sweep point
+    let flat = deco::exp::topo::run_one(
+        2,
+        0.1,
+        deco::exp::topo::TopoArm::FlatDeco,
+        4,
+        512,
+        6000,
+    )
+    .unwrap();
+    let two = deco::exp::topo::run_one(
+        2,
+        0.1,
+        deco::exp::topo::TopoArm::TwoTierDeco,
+        4,
+        512,
+        6000,
+    )
+    .unwrap();
+    let tf = flat.time_to_loss(0.18).expect("flat reaches");
+    let tt = two.time_to_loss(0.18).expect("two-tier reaches");
+    assert!(tt < tf, "two-tier {tt:.1}s !< flat {tf:.1}s");
+}
+
+#[test]
+fn topo_sweep_is_deterministic() {
+    let (csv_a, _) = deco::exp::topo::sweep(0.02, 4, 128).unwrap();
+    let (csv_b, _) = deco::exp::topo::sweep(0.02, 4, 128).unwrap();
+    assert_eq!(csv_a, csv_b, "byte-identical CSV across sweeps");
+}
+
+#[test]
+fn invalid_topologies_error_not_panic() {
+    // two-tier spec over a non-regions fabric
+    let mut net = NetworkConfig::homogeneous(
+        TraceKind::Constant { bps: 1e8 },
+        0.1,
+    );
+    net.topology = TopologySpec::TwoTier {
+        wan_trace: TraceKind::Constant { bps: 2e7 },
+        wan_latency_s: 0.3,
+    };
+    let fabric = net.build_fabric(4).unwrap();
+    assert!(net.build_topology(4, &fabric).is_err());
+
+    // empty regions group is rejected before election can panic
+    net.fabric = FabricSpec::Regions {
+        groups: vec![
+            RegionSpec {
+                workers: 0,
+                trace: TraceKind::Constant { bps: 1e8 },
+                latency_s: 0.05,
+            },
+            RegionSpec {
+                workers: 4,
+                trace: TraceKind::Constant { bps: 1e8 },
+                latency_s: 0.05,
+            },
+        ],
+    };
+    assert!(net.build_fabric(4).is_err());
+
+    // a topology that doesn't partition the workers errors at construction
+    let bad = Topology::TwoTier {
+        regions: vec![RegionTopo { members: vec![0, 1], aggregator: 0 }],
+        wan: Fabric::homogeneous(1, BandwidthTrace::constant(2e7), 0.3),
+    };
+    assert!(TrainLoop::try_with_topology(
+        quad(64),
+        StrategyKind::DSgd.build(),
+        lan_fabric(),
+        bad,
+        params(10),
+    )
+    .is_err());
+}

@@ -7,6 +7,8 @@
 #   BENCH_elastic.json  — membership-aware clock tick + aggregation
 #                         bookkeeping with churn vs the static-fabric
 #                         baseline at n in {4, 16, 32}
+#   BENCH_topo.json     — two-tier topology clock tick vs flat at
+#                         n in {4, 16, 32} x regions in {2, 4}
 #
 #   scripts/bench.sh                # fast mode (default; CI-sized)
 #   DECO_BENCH_FAST=0 scripts/bench.sh   # full measurement windows
@@ -23,7 +25,8 @@ fi
 jsonl="$(mktemp)"
 fab_jsonl="$(mktemp)"
 ela_jsonl="$(mktemp)"
-trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl"' EXIT
+topo_jsonl="$(mktemp)"
+trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl"' EXIT
 
 consolidate() {
   # consolidate <jsonl> <out.json>
@@ -53,3 +56,7 @@ consolidate "$fab_jsonl" BENCH_fabric.json
 echo "### cargo bench --bench bench_elastic"
 DECO_BENCH_JSON="$ela_jsonl" cargo bench --bench bench_elastic
 consolidate "$ela_jsonl" BENCH_elastic.json
+
+echo "### cargo bench --bench bench_topo"
+DECO_BENCH_JSON="$topo_jsonl" cargo bench --bench bench_topo
+consolidate "$topo_jsonl" BENCH_topo.json
