@@ -1,0 +1,91 @@
+//! Exact prefix-integral transfer engine (DESIGN.md §Perf): the new
+//! `transfer_end` / `end_of_transfer` against the pre-refactor 10 ms
+//! forward-Euler stepper on the varying traces the experiments actually
+//! run (Sine, OU, Markov, windowed OU) × transfer lengths {0.1 s, 3 s,
+//! 30 s}, plus an end-to-end `exp hetero --fast` sweep cell with serial
+//! vs pooled sweep cells.
+//!
+//! `scripts/bench.sh` consolidates these into `BENCH_trace.json`. The
+//! headline: the 30 s varying-trace transfer costs ~3000 `at()` calls
+//! under Euler and O(log n) under the prefix engine.
+
+use deco::exp::hetero;
+use deco::netsim::{BandwidthTrace, DegradeWindow, Link, TraceKind};
+use deco::util::bench::{black_box, Bench};
+
+fn traces() -> Vec<(&'static str, BandwidthTrace)> {
+    let ou = TraceKind::Ou {
+        mean_bps: 1e8,
+        sigma_bps: 2e7,
+        theta: 0.5,
+        seed: 7,
+    };
+    vec![
+        (
+            "sine",
+            BandwidthTrace::new(TraceKind::Sine {
+                mean_bps: 1e8,
+                amp_bps: 4e7,
+                period_s: 7.0,
+            }),
+        ),
+        ("ou", BandwidthTrace::new(ou.clone())),
+        (
+            "markov",
+            BandwidthTrace::new(TraceKind::Markov {
+                levels_bps: vec![2e7, 1e8, 2e8],
+                dwell_s: 2.0,
+                seed: 9,
+            }),
+        ),
+        (
+            "windowed_ou",
+            BandwidthTrace::new(ou).windowed(vec![
+                DegradeWindow { start_s: 100.0, end_s: 115.0, frac: 0.25 },
+                DegradeWindow { start_s: 400.0, end_s: 420.0, frac: 0.0 },
+            ]),
+        ),
+    ]
+}
+
+fn main() {
+    println!("== bench_trace (exact prefix-integral transfer engine) ==");
+    let b = Bench::new("trace");
+    // transfer lengths at the 1e8 bps mean rate
+    for (label, secs) in [("0.1s", 0.1f64), ("3s", 3.0), ("30s", 30.0)] {
+        let bits = (secs * 1e8) as u64;
+        for (name, trace) in traces() {
+            let link = Link::new(trace.clone(), 0.1);
+            let mut t = 0.0f64;
+            let old =
+                b.bench(&format!("transfer_end_old/{name}/{label}"), || {
+                    t = (t + 1.7) % 900.0;
+                    black_box(trace.euler_end_reference(t, bits as f64));
+                });
+            let mut t = 0.0f64;
+            let new =
+                b.bench(&format!("transfer_end_new/{name}/{label}"), || {
+                    t = (t + 1.7) % 900.0;
+                    black_box(link.transfer_end(t, bits));
+                });
+            println!(
+                "    -> speedup {name}/{label}: {:.1}x",
+                old.median_ns / new.median_ns
+            );
+        }
+    }
+    // end-to-end sweep cell: the `exp hetero --fast` severity × arm grid,
+    // serial cells vs cells fanned out over the worker pool (both arms use
+    // prebuilt per-severity fabrics — the knob is purely the pool size)
+    let (scale, workers, dim, mult) = (0.01, 4, 512, 6.0);
+    let serial = b.bench("hetero_fast_sweep/serial", || {
+        black_box(hetero::sweep(scale, workers, dim, mult, Some(1)).unwrap());
+    });
+    let pooled = b.bench("hetero_fast_sweep/pooled", || {
+        black_box(hetero::sweep(scale, workers, dim, mult, None).unwrap());
+    });
+    println!(
+        "    -> sweep speedup: {:.2}x",
+        serial.median_ns / pooled.median_ns
+    );
+}

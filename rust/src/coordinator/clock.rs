@@ -23,10 +23,11 @@ pub struct VirtualClock {
     /// two-tier topology state; `None` prices the flat star exactly as the
     /// pre-topology clock did (DESIGN.md §Topology)
     two_tier: Option<TwoTierState>,
-    /// all links share one trace config + latency (homogeneous fabric):
-    /// every per-worker timeline is provably identical, so one transfer
-    /// integration per tick suffices — the hot-path fast path that keeps
-    /// per-worker pricing free for the paper's default scenarios
+    /// all links share one trace config + latency
+    /// ([`Fabric::is_uniform`]): every per-worker timeline is provably
+    /// identical, so one exact transfer inversion per tick suffices — the
+    /// hot-path fast path that keeps per-worker pricing free for the
+    /// paper's default scenarios
     uniform: bool,
     /// TS_k of the previous iteration (computation is in lockstep)
     ts_prev: f64,
@@ -106,11 +107,7 @@ struct TwoTierState {
 impl VirtualClock {
     pub fn new(fabric: Fabric) -> Self {
         let n = fabric.workers();
-        let first = fabric.link(0);
-        let uniform = fabric.links().iter().all(|l| {
-            l.latency() == first.latency()
-                && l.trace().kind() == first.trace().kind()
-        });
+        let uniform = fabric.is_uniform();
         Self {
             fabric,
             two_tier: None,

@@ -27,7 +27,7 @@ use crate::deco::DecoInput;
 use crate::elastic::{ChurnEvent, ChurnSpec, TimedEvent};
 use crate::exp::{results_dir, speedup};
 use crate::metrics::{format_table, RunResult};
-use crate::netsim::TraceKind;
+use crate::netsim::{Fabric, TraceKind};
 use crate::optim::Quadratic;
 use crate::strategy::{PlanBasis, StrategyKind};
 use crate::util::WorkerPool;
@@ -90,6 +90,19 @@ pub fn cycle_spec(cycle_s: f64, outage_s: f64, horizon_s: f64) -> ChurnSpec {
     ChurnSpec::Scripted { events }
 }
 
+/// The straggler base fabric every churn cell starts from; the sweep
+/// builds it once and clones it per cell (each run bakes its own fault
+/// windows into its clone).
+fn base_fabric(workers: usize) -> anyhow::Result<Fabric> {
+    let net = NetworkConfig {
+        trace: TraceKind::Constant { bps: BASE_BPS },
+        latency_s: BASE_LAT,
+        fabric: FabricSpec::Straggler { frac: STRAG_FRAC, mult: STRAG_MULT },
+        topology: crate::config::TopologySpec::Flat,
+    };
+    net.build_fabric(workers)
+}
+
 /// One training run on the straggler fabric under `spec`. `dim` is exposed
 /// so the tests can shrink the oracle.
 pub fn run_one(
@@ -100,13 +113,19 @@ pub fn run_one(
     max_iters: usize,
     seed: u64,
 ) -> anyhow::Result<RunResult> {
-    let net = NetworkConfig {
-        trace: TraceKind::Constant { bps: BASE_BPS },
-        latency_s: BASE_LAT,
-        fabric: FabricSpec::Straggler { frac: STRAG_FRAC, mult: STRAG_MULT },
-        topology: crate::config::TopologySpec::Flat,
-    };
-    let fabric = net.build_fabric(workers)?;
+    run_on(base_fabric(workers)?, spec, kind, dim, max_iters, seed)
+}
+
+/// One training run on a prebuilt fabric clone (the sweep-cell body).
+fn run_on(
+    fabric: Fabric,
+    spec: &ChurnSpec,
+    kind: StrategyKind,
+    dim: usize,
+    max_iters: usize,
+    seed: u64,
+) -> anyhow::Result<RunResult> {
+    let workers = fabric.workers();
     let oracle = Quadratic::new(dim, workers, 0.5, 0.1, 0.3, 0.2, seed);
     let params = TrainParams {
         gamma: GAMMA,
@@ -185,13 +204,16 @@ pub fn sweep(
     let max_iters = ((6000.0 * scale) as usize).max(50);
     let arms = arms();
     let sc = scenarios(seed, horizon_for(max_iters));
+    // one base fabric for the whole sweep, cloned per cell — each cell
+    // bakes its own churn windows into its clone
+    let fabric = base_fabric(workers)?;
     let n_combos = sc.len() * arms.len();
     let pool = WorkerPool::new(WorkerPool::default_threads().min(n_combos));
     eprintln!("[churn] {n_combos} runs across {} threads", pool.threads());
     let results = pool.map(n_combos, |i| {
         let (_, _, _, spec) = &sc[i / arms.len()];
         let (_, kind) = &arms[i % arms.len()];
-        run_one(spec, kind.clone(), workers, dim, max_iters, seed)
+        run_on(fabric.clone(), spec, kind.clone(), dim, max_iters, seed)
     });
     let mut results = results.into_iter();
     let mut csv = String::from(

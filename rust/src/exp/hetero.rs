@@ -24,7 +24,7 @@ use crate::coordinator::{TrainLoop, TrainParams};
 use crate::deco::DecoInput;
 use crate::exp::{results_dir, speedup};
 use crate::metrics::{format_table, RunResult};
-use crate::netsim::TraceKind;
+use crate::netsim::{Fabric, TraceKind};
 use crate::optim::Quadratic;
 use crate::strategy::{PlanBasis, StrategyKind};
 use crate::util::WorkerPool;
@@ -54,17 +54,14 @@ fn severities(mult: f64) -> Vec<(String, f64, f64)> {
     ]
 }
 
-/// One training run on the straggler fabric. `dim` is exposed so the unit
-/// test can shrink the oracle.
-pub fn run_one(
+/// The straggler fabric of one severity point, built from the config
+/// layer. Sweeps call this once per severity and clone the result per arm
+/// (trace payloads are shared, see DESIGN.md §Perf).
+pub fn severity_fabric(
     frac: f64,
     mult: f64,
-    kind: StrategyKind,
-    plan: PlanBasis,
     workers: usize,
-    dim: usize,
-    max_iters: usize,
-) -> anyhow::Result<RunResult> {
+) -> anyhow::Result<Fabric> {
     let fabric_spec = if frac == 1.0 && mult == 1.0 {
         FabricSpec::Homogeneous
     } else {
@@ -76,7 +73,33 @@ pub fn run_one(
         fabric: fabric_spec,
         topology: crate::config::TopologySpec::Flat,
     };
-    let fabric = net.build_fabric(workers)?;
+    net.build_fabric(workers)
+}
+
+/// One training run on the straggler fabric. `dim` is exposed so the unit
+/// test can shrink the oracle.
+pub fn run_one(
+    frac: f64,
+    mult: f64,
+    kind: StrategyKind,
+    plan: PlanBasis,
+    workers: usize,
+    dim: usize,
+    max_iters: usize,
+) -> anyhow::Result<RunResult> {
+    let fabric = severity_fabric(frac, mult, workers)?;
+    Ok(run_on(fabric, kind, plan, dim, max_iters))
+}
+
+/// One training run on a prebuilt fabric (the sweep-cell body).
+fn run_on(
+    fabric: Fabric,
+    kind: StrategyKind,
+    plan: PlanBasis,
+    dim: usize,
+    max_iters: usize,
+) -> RunResult {
+    let workers = fabric.workers();
     let oracle = Quadratic::new(dim, workers, 0.5, 0.1, 0.3, 0.2, 7);
     let params = TrainParams {
         gamma: GAMMA,
@@ -99,13 +122,11 @@ pub fn run_one(
         ..Default::default()
     };
     let mut tl = TrainLoop::with_fabric(oracle, kind.build(), fabric, params);
-    Ok(tl.run("quadratic"))
+    tl.run("quadratic")
 }
 
-pub fn main(scale: f64, workers: usize, mult: f64) -> anyhow::Result<()> {
-    let max_iters = ((6000.0 * scale) as usize).max(50);
-    let dim = 4096;
-    let arms: Vec<(&str, StrategyKind, PlanBasis)> = vec![
+fn arms() -> Vec<(&'static str, StrategyKind, PlanBasis)> {
+    vec![
         ("D-SGD", StrategyKind::DSgd, PlanBasis::Bottleneck),
         ("CocktailSGD", StrategyKind::CocktailSgd, PlanBasis::Bottleneck),
         (
@@ -118,35 +139,55 @@ pub fn main(scale: f64, workers: usize, mult: f64) -> anyhow::Result<()> {
             StrategyKind::DecoSgd { update_every: 20 },
             PlanBasis::Bottleneck,
         ),
-    ];
+    ]
+}
+
+/// Cell-pool size for `n_combos` sweep cells — shared by [`sweep`] and
+/// the `main` log line so the printed thread count can never drift from
+/// the pool the sweep actually builds.
+fn pool_threads(n_combos: usize, threads: Option<usize>) -> usize {
+    threads.unwrap_or_else(WorkerPool::default_threads).min(n_combos)
+}
+
+/// The full severity × arm sweep: returns `(csv, table_rows)`.
+/// Deterministic in `(scale, workers, dim, mult)` at any pool size.
+///
+/// All severity × arm runs are independent analytic `TrainLoop`s: they fan
+/// out run-level over the pool (the `sweep_strategies` pattern) with one
+/// prebuilt fabric per severity, cloned per arm. `threads` pins the cell
+/// pool — `Some(1)` is the serial baseline `benches/bench_trace.rs`
+/// measures the pooled sweep against; `None` uses the machine default.
+pub fn sweep(
+    scale: f64,
+    workers: usize,
+    dim: usize,
+    mult: f64,
+    threads: Option<usize>,
+) -> anyhow::Result<(String, Vec<Vec<String>>)> {
+    let max_iters = ((6000.0 * scale) as usize).max(50);
+    let arms = arms();
+    let sevs = severities(mult);
+    let fabrics = sevs
+        .iter()
+        .map(|(_, frac, smult)| severity_fabric(*frac, *smult, workers))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let n_combos = sevs.len() * arms.len();
+    let pool = WorkerPool::new(pool_threads(n_combos, threads));
+    let results = pool.map(n_combos, |i| {
+        let fabric = fabrics[i / arms.len()].clone();
+        let (_, kind, plan) = &arms[i % arms.len()];
+        run_on(fabric, kind.clone(), *plan, dim, max_iters)
+    });
+    let mut results = results.into_iter();
     let mut rows = Vec::new();
     let mut csv = String::from(
         "severity,frac,mult,strategy,time_to_target,total_iters\n",
     );
-    println!(
-        "exp hetero — straggler severity x strategy on a {workers}-worker \
-         fabric\n(base {:.0} Mbps / {BASE_LAT} s, straggler = worker 0; \
-         time-to-loss {TARGET} on the quadratic)\n",
-        BASE_BPS / 1e6
-    );
-    // all severity × arm runs are independent analytic TrainLoops: fan
-    // them out run-level over the pool (the sweep_strategies pattern) and
-    // assemble the table in combo order afterwards
-    let sevs = severities(mult);
-    let n_combos = sevs.len() * arms.len();
-    let pool = WorkerPool::new(WorkerPool::default_threads().min(n_combos));
-    eprintln!("[hetero] {n_combos} runs across {} threads", pool.threads());
-    let results = pool.map(n_combos, |i| {
-        let (_, frac, smult) = &sevs[i / arms.len()];
-        let (_, kind, plan) = &arms[i % arms.len()];
-        run_one(*frac, *smult, kind.clone(), *plan, workers, dim, max_iters)
-    });
-    let mut results = results.into_iter();
     for (label, frac, smult) in &sevs {
         let mut times: Vec<Option<f64>> = Vec::new();
         let mut cells = vec![label.clone()];
         for (arm, _, _) in &arms {
-            let res = results.next().expect("one result per combo")?;
+            let res = results.next().expect("one result per combo");
             let t = res.time_to_loss(TARGET);
             csv.push_str(&format!(
                 "{label},{frac},{smult},{arm},{},{}\n",
@@ -165,6 +206,22 @@ pub fn main(scale: f64, workers: usize, mult: f64) -> anyhow::Result<()> {
         cells.push(speedup(times[2], times[3]));
         rows.push(cells);
     }
+    Ok((csv, rows))
+}
+
+pub fn main(scale: f64, workers: usize, mult: f64) -> anyhow::Result<()> {
+    println!(
+        "exp hetero — straggler severity x strategy on a {workers}-worker \
+         fabric\n(base {:.0} Mbps / {BASE_LAT} s, straggler = worker 0; \
+         time-to-loss {TARGET} on the quadratic)\n",
+        BASE_BPS / 1e6
+    );
+    let n_combos = severities(mult).len() * arms().len();
+    eprintln!(
+        "[hetero] {n_combos} runs across {} threads",
+        pool_threads(n_combos, None)
+    );
+    let (csv, rows) = sweep(scale, workers, 4096, mult, None)?;
     println!(
         "{}",
         format_table(
@@ -195,6 +252,15 @@ mod tests {
         assert_eq!(s.len(), 4);
         assert_eq!(s[0].1, 1.0);
         assert!(s.windows(2).all(|w| w[1].1 < w[0].1), "fracs decrease");
+    }
+
+    #[test]
+    fn sweep_serial_equals_pooled() {
+        // the serial-vs-pooled knob must not change a byte of the CSV:
+        // cells are independent runs and prebuilt fabrics clone valuewise
+        let (serial, _) = sweep(0.008, 4, 128, 6.0, Some(1)).unwrap();
+        let (pooled, _) = sweep(0.008, 4, 128, 6.0, None).unwrap();
+        assert_eq!(serial, pooled, "pool size leaked into the results");
     }
 
     #[test]

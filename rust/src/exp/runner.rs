@@ -5,9 +5,11 @@
 use crate::config::{ExperimentConfig, NetworkConfig, StopConfig};
 use crate::coordinator::TrainLoop;
 use crate::metrics::RunResult;
+use crate::netsim::Fabric;
 use crate::optim::{GradOracle, Logistic, Quadratic};
 use crate::runtime::{PjrtOracle, Runtime};
 use crate::strategy::StrategyKind;
+use crate::topo::Topology;
 use crate::util::WorkerPool;
 use anyhow::{anyhow, Result};
 
@@ -196,15 +198,35 @@ impl ExpEnv {
         cfg: &ExperimentConfig,
         threads: Option<usize>,
     ) -> Result<RunResult> {
+        let fabric = cfg.network.build_fabric(cfg.workers)?;
+        let topology = cfg.network.build_topology(cfg.workers, &fabric)?;
+        Self::run_analytic_on(cfg, fabric, topology, threads)
+    }
+
+    /// Analytic run on a prebuilt fabric/topology. Sweeps construct the
+    /// network **once per link spec** and hand each cell a clone:
+    /// stochastic trace grids and their prefix integrals are `Arc`-shared,
+    /// so cloning a fabric is O(links) and never regenerates an OU/Markov
+    /// sample path — the per-cell trace rebuild the serial sweeps paid.
+    fn run_analytic_on(
+        cfg: &ExperimentConfig,
+        fabric: Fabric,
+        topology: Topology,
+        threads: Option<usize>,
+    ) -> Result<RunResult> {
         match cfg.task.as_str() {
-            "quadratic" => Self::run_with(
+            "quadratic" => Self::run_prebuilt(
                 Quadratic::new(4096, cfg.workers, 0.5, 0.1, 0.3, 0.2, cfg.seed),
                 cfg,
+                fabric,
+                topology,
                 threads,
             ),
-            "logistic" => Self::run_with(
+            "logistic" => Self::run_prebuilt(
                 Logistic::new(512, cfg.workers, 400, 32, 1e-4, 1.0, cfg.seed),
                 cfg,
+                fabric,
+                topology,
                 threads,
             ),
             other => Err(anyhow!("task '{other}' has no analytic oracle")),
@@ -216,11 +238,6 @@ impl ExpEnv {
         cfg: &ExperimentConfig,
         threads: Option<usize>,
     ) -> Result<RunResult> {
-        let dim = oracle.dim();
-        let mut params = cfg.train_params(dim);
-        if threads.is_some() {
-            params.threads = threads;
-        }
         // every run is priced on a per-worker fabric; the homogeneous spec
         // replicates the base link and stays bit-identical to the former
         // single shared link (tests/fabric.rs). The aggregation tree comes
@@ -229,6 +246,21 @@ impl ExpEnv {
         // topology specs as errors, not panics.
         let fabric = cfg.network.build_fabric(cfg.workers)?;
         let topology = cfg.network.build_topology(cfg.workers, &fabric)?;
+        Self::run_prebuilt(oracle, cfg, fabric, topology, threads)
+    }
+
+    fn run_prebuilt<O: GradOracle>(
+        oracle: O,
+        cfg: &ExperimentConfig,
+        fabric: Fabric,
+        topology: Topology,
+        threads: Option<usize>,
+    ) -> Result<RunResult> {
+        let dim = oracle.dim();
+        let mut params = cfg.train_params(dim);
+        if threads.is_some() {
+            params.threads = threads;
+        }
         let mut tl = TrainLoop::try_with_topology(
             oracle,
             cfg.strategy.build(),
@@ -269,10 +301,22 @@ impl ExpEnv {
                     pool.threads()
                 );
             }
+            // build the fabric/topology once for the whole sweep and clone
+            // per cell: the five strategy runs share one realized trace
+            // (grids Arc-shared) instead of regenerating it per run
+            let probe =
+                task.config(workers, kinds[0].clone(), network.clone(), scale);
+            let fabric = probe.network.build_fabric(workers)?;
+            let topology = probe.network.build_topology(workers, &fabric)?;
             let runs = pool.map(kinds.len(), |i| {
                 let cfg =
                     task.config(workers, kinds[i].clone(), network.clone(), scale);
-                Self::run_analytic(&cfg, Some(1))
+                Self::run_analytic_on(
+                    &cfg,
+                    fabric.clone(),
+                    topology.clone(),
+                    Some(1),
+                )
             });
             let mut out = Vec::new();
             for (kind, res) in kinds.iter().zip(runs) {

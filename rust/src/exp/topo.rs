@@ -33,9 +33,10 @@ use crate::coordinator::{TrainLoop, TrainParams};
 use crate::deco::DecoInput;
 use crate::exp::{results_dir, speedup};
 use crate::metrics::{format_table, RunResult};
-use crate::netsim::TraceKind;
+use crate::netsim::{Fabric, TraceKind};
 use crate::optim::Quadratic;
 use crate::strategy::StrategyKind;
+use crate::topo::Topology;
 use crate::util::WorkerPool;
 
 /// Intra-region (LAN) links: 1 Gbps, 5 ms — cheap and fast.
@@ -124,6 +125,20 @@ fn network(n: usize, regions: usize, ratio: f64, flat: bool) -> NetworkConfig {
     }
 }
 
+/// The realized `(fabric, topology)` of one sweep point × arm shape; the
+/// sweep builds each shape once and clones it per arm.
+fn cell_network(
+    workers: usize,
+    regions: usize,
+    ratio: f64,
+    flat: bool,
+) -> anyhow::Result<(Fabric, Topology)> {
+    let net = network(workers, regions, ratio, flat);
+    let fabric = net.build_fabric(workers)?;
+    let topology = net.build_topology(workers, &fabric)?;
+    Ok((fabric, topology))
+}
+
 /// One training run at a sweep point. `dim` is exposed so the tests can
 /// shrink the oracle.
 pub fn run_one(
@@ -135,9 +150,23 @@ pub fn run_one(
     max_iters: usize,
 ) -> anyhow::Result<RunResult> {
     let flat = arm != TopoArm::TwoTierDeco;
-    let net = network(workers, regions, ratio, flat);
-    let fabric = net.build_fabric(workers)?;
-    let topology = net.build_topology(workers, &fabric)?;
+    let (fabric, topology) = cell_network(workers, regions, ratio, flat)?;
+    run_on(fabric, topology, regions, ratio, arm, dim, max_iters)
+}
+
+/// One training run on a prebuilt network (the sweep-cell body); the
+/// worker count comes from the fabric itself.
+fn run_on(
+    fabric: Fabric,
+    topology: Topology,
+    regions: usize,
+    ratio: f64,
+    arm: TopoArm,
+    dim: usize,
+    max_iters: usize,
+) -> anyhow::Result<RunResult> {
+    let workers = fabric.workers();
+    let flat = arm != TopoArm::TwoTierDeco;
     let kind = match arm {
         TopoArm::FlatDsgd => StrategyKind::DSgd,
         TopoArm::FlatDeco => {
@@ -211,6 +240,22 @@ pub fn sweep(
     let region_counts: Vec<usize> =
         [2usize, 4].into_iter().filter(|&r| r <= workers).collect();
     let n_combos = region_counts.len() * RATIOS.len() * arms.len();
+    // realize each sweep point's two network shapes once (flat star +
+    // two-tier), cloned per arm in combo order
+    let mut nets: Vec<(Fabric, Topology)> = Vec::with_capacity(n_combos);
+    for &regions in &region_counts {
+        for &ratio in &RATIOS {
+            let flat = cell_network(workers, regions, ratio, true)?;
+            let two = cell_network(workers, regions, ratio, false)?;
+            for &arm in &arms {
+                nets.push(if arm == TopoArm::TwoTierDeco {
+                    two.clone()
+                } else {
+                    flat.clone()
+                });
+            }
+        }
+    }
     let pool = WorkerPool::new(WorkerPool::default_threads().min(n_combos));
     eprintln!("[topo] {n_combos} runs across {} threads", pool.threads());
     let results = pool.map(n_combos, |i| {
@@ -218,7 +263,8 @@ pub fn sweep(
         let rest = i / arms.len();
         let ratio = RATIOS[rest % RATIOS.len()];
         let regions = region_counts[rest / RATIOS.len()];
-        run_one(regions, ratio, arm, workers, dim, max_iters)
+        let (fabric, topology) = nets[i].clone();
+        run_on(fabric, topology, regions, ratio, arm, dim, max_iters)
     });
     let mut results = results.into_iter();
     const HEADER: &str = "regions,ratio,wan_bps,strategy,time_to_target,\

@@ -17,12 +17,33 @@ use super::trace::BandwidthTrace;
 #[derive(Clone, Debug)]
 pub struct Fabric {
     links: Vec<Link>,
+    /// every link shares one trace config and latency — cached at
+    /// construction so hot paths (`sync_arrival`, the virtual clock) can
+    /// price one transfer instead of n when the answer is provably shared
+    uniform: bool,
 }
 
 impl Fabric {
     pub fn new(links: Vec<Link>) -> Self {
         assert!(!links.is_empty());
-        Self { links }
+        let uniform = Self::compute_uniform(&links);
+        Self { links, uniform }
+    }
+
+    fn compute_uniform(links: &[Link]) -> bool {
+        let first = &links[0];
+        links.iter().all(|l| {
+            l.latency() == first.latency()
+                && l.trace().kind() == first.trace().kind()
+        })
+    }
+
+    /// Whether every link is identical (same trace config, same latency).
+    /// Uniform fabrics price every worker's transfer identically, which is
+    /// what lets [`Self::sync_arrival`] and the clock's fast path run one
+    /// exact integral instead of n.
+    pub fn is_uniform(&self) -> bool {
+        self.uniform
     }
 
     /// Homogeneous fabric: `n` copies of the same trace/latency.
@@ -76,14 +97,22 @@ impl Fabric {
     }
 
     /// Replace one worker's link — how churn schedules bake outage/degrade
-    /// windows into the fabric before a run (elastic subsystem).
+    /// windows into the fabric before a run (elastic subsystem). The
+    /// O(links) uniformity recompute runs once per call; this is a
+    /// setup-path operation (window baking, re-wiring), never per-tick.
     pub fn set_link(&mut self, worker: usize, link: Link) {
         self.links[worker] = link;
+        self.uniform = Self::compute_uniform(&self.links);
     }
 
     /// Arrival time of the synchronous aggregation: max over per-worker
-    /// arrivals of a message of `bits` started at `start`.
+    /// arrivals of a message of `bits` started at `start`. On a uniform
+    /// fabric every arrival is identical, so one exact transfer integral
+    /// suffices (bit-identical to the max over n copies).
     pub fn sync_arrival(&self, start: f64, bits: u64) -> f64 {
+        if self.uniform {
+            return self.links[0].arrival(start, bits);
+        }
         self.links
             .iter()
             .map(|l| l.arrival(start, bits))
@@ -233,6 +262,32 @@ mod tests {
         f.set_link(1, Link::new(BandwidthTrace::constant(1e7), 0.4));
         assert_eq!(f.bottleneck(0.0), (1e7, 0.4));
         assert_eq!(f.link(0).latency(), 0.1);
+    }
+
+    #[test]
+    fn uniformity_tracks_construction_and_set_link() {
+        let mut f = Fabric::homogeneous(3, BandwidthTrace::constant(1e8), 0.1);
+        assert!(f.is_uniform());
+        // the uniform fast path must agree with the general max loop
+        let general: f64 = f
+            .links()
+            .iter()
+            .map(|l| l.arrival(2.0, 5_000_000))
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(f.sync_arrival(2.0, 5_000_000).to_bits(), general.to_bits());
+        // replacing a link breaks uniformity; restoring it re-establishes
+        f.set_link(1, Link::new(BandwidthTrace::constant(1e7), 0.1));
+        assert!(!f.is_uniform());
+        f.set_link(1, Link::new(BandwidthTrace::constant(1e8), 0.1));
+        assert!(f.is_uniform());
+        assert!(!Fabric::with_straggler(
+            3,
+            BandwidthTrace::constant(1e8),
+            0.1,
+            0.5,
+            1.0
+        )
+        .is_uniform());
     }
 
     #[test]

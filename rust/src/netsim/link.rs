@@ -1,14 +1,17 @@
 //! A WAN link with end-to-end latency `b` and time-varying bandwidth `a(t)`.
 //!
-//! `transfer_end` integrates `∫ a(t) dt = bits` over the trace so that
-//! transmissions started during a bandwidth dip genuinely take longer —
-//! the effect DeCo-SGD's adaptivity exploits. The paper's model
-//! (`delta·S_g/a + b`) is the constant-trace special case, asserted in tests.
+//! `transfer_end` solves `∫ a(t) dt = bits` over the trace **exactly** so
+//! that transmissions started during a bandwidth dip genuinely take
+//! longer — the effect DeCo-SGD's adaptivity exploits. Pricing goes
+//! through the trace's prefix-integral engine
+//! ([`BandwidthTrace::end_of_transfer`], DESIGN.md §Perf): O(log n) per
+//! transfer on the stochastic grids instead of the former 10 ms
+//! forward-Euler stepping, with no discretization error. The paper's
+//! model (`delta·S_g/a + b`) is the constant-trace special case, kept as
+//! an explicit closed-form fast path (bit-identical to the pre-engine
+//! code) and asserted in tests.
 
 use super::trace::{BandwidthTrace, DegradeWindow};
-
-/// Integration step for varying-bandwidth transfers (s).
-const INT_DT: f64 = 0.01;
 
 #[derive(Clone, Debug)]
 pub struct Link {
@@ -48,18 +51,17 @@ impl Link {
         if bits == 0 {
             return start;
         }
-        let mut remaining = bits as f64;
-        let mut t = start;
+        let bits_f = bits as f64;
         // fast path: constant traces (possibly `Scaled`) solve in closed form
         if let Some(bps) = self.trace.as_constant() {
-            return start + remaining / bps;
+            return start + bits_f / bps;
         }
         // constant base with fault windows: the closed form still holds
         // whenever the transfer interval touches no window (the rate is the
         // healthy constant throughout, so the end time is exact and nothing
         // after it matters)
         if let Some(bps) = self.trace.constant_base() {
-            let end = start + remaining / bps;
+            let end = start + bits_f / bps;
             let clear = self
                 .trace
                 .windows()
@@ -69,15 +71,8 @@ impl Link {
                 return end;
             }
         }
-        loop {
-            let rate = self.trace.at(t);
-            let sent = rate * INT_DT;
-            if sent >= remaining {
-                return t + remaining / rate;
-            }
-            remaining -= sent;
-            t += INT_DT;
-        }
+        // everything else inverts the exact cumulative integral B(t)
+        self.trace.end_of_transfer(start, bits_f)
     }
 
     /// Arrival time at the receiver: transmission end + latency.
@@ -124,19 +119,20 @@ mod tests {
         assert_eq!(end, 5.1);
         // ends exactly at the window start: still closed form
         assert_eq!(link.transfer_end(9.9, 10_000_000), 10.0);
-        // overlapping the outage: stalls through it (integration path)
+        // overlapping the outage: stalls through it, now priced exactly —
+        // 0.05 s healthy + 10 s at the 1 kbps floor + the remainder
         let stalled = link.transfer_end(9.95, 10_000_000);
+        let want = 20.0 + (1e7 - 5e6 - 1e4) / 1e8;
         assert!(
-            stalled > 20.0,
-            "transfer must stall through the outage, got {stalled}"
+            (stalled - want).abs() < 1e-9,
+            "exact stall pricing: got {stalled}, want {want}"
         );
-        assert!(stalled < 20.2, "and finish shortly after, got {stalled}");
     }
 
     #[test]
     fn varying_bandwidth_integrates() {
         // square-ish sine: mean 1e8; sending exactly one period's worth of
-        // bits takes ~ one period
+        // bits takes exactly one period under the exact integral
         let link = Link::new(
             BandwidthTrace::new(TraceKind::Sine {
                 mean_bps: 1e8,
@@ -146,7 +142,7 @@ mod tests {
             0.0,
         );
         let end = link.transfer_end(0.0, 200_000_000); // one period at mean
-        assert!((end - 2.0).abs() < 0.1, "end={end}");
+        assert!((end - 2.0).abs() < 1e-9, "end={end}");
     }
 
     #[test]
@@ -175,6 +171,43 @@ mod tests {
             assert!(e >= s + 0.05);
             assert!(e >= prev - 1e-9 || e >= s, "arrivals should not regress");
             prev = e;
+        }
+    }
+
+    #[test]
+    fn transfer_end_inverts_the_cumulative_integral() {
+        // B(end) − B(start) == bits on every base kind the clock prices
+        let traces = vec![
+            BandwidthTrace::new(TraceKind::Sine {
+                mean_bps: 1e8,
+                amp_bps: 6e7,
+                period_s: 3.0,
+            }),
+            BandwidthTrace::new(TraceKind::Ou {
+                mean_bps: 8e7,
+                sigma_bps: 2e7,
+                theta: 0.4,
+                seed: 21,
+            }),
+            BandwidthTrace::new(TraceKind::Markov {
+                levels_bps: vec![2e7, 1e8, 2e8],
+                dwell_s: 1.5,
+                seed: 4,
+            }),
+        ];
+        for trace in traces {
+            let link = Link::new(trace.clone(), 0.1);
+            for k in 0..40u64 {
+                let start = k as f64 * 17.3;
+                let bits = 1_000_000 + k * 77_000_000;
+                let end = link.transfer_end(start, bits);
+                let got = trace.bits_over(start, end);
+                let want = bits as f64;
+                assert!(
+                    (got - want).abs() <= want * 1e-9 + 1.0,
+                    "k={k}: B(end)-B(start)={got} != bits={want}"
+                );
+            }
         }
     }
 }

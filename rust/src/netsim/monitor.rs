@@ -4,7 +4,10 @@
 //! compute times; the monitors maintain EWMA estimates that the DeCo
 //! controller polls every `E` iterations. In a real deployment this is an
 //! RTT probe + throughput sampling; in the simulator the observations come
-//! from the event timeline, optionally with multiplicative measurement
+//! from the event timeline — since the clock prices transfers by the exact
+//! prefix-integral engine (DESIGN.md §Perf), an observed `bits / tx_secs`
+//! sample is the true average rate of the transfer window, not a 10 ms
+//! Euler approximation of it — optionally with multiplicative measurement
 //! noise to exercise DeCo's robustness (ablation `exp phi --noise`).
 //!
 //! [`NetworkMonitor`] estimates ONE link. [`FabricMonitor`] holds one

@@ -1,4 +1,5 @@
-//! Bandwidth traces `a(t)` in bits/s.
+//! Bandwidth traces `a(t)` in bits/s, plus the exact prefix-integral
+//! transfer engine built on them.
 //!
 //! The paper's experiments run under "dynamic low bandwidth, average
 //! bandwidth <= 1 Gbps" (Sec. C.2, Fig. 6). We provide:
@@ -12,9 +13,25 @@
 //! All traces are deterministic functions of (seed, t) — OU and Markov
 //! pre-generate samples on a fixed grid and interpolate, so `at()` is pure
 //! and the event simulator can integrate over them reproducibly.
+//!
+//! **Prefix-integral engine (DESIGN.md §Perf).** Every trace also exposes
+//! its exact cumulative-bits integral `B(t) = ∫₀ᵗ at(s) ds` and its
+//! inverse: [`BandwidthTrace::bits_over`] is a prefix *difference* and
+//! [`BandwidthTrace::end_of_transfer`] solves `B(end) − B(start) = bits`
+//! in closed form per piece — the fluid-flow trick that replaces the old
+//! 10 ms forward-Euler stepping of `Link::transfer_end`. The effective
+//! rate `max(m · base(t), floor)` is piecewise in `t`: the multiplier
+//! `m = scale · Π window fracs` is constant between window boundaries
+//! (the private `CumTrace` segment spine), and within a segment the base
+//! kind is closed-form (constant, sine, piecewise-linear samples) or
+//! piecewise-constant on the pre-generated grid, where prefix sums give
+//! O(log n) lookups and inversions. The stochastic grid wraps
+//! periodically past `GRID_HORIZON` exactly as `at()` does (cell index
+//! mod n), so the prefix extends periodically and a transfer straddling
+//! the wrap prices precisely the bits `at()` reports.
 
 use crate::util::Rng;
-
+use std::sync::Arc;
 
 /// One degrade/outage window on a link: bandwidth is multiplied by `frac`
 /// on `[start_s, end_s)`. `frac = 0` models a full outage — the trace floor
@@ -54,6 +71,183 @@ pub enum TraceKind {
     Windowed { inner: Box<TraceKind>, windows: Vec<DegradeWindow> },
 }
 
+/// Pre-generated stochastic grid plus its prefix integral. `Arc`-shared
+/// across trace clones, so cloning a fabric (one clone per sweep cell)
+/// never regenerates or copies an OU/Markov sample path.
+#[derive(Debug)]
+struct Grid {
+    dt: f64,
+    samples: Vec<f64>,
+    /// `prefix[i] = Σ_{j<i} samples[j] · dt` — base-trace bits over
+    /// `[0, i·dt)`; length `samples.len() + 1`
+    prefix: Vec<f64>,
+    min: f64,
+    max: f64,
+}
+
+impl Grid {
+    fn new(dt: f64, samples: Vec<f64>) -> Self {
+        let mut prefix = Vec::with_capacity(samples.len() + 1);
+        let mut acc = 0.0;
+        prefix.push(0.0);
+        for &s in &samples {
+            acc += s * dt;
+            prefix.push(acc);
+        }
+        let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = samples.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        Self { dt, samples, prefix, min, max }
+    }
+
+    fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Base bits over one full horizon (`len · dt` seconds).
+    fn total(&self) -> f64 {
+        *self.prefix.last().unwrap()
+    }
+}
+
+/// Knot prefix integral of a `Samples` base: `cum[i]` is the exact
+/// trapezoid integral of the piecewise-linear rate from the first knot to
+/// knot `i`. `Arc`-shared across clones like [`Grid`].
+#[derive(Debug)]
+struct Knots {
+    cum: Vec<f64>,
+    min: f64,
+}
+
+impl Knots {
+    fn new(ts: &[f64], vs: &[f64]) -> Self {
+        let mut cum = Vec::with_capacity(ts.len());
+        cum.push(0.0);
+        for i in 1..ts.len() {
+            let prev = cum[i - 1];
+            cum.push(prev + 0.5 * (vs[i - 1] + vs[i]) * (ts[i] - ts[i - 1]));
+        }
+        let min = vs.iter().copied().fold(f64::INFINITY, f64::min);
+        Self { cum, min }
+    }
+}
+
+/// The spine of the prefix-integral engine: time-sorted segments on which
+/// the effective multiplier `scale · Π window fracs` is constant. The
+/// first segment starts at −∞ (multiplier = bare `scale`), each window
+/// edge starts a new one, and the last extends to +∞, so cumulative bits
+/// over any interval decompose into per-segment closed forms and the
+/// windowed fast paths fall out as the trivial single-segment case.
+#[derive(Clone, Debug)]
+struct CumTrace {
+    /// `(segment start, multiplier)`; starts ascending, `segs[0].0 = −∞`
+    segs: Vec<(f64, f64)>,
+}
+
+impl CumTrace {
+    fn build(scale: f64, windows: &[DegradeWindow]) -> Self {
+        if windows.is_empty() {
+            return Self { segs: vec![(f64::NEG_INFINITY, scale)] };
+        }
+        let mut edges: Vec<f64> = windows
+            .iter()
+            .flat_map(|w| [w.start_s, w.end_s])
+            .collect();
+        edges.sort_by(f64::total_cmp);
+        edges.dedup();
+        let mut segs = vec![(f64::NEG_INFINITY, scale)];
+        for &e in &edges {
+            // windows are [start, end): a window either covers a whole
+            // segment or none of it, so probing the segment start decides.
+            // Fracs multiply onto `scale` in declaration order, the same
+            // order `at()` historically applied them.
+            let mut m = scale;
+            for w in windows {
+                if w.contains(e) {
+                    m *= w.frac;
+                }
+            }
+            segs.push((e, m));
+        }
+        Self { segs }
+    }
+
+    /// Index of the segment containing `t`.
+    fn index(&self, t: f64) -> usize {
+        self.segs.partition_point(|s| s.0 <= t) - 1
+    }
+}
+
+/// `∫ₐᵇ max(m·v(t), floor) dt` for a linear `v` with value `va` at `a` and
+/// slope `sl` — the one-crossing closed form shared by the `Samples`
+/// pieces. `b` must be finite.
+fn clamped_linear(m: f64, floor: f64, a: f64, b: f64, va: f64, sl: f64) -> f64 {
+    if b <= a {
+        return 0.0;
+    }
+    let vb = va + sl * (b - a);
+    let (ra, rb) = (va * m, vb * m);
+    if ra >= floor && rb >= floor {
+        return 0.5 * (ra + rb) * (b - a);
+    }
+    if ra <= floor && rb <= floor {
+        return floor * (b - a);
+    }
+    // exactly one crossing strictly inside (ra, rb straddle the floor)
+    let tc = (a + (floor / m - va) / sl).clamp(a, b);
+    if ra > floor {
+        0.5 * (ra + floor) * (tc - a) + floor * (b - tc)
+    } else {
+        floor * (tc - a) + 0.5 * (floor + rb) * (b - tc)
+    }
+}
+
+/// Inverse of [`clamped_linear`]: the time at which `rem` bits complete
+/// within `[a, b]`, given the span holds at least `rem`. The quadratic is
+/// solved in the cancellation-free form `2·rem / (r + √(r² + 2·s·rem))`,
+/// which degrades gracefully to `rem / r` as the slope vanishes.
+fn clamped_linear_end(
+    m: f64,
+    floor: f64,
+    a: f64,
+    b: f64,
+    va: f64,
+    sl: f64,
+    rem: f64,
+) -> f64 {
+    if rem <= 0.0 {
+        return a;
+    }
+    let se = sl * m;
+    let ramp = |start: f64, r0: f64, need: f64| {
+        let disc = (r0 * r0 + 2.0 * se * need).max(0.0).sqrt();
+        start + 2.0 * need / (r0 + disc)
+    };
+    let vb = va + sl * (b - a);
+    let (ra, rb) = (va * m, vb * m);
+    if ra >= floor && rb >= floor {
+        return ramp(a, ra, rem);
+    }
+    if ra <= floor && rb <= floor {
+        return a + rem / floor;
+    }
+    let tc = (a + (floor / m - va) / sl).clamp(a, b);
+    if ra > floor {
+        let head = 0.5 * (ra + floor) * (tc - a);
+        if rem <= head {
+            ramp(a, ra, rem)
+        } else {
+            tc + (rem - head) / floor
+        }
+    } else {
+        let head = floor * (tc - a);
+        if rem <= head {
+            a + rem / floor
+        } else {
+            ramp(tc, floor, rem - head)
+        }
+    }
+}
+
 /// A realized bandwidth trace.
 #[derive(Clone, Debug)]
 pub struct BandwidthTrace {
@@ -66,15 +260,23 @@ pub struct BandwidthTrace {
     scale: f64,
     /// all peeled `Windowed` windows (empty for unwrapped kinds)
     windows: Vec<DegradeWindow>,
-    /// pre-generated grid for stochastic kinds: (dt, samples)
-    grid: Option<(f64, Vec<f64>)>,
+    /// pre-generated grid + prefix integral for stochastic kinds
+    grid: Option<Arc<Grid>>,
+    /// knot prefix integral for `Samples` bases
+    knots: Option<Arc<Knots>>,
+    /// constant-multiplier segments (window boundaries)
+    cum: CumTrace,
     floor: f64,
 }
 
 /// Grid resolution for stochastic traces (s).
 const GRID_DT: f64 = 0.05;
 /// Pre-generated horizon (s); beyond it the trace wraps around, keeping
-/// long experiments stationary without unbounded memory.
+/// long experiments stationary without unbounded memory. The wrap is by
+/// **cell index** (`(t/dt) as usize % n`, see `at()`), and the prefix
+/// integral extends periodically with the same cell mapping, so transfers
+/// straddling the wrap price exactly the bits `at()` reports
+/// (`grid_prefix_extends_periodically_past_the_horizon` below).
 const GRID_HORIZON: f64 = 4096.0;
 
 impl BandwidthTrace {
@@ -86,17 +288,31 @@ impl BandwidthTrace {
             }
             _ => (None, 1.0, Vec::new()),
         };
-        let grid = match base.as_ref().unwrap_or(&kind) {
+        let realized = base.as_ref().unwrap_or(&kind);
+        let grid = match realized {
             TraceKind::Ou { mean_bps, sigma_bps, theta, seed } => {
-                Some((GRID_DT, Self::gen_ou(*mean_bps, *sigma_bps, *theta, *seed)))
+                Some(Arc::new(Grid::new(
+                    GRID_DT,
+                    Self::gen_ou(*mean_bps, *sigma_bps, *theta, *seed),
+                )))
             }
             TraceKind::Markov { levels_bps, dwell_s, seed } => {
-                Some((GRID_DT, Self::gen_markov(levels_bps, *dwell_s, *seed)))
+                Some(Arc::new(Grid::new(
+                    GRID_DT,
+                    Self::gen_markov(levels_bps, *dwell_s, *seed),
+                )))
             }
             _ => None,
         };
+        let knots = match realized {
+            TraceKind::Samples { times_s, bps } if !times_s.is_empty() => {
+                Some(Arc::new(Knots::new(times_s, bps)))
+            }
+            _ => None,
+        };
+        let cum = CumTrace::build(scale, &windows);
         // never allow a dead link: floor at 1 kbps
-        Self { kind, base, scale, windows, grid, floor: 1e3 }
+        Self { kind, base, scale, windows, grid, knots, cum, floor: 1e3 }
     }
 
     /// Peel nested `Scaled`/`Windowed` wrappers into
@@ -170,7 +386,7 @@ impl BandwidthTrace {
     /// windows (constant base through `Scaled`/`Windowed` wrappers). A
     /// transfer whose interval touches no window still solves in closed
     /// form at this rate — the fast path that keeps churn runs from
-    /// integrating every healthy-period transfer
+    /// pricing every healthy-period transfer through the segment walk
     /// ([`super::Link::transfer_end`]).
     pub fn constant_base(&self) -> Option<f64> {
         if let TraceKind::Constant { bps } = self.base() {
@@ -210,6 +426,14 @@ impl BandwidthTrace {
         out
     }
 
+    /// The effective multiplier (scale · window fracs) at time `t`.
+    fn mult_at(&self, t: f64) -> f64 {
+        if self.windows.is_empty() {
+            return self.scale;
+        }
+        self.cum.segs[self.cum.index(t)].1
+    }
+
     /// Bandwidth at absolute time `t` (bits/s). Pure function.
     pub fn at(&self, t: f64) -> f64 {
         let v = match self.base() {
@@ -221,18 +445,12 @@ impl BandwidthTrace {
                 Self::interp(times_s, bps, t)
             }
             _ => {
-                let (dt, samples) = self.grid.as_ref().unwrap();
-                let i = ((t / dt) as usize) % samples.len();
-                samples[i]
+                let g = self.grid.as_ref().unwrap();
+                let i = ((t / g.dt) as usize) % g.len();
+                g.samples[i]
             }
         };
-        let mut v = v * self.scale;
-        for w in &self.windows {
-            if w.contains(t) {
-                v *= w.frac;
-            }
-        }
-        v.max(self.floor)
+        (v * self.mult_at(t)).max(self.floor)
     }
 
     fn interp(ts: &[f64], vs: &[f64], t: f64) -> f64 {
@@ -250,12 +468,569 @@ impl BandwidthTrace {
         vs[i] * (1.0 - w) + vs[i + 1] * w
     }
 
-    /// Mean bandwidth over [t0, t1] (trapezoid on a fine grid).
+    /// Mean bandwidth over `[t0, t1]` — an exact prefix difference, no
+    /// sampling grid. A degenerate interval (`t1 <= t0`) reports the
+    /// instantaneous rate `at(t0)` instead of dividing by a non-positive
+    /// width.
     pub fn mean_over(&self, t0: f64, t1: f64) -> f64 {
-        let n = 200;
-        let dt = (t1 - t0) / n as f64;
-        let sum: f64 = (0..=n).map(|i| self.at(t0 + i as f64 * dt)).sum();
-        sum / (n + 1) as f64
+        if t1 <= t0 {
+            return self.at(t0);
+        }
+        self.bits_over(t0, t1) / (t1 - t0)
+    }
+
+    /// Exact cumulative bits `∫_{t0}^{t1} at(s) ds` — the prefix-integral
+    /// difference `B(t1) − B(t0)`. Returns 0 for a degenerate interval.
+    pub fn bits_over(&self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        let segs = &self.cum.segs;
+        let mut i = self.cum.index(t0);
+        let mut t = t0;
+        let mut acc = 0.0;
+        loop {
+            let m = segs[i].1;
+            let end = if i + 1 < segs.len() {
+                segs[i + 1].0
+            } else {
+                f64::INFINITY
+            };
+            if t1 <= end {
+                return acc + self.seg_bits(m, t, t1);
+            }
+            acc += self.seg_bits(m, t, end);
+            t = end;
+            i += 1;
+        }
+    }
+
+    /// Exact transfer end: the time `t` at which `bits_over(start, t)`
+    /// reaches `bits` — the inverse of the cumulative integral, solved in
+    /// closed form per piece (binary search over grid prefix sums /
+    /// bracketed bisection for clamped sines). The effective rate is
+    /// floored at 1 kbps, so every transfer terminates.
+    pub fn end_of_transfer(&self, start: f64, bits: f64) -> f64 {
+        if bits <= 0.0 {
+            return start;
+        }
+        let segs = &self.cum.segs;
+        let mut i = self.cum.index(start);
+        let mut t = start;
+        let mut remaining = bits;
+        loop {
+            let m = segs[i].1;
+            if i + 1 < segs.len() {
+                let end = segs[i + 1].0;
+                let avail = self.seg_bits(m, t, end);
+                if avail < remaining {
+                    remaining -= avail;
+                    t = end;
+                    i += 1;
+                    continue;
+                }
+            }
+            return self.seg_end(m, t, remaining);
+        }
+    }
+
+    /// The pre-engine integrator, kept verbatim as the comparison oracle
+    /// shared by `tests/properties.rs` and `benches/bench_trace.rs`:
+    /// forward Euler over `at()` at the historical 10 ms grid. **Frozen**
+    /// — it defines the legacy semantics the exact engine is measured
+    /// against; never "fix" it.
+    pub fn euler_end_reference(&self, start: f64, bits: f64) -> f64 {
+        const INT_DT: f64 = 0.01;
+        let mut remaining = bits;
+        let mut t = start;
+        loop {
+            let rate = self.at(t);
+            let sent = rate * INT_DT;
+            if sent >= remaining {
+                return t + remaining / rate;
+            }
+            remaining -= sent;
+            t += INT_DT;
+        }
+    }
+
+    /// `∫_{t0}^{t1} max(m · base(s), floor) ds` within one multiplier
+    /// segment.
+    fn seg_bits(&self, m: f64, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        if m <= 0.0 {
+            // outage windows (frac = 0): the floor carries the transfer
+            return self.floor * (t1 - t0);
+        }
+        match self.base() {
+            TraceKind::Constant { bps } => {
+                (bps * m).max(self.floor) * (t1 - t0)
+            }
+            TraceKind::Sine { mean_bps, amp_bps, period_s } => {
+                self.sine_bits(*mean_bps, *amp_bps, *period_s, m, t0, t1)
+            }
+            TraceKind::Samples { times_s, bps } => {
+                self.samples_bits(times_s, bps, m, t0, t1)
+            }
+            _ => self.grid_bits(m, t0, t1),
+        }
+    }
+
+    /// End time of `bits` starting at `t0` within one multiplier segment
+    /// (the caller guarantees the segment holds at least `bits`, or is the
+    /// last, unbounded one).
+    fn seg_end(&self, m: f64, t0: f64, bits: f64) -> f64 {
+        if bits <= 0.0 {
+            return t0;
+        }
+        if m <= 0.0 {
+            return t0 + bits / self.floor;
+        }
+        match self.base() {
+            TraceKind::Constant { bps } => {
+                t0 + bits / (bps * m).max(self.floor)
+            }
+            TraceKind::Sine { mean_bps, amp_bps, period_s } => {
+                self.sine_end(*mean_bps, *amp_bps, *period_s, m, t0, bits)
+            }
+            TraceKind::Samples { times_s, bps } => {
+                self.samples_end(times_s, bps, m, t0, bits)
+            }
+            _ => self.grid_end(m, t0, bits),
+        }
+    }
+
+    // ---- sine base: closed forms with floor-crossing splits ----
+
+    fn sine_bits(
+        &self,
+        mean: f64,
+        amp: f64,
+        period: f64,
+        m: f64,
+        t0: f64,
+        t1: f64,
+    ) -> f64 {
+        if amp == 0.0 {
+            return (mean * m).max(self.floor) * (t1 - t0);
+        }
+        let om = std::f64::consts::TAU / period;
+        if (mean - amp.abs()) * m >= self.floor {
+            // the clamp never binds: one antiderivative difference
+            let cosdiff = (om * t1).cos() - (om * t0).cos();
+            return m * (mean * (t1 - t0) - (amp / om) * cosdiff);
+        }
+        if (mean + amp.abs()) * m <= self.floor {
+            return self.floor * (t1 - t0);
+        }
+        // whole periods contribute a phase-invariant closed form; the
+        // remainder splits at the floor crossings (sub-period spans skip
+        // the per-period integral entirely — the inversion hot path)
+        let q = ((t1 - t0) / period).floor();
+        let whole = if q > 0.0 {
+            q * self.sine_span(mean, amp, period, m, 0.0, period)
+        } else {
+            0.0
+        };
+        whole + self.sine_span(mean, amp, period, m, t0 + q * period, t1)
+    }
+
+    /// Clamped sine integral over a span of at most ~one period: split at
+    /// the floor crossings `sin(ωt) = s0`, decide each piece by its
+    /// midpoint, and use the pure-sine antiderivative above the floor.
+    fn sine_span(
+        &self,
+        mean: f64,
+        amp: f64,
+        period: f64,
+        m: f64,
+        a: f64,
+        b: f64,
+    ) -> f64 {
+        if b <= a {
+            return 0.0;
+        }
+        let tau = std::f64::consts::TAU;
+        let om = tau / period;
+        let s0 = ((self.floor / m - mean) / amp).clamp(-1.0, 1.0);
+        let x1 = s0.asin();
+        let x2 = std::f64::consts::PI - x1;
+        let mut cuts = vec![a, b];
+        for x in [x1, x2] {
+            let mut k = ((om * a - x) / tau).floor() - 1.0;
+            let kmax = ((om * b - x) / tau).ceil() + 1.0;
+            while k <= kmax {
+                let t = (x + k * tau) / om;
+                if t > a && t < b {
+                    cuts.push(t);
+                }
+                k += 1.0;
+            }
+        }
+        cuts.sort_by(f64::total_cmp);
+        let mut acc = 0.0;
+        for w in cuts.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            if hi <= lo {
+                continue;
+            }
+            let mid = 0.5 * (lo + hi);
+            let r = (mean + amp * (om * mid).sin()) * m;
+            acc += if r >= self.floor {
+                let cosdiff = (om * hi).cos() - (om * lo).cos();
+                m * (mean * (hi - lo) - (amp / om) * cosdiff)
+            } else {
+                self.floor * (hi - lo)
+            };
+        }
+        acc
+    }
+
+    fn sine_end(
+        &self,
+        mean: f64,
+        amp: f64,
+        period: f64,
+        m: f64,
+        t0: f64,
+        bits: f64,
+    ) -> f64 {
+        if amp == 0.0 {
+            return t0 + bits / (mean * m).max(self.floor);
+        }
+        if (mean + amp.abs()) * m <= self.floor {
+            return t0 + bits / self.floor;
+        }
+        // skip whole periods arithmetically, then solve within one period
+        // by guarded Newton on the closed-form cumulative (the rate is
+        // positive, so it is strictly increasing; the bracket keeps every
+        // step safe and the loop converges to ulp precision)
+        let om = std::f64::consts::TAU / period;
+        let pfull = self.sine_bits(mean, amp, period, m, 0.0, period);
+        let q = (bits / pfull).floor().max(0.0);
+        let mut lo = t0 + q * period;
+        if self.sine_bits(mean, amp, period, m, t0, lo) > bits {
+            lo = t0 + (q - 1.0).max(0.0) * period;
+        }
+        let mut hi = lo + period;
+        while self.sine_bits(mean, amp, period, m, t0, hi) < bits {
+            hi += period;
+        }
+        // anchor the cumulative at the bracket base so every Newton
+        // evaluation integrates at most one (sub-)period
+        let base = self.sine_bits(mean, amp, period, m, t0, lo);
+        let anchor = lo;
+        let mut x = 0.5 * (lo + hi);
+        for _ in 0..200 {
+            if x <= lo || x >= hi {
+                break;
+            }
+            let f = base + self.sine_bits(mean, amp, period, m, anchor, x)
+                - bits;
+            if f < 0.0 {
+                lo = x;
+            } else {
+                hi = x;
+            }
+            let rate = ((mean + amp * (om * x).sin()) * m).max(self.floor);
+            let nx = x - f / rate;
+            x = if nx > lo && nx < hi { nx } else { 0.5 * (lo + hi) };
+        }
+        hi
+    }
+
+    // ---- samples base: knot prefix sums + linear-piece closed forms ----
+
+    /// Raw (unscaled, unclamped) cumulative of the piecewise-linear base,
+    /// anchored at the first knot; the constant extensions before the
+    /// first and after the last knot continue linearly, matching
+    /// [`Self::interp`].
+    fn knots_raw(&self, ts: &[f64], vs: &[f64], t: f64) -> f64 {
+        let kn = self.knots.as_ref().unwrap();
+        if t <= ts[0] {
+            return vs[0] * (t - ts[0]);
+        }
+        let last = ts.len() - 1;
+        if t >= ts[last] {
+            return kn.cum[last] + vs[last] * (t - ts[last]);
+        }
+        let i = ts.partition_point(|&x| x <= t) - 1;
+        let w = (t - ts[i]) / (ts[i + 1] - ts[i]);
+        let vt = vs[i] * (1.0 - w) + vs[i + 1] * w;
+        kn.cum[i] + 0.5 * (vs[i] + vt) * (t - ts[i])
+    }
+
+    fn samples_bits(
+        &self,
+        ts: &[f64],
+        vs: &[f64],
+        m: f64,
+        t0: f64,
+        t1: f64,
+    ) -> f64 {
+        if ts.is_empty() {
+            // interp reports 0 bps: the floor is all there is
+            return self.floor * (t1 - t0);
+        }
+        let kn = self.knots.as_ref().unwrap();
+        if kn.min * m >= self.floor {
+            let raw1 = self.knots_raw(ts, vs, t1);
+            let raw0 = self.knots_raw(ts, vs, t0);
+            return m * (raw1 - raw0);
+        }
+        self.samples_clamped_bits(ts, vs, m, t0, t1)
+    }
+
+    fn samples_clamped_bits(
+        &self,
+        ts: &[f64],
+        vs: &[f64],
+        m: f64,
+        t0: f64,
+        t1: f64,
+    ) -> f64 {
+        let floor = self.floor;
+        let last = ts.len() - 1;
+        let mut acc = 0.0;
+        if t0 < ts[0] {
+            acc += clamped_linear(m, floor, t0, t1.min(ts[0]), vs[0], 0.0);
+        }
+        if t1 > ts[last] {
+            let a = t0.max(ts[last]);
+            acc += clamped_linear(m, floor, a, t1, vs[last], 0.0);
+        }
+        if t1 <= ts[0] || t0 >= ts[last] {
+            return acc;
+        }
+        let lo = t0.max(ts[0]);
+        let hi = t1.min(ts[last]);
+        let i0 = if lo <= ts[0] {
+            0
+        } else {
+            ts.partition_point(|&x| x <= lo) - 1
+        };
+        for i in i0..last {
+            let (pa, pb) = (ts[i], ts[i + 1]);
+            if pa >= hi {
+                break;
+            }
+            if pb <= pa {
+                continue;
+            }
+            let a = lo.max(pa);
+            let b = hi.min(pb);
+            if b <= a {
+                continue;
+            }
+            let sl = (vs[i + 1] - vs[i]) / (pb - pa);
+            let va = vs[i] + sl * (a - pa);
+            acc += clamped_linear(m, floor, a, b, va, sl);
+        }
+        acc
+    }
+
+    fn samples_end(
+        &self,
+        ts: &[f64],
+        vs: &[f64],
+        m: f64,
+        t0: f64,
+        bits: f64,
+    ) -> f64 {
+        if ts.is_empty() {
+            return t0 + bits / self.floor;
+        }
+        let kn = self.knots.as_ref().unwrap();
+        if kn.min * m >= self.floor {
+            // unclamped: locate by knot prefix, solve the linear ramp with
+            // the same cancellation-free quadratic as the clamped pieces
+            let target = self.knots_raw(ts, vs, t0) + bits / m;
+            let last = ts.len() - 1;
+            if target <= 0.0 {
+                return ts[0] + target / vs[0];
+            }
+            if target >= kn.cum[last] {
+                return ts[last] + (target - kn.cum[last]) / vs[last];
+            }
+            let i = kn.cum.partition_point(|&c| c <= target) - 1;
+            let rem = target - kn.cum[i];
+            let sl = (vs[i + 1] - vs[i]) / (ts[i + 1] - ts[i]);
+            let disc = (vs[i] * vs[i] + 2.0 * sl * rem).max(0.0).sqrt();
+            return ts[i] + 2.0 * rem / (vs[i] + disc);
+        }
+        self.samples_clamped_end(ts, vs, m, t0, bits)
+    }
+
+    fn samples_clamped_end(
+        &self,
+        ts: &[f64],
+        vs: &[f64],
+        m: f64,
+        t0: f64,
+        bits: f64,
+    ) -> f64 {
+        let floor = self.floor;
+        let last = ts.len() - 1;
+        let mut t = t0;
+        let mut rem = bits;
+        if t < ts[0] {
+            let avail = clamped_linear(m, floor, t, ts[0], vs[0], 0.0);
+            if avail >= rem {
+                return clamped_linear_end(m, floor, t, ts[0], vs[0], 0.0, rem);
+            }
+            rem -= avail;
+            t = ts[0];
+        }
+        if t < ts[last] {
+            let i0 = if t <= ts[0] {
+                0
+            } else {
+                ts.partition_point(|&x| x <= t) - 1
+            };
+            for i in i0..last {
+                let (pa, pb) = (ts[i], ts[i + 1]);
+                if pb <= pa {
+                    continue;
+                }
+                let a = t.max(pa);
+                if a >= pb {
+                    continue;
+                }
+                let sl = (vs[i + 1] - vs[i]) / (pb - pa);
+                let va = vs[i] + sl * (a - pa);
+                let avail = clamped_linear(m, floor, a, pb, va, sl);
+                if avail >= rem {
+                    return clamped_linear_end(m, floor, a, pb, va, sl, rem);
+                }
+                rem -= avail;
+                t = pb;
+            }
+        }
+        // constant extension past the last knot
+        let rate = (vs[last] * m).max(floor);
+        t.max(ts[last]) + rem / rate
+    }
+
+    // ---- stochastic grid base: prefix sums with periodic extension ----
+
+    /// Raw (unscaled, unclamped) cumulative of the grid base. Uses the
+    /// same cell mapping as `at()` — `cell = (t/dt) as usize`, value
+    /// `samples[cell % n]` — so the periodic extension past
+    /// [`GRID_HORIZON`] integrates exactly what `at()` reports, wrap
+    /// discontinuity included. Negative times extend at `samples[0]`
+    /// (the saturating cast `at()` performs).
+    fn grid_raw(&self, g: &Grid, t: f64) -> f64 {
+        if t <= 0.0 {
+            return g.samples[0] * t;
+        }
+        let n = g.len();
+        let cell = (t / g.dt) as usize;
+        let (q, i) = (cell / n, cell % n);
+        let frac = t - cell as f64 * g.dt;
+        q as f64 * g.total() + g.prefix[i] + g.samples[i] * frac
+    }
+
+    fn grid_bits(&self, m: f64, t0: f64, t1: f64) -> f64 {
+        let g = self.grid.as_ref().unwrap();
+        if g.min * m >= self.floor {
+            return m * (self.grid_raw(g, t1) - self.grid_raw(g, t0));
+        }
+        if g.max * m <= self.floor {
+            return self.floor * (t1 - t0);
+        }
+        self.grid_clamped_bits(g, m, t0, t1)
+    }
+
+    /// Mid-clamp case (a deep `Scaled`/degrade pushes part of the sample
+    /// range under the floor): walk cells — still exact, each cell is
+    /// constant — skipping whole horizons via the per-horizon clamped
+    /// total.
+    fn grid_clamped_bits(&self, g: &Grid, m: f64, t0: f64, t1: f64) -> f64 {
+        let n = g.len();
+        let horizon = n as f64 * g.dt;
+        let mut acc = 0.0;
+        let mut t = t0;
+        // the skip relies on horizon-periodicity, which only holds at
+        // t >= 0 (negative times saturate to samples[0], see grid_raw)
+        if t0 >= 0.0 && t1 - t0 > 2.0 * horizon {
+            let per = self.grid_clamped_horizon(g, m);
+            let q = ((t1 - t0) / horizon).floor() - 1.0;
+            acc += q * per;
+            t = t0 + q * horizon;
+        }
+        let mut cell = (t / g.dt) as usize;
+        loop {
+            let rate = (g.samples[cell % n] * m).max(self.floor);
+            let b = (cell as f64 + 1.0) * g.dt;
+            if b >= t1 {
+                return acc + rate * (t1 - t).max(0.0);
+            }
+            acc += rate * (b - t).max(0.0);
+            t = b;
+            cell += 1;
+        }
+    }
+
+    /// Clamped bits over one full horizon at multiplier `m`.
+    fn grid_clamped_horizon(&self, g: &Grid, m: f64) -> f64 {
+        g.samples.iter().map(|&s| (s * m).max(self.floor)).sum::<f64>() * g.dt
+    }
+
+    fn grid_end(&self, m: f64, t0: f64, bits: f64) -> f64 {
+        let g = self.grid.as_ref().unwrap();
+        if g.max * m <= self.floor {
+            return t0 + bits / self.floor;
+        }
+        if g.min * m >= self.floor {
+            // unclamped: O(log n) — skip whole horizons, binary-search the
+            // prefix array, divide within the landing cell
+            let total = g.total();
+            let target = self.grid_raw(g, t0) + bits / m;
+            if target <= 0.0 {
+                return target / g.samples[0];
+            }
+            let n = g.len();
+            let mut q = (target / total).floor();
+            let mut rem = target - q * total;
+            if rem < 0.0 {
+                q -= 1.0;
+                rem += total;
+            }
+            if rem >= total {
+                q += 1.0;
+                rem -= total;
+            }
+            let i = (g.prefix.partition_point(|&p| p <= rem) - 1).min(n - 1);
+            let within = (rem - g.prefix[i]) / g.samples[i];
+            return (q * n as f64 + i as f64) * g.dt + within;
+        }
+        // mid-clamp: skip whole horizons via the clamped total, then walk
+        // (the skip needs horizon-periodicity, so only from t0 >= 0 —
+        // negative times saturate to samples[0], see grid_raw)
+        let n = g.len();
+        let horizon = n as f64 * g.dt;
+        let per = self.grid_clamped_horizon(g, m);
+        let mut t = t0;
+        let mut rem = bits;
+        if t0 >= 0.0 && rem > 2.0 * per {
+            let q = (rem / per).floor() - 1.0;
+            rem -= q * per;
+            t += q * horizon;
+        }
+        let mut cell = (t / g.dt) as usize;
+        loop {
+            let rate = (g.samples[cell % n] * m).max(self.floor);
+            let b = (cell as f64 + 1.0) * g.dt;
+            let avail = rate * (b - t).max(0.0);
+            if avail >= rem {
+                return t + rem / rate;
+            }
+            rem -= avail;
+            t = b;
+            cell += 1;
+        }
     }
 }
 
@@ -281,8 +1056,10 @@ mod tests {
             let v = t.at(i as f64 * 0.037);
             assert!((5e7 - 1.0..=1.5e8 + 1.0).contains(&v));
         }
+        // the prefix difference is exact: a full period averages to the
+        // mean to fp precision, not just sampler precision
         let m = t.mean_over(0.0, 10.0);
-        assert!((m - 1e8).abs() < 2e6, "mean={m}");
+        assert!((m - 1e8).abs() < 1.0, "mean={m}");
     }
 
     #[test]
@@ -446,5 +1223,220 @@ mod tests {
         for i in 0..100 {
             assert_eq!(a.at(i as f64 * 1.3), b.at(i as f64 * 1.3));
         }
+    }
+
+    #[test]
+    fn mean_over_degenerate_interval_returns_at() {
+        let t = BandwidthTrace::new(TraceKind::Sine {
+            mean_bps: 1e8,
+            amp_bps: 3e7,
+            period_s: 4.0,
+        });
+        // t1 == t0 and t1 < t0 both report the instantaneous rate instead
+        // of a negative/zero-width quotient
+        assert_eq!(t.mean_over(3.0, 3.0).to_bits(), t.at(3.0).to_bits());
+        assert_eq!(t.mean_over(5.0, 2.0).to_bits(), t.at(5.0).to_bits());
+    }
+
+    #[test]
+    fn cum_constant_paths_are_closed_form_exact() {
+        let t = BandwidthTrace::constant(1e8).scaled(0.5);
+        assert_eq!(t.bits_over(2.0, 5.0), 5e7 * 3.0);
+        assert_eq!(t.end_of_transfer(2.0, 1.5e8), 5.0);
+        // degenerate inputs
+        assert_eq!(t.bits_over(5.0, 5.0), 0.0);
+        assert_eq!(t.end_of_transfer(7.0, 0.0), 7.0);
+    }
+
+    #[test]
+    fn cum_windowed_constant_prices_outages_exactly() {
+        let t = BandwidthTrace::constant(1e8).windowed(vec![DegradeWindow {
+            start_s: 10.0,
+            end_s: 20.0,
+            frac: 0.0,
+        }]);
+        // 0.05 s healthy + 10 s at the 1 kbps floor + the remainder healthy
+        let bits = 1e7;
+        let end = t.end_of_transfer(9.95, bits);
+        let want = 20.0 + (bits - 5e6 - 1e4) / 1e8;
+        assert!((end - want).abs() < 1e-9, "end={end} want={want}");
+        // and the forward direction agrees bit-for-bit with the pieces
+        let b = t.bits_over(9.95, end);
+        assert!((b - bits).abs() < 1.0, "bits_over={b}");
+    }
+
+    #[test]
+    fn cum_sine_inverts_and_prices_full_periods() {
+        let t = BandwidthTrace::new(TraceKind::Sine {
+            mean_bps: 1e8,
+            amp_bps: 9e7,
+            period_s: 2.0,
+        });
+        // one period's worth of bits at the mean takes exactly one period
+        let end = t.end_of_transfer(0.0, 2e8);
+        assert!((end - 2.0).abs() < 1e-9, "end={end}");
+        // round trip from an arbitrary phase
+        let bits = 3.7e8;
+        let end = t.end_of_transfer(1.23, bits);
+        assert!((t.bits_over(1.23, end) - bits).abs() < 1.0);
+    }
+
+    #[test]
+    fn cum_sine_respects_the_floor_clamp() {
+        // a sine dipping below zero spends part of each period at the
+        // 1 kbps floor; the clamped integral must match a fine Riemann sum
+        let t = BandwidthTrace::new(TraceKind::Sine {
+            mean_bps: 1e6,
+            amp_bps: 2e6,
+            period_s: 3.0,
+        });
+        let (t0, t1) = (0.7, 9.1);
+        let exact = t.bits_over(t0, t1);
+        let n = 200_000;
+        let dt = (t1 - t0) / n as f64;
+        let riemann: f64 = (0..n)
+            .map(|i| t.at(t0 + (i as f64 + 0.5) * dt) * dt)
+            .sum();
+        let rel = (exact - riemann).abs() / riemann;
+        assert!(rel < 1e-6, "exact={exact} riemann={riemann}");
+        // inversion round-trips through the clamped region
+        let bits = exact * 0.6;
+        let end = t.end_of_transfer(t0, bits);
+        assert!((t.bits_over(t0, end) - bits).abs() <= bits * 1e-9 + 1.0);
+    }
+
+    #[test]
+    fn cum_samples_inverts_across_knots() {
+        let t = BandwidthTrace::new(TraceKind::Samples {
+            times_s: vec![0.0, 10.0, 15.0],
+            bps: vec![1e8, 2e8, 5e7],
+        });
+        // trapezoid over [0, 10] = 1.5e9; over [10, 15] = 6.25e8
+        assert!((t.bits_over(0.0, 10.0) - 1.5e9).abs() < 1.0);
+        assert!((t.bits_over(0.0, 15.0) - 2.125e9).abs() < 1.0);
+        // past the last knot the rate is constant
+        assert!((t.bits_over(15.0, 17.0) - 1e8).abs() < 1.0);
+        for bits in [1e8, 1.5e9, 2.0e9, 2.5e9] {
+            let end = t.end_of_transfer(0.0, bits);
+            assert!(
+                (t.bits_over(0.0, end) - bits).abs() <= bits * 1e-9 + 1.0,
+                "bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn cum_samples_floor_crossings_match_riemann() {
+        // a degrade window so deep that the linear ramp crosses the floor
+        // inside it: effective in-window rates span [650, 2000] around the
+        // 1 kbps floor, so both clamped sub-pieces and the crossing split
+        // run (the tolerance absorbs the Riemann sum's own error at the
+        // two window-edge jump cells)
+        let t = BandwidthTrace::new(TraceKind::Samples {
+            times_s: vec![0.0, 20.0, 40.0],
+            bps: vec![2e7, 2e8, 5e7],
+        })
+        .windowed(vec![DegradeWindow {
+            start_s: 5.0,
+            end_s: 35.0,
+            frac: 1e-5,
+        }]);
+        let (t0, t1) = (1.0, 44.0);
+        let exact = t.bits_over(t0, t1);
+        let n = 400_000;
+        let dt = (t1 - t0) / n as f64;
+        let riemann: f64 = (0..n)
+            .map(|i| t.at(t0 + (i as f64 + 0.5) * dt) * dt)
+            .sum();
+        let rel = (exact - riemann).abs() / riemann;
+        assert!(rel < 1e-4, "exact={exact} riemann={riemann}");
+        for frac in [0.2, 0.5, 0.9] {
+            let bits = exact * frac;
+            let end = t.end_of_transfer(t0, bits);
+            assert!(
+                (t.bits_over(t0, end) - bits).abs() <= bits * 1e-9 + 1e-3,
+                "frac={frac}"
+            );
+        }
+    }
+
+    #[test]
+    fn grid_prefix_extends_periodically_past_the_horizon() {
+        let t = BandwidthTrace::new(TraceKind::Ou {
+            mean_bps: 1e8,
+            sigma_bps: 2e7,
+            theta: 0.5,
+            seed: 11,
+        });
+        // the wrap is by cell index (`(t/dt) as usize % n`), so bits over
+        // any two whole horizons agree to fp noise
+        let h = GRID_HORIZON;
+        let b0 = t.bits_over(0.0, h);
+        let b1 = t.bits_over(h, 2.0 * h);
+        assert!((b0 - b1).abs() / b0 < 1e-9, "b0={b0} b1={b1}");
+        // a span straddling the wrap prices exactly the bits at() reports:
+        // compare against a cell-aligned midpoint Riemann sum (cells are
+        // constant, so the sum is the exact integral)
+        let (t0, t1) = (h - 6.3, h + 7.7);
+        let exact = t.bits_over(t0, t1);
+        let mut acc = 0.0;
+        let mut cell = (t0 / GRID_DT) as usize;
+        loop {
+            let a = cell as f64 * GRID_DT;
+            let b = (cell as f64 + 1.0) * GRID_DT;
+            let (lo, hi) = (t0.max(a), t1.min(b));
+            if hi > lo {
+                acc += t.at(0.5 * (lo + hi)) * (hi - lo);
+            }
+            if b >= t1 {
+                break;
+            }
+            cell += 1;
+        }
+        assert!(
+            (exact - acc).abs() <= exact * 1e-9 + 1.0,
+            "exact={exact} riemann={acc}"
+        );
+        // a transfer straddling the wrap inverts those same bits
+        let bits = exact * 0.9;
+        let end = t.end_of_transfer(t0, bits);
+        assert!(end > h && end < t1, "end={end}");
+        assert!((t.bits_over(t0, end) - bits).abs() <= bits * 1e-9 + 1.0);
+    }
+
+    #[test]
+    fn cum_deep_scaled_grid_hits_the_floor_exactly() {
+        // scale an OU trace so far down that part of the sample range
+        // clamps at the floor: the cell walk must agree with at()
+        let t = BandwidthTrace::new(TraceKind::Ou {
+            mean_bps: 1e8,
+            sigma_bps: 2e7,
+            theta: 0.5,
+            seed: 3,
+        })
+        .scaled(2e-5); // mean ≈ 2 kbps, floor at 1 kbps binds sometimes
+        let (t0, t1) = (12.3, 61.7);
+        let exact = t.bits_over(t0, t1);
+        let mut acc = 0.0;
+        let mut cell = (t0 / GRID_DT) as usize;
+        loop {
+            let a = cell as f64 * GRID_DT;
+            let b = (cell as f64 + 1.0) * GRID_DT;
+            let (lo, hi) = (t0.max(a), t1.min(b));
+            if hi > lo {
+                acc += t.at(0.5 * (lo + hi)) * (hi - lo);
+            }
+            if b >= t1 {
+                break;
+            }
+            cell += 1;
+        }
+        assert!(
+            (exact - acc).abs() <= exact * 1e-9 + 1e-3,
+            "exact={exact} riemann={acc}"
+        );
+        let bits = exact * 0.5;
+        let end = t.end_of_transfer(t0, bits);
+        assert!((t.bits_over(t0, end) - bits).abs() <= bits * 1e-9 + 1e-3);
     }
 }

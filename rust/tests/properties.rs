@@ -6,7 +6,7 @@ use deco::compress::{
 };
 use deco::coordinator::{VirtualClock, WorkerState};
 use deco::deco::solve::{delta_star, solve, tau_range, DecoInput};
-use deco::netsim::{BandwidthTrace, Fabric, Link, TraceKind};
+use deco::netsim::{BandwidthTrace, DegradeWindow, Fabric, Link, TraceKind};
 use deco::timesim::{t_avg_closed_form, EventSim, PipelineParams};
 use deco::util::check::{forall, Gen};
 use deco::util::Rng;
@@ -591,6 +591,165 @@ fn prop_json_roundtrip_arbitrary_runresults() {
         let records = parsed.get("records").unwrap().as_arr().unwrap();
         if records.len() != n {
             return Err("record count".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- exact prefix-integral transfer engine (DESIGN.md §Perf) ----
+
+/// The integration step the pre-engine `Link::transfer_end` used (the
+/// frozen oracle itself lives in `BandwidthTrace::euler_end_reference`).
+const INT_DT: f64 = 0.01;
+
+/// A varying-bandwidth trace of any base kind (no wrappers).
+fn gen_varying_trace(g: &mut Gen) -> BandwidthTrace {
+    let kind = match g.size(0, 3) {
+        0 => TraceKind::Sine {
+            mean_bps: g.f64(5e7, 2e8),
+            amp_bps: g.f64(0.0, 4e7),
+            period_s: g.f64(0.5, 20.0),
+        },
+        1 => TraceKind::Ou {
+            mean_bps: g.f64(5e7, 2e8),
+            sigma_bps: g.f64(1e6, 3e7),
+            theta: g.f64(0.1, 1.0),
+            seed: g.rng.next_u64(),
+        },
+        2 => TraceKind::Markov {
+            levels_bps: vec![
+                g.f64(1e7, 5e7),
+                g.f64(5e7, 1e8),
+                g.f64(1e8, 3e8),
+            ],
+            dwell_s: g.f64(0.5, 5.0),
+            seed: g.rng.next_u64(),
+        },
+        _ => {
+            let n = g.size(2, 12);
+            let mut t = 0.0;
+            let mut times = Vec::with_capacity(n);
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                times.push(t);
+                vals.push(g.f64(2e7, 2e8));
+                t += g.f64(0.5, 10.0);
+            }
+            TraceKind::Samples { times_s: times, bps: vals }
+        }
+    };
+    BandwidthTrace::new(kind)
+}
+
+#[test]
+fn prop_transfer_end_inverts_cum_bits() {
+    // `end_of_transfer` is the exact inverse of the cumulative integral:
+    // B(end) − B(start) == bits (ulp-scale tolerance), and it is monotone
+    // in both the start time and the payload — on every base kind,
+    // through Scaled wrappers and floor-clamped degrade windows
+    forall("transfer_end_inverts_cum_bits", 60, |g| {
+        let mut trace = gen_varying_trace(g);
+        if g.bool() {
+            trace = trace.scaled(g.f64(0.2, 1.0));
+        }
+        if g.bool() {
+            let s = g.f64(0.0, 50.0);
+            let frac = [0.0, 0.25, 0.5][g.size(0, 2)];
+            trace = trace.windowed(vec![DegradeWindow {
+                start_s: s,
+                end_s: s + g.f64(0.5, 20.0),
+                frac,
+            }]);
+        }
+        let start = g.f64(0.0, 300.0);
+        let bits = g.f64(1e4, 3e9);
+        let end = trace.end_of_transfer(start, bits);
+        if end < start {
+            return Err(format!("end {end} precedes start {start}"));
+        }
+        let got = trace.bits_over(start, end);
+        let tol = bits * 1e-6 + 1.0;
+        if (got - bits).abs() > tol {
+            return Err(format!(
+                "B(end)-B(start)={got} != bits={bits} (tol {tol})"
+            ));
+        }
+        // monotone in bits
+        let end2 = trace.end_of_transfer(start, bits * g.f64(1.0, 3.0) + 10.0);
+        if end2 < end - 1e-6 {
+            return Err(format!("more bits ended earlier: {end2} < {end}"));
+        }
+        // monotone in start
+        let start2 = start + g.f64(0.0, 5.0);
+        let end3 = trace.end_of_transfer(start2, bits);
+        if end3 < end - 1e-6 {
+            return Err(format!("later start ended earlier: {end3} < {end}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exact_end_matches_euler_within_step_error() {
+    // the exact inversion agrees with the old 10 ms Euler integrator up to
+    // the Euler scheme's own per-step error: each step mis-prices at most
+    // the rate swing within it, so the accumulated bits slack is bounded
+    // by Σ|Δa|·dt (plus one full step at the boundary), measured here
+    // directly from the trace
+    forall("exact_end_matches_euler", 30, |g| {
+        let trace = gen_varying_trace(g);
+        let start = g.f64(0.0, 100.0);
+        let secs_target = g.f64(0.1, 30.0);
+        let bits = trace.mean_over(start, start + secs_target) * secs_target;
+        let exact = trace.end_of_transfer(start, bits);
+        let euler = trace.euler_end_reference(start, bits);
+        let horizon = exact.max(euler);
+        let steps = ((horizon - start) / INT_DT).ceil() as usize + 2;
+        let mut swing = 0.0;
+        let mut amax = trace.at(start);
+        let mut amin = amax;
+        let mut prev = amax;
+        for i in 1..=steps {
+            let a = trace.at(start + i as f64 * INT_DT);
+            swing += (a - prev).abs() * INT_DT;
+            amax = amax.max(a);
+            amin = amin.min(a);
+            prev = a;
+        }
+        let tol_bits = 2.0 * swing + 2.0 * amax * INT_DT;
+        let tol_secs = 1.5 * (tol_bits / (0.9 * amin) + 2.0 * INT_DT);
+        if (exact - euler).abs() > tol_secs {
+            return Err(format!(
+                "exact {exact} vs euler {euler}: |Δ| > tol {tol_secs}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mean_over_degenerate_interval_is_at() {
+    // t1 <= t0 must report the instantaneous rate, not a negative/zero
+    // quotient (the old 200-point sampler summed a negative dt)
+    forall("mean_over_degenerate", 40, |g| {
+        let trace = gen_varying_trace(g);
+        let t0 = g.f64(0.0, 200.0);
+        for t1 in [t0, t0 - g.f64(0.0, 10.0)] {
+            let got = trace.mean_over(t0, t1);
+            let want = trace.at(t0);
+            if got.to_bits() != want.to_bits() {
+                return Err(format!(
+                    "mean_over({t0}, {t1}) = {got} != at(t0) = {want}"
+                ));
+            }
+        }
+        // and a proper interval is the exact prefix difference
+        let t1 = t0 + g.f64(0.1, 20.0);
+        let mean = trace.mean_over(t0, t1);
+        let bits = trace.bits_over(t0, t1);
+        let rel = (mean * (t1 - t0) - bits).abs() / bits.max(1.0);
+        if rel > 1e-12 {
+            return Err(format!("mean·dt != bits_over (rel {rel})"));
         }
         Ok(())
     });

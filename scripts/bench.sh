@@ -9,6 +9,10 @@
 #                         baseline at n in {4, 16, 32}
 #   BENCH_topo.json     — two-tier topology clock tick vs flat at
 #                         n in {4, 16, 32} x regions in {2, 4}
+#   BENCH_trace.json    — exact prefix-integral transfer_end vs the old
+#                         10 ms Euler stepper on {Sine, OU, Markov,
+#                         Windowed-OU} x {0.1 s, 3 s, 30 s}, plus the
+#                         serial-vs-pooled exp hetero --fast sweep cell
 #
 #   scripts/bench.sh                # fast mode (default; CI-sized)
 #   DECO_BENCH_FAST=0 scripts/bench.sh   # full measurement windows
@@ -26,7 +30,8 @@ jsonl="$(mktemp)"
 fab_jsonl="$(mktemp)"
 ela_jsonl="$(mktemp)"
 topo_jsonl="$(mktemp)"
-trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl"' EXIT
+trace_jsonl="$(mktemp)"
+trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl"' EXIT
 
 consolidate() {
   # consolidate <jsonl> <out.json>
@@ -60,3 +65,7 @@ consolidate "$ela_jsonl" BENCH_elastic.json
 echo "### cargo bench --bench bench_topo"
 DECO_BENCH_JSON="$topo_jsonl" cargo bench --bench bench_topo
 consolidate "$topo_jsonl" BENCH_topo.json
+
+echo "### cargo bench --bench bench_trace"
+DECO_BENCH_JSON="$trace_jsonl" cargo bench --bench bench_trace
+consolidate "$trace_jsonl" BENCH_trace.json
