@@ -1,0 +1,92 @@
+//! Bonded-transport hot path (DESIGN.md §Bonding): the water-filling
+//! `Bond::schedule` bisection at k in {2, 4} paths, and the bonded
+//! virtual-clock tick versus the single-path fabric tick at
+//! n in {4, 16, 32} — the per-iteration overhead multi-homing adds.
+//!
+//! `scripts/bench.sh` consolidates these into `BENCH_bond.json`.
+
+use deco::coordinator::VirtualClock;
+use deco::netsim::{BandwidthTrace, Bond, Fabric, Link, TraceKind};
+use deco::util::bench::{black_box, Bench};
+
+/// Rebuild the clock periodically so the TC history stays bounded while
+/// the bench harness spins millions of ticks.
+const RESET_EVERY: usize = 100_000;
+
+fn sine_link(mean: f64, lat: f64) -> Link {
+    Link::new(
+        BandwidthTrace::new(TraceKind::Sine {
+            mean_bps: mean,
+            amp_bps: 0.3 * mean,
+            period_s: 7.0,
+        }),
+        lat,
+    )
+}
+
+fn bond_of(k: usize) -> Bond {
+    Bond::new(
+        (0..k)
+            .map(|p| sine_link(1e8 / (p + 1) as f64, 0.05 + 0.05 * p as f64))
+            .collect(),
+    )
+}
+
+/// A fabric with every worker k-homed on heterogeneous sine paths
+/// (k = 1 leaves the plain single-link fabric untouched).
+fn bonded_fabric(n: usize, k: usize) -> Fabric {
+    let mut fabric = Fabric::homogeneous(
+        n,
+        BandwidthTrace::new(TraceKind::Sine {
+            mean_bps: 1e8,
+            amp_bps: 3e7,
+            period_s: 7.0,
+        }),
+        0.05,
+    );
+    if k > 1 {
+        for i in 0..n {
+            fabric.set_bond(i, bond_of(k));
+        }
+    }
+    fabric
+}
+
+fn bench_clock(b: &Bench, name: &str, make: impl Fn() -> VirtualClock) {
+    let mut clock = make();
+    b.bench(name, || {
+        if clock.iters() >= RESET_EVERY {
+            clock = make();
+        }
+        black_box(clock.tick(0.05, 2, 4_000_000));
+    });
+}
+
+fn main() {
+    println!("== bench_bond (water-filling multi-path pricing) ==");
+    let b = Bench::new("bond");
+    // the scheduler alone: one water-filled transfer per call, staggered
+    // path starts so the bisection sees the general case
+    for &k in &[2usize, 4] {
+        let bond = bond_of(k);
+        let starts: Vec<f64> = (0..k).map(|p| 0.3 * p as f64).collect();
+        let mut t = 0.0f64;
+        b.bench(&format!("schedule/k{k}"), || {
+            t = (t + 0.05) % 1000.0;
+            let s: Vec<f64> = starts.iter().map(|&o| t + o).collect();
+            black_box(bond.schedule(&s, 4_000_000));
+        });
+    }
+    // the clock tick: single-path baseline, then bonded at each k — the
+    // delta is what one iteration of multi-homed pricing costs
+    for &n in &[4usize, 16, 32] {
+        bench_clock(&b, &format!("clock_tick/single_n{n}"), move || {
+            VirtualClock::new(bonded_fabric(n, 1))
+        });
+        for &k in &[2usize, 4] {
+            bench_clock(&b, &format!("clock_tick/n{n}_k{k}"), move || {
+                VirtualClock::new(bonded_fabric(n, k))
+            });
+        }
+    }
+}

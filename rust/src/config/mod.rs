@@ -8,7 +8,9 @@
 
 use crate::deco::DecoInput;
 use crate::elastic::{ChurnEvent, ChurnSpec, DrainPolicy, TimedEvent};
-use crate::netsim::{BandwidthTrace, DegradeWindow, Fabric, Link, TraceKind};
+use crate::netsim::{
+    BandwidthTrace, Bond, DegradeWindow, Fabric, Link, TraceKind,
+};
 use crate::strategy::StrategyKind;
 use crate::topo::{elect, RegionTopo, Topology};
 use crate::util::Json;
@@ -67,6 +69,31 @@ pub struct RegionSpec {
     pub latency_s: f64,
 }
 
+/// One WAN path of a bonded worker (DESIGN.md §Bonding).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PathSpec {
+    pub trace: TraceKind,
+    pub latency_s: f64,
+}
+
+/// A bonded multi-path attachment: `worker` sends over all of `paths` in
+/// parallel via the water-filling scheduler, replacing whatever single
+/// link the [`FabricSpec`] gave it. Legacy configs (no `bonds` key) build
+/// exactly the single-link fabric they always did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BondSpec {
+    pub worker: usize,
+    pub paths: Vec<PathSpec>,
+}
+
+/// One region's own WAN link, overriding the shared two-tier WAN
+/// trace/latency (DESIGN.md §Topology).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegionWanSpec {
+    pub wan_trace: TraceKind,
+    pub wan_latency_s: f64,
+}
+
 /// How the workers are wired into the aggregation tree — the serde
 /// scenario layer over [`crate::topo::Topology`] (DESIGN.md §Topology).
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -77,8 +104,14 @@ pub enum TopologySpec {
     /// two-tier aggregation over a [`FabricSpec::Regions`] fabric: each
     /// `regions` group becomes one region (contiguous worker block) with
     /// an elected aggregator, and each region crosses the WAN over its own
-    /// link built from this shared trace/latency
-    TwoTier { wan_trace: TraceKind, wan_latency_s: f64 },
+    /// link built from this shared trace/latency — or from its entry in
+    /// `region_wan` when that list is non-empty (one spec per region, in
+    /// group order; empty = every region shares the default)
+    TwoTier {
+        wan_trace: TraceKind,
+        wan_latency_s: f64,
+        region_wan: Vec<RegionWanSpec>,
+    },
 }
 
 #[derive(Clone, Debug)]
@@ -89,6 +122,10 @@ pub struct NetworkConfig {
     pub fabric: FabricSpec,
     /// aggregation-tree wiring (flat unless configured otherwise)
     pub topology: TopologySpec,
+    /// bonded multi-path attachments applied after the fabric spec
+    /// (DESIGN.md §Bonding); empty = every worker single-path, exactly the
+    /// pre-bonding behavior
+    pub bonds: Vec<BondSpec>,
 }
 
 impl NetworkConfig {
@@ -99,6 +136,7 @@ impl NetworkConfig {
             latency_s,
             fabric: FabricSpec::Homogeneous,
             topology: TopologySpec::Flat,
+            bonds: Vec::new(),
         }
     }
 
@@ -107,9 +145,10 @@ impl NetworkConfig {
         Link::new(BandwidthTrace::new(self.trace.clone()), self.latency_s)
     }
 
-    /// Realize the per-worker fabric for a run with `n` workers.
+    /// Realize the per-worker fabric for a run with `n` workers, then
+    /// replace each bonded worker's link with its multi-path [`Bond`].
     pub fn build_fabric(&self, n: usize) -> Result<Fabric> {
-        Ok(match &self.fabric {
+        let mut fabric = match &self.fabric {
             FabricSpec::Homogeneous => Fabric::homogeneous(
                 n,
                 BandwidthTrace::new(self.trace.clone()),
@@ -161,7 +200,43 @@ impl NetworkConfig {
                 }
                 Fabric::new(links)
             }
-        })
+        };
+        for (bi, b) in self.bonds.iter().enumerate() {
+            if b.worker >= n {
+                return Err(anyhow!(
+                    "bond {bi} names worker {} but the run has {n}",
+                    b.worker
+                ));
+            }
+            if self.bonds[..bi].iter().any(|o| o.worker == b.worker) {
+                return Err(anyhow!(
+                    "worker {} appears in more than one bond",
+                    b.worker
+                ));
+            }
+            if b.paths.is_empty() {
+                return Err(anyhow!(
+                    "bond {bi} (worker {}) has no paths",
+                    b.worker
+                ));
+            }
+            let mut links = Vec::with_capacity(b.paths.len());
+            for (p, path) in b.paths.iter().enumerate() {
+                if !(path.latency_s.is_finite() && path.latency_s >= 0.0) {
+                    return Err(anyhow!(
+                        "bond {bi} path {p} needs finite latency_s >= 0 \
+                         (got {})",
+                        path.latency_s
+                    ));
+                }
+                links.push(Link::new(
+                    BandwidthTrace::new(path.trace.clone()),
+                    path.latency_s,
+                ));
+            }
+            fabric.set_bond(b.worker, Bond::new(links));
+        }
+        Ok(fabric)
     }
 
     /// Realize the aggregation-tree [`Topology`] for a run with `n`
@@ -176,7 +251,7 @@ impl NetworkConfig {
         n: usize,
         fabric: &Fabric,
     ) -> Result<Topology> {
-        let TopologySpec::TwoTier { wan_trace, wan_latency_s } =
+        let TopologySpec::TwoTier { wan_trace, wan_latency_s, region_wan } =
             &self.topology
         else {
             return Ok(Topology::Flat);
@@ -207,11 +282,38 @@ impl NetworkConfig {
                 "fabric regions cover {next} workers but the run has {n}"
             ));
         }
-        let wan = Fabric::homogeneous(
-            groups.len(),
-            BandwidthTrace::new(wan_trace.clone()),
-            *wan_latency_s,
-        );
+        let wan = if region_wan.is_empty() {
+            Fabric::homogeneous(
+                groups.len(),
+                BandwidthTrace::new(wan_trace.clone()),
+                *wan_latency_s,
+            )
+        } else {
+            if region_wan.len() != groups.len() {
+                return Err(anyhow!(
+                    "region_wan lists {} links but the fabric has {} \
+                     regions",
+                    region_wan.len(),
+                    groups.len()
+                ));
+            }
+            let mut links = Vec::with_capacity(region_wan.len());
+            for (r, rw) in region_wan.iter().enumerate() {
+                if !(rw.wan_latency_s.is_finite() && rw.wan_latency_s >= 0.0)
+                {
+                    return Err(anyhow!(
+                        "region_wan[{r}] needs finite wan_latency_s >= 0 \
+                         (got {})",
+                        rw.wan_latency_s
+                    ));
+                }
+                links.push(Link::new(
+                    BandwidthTrace::new(rw.wan_trace.clone()),
+                    rw.wan_latency_s,
+                ));
+            }
+            Fabric::new(links)
+        };
         let topo = Topology::TwoTier { regions, wan };
         topo.validate(n)?;
         Ok(topo)
@@ -232,10 +334,59 @@ impl NetworkConfig {
         if self.topology != TopologySpec::Flat {
             pairs.push(("topology", topology_to_json(&self.topology)));
         }
+        if !self.bonds.is_empty() {
+            pairs.push((
+                "bonds",
+                Json::arr(self.bonds.iter().map(|b| {
+                    Json::obj(vec![
+                        ("worker", Json::num(b.worker as f64)),
+                        (
+                            "paths",
+                            Json::arr(b.paths.iter().map(|p| {
+                                Json::obj(vec![
+                                    ("trace", trace_to_json(&p.trace)),
+                                    ("latency_s", Json::num(p.latency_s)),
+                                ])
+                            })),
+                        ),
+                    ])
+                })),
+            ));
+        }
         Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
+        let bonds = match j.get("bonds") {
+            None => Vec::new(),
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("'bonds' not an array"))?;
+                let mut bonds = Vec::with_capacity(arr.len());
+                for b in arr {
+                    let parr = b
+                        .req("paths")
+                        .map_err(err)?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("'paths' not an array"))?;
+                    let mut paths = Vec::with_capacity(parr.len());
+                    for p in parr {
+                        paths.push(PathSpec {
+                            trace: trace_from_json(
+                                p.req("trace").map_err(err)?,
+                            )?,
+                            latency_s: p.req_f64("latency_s").map_err(err)?,
+                        });
+                    }
+                    bonds.push(BondSpec {
+                        worker: b.req_usize("worker").map_err(err)?,
+                        paths,
+                    });
+                }
+                bonds
+            }
+        };
         Ok(Self {
             trace: trace_from_json(j.req("trace").map_err(err)?)?,
             latency_s: j.req_f64("latency_s").map_err(err)?,
@@ -247,6 +398,7 @@ impl NetworkConfig {
                 Some(t) => topology_from_json(t)?,
                 None => TopologySpec::Flat,
             },
+            bonds,
         })
     }
 }
@@ -254,21 +406,58 @@ impl NetworkConfig {
 pub fn topology_to_json(t: &TopologySpec) -> Json {
     match t {
         TopologySpec::Flat => Json::obj(vec![("kind", Json::str("flat"))]),
-        TopologySpec::TwoTier { wan_trace, wan_latency_s } => Json::obj(vec![
-            ("kind", Json::str("two_tier")),
-            ("wan_trace", trace_to_json(wan_trace)),
-            ("wan_latency_s", Json::num(*wan_latency_s)),
-        ]),
+        TopologySpec::TwoTier { wan_trace, wan_latency_s, region_wan } => {
+            let mut pairs = vec![
+                ("kind", Json::str("two_tier")),
+                ("wan_trace", trace_to_json(wan_trace)),
+                ("wan_latency_s", Json::num(*wan_latency_s)),
+            ];
+            if !region_wan.is_empty() {
+                pairs.push((
+                    "region_wan",
+                    Json::arr(region_wan.iter().map(|rw| {
+                        Json::obj(vec![
+                            ("wan_trace", trace_to_json(&rw.wan_trace)),
+                            ("wan_latency_s", Json::num(rw.wan_latency_s)),
+                        ])
+                    })),
+                ));
+            }
+            Json::obj(pairs)
+        }
     }
 }
 
 pub fn topology_from_json(j: &Json) -> Result<TopologySpec> {
     Ok(match j.req_str("kind").map_err(err)? {
         "flat" => TopologySpec::Flat,
-        "two_tier" => TopologySpec::TwoTier {
-            wan_trace: trace_from_json(j.req("wan_trace").map_err(err)?)?,
-            wan_latency_s: j.req_f64("wan_latency_s").map_err(err)?,
-        },
+        "two_tier" => {
+            let region_wan = match j.get("region_wan") {
+                None => Vec::new(),
+                Some(v) => {
+                    let arr = v.as_arr().ok_or_else(|| {
+                        anyhow!("'region_wan' not an array")
+                    })?;
+                    let mut specs = Vec::with_capacity(arr.len());
+                    for rw in arr {
+                        specs.push(RegionWanSpec {
+                            wan_trace: trace_from_json(
+                                rw.req("wan_trace").map_err(err)?,
+                            )?,
+                            wan_latency_s: rw
+                                .req_f64("wan_latency_s")
+                                .map_err(err)?,
+                        });
+                    }
+                    specs
+                }
+            };
+            TopologySpec::TwoTier {
+                wan_trace: trace_from_json(j.req("wan_trace").map_err(err)?)?,
+                wan_latency_s: j.req_f64("wan_latency_s").map_err(err)?,
+                region_wan,
+            }
+        }
         other => return Err(anyhow!("unknown topology kind '{other}'")),
     })
 }
@@ -499,6 +688,24 @@ pub fn churn_to_json(c: &ChurnSpec) -> Json {
                             pairs.push(("frac", Json::num(*frac)));
                             pairs.push(("secs", Json::num(*secs)));
                         }
+                        ChurnEvent::PathOutage { worker, path, secs } => {
+                            pairs.push(("event", Json::str("path_outage")));
+                            pairs.push(("worker", Json::num(*worker as f64)));
+                            pairs.push(("path", Json::num(*path as f64)));
+                            pairs.push(("secs", Json::num(*secs)));
+                        }
+                        ChurnEvent::PathDegrade {
+                            worker,
+                            path,
+                            frac,
+                            secs,
+                        } => {
+                            pairs.push(("event", Json::str("path_degrade")));
+                            pairs.push(("worker", Json::num(*worker as f64)));
+                            pairs.push(("path", Json::num(*path as f64)));
+                            pairs.push(("frac", Json::num(*frac)));
+                            pairs.push(("secs", Json::num(*secs)));
+                        }
                     }
                     Json::obj(pairs)
                 })),
@@ -569,6 +776,17 @@ pub fn churn_from_json(j: &Json) -> Result<ChurnSpec> {
                     },
                     "link_degrade" => ChurnEvent::LinkDegrade {
                         worker,
+                        frac: e.req_f64("frac").map_err(err)?,
+                        secs: e.req_f64("secs").map_err(err)?,
+                    },
+                    "path_outage" => ChurnEvent::PathOutage {
+                        worker,
+                        path: e.req_usize("path").map_err(err)?,
+                        secs: e.req_f64("secs").map_err(err)?,
+                    },
+                    "path_degrade" => ChurnEvent::PathDegrade {
+                        worker,
+                        path: e.req_usize("path").map_err(err)?,
                         frac: e.req_f64("frac").map_err(err)?,
                         secs: e.req_f64("secs").map_err(err)?,
                     },
@@ -803,6 +1021,7 @@ pub fn wan_network(mean_bps: f64, latency_s: f64, seed: u64) -> NetworkConfig {
         latency_s,
         fabric: FabricSpec::Homogeneous,
         topology: TopologySpec::Flat,
+        bonds: Vec::new(),
     }
 }
 
@@ -890,6 +1109,23 @@ mod tests {
                             worker: 1,
                             frac: 0.3,
                             secs: 20.0,
+                        },
+                    },
+                    TimedEvent {
+                        t: 110.0,
+                        event: ChurnEvent::PathOutage {
+                            worker: 2,
+                            path: 1,
+                            secs: 8.0,
+                        },
+                    },
+                    TimedEvent {
+                        t: 130.0,
+                        event: ChurnEvent::PathDegrade {
+                            worker: 2,
+                            path: 0,
+                            frac: 0.4,
+                            secs: 12.0,
                         },
                     },
                 ],
@@ -1030,6 +1266,7 @@ mod tests {
             latency_s: 0.1,
             fabric: FabricSpec::Homogeneous,
             topology: TopologySpec::Flat,
+            bonds: Vec::new(),
         };
         assert_eq!(c.nominal_bps(), 2e8);
         // scaled traces report the scaled nominal
@@ -1170,6 +1407,21 @@ mod tests {
             TopologySpec::TwoTier {
                 wan_trace: TraceKind::Constant { bps: 2e7 },
                 wan_latency_s: 0.3,
+                region_wan: Vec::new(),
+            },
+            TopologySpec::TwoTier {
+                wan_trace: TraceKind::Constant { bps: 2e7 },
+                wan_latency_s: 0.3,
+                region_wan: vec![
+                    RegionWanSpec {
+                        wan_trace: TraceKind::Constant { bps: 4e7 },
+                        wan_latency_s: 0.2,
+                    },
+                    RegionWanSpec {
+                        wan_trace: TraceKind::Constant { bps: 1e7 },
+                        wan_latency_s: 0.4,
+                    },
+                ],
             },
         ] {
             let j = topology_to_json(&t);
@@ -1185,6 +1437,7 @@ mod tests {
         c.topology = TopologySpec::TwoTier {
             wan_trace: TraceKind::Constant { bps: 2e7 },
             wan_latency_s: 0.3,
+            region_wan: Vec::new(),
         };
         let back = NetworkConfig::from_json(
             &Json::parse(&c.to_json().to_string_pretty()).unwrap(),
@@ -1224,6 +1477,7 @@ mod tests {
         c.topology = TopologySpec::TwoTier {
             wan_trace: TraceKind::Constant { bps: 2e7 },
             wan_latency_s: 0.3,
+            region_wan: Vec::new(),
         };
         let fabric = c.build_fabric(5).unwrap();
         let topo = c.build_topology(5, &fabric).unwrap();
@@ -1260,9 +1514,154 @@ mod tests {
         c.topology = TopologySpec::TwoTier {
             wan_trace: TraceKind::Constant { bps: 2e7 },
             wan_latency_s: f64::NAN,
+            region_wan: Vec::new(),
         };
         let f = c.build_fabric(5).unwrap();
         assert!(c.build_topology(5, &f).is_err());
+    }
+
+    #[test]
+    fn bonds_roundtrip_and_default_to_empty() {
+        let mut c = wan_network(1e8, 0.2, 1);
+        // no bonds: the key is omitted and legacy configs parse to empty
+        assert!(!c.to_json().to_string_pretty().contains("bonds"));
+        c.bonds = vec![BondSpec {
+            worker: 0,
+            paths: vec![
+                PathSpec {
+                    trace: TraceKind::Constant { bps: 1e8 },
+                    latency_s: 0.05,
+                },
+                PathSpec {
+                    trace: TraceKind::Constant { bps: 2e7 },
+                    latency_s: 0.25,
+                },
+            ],
+        }];
+        let back = NetworkConfig::from_json(
+            &Json::parse(&c.to_json().to_string_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.bonds, c.bonds);
+        let legacy = Json::parse(
+            "{\"trace\": {\"kind\": \"constant\", \"bps\": 1e8}, \
+             \"latency_s\": 0.2}",
+        )
+        .unwrap();
+        assert!(NetworkConfig::from_json(&legacy).unwrap().bonds.is_empty());
+    }
+
+    #[test]
+    fn build_fabric_applies_and_validates_bonds() {
+        let mut c = NetworkConfig::homogeneous(
+            TraceKind::Constant { bps: 1e8 },
+            0.1,
+        );
+        c.bonds = vec![BondSpec {
+            worker: 1,
+            paths: vec![
+                PathSpec {
+                    trace: TraceKind::Constant { bps: 1e8 },
+                    latency_s: 0.05,
+                },
+                PathSpec {
+                    trace: TraceKind::Constant { bps: 2e7 },
+                    latency_s: 0.25,
+                },
+            ],
+        }];
+        let fabric = c.build_fabric(4).unwrap();
+        assert_eq!(fabric.paths_per_worker(), vec![1, 2, 1, 1]);
+        let bond = fabric.bond(1).unwrap();
+        assert_eq!(bond.k(), 2);
+        assert_eq!(bond.path(1).latency(), 0.25);
+        assert!(fabric.bond(0).is_none());
+
+        // out-of-range worker
+        let mut bad = c.clone();
+        bad.bonds[0].worker = 9;
+        let e = bad.build_fabric(4).unwrap_err().to_string();
+        assert!(e.contains("names worker 9"), "{e}");
+        // duplicate worker
+        let mut dup = c.clone();
+        dup.bonds.push(dup.bonds[0].clone());
+        let e = dup.build_fabric(4).unwrap_err().to_string();
+        assert!(e.contains("more than one bond"), "{e}");
+        // empty path list
+        let mut empty = c.clone();
+        empty.bonds[0].paths.clear();
+        let e = empty.build_fabric(4).unwrap_err().to_string();
+        assert!(e.contains("has no paths"), "{e}");
+        // degenerate latency
+        let mut nan = c.clone();
+        nan.bonds[0].paths[0].latency_s = f64::NAN;
+        assert!(nan.build_fabric(4).is_err());
+    }
+
+    #[test]
+    fn region_wan_overrides_the_shared_wan_link() {
+        use crate::topo::Topology;
+        let mut c = NetworkConfig::homogeneous(
+            TraceKind::Constant { bps: 1e9 },
+            0.005,
+        );
+        c.fabric = FabricSpec::Regions {
+            groups: vec![
+                RegionSpec {
+                    workers: 2,
+                    trace: TraceKind::Constant { bps: 1e9 },
+                    latency_s: 0.005,
+                },
+                RegionSpec {
+                    workers: 2,
+                    trace: TraceKind::Constant { bps: 5e8 },
+                    latency_s: 0.01,
+                },
+            ],
+        };
+        c.topology = TopologySpec::TwoTier {
+            wan_trace: TraceKind::Constant { bps: 2e7 },
+            wan_latency_s: 0.3,
+            region_wan: vec![
+                RegionWanSpec {
+                    wan_trace: TraceKind::Constant { bps: 8e7 },
+                    wan_latency_s: 0.1,
+                },
+                RegionWanSpec {
+                    wan_trace: TraceKind::Constant { bps: 1e7 },
+                    wan_latency_s: 0.5,
+                },
+            ],
+        };
+        let fabric = c.build_fabric(4).unwrap();
+        let topo = c.build_topology(4, &fabric).unwrap();
+        let Topology::TwoTier { wan, .. } = &topo else {
+            panic!("expected two-tier")
+        };
+        assert_eq!(wan.workers(), 2);
+        assert_eq!(wan.link(0).bandwidth_at(0.0), 8e7);
+        assert_eq!(wan.link(0).latency(), 0.1);
+        assert_eq!(wan.link(1).bandwidth_at(0.0), 1e7);
+        assert_eq!(wan.link(1).latency(), 0.5);
+
+        // one spec per region, in group order — mismatch errors
+        let TopologySpec::TwoTier { region_wan, .. } = &mut c.topology
+        else {
+            unreachable!()
+        };
+        region_wan.pop();
+        let e = c.build_topology(4, &fabric).unwrap_err().to_string();
+        assert!(e.contains("region_wan lists 1"), "{e}");
+        // degenerate per-region latency errors
+        let TopologySpec::TwoTier { region_wan, .. } = &mut c.topology
+        else {
+            unreachable!()
+        };
+        region_wan.push(RegionWanSpec {
+            wan_trace: TraceKind::Constant { bps: 1e7 },
+            wan_latency_s: f64::NAN,
+        });
+        assert!(c.build_topology(4, &fabric).is_err());
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! `tests/fabric.rs`). This is THE Eq. 19 implementation:
 //! `timesim::EventSim::run_on_fabric` / `run_on_link` delegate here.
 
-use crate::netsim::{Fabric, Link};
+use crate::netsim::{Bond, Fabric, Link};
 use crate::topo::{elect_eligible, RegionTopo, Topology};
 
 #[derive(Debug)]
@@ -33,6 +33,12 @@ pub struct VirtualClock {
     ts_prev: f64,
     /// per-worker TM_k of the previous iteration
     tm_prev: Vec<f64>,
+    /// per-path TM_k of the previous iteration for bonded workers
+    /// (DESIGN.md §Bonding); empty vec on single-path workers
+    path_tm_prev: Vec<Vec<f64>>,
+    /// per-path times of the last tick for bonded workers (per-path
+    /// monitoring); empty vec on single-path workers
+    path_last: Vec<Vec<PathTick>>,
     /// full sync-arrival history TC_k (indexed k-1) for the τ-delayed max
     tc: Vec<f64>,
     /// per-worker times of the last tick (metrics / per-link monitoring)
@@ -64,6 +70,48 @@ pub struct WorkerTick {
     pub tc: f64,
     /// pure transmission duration of this worker's message
     pub tx_secs: f64,
+}
+
+/// One path's timeline entry for a bonded worker's last tick
+/// (DESIGN.md §Bonding).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PathTick {
+    /// transmission end of this path's share
+    pub tm: f64,
+    /// water-filling bit share this path carried (fractional — the
+    /// scheduler splits at the exact covering time, not on bit boundaries)
+    pub bits: f64,
+    /// pure transmission duration of this path's share (0 when idle)
+    pub tx_secs: f64,
+}
+
+/// One bonded tick: water-fill `bits` across the bond's paths starting no
+/// earlier than `ts` on each, record per-path timelines, and report the
+/// worker-level [`WorkerTick`] (tm = last path to stop transmitting,
+/// tc = the bonded sync arrival, tx = summed per-path wire seconds).
+fn tick_bonded(
+    bond: &Bond,
+    path_tm_prev: &mut [f64],
+    path_last: &mut [PathTick],
+    ts: f64,
+    bits: u64,
+) -> WorkerTick {
+    let starts: Vec<f64> =
+        path_tm_prev.iter().map(|&tm| tm.max(ts)).collect();
+    let sched = bond.schedule(&starts, bits);
+    let mut tm = f64::NEG_INFINITY;
+    let mut tx_secs = 0.0;
+    for p in 0..bond.k() {
+        path_tm_prev[p] = sched.tx_end[p];
+        path_last[p] = PathTick {
+            tm: sched.tx_end[p],
+            bits: sched.bits[p],
+            tx_secs: sched.tx_secs[p],
+        };
+        tm = tm.max(sched.tx_end[p]);
+        tx_secs += sched.tx_secs[p];
+    }
+    WorkerTick { tm, tc: sched.arrival, tx_secs }
 }
 
 /// One region's timeline entry for the last two-tier tick
@@ -108,12 +156,19 @@ impl VirtualClock {
     pub fn new(fabric: Fabric) -> Self {
         let n = fabric.workers();
         let uniform = fabric.is_uniform();
+        let paths: Vec<usize> =
+            (0..n).map(|i| fabric.bond(i).map_or(0, Bond::k)).collect();
         Self {
             fabric,
             two_tier: None,
             uniform,
             ts_prev: 0.0,
             tm_prev: vec![0.0; n],
+            path_tm_prev: paths.iter().map(|&k| vec![0.0; k]).collect(),
+            path_last: paths
+                .iter()
+                .map(|&k| vec![PathTick::default(); k])
+                .collect(),
             tc: Vec::new(),
             worker_last: vec![WorkerTick::default(); n],
             tx_total: vec![0.0; n],
@@ -161,6 +216,12 @@ impl VirtualClock {
     /// Per-worker (TM, TC, tx) of the last tick.
     pub fn worker_ticks(&self) -> &[WorkerTick] {
         &self.worker_last
+    }
+
+    /// Per-path (tx end, bit share, tx secs) of worker `worker`'s last
+    /// tick — empty on single-path workers (DESIGN.md §Bonding).
+    pub fn path_ticks(&self, worker: usize) -> &[PathTick] {
+        &self.path_last[worker]
     }
 
     /// Cumulative transmission seconds per worker.
@@ -289,22 +350,34 @@ impl VirtualClock {
                 tc: f64::NEG_INFINITY,
                 tx_secs: 0.0,
             };
-            for (i, link) in self.fabric.links().iter().enumerate() {
+            for i in 0..self.tm_prev.len() {
                 if let Some(m) = active {
                     if !m[i] {
                         // departed: timeline frozen, no phantom transfer
                         self.worker_last[i] = WorkerTick::default();
+                        self.path_last[i].fill(PathTick::default());
                         continue;
                     }
                 }
-                let start = self.tm_prev[i].max(ts);
-                let tm = link.transfer_end(start, bits);
-                let wt = WorkerTick {
-                    tm,
-                    tc: tm + link.latency(),
-                    tx_secs: tm - start,
+                let wt = if let Some(bond) = self.fabric.bond(i) {
+                    tick_bonded(
+                        bond,
+                        &mut self.path_tm_prev[i],
+                        &mut self.path_last[i],
+                        ts,
+                        bits,
+                    )
+                } else {
+                    let link = self.fabric.link(i);
+                    let start = self.tm_prev[i].max(ts);
+                    let tm = link.transfer_end(start, bits);
+                    WorkerTick {
+                        tm,
+                        tc: tm + link.latency(),
+                        tx_secs: tm - start,
+                    }
                 };
-                self.tm_prev[i] = tm;
+                self.tm_prev[i] = wt.tm;
                 self.tx_total[i] += wt.tx_secs;
                 self.worker_last[i] = wt;
                 if wt.tc > slowest.tc {
@@ -364,6 +437,7 @@ impl VirtualClock {
                 if let Some(m) = active {
                     if !m[i] {
                         self.worker_last[i] = WorkerTick::default();
+                        self.path_last[i].fill(PathTick::default());
                         continue;
                     }
                 }
@@ -371,19 +445,31 @@ impl VirtualClock {
                 if i == region.aggregator {
                     // local hand-off: timeline advances with TS, no wire
                     self.tm_prev[i] = ts;
+                    self.path_tm_prev[i].fill(ts);
+                    self.path_last[i].fill(PathTick::default());
                     self.worker_last[i] =
                         WorkerTick { tm: ts, tc: ts, tx_secs: 0.0 };
                     continue;
                 }
-                let link = self.fabric.link(i);
-                let start = self.tm_prev[i].max(ts);
-                let tm = link.transfer_end(start, lan_bits);
-                let wt = WorkerTick {
-                    tm,
-                    tc: tm + link.latency(),
-                    tx_secs: tm - start,
+                let wt = if let Some(bond) = self.fabric.bond(i) {
+                    tick_bonded(
+                        bond,
+                        &mut self.path_tm_prev[i],
+                        &mut self.path_last[i],
+                        ts,
+                        lan_bits,
+                    )
+                } else {
+                    let link = self.fabric.link(i);
+                    let start = self.tm_prev[i].max(ts);
+                    let tm = link.transfer_end(start, lan_bits);
+                    WorkerTick {
+                        tm,
+                        tc: tm + link.latency(),
+                        tx_secs: tm - start,
+                    }
                 };
-                self.tm_prev[i] = tm;
+                self.tm_prev[i] = wt.tm;
                 self.tx_total[i] += wt.tx_secs;
                 self.worker_last[i] = wt;
                 senders += 1;
@@ -727,5 +813,76 @@ mod tests {
         // the straggler accumulated 4x the healthy transmission time
         let tx = clock.tx_totals();
         assert!((tx[0] / tx[1] - 4.0).abs() < 1e-6, "{tx:?}");
+    }
+
+    #[test]
+    fn k1_bonded_clock_is_bit_identical_to_the_plain_fabric() {
+        // the bond determinism contract at the clock level: wrapping every
+        // link in a 1-path bond must not perturb a single bit, even though
+        // it forces the general (non-uniform) loop
+        let link = Link::new(
+            BandwidthTrace::new(crate::netsim::TraceKind::Sine {
+                mean_bps: 8e7,
+                amp_bps: 3e7,
+                period_s: 40.0,
+            }),
+            0.12,
+        );
+        let plain_fabric = Fabric::replicate(link.clone(), 3);
+        let mut bonded_fabric = Fabric::replicate(link.clone(), 3);
+        for i in 0..3 {
+            bonded_fabric.set_bond(i, Bond::single(link.clone()));
+        }
+        let mut plain = VirtualClock::new(plain_fabric);
+        let mut bonded = VirtualClock::new(bonded_fabric);
+        for k in 1..=300usize {
+            let bits = if k % 13 == 0 {
+                0
+            } else {
+                700_000 + (k as u64 % 9) * 400_000
+            };
+            let a = plain.tick(0.06, k % 3, bits);
+            let b = bonded.tick(0.06, k % 3, bits);
+            assert_eq!(a.ts.to_bits(), b.ts.to_bits(), "k={k}");
+            assert_eq!(a.tm.to_bits(), b.tm.to_bits(), "k={k}");
+            assert_eq!(a.tc.to_bits(), b.tc.to_bits(), "k={k}");
+            assert_eq!(a.tx_secs.to_bits(), b.tx_secs.to_bits(), "k={k}");
+        }
+        assert_eq!(plain.now().to_bits(), bonded.now().to_bits());
+        assert_eq!(bonded.path_ticks(0).len(), 1);
+        assert_eq!(plain.path_ticks(0).len(), 0);
+    }
+
+    #[test]
+    fn bonded_worker_splits_bits_and_arrives_no_later() {
+        let fast = Link::new(BandwidthTrace::constant(1e8), 0.1);
+        let slow = Link::new(BandwidthTrace::constant(5e7), 0.1);
+        let mut solo_fabric = Fabric::replicate(fast.clone(), 2);
+        solo_fabric.set_link(1, fast.clone()); // keep it non-trivial
+        let mut bonded_fabric = solo_fabric.clone();
+        bonded_fabric
+            .set_bond(0, Bond::new(vec![fast.clone(), slow.clone()]));
+        let mut solo = VirtualClock::new(solo_fabric);
+        let mut bonded = VirtualClock::new(bonded_fabric);
+        let bits = 6_000_000u64;
+        for _ in 0..30 {
+            let a = solo.tick(0.05, 1, bits);
+            let b = bonded.tick(0.05, 1, bits);
+            // an extra path can only help: bonded sync arrival <= solo's
+            assert!(b.tc <= a.tc + 1e-9, "{} vs {}", b.tc, a.tc);
+            // the water-filling shares add up to the payload
+            let pts = bonded.path_ticks(0);
+            assert_eq!(pts.len(), 2);
+            let total: f64 = pts.iter().map(|p| p.bits).sum();
+            assert!((total - bits as f64).abs() < 1e-6 * bits as f64 + 1.0);
+            // both paths pulled their weight (2:1 bandwidth ratio)
+            assert!(pts[0].bits > pts[1].bits);
+            assert!(pts[1].bits > 0.0);
+        }
+        // worker tx_secs sums the per-path wire time: with both paths busy
+        // it exceeds any single path's share duration
+        let wt = bonded.worker_ticks()[0];
+        let pts = bonded.path_ticks(0);
+        assert!((wt.tx_secs - (pts[0].tx_secs + pts[1].tx_secs)).abs() < 1e-12);
     }
 }

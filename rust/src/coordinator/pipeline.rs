@@ -296,12 +296,15 @@ impl<O: GradOracle> TrainLoop<O> {
             .map(|i| WorkerState::new(i, dim, params.seed ^ 0x77))
             .collect();
         let s_g = params.s_g_override.unwrap_or(dim as f64 * 32.0);
-        let monitor = FabricMonitor::new(n, params.monitor_alpha, params.seed);
+        // one estimator per worker *path* (single-path workers get exactly
+        // the estimator layout the pre-bonding monitor had — bit-compat)
+        let monitor =
+            FabricMonitor::for_fabric(&fabric, params.monitor_alpha, params.seed);
         let pool = match params.threads {
             Some(t) => WorkerPool::new(t),
             None => WorkerPool::with_default_parallelism(),
         };
-        let churn = params.churn.compile(n)?;
+        let churn = params.churn.compile_for(n, &fabric.paths_per_worker())?;
         churn.bake_windows(&mut fabric);
         let window_ends = churn.window_ends();
         let (region_states, wan) = match &topology {
@@ -419,7 +422,9 @@ impl<O: GradOracle> TrainLoop<O> {
                     self.monitor.set_active(worker, true);
                 }
                 ChurnEvent::LinkOutage { .. }
-                | ChurnEvent::LinkDegrade { .. } => {
+                | ChurnEvent::LinkDegrade { .. }
+                | ChurnEvent::PathOutage { .. }
+                | ChurnEvent::PathDegrade { .. } => {
                     self.membership.bump();
                 }
             }
@@ -748,17 +753,42 @@ impl<O: GradOracle> TrainLoop<O> {
             };
             // each member's link monitor observes its own transfer and
             // latency — on a static homogeneous fabric every estimator sees
-            // the same stream the former single monitor did
+            // the same stream the former single monitor did. Bonded workers
+            // observe per *path*: each path's water-filling share and busy
+            // seconds feed that path's estimator, so the worker-level
+            // (Σ bandwidth, min latency) view tracks the real aggregate
+            // (DESIGN.md §Bonding).
             if bits > 0 {
                 for (i, wt) in self.clock.worker_ticks().iter().enumerate() {
-                    if self.member_mask[i] && wt.tx_secs > 0.0 {
+                    if !self.member_mask[i] {
+                        continue;
+                    }
+                    if self.clock.fabric().bond(i).is_some() {
+                        let ticks = self.clock.path_ticks(i);
+                        for (p, pt) in ticks.iter().enumerate() {
+                            if pt.tx_secs > 0.0 {
+                                self.monitor.observe_path_transfer(
+                                    i, p, pt.bits, pt.tx_secs,
+                                );
+                            }
+                        }
+                    } else if wt.tx_secs > 0.0 {
                         self.monitor.observe_transfer(i, bits, wt.tx_secs);
                     }
                 }
             }
-            for (i, link) in self.clock.fabric().links().iter().enumerate() {
-                if self.member_mask[i] {
-                    self.monitor.observe_latency_for(i, link.latency());
+            for i in 0..n {
+                if !self.member_mask[i] {
+                    continue;
+                }
+                if let Some(bond) = self.clock.fabric().bond(i) {
+                    for (p, path) in bond.paths().iter().enumerate() {
+                        self.monitor
+                            .observe_path_latency(i, p, path.latency());
+                    }
+                } else {
+                    let lat = self.clock.fabric().link(i).latency();
+                    self.monitor.observe_latency_for(i, lat);
                 }
             }
             self.monitor.observe_compute(t_comp);

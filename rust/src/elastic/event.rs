@@ -10,6 +10,15 @@
 //! bandwidth without any per-tick bookkeeping; membership events
 //! (`Leave` / `Rejoin`) are applied by the training loop as the virtual
 //! clock passes their timestamps.
+//!
+//! On a bonded worker (DESIGN.md §Bonding), a worker-level link event
+//! explicitly means **all paths** — the whole WAN attachment is down or
+//! degraded — while the path-scoped `PathOutage` / `PathDegrade` events
+//! hit one path and leave the water-filling scheduler to shift bits onto
+//! the survivors. Path indices are validated against the fabric's path
+//! geometry at compile time ([`ChurnTimeline::validated_for`]), so a
+//! scenario naming a path the bond doesn't have fails with a clear error
+//! instead of a mid-run panic.
 
 use crate::netsim::{DegradeWindow, Fabric};
 use anyhow::{anyhow, Result};
@@ -25,10 +34,17 @@ pub enum ChurnEvent {
     /// and warm monitor estimators.
     Rejoin { worker: usize },
     /// The worker's link is down for `secs`: bandwidth pinned to the trace
-    /// floor, so in-flight transfers stall until the window ends.
+    /// floor, so in-flight transfers stall until the window ends. On a
+    /// bonded worker this means **every path** is down.
     LinkOutage { worker: usize, secs: f64 },
-    /// The worker's link runs at `frac`× bandwidth for `secs`.
+    /// The worker's link runs at `frac`× bandwidth for `secs`. On a bonded
+    /// worker this degrades **every path**.
     LinkDegrade { worker: usize, frac: f64, secs: f64 },
+    /// One path of a bonded worker is down for `secs`; the water-filling
+    /// scheduler shifts its bits to the surviving paths.
+    PathOutage { worker: usize, path: usize, secs: f64 },
+    /// One path of a bonded worker runs at `frac`× bandwidth for `secs`.
+    PathDegrade { worker: usize, path: usize, frac: f64, secs: f64 },
 }
 
 impl ChurnEvent {
@@ -37,7 +53,9 @@ impl ChurnEvent {
             Self::Leave { worker }
             | Self::Rejoin { worker }
             | Self::LinkOutage { worker, .. }
-            | Self::LinkDegrade { worker, .. } => worker,
+            | Self::LinkDegrade { worker, .. }
+            | Self::PathOutage { worker, .. }
+            | Self::PathDegrade { worker, .. } => worker,
         }
     }
 }
@@ -69,13 +87,27 @@ impl ChurnTimeline {
         Self { events }
     }
 
-    /// Sort and validate against a run with `n` workers: worker indices in
-    /// range, finite non-negative times, positive durations, alternating
-    /// leave/rejoin per worker, and — the invariant the whole coordinator
-    /// leans on — the active set never empties.
+    /// Sort and validate against a run with `n` single-path workers: worker
+    /// indices in range, finite non-negative times, positive durations,
+    /// alternating leave/rejoin per worker, and — the invariant the whole
+    /// coordinator leans on — the active set never empties. Path-scoped
+    /// events may only name path 0 here; use [`Self::validated_for`] with
+    /// the fabric's real path geometry for bonded runs.
     pub fn validated(events: Vec<TimedEvent>, n: usize) -> Result<Self> {
+        Self::validated_for(events, n, &vec![1; n])
+    }
+
+    /// [`Self::validated`] against an explicit path geometry: `paths[w]`
+    /// is worker `w`'s path count, and a path-scoped event naming a path
+    /// index `>= paths[w]` is rejected here — at compile time, with a
+    /// clear error — rather than panicking mid-run.
+    pub fn validated_for(
+        events: Vec<TimedEvent>,
+        n: usize,
+        paths: &[usize],
+    ) -> Result<Self> {
         let tl = Self::new(events);
-        tl.validate(n)?;
+        tl.validate(n, paths)?;
         Ok(tl)
     }
 
@@ -87,7 +119,8 @@ impl ChurnTimeline {
         self.events.is_empty()
     }
 
-    fn validate(&self, n: usize) -> Result<()> {
+    fn validate(&self, n: usize, paths: &[usize]) -> Result<()> {
+        assert_eq!(paths.len(), n, "one path count per worker");
         let mut active = vec![true; n];
         let mut count = n;
         for ev in &self.events {
@@ -143,6 +176,39 @@ impl ChurnTimeline {
                         return Err(anyhow!("degrade frac {frac} invalid"));
                     }
                 }
+                ChurnEvent::PathOutage { path, secs, .. } => {
+                    if path >= paths[w] {
+                        return Err(anyhow!(
+                            "churn event names path {path} on worker {w} \
+                             but it has {} path(s)",
+                            paths[w]
+                        ));
+                    }
+                    if !(secs.is_finite() && secs > 0.0) {
+                        return Err(anyhow!(
+                            "path outage duration {secs} invalid"
+                        ));
+                    }
+                }
+                ChurnEvent::PathDegrade { path, frac, secs, .. } => {
+                    if path >= paths[w] {
+                        return Err(anyhow!(
+                            "churn event names path {path} on worker {w} \
+                             but it has {} path(s)",
+                            paths[w]
+                        ));
+                    }
+                    if !(secs.is_finite() && secs > 0.0) {
+                        return Err(anyhow!(
+                            "path degrade duration {secs} invalid"
+                        ));
+                    }
+                    if !(frac.is_finite() && (0.0..=1.0).contains(&frac)) {
+                        return Err(anyhow!(
+                            "path degrade frac {frac} invalid"
+                        ));
+                    }
+                }
             }
         }
         Ok(())
@@ -150,8 +216,20 @@ impl ChurnTimeline {
 
     /// The degrade/outage windows this schedule puts on `worker`'s link
     /// (outages are `frac = 0` windows — the trace floor keeps the link
-    /// integrable).
+    /// integrable). On a bonded worker this is path 0's view; see
+    /// [`Self::path_windows_for`].
     pub fn windows_for(&self, worker: usize) -> Vec<DegradeWindow> {
+        self.path_windows_for(worker, 0)
+    }
+
+    /// The windows landing on path `path` of `worker`: every worker-level
+    /// link event (the whole attachment is down, so **all** paths get the
+    /// window) plus the path-scoped events naming exactly this path.
+    pub fn path_windows_for(
+        &self,
+        worker: usize,
+        path: usize,
+    ) -> Vec<DegradeWindow> {
         self.events
             .iter()
             .filter_map(|ev| match ev.event {
@@ -171,6 +249,24 @@ impl ChurnTimeline {
                         frac,
                     })
                 }
+                ChurnEvent::PathOutage { worker: w, path: p, secs }
+                    if w == worker && p == path =>
+                {
+                    Some(DegradeWindow {
+                        start_s: ev.t,
+                        end_s: ev.t + secs,
+                        frac: 0.0,
+                    })
+                }
+                ChurnEvent::PathDegrade { worker: w, path: p, frac, secs }
+                    if w == worker && p == path =>
+                {
+                    Some(DegradeWindow {
+                        start_s: ev.t,
+                        end_s: ev.t + secs,
+                        frac,
+                    })
+                }
                 _ => None,
             })
             .collect()
@@ -179,12 +275,29 @@ impl ChurnTimeline {
     /// Bake every outage/degrade window into the fabric's links, so the
     /// clock's transfer integration, the per-link monitors, and the
     /// bottleneck/mean fabric views all see the same time-varying picture.
+    /// Bonded workers get their windows baked per path, so a path-scoped
+    /// fault shifts bits to the survivors while a worker-level fault takes
+    /// the whole attachment down.
     pub fn bake_windows(&self, fabric: &mut Fabric) {
         for w in 0..fabric.workers() {
-            let wins = self.windows_for(w);
-            if !wins.is_empty() {
-                let link = fabric.link(w).with_windows(wins);
-                fabric.set_link(w, link);
+            if let Some(mut bond) = fabric.bond(w).cloned() {
+                let mut touched = false;
+                for p in 0..bond.k() {
+                    let wins = self.path_windows_for(w, p);
+                    if !wins.is_empty() {
+                        bond = bond.with_path_windows(p, wins);
+                        touched = true;
+                    }
+                }
+                if touched {
+                    fabric.set_bond(w, bond);
+                }
+            } else {
+                let wins = self.windows_for(w);
+                if !wins.is_empty() {
+                    let link = fabric.link(w).with_windows(wins);
+                    fabric.set_link(w, link);
+                }
             }
         }
     }
@@ -198,7 +311,9 @@ impl ChurnTimeline {
             .iter()
             .filter_map(|ev| match ev.event {
                 ChurnEvent::LinkOutage { secs, .. }
-                | ChurnEvent::LinkDegrade { secs, .. } => Some(ev.t + secs),
+                | ChurnEvent::LinkDegrade { secs, .. }
+                | ChurnEvent::PathOutage { secs, .. }
+                | ChurnEvent::PathDegrade { secs, .. } => Some(ev.t + secs),
                 _ => None,
             })
             .collect();
@@ -292,5 +407,109 @@ mod tests {
         assert_eq!(fabric.link(0).bandwidth_at(12.0), 1e8);
         assert!(fabric.link(0).trace().as_constant().is_some());
         assert!(fabric.link(1).trace().as_constant().is_none());
+    }
+
+    #[test]
+    fn path_events_validate_against_the_path_geometry() {
+        let path_outage = |t: f64, worker: usize, path: usize| TimedEvent {
+            t,
+            event: ChurnEvent::PathOutage { worker, path, secs: 5.0 },
+        };
+        // worker 0 has 2 paths, worker 1 has 1
+        let paths = vec![2usize, 1];
+        assert!(ChurnTimeline::validated_for(
+            vec![path_outage(1.0, 0, 1)],
+            2,
+            &paths
+        )
+        .is_ok());
+        // naming a path the bond doesn't have fails at compile time
+        let err = ChurnTimeline::validated_for(
+            vec![path_outage(1.0, 0, 2)],
+            2,
+            &paths,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("path 2"), "{err}");
+        assert!(ChurnTimeline::validated_for(
+            vec![path_outage(1.0, 1, 1)],
+            2,
+            &paths
+        )
+        .is_err());
+        // the single-path entry point only admits path 0
+        assert!(
+            ChurnTimeline::validated(vec![path_outage(1.0, 0, 1)], 2).is_err()
+        );
+        assert!(
+            ChurnTimeline::validated(vec![path_outage(1.0, 0, 0)], 2).is_ok()
+        );
+        // degenerate path-event params are rejected too
+        let bad_frac = TimedEvent {
+            t: 1.0,
+            event: ChurnEvent::PathDegrade {
+                worker: 0,
+                path: 0,
+                frac: 1.5,
+                secs: 5.0,
+            },
+        };
+        assert!(
+            ChurnTimeline::validated_for(vec![bad_frac], 2, &paths).is_err()
+        );
+    }
+
+    #[test]
+    fn worker_level_events_hit_every_path_and_path_events_only_theirs() {
+        use crate::netsim::Bond;
+        let tl = ChurnTimeline::validated_for(
+            vec![
+                TimedEvent {
+                    t: 10.0,
+                    event: ChurnEvent::LinkOutage { worker: 0, secs: 5.0 },
+                },
+                TimedEvent {
+                    t: 30.0,
+                    event: ChurnEvent::PathDegrade {
+                        worker: 0,
+                        path: 1,
+                        frac: 0.25,
+                        secs: 10.0,
+                    },
+                },
+            ],
+            2,
+            &[2, 1],
+        )
+        .unwrap();
+        // the worker-level outage lands on both paths; the path-scoped
+        // degrade only on path 1
+        assert_eq!(tl.path_windows_for(0, 0).len(), 1);
+        assert_eq!(tl.path_windows_for(0, 1).len(), 2);
+        assert!(tl.path_windows_for(1, 0).is_empty());
+        assert_eq!(tl.window_ends(), vec![15.0, 40.0]);
+
+        let mut fabric = Fabric::replicate(
+            Link::new(BandwidthTrace::constant(1e8), 0.1),
+            2,
+        );
+        fabric.set_bond(
+            0,
+            Bond::new(vec![
+                Link::new(BandwidthTrace::constant(1e8), 0.1),
+                Link::new(BandwidthTrace::constant(4e7), 0.1),
+            ]),
+        );
+        tl.bake_windows(&mut fabric);
+        let bond = fabric.bond(0).unwrap();
+        // during the worker-level outage both paths sit on the floor
+        assert_eq!(bond.path(0).bandwidth_at(12.0), 1e3);
+        assert_eq!(bond.path(1).bandwidth_at(12.0), 1e3);
+        // during the path-scoped degrade only path 1 is hit
+        assert_eq!(bond.path(0).bandwidth_at(35.0), 1e8);
+        assert_eq!(bond.path(1).bandwidth_at(35.0), 1e7);
+        // healthy otherwise; the unbonded worker is untouched
+        assert_eq!(bond.path(1).bandwidth_at(50.0), 4e7);
+        assert_eq!(fabric.link(1).bandwidth_at(12.0), 1e8);
     }
 }

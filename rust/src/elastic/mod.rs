@@ -8,7 +8,9 @@
 //! environment a first-class scenario family:
 //!
 //! * [`ChurnEvent`] — `Leave` / `Rejoin` / `LinkOutage` / `LinkDegrade`,
-//!   stamped with virtual times into a [`ChurnTimeline`];
+//!   plus the path-scoped `PathOutage` / `PathDegrade` for bonded workers
+//!   (DESIGN.md §Bonding), stamped with virtual times into a
+//!   [`ChurnTimeline`];
 //! * [`ChurnSpec`] — the serde scenario layer (mirroring
 //!   `config::FabricSpec`): `none`, `scripted` event lists, or seeded
 //!   `random` churn compiled deterministically into a timeline;

@@ -49,12 +49,24 @@ impl ChurnSpec {
     }
 
     /// Compile into the validated, time-sorted timeline a run with `n`
-    /// workers executes.
+    /// single-path workers executes. Bonded runs use
+    /// [`Self::compile_for`] so path-scoped events are checked against the
+    /// fabric's real path geometry.
     pub fn compile(&self, n: usize) -> Result<ChurnTimeline> {
+        self.compile_for(n, &vec![1; n])
+    }
+
+    /// [`Self::compile`] against an explicit path geometry (`paths[w]` =
+    /// worker `w`'s path count, from `Fabric::paths_per_worker`).
+    pub fn compile_for(
+        &self,
+        n: usize,
+        paths: &[usize],
+    ) -> Result<ChurnTimeline> {
         match self {
             Self::None => Ok(ChurnTimeline::empty()),
             Self::Scripted { events } => {
-                ChurnTimeline::validated(events.clone(), n)
+                ChurnTimeline::validated_for(events.clone(), n, paths)
             }
             Self::Random {
                 leave_rate_per_100s,

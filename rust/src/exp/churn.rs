@@ -99,6 +99,7 @@ fn base_fabric(workers: usize) -> anyhow::Result<Fabric> {
         latency_s: BASE_LAT,
         fabric: FabricSpec::Straggler { frac: STRAG_FRAC, mult: STRAG_MULT },
         topology: crate::config::TopologySpec::Flat,
+        bonds: Vec::new(),
     };
     net.build_fabric(workers)
 }

@@ -72,6 +72,7 @@ pub fn severity_fabric(
         latency_s: BASE_LAT,
         fabric: fabric_spec,
         topology: crate::config::TopologySpec::Flat,
+        bonds: Vec::new(),
     };
     net.build_fabric(workers)
 }

@@ -21,8 +21,12 @@
 //! | topo   | region count × WAN:LAN ratio on the hierarchical |
 //! |        | multi-datacenter topology: two-tier DeCo vs the  |
 //! |        | flat shared-egress star (beyond the paper)       |
+//! | bonded | multi-path bonding vs single-homing under outage |
+//! |        | churn: water-filling failover degrades where a   |
+//! |        | single path stalls (beyond the paper)            |
 
 pub mod ablation;
+pub mod bonded;
 pub mod churn;
 pub mod fig1;
 pub mod fig2;

@@ -120,8 +120,10 @@ fn network(n: usize, regions: usize, ratio: f64, flat: bool) -> NetworkConfig {
             TopologySpec::TwoTier {
                 wan_trace: TraceKind::Constant { bps: a_wan },
                 wan_latency_s: B_WAN,
+                region_wan: Vec::new(),
             }
         },
+        bonds: Vec::new(),
     }
 }
 

@@ -2,7 +2,8 @@
 //! vendored crate set has no clap).
 //!
 //! ```text
-//! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|hetero|churn|topo|all>
+//! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|hetero|churn|topo|
+//!            bonded|all>
 //!           [--scale F] [--tasks t1 t2] [--nodes 4 8] [--workers N]
 //!           [--task NAME] [--t-comp F] [--mult F] [--seed N]
 //! repro train --config cfg.json [--out run.csv]
@@ -73,7 +74,7 @@ USAGE:
   repro exp <id> [--scale F] [--tasks T..] [--nodes N..] [--workers N]
                  [--task NAME] [--t-comp F] [--mult F] [--seed N]
       ids: fig1 fig2 fig4 fig5 fig6 table1 thm3 phi ablation hetero churn
-           topo all
+           topo bonded all
       hetero: straggler severity x strategy sweep on a per-worker fabric
               (--workers N, --mult F = straggler latency multiplier)
       churn:  worker churn x link outages x strategy on the elastic fabric —
@@ -82,6 +83,9 @@ USAGE:
       topo:   region count x WAN:LAN bandwidth ratio on the hierarchical
               multi-datacenter topology — two-tier DeCo vs the flat
               shared-egress star (--workers N, default 8)
+      bonded: multi-path bonding vs single-homing under fast-path outages —
+              water-filling failover degrades where a single path stalls
+              (--workers N, --seed N)
   repro train --config cfg.json [--out run.csv]
   repro deco --a BPS --b SECONDS --t-comp SECONDS --s-g BITS
   repro artifacts
@@ -140,6 +144,10 @@ fn main() -> Result<()> {
                     // the 4-region rows keep 2 members per region
                     let workers = args.flag_usize("workers").unwrap_or(8);
                     exp::topo::main(scale, workers)?;
+                }
+                "bonded" => {
+                    let seed = args.flag_usize("seed").unwrap_or(7) as u64;
+                    exp::bonded::main(scale, workers, seed)?;
                 }
                 "all" => {
                     exp::fig1::main(t_comp)?;

@@ -1,0 +1,332 @@
+//! Bonded multi-path transport: one worker, k WAN paths, one payload
+//! (DESIGN.md §Bonding).
+//!
+//! A `Bond` aggregates several unreliable per-worker links (e.g. a
+//! cellular-like OU path plus a stable low-bandwidth path) into a single
+//! resilient transport. The water-filling scheduler splits a gradient's
+//! bits across the paths so every path's share *arrives* at the same
+//! moment: the bonded arrival is the earliest `T` where
+//! `Σ_p B_p(start_p, max(start_p, T − b_p)) ≥ bits`, with `B_p` the exact
+//! cumulative-bandwidth integral from `netsim::trace` and `b_p` the path
+//! latency. The sum is monotone nondecreasing in `T`, so `T` is found by
+//! bracketed bisection run to full f64 resolution — O(k log n) per
+//! schedule on the stochastic grids, closed-form integrals elsewhere.
+//!
+//! Degenerate contracts: a k = 1 bond delegates straight to
+//! `Link::transfer_end` (no bisection), so it is bit-identical to the
+//! single-link path the rest of the simulator prices; `bits = 0` arrives
+//! after the smallest `start + latency` with every path idle. A path
+//! under a full outage window still "carries" its 1 kbps floor trickle —
+//! the same stall-not-die clamp single links use — so the schedule
+//! degrades to the surviving paths' capacity instead of freezing.
+
+use crate::netsim::{DegradeWindow, Link};
+
+/// k per-worker WAN paths priced as one transport.
+#[derive(Clone, Debug)]
+pub struct Bond {
+    paths: Vec<Link>,
+}
+
+/// One bonded transfer, fully resolved: the common arrival plus the
+/// per-path split the water-filling scheduler chose.
+#[derive(Clone, Debug)]
+pub struct BondSchedule {
+    /// When the receiver holds the full payload (all shares land here).
+    pub arrival: f64,
+    /// Per-path transmission end times (the path's next busy-from time).
+    pub tx_end: Vec<f64>,
+    /// Per-path bit shares; Σ equals the payload (±1e-6 relative).
+    pub bits: Vec<f64>,
+    /// Per-path busy seconds (0 for a path that carried nothing).
+    pub tx_secs: Vec<f64>,
+}
+
+impl Bond {
+    pub fn new(paths: Vec<Link>) -> Self {
+        assert!(!paths.is_empty(), "a bond needs at least one path");
+        Self { paths }
+    }
+
+    /// The degenerate one-path bond (bit-identical to the bare link).
+    pub fn single(link: Link) -> Self {
+        Self::new(vec![link])
+    }
+
+    pub fn k(&self) -> usize {
+        self.paths.len()
+    }
+
+    pub fn paths(&self) -> &[Link] {
+        &self.paths
+    }
+
+    pub fn path(&self, p: usize) -> &Link {
+        &self.paths[p]
+    }
+
+    /// A copy with fault windows baked into path `p` only — the failover
+    /// primitive `elastic` uses for path-scoped churn events.
+    pub fn with_path_windows(
+        &self,
+        p: usize,
+        windows: Vec<DegradeWindow>,
+    ) -> Bond {
+        let mut paths = self.paths.clone();
+        paths[p] = paths[p].with_windows(windows);
+        Bond::new(paths)
+    }
+
+    /// The lowest path latency — the bonded latency view DeCo plans on
+    /// (the first share can arrive this soon after its send).
+    pub fn min_latency(&self) -> f64 {
+        self.paths
+            .iter()
+            .map(Link::latency)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Aggregate instantaneous bandwidth `Σ_p a_p(t)`.
+    pub fn bandwidth_at(&self, t: f64) -> f64 {
+        self.paths.iter().map(|p| p.bandwidth_at(t)).sum()
+    }
+
+    /// Water-fill `bits` across the paths, path `p` free from
+    /// `starts[p]`: every share arrives at the common `arrival`.
+    pub fn schedule(&self, starts: &[f64], bits: u64) -> BondSchedule {
+        let k = self.paths.len();
+        assert_eq!(starts.len(), k, "one start per path");
+        if k == 1 {
+            // bit-identity contract: no bisection, the bare link's answer
+            let link = &self.paths[0];
+            let tm = link.transfer_end(starts[0], bits);
+            return BondSchedule {
+                arrival: tm + link.latency(),
+                tx_end: vec![tm],
+                bits: vec![bits as f64],
+                tx_secs: vec![if bits > 0 { tm - starts[0] } else { 0.0 }],
+            };
+        }
+        let first_arrival = starts
+            .iter()
+            .zip(&self.paths)
+            .map(|(&s, p)| s + p.latency())
+            .fold(f64::INFINITY, f64::min);
+        if bits == 0 {
+            return BondSchedule {
+                arrival: first_arrival,
+                tx_end: starts.to_vec(),
+                bits: vec![0.0; k],
+                tx_secs: vec![0.0; k],
+            };
+        }
+        let bits_f = bits as f64;
+        let covered = |t: f64| -> f64 {
+            let mut sum = 0.0;
+            for (p, link) in self.paths.iter().enumerate() {
+                let end = (t - link.latency()).max(starts[p]);
+                sum += link.trace().bits_over(starts[p], end);
+            }
+            sum
+        };
+        // Bracket: no path has sent anything at the first possible
+        // arrival (lo), and the best path ALONE covers the payload by its
+        // own single-path arrival (hi) — so the earliest covering T lies
+        // in [lo, hi]. Bisect to full f64 resolution: a coarser tolerance
+        // would leave a k·rate·ε bits-conservation error behind.
+        let mut lo = first_arrival;
+        let mut hi = self
+            .paths
+            .iter()
+            .enumerate()
+            .map(|(p, l)| l.transfer_end(starts[p], bits) + l.latency())
+            .fold(f64::INFINITY, f64::min)
+            .max(lo);
+        while hi > lo {
+            let mid = 0.5 * (lo + hi);
+            if mid <= lo || mid >= hi {
+                break;
+            }
+            if covered(mid) >= bits_f {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        let arrival = hi;
+        let mut tx_end = Vec::with_capacity(k);
+        let mut shares = Vec::with_capacity(k);
+        let mut tx_secs = Vec::with_capacity(k);
+        for (p, link) in self.paths.iter().enumerate() {
+            let end = (arrival - link.latency()).max(starts[p]);
+            let share = link.trace().bits_over(starts[p], end);
+            tx_end.push(end);
+            tx_secs.push(if share > 0.0 { end - starts[p] } else { 0.0 });
+            shares.push(share);
+        }
+        BondSchedule { arrival, tx_end, bits: shares, tx_secs }
+    }
+
+    /// `schedule` with every path free from the same `start`; returns the
+    /// common arrival.
+    pub fn arrival(&self, start: f64, bits: u64) -> f64 {
+        let starts = vec![start; self.paths.len()];
+        self.schedule(&starts, bits).arrival
+    }
+
+    /// `schedule` with a common `start`; returns the last transmission
+    /// end across the paths (the bonded analogue of
+    /// `Link::transfer_end`).
+    pub fn transfer_end(&self, start: f64, bits: u64) -> f64 {
+        let starts = vec![start; self.paths.len()];
+        self.schedule(&starts, bits)
+            .tx_end
+            .into_iter()
+            .fold(start, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{BandwidthTrace, TraceKind};
+
+    fn sine(mean: f64, amp: f64, period: f64, lat: f64) -> Link {
+        Link::new(
+            BandwidthTrace::new(TraceKind::Sine {
+                mean_bps: mean,
+                amp_bps: amp,
+                period_s: period,
+            }),
+            lat,
+        )
+    }
+
+    #[test]
+    fn k1_bond_is_bit_identical_to_the_bare_link() {
+        for link in [
+            Link::new(BandwidthTrace::constant(1e8), 0.1),
+            sine(5e7, 2e7, 3.0, 0.25),
+        ] {
+            let bond = Bond::single(link.clone());
+            for bits in [0u64, 1, 4_000_000, 900_000_000] {
+                for start in [0.0, 1.75, 42.0] {
+                    let s = bond.schedule(&[start], bits);
+                    assert_eq!(
+                        s.tx_end[0].to_bits(),
+                        link.transfer_end(start, bits).to_bits()
+                    );
+                    assert_eq!(
+                        s.arrival.to_bits(),
+                        link.arrival(start, bits).to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identical_paths_split_evenly_and_halve_the_transfer() {
+        let link = Link::new(BandwidthTrace::constant(1e8), 0.1);
+        let bond = Bond::new(vec![link.clone(), link.clone()]);
+        let bits = 200_000_000u64;
+        let s = bond.schedule(&[0.0, 0.0], bits);
+        // each path carries half the payload in half the solo time
+        let solo = link.arrival(0.0, bits);
+        let tol = 1e-6 * bits as f64 + 1.0;
+        assert!((s.bits[0] - s.bits[1]).abs() < tol);
+        assert!((s.bits[0] + s.bits[1] - bits as f64).abs() < tol);
+        let expect = 0.5 * (solo - 0.1) + 0.1;
+        assert!(
+            (s.arrival - expect).abs() < 1e-6,
+            "arrival {} != halved {expect}",
+            s.arrival
+        );
+    }
+
+    #[test]
+    fn slow_path_carries_its_bandwidth_share() {
+        let fast = Link::new(BandwidthTrace::constant(8e7), 0.1);
+        let slow = Link::new(BandwidthTrace::constant(2e7), 0.1);
+        let bits = 100_000_000u64;
+        let s = Bond::new(vec![fast, slow]).schedule(&[0.0, 0.0], bits);
+        // equal latencies, constant rates: shares follow the rate ratio
+        // and the bonded pipe behaves like one 100 Mbps link
+        assert!((s.bits[0] / s.bits[1] - 4.0).abs() < 1e-6);
+        assert!((s.arrival - (1.0 + 0.1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn outage_window_shifts_the_payload_to_the_survivor() {
+        let flaky = Link::new(
+            BandwidthTrace::constant(1e8).windowed(vec![DegradeWindow {
+                start_s: 0.0,
+                end_s: 1e4,
+                frac: 0.0,
+            }]),
+            0.05,
+        );
+        let stable = Link::new(BandwidthTrace::constant(2e7), 0.3);
+        let bits = 40_000_000u64;
+        let bond = Bond::new(vec![flaky.clone(), stable.clone()]);
+        let s = bond.schedule(&[0.0, 0.0], bits);
+        // the flaky path contributes only its 1 kbps floor trickle
+        assert!(s.bits[0] < 1e4, "outaged path carried {}", s.bits[0]);
+        assert!(s.bits[1] > bits as f64 - 1e4);
+        let solo = stable.arrival(0.0, bits);
+        assert!(
+            s.arrival <= solo + 1e-9,
+            "failover arrival {} worse than survivor alone {solo}",
+            s.arrival
+        );
+        // and the all-paths-out bond stalls at k x floor, not forever
+        let both = Bond::new(vec![
+            flaky.clone(),
+            Link::new(
+                BandwidthTrace::constant(2e7).windowed(vec![DegradeWindow {
+                    start_s: 0.0,
+                    end_s: 1e4,
+                    frac: 0.0,
+                }]),
+                0.3,
+            ),
+        ]);
+        let stalled = both.schedule(&[0.0, 0.0], 10_000u64);
+        assert!(stalled.arrival > 4.0, "2 kbps floor must gate the stall");
+    }
+
+    #[test]
+    fn zero_bits_arrive_on_the_fastest_latency() {
+        let bond = Bond::new(vec![
+            Link::new(BandwidthTrace::constant(1e8), 0.4),
+            Link::new(BandwidthTrace::constant(1e6), 0.07),
+        ]);
+        let s = bond.schedule(&[2.0, 3.0], 0);
+        assert_eq!(s.arrival.to_bits(), (3.0 + 0.07f64).to_bits());
+        assert_eq!(s.bits, vec![0.0, 0.0]);
+        assert_eq!(s.tx_end, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn bits_conserved_on_varying_traces_and_staggered_starts() {
+        let bond = Bond::new(vec![
+            sine(9e7, 3e7, 4.0, 0.12),
+            sine(3e7, 1e7, 11.0, 0.02),
+            Link::new(BandwidthTrace::constant(1.5e7), 0.3),
+        ]);
+        for bits in [50_000u64, 7_000_000, 600_000_000] {
+            let s = bond.schedule(&[1.0, 6.5, 2.25], bits);
+            let total: f64 = s.bits.iter().sum();
+            let tol = 1e-6 * bits as f64 + 1.0;
+            assert!(
+                (total - bits as f64).abs() < tol,
+                "split sums to {total}, payload {bits}"
+            );
+            for p in 0..3 {
+                // no share arrives after the common arrival
+                let lat = bond.path(p).latency();
+                assert!(s.tx_end[p] + lat <= s.arrival + 1e-9);
+            }
+        }
+    }
+}

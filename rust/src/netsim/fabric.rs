@@ -11,12 +11,17 @@
 //! path (enforced by `tests/fabric.rs`); `exp hetero` quantifies how much
 //! bottleneck-aware planning recovers under a straggler.
 
+use super::bond::Bond;
 use super::link::Link;
 use super::trace::BandwidthTrace;
 
 #[derive(Clone, Debug)]
 pub struct Fabric {
     links: Vec<Link>,
+    /// per-worker multi-path bonds (DESIGN.md §Bonding); `None` everywhere
+    /// on a classic single-path fabric. A bonded worker's `links` entry
+    /// mirrors its path 0, so legacy single-link views stay meaningful.
+    bonds: Vec<Option<Bond>>,
     /// every link shares one trace config and latency — cached at
     /// construction so hot paths (`sync_arrival`, the virtual clock) can
     /// price one transfer instead of n when the answer is provably shared
@@ -27,7 +32,8 @@ impl Fabric {
     pub fn new(links: Vec<Link>) -> Self {
         assert!(!links.is_empty());
         let uniform = Self::compute_uniform(&links);
-        Self { links, uniform }
+        let bonds = vec![None; links.len()];
+        Self { links, bonds, uniform }
     }
 
     fn compute_uniform(links: &[Link]) -> bool {
@@ -102,7 +108,47 @@ impl Fabric {
     /// setup-path operation (window baking, re-wiring), never per-tick.
     pub fn set_link(&mut self, worker: usize, link: Link) {
         self.links[worker] = link;
-        self.uniform = Self::compute_uniform(&self.links);
+        self.uniform = !self.has_bonds() && Self::compute_uniform(&self.links);
+    }
+
+    /// Attach a multi-path [`Bond`] to one worker. The worker's `links`
+    /// entry is re-pointed at the bond's path 0 so single-link views keep
+    /// working; any bond takes the fabric off the uniform fast path (its
+    /// pricing is genuinely per-worker).
+    pub fn set_bond(&mut self, worker: usize, bond: Bond) {
+        self.links[worker] = bond.path(0).clone();
+        self.bonds[worker] = Some(bond);
+        self.uniform = false;
+    }
+
+    pub fn bond(&self, worker: usize) -> Option<&Bond> {
+        self.bonds[worker].as_ref()
+    }
+
+    pub fn has_bonds(&self) -> bool {
+        self.bonds.iter().any(Option::is_some)
+    }
+
+    /// Path count per worker: 1 for classic single-link workers, the
+    /// bond's k otherwise — the geometry churn validation and the monitor
+    /// are built against.
+    pub fn paths_per_worker(&self) -> Vec<usize> {
+        (0..self.links.len())
+            .map(|i| self.bonds[i].as_ref().map_or(1, Bond::k))
+            .collect()
+    }
+
+    /// One worker's effective `(bandwidth, latency)` view at time `t`:
+    /// the bare link for single-path workers, the bonded aggregate
+    /// (Σ path bandwidth, min path latency) otherwise.
+    fn worker_view(&self, worker: usize, t: f64) -> (f64, f64) {
+        match &self.bonds[worker] {
+            Some(b) => (b.bandwidth_at(t), b.min_latency()),
+            None => {
+                let l = &self.links[worker];
+                (l.bandwidth_at(t), l.latency())
+            }
+        }
     }
 
     /// Arrival time of the synchronous aggregation: max over per-worker
@@ -113,24 +159,24 @@ impl Fabric {
         if self.uniform {
             return self.links[0].arrival(start, bits);
         }
-        self.links
-            .iter()
-            .map(|l| l.arrival(start, bits))
+        (0..self.links.len())
+            .map(|i| match &self.bonds[i] {
+                Some(b) => b.arrival(start, bits),
+                None => self.links[i].arrival(start, bits),
+            })
             .fold(f64::NEG_INFINITY, f64::max)
     }
 
     /// The bottleneck link's parameters at time `t` — what DeCo should plan
-    /// with under heterogeneity (min bandwidth, max latency).
+    /// with under heterogeneity (min bandwidth, max latency). A bonded
+    /// worker contributes its aggregate view (Σ path bandwidth, min path
+    /// latency).
     pub fn bottleneck(&self, t: f64) -> (f64, f64) {
-        let a = self
-            .links
-            .iter()
-            .map(|l| l.bandwidth_at(t))
+        let a = (0..self.links.len())
+            .map(|i| self.worker_view(i, t).0)
             .fold(f64::INFINITY, f64::min);
-        let b = self
-            .links
-            .iter()
-            .map(|l| l.latency())
+        let b = (0..self.links.len())
+            .map(|i| self.worker_view(i, t).1)
             .fold(f64::NEG_INFINITY, f64::max);
         (a, b)
     }
@@ -139,8 +185,14 @@ impl Fabric {
     /// controller would plan with (the `exp hetero` control arm).
     pub fn mean(&self, t: f64) -> (f64, f64) {
         let n = self.links.len() as f64;
-        let a = self.links.iter().map(|l| l.bandwidth_at(t)).sum::<f64>() / n;
-        let b = self.links.iter().map(|l| l.latency()).sum::<f64>() / n;
+        let a = (0..self.links.len())
+            .map(|i| self.worker_view(i, t).0)
+            .sum::<f64>()
+            / n;
+        let b = (0..self.links.len())
+            .map(|i| self.worker_view(i, t).1)
+            .sum::<f64>()
+            / n;
         (a, b)
     }
 
@@ -151,10 +203,11 @@ impl Fabric {
     pub fn bottleneck_active(&self, t: f64, active: &[bool]) -> (f64, f64) {
         assert_eq!(active.len(), self.links.len());
         let (mut a, mut b) = (f64::INFINITY, f64::NEG_INFINITY);
-        for (link, &on) in self.links.iter().zip(active) {
+        for (i, &on) in active.iter().enumerate() {
             if on {
-                a = a.min(link.bandwidth_at(t));
-                b = b.max(link.latency());
+                let (wa, wb) = self.worker_view(i, t);
+                a = a.min(wa);
+                b = b.max(wb);
             }
         }
         assert!(a.is_finite(), "active set must be non-empty");
@@ -166,10 +219,11 @@ impl Fabric {
     pub fn mean_active(&self, t: f64, active: &[bool]) -> (f64, f64) {
         assert_eq!(active.len(), self.links.len());
         let (mut sa, mut sb, mut n) = (0.0, 0.0, 0usize);
-        for (link, &on) in self.links.iter().zip(active) {
+        for (i, &on) in active.iter().enumerate() {
             if on {
-                sa += link.bandwidth_at(t);
-                sb += link.latency();
+                let (wa, wb) = self.worker_view(i, t);
+                sa += wa;
+                sb += wb;
                 n += 1;
             }
         }
@@ -305,5 +359,38 @@ mod tests {
         let (am, bm) = f.mean(1.0);
         assert!(am > a && am < 2e8, "mean bw between bottleneck and best");
         assert!(bm > 0.05 && bm < b, "mean latency between best and worst");
+    }
+
+    #[test]
+    fn bonds_leave_the_uniform_fast_path_and_aggregate_views() {
+        use crate::netsim::Bond;
+        let mut f = Fabric::homogeneous(3, BandwidthTrace::constant(1e8), 0.1);
+        assert!(!f.has_bonds());
+        assert_eq!(f.paths_per_worker(), vec![1, 1, 1]);
+        f.set_bond(
+            0,
+            Bond::new(vec![
+                Link::new(BandwidthTrace::constant(1e8), 0.1),
+                Link::new(BandwidthTrace::constant(5e7), 0.02),
+            ]),
+        );
+        assert!(f.has_bonds());
+        assert!(!f.is_uniform(), "bonded pricing is per-worker");
+        assert_eq!(f.paths_per_worker(), vec![2, 1, 1]);
+        assert_eq!(f.bond(0).unwrap().k(), 2);
+        assert!(f.bond(1).is_none());
+        // worker 0's aggregate: 150 Mbps, 20 ms — so the bottleneck view
+        // stays at the unbonded workers' 100 Mbps / 100 ms
+        assert_eq!(f.bottleneck(0.0), (1e8, 0.1));
+        let (am, bm) = f.mean(0.0);
+        assert!((am - (1.5e8 + 2e8) / 3.0).abs() < 1.0, "am={am}");
+        assert!((bm - (0.02 + 0.2) / 3.0).abs() < 1e-12, "bm={bm}");
+        // a bonded sync arrival beats the mirrored path-0 link alone
+        let solo = Fabric::homogeneous(3, BandwidthTrace::constant(1e8), 0.1);
+        let bits = 200_000_000;
+        assert!(f.sync_arrival(0.0, bits) <= solo.sync_arrival(0.0, bits));
+        // set_link elsewhere must not resurrect the uniform fast path
+        f.set_link(1, Link::new(BandwidthTrace::constant(1e8), 0.1));
+        assert!(!f.is_uniform());
     }
 }

@@ -4,11 +4,13 @@
 //! on, and the per-link monitors whose aggregate (a, b) estimates feed
 //! DeCo (DESIGN.md §Network-Fabric).
 
+pub mod bond;
 pub mod fabric;
 pub mod link;
 pub mod monitor;
 pub mod trace;
 
+pub use bond::{Bond, BondSchedule};
 pub use fabric::Fabric;
 pub use link::Link;
 pub use monitor::{FabricMonitor, NetworkMonitor};

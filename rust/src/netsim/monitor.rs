@@ -11,15 +11,19 @@
 //! noise to exercise DeCo's robustness (ablation `exp phi --noise`).
 //!
 //! [`NetworkMonitor`] estimates ONE link. [`FabricMonitor`] holds one
-//! estimator per worker link plus the aggregate views a strategy plans on:
-//! the monitored **bottleneck** `(min bandwidth, max latency)` — the pair
-//! that actually gates the synchronous aggregation on a
-//! [`super::Fabric`] — and the heterogeneity-blind **mean-link** view kept
-//! as the `exp hetero` control arm. With identical links every per-link
-//! estimator carries identical state, so the bottleneck aggregates are
-//! bit-identical to the former single-monitor path (DESIGN.md
-//! §Network-Fabric).
+//! estimator per worker *path* — single-path workers have exactly one,
+//! bonded workers one per path (DESIGN.md §Bonding) — plus the aggregate
+//! views a strategy plans on: each worker's effective pair is its
+//! bandwidth **sum** across paths and its **min** path latency, and the
+//! fabric-level aggregates are the monitored **bottleneck**
+//! `(min bandwidth, max latency)` over workers — the pair that actually
+//! gates the synchronous aggregation on a [`super::Fabric`] — and the
+//! heterogeneity-blind **mean-link** view kept as the `exp hetero` control
+//! arm. With identical single-path links every per-worker estimator
+//! carries identical state, so the bottleneck aggregates are bit-identical
+//! to the former single-monitor path (DESIGN.md §Network-Fabric).
 
+use super::fabric::Fabric;
 use crate::util::{Ewma, Rng};
 
 #[derive(Clone, Debug)]
@@ -98,10 +102,11 @@ impl NetworkMonitor {
     }
 }
 
-/// Per-link estimators plus the aggregate views DeCo plans on.
+/// Per-path estimators plus the aggregate views DeCo plans on.
 #[derive(Clone, Debug)]
 pub struct FabricMonitor {
-    links: Vec<NetworkMonitor>,
+    /// one estimator per worker path; single-path workers hold exactly one
+    workers: Vec<Vec<NetworkMonitor>>,
     /// compute time is a property of the iteration, not of any link
     comp: Ewma,
     /// membership mask (elastic subsystem, DESIGN.md §Elasticity): departed
@@ -111,22 +116,43 @@ pub struct FabricMonitor {
     active: Vec<bool>,
 }
 
+/// Per-path noise RNG stream: path 0 reduces exactly to the historical
+/// per-link formula, so single-path runs replay bit-identically.
+fn path_seed(seed: u64, worker: usize, path: usize) -> u64 {
+    seed ^ (worker as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+        ^ (path as u64).wrapping_mul(0xD1B54A32D192ED03)
+}
+
 impl FabricMonitor {
-    /// One estimator per worker link; each link's noise RNG stream is
-    /// derived from the run `seed` and the link index.
+    /// One single-path estimator per worker; each path's noise RNG stream
+    /// is derived from the run `seed` and the (worker, path) index.
     pub fn new(n: usize, alpha: f64, seed: u64) -> Self {
-        assert!(n > 0);
+        Self::with_paths(&vec![1; n], alpha, seed)
+    }
+
+    /// Estimators matching a fabric's path geometry: one per worker path.
+    pub fn for_fabric(fabric: &Fabric, alpha: f64, seed: u64) -> Self {
+        Self::with_paths(&fabric.paths_per_worker(), alpha, seed)
+    }
+
+    /// One estimator per worker path, `paths[w]` paths for worker `w`.
+    pub fn with_paths(paths: &[usize], alpha: f64, seed: u64) -> Self {
+        assert!(!paths.is_empty());
+        assert!(paths.iter().all(|&k| k > 0), "every worker has >= 1 path");
         Self {
-            links: (0..n)
-                .map(|i| {
-                    NetworkMonitor::new(
-                        alpha,
-                        seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
-                    )
+            workers: paths
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| {
+                    (0..k)
+                        .map(|p| {
+                            NetworkMonitor::new(alpha, path_seed(seed, i, p))
+                        })
+                        .collect()
                 })
                 .collect(),
             comp: Ewma::new(alpha),
-            active: vec![true; n],
+            active: vec![true; paths.len()],
         }
     }
 
@@ -142,81 +168,158 @@ impl FabricMonitor {
         self.active.iter().filter(|&&a| a).count()
     }
 
-    /// Apply multiplicative measurement noise to every per-link estimator.
+    /// Apply multiplicative measurement noise to every path estimator.
     pub fn with_noise(mut self, noise: f64) -> Self {
-        for m in &mut self.links {
-            m.noise = noise;
+        for w in &mut self.workers {
+            for m in w {
+                m.noise = noise;
+            }
         }
         self
     }
 
+    /// Worker count (one estimated "link" per worker, however many paths).
     pub fn links(&self) -> usize {
-        self.links.len()
+        self.workers.len()
     }
 
+    /// Worker `worker`'s path-0 estimator — the whole link on single-path
+    /// workers.
     pub fn link(&self, worker: usize) -> &NetworkMonitor {
-        &self.links[worker]
+        &self.workers[worker][0]
+    }
+
+    /// Path count for one worker.
+    pub fn paths(&self, worker: usize) -> usize {
+        self.workers[worker].len()
+    }
+
+    /// One specific path estimator of a (possibly bonded) worker.
+    pub fn path(&self, worker: usize, path: usize) -> &NetworkMonitor {
+        &self.workers[worker][path]
     }
 
     /// Worker `worker` finished a transfer of `bits` in `secs` of pure
-    /// transmission time.
+    /// transmission time (path 0 — the single-path observation).
     pub fn observe_transfer(&mut self, worker: usize, bits: u64, secs: f64) {
-        self.links[worker].observe_transfer(bits, secs);
+        self.workers[worker][0].observe_transfer(bits, secs);
     }
 
-    /// Latency sample for one worker's link.
+    /// One path of a bonded worker carried `bits` (its water-filling
+    /// share, fractional) in `secs` of pure transmission time.
+    pub fn observe_path_transfer(
+        &mut self,
+        worker: usize,
+        path: usize,
+        bits: f64,
+        secs: f64,
+    ) {
+        if secs > 0.0 && bits > 0.0 {
+            self.workers[worker][path].observe_bandwidth(bits / secs);
+        }
+    }
+
+    /// Latency sample for one worker's link (path 0).
     pub fn observe_latency_for(&mut self, worker: usize, secs: f64) {
-        self.links[worker].observe_latency(secs);
+        self.workers[worker][0].observe_latency(secs);
+    }
+
+    /// Latency sample for one path of a bonded worker.
+    pub fn observe_path_latency(
+        &mut self,
+        worker: usize,
+        path: usize,
+        secs: f64,
+    ) {
+        self.workers[worker][path].observe_latency(secs);
     }
 
     pub fn observe_compute(&mut self, secs: f64) {
         self.comp.update(secs);
     }
 
-    /// Broadcast a bandwidth probe to every link (tests / active probing).
+    /// Broadcast a bandwidth probe to every path (tests / active probing).
     pub fn observe_bandwidth(&mut self, bps: f64) {
-        for m in &mut self.links {
-            m.observe_bandwidth(bps);
+        for w in &mut self.workers {
+            for m in w {
+                m.observe_bandwidth(bps);
+            }
         }
     }
 
-    /// Broadcast a latency probe to every link (tests / active probing).
+    /// Broadcast a latency probe to every path (tests / active probing).
     pub fn observe_latency(&mut self, secs: f64) {
-        for m in &mut self.links {
-            m.observe_latency(secs);
+        for w in &mut self.workers {
+            for m in w {
+                m.observe_latency(secs);
+            }
         }
     }
 
-    /// Active links in estimator order — the stream every aggregate view
-    /// draws from.
-    fn active_monitors(&self) -> impl Iterator<Item = &NetworkMonitor> {
-        self.links
+    /// One worker's effective bandwidth estimate: the path estimate on
+    /// single-path workers, the **sum** of available path estimates on a
+    /// bonded worker (the water-filling scheduler really does extract the
+    /// aggregate rate, so DeCo should plan on it).
+    pub fn worker_bandwidth(&self, worker: usize) -> Option<f64> {
+        let paths = &self.workers[worker];
+        if paths.len() == 1 {
+            return paths[0].bandwidth();
+        }
+        let mut sum = 0.0;
+        let mut seen = false;
+        for m in paths {
+            if let Some(a) = m.bandwidth() {
+                sum += a;
+                seen = true;
+            }
+        }
+        seen.then_some(sum)
+    }
+
+    /// One worker's effective latency estimate: the path estimate on
+    /// single-path workers, the **min** over available path estimates on a
+    /// bonded worker (the first share can land that soon).
+    pub fn worker_latency(&self, worker: usize) -> Option<f64> {
+        let paths = &self.workers[worker];
+        if paths.len() == 1 {
+            return paths[0].latency();
+        }
+        paths.iter().filter_map(|m| m.latency()).reduce(f64::min)
+    }
+
+    /// Active workers' effective views in worker order — the stream every
+    /// aggregate draws from.
+    fn active_views<'a, F: Fn(usize) -> Option<f64> + 'a>(
+        &'a self,
+        view: F,
+    ) -> impl Iterator<Item = f64> + 'a {
+        self.active
             .iter()
-            .zip(self.active.iter())
+            .enumerate()
             .filter(|(_, &a)| a)
-            .map(|(m, _)| m)
+            .filter_map(move |(i, _)| view(i))
     }
 
     /// Aggregate bandwidth `a`: the monitored **bottleneck** (min over
-    /// active links with an estimate).
+    /// active workers with an estimate).
     pub fn bandwidth(&self) -> Option<f64> {
-        self.active_monitors().filter_map(|m| m.bandwidth()).reduce(f64::min)
+        self.active_views(|i| self.worker_bandwidth(i)).reduce(f64::min)
     }
 
     /// Aggregate latency `b`: the monitored **bottleneck** (max over active
-    /// links with an estimate).
+    /// workers with an estimate).
     pub fn latency(&self) -> Option<f64> {
-        self.active_monitors().filter_map(|m| m.latency()).reduce(f64::max)
+        self.active_views(|i| self.worker_latency(i)).reduce(f64::max)
     }
 
     /// Mean-link bandwidth — the heterogeneity-blind control view.
     pub fn mean_bandwidth(&self) -> Option<f64> {
-        Self::mean(self.active_monitors().filter_map(|m| m.bandwidth()))
+        Self::mean(self.active_views(|i| self.worker_bandwidth(i)))
     }
 
     /// Mean-link latency — the heterogeneity-blind control view.
     pub fn mean_latency(&self) -> Option<f64> {
-        Self::mean(self.active_monitors().filter_map(|m| m.latency()))
+        Self::mean(self.active_views(|i| self.worker_latency(i)))
     }
 
     fn mean(vals: impl Iterator<Item = f64>) -> Option<f64> {
@@ -377,5 +480,59 @@ mod tests {
             fm.compute_time().unwrap().to_bits(),
             single.compute_time().unwrap().to_bits()
         );
+    }
+
+    #[test]
+    fn path_zero_seed_matches_the_historical_per_link_stream() {
+        // a 2-path monitor's path 0 must carry the exact noise stream the
+        // single-path monitor had, so legacy estimates replay bitwise
+        let mut legacy = FabricMonitor::new(2, 0.3, 42).with_noise(0.25);
+        let mut bonded =
+            FabricMonitor::with_paths(&[2, 1], 0.3, 42).with_noise(0.25);
+        for _ in 0..20 {
+            legacy.observe_transfer(0, 5_000_000, 0.5);
+            bonded.observe_transfer(0, 5_000_000, 0.5);
+        }
+        assert_eq!(
+            legacy.link(0).bandwidth().unwrap().to_bits(),
+            bonded.link(0).bandwidth().unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn bonded_worker_sums_bandwidth_and_takes_min_latency() {
+        let mut fm = FabricMonitor::with_paths(&[2, 1], 0.5, 0);
+        for _ in 0..30 {
+            fm.observe_path_transfer(0, 0, 100_000_000.0, 1.0); // 1e8
+            fm.observe_path_transfer(0, 1, 20_000_000.0, 1.0); // 2e7
+            fm.observe_path_latency(0, 0, 0.05);
+            fm.observe_path_latency(0, 1, 0.3);
+            fm.observe_transfer(1, 100_000_000, 1.0);
+            fm.observe_latency_for(1, 0.1);
+        }
+        let w0 = fm.worker_bandwidth(0).unwrap();
+        assert!((w0 - 1.2e8).abs() < 1.0, "sum over paths, got {w0}");
+        assert!((fm.worker_latency(0).unwrap() - 0.05).abs() < 1e-12);
+        // bottleneck over workers: worker 1's 1e8 < worker 0's 1.2e8
+        assert!((fm.bandwidth().unwrap() - 1e8).abs() < 1.0);
+        assert!((fm.latency().unwrap() - 0.1).abs() < 1e-12);
+        // one path collapsing drags the bonded aggregate below worker 1
+        for _ in 0..60 {
+            fm.observe_path_transfer(0, 0, 1_000.0, 1.0); // outage floor
+        }
+        assert!(fm.worker_bandwidth(0).unwrap() < 3e7);
+        assert!(fm.bandwidth().unwrap() < 3e7);
+    }
+
+    #[test]
+    fn partial_path_estimates_still_aggregate() {
+        // only one path of a bond has samples: the worker view uses what
+        // it has instead of reporting nothing
+        let mut fm = FabricMonitor::with_paths(&[2], 0.5, 0);
+        assert!(fm.worker_bandwidth(0).is_none());
+        fm.observe_path_transfer(0, 1, 20_000_000.0, 1.0);
+        assert!((fm.worker_bandwidth(0).unwrap() - 2e7).abs() < 1.0);
+        fm.observe_path_latency(0, 1, 0.3);
+        assert!((fm.worker_latency(0).unwrap() - 0.3).abs() < 1e-12);
     }
 }

@@ -1,0 +1,176 @@
+//! Bonded-transport regression tests (DESIGN.md §Bonding):
+//!
+//! * determinism contract — a k=1 bond prices bit-identically to the plain
+//!   single-link fabric (serial AND pooled: the bond code path adds no
+//!   float reorderings), and two `exp bonded` sweeps with the same seed
+//!   produce byte-identical `results/bonded.csv` content;
+//! * failover semantics — a worker-level outage on a bonded worker hits
+//!   every path (all-paths-out ⇒ the floor trickle, not a hang), while a
+//!   path-scoped outage leaves the surviving path carrying the bits.
+
+use deco::coordinator::{TrainLoop, TrainParams};
+use deco::deco::solve::DecoInput;
+use deco::elastic::{ChurnEvent, ChurnSpec, TimedEvent};
+use deco::metrics::RunResult;
+use deco::netsim::{BandwidthTrace, Bond, Fabric, Link};
+use deco::optim::Quadratic;
+use deco::strategy::StrategyKind;
+
+const S_G: f64 = 1e8;
+const T_COMP: f64 = 0.05;
+
+fn params(max_iters: usize) -> TrainParams {
+    TrainParams {
+        gamma: 0.005,
+        max_iters,
+        log_every: 10,
+        t_comp_override: Some(T_COMP),
+        s_g_override: Some(S_G),
+        fallback: DecoInput { s_g: S_G, a: 2e7, b: 0.2, t_comp: T_COMP },
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+fn quad(dim: usize) -> Quadratic {
+    Quadratic::new(dim, 4, 1.0, 0.2, 0.3, 0.3, 11)
+}
+
+fn run_bond(
+    fabric: Fabric,
+    kind: StrategyKind,
+    mut p: TrainParams,
+    dim: usize,
+    threads: usize,
+) -> (Vec<f32>, RunResult) {
+    p.threads = Some(threads);
+    let mut tl = TrainLoop::with_fabric(quad(dim), kind.build(), fabric, p);
+    let res = tl.run("bond");
+    (tl.model().to_vec(), res)
+}
+
+#[test]
+fn k1_bond_is_bit_identical_to_the_plain_fabric() {
+    // dim 65_536 crosses the parallel-engine thresholds, DeCo exercises
+    // dynamic (τ, δ): wrapping every worker's link in a one-path bond must
+    // not perturb one bit, at any pool size
+    let dim = 65_536;
+    let kind = StrategyKind::DecoSgd { update_every: 10 };
+    let plain = || Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2);
+    let bonded = || {
+        let mut f = plain();
+        for i in 0..4 {
+            let link = Link::new(BandwidthTrace::constant(2e7), 0.2);
+            f.set_bond(i, Bond::single(link));
+        }
+        f
+    };
+    let base = run_bond(plain(), kind.clone(), params(30), dim, 1);
+    for threads in [1usize, 4] {
+        let (model, res) =
+            run_bond(bonded(), kind.clone(), params(30), dim, threads);
+        assert_eq!(model, base.0, "model diverges at {threads} threads");
+        assert_eq!(res.records, base.1.records, "{threads} threads");
+        assert_eq!(
+            res.total_time.to_bits(),
+            base.1.total_time.to_bits(),
+            "virtual clock diverges at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn bonded_sweep_csv_is_deterministic() {
+    // two full sweeps (same seed) must produce byte-identical CSV — what
+    // `repro exp bonded` writes to results/bonded.csv
+    let (csv1, rows1) = deco::exp::bonded::sweep(0.25, 4, 256, 7).unwrap();
+    let (csv2, rows2) = deco::exp::bonded::sweep(0.25, 4, 256, 7).unwrap();
+    assert_eq!(csv1, csv2, "sweep CSV must be deterministic in the seed");
+    assert_eq!(rows1, rows2);
+    assert!(csv1.starts_with("scenario,outage_s,strategy,"));
+    // 2 scenarios × 4 arms + header
+    assert_eq!(csv1.lines().count(), 1 + 2 * 4);
+}
+
+#[test]
+fn worker_level_outage_on_a_bond_means_all_paths() {
+    // D-SGD (static plan, constant bits) with worker 0 dual-homed on two
+    // fat paths. A path-0 outage leaves path 1 carrying the run at nearly
+    // full pace; a worker-level LinkOutage of the same length blanks BOTH
+    // paths to the 1 kbps floor and must cost roughly the whole window.
+    let fabric = || {
+        let mut f =
+            Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2);
+        f.set_bond(
+            0,
+            Bond::new(vec![
+                Link::new(BandwidthTrace::constant(2e7), 0.2),
+                Link::new(BandwidthTrace::constant(2e7), 0.2),
+            ]),
+        );
+        f
+    };
+    let iters = 100;
+    let run = |event: ChurnEvent| {
+        let p = TrainParams {
+            churn: ChurnSpec::Scripted {
+                events: vec![TimedEvent { t: 30.0, event }],
+            },
+            ..params(iters)
+        };
+        run_bond(fabric(), StrategyKind::DSgd, p, 256, 1)
+    };
+    let (_, calm) = {
+        let p = TrainParams { churn: ChurnSpec::none(), ..params(iters) };
+        run_bond(fabric(), StrategyKind::DSgd, p, 256, 1)
+    };
+    let (_, path0) = run(ChurnEvent::PathOutage {
+        worker: 0,
+        path: 0,
+        secs: 40.0,
+    });
+    let (_, whole) = run(ChurnEvent::LinkOutage { worker: 0, secs: 40.0 });
+    assert_eq!(calm.total_iters, iters);
+    assert_eq!(path0.total_iters, iters);
+    assert_eq!(whole.total_iters, iters);
+    assert!(
+        path0.total_time < calm.total_time + 0.5 * 40.0,
+        "one surviving path must absorb most of the outage: {} vs calm {}",
+        path0.total_time,
+        calm.total_time
+    );
+    assert!(
+        whole.total_time > calm.total_time + 0.8 * 40.0,
+        "a worker-level outage must stall all paths: {} vs calm {}",
+        whole.total_time,
+        calm.total_time
+    );
+    assert!(
+        whole.total_time > path0.total_time,
+        "all-paths-out costs strictly more than one-path-out"
+    );
+}
+
+#[test]
+fn out_of_range_path_indices_error_at_compile_time() {
+    // the compile-time guard: a path-scoped event naming a path the bonded
+    // worker doesn't have (or any path on a single-path worker) is a clear
+    // error from ChurnSpec::compile_for, not a mid-run panic
+    let spec = ChurnSpec::Scripted {
+        events: vec![TimedEvent {
+            t: 5.0,
+            event: ChurnEvent::PathOutage { worker: 0, path: 2, secs: 10.0 },
+        }],
+    };
+    let e = spec.compile_for(4, &[2, 1, 1, 1]).unwrap_err().to_string();
+    assert!(e.contains("path 2"), "{e}");
+    assert!(e.contains("2 path(s)"), "{e}");
+    assert!(spec.compile(4).is_err(), "single-path workers have no path 2");
+    let ok = ChurnSpec::Scripted {
+        events: vec![TimedEvent {
+            t: 5.0,
+            event: ChurnEvent::PathOutage { worker: 0, path: 1, secs: 10.0 },
+        }],
+    };
+    assert!(ok.compile_for(4, &[2, 1, 1, 1]).is_ok());
+}

@@ -6,7 +6,9 @@ use deco::compress::{
 };
 use deco::coordinator::{VirtualClock, WorkerState};
 use deco::deco::solve::{delta_star, solve, tau_range, DecoInput};
-use deco::netsim::{BandwidthTrace, DegradeWindow, Fabric, Link, TraceKind};
+use deco::netsim::{
+    BandwidthTrace, Bond, DegradeWindow, Fabric, Link, TraceKind,
+};
 use deco::timesim::{t_avg_closed_form, EventSim, PipelineParams};
 use deco::util::check::{forall, Gen};
 use deco::util::Rng;
@@ -750,6 +752,132 @@ fn prop_mean_over_degenerate_interval_is_at() {
         let rel = (mean * (t1 - t0) - bits).abs() / bits.max(1.0);
         if rel > 1e-12 {
             return Err(format!("mean·dt != bits_over (rel {rel})"));
+        }
+        Ok(())
+    });
+}
+
+// ---- bonded multi-path transport (DESIGN.md §Bonding) ----
+
+/// A k-path bond over varying traces with per-path random latencies.
+fn gen_bond(g: &mut Gen, k: usize) -> Bond {
+    let paths = (0..k)
+        .map(|_| Link::new(gen_varying_trace(g), g.f64(0.01, 0.5)))
+        .collect();
+    Bond::new(paths)
+}
+
+#[test]
+fn prop_bonded_arrival_bracketed_and_bits_conserved() {
+    // the water-filling arrival can never precede the earliest possible
+    // share (start + min latency) and never trails the best single path
+    // alone (the bisection's hi bracket); the per-path split must sum to
+    // the payload at full f64 resolution
+    forall("bonded_arrival_and_conservation", 60, |g| {
+        let k = g.size(2, 4);
+        let bond = gen_bond(g, k);
+        let start = g.f64(0.0, 100.0);
+        let bits = g.f64(1e4, 2e9) as u64;
+        let sched = bond.schedule(&vec![start; k], bits);
+        let lo = start + bond.min_latency();
+        if sched.arrival < lo - 1e-9 {
+            return Err(format!(
+                "arrival {} precedes start+min_latency {lo}",
+                sched.arrival
+            ));
+        }
+        let best_single = (0..k)
+            .map(|p| bond.path(p).arrival(start, bits))
+            .fold(f64::INFINITY, f64::min);
+        if sched.arrival > best_single + 1e-9 {
+            return Err(format!(
+                "bonded arrival {} worse than best single path \
+                 {best_single}",
+                sched.arrival
+            ));
+        }
+        let total: f64 = sched.bits.iter().sum();
+        let tol = 1e-6 * bits as f64 + 1.0;
+        if (total - bits as f64).abs() > tol {
+            return Err(format!(
+                "shares sum to {total}, payload {bits} (tol {tol})"
+            ));
+        }
+        for p in 0..k {
+            // no share lands after the common arrival, none starts early
+            let land = sched.tx_end[p] + bond.path(p).latency();
+            if land > sched.arrival + 1e-9 {
+                return Err(format!(
+                    "path {p} lands at {land} after arrival {}",
+                    sched.arrival
+                ));
+            }
+            if sched.tx_end[p] < start - 1e-9 {
+                return Err(format!(
+                    "path {p} tx_end {} precedes start {start}",
+                    sched.tx_end[p]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_equal_latency_bond_beats_every_single_path_tx() {
+    // with equal latencies the common-arrival split is also the earliest
+    // common *transmission* end, so the bonded transfer_end can't trail
+    // any one path carrying the whole payload alone
+    forall("bonded_tx_end_dominates", 40, |g| {
+        let k = g.size(2, 3);
+        let lat = g.f64(0.01, 0.5);
+        let paths: Vec<Link> = (0..k)
+            .map(|_| Link::new(gen_varying_trace(g), lat))
+            .collect();
+        let bond = Bond::new(paths.clone());
+        let start = g.f64(0.0, 50.0);
+        let bits = g.f64(1e5, 1e9) as u64;
+        let bonded = bond.transfer_end(start, bits);
+        let best = paths
+            .iter()
+            .map(|p| p.transfer_end(start, bits))
+            .fold(f64::INFINITY, f64::min);
+        if bonded > best + 1e-6 {
+            return Err(format!(
+                "bonded transfer_end {bonded} > best single {best}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_path_degrade_never_speeds_the_bond() {
+    // baking a degrade window into one path lowers that path's cumulative
+    // integral pointwise, so the earliest covering time — the bonded
+    // arrival — can only move later (monotone failover)
+    forall("bonded_degrade_monotone", 40, |g| {
+        let k = g.size(2, 3);
+        let bond = gen_bond(g, k);
+        let p = g.size(0, k - 1);
+        let s = g.f64(0.0, 30.0);
+        let frac = [0.0, 0.25, 0.5][g.size(0, 2)];
+        let degraded = bond.with_path_windows(
+            p,
+            vec![DegradeWindow {
+                start_s: s,
+                end_s: s + g.f64(1.0, 40.0),
+                frac,
+            }],
+        );
+        let start = g.f64(0.0, 40.0);
+        let bits = g.f64(1e4, 5e8) as u64;
+        let healthy = bond.arrival(start, bits);
+        let slowed = degraded.arrival(start, bits);
+        if slowed < healthy - 1e-6 {
+            return Err(format!(
+                "degrading path {p} sped the bond: {slowed} < {healthy}"
+            ));
         }
         Ok(())
     });

@@ -290,6 +290,7 @@ fn invalid_topologies_error_not_panic() {
     net.topology = TopologySpec::TwoTier {
         wan_trace: TraceKind::Constant { bps: 2e7 },
         wan_latency_s: 0.3,
+        region_wan: Vec::new(),
     };
     let fabric = net.build_fabric(4).unwrap();
     assert!(net.build_topology(4, &fabric).is_err());

@@ -13,6 +13,12 @@
 #                         10 ms Euler stepper on {Sine, OU, Markov,
 #                         Windowed-OU} x {0.1 s, 3 s, 30 s}, plus the
 #                         serial-vs-pooled exp hetero --fast sweep cell
+#   BENCH_bond.json     — water-filling Bond::schedule at k in {2, 4} and
+#                         the bonded clock tick vs single-path at
+#                         n in {4, 16, 32} x k in {2, 4}
+#
+# scripts/bench_check.sh gates the BENCH_*.json headlines against the
+# checked-in perf_budgets.json ceilings.
 #
 #   scripts/bench.sh                # fast mode (default; CI-sized)
 #   DECO_BENCH_FAST=0 scripts/bench.sh   # full measurement windows
@@ -31,7 +37,8 @@ fab_jsonl="$(mktemp)"
 ela_jsonl="$(mktemp)"
 topo_jsonl="$(mktemp)"
 trace_jsonl="$(mktemp)"
-trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl"' EXIT
+bond_jsonl="$(mktemp)"
+trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl" "$bond_jsonl"' EXIT
 
 consolidate() {
   # consolidate <jsonl> <out.json>
@@ -69,3 +76,7 @@ consolidate "$topo_jsonl" BENCH_topo.json
 echo "### cargo bench --bench bench_trace"
 DECO_BENCH_JSON="$trace_jsonl" cargo bench --bench bench_trace
 consolidate "$trace_jsonl" BENCH_trace.json
+
+echo "### cargo bench --bench bench_bond"
+DECO_BENCH_JSON="$bond_jsonl" cargo bench --bench bench_bond
+consolidate "$bond_jsonl" BENCH_bond.json

@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Budget gate over the consolidated BENCH_*.json headlines: fails when any
+# benchmark named in perf_budgets.json runs slower than its ceiling by more
+# than the configured tolerance (the ">20% regression" gate). Files or
+# budget entries with no counterpart are skipped — the budgets track the
+# headline benches, not an inventory — so the gate degrades gracefully when
+# only a subset of bench targets ran.
+#
+#   scripts/bench.sh && scripts/bench_check.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python3 - <<'PY'
+import glob
+import json
+import sys
+
+budgets = json.load(open("perf_budgets.json"))
+ceilings = budgets["budgets_ns"]
+tol = budgets.get("tolerance", 1.2)
+seen = 0
+failures = []
+for path in sorted(glob.glob("BENCH_*.json")):
+    data = json.load(open(path))
+    for r in data.get("results", []):
+        name = r.get("name")
+        if name not in ceilings:
+            continue
+        seen += 1
+        limit = ceilings[name] * tol
+        med = float(r["median_ns"])
+        status = "ok" if med <= limit else "FAIL"
+        print(
+            f"[bench_check] {status:4} {name:<44} "
+            f"median {med:>14.1f} ns  ceiling {ceilings[name]:.0f} x {tol}"
+        )
+        if med > limit:
+            failures.append(name)
+if seen == 0:
+    print(
+        "[bench_check] no budgeted benchmarks found in BENCH_*.json — "
+        "nothing to gate"
+    )
+if failures:
+    print(
+        f"[bench_check] {len(failures)} benchmark(s) over budget: "
+        + ", ".join(failures)
+    )
+    sys.exit(1)
+print(f"[bench_check] {seen} budgeted benchmark(s) within ceiling")
+PY
