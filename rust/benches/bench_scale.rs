@@ -1,0 +1,54 @@
+//! 100k-worker clock engine (DESIGN.md §Perf): per-tick cost of the
+//! shared-timeline-class `VirtualClock` at n ∈ {1k, 10k, 100k}, against
+//! the O(n) singleton-class reference engine at the sizes where the
+//! reference is affordable. The `classes_*` series should be flat in n
+//! (the homogeneous fabric is one class regardless of worker count) —
+//! that flatness IS the tentpole claim; `reference_*` grows linearly and
+//! anchors the comparison.
+//!
+//! `scripts/bench.sh` consolidates these into `BENCH_scale.json`.
+
+use deco::coordinator::VirtualClock;
+use deco::netsim::{BandwidthTrace, Fabric};
+use deco::util::bench::{black_box, Bench};
+
+/// Rebuild the clock periodically so the TC history stays bounded while
+/// the bench harness spins millions of ticks.
+const RESET_EVERY: usize = 100_000;
+
+fn fabric(n: usize) -> Fabric {
+    // straggler keeps two live classes, so the incremental engine does
+    // real per-tick work (two transfers + tree repairs), not a single one
+    Fabric::with_straggler(n, BandwidthTrace::constant(1e8), 0.05, 0.25, 2.0)
+}
+
+fn bench_clock(b: &Bench, name: &str, make: impl Fn() -> VirtualClock) {
+    let mut clock = make();
+    let mut k = 0usize;
+    b.bench(name, || {
+        if clock.iters() >= RESET_EVERY {
+            clock = make();
+        }
+        k += 1;
+        let bits = 1_000_000 + (k as u64 % 7) * 250_000;
+        black_box(clock.tick(0.05, k % 4, bits));
+    });
+}
+
+fn main() {
+    println!("== bench_scale (shared timeline classes vs reference) ==");
+    let b = Bench::new("scale");
+    for &n in &[1_000usize, 10_000, 100_000] {
+        bench_clock(&b, &format!("tick/classes_n{n}"), || {
+            VirtualClock::new(fabric(n))
+        });
+    }
+    // the reference engine is the pre-SoA per-worker recurrence; 100k
+    // singleton ticks per bench iteration is exactly the cost the class
+    // engine exists to avoid, so the reference series stops at 10k
+    for &n in &[1_000usize, 10_000] {
+        bench_clock(&b, &format!("tick/reference_n{n}"), || {
+            VirtualClock::new(fabric(n)).with_reference_scan()
+        });
+    }
+}

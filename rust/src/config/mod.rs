@@ -275,7 +275,7 @@ impl NetworkConfig {
             let members: Vec<usize> = (next..next + g.workers).collect();
             next += g.workers;
             let aggregator = elect(fabric, &members);
-            regions.push(RegionTopo { members, aggregator });
+            regions.push(RegionTopo::new(members, aggregator));
         }
         if next != n {
             return Err(anyhow!(

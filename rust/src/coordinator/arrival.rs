@@ -1,0 +1,206 @@
+//! Tournament tree over per-class sync arrivals.
+//!
+//! The virtual clock needs `argmax` over the arrivals of its timeline
+//! classes every tick, with exactly the tie-breaking the historical O(n)
+//! scan had: the *first strict maximum* in worker-index order. Keys are
+//! `(tc, min_member)` — higher `tc` wins, ties go to the smaller minimum
+//! member id — so the tree's winner is bit-for-bit the worker the old
+//! per-worker loop would have picked. Updating one slot costs
+//! O(log slots); the clock refreshes only the classes that transmitted,
+//! which is what makes a 100k-worker tick O(changed classes · log C)
+//! instead of O(n).
+
+/// Slot key: (sync arrival TC, minimum member worker id of the class).
+pub type ArrivalKey = (f64, u32);
+
+/// The key of an empty / inactive slot: loses against every real arrival.
+pub const EMPTY_KEY: ArrivalKey = (f64::NEG_INFINITY, u32::MAX);
+
+/// `true` when `a` beats `b`: strictly later arrival, or the same arrival
+/// from an earlier worker index.
+fn beats(a: ArrivalKey, b: ArrivalKey) -> bool {
+    a.0 > b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+/// A flat segment tree (winner tree) over `slots` arrival keys.
+#[derive(Clone, Debug)]
+pub struct ArrivalTree {
+    /// number of live slots (tree capacity is the next power of two)
+    slots: usize,
+    /// power-of-two leaf capacity
+    cap: usize,
+    /// per-slot keys, `EMPTY_KEY` beyond `slots`
+    key: Vec<ArrivalKey>,
+    /// internal nodes 1..cap: the winning *slot index* of each subtree
+    /// (leaf `i` lives at tree position `cap + i`)
+    win: Vec<u32>,
+}
+
+impl ArrivalTree {
+    pub fn new(slots: usize) -> Self {
+        let cap = slots.max(1).next_power_of_two();
+        let mut t = Self {
+            slots,
+            cap,
+            key: vec![EMPTY_KEY; cap],
+            win: vec![0; cap],
+        };
+        t.rebuild();
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots == 0
+    }
+
+    /// The winning slot of tree position `x` (internal node or leaf).
+    fn slot_at(&self, x: usize) -> u32 {
+        if x >= self.cap {
+            (x - self.cap) as u32
+        } else {
+            self.win[x]
+        }
+    }
+
+    fn rebuild(&mut self) {
+        // bottom-up: internal nodes in decreasing index order see their
+        // children (leaves or already-computed internals)
+        for x in (1..self.cap).rev() {
+            let (l, r) = (self.slot_at(2 * x), self.slot_at(2 * x + 1));
+            self.win[x] = if beats(self.key[r as usize], self.key[l as usize])
+            {
+                r
+            } else {
+                l
+            };
+        }
+    }
+
+    /// Append one slot with `EMPTY_KEY` (a class split created a new
+    /// class). Doubles the leaf capacity when full.
+    pub fn push_slot(&mut self) {
+        self.slots += 1;
+        if self.slots > self.cap {
+            self.cap *= 2;
+            self.key.resize(self.cap, EMPTY_KEY);
+            self.win = vec![0; self.cap];
+            self.rebuild();
+        }
+    }
+
+    /// Set `slot`'s key and repair the winner path in O(log cap).
+    pub fn set(&mut self, slot: usize, key: ArrivalKey) {
+        debug_assert!(slot < self.slots, "slot {slot} >= {}", self.slots);
+        self.key[slot] = key;
+        let mut x = (self.cap + slot) / 2;
+        while x >= 1 {
+            let (l, r) = (self.slot_at(2 * x), self.slot_at(2 * x + 1));
+            self.win[x] = if beats(self.key[r as usize], self.key[l as usize])
+            {
+                r
+            } else {
+                l
+            };
+            x /= 2;
+        }
+    }
+
+    /// The winning slot index (first strict max in min-member order).
+    pub fn winner(&self) -> usize {
+        self.slot_at(1) as usize
+    }
+
+    /// The winning slot's key.
+    pub fn winner_key(&self) -> ArrivalKey {
+        self.key[self.winner()]
+    }
+
+    /// `slot`'s current key.
+    pub fn get(&self, slot: usize) -> ArrivalKey {
+        self.key[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The reference the tree must agree with: linear first-strict-max.
+    fn scan(keys: &[ArrivalKey]) -> usize {
+        let mut best = 0;
+        for (i, &k) in keys.iter().enumerate() {
+            if beats(k, keys[best]) {
+                best = i;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn winner_matches_linear_scan_under_updates() {
+        // deterministic pseudo-random walk over keys (no RNG dependency)
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut step = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for slots in [1usize, 2, 3, 5, 8, 17, 64] {
+            let mut tree = ArrivalTree::new(slots);
+            let mut keys = vec![EMPTY_KEY; slots];
+            for _ in 0..500 {
+                let s = (step() % slots as u64) as usize;
+                let tc = (step() % 1000) as f64 / 10.0;
+                let m = (step() % 5) as u32;
+                keys[s] = (tc, m);
+                tree.set(s, (tc, m));
+                assert_eq!(tree.winner(), scan(&keys));
+            }
+        }
+    }
+
+    #[test]
+    fn ties_resolve_to_the_smallest_member() {
+        let mut tree = ArrivalTree::new(4);
+        tree.set(0, (5.0, 9));
+        tree.set(1, (5.0, 2));
+        tree.set(2, (5.0, 4));
+        tree.set(3, (1.0, 0));
+        assert_eq!(tree.winner(), 1);
+        assert_eq!(tree.winner_key(), (5.0, 2));
+        // a strictly later arrival beats any tie
+        tree.set(3, (5.0000001, 99));
+        assert_eq!(tree.winner(), 3);
+    }
+
+    #[test]
+    fn push_slot_grows_past_the_initial_capacity() {
+        let mut tree = ArrivalTree::new(2);
+        tree.set(0, (1.0, 0));
+        tree.set(1, (2.0, 1));
+        for i in 0..10 {
+            tree.push_slot();
+            tree.set(2 + i, (3.0 + i as f64, (2 + i) as u32));
+        }
+        assert_eq!(tree.len(), 12);
+        assert_eq!(tree.winner(), 11);
+        // earlier keys survive the capacity doublings
+        assert_eq!(tree.get(0), (1.0, 0));
+        assert_eq!(tree.get(1), (2.0, 1));
+    }
+
+    #[test]
+    fn empty_slots_never_win_against_real_arrivals() {
+        let mut tree = ArrivalTree::new(8);
+        tree.set(5, (0.0, 3));
+        assert_eq!(tree.winner(), 5, "a zero arrival beats EMPTY_KEY");
+        tree.set(5, EMPTY_KEY);
+        // all empty again: the winner is just some empty slot
+        assert_eq!(tree.winner_key(), EMPTY_KEY);
+    }
+}

@@ -9,13 +9,136 @@
 //! timeline `TM_k^i`; the synchronous aggregation of iteration k completes
 //! at the **slowest** worker's arrival `TC_k = max_i (TM_k^i + b_i)`, and
 //! that sync arrival is what the delayed-gradient wait `TC_{k−1−τ}` sees.
-//! With a homogeneous fabric every per-worker timeline is identical, so the
-//! recurrence is bit-identical to the former single-link clock (enforced by
-//! `tests/fabric.rs`). This is THE Eq. 19 implementation:
-//! `timesim::EventSim::run_on_fabric` / `run_on_link` delegate here.
+//! This is THE Eq. 19 implementation: `timesim::EventSim::run_on_fabric` /
+//! `run_on_link` delegate here.
+//!
+//! ## Timeline classes (DESIGN.md §Perf)
+//!
+//! Workers whose links are identical ([`Fabric::link_class`]) and whose
+//! activity histories agree have — by induction from the all-zero start —
+//! bit-identical timelines, so the clock keeps **one** [`ClassState`] per
+//! group and prices one transfer per class per tick instead of one per
+//! worker. A homogeneous 100k-worker fabric is a single class; a straggler
+//! fabric is two. Whenever histories could diverge (a churn mask that
+//! splits a class, a bonded worker, an elected aggregator) the class is
+//! split — splits never re-merge, so sharing only ever shrinks, which is
+//! always correct. The slowest arrival is tracked by a tournament tree
+//! ([`super::arrival::ArrivalTree`]) keyed `(tc, min member)`, reproducing
+//! the historical O(n) scan's first-strict-max tie-breaking exactly; a
+//! debug build re-runs the linear scan over classes each tick and asserts
+//! agreement. [`Self::with_reference_scan`] forces one class per worker —
+//! the O(n) reference engine the property tests compare against.
 
+use std::sync::Arc;
+
+use super::arrival::{ArrivalTree, EMPTY_KEY};
 use crate::netsim::{Bond, Fabric, Link};
 use crate::topo::{elect_eligible, RegionTopo, Topology};
+
+/// Retained sync-arrival history TC_k. The τ-delayed wait looks back
+/// τ+1 iterations and DeCo's τ* is single-digit, so the clock keeps a
+/// bounded ring instead of growing O(iterations) state; reaching past the
+/// window is a bug (an absurd τ) and asserts.
+const TC_HISTORY: usize = 4096;
+
+#[derive(Clone, Debug)]
+struct TcRing {
+    buf: Vec<f64>,
+    pushed: usize,
+}
+
+impl TcRing {
+    fn new() -> Self {
+        Self { buf: vec![0.0; TC_HISTORY], pushed: 0 }
+    }
+
+    fn push(&mut self, v: f64) {
+        self.buf[self.pushed % TC_HISTORY] = v;
+        self.pushed += 1;
+    }
+
+    fn len(&self) -> usize {
+        self.pushed
+    }
+
+    /// TC at 0-based iteration index `idx` (the old `tc[idx]`).
+    fn get(&self, idx: usize) -> f64 {
+        assert!(
+            idx < self.pushed && self.pushed - idx <= TC_HISTORY,
+            "tau looks back past the retained clock history \
+             (idx {idx}, pushed {}, window {TC_HISTORY})",
+            self.pushed
+        );
+        self.buf[idx % TC_HISTORY]
+    }
+
+    fn last(&self) -> f64 {
+        if self.pushed == 0 {
+            0.0
+        } else {
+            self.buf[(self.pushed - 1) % TC_HISTORY]
+        }
+    }
+}
+
+/// One timeline class: a set of workers with identical links and identical
+/// activity histories, sharing one timeline. Bonded workers and two-tier
+/// aggregators are always singletons.
+#[derive(Clone, Debug)]
+struct ClassState {
+    link: Link,
+    /// multi-path bond (forces a singleton class)
+    bond: Option<Arc<Bond>>,
+    /// ascending member worker ids; never empty
+    members: Vec<u32>,
+    /// members transmit this tick (classes split on mixed masks, so the
+    /// bit is always class-wide)
+    active: bool,
+    /// whether the class transmitted on the most recent tick (false while
+    /// masked out: members report zeroed [`WorkerTick`]s)
+    sent_last: bool,
+    /// the current aggregator of a two-tier region (singleton; advances by
+    /// local hand-off instead of a LAN transfer)
+    aggregator: bool,
+    /// TM_k of the previous iteration
+    tm_prev: f64,
+    /// per-path TM_k of the previous iteration (bonded classes only)
+    path_tm_prev: Vec<f64>,
+    /// per-path times of the last tick (bonded classes only)
+    path_last: Vec<PathTick>,
+    /// the last tick's report
+    last: WorkerTick,
+    /// transmission seconds accumulated along this class's timeline. A
+    /// split clones the accumulator into the new class unchanged — every
+    /// member's total stays the same left-to-right fold of per-tick
+    /// `tx_secs` the singleton reference engine computes, so `tx_totals`
+    /// is *bit*-identical across any split history (float addition does
+    /// not reassociate, so a base+remainder scheme would drift by ulps)
+    tx_total: f64,
+}
+
+impl ClassState {
+    fn new(link: Link, bond: Option<Arc<Bond>>, worker: u32) -> Self {
+        let k = bond.as_ref().map_or(0, |b| b.k());
+        Self {
+            link,
+            bond,
+            members: vec![worker],
+            active: true,
+            sent_last: false,
+            aggregator: false,
+            tm_prev: 0.0,
+            path_tm_prev: vec![0.0; k],
+            path_last: vec![PathTick::default(); k],
+            last: WorkerTick::default(),
+            tx_total: 0.0,
+        }
+    }
+
+    fn min_member(&self) -> u32 {
+        self.members[0]
+    }
+}
 
 #[derive(Debug)]
 pub struct VirtualClock {
@@ -23,28 +146,23 @@ pub struct VirtualClock {
     /// two-tier topology state; `None` prices the flat star exactly as the
     /// pre-topology clock did (DESIGN.md §Topology)
     two_tier: Option<TwoTierState>,
-    /// all links share one trace config + latency
-    /// ([`Fabric::is_uniform`]): every per-worker timeline is provably
-    /// identical, so one exact transfer inversion per tick suffices — the
-    /// hot-path fast path that keeps per-worker pricing free for the
-    /// paper's default scenarios
-    uniform: bool,
+    /// timeline classes (see module docs); every worker belongs to exactly
+    /// one via `class_of`
+    classes: Vec<ClassState>,
+    class_of: Vec<u32>,
+    /// the previous tick's active mask (diffed to find classes to split)
+    mask: Vec<bool>,
+    all_active: bool,
+    /// tournament tree over class arrivals, keyed `(tc, min member)`
+    tree: ArrivalTree,
     /// TS_k of the previous iteration (computation is in lockstep)
     ts_prev: f64,
-    /// per-worker TM_k of the previous iteration
-    tm_prev: Vec<f64>,
-    /// per-path TM_k of the previous iteration for bonded workers
-    /// (DESIGN.md §Bonding); empty vec on single-path workers
-    path_tm_prev: Vec<Vec<f64>>,
-    /// per-path times of the last tick for bonded workers (per-path
-    /// monitoring); empty vec on single-path workers
-    path_last: Vec<Vec<PathTick>>,
-    /// full sync-arrival history TC_k (indexed k-1) for the τ-delayed max
-    tc: Vec<f64>,
-    /// per-worker times of the last tick (metrics / per-link monitoring)
+    /// bounded ring over the sync-arrival history TC_k
+    tc: TcRing,
+    /// lazily materialized per-worker views (`worker_ticks`/`tx_totals`)
     worker_last: Vec<WorkerTick>,
-    /// cumulative per-worker transmission seconds (straggler accounting)
-    tx_total: Vec<f64>,
+    tx_cache: Vec<f64>,
+    views_dirty: bool,
 }
 
 /// What one tick reports back to the trainer (the slowest worker's view —
@@ -150,28 +268,62 @@ struct TwoTierState {
     /// cumulative bits shipped across each region's WAN link — the
     /// headline savings metric of hierarchical aggregation
     wan_bits_total: Vec<u64>,
+    /// per-region `(class, member count)` groups — the class-level view of
+    /// `regions[r].members`, rebuilt only when the class structure changes
+    groups: Vec<Vec<(u32, u32)>>,
+    groups_dirty: bool,
 }
 
 impl VirtualClock {
     pub fn new(fabric: Fabric) -> Self {
         let n = fabric.workers();
-        let uniform = fabric.is_uniform();
-        let paths: Vec<usize> =
-            (0..n).map(|i| fabric.bond(i).map_or(0, Bond::k)).collect();
+        let mut classes: Vec<ClassState> = Vec::new();
+        let mut class_of = vec![0u32; n];
+        // fabric link-class -> clock class; bonded workers stay singleton
+        let mut map: Vec<Option<u32>> =
+            vec![None; fabric.link_class_count()];
+        for w in 0..n {
+            if let Some(bond) = fabric.bond_arc(w) {
+                class_of[w] = classes.len() as u32;
+                classes.push(ClassState::new(
+                    fabric.link(w).clone(),
+                    Some(bond.clone()),
+                    w as u32,
+                ));
+                continue;
+            }
+            let fc = fabric.link_class(w);
+            match map[fc] {
+                Some(c) => {
+                    classes[c as usize].members.push(w as u32);
+                    class_of[w] = c;
+                }
+                None => {
+                    let c = classes.len() as u32;
+                    map[fc] = Some(c);
+                    class_of[w] = c;
+                    classes.push(ClassState::new(
+                        fabric.link(w).clone(),
+                        None,
+                        w as u32,
+                    ));
+                }
+            }
+        }
+        let tree = ArrivalTree::new(classes.len());
         Self {
             fabric,
             two_tier: None,
-            uniform,
+            classes,
+            class_of,
+            mask: vec![true; n],
+            all_active: true,
+            tree,
             ts_prev: 0.0,
-            tm_prev: vec![0.0; n],
-            path_tm_prev: paths.iter().map(|&k| vec![0.0; k]).collect(),
-            path_last: paths
-                .iter()
-                .map(|&k| vec![PathTick::default(); k])
-                .collect(),
-            tc: Vec::new(),
+            tc: TcRing::new(),
             worker_last: vec![WorkerTick::default(); n],
-            tx_total: vec![0.0; n],
+            tx_cache: vec![0.0; n],
+            views_dirty: false,
         }
     }
 
@@ -188,6 +340,8 @@ impl VirtualClock {
         let mut clock = Self::new(fabric);
         if let Topology::TwoTier { regions, wan } = topo {
             let r = regions.len();
+            let aggs: Vec<usize> =
+                regions.iter().map(|x| x.aggregator).collect();
             clock.two_tier = Some(TwoTierState {
                 regions,
                 wan,
@@ -195,7 +349,15 @@ impl VirtualClock {
                 region_last: vec![RegionTick::default(); r],
                 wan_tx_total: vec![0.0; r],
                 wan_bits_total: vec![0; r],
+                groups: vec![Vec::new(); r],
+                groups_dirty: true,
             });
+            // aggregators advance by local hand-off: their timelines
+            // diverge from plain members immediately, so carve them out
+            for a in aggs {
+                let c = clock.ensure_singleton(a);
+                clock.classes[c].aggregator = true;
+            }
         }
         Ok(clock)
     }
@@ -205,28 +367,65 @@ impl VirtualClock {
         Self::new(Fabric::new(vec![link]))
     }
 
+    /// Split every class into singletons: the O(n) per-worker reference
+    /// engine (exactly the pre-SoA recurrence), which the property tests
+    /// and `bench_scale` compare the shared-class engine against.
+    pub fn with_reference_scan(mut self) -> Self {
+        for w in 0..self.class_of.len() {
+            self.ensure_singleton(w);
+        }
+        self
+    }
+
     pub fn fabric(&self) -> &Fabric {
         &self.fabric
     }
 
     pub fn workers(&self) -> usize {
-        self.tm_prev.len()
+        self.class_of.len()
     }
 
-    /// Per-worker (TM, TC, tx) of the last tick.
-    pub fn worker_ticks(&self) -> &[WorkerTick] {
+    /// Number of timeline classes currently tracked: 1 on a homogeneous
+    /// fabric, n in reference mode; splits only ever grow it.
+    pub fn timeline_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Per-worker (TM, TC, tx) of the last tick. Materialized lazily from
+    /// the class states (O(n) on the first call after a tick, O(1) after).
+    pub fn worker_ticks(&mut self) -> &[WorkerTick] {
+        self.materialize_views();
         &self.worker_last
     }
 
     /// Per-path (tx end, bit share, tx secs) of worker `worker`'s last
     /// tick — empty on single-path workers (DESIGN.md §Bonding).
     pub fn path_ticks(&self, worker: usize) -> &[PathTick] {
-        &self.path_last[worker]
+        &self.classes[self.class_of[worker] as usize].path_last
     }
 
-    /// Cumulative transmission seconds per worker.
-    pub fn tx_totals(&self) -> &[f64] {
-        &self.tx_total
+    /// Cumulative transmission seconds per worker (lazily materialized).
+    pub fn tx_totals(&mut self) -> &[f64] {
+        self.materialize_views();
+        &self.tx_cache
+    }
+
+    fn materialize_views(&mut self) {
+        if !self.views_dirty {
+            return;
+        }
+        for cls in &self.classes {
+            let wt = if cls.sent_last {
+                cls.last
+            } else {
+                WorkerTick::default()
+            };
+            for &w in &cls.members {
+                self.worker_last[w as usize] = wt;
+                self.tx_cache[w as usize] = cls.tx_total;
+            }
+        }
+        self.views_dirty = false;
     }
 
     /// Whether this clock prices a two-tier topology.
@@ -261,6 +460,44 @@ impl VirtualClock {
         self.two_tier.as_ref().map_or(&[], |tt| &tt.wan_tx_total)
     }
 
+    /// Split `worker` out of a shared class into its own singleton,
+    /// preserving the (identical) timeline. No-op if already singleton.
+    fn ensure_singleton(&mut self, worker: usize) -> usize {
+        let c = self.class_of[worker] as usize;
+        if self.classes[c].members.len() == 1 {
+            return c;
+        }
+        // the clone keeps the shared timeline *and* the tx accumulator:
+        // members of one class have bitwise-equal histories, so carrying
+        // the fold forward (rather than a base + remainder split) keeps
+        // `tx_totals` bit-identical to the singleton reference engine
+        let mut newc = self.classes[c].clone();
+        newc.members = vec![worker as u32];
+        self.classes[c].members.retain(|&w| w != worker as u32);
+        self.class_of[worker] = self.classes.len() as u32;
+        let key = if newc.active && newc.sent_last {
+            (newc.last.tc, worker as u32)
+        } else {
+            EMPTY_KEY
+        };
+        self.classes.push(newc);
+        self.tree.push_slot();
+        self.tree.set(self.classes.len() - 1, key);
+        // the donor class may have lost its min member: refresh its key
+        let donor = &self.classes[c];
+        let donor_key = if donor.active && donor.sent_last {
+            (donor.last.tc, donor.min_member())
+        } else {
+            EMPTY_KEY
+        };
+        self.tree.set(c, donor_key);
+        if let Some(tt) = self.two_tier.as_mut() {
+            tt.groups_dirty = true;
+        }
+        self.views_dirty = true;
+        self.classes.len() - 1
+    }
+
     /// Re-elect region `region`'s aggregator among its members marked
     /// `true` in `eligible` — the churn hook: a departing aggregator hands
     /// the role to the best-connected surviving member (`topo::elect`
@@ -272,21 +509,157 @@ impl VirtualClock {
         region: usize,
         eligible: &[bool],
     ) -> bool {
-        let Some(tt) = self.two_tier.as_mut() else {
-            return false;
+        let new = {
+            let Some(tt) = self.two_tier.as_ref() else {
+                return false;
+            };
+            let members = &tt.regions[region].members;
+            match elect_eligible(&self.fabric, members, eligible) {
+                Some(n) => n,
+                None => return false,
+            }
         };
-        let members = &tt.regions[region].members;
-        let Some(new) = elect_eligible(&self.fabric, members, eligible)
-        else {
-            return false;
-        };
-        let changed = new != tt.regions[region].aggregator;
+        let tt = self.two_tier.as_mut().expect("checked above");
+        let old = tt.regions[region].aggregator;
         tt.regions[region].aggregator = new;
-        changed
+        if new == old {
+            return false;
+        }
+        // the demoted aggregator keeps its (already singleton) class but
+        // becomes a plain sender; the new one is carved out
+        let oldc = self.class_of[old] as usize;
+        self.classes[oldc].aggregator = false;
+        let nc = self.ensure_singleton(new);
+        self.classes[nc].aggregator = true;
+        if let Some(tt) = self.two_tier.as_mut() {
+            tt.groups_dirty = true;
+        }
+        true
     }
 
-    /// Advance one iteration (k = self.tc.len() + 1, 1-based) with every
-    /// worker transmitting.
+    /// Computation end of the next iteration:
+    /// `TS_k = T_comp + max(TC_{k−1−τ}, TS_{k−1})`.
+    fn next_ts(&self, t_comp: f64, tau: usize) -> f64 {
+        let k = self.tc.len() + 1;
+        let tc_delayed = if k as i64 - 1 - tau as i64 >= 1 {
+            self.tc.get(k - 2 - tau)
+        } else {
+            0.0
+        };
+        t_comp + tc_delayed.max(self.ts_prev)
+    }
+
+    /// Bring class `active` bits in line with the mask, splitting classes
+    /// whose members disagree (active members keep the class, the rest
+    /// form a new frozen one). Returns `true` if any class split.
+    fn reconcile_mask(&mut self, active: Option<&[bool]>) -> bool {
+        let n = self.class_of.len();
+        match active {
+            None => {
+                if self.all_active {
+                    return false;
+                }
+                // everyone transmits again: a frozen class's stale tm_prev
+                // is dominated by max(·, TS) exactly like a rejoin
+                for cls in &mut self.classes {
+                    cls.active = true;
+                }
+                self.mask.fill(true);
+                self.all_active = true;
+                false
+            }
+            Some(m) => {
+                assert_eq!(m.len(), n, "mask/worker mismatch");
+                assert!(m.iter().any(|&a| a), "active set must be non-empty");
+                if m == &self.mask[..] {
+                    return false;
+                }
+                let mut touched: Vec<u32> = Vec::new();
+                for i in 0..n {
+                    if m[i] != self.mask[i] {
+                        let c = self.class_of[i];
+                        if !touched.contains(&c) {
+                            touched.push(c);
+                        }
+                    }
+                }
+                let mut split = false;
+                for c in touched {
+                    split |= self.apply_mask_to_class(c as usize, m);
+                }
+                self.mask.copy_from_slice(m);
+                self.all_active = m.iter().all(|&a| a);
+                split
+            }
+        }
+    }
+
+    /// Apply the mask to one class; splits it when members disagree.
+    /// Returns `true` on a split.
+    fn apply_mask_to_class(&mut self, c: usize, m: &[bool]) -> bool {
+        let want = m[self.classes[c].members[0] as usize];
+        let (keep, moved): (Vec<u32>, Vec<u32>) = self.classes[c]
+            .members
+            .iter()
+            .copied()
+            .partition(|&w| m[w as usize] == want);
+        let did_split = !moved.is_empty();
+        if did_split {
+            // mixed mask: the disagreeing members get their own class with
+            // the same (shared) timeline and tx fold — the split preserves
+            // every value bit-for-bit
+            let mut newc = self.classes[c].clone();
+            newc.members = moved;
+            newc.active = !want;
+            if !newc.active {
+                newc.sent_last = false;
+                for p in newc.path_last.iter_mut() {
+                    *p = PathTick::default();
+                }
+            }
+            let id = self.classes.len() as u32;
+            for &w in &newc.members {
+                self.class_of[w as usize] = id;
+            }
+            let key = if newc.active && newc.sent_last {
+                (newc.last.tc, newc.min_member())
+            } else {
+                EMPTY_KEY
+            };
+            self.classes.push(newc);
+            self.tree.push_slot();
+            self.tree.set(id as usize, key);
+            self.classes[c].members = keep;
+        }
+        let cls = &mut self.classes[c];
+        cls.active = want;
+        if !want {
+            // masked out: timeline frozen, members report zeroed ticks so
+            // per-link monitors see no phantom transfers
+            cls.sent_last = false;
+            for p in cls.path_last.iter_mut() {
+                *p = PathTick::default();
+            }
+            self.tree.set(c, EMPTY_KEY);
+        } else if did_split {
+            // the donor kept only active members; refresh its (possibly
+            // changed) min-member key
+            let key = if cls.sent_last {
+                (cls.last.tc, cls.members[0])
+            } else {
+                EMPTY_KEY
+            };
+            self.tree.set(c, key);
+        }
+        if did_split {
+            if let Some(tt) = self.two_tier.as_mut() {
+                tt.groups_dirty = true;
+            }
+        }
+        did_split
+    }
+
+    /// Advance one iteration (k, 1-based) with every worker transmitting.
     pub fn tick(&mut self, t_comp: f64, tau: usize, bits: u64) -> Tick {
         self.tick_members(t_comp, tau, bits, None)
     }
@@ -298,10 +671,10 @@ impl VirtualClock {
     /// `tm_prev` goes stale, harmlessly dominated by `max(·, TS_k)` on
     /// rejoin) and the sync arrival is the max over active arrivals only.
     /// Masked-out workers report a zeroed [`WorkerTick`] so per-link
-    /// monitors see no phantom transfers. The first masked tick latches the
-    /// clock off the uniform fast path permanently — per-worker histories
-    /// may diverge from then on — which is why an all-true-forever run
-    /// (`ChurnSpec::none()`) stays bit-identical to [`Self::tick`].
+    /// monitors see no phantom transfers. A mask that splits a class
+    /// splits the timeline sharing permanently — an all-true-forever run
+    /// (`ChurnSpec::none()`) never splits and stays bit-identical to
+    /// [`Self::tick`].
     pub fn tick_members(
         &mut self,
         t_comp: f64,
@@ -309,86 +682,72 @@ impl VirtualClock {
         bits: u64,
         active: Option<&[bool]>,
     ) -> Tick {
-        let all_active = match active {
-            None => true,
-            Some(m) => {
-                assert_eq!(m.len(), self.tm_prev.len(), "mask/worker mismatch");
-                assert!(m.iter().any(|&a| a), "active set must be non-empty");
-                m.iter().all(|&a| a)
+        self.reconcile_mask(active);
+        let ts = self.next_ts(t_comp, tau);
+        for c in 0..self.classes.len() {
+            let cls = &mut self.classes[c];
+            if !cls.active {
+                continue;
             }
-        };
-        if !all_active {
-            self.uniform = false;
-        }
-        let k = self.tc.len() + 1;
-        let tc_delayed = if k as i64 - 1 - tau as i64 >= 1 {
-            self.tc[k - 2 - tau]
-        } else {
-            0.0
-        };
-        let ts = t_comp + tc_delayed.max(self.ts_prev);
-        let slowest = if self.uniform {
-            // identical links + identical histories (by induction from the
-            // all-zero start): worker 0's times ARE every worker's times —
-            // one transfer integration instead of n, bit-identical result
-            let link = self.fabric.link(0);
-            let start = self.tm_prev[0].max(ts);
-            let tm = link.transfer_end(start, bits);
-            let wt =
-                WorkerTick { tm, tc: tm + link.latency(), tx_secs: tm - start };
-            self.tm_prev.fill(tm);
-            for (total, last) in
-                self.tx_total.iter_mut().zip(self.worker_last.iter_mut())
-            {
-                *total += wt.tx_secs;
-                *last = wt;
-            }
-            wt
-        } else {
-            let mut slowest = WorkerTick {
-                tm: f64::NEG_INFINITY,
-                tc: f64::NEG_INFINITY,
-                tx_secs: 0.0,
+            let wt = if let Some(bond) = cls.bond.clone() {
+                tick_bonded(
+                    &bond,
+                    &mut cls.path_tm_prev,
+                    &mut cls.path_last,
+                    ts,
+                    bits,
+                )
+            } else {
+                let start = cls.tm_prev.max(ts);
+                let tm = cls.link.transfer_end(start, bits);
+                WorkerTick {
+                    tm,
+                    tc: tm + cls.link.latency(),
+                    tx_secs: tm - start,
+                }
             };
-            for i in 0..self.tm_prev.len() {
-                if let Some(m) = active {
-                    if !m[i] {
-                        // departed: timeline frozen, no phantom transfer
-                        self.worker_last[i] = WorkerTick::default();
-                        self.path_last[i].fill(PathTick::default());
-                        continue;
-                    }
-                }
-                let wt = if let Some(bond) = self.fabric.bond(i) {
-                    tick_bonded(
-                        bond,
-                        &mut self.path_tm_prev[i],
-                        &mut self.path_last[i],
-                        ts,
-                        bits,
-                    )
-                } else {
-                    let link = self.fabric.link(i);
-                    let start = self.tm_prev[i].max(ts);
-                    let tm = link.transfer_end(start, bits);
-                    WorkerTick {
-                        tm,
-                        tc: tm + link.latency(),
-                        tx_secs: tm - start,
-                    }
-                };
-                self.tm_prev[i] = wt.tm;
-                self.tx_total[i] += wt.tx_secs;
-                self.worker_last[i] = wt;
-                if wt.tc > slowest.tc {
-                    slowest = wt;
-                }
-            }
-            slowest
-        };
+            cls.tm_prev = wt.tm;
+            cls.tx_total += wt.tx_secs;
+            cls.last = wt;
+            cls.sent_last = true;
+            self.tree.set(c, (wt.tc, cls.members[0]));
+        }
+        let w = self.tree.winner();
+        debug_assert!(
+            self.classes[w].active && self.classes[w].sent_last,
+            "active set must be non-empty"
+        );
+        #[cfg(debug_assertions)]
+        self.assert_winner_matches_scan(w);
+        let slowest = self.classes[w].last;
         self.ts_prev = ts;
         self.tc.push(slowest.tc);
+        self.views_dirty = true;
         Tick { ts, tm: slowest.tm, tc: slowest.tc, tx_secs: slowest.tx_secs }
+    }
+
+    /// The retired O(n) scan, kept as the debug-build reference for the
+    /// tournament tree: first strict max over classes in min-member order.
+    #[cfg(debug_assertions)]
+    fn assert_winner_matches_scan(&self, winner: usize) {
+        let mut best_tc = f64::NEG_INFINITY;
+        let mut best_m = u32::MAX;
+        for cls in &self.classes {
+            if cls.active && cls.sent_last {
+                let (t, m) = (cls.last.tc, cls.min_member());
+                if t > best_tc || (t == best_tc && m < best_m) {
+                    best_tc = t;
+                    best_m = m;
+                }
+            }
+        }
+        let win = &self.classes[winner];
+        debug_assert_eq!(
+            best_tc.to_bits(),
+            win.last.tc.to_bits(),
+            "tournament tree disagrees with the reference scan"
+        );
+        debug_assert_eq!(best_m, win.min_member());
     }
 
     /// Advance one iteration on a two-tier topology (DESIGN.md §Topology):
@@ -411,69 +770,69 @@ impl VirtualClock {
         if self.two_tier.is_none() {
             return self.tick_members(t_comp, tau, lan_bits, active);
         }
-        if let Some(m) = active {
-            assert_eq!(m.len(), self.tm_prev.len(), "mask/worker mismatch");
-            assert!(m.iter().any(|&a| a), "active set must be non-empty");
+        self.reconcile_mask(active);
+        self.rebuild_region_groups();
+        let ts = self.next_ts(t_comp, tau);
+        // class pass: active aggregators hand off locally (timeline
+        // advances with TS, no wire), every other active class ships
+        // lan_bits over its link/bond
+        for cls in &mut self.classes {
+            if !cls.active {
+                continue;
+            }
+            if cls.aggregator {
+                cls.tm_prev = ts;
+                for p in cls.path_tm_prev.iter_mut() {
+                    *p = ts;
+                }
+                for p in cls.path_last.iter_mut() {
+                    *p = PathTick::default();
+                }
+                cls.last = WorkerTick { tm: ts, tc: ts, tx_secs: 0.0 };
+                cls.sent_last = true;
+                continue;
+            }
+            let wt = if let Some(bond) = cls.bond.clone() {
+                tick_bonded(
+                    &bond,
+                    &mut cls.path_tm_prev,
+                    &mut cls.path_last,
+                    ts,
+                    lan_bits,
+                )
+            } else {
+                let start = cls.tm_prev.max(ts);
+                let tm = cls.link.transfer_end(start, lan_bits);
+                WorkerTick {
+                    tm,
+                    tc: tm + cls.link.latency(),
+                    tx_secs: tm - start,
+                }
+            };
+            cls.tm_prev = wt.tm;
+            cls.tx_total += wt.tx_secs;
+            cls.last = wt;
+            cls.sent_last = true;
         }
-        let k = self.tc.len() + 1;
-        let tc_delayed = if k as i64 - 1 - tau as i64 >= 1 {
-            self.tc[k - 2 - tau]
-        } else {
-            0.0
-        };
-        let ts = t_comp + tc_delayed.max(self.ts_prev);
-        let tt = self.two_tier.as_mut().expect("checked above");
+        // region pass: O(regions + classes) via the precomputed groups
+        let tt = self.two_tier.as_mut().expect("two-tier");
         let mut slowest = RegionTick::default();
         let mut any_region = false;
-        for (r, region) in tt.regions.iter().enumerate() {
-            // LAN tier: every active non-aggregator member sends its
-            // compressed gradient to the aggregator; the partial is ready
-            // at the slowest arrival (the aggregator's own gradient is
-            // local, so a lone-aggregator region syncs at TS_k)
+        for r in 0..tt.regions.len() {
             let mut sync = ts;
             let mut senders = 0usize;
             let mut any_member = false;
-            for &i in &region.members {
-                if let Some(m) = active {
-                    if !m[i] {
-                        self.worker_last[i] = WorkerTick::default();
-                        self.path_last[i].fill(PathTick::default());
-                        continue;
-                    }
-                }
-                any_member = true;
-                if i == region.aggregator {
-                    // local hand-off: timeline advances with TS, no wire
-                    self.tm_prev[i] = ts;
-                    self.path_tm_prev[i].fill(ts);
-                    self.path_last[i].fill(PathTick::default());
-                    self.worker_last[i] =
-                        WorkerTick { tm: ts, tc: ts, tx_secs: 0.0 };
+            for &(c, count) in &tt.groups[r] {
+                let cls = &self.classes[c as usize];
+                if !cls.active {
                     continue;
                 }
-                let wt = if let Some(bond) = self.fabric.bond(i) {
-                    tick_bonded(
-                        bond,
-                        &mut self.path_tm_prev[i],
-                        &mut self.path_last[i],
-                        ts,
-                        lan_bits,
-                    )
-                } else {
-                    let link = self.fabric.link(i);
-                    let start = self.tm_prev[i].max(ts);
-                    let tm = link.transfer_end(start, lan_bits);
-                    WorkerTick {
-                        tm,
-                        tc: tm + link.latency(),
-                        tx_secs: tm - start,
-                    }
-                };
-                self.tm_prev[i] = wt.tm;
-                self.tx_total[i] += wt.tx_secs;
-                self.worker_last[i] = wt;
-                senders += 1;
-                sync = sync.max(wt.tc);
+                any_member = true;
+                if cls.aggregator {
+                    continue;
+                }
+                senders += count as usize;
+                sync = sync.max(cls.last.tc);
             }
             if !any_member {
                 // no active member: nothing to aggregate, WAN frozen
@@ -504,6 +863,7 @@ impl VirtualClock {
         assert!(any_region, "no region had an active member");
         self.ts_prev = ts;
         self.tc.push(slowest.wan_tc);
+        self.views_dirty = true;
         Tick {
             ts,
             tm: slowest.wan_tm,
@@ -512,13 +872,46 @@ impl VirtualClock {
         }
     }
 
+    /// Recompute the per-region class groups after a class-structure
+    /// change (split, re-election). O(workers + regions · classes); runs
+    /// only when `groups_dirty`.
+    fn rebuild_region_groups(&mut self) {
+        let Some(tt) = self.two_tier.as_mut() else {
+            return;
+        };
+        if !tt.groups_dirty {
+            return;
+        }
+        let ncls = self.classes.len();
+        let mut pos: Vec<u32> = vec![u32::MAX; ncls];
+        for (r, region) in tt.regions.iter().enumerate() {
+            let counts = &mut tt.groups[r];
+            counts.clear();
+            for &wkr in region.members.iter() {
+                let c = self.class_of[wkr];
+                let p = pos[c as usize];
+                if p == u32::MAX {
+                    pos[c as usize] = counts.len() as u32;
+                    counts.push((c, 1));
+                } else {
+                    counts[p as usize].1 += 1;
+                }
+            }
+            // reset the scratch for the next region
+            for &(c, _) in counts.iter() {
+                pos[c as usize] = u32::MAX;
+            }
+        }
+        tt.groups_dirty = false;
+    }
+
     pub fn iters(&self) -> usize {
         self.tc.len()
     }
 
     /// Total elapsed virtual time (sync TC of the last iteration).
     pub fn now(&self) -> f64 {
-        *self.tc.last().unwrap_or(&0.0)
+        self.tc.last()
     }
 }
 
@@ -578,9 +971,9 @@ mod tests {
         let link = Link::new(trace.clone(), 0.15);
         let mut single = VirtualClock::single_link(link.clone());
         let mut fab = VirtualClock::new(Fabric::replicate(link, 5));
-        // semantically identical fabric that defeats the uniform detector
-        // (one link wears a no-op Scaled(1.0) wrapper), forcing the general
-        // per-link loop — it must match the fast path bit-for-bit
+        // semantically identical fabric that defeats class sharing for one
+        // link (a no-op Scaled(1.0) wrapper forms a second class) — both
+        // classes must price bit-for-bit like the single link
         let mut mixed = VirtualClock::new(Fabric::new(vec![
             Link::new(trace.clone(), 0.15),
             Link::new(trace.clone(), 0.15),
@@ -588,6 +981,8 @@ mod tests {
             Link::new(trace.clone(), 0.15),
             Link::new(trace.scaled(1.0), 0.15),
         ]));
+        assert_eq!(fab.timeline_classes(), 1);
+        assert_eq!(mixed.timeline_classes(), 2);
         for k in 1..=400usize {
             let tau = k % 3;
             let bits = 500_000 + (k as u64 % 11) * 250_000;
@@ -598,17 +993,60 @@ mod tests {
             assert_eq!(a.tm.to_bits(), b.tm.to_bits(), "k={k}");
             assert_eq!(a.tc.to_bits(), b.tc.to_bits(), "k={k}");
             assert_eq!(a.tx_secs.to_bits(), b.tx_secs.to_bits(), "k={k}");
-            assert_eq!(a.tc.to_bits(), c.tc.to_bits(), "k={k} (general loop)");
-            assert_eq!(a.tm.to_bits(), c.tm.to_bits(), "k={k} (general loop)");
+            assert_eq!(a.tc.to_bits(), c.tc.to_bits(), "k={k} (two classes)");
+            assert_eq!(a.tm.to_bits(), c.tm.to_bits(), "k={k} (two classes)");
         }
         assert_eq!(single.now().to_bits(), fab.now().to_bits());
         assert_eq!(single.now().to_bits(), mixed.now().to_bits());
     }
 
     #[test]
+    fn reference_scan_mode_is_bit_identical_to_class_sharing() {
+        let fabric = || {
+            Fabric::with_straggler(
+                6,
+                BandwidthTrace::constant(1e8),
+                0.1,
+                0.5,
+                2.0,
+            )
+        };
+        let mut shared = VirtualClock::new(fabric());
+        let mut reference = VirtualClock::new(fabric()).with_reference_scan();
+        assert_eq!(shared.timeline_classes(), 2);
+        assert_eq!(reference.timeline_classes(), 6);
+        let mut mask = vec![true; 6];
+        for k in 1..=300usize {
+            if k % 37 == 0 {
+                mask[k % 6] = !mask[k % 6];
+                if !mask.iter().any(|&a| a) {
+                    mask[0] = true;
+                }
+            }
+            let bits = 600_000 + (k as u64 % 9) * 150_000;
+            let a = shared.tick_members(0.05, k % 4, bits, Some(&mask));
+            let b = reference.tick_members(0.05, k % 4, bits, Some(&mask));
+            assert_eq!(a.tc.to_bits(), b.tc.to_bits(), "k={k}");
+            assert_eq!(a.tm.to_bits(), b.tm.to_bits(), "k={k}");
+            assert_eq!(a.tx_secs.to_bits(), b.tx_secs.to_bits(), "k={k}");
+        }
+        // per-worker views agree too
+        let sw = shared.worker_ticks().to_vec();
+        let rw = reference.worker_ticks().to_vec();
+        for i in 0..6 {
+            assert_eq!(sw[i].tc.to_bits(), rw[i].tc.to_bits(), "worker {i}");
+        }
+        let st = shared.tx_totals().to_vec();
+        let rt = reference.tx_totals().to_vec();
+        for i in 0..6 {
+            assert_eq!(st[i].to_bits(), rt[i].to_bits(), "worker {i}");
+        }
+    }
+
+    #[test]
     fn all_true_mask_is_bit_identical_to_tick() {
         // the determinism contract at the clock level: a mask that never
-        // masks anyone out must not perturb a single bit (fast path intact)
+        // masks anyone out must not perturb a single bit (no splits)
         let fabric = || {
             Fabric::with_straggler(
                 4,
@@ -628,6 +1066,7 @@ mod tests {
             assert_eq!(a.tc.to_bits(), b.tc.to_bits(), "k={k}");
             assert_eq!(a.tm.to_bits(), b.tm.to_bits(), "k={k}");
         }
+        assert_eq!(masked.timeline_classes(), 2, "no splits on all-true");
     }
 
     #[test]
@@ -674,7 +1113,6 @@ mod tests {
         wan_bps: f64,
         wan_lat: f64,
     ) -> VirtualClock {
-        use crate::topo::RegionTopo;
         assert_eq!(n % per_region, 0);
         let regions: Vec<RegionTopo> = (0..n / per_region)
             .map(|r| RegionTopo {
@@ -726,6 +1164,9 @@ mod tests {
     #[test]
     fn two_tier_tick_prices_both_hops() {
         let mut clock = two_tier_clock(4, 2, 1e8, 0.01, 1e7, 0.3);
+        // aggregators are carved into singleton classes at construction:
+        // 1 shared member class + 2 aggregator singletons
+        assert_eq!(clock.timeline_classes(), 3);
         let t = clock.tick_topo(0.1, 0, 1_000_000, 1_000_000, None);
         // region sync: worker 1's LAN arrival = 0.1 + 0.01s tx + 0.01 lat
         let rts = clock.region_ticks();
@@ -805,9 +1246,10 @@ mod tests {
             assert_eq!(tick.tc.to_bits(), max_tc.to_bits());
             // worker 0 (quarter bandwidth, double latency) is the straggler
             assert_eq!(tick.tc.to_bits(), wts[0].tc.to_bits());
+            let straggler_tx = wts[0].tx_secs;
             for w in &wts[1..] {
                 assert!(w.tc <= tick.tc);
-                assert!(w.tx_secs < wts[0].tx_secs);
+                assert!(w.tx_secs < straggler_tx);
             }
         }
         // the straggler accumulated 4x the healthy transmission time
@@ -819,7 +1261,7 @@ mod tests {
     fn k1_bonded_clock_is_bit_identical_to_the_plain_fabric() {
         // the bond determinism contract at the clock level: wrapping every
         // link in a 1-path bond must not perturb a single bit, even though
-        // it forces the general (non-uniform) loop
+        // it forces singleton classes
         let link = Link::new(
             BandwidthTrace::new(crate::netsim::TraceKind::Sine {
                 mean_bps: 8e7,
@@ -835,6 +1277,8 @@ mod tests {
         }
         let mut plain = VirtualClock::new(plain_fabric);
         let mut bonded = VirtualClock::new(bonded_fabric);
+        assert_eq!(plain.timeline_classes(), 1);
+        assert_eq!(bonded.timeline_classes(), 3, "bonds stay singleton");
         for k in 1..=300usize {
             let bits = if k % 13 == 0 {
                 0

@@ -21,6 +21,7 @@
 //! model dimension across the same pool — with a fixed worker-order
 //! reduction per shard so every pool size produces bit-identical runs.
 
+pub mod arrival;
 pub mod clock;
 pub mod pipeline;
 pub mod worker;

@@ -36,6 +36,7 @@ use crate::deco::DecoInput;
 use crate::elastic::{
     ChurnEvent, ChurnSpec, ChurnTimeline, DrainPolicy, MemberState, Membership,
 };
+use crate::metrics::sink::{BufferSink, MetricsSink};
 use crate::metrics::{Record, RegionRecord, RunResult};
 use crate::netsim::{Fabric, FabricMonitor, Link};
 use crate::optim::GradOracle;
@@ -493,11 +494,31 @@ impl<O: GradOracle> TrainLoop<O> {
         }
     }
 
-    /// Run to completion. `task` labels the result.
+    /// Run to completion, buffering every logged record. `task` labels
+    /// the result. Convenience over [`Self::run_streamed`] for runs whose
+    /// record volume is analysis-sized.
     pub fn run(&mut self, task: &str) -> RunResult {
+        let mut sink = BufferSink::new();
+        let mut result = self
+            .run_streamed(task, &mut sink)
+            .expect("the buffering sink cannot fail");
+        result.records = sink.into_records();
+        result
+    }
+
+    /// Run to completion, handing each logged [`Record`] to `sink` the
+    /// moment it exists instead of buffering (DESIGN.md §Perf) — the
+    /// bounded-memory path for 100k-worker campaigns. The returned
+    /// [`RunResult`] carries the run totals with an empty `records`; the
+    /// sink owns the rows (and, for `CsvSink`, the incremental folds).
+    /// A sink error aborts the run.
+    pub fn run_streamed(
+        &mut self,
+        task: &str,
+        sink: &mut dyn MetricsSink,
+    ) -> anyhow::Result<RunResult> {
         let n = self.workers.len();
         let dim = self.x.len();
-        let mut records = Vec::new();
         let mut last_grad_norm: Option<f64> = None;
         let method = self.strategy.name().to_string();
         let serial = WorkerPool::serial();
@@ -759,7 +780,7 @@ impl<O: GradOracle> TrainLoop<O> {
             // (Σ bandwidth, min latency) view tracks the real aggregate
             // (DESIGN.md §Bonding).
             if bits > 0 {
-                for (i, wt) in self.clock.worker_ticks().iter().enumerate() {
+                for i in 0..n {
                     if !self.member_mask[i] {
                         continue;
                     }
@@ -772,8 +793,13 @@ impl<O: GradOracle> TrainLoop<O> {
                                 );
                             }
                         }
-                    } else if wt.tx_secs > 0.0 {
-                        self.monitor.observe_transfer(i, bits, wt.tx_secs);
+                    } else {
+                        // copied out: the lazily materialized view is O(1)
+                        // after the first post-tick access
+                        let wt = self.clock.worker_ticks()[i];
+                        if wt.tx_secs > 0.0 {
+                            self.monitor.observe_transfer(i, bits, wt.tx_secs);
+                        }
                     }
                 }
             }
@@ -840,7 +866,7 @@ impl<O: GradOracle> TrainLoop<O> {
                 || diverged
             {
                 let loss = self.oracle.loss(&self.x);
-                records.push(Record {
+                sink.record(&Record {
                     iter: t,
                     time: tick.tc,
                     loss,
@@ -860,7 +886,7 @@ impl<O: GradOracle> TrainLoop<O> {
                             wan_bits: wb,
                         })
                         .collect(),
-                });
+                })?;
                 if let Some(target) = self.params.loss_target {
                     if loss <= target {
                         break;
@@ -877,14 +903,14 @@ impl<O: GradOracle> TrainLoop<O> {
             }
         }
 
-        RunResult {
+        Ok(RunResult {
             method,
             task: task.to_string(),
             workers: n,
             total_time: self.clock.now(),
             total_iters: self.clock.iters(),
-            records,
-        }
+            records: Vec::new(),
+        })
     }
 }
 
@@ -1031,8 +1057,8 @@ mod tests {
         let lan = Fabric::homogeneous(4, BandwidthTrace::constant(1e9), 0.005);
         let topo = Topology::TwoTier {
             regions: vec![
-                RegionTopo { members: vec![0, 1], aggregator: 0 },
-                RegionTopo { members: vec![2, 3], aggregator: 2 },
+                RegionTopo::new(vec![0, 1], 0),
+                RegionTopo::new(vec![2, 3], 2),
             ],
             wan: Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.3),
         };

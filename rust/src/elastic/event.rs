@@ -20,6 +20,8 @@
 //! scenario naming a path the bond doesn't have fails with a clear error
 //! instead of a mid-run panic.
 
+use std::sync::Arc;
+
 use crate::netsim::{DegradeWindow, Fabric};
 use anyhow::{anyhow, Result};
 
@@ -68,10 +70,14 @@ pub struct TimedEvent {
 }
 
 /// A compiled, time-sorted churn schedule for one run.
+///
+/// The event list is `Arc`-shared: sweeps clone one compiled timeline into
+/// every cell, and the clone bumps a refcount instead of copying the
+/// schedule (the PR-5 grid-sharing pattern applied to churn timelines).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ChurnTimeline {
     /// sorted ascending by `t`; ties keep insertion order (stable sort)
-    events: Vec<TimedEvent>,
+    events: Arc<[TimedEvent]>,
 }
 
 impl ChurnTimeline {
@@ -84,7 +90,7 @@ impl ChurnTimeline {
     /// [`Self::validated`] for schedules from user configs.
     pub fn new(mut events: Vec<TimedEvent>) -> Self {
         events.sort_by(|a, b| a.t.total_cmp(&b.t));
-        Self { events }
+        Self { events: events.into() }
     }
 
     /// Sort and validate against a run with `n` single-path workers: worker

@@ -1,0 +1,334 @@
+//! Resumable sweep campaigns (DESIGN.md §Perf).
+//!
+//! A large sweep is a sequence of deterministic *cells*, each contributing
+//! rows to one campaign CSV. The engine checkpoints progress to a manifest
+//! after every cell — fingerprint, completed cell ids, and the CSV byte
+//! offset — with an atomic temp-file + rename, so a killed campaign
+//! resumes where it stopped and produces a **byte-identical** CSV: the
+//! resume truncates the CSV back to the last checkpointed offset
+//! (discarding any torn tail row the kill left behind) and re-runs only
+//! the unfinished cells. Rows must therefore be deterministic functions of
+//! the cell — no wall-clock timestamps, no RNG outside the cell's own
+//! seed. A manifest whose fingerprint disagrees with the spec (the sweep's
+//! shape changed under an old output directory) is a hard error, never a
+//! silent partial reuse.
+
+use std::collections::HashSet;
+use std::fs;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+const MANIFEST_MAGIC: &str = "deco-campaign v1";
+
+/// The shape of a campaign: where it lives, what identifies its config,
+/// and the ordered cell ids.
+#[derive(Clone, Debug)]
+pub struct CampaignSpec {
+    /// output directory (created if missing)
+    pub dir: PathBuf,
+    /// campaign name: rows land in `<name>.csv`, progress in
+    /// `<name>.manifest`
+    pub name: String,
+    /// single-line config fingerprint; resuming under a different
+    /// fingerprint is a hard error
+    pub fingerprint: String,
+    /// CSV header line (no trailing newline)
+    pub header: String,
+    /// cell ids in execution order (unique, single-line)
+    pub cells: Vec<String>,
+    /// stop (checkpointed, resumable) after this many cells *this
+    /// invocation* — the kill-simulation hook CI's resume test drives
+    pub max_cells: Option<usize>,
+}
+
+impl CampaignSpec {
+    pub fn csv_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.csv", self.name))
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.manifest", self.name))
+    }
+}
+
+/// How an invocation ended.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CampaignOutcome {
+    /// every cell is done; the CSV is final
+    Complete,
+    /// `max_cells` hit first; rerun with the same spec to continue
+    Paused { done: usize, total: usize },
+}
+
+struct Manifest {
+    fingerprint: String,
+    csv_bytes: u64,
+    completed: Vec<String>,
+}
+
+impl Manifest {
+    fn parse(text: &str, path: &Path) -> Result<Self> {
+        let mut lines = text.lines();
+        if lines.next() != Some(MANIFEST_MAGIC) {
+            bail!("{} is not a campaign manifest", path.display());
+        }
+        let mut fingerprint = None;
+        let mut csv_bytes = None;
+        let mut completed = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            match line.split_once(' ') {
+                Some(("fingerprint", v)) => fingerprint = Some(v.to_string()),
+                Some(("csv_bytes", v)) => {
+                    csv_bytes = Some(v.parse::<u64>().with_context(|| {
+                        format!("bad csv_bytes in {}", path.display())
+                    })?)
+                }
+                Some(("done", v)) => completed.push(v.to_string()),
+                _ => bail!(
+                    "unrecognized manifest line {line:?} in {}",
+                    path.display()
+                ),
+            }
+        }
+        let (Some(fingerprint), Some(csv_bytes)) = (fingerprint, csv_bytes)
+        else {
+            bail!("incomplete campaign manifest at {}", path.display());
+        };
+        Ok(Self { fingerprint, csv_bytes, completed })
+    }
+
+    fn render(&self) -> String {
+        let mut s = format!(
+            "{MANIFEST_MAGIC}\nfingerprint {}\ncsv_bytes {}\n",
+            self.fingerprint, self.csv_bytes
+        );
+        for id in &self.completed {
+            s.push_str("done ");
+            s.push_str(id);
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Atomic checkpoint: write next to the manifest, then rename over it.
+    fn store(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("manifest.tmp");
+        fs::write(&tmp, self.render())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("committing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Run (or resume) a campaign. `run_cell(index, id)` produces the cell's
+/// CSV rows (no trailing newlines); it runs once per *incomplete* cell, in
+/// spec order, and its output is appended and checkpointed before the next
+/// cell starts.
+pub fn run_campaign(
+    spec: &CampaignSpec,
+    mut run_cell: impl FnMut(usize, &str) -> Result<Vec<String>>,
+) -> Result<CampaignOutcome> {
+    for id in &spec.cells {
+        assert!(
+            !id.contains('\n') && !id.is_empty(),
+            "cell ids must be non-empty single lines"
+        );
+    }
+    assert!(
+        spec.cells.iter().collect::<HashSet<_>>().len() == spec.cells.len(),
+        "cell ids must be unique"
+    );
+    fs::create_dir_all(&spec.dir)
+        .with_context(|| format!("creating {}", spec.dir.display()))?;
+    let csv_path = spec.csv_path();
+    let manifest_path = spec.manifest_path();
+
+    let mut manifest = if manifest_path.exists() {
+        let text = fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let m = Manifest::parse(&text, &manifest_path)?;
+        if m.fingerprint != spec.fingerprint {
+            bail!(
+                "campaign at {} was started with a different configuration \
+                 (manifest fingerprint {:?}, current {:?}); point the sweep \
+                 at a fresh directory or delete the stale campaign",
+                spec.dir.display(),
+                m.fingerprint,
+                spec.fingerprint
+            );
+        }
+        for id in &m.completed {
+            if !spec.cells.contains(id) {
+                bail!(
+                    "manifest at {} records completed cell {id:?} the \
+                     current spec doesn't contain",
+                    manifest_path.display()
+                );
+            }
+        }
+        m
+    } else {
+        Manifest {
+            fingerprint: spec.fingerprint.clone(),
+            csv_bytes: 0,
+            completed: Vec::new(),
+        }
+    };
+
+    let mut csv = fs::OpenOptions::new()
+        .create(true)
+        .read(true)
+        .write(true)
+        .open(&csv_path)
+        .with_context(|| format!("opening {}", csv_path.display()))?;
+    if manifest.completed.is_empty() && manifest.csv_bytes == 0 {
+        // fresh campaign: (re)write the header and checkpoint it, so even
+        // a kill inside the first cell resumes cleanly
+        csv.set_len(0)?;
+        csv.write_all(spec.header.as_bytes())?;
+        csv.write_all(b"\n")?;
+        csv.flush()?;
+        manifest.csv_bytes = csv.stream_position()?;
+        manifest.store(&manifest_path)?;
+    } else {
+        // resume: drop any torn tail the kill left past the checkpoint
+        csv.set_len(manifest.csv_bytes)?;
+        csv.seek(SeekFrom::Start(manifest.csv_bytes))?;
+    }
+
+    let done: HashSet<String> = manifest.completed.iter().cloned().collect();
+    let total = spec.cells.len();
+    let mut ran = 0usize;
+    for (i, id) in spec.cells.iter().enumerate() {
+        if done.contains(id) {
+            continue;
+        }
+        if let Some(max) = spec.max_cells {
+            if ran >= max {
+                return Ok(CampaignOutcome::Paused {
+                    done: manifest.completed.len(),
+                    total,
+                });
+            }
+        }
+        let rows = run_cell(i, id)
+            .with_context(|| format!("campaign cell {id:?}"))?;
+        for row in &rows {
+            csv.write_all(row.as_bytes())?;
+            csv.write_all(b"\n")?;
+        }
+        csv.flush()?;
+        manifest.csv_bytes = csv.stream_position()?;
+        manifest.completed.push(id.clone());
+        manifest.store(&manifest_path)?;
+        ran += 1;
+    }
+    Ok(CampaignOutcome::Complete)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(dir: &Path, max_cells: Option<usize>) -> CampaignSpec {
+        CampaignSpec {
+            dir: dir.to_path_buf(),
+            name: "demo".into(),
+            fingerprint: "demo-v1 cells=3".into(),
+            header: "cell,value".into(),
+            cells: vec!["a".into(), "b".into(), "c".into()],
+            max_cells,
+        }
+    }
+
+    fn cell_rows(i: usize, id: &str) -> Result<Vec<String>> {
+        Ok(vec![format!("{id},{}", i * 10), format!("{id},{}", i * 10 + 1)])
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "deco_campaign_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn killed_campaign_resumes_byte_identical() {
+        let straight = tmp_dir("straight");
+        let s = spec(&straight, None);
+        assert_eq!(
+            run_campaign(&s, cell_rows).unwrap(),
+            CampaignOutcome::Complete
+        );
+        let reference = fs::read(s.csv_path()).unwrap();
+
+        // same campaign, "killed" after one cell per invocation
+        let chunked = tmp_dir("chunked");
+        let k = spec(&chunked, Some(1));
+        assert_eq!(
+            run_campaign(&k, cell_rows).unwrap(),
+            CampaignOutcome::Paused { done: 1, total: 3 }
+        );
+        // simulate a torn row from a kill mid-append: the resume must
+        // truncate it away
+        {
+            let mut f = fs::OpenOptions::new()
+                .append(true)
+                .open(k.csv_path())
+                .unwrap();
+            f.write_all(b"b,partial-garbage").unwrap();
+        }
+        assert_eq!(
+            run_campaign(&k, cell_rows).unwrap(),
+            CampaignOutcome::Paused { done: 2, total: 3 }
+        );
+        assert_eq!(
+            run_campaign(&k, cell_rows).unwrap(),
+            CampaignOutcome::Complete
+        );
+        assert_eq!(fs::read(k.csv_path()).unwrap(), reference);
+        // idempotent once complete: no cells rerun, bytes untouched
+        let reran = run_campaign(&k, |_, id| {
+            panic!("cell {id} must not rerun after completion")
+        })
+        .unwrap();
+        assert_eq!(reran, CampaignOutcome::Complete);
+        assert_eq!(fs::read(k.csv_path()).unwrap(), reference);
+
+        let _ = fs::remove_dir_all(&straight);
+        let _ = fs::remove_dir_all(&chunked);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_a_hard_error() {
+        let dir = tmp_dir("fingerprint");
+        let s = spec(&dir, Some(1));
+        run_campaign(&s, cell_rows).unwrap();
+        let mut changed = spec(&dir, None);
+        changed.fingerprint = "demo-v2 cells=3".into();
+        let err = run_campaign(&changed, cell_rows).unwrap_err();
+        assert!(err.to_string().contains("different configuration"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_completed_cell_is_rejected() {
+        let dir = tmp_dir("unknown_cell");
+        let s = spec(&dir, None);
+        run_campaign(&s, cell_rows).unwrap();
+        let mut shrunk = spec(&dir, None);
+        shrunk.cells.pop();
+        let err = run_campaign(&shrunk, cell_rows).unwrap_err();
+        assert!(err.to_string().contains("doesn't contain"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

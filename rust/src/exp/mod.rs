@@ -24,9 +24,14 @@
 //! | bonded | multi-path bonding vs single-homing under outage |
 //! |        | churn: water-filling failover degrades where a   |
 //! |        | single path stalls (beyond the paper)            |
+//! | scale  | 100k-worker clock-engine campaign: shared        |
+//! |        | timeline classes vs the O(n) reference scan,     |
+//! |        | resumable via the campaign manifest (beyond the  |
+//! |        | paper)                                           |
 
 pub mod ablation;
 pub mod bonded;
+pub mod campaign;
 pub mod churn;
 pub mod fig1;
 pub mod fig2;
@@ -36,6 +41,7 @@ pub mod fig6;
 pub mod hetero;
 pub mod phi;
 pub mod runner;
+pub mod scale;
 pub mod table1;
 pub mod thm3;
 pub mod topo;

@@ -1,0 +1,190 @@
+//! `repro exp scale` — the 100k-worker clock-engine campaign
+//! (DESIGN.md §Perf, beyond the paper's n ≤ 32 testbed).
+//!
+//! Drives the shared-timeline-class `VirtualClock` across worker counts up
+//! to 100 000 under three scenarios (uniform fabric, straggler, periodic
+//! churn), one resumable campaign cell per (n, scenario) pair. Every cell
+//! is a deterministic function of its id — the campaign CSV is
+//! byte-identical whether the sweep ran straight through or was killed and
+//! resumed (the CI exercises exactly that with `--max-cells`). Cells small
+//! enough to afford it re-run under [`VirtualClock::with_reference_scan`]
+//! — the O(n)-per-tick singleton-class engine — and assert bit-identical
+//! sync arrivals, which is the in-campaign form of the property tests'
+//! incremental-vs-reference contract.
+
+use anyhow::Result;
+
+use super::campaign::{run_campaign, CampaignOutcome, CampaignSpec};
+use crate::coordinator::VirtualClock;
+use crate::netsim::{BandwidthTrace, Fabric};
+
+/// Reference-scan verification ceiling: above this the O(n·ticks)
+/// singleton engine is the whole cost of the cell, so big cells trust the
+/// property-tested engine (ref_checked = 0 in the CSV).
+const REF_CHECK_MAX: usize = 1024;
+
+const SCENARIOS: [&str; 3] = ["uniform", "straggler", "churn"];
+
+fn fabric_for(scenario: &str, n: usize) -> Fabric {
+    match scenario {
+        "uniform" => {
+            Fabric::homogeneous(n, BandwidthTrace::constant(1e8), 0.05)
+        }
+        "straggler" => Fabric::with_straggler(
+            n,
+            BandwidthTrace::constant(1e8),
+            0.05,
+            0.25,
+            2.0,
+        ),
+        "churn" => {
+            Fabric::homogeneous(n, BandwidthTrace::constant(1e8), 0.05)
+        }
+        other => unreachable!("unknown scenario {other}"),
+    }
+}
+
+/// Drive `clock` for `ticks` iterations of the scenario's deterministic
+/// (τ, bits, mask) schedule and return the per-tick sync arrivals' last
+/// value via the clock itself.
+fn drive(clock: &mut VirtualClock, scenario: &str, n: usize, ticks: usize) {
+    // churn toggles the first n/16 workers every 17 ticks — one class
+    // split on the first departure, stable class count afterwards
+    let block = (n / 16).clamp(1, n - 1);
+    let mut mask = vec![true; n];
+    for k in 1..=ticks {
+        if scenario == "churn" && k % 17 == 0 {
+            let on = !mask[0];
+            for m in mask.iter_mut().take(block) {
+                *m = on;
+            }
+        }
+        let tau = k % 4;
+        let bits = 1_000_000 + (k as u64 % 7) * 250_000;
+        let active = if scenario == "churn" { Some(&mask[..]) } else { None };
+        clock.tick_members(0.05, tau, bits, active);
+    }
+}
+
+/// One campaign cell: run the class engine, optionally cross-check the
+/// reference engine bit-for-bit, and emit the CSV row.
+fn run_cell(n: usize, scenario: &str, ticks: usize) -> Result<String> {
+    let mut clock = VirtualClock::new(fabric_for(scenario, n));
+    drive(&mut clock, scenario, n, ticks);
+    let tx_sum: f64 = clock.tx_totals().iter().sum();
+    let (now, classes) = (clock.now(), clock.timeline_classes());
+
+    let ref_checked = n <= REF_CHECK_MAX;
+    if ref_checked {
+        let mut reference =
+            VirtualClock::new(fabric_for(scenario, n)).with_reference_scan();
+        drive(&mut reference, scenario, n, ticks);
+        anyhow::ensure!(
+            reference.now().to_bits() == now.to_bits(),
+            "class engine diverged from the reference scan \
+             (n={n} scenario={scenario}: {} vs {now})",
+            reference.now()
+        );
+        let ref_tx: f64 = reference.tx_totals().iter().sum();
+        anyhow::ensure!(
+            ref_tx.to_bits() == tx_sum.to_bits(),
+            "tx accounting diverged from the reference scan \
+             (n={n} scenario={scenario}: {ref_tx} vs {tx_sum})"
+        );
+    }
+    Ok(format!(
+        "{n},{scenario},{ticks},{classes},{now:.6},{tx_sum:.6},{}",
+        u8::from(ref_checked)
+    ))
+}
+
+/// Run (or resume) the scale campaign. `--fast` shrinks the worker counts
+/// for CI; `--dir` overrides the output directory; `--max-cells` pauses
+/// after that many cells (the resume demonstration).
+pub fn main(
+    fast: bool,
+    dir: Option<&str>,
+    max_cells: Option<usize>,
+) -> Result<()> {
+    let (sizes, ticks): (&[usize], usize) = if fast {
+        (&[64, 512, 4096], 200)
+    } else {
+        (&[1000, 10_000, 100_000], 400)
+    };
+    let dir = match dir {
+        Some(d) => std::path::PathBuf::from(d),
+        None => super::results_dir(),
+    };
+    let cells: Vec<String> = sizes
+        .iter()
+        .flat_map(|&n| {
+            SCENARIOS.iter().map(move |s| format!("n{n}_{s}"))
+        })
+        .collect();
+    let spec = CampaignSpec {
+        dir,
+        name: "scale".into(),
+        fingerprint: format!(
+            "scale-v1 sizes={sizes:?} ticks={ticks} scenarios={SCENARIOS:?}"
+        ),
+        header: "n,scenario,ticks,classes,virtual_time,tx_total,ref_checked"
+            .into(),
+        cells,
+        max_cells,
+    };
+    let csv_path = spec.csv_path();
+    let outcome = run_campaign(&spec, |i, id| {
+        let n = sizes[i / SCENARIOS.len()];
+        let scenario = SCENARIOS[i % SCENARIOS.len()];
+        debug_assert_eq!(id, format!("n{n}_{scenario}"));
+        eprintln!("[scale] cell {id}: n={n} {scenario} ({ticks} ticks)");
+        Ok(vec![run_cell(n, scenario, ticks)?])
+    })?;
+    match outcome {
+        CampaignOutcome::Complete => {
+            println!("{}", std::fs::read_to_string(&csv_path)?.trim_end());
+            println!("wrote {}", csv_path.display());
+        }
+        CampaignOutcome::Paused { done, total } => {
+            println!(
+                "campaign paused at {done}/{total} cells (checkpointed to \
+                 {}); rerun the same command to resume",
+                spec.manifest_path().display()
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_are_deterministic_and_ref_checked() {
+        // n=96: big enough for real class sharing, small enough for the
+        // in-cell reference cross-check to run (and it must pass)
+        for scenario in SCENARIOS {
+            let a = run_cell(96, scenario, 60).unwrap();
+            let b = run_cell(96, scenario, 60).unwrap();
+            assert_eq!(a, b, "{scenario} cell must be deterministic");
+            assert!(a.ends_with(",1"), "{scenario} cell must be ref-checked");
+        }
+    }
+
+    #[test]
+    fn class_counts_stay_tiny_under_sharing() {
+        let mut uniform = VirtualClock::new(fabric_for("uniform", 2048));
+        drive(&mut uniform, "uniform", 2048, 50);
+        assert_eq!(uniform.timeline_classes(), 1);
+
+        let mut straggler = VirtualClock::new(fabric_for("straggler", 2048));
+        drive(&mut straggler, "straggler", 2048, 50);
+        assert_eq!(straggler.timeline_classes(), 2);
+
+        let mut churn = VirtualClock::new(fabric_for("churn", 2048));
+        drive(&mut churn, "churn", 2048, 50);
+        // one split when the churn block first departs; stable afterwards
+        assert_eq!(churn.timeline_classes(), 2);
+    }
+}

@@ -3,9 +3,10 @@
 //!
 //! ```text
 //! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|hetero|churn|topo|
-//!            bonded|all>
+//!            bonded|scale|all>
 //!           [--scale F] [--tasks t1 t2] [--nodes 4 8] [--workers N]
 //!           [--task NAME] [--t-comp F] [--mult F] [--seed N]
+//!           [--fast] [--dir PATH] [--max-cells N]
 //! repro train --config cfg.json [--out run.csv]
 //! repro deco --a BPS --b S --t-comp S --s-g BITS
 //! repro artifacts
@@ -57,6 +58,11 @@ impl Args {
         self.flags.get(key)?.first().map(|s| s.as_str())
     }
 
+    /// Bare switches like `--fast` (present with no values).
+    fn flag_present(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
     fn flag_vec(&self, key: &str) -> Vec<String> {
         self.flags.get(key).cloned().unwrap_or_default()
     }
@@ -74,7 +80,7 @@ USAGE:
   repro exp <id> [--scale F] [--tasks T..] [--nodes N..] [--workers N]
                  [--task NAME] [--t-comp F] [--mult F] [--seed N]
       ids: fig1 fig2 fig4 fig5 fig6 table1 thm3 phi ablation hetero churn
-           topo bonded all
+           topo bonded scale all
       hetero: straggler severity x strategy sweep on a per-worker fabric
               (--workers N, --mult F = straggler latency multiplier)
       churn:  worker churn x link outages x strategy on the elastic fabric —
@@ -86,6 +92,9 @@ USAGE:
       bonded: multi-path bonding vs single-homing under fast-path outages —
               water-filling failover degrades where a single path stalls
               (--workers N, --seed N)
+      scale:  100k-worker clock-engine campaign, resumable via a manifest
+              (--fast shrinks n for CI, --dir PATH overrides results/,
+              --max-cells N pauses after N cells to demonstrate resume)
   repro train --config cfg.json [--out run.csv]
   repro deco --a BPS --b SECONDS --t-comp SECONDS --s-g BITS
   repro artifacts
@@ -148,6 +157,13 @@ fn main() -> Result<()> {
                 "bonded" => {
                     let seed = args.flag_usize("seed").unwrap_or(7) as u64;
                     exp::bonded::main(scale, workers, seed)?;
+                }
+                "scale" => {
+                    exp::scale::main(
+                        args.flag_present("fast"),
+                        args.flag_str("dir"),
+                        args.flag_usize("max_cells"),
+                    )?;
                 }
                 "all" => {
                     exp::fig1::main(t_comp)?;

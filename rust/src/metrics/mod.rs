@@ -1,7 +1,15 @@
 //! Run metrics: per-iteration records, time-to-target extraction (the
 //! paper's headline quantity), and CSV/JSON writers for the experiment
 //! generators.
+//!
+//! Two consumption styles share one row format: [`RunResult`] buffers every
+//! [`Record`] (the small-run / analysis path) while [`sink::CsvSink`]
+//! streams rows to disk with O(1) memory and folds the summary statistics
+//! incrementally (the 100k-worker path — DESIGN.md §Perf). Both emit rows
+//! through [`csv_header`]/[`csv_row`], so the streamed file is
+//! byte-identical to `RunResult::to_csv`.
 
+pub mod sink;
 
 use std::io::Write;
 use std::path::Path;
@@ -116,52 +124,10 @@ impl RunResult {
 
     pub fn to_csv(&self) -> String {
         let nregions = self.region_columns();
-        let mut header = vec![
-            "iter".to_string(),
-            "time".into(),
-            "loss".into(),
-            "train_loss".into(),
-            "tau".into(),
-            "delta".into(),
-            "grad_norm".into(),
-            "bandwidth".into(),
-        ];
-        if nregions > 0 {
-            header.push("wan_delta".into());
-            for r in 0..nregions {
-                header.push(format!("region{r}_sync"));
-                header.push(format!("region{r}_wan_bits"));
-            }
-        }
-        let mut s = header.join(",");
+        let mut s = csv_header(nregions);
         s.push('\n');
         for r in &self.records {
-            let mut cells = vec![
-                r.iter.to_string(),
-                format!("{:.6}", r.time),
-                format!("{:.6}", r.loss),
-                format!("{:.6}", r.train_loss),
-                r.tau.to_string(),
-                format!("{:.4}", r.delta),
-                format!("{:.6}", r.grad_norm),
-                format!("{:.0}", r.bandwidth),
-            ];
-            if nregions > 0 {
-                cells.push(format!("{:.4}", r.wan_delta));
-                for reg in &r.regions {
-                    cells.push(format!("{:.6}", reg.sync));
-                    cells.push(reg.wan_bits.to_string());
-                }
-            }
-            assert_eq!(
-                cells.len(),
-                header.len(),
-                "CSV row at iter {} has {} cells for a {}-column header",
-                r.iter,
-                cells.len(),
-                header.len()
-            );
-            s.push_str(&cells.join(","));
+            s.push_str(&csv_row(r, nregions));
             s.push('\n');
         }
         s
@@ -223,6 +189,62 @@ impl RunResult {
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_json().to_string_pretty().as_bytes())
     }
+}
+
+/// The CSV header line (no trailing newline) for a run whose records carry
+/// `nregions` region entries. The single source of the column layout —
+/// shared by [`RunResult::to_csv`] and the streaming [`sink::CsvSink`].
+pub fn csv_header(nregions: usize) -> String {
+    let mut header = vec![
+        "iter".to_string(),
+        "time".into(),
+        "loss".into(),
+        "train_loss".into(),
+        "tau".into(),
+        "delta".into(),
+        "grad_norm".into(),
+        "bandwidth".into(),
+    ];
+    if nregions > 0 {
+        header.push("wan_delta".into());
+        for r in 0..nregions {
+            header.push(format!("region{r}_sync"));
+            header.push(format!("region{r}_wan_bits"));
+        }
+    }
+    header.join(",")
+}
+
+/// One CSV row (no trailing newline) under an `nregions`-column header.
+/// Panics on a region-count mismatch — a misaligned row would silently
+/// shift every column to its right.
+pub fn csv_row(r: &Record, nregions: usize) -> String {
+    let mut cells = vec![
+        r.iter.to_string(),
+        format!("{:.6}", r.time),
+        format!("{:.6}", r.loss),
+        format!("{:.6}", r.train_loss),
+        r.tau.to_string(),
+        format!("{:.4}", r.delta),
+        format!("{:.6}", r.grad_norm),
+        format!("{:.0}", r.bandwidth),
+    ];
+    if nregions > 0 {
+        cells.push(format!("{:.4}", r.wan_delta));
+        assert_eq!(
+            r.regions.len(),
+            nregions,
+            "record at iter {} carries {} region entries but this run's \
+             header has {nregions}: refusing to write misaligned CSV/JSON",
+            r.iter,
+            r.regions.len()
+        );
+        for reg in &r.regions {
+            cells.push(format!("{:.6}", reg.sync));
+            cells.push(reg.wan_bits.to_string());
+        }
+    }
+    cells.join(",")
 }
 
 /// Create the parent directory of `path` if it doesn't exist yet, so

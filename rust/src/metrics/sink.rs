@@ -1,0 +1,322 @@
+//! Streaming metrics sinks (DESIGN.md §Perf).
+//!
+//! Buffering every [`Record`] of a 100k-worker sweep cell is the memory
+//! bottleneck long before the clock is the time bottleneck, so the
+//! training loop can hand each record to a [`MetricsSink`] the moment it
+//! is logged instead of growing a `Vec`. [`CsvSink`] writes rows through
+//! the same [`csv_header`]/[`csv_row`] helpers `RunResult::to_csv` uses —
+//! the streamed file is **byte-identical** to the buffered one (a
+//! regression test in `tests/properties.rs` holds the two side by side) —
+//! while [`RunFolds`] folds the summary statistics (time-to-target,
+//! final/best loss) incrementally with the exact interpolation arithmetic
+//! of [`RunResult::time_to_loss`]. [`BufferSink`] is the compatibility
+//! adapter: it just collects, and `TrainLoop::run` is
+//! `run_streamed(BufferSink)`.
+
+use std::io::Write;
+
+use super::{csv_header, csv_row, Record, RunResult};
+
+/// A consumer of training records, fed one record per log boundary in
+/// iteration order.
+pub trait MetricsSink {
+    fn record(&mut self, rec: &Record) -> anyhow::Result<()>;
+}
+
+/// The buffering sink: collects records for a [`RunResult`] — the
+/// historical behaviour, fine for analysis-sized runs.
+#[derive(Debug, Default)]
+pub struct BufferSink {
+    records: Vec<Record>,
+}
+
+impl BufferSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_records(self) -> Vec<Record> {
+        self.records
+    }
+}
+
+impl MetricsSink for BufferSink {
+    fn record(&mut self, rec: &Record) -> anyhow::Result<()> {
+        self.records.push(rec.clone());
+        Ok(())
+    }
+}
+
+/// Incremental folds over a record stream: everything the experiment
+/// tables need from a run, without retaining the run. The interpolation
+/// is bit-for-bit [`RunResult::time_to_loss`]'s —
+/// `prop_streamed_csv_matches_buffered_run` in `tests/properties.rs`
+/// pins the equivalence.
+#[derive(Clone, Debug)]
+pub struct RunFolds {
+    /// loss targets being watched, in the caller's order
+    targets: Vec<f64>,
+    time_to: Vec<Option<f64>>,
+    iters_to: Vec<Option<usize>>,
+    /// (time, loss) of the previous record — the straddle for the
+    /// interpolated crossing
+    prev: Option<(f64, f64)>,
+    final_loss: f64,
+    best_loss: f64,
+    records: usize,
+}
+
+impl RunFolds {
+    pub fn new(targets: &[f64]) -> Self {
+        Self {
+            targets: targets.to_vec(),
+            time_to: vec![None; targets.len()],
+            iters_to: vec![None; targets.len()],
+            prev: None,
+            final_loss: f64::NAN,
+            best_loss: f64::INFINITY,
+            records: 0,
+        }
+    }
+
+    pub fn observe(&mut self, rec: &Record) {
+        for (i, &target) in self.targets.iter().enumerate() {
+            if self.time_to[i].is_some() || rec.loss > target {
+                continue;
+            }
+            // first record at or under the target: interpolate the
+            // crossing against the straddling predecessor, exactly like
+            // the buffered scan (which guards against non-decreasing loss)
+            self.time_to[i] = Some(match self.prev {
+                Some((pt, pl)) if pl > rec.loss => {
+                    let w = (pl - target) / (pl - rec.loss);
+                    pt + w * (rec.time - pt)
+                }
+                _ => rec.time,
+            });
+            self.iters_to[i] = Some(rec.iter);
+        }
+        self.prev = Some((rec.time, rec.loss));
+        self.final_loss = rec.loss;
+        self.best_loss = self.best_loss.min(rec.loss);
+        self.records += 1;
+    }
+
+    /// The loss targets being watched.
+    pub fn targets(&self) -> &[f64] {
+        &self.targets
+    }
+
+    /// First virtual time reaching target `i` (interpolated), if ever.
+    pub fn time_to(&self, i: usize) -> Option<f64> {
+        self.time_to[i]
+    }
+
+    /// First logged iteration reaching target `i`, if ever.
+    pub fn iters_to(&self, i: usize) -> Option<usize> {
+        self.iters_to[i]
+    }
+
+    /// Loss of the last record ([`f64::NAN`] before any).
+    pub fn final_loss(&self) -> f64 {
+        self.final_loss
+    }
+
+    /// Minimum loss seen ([`f64::INFINITY`] before any).
+    pub fn best_loss(&self) -> f64 {
+        self.best_loss
+    }
+
+    /// Records observed.
+    pub fn records(&self) -> usize {
+        self.records
+    }
+}
+
+/// Bounded-memory CSV writer: the header is emitted lazily from the first
+/// record's region count, every later record must match it (the streaming
+/// form of `RunResult::region_columns`' hard error), and a [`RunFolds`]
+/// rides along so the summary statistics survive without the rows.
+#[derive(Debug)]
+pub struct CsvSink<W: Write> {
+    out: W,
+    /// region-column count, fixed by the first record
+    nregions: Option<usize>,
+    folds: RunFolds,
+}
+
+impl<W: Write> CsvSink<W> {
+    pub fn new(out: W, targets: &[f64]) -> Self {
+        Self { out, nregions: None, folds: RunFolds::new(targets) }
+    }
+
+    /// The incremental summary folds (readable mid-stream).
+    pub fn folds(&self) -> &RunFolds {
+        &self.folds
+    }
+
+    /// Flush and hand back the writer plus the folded summary.
+    pub fn finish(mut self) -> anyhow::Result<(W, RunFolds)> {
+        self.out.flush()?;
+        Ok((self.out, self.folds))
+    }
+}
+
+impl<W: Write> MetricsSink for CsvSink<W> {
+    fn record(&mut self, rec: &Record) -> anyhow::Result<()> {
+        let nregions = match self.nregions {
+            Some(n) => n,
+            None => {
+                let n = rec.regions.len();
+                self.out.write_all(csv_header(n).as_bytes())?;
+                self.out.write_all(b"\n")?;
+                self.nregions = Some(n);
+                n
+            }
+        };
+        if rec.regions.len() != nregions {
+            anyhow::bail!(
+                "record at iter {} carries {} region entries but this \
+                 stream's header has {nregions}: refusing to write \
+                 misaligned CSV",
+                rec.iter,
+                rec.regions.len()
+            );
+        }
+        self.out.write_all(csv_row(rec, nregions).as_bytes())?;
+        self.out.write_all(b"\n")?;
+        self.folds.observe(rec);
+        Ok(())
+    }
+}
+
+/// Folds-only sink for runs whose rows nobody reads (capacity probes,
+/// resume fingerprint checks): O(1) memory, no I/O.
+#[derive(Debug)]
+pub struct FoldSink {
+    folds: RunFolds,
+}
+
+impl FoldSink {
+    pub fn new(targets: &[f64]) -> Self {
+        Self { folds: RunFolds::new(targets) }
+    }
+
+    pub fn folds(&self) -> &RunFolds {
+        &self.folds
+    }
+
+    pub fn into_folds(self) -> RunFolds {
+        self.folds
+    }
+}
+
+impl MetricsSink for FoldSink {
+    fn record(&mut self, rec: &Record) -> anyhow::Result<()> {
+        self.folds.observe(rec);
+        Ok(())
+    }
+}
+
+/// Fold an already-buffered [`RunResult`] — the bridge for comparing the
+/// streamed statistics against the buffered scans.
+pub fn fold_run(run: &RunResult, targets: &[f64]) -> RunFolds {
+    let mut folds = RunFolds::new(targets);
+    for rec in &run.records {
+        folds.observe(rec);
+    }
+    folds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, time: f64, loss: f64) -> Record {
+        Record {
+            iter,
+            time,
+            loss,
+            train_loss: loss,
+            tau: 0,
+            delta: 1.0,
+            grad_norm: 0.0,
+            bandwidth: 0.0,
+            wan_delta: 1.0,
+            regions: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn folds_match_the_buffered_scans() {
+        let run = RunResult {
+            records: vec![
+                rec(0, 0.0, 10.0),
+                rec(10, 1.0, 6.0),
+                rec(20, 2.0, 2.0),
+                rec(30, 3.0, 2.5), // non-monotone tail
+            ],
+            ..Default::default()
+        };
+        let targets = [10.0, 4.0, 2.2, 1.0];
+        let folds = fold_run(&run, &targets);
+        for (i, &t) in targets.iter().enumerate() {
+            let bt = run.time_to_loss(t);
+            let ft = folds.time_to(i);
+            match (bt, ft) {
+                (None, None) => {}
+                (Some(b), Some(f)) => {
+                    assert_eq!(b.to_bits(), f.to_bits(), "target {t}")
+                }
+                other => panic!("target {t}: {other:?}"),
+            }
+            assert_eq!(run.iters_to_loss(t), folds.iters_to(i));
+        }
+        assert_eq!(folds.final_loss().to_bits(), run.final_loss().to_bits());
+        assert_eq!(folds.best_loss().to_bits(), run.best_loss().to_bits());
+        assert_eq!(folds.records(), run.records.len());
+    }
+
+    #[test]
+    fn csv_sink_streams_byte_identical_rows() {
+        let records =
+            vec![rec(1, 0.5, 2.0), rec(2, 1.0, 1.5), rec(3, 1.5, 1.2)];
+        let run = RunResult {
+            records: records.clone(),
+            ..Default::default()
+        };
+        let mut sink = CsvSink::new(Vec::new(), &[1.4]);
+        for r in &records {
+            sink.record(r).unwrap();
+        }
+        let (bytes, folds) = sink.finish().unwrap();
+        assert_eq!(bytes, run.to_csv().into_bytes());
+        assert_eq!(
+            folds.time_to(0).unwrap().to_bits(),
+            run.time_to_loss(1.4).unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn csv_sink_rejects_region_count_drift() {
+        let mut sink = CsvSink::new(Vec::new(), &[]);
+        sink.record(&rec(1, 0.5, 2.0)).unwrap();
+        let mut bad = rec(2, 1.0, 1.5);
+        bad.regions =
+            vec![super::super::RegionRecord { sync: 0.1, wan_bits: 10 }];
+        let err = sink.record(&bad).unwrap_err();
+        assert!(err.to_string().contains("misaligned"), "{err}");
+    }
+
+    #[test]
+    fn buffer_sink_collects_in_order() {
+        let mut sink = BufferSink::new();
+        for r in [rec(1, 0.5, 2.0), rec(2, 1.0, 1.5)] {
+            sink.record(&r).unwrap();
+        }
+        let recs = sink.into_records();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].iter, 1);
+        assert_eq!(recs[1].iter, 2);
+    }
+}

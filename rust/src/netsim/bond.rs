@@ -91,6 +91,31 @@ impl Bond {
         self.paths.iter().map(|p| p.bandwidth_at(t)).sum()
     }
 
+    /// Water-filling-weighted effective latency at time `t`:
+    /// `Σ_p a_p(t)·b_p / Σ_p a_p(t)` — each path's latency weighted by the
+    /// bandwidth share the water-filling scheduler hands it. The bare min
+    /// across paths (the pre-weighting view) under-prices a bond with one
+    /// fast-but-thin and one slow-but-fat path, because most bits ride the
+    /// slow path. Falls back to [`Self::min_latency`] when every path is
+    /// at zero bandwidth (all-paths-out floor trickle).
+    pub fn effective_latency(&self, t: f64) -> f64 {
+        if self.paths.len() == 1 {
+            // bit-identity contract: a k=1 bond is the bare link
+            return self.paths[0].latency();
+        }
+        let (mut num, mut den) = (0.0, 0.0);
+        for p in &self.paths {
+            let a = p.bandwidth_at(t);
+            num += a * p.latency();
+            den += a;
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            self.min_latency()
+        }
+    }
+
     /// Water-fill `bits` across the paths, path `p` free from
     /// `starts[p]`: every share arrives at the common `arrival`.
     pub fn schedule(&self, starts: &[f64], bits: u64) -> BondSchedule {

@@ -1,4 +1,5 @@
-//! Heterogeneous network fabric — one link per worker.
+//! Heterogeneous network fabric — one link per worker, stored as
+//! link-equivalence classes.
 //!
 //! The paper's Limitations section explicitly defers "device heterogeneity
 //! (different bandwidth/latency per node)". The fabric is the pricing
@@ -10,6 +11,21 @@
 //! homogeneous fabric collapses bit-identically to the former single-link
 //! path (enforced by `tests/fabric.rs`); `exp hetero` quantifies how much
 //! bottleneck-aware planning recovers under a straggler.
+//!
+//! ## SoA layout
+//!
+//! Workers sharing an identical link (same latency bits, same trace config)
+//! are grouped into an **equivalence class**: `class_links` holds one
+//! [`Link`] per class and `class_of[worker]` maps each worker to its class.
+//! A 100k-worker homogeneous fabric stores one link, not 100k, and every
+//! consumer that prices "one transfer per distinct link" (the virtual
+//! clock's class engine, `sync_arrival`'s uniform fast path) gets its
+//! sharing structure from here. `link(worker)` still hands out a per-worker
+//! `&Link` view, so heterogeneity-aware call sites are unchanged. Bonds are
+//! `Arc`-shared so cloning a fabric per sweep cell never deep-copies path
+//! sets.
+
+use std::sync::Arc;
 
 use super::bond::Bond;
 use super::link::Link;
@@ -17,11 +33,14 @@ use super::trace::BandwidthTrace;
 
 #[derive(Clone, Debug)]
 pub struct Fabric {
-    links: Vec<Link>,
+    /// one link per equivalence class (same latency bits + trace config)
+    class_links: Vec<Link>,
+    /// per-worker class index into `class_links`
+    class_of: Vec<u32>,
     /// per-worker multi-path bonds (DESIGN.md §Bonding); `None` everywhere
-    /// on a classic single-path fabric. A bonded worker's `links` entry
+    /// on a classic single-path fabric. A bonded worker's link class
     /// mirrors its path 0, so legacy single-link views stay meaningful.
-    bonds: Vec<Option<Bond>>,
+    bonds: Vec<Option<Arc<Bond>>>,
     /// every link shares one trace config and latency — cached at
     /// construction so hot paths (`sync_arrival`, the virtual clock) can
     /// price one transfer instead of n when the answer is provably shared
@@ -31,17 +50,29 @@ pub struct Fabric {
 impl Fabric {
     pub fn new(links: Vec<Link>) -> Self {
         assert!(!links.is_empty());
-        let uniform = Self::compute_uniform(&links);
-        let bonds = vec![None; links.len()];
-        Self { links, bonds, uniform }
+        let n = links.len();
+        let mut class_links: Vec<Link> = Vec::new();
+        let mut class_of = Vec::with_capacity(n);
+        for l in links {
+            match class_links.iter().position(|rep| Self::same_class(rep, &l))
+            {
+                Some(c) => class_of.push(c as u32),
+                None => {
+                    class_of.push(class_links.len() as u32);
+                    class_links.push(l);
+                }
+            }
+        }
+        let uniform = class_links.len() == 1;
+        Self { class_links, class_of, bonds: vec![None; n], uniform }
     }
 
-    fn compute_uniform(links: &[Link]) -> bool {
-        let first = &links[0];
-        links.iter().all(|l| {
-            l.latency() == first.latency()
-                && l.trace().kind() == first.trace().kind()
-        })
+    /// Class predicate: identical latency (bit equality) and identical
+    /// trace configuration. Two links in one class price any transfer
+    /// bit-identically, by construction of the exact integral engine.
+    fn same_class(a: &Link, b: &Link) -> bool {
+        a.latency().to_bits() == b.latency().to_bits()
+            && a.trace().kind() == b.trace().kind()
     }
 
     /// Whether every link is identical (same trace config, same latency).
@@ -91,37 +122,72 @@ impl Fabric {
     }
 
     pub fn workers(&self) -> usize {
-        self.links.len()
+        self.class_of.len()
     }
 
     pub fn link(&self, worker: usize) -> &Link {
-        &self.links[worker]
+        &self.class_links[self.class_of[worker] as usize]
     }
 
-    pub fn links(&self) -> &[Link] {
-        &self.links
+    /// Number of link-equivalence classes (1 on a uniform fabric).
+    pub fn link_class_count(&self) -> usize {
+        self.class_links.len()
+    }
+
+    /// The equivalence class `worker`'s link belongs to. Workers in one
+    /// class price any transfer bit-identically — the virtual clock's
+    /// class engine builds its sharing structure from this map.
+    pub fn link_class(&self, worker: usize) -> usize {
+        self.class_of[worker] as usize
     }
 
     /// Replace one worker's link — how churn schedules bake outage/degrade
     /// windows into the fabric before a run (elastic subsystem). The
-    /// O(links) uniformity recompute runs once per call; this is a
+    /// O(workers) class rebucketing runs once per call; this is a
     /// setup-path operation (window baking, re-wiring), never per-tick.
     pub fn set_link(&mut self, worker: usize, link: Link) {
-        self.links[worker] = link;
-        self.uniform = !self.has_bonds() && Self::compute_uniform(&self.links);
+        let old = self.class_of[worker] as usize;
+        let c = match self
+            .class_links
+            .iter()
+            .position(|rep| Self::same_class(rep, &link))
+        {
+            Some(c) => c,
+            None => {
+                self.class_links.push(link);
+                self.class_links.len() - 1
+            }
+        };
+        self.class_of[worker] = c as u32;
+        if c != old && !self.class_of.iter().any(|&x| x as usize == old) {
+            // the old class lost its last member: drop it and remap
+            self.class_links.remove(old);
+            for x in &mut self.class_of {
+                if *x as usize > old {
+                    *x -= 1;
+                }
+            }
+        }
+        self.uniform = !self.has_bonds() && self.class_links.len() == 1;
     }
 
-    /// Attach a multi-path [`Bond`] to one worker. The worker's `links`
-    /// entry is re-pointed at the bond's path 0 so single-link views keep
+    /// Attach a multi-path [`Bond`] to one worker. The worker's link class
+    /// is re-pointed at the bond's path 0 so single-link views keep
     /// working; any bond takes the fabric off the uniform fast path (its
     /// pricing is genuinely per-worker).
     pub fn set_bond(&mut self, worker: usize, bond: Bond) {
-        self.links[worker] = bond.path(0).clone();
-        self.bonds[worker] = Some(bond);
+        self.set_link(worker, bond.path(0).clone());
+        self.bonds[worker] = Some(Arc::new(bond));
         self.uniform = false;
     }
 
     pub fn bond(&self, worker: usize) -> Option<&Bond> {
+        self.bonds[worker].as_deref()
+    }
+
+    /// The `Arc` handle behind [`Self::bond`] — what the clock's class
+    /// engine stores so per-cell fabric clones share path sets.
+    pub fn bond_arc(&self, worker: usize) -> Option<&Arc<Bond>> {
         self.bonds[worker].as_ref()
     }
 
@@ -133,19 +199,20 @@ impl Fabric {
     /// bond's k otherwise — the geometry churn validation and the monitor
     /// are built against.
     pub fn paths_per_worker(&self) -> Vec<usize> {
-        (0..self.links.len())
-            .map(|i| self.bonds[i].as_ref().map_or(1, Bond::k))
+        (0..self.workers())
+            .map(|i| self.bonds[i].as_deref().map_or(1, Bond::k))
             .collect()
     }
 
     /// One worker's effective `(bandwidth, latency)` view at time `t`:
     /// the bare link for single-path workers, the bonded aggregate
-    /// (Σ path bandwidth, min path latency) otherwise.
+    /// (Σ path bandwidth, water-filling-weighted effective latency)
+    /// otherwise.
     fn worker_view(&self, worker: usize, t: f64) -> (f64, f64) {
         match &self.bonds[worker] {
-            Some(b) => (b.bandwidth_at(t), b.min_latency()),
+            Some(b) => (b.bandwidth_at(t), b.effective_latency(t)),
             None => {
-                let l = &self.links[worker];
+                let l = self.link(worker);
                 (l.bandwidth_at(t), l.latency())
             }
         }
@@ -157,39 +224,41 @@ impl Fabric {
     /// suffices (bit-identical to the max over n copies).
     pub fn sync_arrival(&self, start: f64, bits: u64) -> f64 {
         if self.uniform {
-            return self.links[0].arrival(start, bits);
+            return self.class_links[0].arrival(start, bits);
         }
-        (0..self.links.len())
+        (0..self.workers())
             .map(|i| match &self.bonds[i] {
                 Some(b) => b.arrival(start, bits),
-                None => self.links[i].arrival(start, bits),
+                None => self.link(i).arrival(start, bits),
             })
             .fold(f64::NEG_INFINITY, f64::max)
     }
 
     /// The bottleneck link's parameters at time `t` — what DeCo should plan
     /// with under heterogeneity (min bandwidth, max latency). A bonded
-    /// worker contributes its aggregate view (Σ path bandwidth, min path
-    /// latency).
+    /// worker contributes its aggregate view (Σ path bandwidth, weighted
+    /// effective latency).
     pub fn bottleneck(&self, t: f64) -> (f64, f64) {
-        let a = (0..self.links.len())
+        let a = (0..self.workers())
             .map(|i| self.worker_view(i, t).0)
             .fold(f64::INFINITY, f64::min);
-        let b = (0..self.links.len())
+        let b = (0..self.workers())
             .map(|i| self.worker_view(i, t).1)
             .fold(f64::NEG_INFINITY, f64::max);
         (a, b)
     }
 
     /// Mean-link parameters at time `t` — what a heterogeneity-blind
-    /// controller would plan with (the `exp hetero` control arm).
+    /// controller would plan with (the `exp hetero` control arm). Summed in
+    /// worker index order: the float fold must stay bit-stable across the
+    /// SoA refactor.
     pub fn mean(&self, t: f64) -> (f64, f64) {
-        let n = self.links.len() as f64;
-        let a = (0..self.links.len())
+        let n = self.workers() as f64;
+        let a = (0..self.workers())
             .map(|i| self.worker_view(i, t).0)
             .sum::<f64>()
             / n;
-        let b = (0..self.links.len())
+        let b = (0..self.workers())
             .map(|i| self.worker_view(i, t).1)
             .sum::<f64>()
             / n;
@@ -201,7 +270,7 @@ impl Fabric {
     /// Panics if the mask is empty or all-false: an empty active set has no
     /// bottleneck (the elastic layer never lets membership empty).
     pub fn bottleneck_active(&self, t: f64, active: &[bool]) -> (f64, f64) {
-        assert_eq!(active.len(), self.links.len());
+        assert_eq!(active.len(), self.workers());
         let (mut a, mut b) = (f64::INFINITY, f64::NEG_INFINITY);
         for (i, &on) in active.iter().enumerate() {
             if on {
@@ -217,7 +286,7 @@ impl Fabric {
     /// Mean-link parameters over the *active* subset — the
     /// heterogeneity-blind control view under churn.
     pub fn mean_active(&self, t: f64, active: &[bool]) -> (f64, f64) {
-        assert_eq!(active.len(), self.links.len());
+        assert_eq!(active.len(), self.workers());
         let (mut sa, mut sb, mut n) = (0.0, 0.0, 0usize);
         for (i, &on) in active.iter().enumerate() {
             if on {
@@ -291,6 +360,26 @@ mod tests {
     }
 
     #[test]
+    fn link_classes_group_identical_workers() {
+        let f = Fabric::homogeneous(1000, BandwidthTrace::constant(1e8), 0.1);
+        assert_eq!(f.link_class_count(), 1, "homogeneous fabric = 1 class");
+        assert!((0..1000).all(|i| f.link_class(i) == 0));
+        let s = Fabric::with_straggler(
+            1000,
+            BandwidthTrace::constant(1e8),
+            0.1,
+            0.25,
+            2.0,
+        );
+        assert_eq!(s.link_class_count(), 2, "straggler forms its own class");
+        assert_eq!(s.link_class(0), 0);
+        assert!((1..1000).all(|i| s.link_class(i) == 1));
+        // per-worker views still resolve through the class table
+        assert_eq!(s.link(0).latency(), 0.2);
+        assert_eq!(s.link(999).latency(), 0.1);
+    }
+
+    #[test]
     fn active_views_skip_departed_workers() {
         let f = Fabric::with_straggler(
             4,
@@ -316,6 +405,7 @@ mod tests {
         f.set_link(1, Link::new(BandwidthTrace::constant(1e7), 0.4));
         assert_eq!(f.bottleneck(0.0), (1e7, 0.4));
         assert_eq!(f.link(0).latency(), 0.1);
+        assert_eq!(f.link_class_count(), 2);
     }
 
     #[test]
@@ -323,17 +413,18 @@ mod tests {
         let mut f = Fabric::homogeneous(3, BandwidthTrace::constant(1e8), 0.1);
         assert!(f.is_uniform());
         // the uniform fast path must agree with the general max loop
-        let general: f64 = f
-            .links()
-            .iter()
-            .map(|l| l.arrival(2.0, 5_000_000))
+        let general: f64 = (0..f.workers())
+            .map(|i| f.link(i).arrival(2.0, 5_000_000))
             .fold(f64::NEG_INFINITY, f64::max);
         assert_eq!(f.sync_arrival(2.0, 5_000_000).to_bits(), general.to_bits());
         // replacing a link breaks uniformity; restoring it re-establishes
+        // (and the orphaned one-member class is garbage-collected)
         f.set_link(1, Link::new(BandwidthTrace::constant(1e7), 0.1));
         assert!(!f.is_uniform());
+        assert_eq!(f.link_class_count(), 2);
         f.set_link(1, Link::new(BandwidthTrace::constant(1e8), 0.1));
         assert!(f.is_uniform());
+        assert_eq!(f.link_class_count(), 1);
         assert!(!Fabric::with_straggler(
             3,
             BandwidthTrace::constant(1e8),
@@ -379,12 +470,15 @@ mod tests {
         assert_eq!(f.paths_per_worker(), vec![2, 1, 1]);
         assert_eq!(f.bond(0).unwrap().k(), 2);
         assert!(f.bond(1).is_none());
-        // worker 0's aggregate: 150 Mbps, 20 ms — so the bottleneck view
-        // stays at the unbonded workers' 100 Mbps / 100 ms
+        // worker 0's aggregate: 150 Mbps, weighted latency ≈ 73 ms — so the
+        // bottleneck view stays at the unbonded workers' 100 Mbps / 100 ms
         assert_eq!(f.bottleneck(0.0), (1e8, 0.1));
         let (am, bm) = f.mean(0.0);
         assert!((am - (1.5e8 + 2e8) / 3.0).abs() < 1.0, "am={am}");
-        assert!((bm - (0.02 + 0.2) / 3.0).abs() < 1e-12, "bm={bm}");
+        // worker 0 latency is bandwidth-weighted across paths, not min:
+        // (1e8·0.1 + 5e7·0.02) / 1.5e8
+        let w0 = 11e6 / 1.5e8;
+        assert!((bm - (w0 + 0.2) / 3.0).abs() < 1e-12, "bm={bm}");
         // a bonded sync arrival beats the mirrored path-0 link alone
         let solo = Fabric::homogeneous(3, BandwidthTrace::constant(1e8), 0.1);
         let bits = 200_000_000;

@@ -277,14 +277,36 @@ impl FabricMonitor {
     }
 
     /// One worker's effective latency estimate: the path estimate on
-    /// single-path workers, the **min** over available path estimates on a
-    /// bonded worker (the first share can land that soon).
+    /// single-path workers, the **bandwidth-weighted** mean over available
+    /// path estimates on a bonded worker — the water-filling scheduler
+    /// routes bits in proportion to path bandwidth, so a bond with one
+    /// fast-but-thin and one slow-but-fat path mostly pays the slow path's
+    /// latency. (The bare min would under-price it and mislead DeCo's `b`
+    /// input.) Paths with a latency estimate but no bandwidth estimate yet
+    /// carry zero weight; if no path has both, fall back to the min over
+    /// latency estimates.
     pub fn worker_latency(&self, worker: usize) -> Option<f64> {
         let paths = &self.workers[worker];
         if paths.len() == 1 {
             return paths[0].latency();
         }
-        paths.iter().filter_map(|m| m.latency()).reduce(f64::min)
+        let (mut num, mut den) = (0.0, 0.0);
+        let mut min = f64::INFINITY;
+        let mut seen = false;
+        for m in paths {
+            if let Some(b) = m.latency() {
+                seen = true;
+                min = min.min(b);
+                if let Some(a) = m.bandwidth() {
+                    num += a * b;
+                    den += a;
+                }
+            }
+        }
+        if !seen {
+            return None;
+        }
+        Some(if den > 0.0 { num / den } else { min })
     }
 
     /// Active workers' effective views in worker order — the stream every
@@ -500,7 +522,7 @@ mod tests {
     }
 
     #[test]
-    fn bonded_worker_sums_bandwidth_and_takes_min_latency() {
+    fn bonded_worker_sums_bandwidth_and_weights_latency() {
         let mut fm = FabricMonitor::with_paths(&[2, 1], 0.5, 0);
         for _ in 0..30 {
             fm.observe_path_transfer(0, 0, 100_000_000.0, 1.0); // 1e8
@@ -512,7 +534,9 @@ mod tests {
         }
         let w0 = fm.worker_bandwidth(0).unwrap();
         assert!((w0 - 1.2e8).abs() < 1.0, "sum over paths, got {w0}");
-        assert!((fm.worker_latency(0).unwrap() - 0.05).abs() < 1e-12);
+        // bandwidth-weighted across paths: (1e8·0.05 + 2e7·0.3) / 1.2e8 —
+        // most bits ride the fat path, so its latency dominates
+        assert!((fm.worker_latency(0).unwrap() - 11e6 / 1.2e8).abs() < 1e-12);
         // bottleneck over workers: worker 1's 1e8 < worker 0's 1.2e8
         assert!((fm.bandwidth().unwrap() - 1e8).abs() < 1.0);
         assert!((fm.latency().unwrap() - 0.1).abs() < 1e-12);

@@ -83,8 +83,8 @@ mod tests {
     fn topo(wan_bps: f64, wan_lat: f64) -> Topology {
         Topology::TwoTier {
             regions: vec![
-                RegionTopo { members: vec![0, 1], aggregator: 0 },
-                RegionTopo { members: vec![2, 3], aggregator: 2 },
+                RegionTopo::new(vec![0, 1], 0),
+                RegionTopo::new(vec![2, 3], 2),
             ],
             wan: Fabric::homogeneous(
                 2,

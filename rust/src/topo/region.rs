@@ -7,14 +7,20 @@
 //! local aggregator and a per-region WAN link (a [`Fabric`] with one link
 //! per *region*), so only region partials cross the WAN.
 
+use std::sync::Arc;
+
 use crate::netsim::Fabric;
 
 /// One region of a two-tier topology: its member worker indices and the
 /// member currently acting as local aggregator.
+///
+/// `members` is `Arc`-shared: a topology clone (one per sweep cell, one
+/// inside every `VirtualClock`) bumps a refcount instead of copying the
+/// member list — the PR-5 grid-sharing pattern applied to topology shapes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RegionTopo {
     /// worker indices belonging to this region (ascending, non-empty)
-    pub members: Vec<usize>,
+    pub members: Arc<[usize]>,
     /// the member reducing this region's gradients; its own gradient is
     /// local (no intra-region hop), and re-election replaces it when it
     /// departs (DESIGN.md §Topology)
@@ -22,6 +28,11 @@ pub struct RegionTopo {
 }
 
 impl RegionTopo {
+    /// Build from any member container (`Vec<usize>`, boxed slice, …).
+    pub fn new(members: impl Into<Arc<[usize]>>, aggregator: usize) -> Self {
+        Self { members: members.into(), aggregator }
+    }
+
     pub fn contains(&self, worker: usize) -> bool {
         self.members.contains(&worker)
     }
@@ -200,8 +211,8 @@ mod tests {
     fn validate_catches_bad_partitions() {
         let ok = two_tier(
             vec![
-                RegionTopo { members: vec![0, 1], aggregator: 0 },
-                RegionTopo { members: vec![2, 3], aggregator: 3 },
+                RegionTopo::new(vec![0, 1], 0),
+                RegionTopo::new(vec![2, 3], 3),
             ],
             2,
         );
@@ -210,23 +221,23 @@ mod tests {
 
         let overlap = two_tier(
             vec![
-                RegionTopo { members: vec![0, 1], aggregator: 0 },
-                RegionTopo { members: vec![1, 2, 3], aggregator: 2 },
+                RegionTopo::new(vec![0, 1], 0),
+                RegionTopo::new(vec![1, 2, 3], 2),
             ],
             2,
         );
         assert!(overlap.validate(4).is_err(), "worker in two regions");
 
         let uncovered = two_tier(
-            vec![RegionTopo { members: vec![0, 1], aggregator: 0 }],
+            vec![RegionTopo::new(vec![0, 1], 0)],
             1,
         );
         assert!(uncovered.validate(3).is_err(), "worker 2 unassigned");
 
         let foreign_agg = two_tier(
             vec![
-                RegionTopo { members: vec![0, 1], aggregator: 2 },
-                RegionTopo { members: vec![2, 3], aggregator: 2 },
+                RegionTopo::new(vec![0, 1], 2),
+                RegionTopo::new(vec![2, 3], 2),
             ],
             2,
         );
@@ -234,8 +245,8 @@ mod tests {
 
         let wan_mismatch = Topology::TwoTier {
             regions: vec![
-                RegionTopo { members: vec![0, 1], aggregator: 0 },
-                RegionTopo { members: vec![2, 3], aggregator: 2 },
+                RegionTopo::new(vec![0, 1], 0),
+                RegionTopo::new(vec![2, 3], 2),
             ],
             wan: Fabric::homogeneous(3, BandwidthTrace::constant(1e7), 0.3),
         };
@@ -247,8 +258,8 @@ mod tests {
         let f = fabric(&[(2e8, 0.1), (1e8, 0.1), (5e7, 0.1), (1e8, 0.1)]);
         let topo = two_tier(
             vec![
-                RegionTopo { members: vec![0, 1], aggregator: 0 },
-                RegionTopo { members: vec![2, 3], aggregator: 3 },
+                RegionTopo::new(vec![0, 1], 0),
+                RegionTopo::new(vec![2, 3], 3),
             ],
             2,
         );

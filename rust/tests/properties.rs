@@ -4,11 +4,14 @@
 use deco::compress::{
     k_for_delta, BlockTopK, Compressor, ErrorFeedback, RandK, SparseVec, TopK,
 };
-use deco::coordinator::{VirtualClock, WorkerState};
+use deco::coordinator::{TrainLoop, TrainParams, VirtualClock, WorkerState};
 use deco::deco::solve::{delta_star, solve, tau_range, DecoInput};
+use deco::metrics::sink::CsvSink;
 use deco::netsim::{
     BandwidthTrace, Bond, DegradeWindow, Fabric, Link, TraceKind,
 };
+use deco::optim::Quadratic;
+use deco::strategy::StrategyKind;
 use deco::timesim::{t_avg_closed_form, EventSim, PipelineParams};
 use deco::util::check::{forall, Gen};
 use deco::util::Rng;
@@ -388,7 +391,7 @@ fn prop_two_tier_global_sync_dominates_region_syncs() {
             topo_regions.push(RegionTopo {
                 // election order is irrelevant to the invariant: pick any
                 aggregator: ids[0],
-                members: ids,
+                members: ids.into(),
             });
         }
         let wan = Fabric::new(
@@ -851,6 +854,239 @@ fn prop_equal_latency_bond_beats_every_single_path_tx() {
     });
 }
 
+/// A random link prototype for the class-engine comparison: any varying
+/// trace, optionally degraded over a window, with a random latency.
+fn gen_scan_link(g: &mut Gen) -> Link {
+    let mut trace = gen_varying_trace(g);
+    if g.bool() {
+        let s = g.f64(0.0, 30.0);
+        trace = trace.windowed(vec![DegradeWindow {
+            start_s: s,
+            end_s: s + g.f64(0.5, 20.0),
+            frac: [0.0, 0.25, 0.5][g.size(0, 2)],
+        }]);
+    }
+    Link::new(trace, g.f64(0.0, 0.3))
+}
+
+/// Flip a random worker, but never empty the mask (the clock asserts a
+/// non-empty active set).
+fn flip_one_keeping_nonempty(g: &mut Gen, mask: &mut [bool]) {
+    let w = g.size(0, mask.len() - 1);
+    mask[w] = !mask[w];
+    if mask.iter().all(|&m| !m) {
+        mask[w] = true;
+    }
+}
+
+#[test]
+fn prop_class_engine_matches_reference_scan() {
+    // the shared-timeline-class engine (tournament tree, DESIGN.md §Perf)
+    // must be *bit*-identical — every tick report and every per-worker
+    // view — to the O(n)-per-tick singleton reference scan (the pre-SoA
+    // recurrence), under random link mixes, degrade windows, a bonded
+    // worker, and random churn masks at n ∈ {3, 64, 1024}
+    forall("class_engine_vs_reference_scan", 30, |g| {
+        let n = [3usize, 64, 1024][g.size(0, 2)];
+        let nproto = g.size(1, 3);
+        let protos: Vec<Link> =
+            (0..nproto).map(|_| gen_scan_link(g)).collect();
+        let links: Vec<Link> = (0..n)
+            .map(|_| protos[g.size(0, nproto - 1)].clone())
+            .collect();
+        let mut fabric = Fabric::new(links);
+        if g.bool() {
+            fabric.set_bond(0, gen_bond(g, 2));
+        }
+        let mut shared = VirtualClock::new(fabric.clone());
+        let mut reference =
+            VirtualClock::new(fabric).with_reference_scan();
+
+        let mut mask = vec![true; n];
+        let ticks = g.size(5, 25);
+        for k in 1..=ticks {
+            if g.bool() {
+                flip_one_keeping_nonempty(g, &mut mask);
+            }
+            // alternate the mask with full-membership ticks so rejoin
+            // paths (None after Some) get exercised too
+            let active = if g.bool() { Some(&mask[..]) } else { None };
+            let t_comp = g.f64(0.01, 0.5);
+            let tau = g.size(0, 4);
+            let bits = g.size(0, 20_000_000) as u64;
+            let a = shared.tick_members(t_comp, tau, bits, active);
+            let b = reference.tick_members(t_comp, tau, bits, active);
+            for (name, x, y) in [
+                ("ts", a.ts, b.ts),
+                ("tm", a.tm, b.tm),
+                ("tc", a.tc, b.tc),
+                ("tx", a.tx_secs, b.tx_secs),
+            ] {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!(
+                        "k={k} n={n}: {name} diverged ({x} vs {y})"
+                    ));
+                }
+            }
+        }
+        if shared.timeline_classes() > reference.timeline_classes() {
+            return Err(format!(
+                "sharing tracks {} classes, reference only {}",
+                shared.timeline_classes(),
+                reference.timeline_classes()
+            ));
+        }
+        let sw = shared.worker_ticks().to_vec();
+        let st = shared.tx_totals().to_vec();
+        let rw = reference.worker_ticks().to_vec();
+        let rt = reference.tx_totals().to_vec();
+        for w in 0..n {
+            if sw[w].tm.to_bits() != rw[w].tm.to_bits()
+                || sw[w].tc.to_bits() != rw[w].tc.to_bits()
+                || sw[w].tx_secs.to_bits() != rw[w].tx_secs.to_bits()
+            {
+                return Err(format!("worker {w} last-tick view diverged"));
+            }
+            if st[w].to_bits() != rt[w].to_bits() {
+                return Err(format!(
+                    "worker {w} tx total diverged ({} vs {})",
+                    st[w], rt[w]
+                ));
+            }
+        }
+        let (sp, rp) = (shared.path_ticks(0), reference.path_ticks(0));
+        if sp.len() != rp.len() {
+            return Err(format!(
+                "bond path views diverged ({} vs {} paths)",
+                sp.len(),
+                rp.len()
+            ));
+        }
+        for (p, (x, y)) in sp.iter().zip(rp).enumerate() {
+            if x.tm.to_bits() != y.tm.to_bits()
+                || x.bits.to_bits() != y.bits.to_bits()
+                || x.tx_secs.to_bits() != y.tx_secs.to_bits()
+            {
+                return Err(format!("bond path {p} diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_two_tier_class_engine_matches_reference_scan() {
+    // same incremental-vs-reference contract on the two-tier clock:
+    // random regions, churn masks, and aggregator re-elections applied to
+    // both engines must keep every tick, region view, and accumulator
+    // bit-identical
+    use deco::topo::{RegionTopo, Topology};
+    forall("two_tier_class_engine_vs_reference", 30, |g| {
+        let regions = g.size(1, 4);
+        let mut links = Vec::new();
+        let mut topo_regions = Vec::new();
+        let mut next = 0usize;
+        for _ in 0..regions {
+            let m = g.size(1, 4);
+            let ids: Vec<usize> = (next..next + m).collect();
+            next += m;
+            for _ in 0..m {
+                links.push(Link::new(
+                    BandwidthTrace::constant(g.f64(1e7, 1e9)),
+                    g.f64(0.0, 0.1),
+                ));
+            }
+            topo_regions.push(RegionTopo {
+                aggregator: ids[0],
+                members: ids.into(),
+            });
+        }
+        let n = next;
+        let wan = Fabric::new(
+            (0..regions)
+                .map(|_| {
+                    Link::new(
+                        BandwidthTrace::constant(g.f64(1e6, 1e8)),
+                        g.f64(0.0, 1.0),
+                    )
+                })
+                .collect(),
+        );
+        let topo = Topology::TwoTier { regions: topo_regions, wan };
+        let fabric = Fabric::new(links);
+        let mut shared =
+            VirtualClock::with_topology(fabric.clone(), topo.clone())
+                .map_err(|e| e.to_string())?;
+        let mut reference = VirtualClock::with_topology(fabric, topo)
+            .map_err(|e| e.to_string())?
+            .with_reference_scan();
+
+        let mut mask = vec![true; n];
+        let iters = g.size(3, 30);
+        for k in 0..iters {
+            if g.bool() {
+                flip_one_keeping_nonempty(g, &mut mask);
+            }
+            if g.bool() {
+                let r = g.size(0, regions - 1);
+                let a = shared.reelect_aggregator(r, &mask);
+                let b = reference.reelect_aggregator(r, &mask);
+                if a != b {
+                    return Err(format!(
+                        "k={k}: re-election disagreed ({a} vs {b})"
+                    ));
+                }
+            }
+            let active = if g.bool() { Some(&mask[..]) } else { None };
+            let t_comp = g.f64(0.01, 0.5);
+            let tau = g.size(0, 4);
+            let lan_bits = g.size(0, 50_000_000) as u64;
+            let wan_bits = g.size(0, 50_000_000) as u64;
+            let a =
+                shared.tick_topo(t_comp, tau, lan_bits, wan_bits, active);
+            let b =
+                reference.tick_topo(t_comp, tau, lan_bits, wan_bits, active);
+            if a.ts.to_bits() != b.ts.to_bits()
+                || a.tc.to_bits() != b.tc.to_bits()
+            {
+                return Err(format!(
+                    "k={k}: global tick diverged ({} vs {})",
+                    a.tc, b.tc
+                ));
+            }
+            let srt = shared.region_ticks();
+            let rrt = reference.region_ticks();
+            for (r, (x, y)) in srt.iter().zip(rrt).enumerate() {
+                if x.active != y.active
+                    || x.sync.to_bits() != y.sync.to_bits()
+                    || x.wan_tc.to_bits() != y.wan_tc.to_bits()
+                {
+                    return Err(format!(
+                        "k={k} region {r} diverged \
+                         (sync {} vs {}, wan_tc {} vs {})",
+                        x.sync, y.sync, x.wan_tc, y.wan_tc
+                    ));
+                }
+            }
+        }
+        let swan = shared.wan_tx_totals().to_vec();
+        let rwan = reference.wan_tx_totals();
+        for (r, (x, y)) in swan.iter().zip(rwan).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("region {r} wan tx total diverged"));
+            }
+        }
+        let st = shared.tx_totals().to_vec();
+        let rt = reference.tx_totals().to_vec();
+        for w in 0..n {
+            if st[w].to_bits() != rt[w].to_bits() {
+                return Err(format!("worker {w} tx total diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_path_degrade_never_speeds_the_bond() {
     // baking a degrade window into one path lowers that path's cumulative
@@ -878,6 +1114,118 @@ fn prop_path_degrade_never_speeds_the_bond() {
             return Err(format!(
                 "degrading path {p} sped the bond: {slowed} < {healthy}"
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streamed_csv_matches_buffered_run() {
+    // `TrainLoop::run_streamed(CsvSink)` (DESIGN.md §Perf) must emit the
+    // exact bytes the buffered `run()` + `to_csv()` path does, and the
+    // incremental `RunFolds` must be bit-identical to the buffered
+    // summary scans (time-to-target interpolation included) — for any
+    // strategy, fabric shape, and logging cadence
+    forall("streamed_csv_vs_buffered_run", 12, |g| {
+        let dim = g.size(8, 32);
+        let workers = g.size(2, 4);
+        let kind = match g.size(0, 3) {
+            0 => StrategyKind::DSgd,
+            1 => StrategyKind::DEfSgd { delta: gen_delta(g) },
+            2 => StrategyKind::DdSgd { tau: g.size(0, 3) },
+            _ => StrategyKind::DecoSgd { update_every: g.size(1, 20) },
+        };
+        let p = TrainParams {
+            gamma: 0.005,
+            max_iters: g.size(30, 120),
+            log_every: g.size(1, 10),
+            t_comp_override: Some(0.05),
+            s_g_override: Some(1e8),
+            fallback: DecoInput { s_g: 1e8, a: 2e7, b: 0.2, t_comp: 0.05 },
+            seed: g.seed,
+            threads: Some(1),
+            ..Default::default()
+        };
+        let fabric = if g.bool() {
+            Fabric::homogeneous(workers, BandwidthTrace::constant(1e8), 0.05)
+        } else {
+            Fabric::with_straggler(
+                workers,
+                BandwidthTrace::constant(1e8),
+                0.05,
+                0.5,
+                2.0,
+            )
+        };
+        let seed = g.seed;
+        let quad =
+            || Quadratic::new(dim, workers, 1.0, 0.2, 0.3, 0.3, seed);
+
+        let mut buffered_tl = TrainLoop::with_fabric(
+            quad(),
+            kind.build(),
+            fabric.clone(),
+            p.clone(),
+        );
+        let buffered = buffered_tl.run("prop");
+        if buffered.records.is_empty() {
+            return Err("buffered run logged no records".into());
+        }
+        let first = buffered.records[0].loss;
+        let best = buffered.best_loss();
+        // one easy, one mid-run, one exactly-at-best, one unreachable
+        let targets = [
+            best + 0.75 * (first - best),
+            best + 0.25 * (first - best),
+            best,
+            best - 1.0,
+        ];
+
+        let mut sink = CsvSink::new(Vec::new(), &targets);
+        let mut streamed_tl =
+            TrainLoop::with_fabric(quad(), kind.build(), fabric, p);
+        let streamed = streamed_tl
+            .run_streamed("prop", &mut sink)
+            .map_err(|e| e.to_string())?;
+        let (bytes, folds) = sink.finish().map_err(|e| e.to_string())?;
+
+        if !streamed.records.is_empty() {
+            return Err("run_streamed must not buffer records".into());
+        }
+        if streamed.total_iters != buffered.total_iters
+            || streamed.total_time.to_bits() != buffered.total_time.to_bits()
+        {
+            return Err(format!(
+                "run totals diverged: {} iters / {}s vs {} iters / {}s",
+                streamed.total_iters,
+                streamed.total_time,
+                buffered.total_iters,
+                buffered.total_time
+            ));
+        }
+        if bytes != buffered.to_csv().into_bytes() {
+            return Err("streamed CSV bytes != buffered to_csv".into());
+        }
+        for (i, &t) in targets.iter().enumerate() {
+            let (bt, ft) = (buffered.time_to_loss(t), folds.time_to(i));
+            match (bt, ft) {
+                (None, None) => {}
+                (Some(b), Some(f)) if b.to_bits() == f.to_bits() => {}
+                other => {
+                    return Err(format!(
+                        "target {t}: fold {other:?} != buffered scan"
+                    ));
+                }
+            }
+            if buffered.iters_to_loss(t) != folds.iters_to(i) {
+                return Err(format!("target {t}: iters-to diverged"));
+            }
+        }
+        if folds.final_loss().to_bits() != buffered.final_loss().to_bits()
+            || folds.best_loss().to_bits() != buffered.best_loss().to_bits()
+            || folds.records() != buffered.records.len()
+        {
+            return Err("fold summary diverged from the buffered run".into());
         }
         Ok(())
     });

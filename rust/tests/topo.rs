@@ -50,8 +50,8 @@ fn lan_fabric() -> Fabric {
 fn two_tier() -> Topology {
     Topology::TwoTier {
         regions: vec![
-            RegionTopo { members: vec![0, 1], aggregator: 0 },
-            RegionTopo { members: vec![2, 3], aggregator: 2 },
+            RegionTopo::new(vec![0, 1], 0),
+            RegionTopo::new(vec![2, 3], 2),
         ],
         wan: Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.3),
     }
@@ -314,7 +314,7 @@ fn invalid_topologies_error_not_panic() {
 
     // a topology that doesn't partition the workers errors at construction
     let bad = Topology::TwoTier {
-        regions: vec![RegionTopo { members: vec![0, 1], aggregator: 0 }],
+        regions: vec![RegionTopo::new(vec![0, 1], 0)],
         wan: Fabric::homogeneous(1, BandwidthTrace::constant(2e7), 0.3),
     };
     assert!(TrainLoop::try_with_topology(

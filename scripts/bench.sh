@@ -16,6 +16,10 @@
 #   BENCH_bond.json     — water-filling Bond::schedule at k in {2, 4} and
 #                         the bonded clock tick vs single-path at
 #                         n in {4, 16, 32} x k in {2, 4}
+#   BENCH_scale.json    — shared-timeline-class clock tick at
+#                         n in {1k, 10k, 100k} vs the O(n) singleton
+#                         reference engine at {1k, 10k} (the per-tick cost
+#                         of the class engine must stay flat in n)
 #
 # scripts/bench_check.sh gates the BENCH_*.json headlines against the
 # checked-in perf_budgets.json ceilings.
@@ -38,7 +42,8 @@ ela_jsonl="$(mktemp)"
 topo_jsonl="$(mktemp)"
 trace_jsonl="$(mktemp)"
 bond_jsonl="$(mktemp)"
-trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl" "$bond_jsonl"' EXIT
+scale_jsonl="$(mktemp)"
+trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl" "$bond_jsonl" "$scale_jsonl"' EXIT
 
 consolidate() {
   # consolidate <jsonl> <out.json>
@@ -80,3 +85,7 @@ consolidate "$trace_jsonl" BENCH_trace.json
 echo "### cargo bench --bench bench_bond"
 DECO_BENCH_JSON="$bond_jsonl" cargo bench --bench bench_bond
 consolidate "$bond_jsonl" BENCH_bond.json
+
+echo "### cargo bench --bench bench_scale"
+DECO_BENCH_JSON="$scale_jsonl" cargo bench --bench bench_scale
+consolidate "$scale_jsonl" BENCH_scale.json

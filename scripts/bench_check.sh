@@ -30,9 +30,13 @@ for path in sorted(glob.glob("BENCH_*.json")):
         limit = ceilings[name] * tol
         med = float(r["median_ns"])
         status = "ok" if med <= limit else "FAIL"
+        # headroom: how many times under the gate the median sits (<1 =
+        # over budget) — watch this shrink before it ever fails
+        headroom = limit / med if med > 0 else float("inf")
         print(
             f"[bench_check] {status:4} {name:<44} "
             f"median {med:>14.1f} ns  ceiling {ceilings[name]:.0f} x {tol}"
+            f"  headroom {headroom:6.1f}x"
         )
         if med > limit:
             failures.append(name)
