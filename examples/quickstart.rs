@@ -1,8 +1,9 @@
 //! Quickstart: load the AOT artifacts, train the paper's CNN for a few
 //! iterations with DeCo-SGD on a simulated WAN, print what DeCo chose,
 //! wire two regions into a two-tier topology and show the per-tier
-//! plan (DESIGN.md §Topology), then ride a 2-path bonded worker through
-//! a scripted path outage (DESIGN.md §Bonding).
+//! plan (DESIGN.md §Topology), ride a 2-path bonded worker through a
+//! scripted path outage (DESIGN.md §Bonding), then trace a 2-worker run
+//! and print where its time went (DESIGN.md §Observability).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -18,6 +19,7 @@ use deco::exp::ExpEnv;
 use deco::netsim::{
     BandwidthTrace, Bond, DegradeWindow, Fabric, Link, TraceKind,
 };
+use deco::obs::{Attribution, TraceEvent};
 use deco::optim::Quadratic;
 use deco::strategy::StrategyKind;
 use deco::topo::{lan_input, wan_input, TwoTierPlan};
@@ -199,6 +201,49 @@ fn main() -> Result<()> {
     println!(
         "\nworst per-iteration gap {max_gap:.2}s; single-homed on the fast \
          path the same outage stalls one iteration for {solo_stall:.1}s"
+    );
+
+    // 5. Where does the time go? Trace a 2-worker WAN run and print the
+    // stall-attribution report (DESIGN.md §Observability): per-phase
+    // totals summing to the run's makespan, split into straggler /
+    // transfer / compute fractions. The same event stream exports to
+    // Chrome/Perfetto JSON via `repro trace <config>`.
+    let trace_cfg = ExperimentConfig {
+        task: "quadratic".into(),
+        workers: 2,
+        gamma: 0.02,
+        strategy: StrategyKind::DecoSgd { update_every: 20 },
+        network: NetworkConfig::homogeneous(
+            TraceKind::Constant { bps: 2e7 },
+            0.2,
+        ),
+        stop: StopConfig {
+            max_iters: 80,
+            loss_target: None,
+            max_virtual_time: None,
+        },
+        seed: 7,
+        t_comp: Some(0.2),
+        s_g_bits: Some(1e8),
+        log_every: 20,
+        block_topk: false,
+        clip_norm: None,
+        churn: deco::elastic::ChurnSpec::None,
+        drain: deco::elastic::DrainPolicy::Drop,
+    };
+    let (res, events) = ExpEnv::run_traced(&trace_cfg)?;
+    let mut attr = Attribution::new();
+    for ev in &events {
+        if let TraceEvent::Tick(tt) = ev {
+            attr.record_tick(tt);
+        }
+    }
+    println!(
+        "\nstall attribution for a 2-worker WAN run ({} iters, {:.1}s \
+         makespan):\n{}",
+        res.total_iters,
+        attr.makespan(),
+        attr.table()
     );
     Ok(())
 }

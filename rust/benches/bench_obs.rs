@@ -1,0 +1,86 @@
+//! Observability overhead (DESIGN.md §Observability): per-tick cost of
+//! the clock hot loop with tracing disabled (`NullSink` — the guard must
+//! stay a dead branch) vs fully traced (per-worker span builds fed into
+//! the streaming `Attribution`). The null series must match bench_scale's
+//! untraced tick envelope — that flatness is the zero-overhead contract;
+//! the traced series is O(n) by design.
+//!
+//! `scripts/bench.sh` consolidates these into `BENCH_obs.json`.
+
+use deco::coordinator::VirtualClock;
+use deco::netsim::{BandwidthTrace, Fabric};
+use deco::obs::{
+    worker_spans, Attribution, NullSink, TickTrace, TraceEvent, TraceSink,
+    WorkerTrace,
+};
+use deco::util::bench::{black_box, Bench};
+
+/// Rebuild the clock periodically so the TC history stays bounded while
+/// the bench harness spins millions of ticks.
+const RESET_EVERY: usize = 100_000;
+const T_COMP: f64 = 0.05;
+
+fn fabric(n: usize) -> Fabric {
+    // straggler keeps two live classes so the clock does real per-tick
+    // work and the traced path sees heterogeneous span boundaries
+    Fabric::with_straggler(n, BandwidthTrace::constant(1e8), 0.05, 0.25, 2.0)
+}
+
+fn bench_tick(b: &Bench, name: &str, n: usize, tracer: &mut dyn TraceSink) {
+    let mut clock = VirtualClock::new(fabric(n));
+    let mut k = 0usize;
+    b.bench(name, || {
+        if clock.iters() >= RESET_EVERY {
+            clock = VirtualClock::new(fabric(n));
+        }
+        k += 1;
+        let bits = 1_000_000 + (k as u64 % 7) * 250_000;
+        let tick = clock.tick(T_COMP, k % 4, bits);
+        if tracer.enabled() {
+            let (ts, tc) = (tick.ts, tick.tc);
+            let workers: Vec<WorkerTrace> = clock
+                .worker_ticks()
+                .iter()
+                .enumerate()
+                .map(|(w, wt)| {
+                    let start = (wt.tm - wt.tx_secs).max(ts).min(wt.tm);
+                    WorkerTrace {
+                        worker: w as u32,
+                        region: None,
+                        aggregator: w == 0,
+                        spans: worker_spans(
+                            ts - T_COMP,
+                            ts,
+                            start,
+                            wt.tm,
+                            wt.tc,
+                            tc,
+                        ),
+                        paths: Vec::new(),
+                    }
+                })
+                .collect();
+            tracer.record(&TraceEvent::Tick(TickTrace {
+                iter: k,
+                ts,
+                t_comp: T_COMP,
+                tc,
+                workers,
+                regions: Vec::new(),
+            }));
+        }
+        black_box(tick.tc);
+    });
+}
+
+fn main() {
+    println!("== bench_obs (traced vs NullSink clock hot loop) ==");
+    let b = Bench::new("obs");
+    for &n in &[16usize, 1_000] {
+        bench_tick(&b, &format!("tick/null_n{n}"), n, &mut NullSink);
+        // Attribution is the O(1)-memory traced sink, so millions of
+        // bench ticks never accumulate an unbounded event buffer
+        let mut attr = Attribution::new();
+        bench_tick(&b, &format!("tick/traced_n{n}"), n, &mut attr);
+    }
+}

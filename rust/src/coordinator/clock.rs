@@ -33,6 +33,7 @@ use std::sync::Arc;
 
 use super::arrival::{ArrivalTree, EMPTY_KEY};
 use crate::netsim::{Bond, Fabric, Link};
+use crate::obs::ClockEvent;
 use crate::topo::{elect_eligible, RegionTopo, Topology};
 
 /// Retained sync-arrival history TC_k. The τ-delayed wait looks back
@@ -163,6 +164,10 @@ pub struct VirtualClock {
     worker_last: Vec<WorkerTick>,
     tx_cache: Vec<f64>,
     views_dirty: bool,
+    /// opt-in structural event log (class splits, elections) for the
+    /// tracing layer (DESIGN.md §Observability); empty while disabled
+    events: Vec<ClockEvent>,
+    log_events: bool,
 }
 
 /// What one tick reports back to the trainer (the slowest worker's view —
@@ -201,6 +206,24 @@ pub struct PathTick {
     pub bits: f64,
     /// pure transmission duration of this path's share (0 when idle)
     pub tx_secs: f64,
+}
+
+/// Read-only view of one timeline class (see
+/// [`VirtualClock::class_views`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ClassView<'a> {
+    /// ascending member worker ids; never empty
+    pub members: &'a [u32],
+    /// the class's last-tick report (zeroed semantics apply only via
+    /// `sent_last`, exactly like [`VirtualClock::worker_ticks`])
+    pub last: WorkerTick,
+    pub active: bool,
+    /// whether the class transmitted on the most recent tick
+    pub sent_last: bool,
+    /// multi-path bond (always a singleton class)
+    pub bonded: bool,
+    /// two-tier aggregator (always a singleton class)
+    pub aggregator: bool,
 }
 
 /// One bonded tick: water-fill `bits` across the bond's paths starting no
@@ -324,6 +347,8 @@ impl VirtualClock {
             worker_last: vec![WorkerTick::default(); n],
             tx_cache: vec![0.0; n],
             views_dirty: false,
+            events: Vec::new(),
+            log_events: false,
         }
     }
 
@@ -460,6 +485,55 @@ impl VirtualClock {
         self.two_tier.as_ref().map_or(&[], |tt| &tt.wan_tx_total)
     }
 
+    /// Enable/disable the structural event log (class splits, aggregator
+    /// elections). Off by default — pushes cost nothing while disabled.
+    pub fn set_event_log(&mut self, on: bool) {
+        self.log_events = on;
+        if !on {
+            self.events.clear();
+        }
+    }
+
+    /// Take the structural events accumulated since the last drain.
+    pub fn drain_events(&mut self) -> Vec<ClockEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// The *fastest* arrival of the last tick — min `(tc, min member)`
+    /// over classes that transmitted — the O(classes) input to streaming
+    /// stall attribution ([`crate::obs::Attribution::record_flat`]).
+    /// `None` before the first tick.
+    pub fn fastest_last(&self) -> Option<WorkerTick> {
+        let mut best: Option<(f64, u32, WorkerTick)> = None;
+        for cls in &self.classes {
+            if cls.active && cls.sent_last {
+                let key = (cls.last.tc, cls.min_member());
+                let better = match best {
+                    None => true,
+                    Some((t, m, _)) => key < (t, m),
+                };
+                if better {
+                    best = Some((key.0, key.1, cls.last));
+                }
+            }
+        }
+        best.map(|(_, _, wt)| wt)
+    }
+
+    /// Read-only per-class views — the class-level observation path: one
+    /// entry per timeline class instead of one per worker, so monitor
+    /// updates cost O(live classes) (DESIGN.md §Observability).
+    pub fn class_views(&self) -> impl Iterator<Item = ClassView<'_>> {
+        self.classes.iter().map(|c| ClassView {
+            members: &c.members,
+            last: c.last,
+            active: c.active,
+            sent_last: c.sent_last,
+            bonded: c.bond.is_some(),
+            aggregator: c.aggregator,
+        })
+    }
+
     /// Split `worker` out of a shared class into its own singleton,
     /// preserving the (identical) timeline. No-op if already singleton.
     fn ensure_singleton(&mut self, worker: usize) -> usize {
@@ -495,7 +569,16 @@ impl VirtualClock {
             tt.groups_dirty = true;
         }
         self.views_dirty = true;
-        self.classes.len() - 1
+        let id = self.classes.len() - 1;
+        if self.log_events {
+            self.events.push(ClockEvent::ClassSplit {
+                from_class: c,
+                new_class: id,
+                members: 1,
+                active: self.classes[id].active,
+            });
+        }
+        id
     }
 
     /// Re-elect region `region`'s aggregator among its members marked
@@ -533,6 +616,13 @@ impl VirtualClock {
         self.classes[nc].aggregator = true;
         if let Some(tt) = self.two_tier.as_mut() {
             tt.groups_dirty = true;
+        }
+        if self.log_events {
+            self.events.push(ClockEvent::AggregatorElected {
+                region: region as u32,
+                old: Some(old as u32),
+                new: new as u32,
+            });
         }
         true
     }
@@ -630,6 +720,15 @@ impl VirtualClock {
             self.tree.push_slot();
             self.tree.set(id as usize, key);
             self.classes[c].members = keep;
+            if self.log_events {
+                let nc = &self.classes[id as usize];
+                self.events.push(ClockEvent::ClassSplit {
+                    from_class: c,
+                    new_class: id as usize,
+                    members: nc.members.len(),
+                    active: nc.active,
+                });
+            }
         }
         let cls = &mut self.classes[c];
         cls.active = want;

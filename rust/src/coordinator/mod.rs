@@ -26,6 +26,6 @@ pub mod clock;
 pub mod pipeline;
 pub mod worker;
 
-pub use clock::{RegionTick, Tick, VirtualClock, WorkerTick};
+pub use clock::{ClassView, RegionTick, Tick, VirtualClock, WorkerTick};
 pub use pipeline::{TrainLoop, TrainParams};
 pub use worker::WorkerState;

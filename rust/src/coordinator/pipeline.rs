@@ -28,7 +28,7 @@
 //! allocation-free: compressors are cached per δ, and gradient + sparse
 //! message buffers are recycled per worker (§Perf).
 
-use super::{VirtualClock, WorkerState};
+use super::{Tick, VirtualClock, WorkerState};
 use crate::compress::{
     Compressor, CompressorCache, ErrorFeedback, SparseVec,
 };
@@ -39,6 +39,10 @@ use crate::elastic::{
 use crate::metrics::sink::{BufferSink, MetricsSink};
 use crate::metrics::{Record, RegionRecord, RunResult};
 use crate::netsim::{Fabric, FabricMonitor, Link};
+use crate::obs::{
+    worker_spans, NullSink, PathSpanRec, RegionTrace, TickTrace, TraceEvent,
+    TraceSink, WorkerTrace,
+};
 use crate::optim::GradOracle;
 use crate::strategy::{PlanBasis, Strategy, StrategyCtx, WanCtx};
 use crate::topo::Topology;
@@ -517,6 +521,23 @@ impl<O: GradOracle> TrainLoop<O> {
         task: &str,
         sink: &mut dyn MetricsSink,
     ) -> anyhow::Result<RunResult> {
+        self.run_traced(task, sink, &mut NullSink)
+    }
+
+    /// [`Self::run_streamed`] with a [`TraceSink`] receiving the typed
+    /// observability events (DESIGN.md §Observability): per-worker phase
+    /// spans and per-path windows each tick, churn / class-split /
+    /// aggregator-election instants, and the strategy's re-plan decisions.
+    /// Every emission is guarded by [`TraceSink::enabled`], so the
+    /// [`NullSink`] path is byte-identical to (and as fast as) an
+    /// untraced run; timestamps are virtual, so traced output is
+    /// deterministic across pool sizes and reruns.
+    pub fn run_traced(
+        &mut self,
+        task: &str,
+        sink: &mut dyn MetricsSink,
+        tracer: &mut dyn TraceSink,
+    ) -> anyhow::Result<RunResult> {
         let n = self.workers.len();
         let dim = self.x.len();
         let mut last_grad_norm: Option<f64> = None;
@@ -524,11 +545,47 @@ impl<O: GradOracle> TrainLoop<O> {
         let serial = WorkerPool::serial();
         let par_workers = self.pool.threads() > 1 && n * dim >= PAR_MIN_WORK;
         let par_shards = self.pool.threads() > 1 && dim >= SHARD_MIN_DIM;
+        let tracing = tracer.enabled();
+        if tracing {
+            self.clock.set_event_log(true);
+        }
+        // per-worker region labels for the trace (region membership is
+        // static; only the aggregator role moves)
+        let region_of: Vec<Option<u32>> = if tracing {
+            let mut map = vec![None; n];
+            for (r, reg) in self.clock.regions().iter().enumerate() {
+                for &m in &reg.members {
+                    map[m] = Some(r as u32);
+                }
+            }
+            map
+        } else {
+            Vec::new()
+        };
+        // flat fabrics without bonds or monitor noise observe transfers /
+        // latencies per *timeline class* instead of per worker — O(live
+        // classes) per tick, bit-identical to the per-worker stream
+        // (every member of a class shares one link and one tick report)
+        let class_monitor = !self.clock.is_two_tier()
+            && self.monitor.noiseless()
+            && (0..n).all(|i| self.clock.fabric().bond(i).is_none());
 
         for t in 1..=self.params.max_iters {
             // 0. elastic: fire churn events the virtual clock has passed,
             // so the strategy already sees the new membership epoch
+            let churn_fired = self.churn_cursor;
             self.apply_churn_events();
+            if tracing {
+                for ev in
+                    &self.churn.events()[churn_fired..self.churn_cursor]
+                {
+                    tracer.record(&TraceEvent::Churn {
+                        t: ev.t,
+                        iter: t,
+                        event: ev.event.clone(),
+                    });
+                }
+            }
 
             // 1. strategy decides the per-tier (τ_t, δ_t): tier-blind
             // strategies emit a flat plan (WAN uncompressed), DecoTwoTier
@@ -551,6 +608,15 @@ impl<O: GradOracle> TrainLoop<O> {
                 }),
             };
             let tiers = self.strategy.params_tiered(&ctx);
+            if tracing {
+                if let Some(rec) = self.strategy.take_replan() {
+                    tracer.record(&TraceEvent::Replan {
+                        t: self.clock.now(),
+                        iter: t,
+                        rec,
+                    });
+                }
+            }
             let (tau, delta) = (tiers.total_tau(), tiers.delta);
             let wan_delta = tiers.wan_delta();
             let two_tier = self.clock.is_two_tier();
@@ -772,6 +838,17 @@ impl<O: GradOracle> TrainLoop<O> {
                     Some(&self.member_mask),
                 )
             };
+            if tracing {
+                let tt = self.tick_trace(t, t_comp, &tick, &region_of);
+                tracer.record(&TraceEvent::Tick(tt));
+                for event in self.clock.drain_events() {
+                    tracer.record(&TraceEvent::Clock {
+                        t: tick.tc,
+                        iter: t,
+                        event,
+                    });
+                }
+            }
             // each member's link monitor observes its own transfer and
             // latency — on a static homogeneous fabric every estimator sees
             // the same stream the former single monitor did. Bonded workers
@@ -780,41 +857,73 @@ impl<O: GradOracle> TrainLoop<O> {
             // (Σ bandwidth, min latency) view tracks the real aggregate
             // (DESIGN.md §Bonding).
             if bits > 0 {
-                for i in 0..n {
-                    if !self.member_mask[i] {
-                        continue;
-                    }
-                    if self.clock.fabric().bond(i).is_some() {
-                        let ticks = self.clock.path_ticks(i);
-                        for (p, pt) in ticks.iter().enumerate() {
-                            if pt.tx_secs > 0.0 {
-                                self.monitor.observe_path_transfer(
-                                    i, p, pt.bits, pt.tx_secs,
-                                );
-                            }
+                if class_monitor {
+                    // one estimator update per live class — every member
+                    // shares the class's link and tick report, so this is
+                    // the per-worker stream, deduplicated
+                    for cv in self.clock.class_views() {
+                        if cv.active
+                            && cv.sent_last
+                            && cv.last.tx_secs > 0.0
+                        {
+                            self.monitor.observe_class_transfer(
+                                cv.members,
+                                bits,
+                                cv.last.tx_secs,
+                            );
                         }
-                    } else {
-                        // copied out: the lazily materialized view is O(1)
-                        // after the first post-tick access
-                        let wt = self.clock.worker_ticks()[i];
-                        if wt.tx_secs > 0.0 {
-                            self.monitor.observe_transfer(i, bits, wt.tx_secs);
+                    }
+                } else {
+                    for i in 0..n {
+                        if !self.member_mask[i] {
+                            continue;
+                        }
+                        if self.clock.fabric().bond(i).is_some() {
+                            let ticks = self.clock.path_ticks(i);
+                            for (p, pt) in ticks.iter().enumerate() {
+                                if pt.tx_secs > 0.0 {
+                                    self.monitor.observe_path_transfer(
+                                        i, p, pt.bits, pt.tx_secs,
+                                    );
+                                }
+                            }
+                        } else {
+                            // copied out: the lazily materialized view is
+                            // O(1) after the first post-tick access
+                            let wt = self.clock.worker_ticks()[i];
+                            if wt.tx_secs > 0.0 {
+                                self.monitor
+                                    .observe_transfer(i, bits, wt.tx_secs);
+                            }
                         }
                     }
                 }
             }
-            for i in 0..n {
-                if !self.member_mask[i] {
-                    continue;
-                }
-                if let Some(bond) = self.clock.fabric().bond(i) {
-                    for (p, path) in bond.paths().iter().enumerate() {
-                        self.monitor
-                            .observe_path_latency(i, p, path.latency());
+            if class_monitor {
+                for cv in self.clock.class_views() {
+                    if cv.active {
+                        let lat = self
+                            .clock
+                            .fabric()
+                            .link(cv.members[0] as usize)
+                            .latency();
+                        self.monitor.observe_class_latency(cv.members, lat);
                     }
-                } else {
-                    let lat = self.clock.fabric().link(i).latency();
-                    self.monitor.observe_latency_for(i, lat);
+                }
+            } else {
+                for i in 0..n {
+                    if !self.member_mask[i] {
+                        continue;
+                    }
+                    if let Some(bond) = self.clock.fabric().bond(i) {
+                        for (p, path) in bond.paths().iter().enumerate() {
+                            self.monitor
+                                .observe_path_latency(i, p, path.latency());
+                        }
+                    } else {
+                        let lat = self.clock.fabric().link(i).latency();
+                        self.monitor.observe_latency_for(i, lat);
+                    }
                 }
             }
             self.monitor.observe_compute(t_comp);
@@ -911,6 +1020,76 @@ impl<O: GradOracle> TrainLoop<O> {
             total_iters: self.clock.iters(),
             records: Vec::new(),
         })
+    }
+
+    /// Assemble the [`TickTrace`] for the tick just priced: every member
+    /// worker's five phase spans (plus per-path windows on bonded links)
+    /// and, on a two-tier topology, every active region's WAN boundaries.
+    fn tick_trace(
+        &mut self,
+        iter: usize,
+        t_comp: f64,
+        tick: &Tick,
+        region_of: &[Option<u32>],
+    ) -> TickTrace {
+        let ts = tick.ts;
+        let tc = tick.tc;
+        let n = self.member_mask.len();
+        let mut workers = Vec::new();
+        for w in 0..n {
+            if !self.member_mask[w] {
+                continue;
+            }
+            let aggregator =
+                self.clock.regions().iter().any(|r| r.aggregator == w);
+            let wt = self.clock.worker_ticks()[w];
+            let start = (wt.tm - wt.tx_secs).max(ts).min(wt.tm);
+            let paths: Vec<PathSpanRec> = self
+                .clock
+                .path_ticks(w)
+                .iter()
+                .enumerate()
+                .filter(|(_, pt)| pt.tx_secs > 0.0)
+                .map(|(p, pt)| PathSpanRec {
+                    path: p as u32,
+                    bits: pt.bits,
+                    t0: pt.tm - pt.tx_secs,
+                    t1: pt.tm,
+                })
+                .collect();
+            workers.push(WorkerTrace {
+                worker: w as u32,
+                region: region_of.get(w).copied().flatten(),
+                aggregator,
+                spans: worker_spans(
+                    ts - t_comp,
+                    ts,
+                    start,
+                    wt.tm,
+                    wt.tc,
+                    tc,
+                ),
+                paths,
+            });
+        }
+        let regions: Vec<RegionTrace> = self
+            .clock
+            .region_ticks()
+            .iter()
+            .enumerate()
+            .filter(|(_, rt)| rt.active)
+            .map(|(r, rt)| RegionTrace {
+                region: r as u32,
+                sync: rt.sync,
+                wan_start: (rt.wan_tm - rt.wan_tx_secs)
+                    .max(rt.sync)
+                    .min(rt.wan_tm),
+                wan_tm: rt.wan_tm,
+                wan_tc: rt.wan_tc,
+                senders: rt.senders,
+            })
+            .collect();
+        TickTrace { iter, ts, t_comp, tc, workers, regions }
     }
 }
 

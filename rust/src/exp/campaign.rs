@@ -1,15 +1,18 @@
 //! Resumable sweep campaigns (DESIGN.md §Perf).
 //!
 //! A large sweep is a sequence of deterministic *cells*, each contributing
-//! rows to one campaign CSV. The engine checkpoints progress to a manifest
-//! after every cell — fingerprint, completed cell ids, and the CSV byte
-//! offset — with an atomic temp-file + rename, so a killed campaign
-//! resumes where it stopped and produces a **byte-identical** CSV: the
-//! resume truncates the CSV back to the last checkpointed offset
+//! rows to one campaign CSV. The engine checkpoints progress to an
+//! append-only *journal*: an atomically-created header (fingerprint + CSV
+//! header offset) followed by one `cell <offset> <id>` line appended and
+//! flushed per completed cell — O(1) per cell where a rewrite-the-manifest
+//! scheme is O(completed), i.e. O(cells²) over a campaign. A killed
+//! campaign resumes where it stopped and produces a **byte-identical**
+//! CSV: the resume drops any torn journal tail (a line without its
+//! newline), truncates the CSV back to the last journaled offset
 //! (discarding any torn tail row the kill left behind) and re-runs only
 //! the unfinished cells. Rows must therefore be deterministic functions of
 //! the cell — no wall-clock timestamps, no RNG outside the cell's own
-//! seed. A manifest whose fingerprint disagrees with the spec (the sweep's
+//! seed. A journal whose fingerprint disagrees with the spec (the sweep's
 //! shape changed under an old output directory) is a hard error, never a
 //! silent partial reuse.
 
@@ -20,7 +23,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-const MANIFEST_MAGIC: &str = "deco-campaign v1";
+const MANIFEST_MAGIC: &str = "deco-campaign v2";
 
 /// The shape of a campaign: where it lives, what identifies its config,
 /// and the ordered cell ids.
@@ -69,10 +72,21 @@ struct Manifest {
 }
 
 impl Manifest {
+    /// The journal prefix ending on the last newline — everything a
+    /// resume may trust. A kill mid-append leaves a torn final line; the
+    /// cell it was recording simply reruns.
+    fn complete_lines(text: &str) -> &str {
+        if text.ends_with('\n') {
+            text
+        } else {
+            &text[..text.rfind('\n').map_or(0, |i| i + 1)]
+        }
+    }
+
     fn parse(text: &str, path: &Path) -> Result<Self> {
-        let mut lines = text.lines();
+        let mut lines = Self::complete_lines(text).lines();
         if lines.next() != Some(MANIFEST_MAGIC) {
-            bail!("{} is not a campaign manifest", path.display());
+            bail!("{} is not a campaign journal", path.display());
         }
         let mut fingerprint = None;
         let mut csv_bytes = None;
@@ -88,41 +102,30 @@ impl Manifest {
                         format!("bad csv_bytes in {}", path.display())
                     })?)
                 }
-                Some(("done", v)) => completed.push(v.to_string()),
+                Some(("cell", v)) => {
+                    let Some((bytes, id)) = v.split_once(' ') else {
+                        bail!(
+                            "unrecognized journal line {line:?} in {}",
+                            path.display()
+                        );
+                    };
+                    csv_bytes =
+                        Some(bytes.parse::<u64>().with_context(|| {
+                            format!("bad cell offset in {}", path.display())
+                        })?);
+                    completed.push(id.to_string());
+                }
                 _ => bail!(
-                    "unrecognized manifest line {line:?} in {}",
+                    "unrecognized journal line {line:?} in {}",
                     path.display()
                 ),
             }
         }
         let (Some(fingerprint), Some(csv_bytes)) = (fingerprint, csv_bytes)
         else {
-            bail!("incomplete campaign manifest at {}", path.display());
+            bail!("incomplete campaign journal at {}", path.display());
         };
         Ok(Self { fingerprint, csv_bytes, completed })
-    }
-
-    fn render(&self) -> String {
-        let mut s = format!(
-            "{MANIFEST_MAGIC}\nfingerprint {}\ncsv_bytes {}\n",
-            self.fingerprint, self.csv_bytes
-        );
-        for id in &self.completed {
-            s.push_str("done ");
-            s.push_str(id);
-            s.push('\n');
-        }
-        s
-    }
-
-    /// Atomic checkpoint: write next to the manifest, then rename over it.
-    fn store(&self, path: &Path) -> Result<()> {
-        let tmp = path.with_extension("manifest.tmp");
-        fs::write(&tmp, self.render())
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        fs::rename(&tmp, path)
-            .with_context(|| format!("committing {}", path.display()))?;
-        Ok(())
     }
 }
 
@@ -156,7 +159,7 @@ pub fn run_campaign(
         if m.fingerprint != spec.fingerprint {
             bail!(
                 "campaign at {} was started with a different configuration \
-                 (manifest fingerprint {:?}, current {:?}); point the sweep \
+                 (journal fingerprint {:?}, current {:?}); point the sweep \
                  at a fresh directory or delete the stale campaign",
                 spec.dir.display(),
                 m.fingerprint,
@@ -166,12 +169,21 @@ pub fn run_campaign(
         for id in &m.completed {
             if !spec.cells.contains(id) {
                 bail!(
-                    "manifest at {} records completed cell {id:?} the \
+                    "journal at {} records completed cell {id:?} the \
                      current spec doesn't contain",
                     manifest_path.display()
                 );
             }
         }
+        // drop any torn journal tail so appends resume on a line boundary
+        let valid = Manifest::complete_lines(&text).len() as u64;
+        let j = fs::OpenOptions::new()
+            .write(true)
+            .open(&manifest_path)
+            .with_context(|| {
+                format!("opening {}", manifest_path.display())
+            })?;
+        j.set_len(valid)?;
         m
     } else {
         Manifest {
@@ -188,19 +200,37 @@ pub fn run_campaign(
         .open(&csv_path)
         .with_context(|| format!("opening {}", csv_path.display()))?;
     if manifest.completed.is_empty() && manifest.csv_bytes == 0 {
-        // fresh campaign: (re)write the header and checkpoint it, so even
-        // a kill inside the first cell resumes cleanly
+        // fresh campaign: (re)write the header, then commit the journal
+        // header atomically (temp file + rename), so even a kill inside
+        // the first cell resumes cleanly
         csv.set_len(0)?;
         csv.write_all(spec.header.as_bytes())?;
         csv.write_all(b"\n")?;
         csv.flush()?;
         manifest.csv_bytes = csv.stream_position()?;
-        manifest.store(&manifest_path)?;
+        let tmp = manifest_path.with_extension("manifest.tmp");
+        fs::write(
+            &tmp,
+            format!(
+                "{MANIFEST_MAGIC}\nfingerprint {}\ncsv_bytes {}\n",
+                manifest.fingerprint, manifest.csv_bytes
+            ),
+        )
+        .with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &manifest_path).with_context(|| {
+            format!("committing {}", manifest_path.display())
+        })?;
     } else {
         // resume: drop any torn tail the kill left past the checkpoint
         csv.set_len(manifest.csv_bytes)?;
         csv.seek(SeekFrom::Start(manifest.csv_bytes))?;
     }
+    // held open for the whole invocation: every completed cell appends
+    // exactly one flushed line
+    let mut journal = fs::OpenOptions::new()
+        .append(true)
+        .open(&manifest_path)
+        .with_context(|| format!("opening {}", manifest_path.display()))?;
 
     let done: HashSet<String> = manifest.completed.iter().cloned().collect();
     let total = spec.cells.len();
@@ -226,7 +256,10 @@ pub fn run_campaign(
         csv.flush()?;
         manifest.csv_bytes = csv.stream_position()?;
         manifest.completed.push(id.clone());
-        manifest.store(&manifest_path)?;
+        journal.write_all(
+            format!("cell {} {id}\n", manifest.csv_bytes).as_bytes(),
+        )?;
+        journal.flush()?;
         ran += 1;
     }
     Ok(CampaignOutcome::Complete)
@@ -303,9 +336,52 @@ mod tests {
         .unwrap();
         assert_eq!(reran, CampaignOutcome::Complete);
         assert_eq!(fs::read(k.csv_path()).unwrap(), reference);
+        // the journal is append-only: exactly one line per completed cell
+        let journal = fs::read_to_string(k.manifest_path()).unwrap();
+        assert_eq!(
+            journal.lines().filter(|l| l.starts_with("cell ")).count(),
+            3,
+            "one journal line per cell:\n{journal}"
+        );
 
         let _ = fs::remove_dir_all(&straight);
         let _ = fs::remove_dir_all(&chunked);
+    }
+
+    #[test]
+    fn torn_journal_line_reruns_the_cell() {
+        // kill mid-append of cell "b"'s journal line: its rows reached
+        // the CSV but the record is torn — the resume must drop both and
+        // rerun the cell, landing byte-identical to a straight run
+        let dir = tmp_dir("torn_journal");
+        let s = spec(&dir, Some(1));
+        run_campaign(&s, cell_rows).unwrap();
+        {
+            let mut f = fs::OpenOptions::new()
+                .append(true)
+                .open(s.csv_path())
+                .unwrap();
+            f.write_all(b"b,10\nb,11\n").unwrap();
+            let mut j = fs::OpenOptions::new()
+                .append(true)
+                .open(s.manifest_path())
+                .unwrap();
+            j.write_all(b"cell 9").unwrap(); // no trailing newline
+        }
+        let full = spec(&dir, None);
+        assert_eq!(
+            run_campaign(&full, cell_rows).unwrap(),
+            CampaignOutcome::Complete
+        );
+        let straight = tmp_dir("torn_journal_ref");
+        let r = spec(&straight, None);
+        run_campaign(&r, cell_rows).unwrap();
+        assert_eq!(
+            fs::read(full.csv_path()).unwrap(),
+            fs::read(r.csv_path()).unwrap()
+        );
+        let _ = fs::remove_dir_all(&dir);
+        let _ = fs::remove_dir_all(&straight);
     }
 
     #[test]

@@ -4,8 +4,10 @@
 
 use crate::config::{ExperimentConfig, NetworkConfig, StopConfig};
 use crate::coordinator::TrainLoop;
+use crate::metrics::sink::BufferSink;
 use crate::metrics::RunResult;
 use crate::netsim::Fabric;
+use crate::obs::{BufferTracer, TraceEvent};
 use crate::optim::{GradOracle, Logistic, Quadratic};
 use crate::runtime::{PjrtOracle, Runtime};
 use crate::strategy::StrategyKind;
@@ -231,6 +233,55 @@ impl ExpEnv {
             ),
             other => Err(anyhow!("task '{other}' has no analytic oracle")),
         }
+    }
+
+    /// One analytic run with the observability tracer attached: returns
+    /// the training result plus the buffered virtual-time trace events
+    /// (DESIGN.md §Observability). Deliberately restricted to the
+    /// analytic oracles — `repro trace` is a determinism surface, so it
+    /// never touches the PJRT runtime.
+    pub fn run_traced(
+        cfg: &ExperimentConfig,
+    ) -> Result<(RunResult, Vec<TraceEvent>)> {
+        let fabric = cfg.network.build_fabric(cfg.workers)?;
+        let topology = cfg.network.build_topology(cfg.workers, &fabric)?;
+        match cfg.task.as_str() {
+            "quadratic" => Self::run_prebuilt_traced(
+                Quadratic::new(4096, cfg.workers, 0.5, 0.1, 0.3, 0.2, cfg.seed),
+                cfg,
+                fabric,
+                topology,
+            ),
+            "logistic" => Self::run_prebuilt_traced(
+                Logistic::new(512, cfg.workers, 400, 32, 1e-4, 1.0, cfg.seed),
+                cfg,
+                fabric,
+                topology,
+            ),
+            other => Err(anyhow!("task '{other}' has no analytic oracle")),
+        }
+    }
+
+    fn run_prebuilt_traced<O: GradOracle>(
+        oracle: O,
+        cfg: &ExperimentConfig,
+        fabric: Fabric,
+        topology: Topology,
+    ) -> Result<(RunResult, Vec<TraceEvent>)> {
+        let dim = oracle.dim();
+        let params = cfg.train_params(dim);
+        let mut tl = TrainLoop::try_with_topology(
+            oracle,
+            cfg.strategy.build(),
+            fabric,
+            topology,
+            params,
+        )?;
+        let mut sink = BufferSink::new();
+        let mut tracer = BufferTracer::new();
+        let mut result = tl.run_traced(&cfg.task, &mut sink, &mut tracer)?;
+        result.records = sink.into_records();
+        Ok((result, tracer.into_events()))
     }
 
     fn run_with<O: GradOracle>(

@@ -17,6 +17,7 @@ use anyhow::Result;
 use super::campaign::{run_campaign, CampaignOutcome, CampaignSpec};
 use crate::coordinator::VirtualClock;
 use crate::netsim::{BandwidthTrace, Fabric};
+use crate::obs::Attribution;
 
 /// Reference-scan verification ceiling: above this the O(n·ticks)
 /// singleton engine is the whole cost of the cell, so big cells trust the
@@ -44,10 +45,21 @@ fn fabric_for(scenario: &str, n: usize) -> Fabric {
     }
 }
 
+/// Per-iteration compute time of the synthetic schedule.
+const T_COMP: f64 = 0.05;
+
 /// Drive `clock` for `ticks` iterations of the scenario's deterministic
 /// (τ, bits, mask) schedule and return the per-tick sync arrivals' last
-/// value via the clock itself.
-fn drive(clock: &mut VirtualClock, scenario: &str, n: usize, ticks: usize) {
+/// value via the clock itself. With `attr`, each tick's fastest-worker
+/// boundaries feed the streaming stall [`Attribution`] through its O(1)
+/// flat path — the sweep stays O(classes) per tick.
+fn drive(
+    clock: &mut VirtualClock,
+    scenario: &str,
+    n: usize,
+    ticks: usize,
+    mut attr: Option<&mut Attribution>,
+) {
     // churn toggles the first n/16 workers every 17 ticks — one class
     // split on the first departure, stable class count afterwards
     let block = (n / 16).clamp(1, n - 1);
@@ -62,7 +74,14 @@ fn drive(clock: &mut VirtualClock, scenario: &str, n: usize, ticks: usize) {
         let tau = k % 4;
         let bits = 1_000_000 + (k as u64 % 7) * 250_000;
         let active = if scenario == "churn" { Some(&mask[..]) } else { None };
-        clock.tick_members(0.05, tau, bits, active);
+        let tick = clock.tick_members(T_COMP, tau, bits, active);
+        if let Some(a) = attr.as_deref_mut() {
+            if let Some(wt) = clock.fastest_last() {
+                a.record_flat(
+                    tick.ts, T_COMP, wt.tm, wt.tc, wt.tx_secs, tick.tc,
+                );
+            }
+        }
     }
 }
 
@@ -70,7 +89,8 @@ fn drive(clock: &mut VirtualClock, scenario: &str, n: usize, ticks: usize) {
 /// reference engine bit-for-bit, and emit the CSV row.
 fn run_cell(n: usize, scenario: &str, ticks: usize) -> Result<String> {
     let mut clock = VirtualClock::new(fabric_for(scenario, n));
-    drive(&mut clock, scenario, n, ticks);
+    let mut attr = Attribution::new();
+    drive(&mut clock, scenario, n, ticks, Some(&mut attr));
     let tx_sum: f64 = clock.tx_totals().iter().sum();
     let (now, classes) = (clock.now(), clock.timeline_classes());
 
@@ -78,7 +98,7 @@ fn run_cell(n: usize, scenario: &str, ticks: usize) -> Result<String> {
     if ref_checked {
         let mut reference =
             VirtualClock::new(fabric_for(scenario, n)).with_reference_scan();
-        drive(&mut reference, scenario, n, ticks);
+        drive(&mut reference, scenario, n, ticks, None);
         anyhow::ensure!(
             reference.now().to_bits() == now.to_bits(),
             "class engine diverged from the reference scan \
@@ -93,7 +113,11 @@ fn run_cell(n: usize, scenario: &str, ticks: usize) -> Result<String> {
         );
     }
     Ok(format!(
-        "{n},{scenario},{ticks},{classes},{now:.6},{tx_sum:.6},{}",
+        "{n},{scenario},{ticks},{classes},{now:.6},{tx_sum:.6},{:.6},{:.6},\
+         {:.6},{}",
+        attr.straggler_fraction(),
+        attr.transfer_fraction(),
+        attr.compute_fraction(),
         u8::from(ref_checked)
     ))
 }
@@ -125,9 +149,10 @@ pub fn main(
         dir,
         name: "scale".into(),
         fingerprint: format!(
-            "scale-v1 sizes={sizes:?} ticks={ticks} scenarios={SCENARIOS:?}"
+            "scale-v2 sizes={sizes:?} ticks={ticks} scenarios={SCENARIOS:?}"
         ),
-        header: "n,scenario,ticks,classes,virtual_time,tx_total,ref_checked"
+        header: "n,scenario,ticks,classes,virtual_time,tx_total,\
+                 straggler_frac,transfer_frac,compute_frac,ref_checked"
             .into(),
         cells,
         max_cells,
@@ -175,16 +200,38 @@ mod tests {
     #[test]
     fn class_counts_stay_tiny_under_sharing() {
         let mut uniform = VirtualClock::new(fabric_for("uniform", 2048));
-        drive(&mut uniform, "uniform", 2048, 50);
+        drive(&mut uniform, "uniform", 2048, 50, None);
         assert_eq!(uniform.timeline_classes(), 1);
 
         let mut straggler = VirtualClock::new(fabric_for("straggler", 2048));
-        drive(&mut straggler, "straggler", 2048, 50);
+        drive(&mut straggler, "straggler", 2048, 50, None);
         assert_eq!(straggler.timeline_classes(), 2);
 
         let mut churn = VirtualClock::new(fabric_for("churn", 2048));
-        drive(&mut churn, "churn", 2048, 50);
+        drive(&mut churn, "churn", 2048, 50, None);
         // one split when the churn block first departs; stable afterwards
         assert_eq!(churn.timeline_classes(), 2);
+    }
+
+    #[test]
+    fn attribution_fractions_partition_the_sweep_makespan() {
+        for scenario in SCENARIOS {
+            let mut clock = VirtualClock::new(fabric_for(scenario, 128));
+            let mut attr = Attribution::new();
+            drive(&mut clock, scenario, 128, 60, Some(&mut attr));
+            assert_eq!(attr.ticks(), 60);
+            assert!(attr.makespan() > 0.0);
+            let gap = (attr.attributed() - attr.makespan()).abs();
+            assert!(
+                gap <= 1e-9 * attr.makespan(),
+                "{scenario}: attributed {} vs makespan {}",
+                attr.attributed(),
+                attr.makespan()
+            );
+            let f = attr.straggler_fraction()
+                + attr.transfer_fraction()
+                + attr.compute_fraction();
+            assert!((f - 1.0).abs() < 1e-9, "{scenario}: fractions sum {f}");
+        }
     }
 }

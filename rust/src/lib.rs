@@ -25,6 +25,7 @@ pub mod elastic;
 pub mod exp;
 pub mod metrics;
 pub mod netsim;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod strategy;

@@ -8,14 +8,17 @@
 //!           [--task NAME] [--t-comp F] [--mult F] [--seed N]
 //!           [--fast] [--dir PATH] [--max-cells N]
 //! repro train --config cfg.json [--out run.csv]
+//! repro trace cfg.json [--out trace.json]
 //! repro deco --a BPS --b S --t-comp S --s-g BITS
 //! repro artifacts
 //! ```
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use deco::config::ExperimentConfig;
 use deco::deco::{solve, DecoInput};
 use deco::exp;
+use deco::obs::{perfetto_string, Attribution, TraceEvent};
+use deco::util::Json;
 
 /// Minimal flag parser: `--key value...` plus positional args.
 struct Args {
@@ -96,6 +99,12 @@ USAGE:
               (--fast shrinks n for CI, --dir PATH overrides results/,
               --max-cells N pauses after N cells to demonstrate resume)
   repro train --config cfg.json [--out run.csv]
+  repro trace cfg.json [--out trace.json]
+      run an analytic config with virtual-time tracing: writes a
+      Chrome/Perfetto trace-event JSON (load in ui.perfetto.dev) and
+      prints the stall-attribution report — per-phase totals summing to
+      the run's makespan. Deterministic: byte-identical across reruns
+      and pool sizes.
   repro deco --a BPS --b SECONDS --t-comp SECONDS --s-g BITS
   repro artifacts
 ";
@@ -202,6 +211,52 @@ fn main() -> Result<()> {
                 res.write_csv(path)?;
                 println!("wrote {path}");
             }
+        }
+        "trace" => {
+            let config = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .or_else(|| args.flag_str("config"))
+                .ok_or_else(|| anyhow!("trace needs a config path\n{USAGE}"))?;
+            let cfg = ExperimentConfig::from_json_file(config)?;
+            let (res, events) = exp::ExpEnv::run_traced(&cfg)?;
+            let mut attr = Attribution::new();
+            for ev in &events {
+                if let TraceEvent::Tick(tt) = ev {
+                    attr.record_tick(tt);
+                }
+            }
+            // the report must account for the whole run: per-phase
+            // totals sum to the makespan within 1e-6 relative
+            let gap = (attr.attributed() - attr.makespan()).abs();
+            ensure!(
+                gap <= 1e-6 * attr.makespan().max(1e-12),
+                "attribution lost {gap}s of the {}s makespan",
+                attr.makespan()
+            );
+            let text = perfetto_string(&events);
+            let parsed = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+            ensure!(
+                parsed.to_string() == text,
+                "perfetto JSON did not round-trip through util::Json"
+            );
+            let out = args.flag_str("out").unwrap_or("trace.json");
+            std::fs::write(out, &text)?;
+            println!(
+                "{}: {} iters, {:.1}s virtual, final loss {:.5}",
+                res.method,
+                res.total_iters,
+                res.total_time,
+                res.final_loss()
+            );
+            println!("{}", attr.table());
+            println!(
+                "trace: {} events over {} ticks -> {out} ({} bytes)",
+                events.len(),
+                attr.ticks(),
+                text.len()
+            );
         }
         "deco" => {
             let a = args.req_f64("a")?;

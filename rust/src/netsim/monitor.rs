@@ -103,10 +103,23 @@ impl NetworkMonitor {
 }
 
 /// Per-path estimators plus the aggregate views DeCo plans on.
+///
+/// Storage is slot-indirected (DESIGN.md §Observability): workers whose
+/// estimators are bitwise identical may share one *slot* (one per-path
+/// estimator set), which makes the class-level observation path
+/// ([`Self::observe_class_transfer`]) O(live classes) per tick instead of
+/// O(workers). Per-worker writes copy a shared slot out first
+/// (copy-on-write), so mixed per-worker / per-class use stays sound;
+/// reads are one indirection.
 #[derive(Clone, Debug)]
 pub struct FabricMonitor {
-    /// one estimator per worker path; single-path workers hold exactly one
-    workers: Vec<Vec<NetworkMonitor>>,
+    /// estimator slots; `slots[slot_of[w]]` is worker `w`'s per-path set
+    /// (single-path workers hold exactly one estimator)
+    slots: Vec<Vec<NetworkMonitor>>,
+    /// worker → slot index
+    slot_of: Vec<usize>,
+    /// live pointer count per slot (0 = orphaned by a split / regroup)
+    slot_members: Vec<usize>,
     /// compute time is a property of the iteration, not of any link
     comp: Ewma,
     /// membership mask (elastic subsystem, DESIGN.md §Elasticity): departed
@@ -114,6 +127,9 @@ pub struct FabricMonitor {
     /// EWMAs — but are excluded from every aggregate view, so a strategy
     /// always plans on the *active-set* fabric.
     active: Vec<bool>,
+    /// whether any estimator carries measurement noise — the noise RNG
+    /// streams are per worker, so noisy estimators never share slots
+    noisy: bool,
 }
 
 /// Per-path noise RNG stream: path 0 reduces exactly to the historical
@@ -140,7 +156,7 @@ impl FabricMonitor {
         assert!(!paths.is_empty());
         assert!(paths.iter().all(|&k| k > 0), "every worker has >= 1 path");
         Self {
-            workers: paths
+            slots: paths
                 .iter()
                 .enumerate()
                 .map(|(i, &k)| {
@@ -151,8 +167,11 @@ impl FabricMonitor {
                         .collect()
                 })
                 .collect(),
+            slot_of: (0..paths.len()).collect(),
+            slot_members: vec![1; paths.len()],
             comp: Ewma::new(alpha),
             active: vec![true; paths.len()],
+            noisy: false,
         }
     }
 
@@ -169,40 +188,113 @@ impl FabricMonitor {
     }
 
     /// Apply multiplicative measurement noise to every path estimator.
+    /// Intended at construction time (all current callers), before any
+    /// slots have been shared by class-level observations.
     pub fn with_noise(mut self, noise: f64) -> Self {
-        for w in &mut self.workers {
-            for m in w {
+        for slot in &mut self.slots {
+            for m in slot {
                 m.noise = noise;
             }
         }
+        self.noisy = noise != 0.0;
         self
+    }
+
+    /// True when no estimator carries measurement noise — the condition
+    /// under which workers with identical observation histories hold
+    /// bitwise-identical estimator state (and may share slots).
+    pub fn noiseless(&self) -> bool {
+        !self.noisy
     }
 
     /// Worker count (one estimated "link" per worker, however many paths).
     pub fn links(&self) -> usize {
-        self.workers.len()
+        self.slot_of.len()
     }
 
     /// Worker `worker`'s path-0 estimator — the whole link on single-path
     /// workers.
     pub fn link(&self, worker: usize) -> &NetworkMonitor {
-        &self.workers[worker][0]
+        &self.slots[self.slot_of[worker]][0]
     }
 
     /// Path count for one worker.
     pub fn paths(&self, worker: usize) -> usize {
-        self.workers[worker].len()
+        self.slots[self.slot_of[worker]].len()
     }
 
     /// One specific path estimator of a (possibly bonded) worker.
     pub fn path(&self, worker: usize, path: usize) -> &NetworkMonitor {
-        &self.workers[worker][path]
+        &self.slots[self.slot_of[worker]][path]
+    }
+
+    /// Exclusive slot for one worker, splitting a shared slot out
+    /// copy-on-write first.
+    fn own_slot(&mut self, worker: usize) -> usize {
+        let s = self.slot_of[worker];
+        if self.slot_members[s] == 1 {
+            return s;
+        }
+        self.slot_members[s] -= 1;
+        let split = self.slots[s].clone();
+        self.slots.push(split);
+        self.slot_members.push(1);
+        self.slot_of[worker] = self.slots.len() - 1;
+        self.slots.len() - 1
+    }
+
+    /// Slot shared by exactly `members`. O(1) in the steady state (the
+    /// class already shares a slot — pointer count equals the member
+    /// count, which under split-only class evolution implies set
+    /// equality); otherwise the first member's state is cloned into a
+    /// fresh slot and every member repointed at it.
+    fn class_slot(&mut self, members: &[u32]) -> usize {
+        let s = self.slot_of[members[0] as usize];
+        if self.slot_members[s] == members.len() {
+            return s;
+        }
+        let shared = self.slots[s].clone();
+        self.slots.push(shared);
+        self.slot_members.push(members.len());
+        let ns = self.slots.len() - 1;
+        for &w in members {
+            let old = self.slot_of[w as usize];
+            self.slot_members[old] -= 1;
+            self.slot_of[w as usize] = ns;
+        }
+        ns
     }
 
     /// Worker `worker` finished a transfer of `bits` in `secs` of pure
     /// transmission time (path 0 — the single-path observation).
     pub fn observe_transfer(&mut self, worker: usize, bits: u64, secs: f64) {
-        self.workers[worker][0].observe_transfer(bits, secs);
+        let s = self.own_slot(worker);
+        self.slots[s][0].observe_transfer(bits, secs);
+    }
+
+    /// One estimator update for a whole timeline class: every worker in
+    /// `members` observed the same `(bits, secs)` transfer. Requires that
+    /// the members' estimators have seen identical observation histories
+    /// — exactly what the clock's shared-timeline classes guarantee (they
+    /// only ever split); grouping divergent workers would collapse their
+    /// state onto the first member's. With measurement noise the
+    /// per-worker RNG streams differ, so the update falls back to
+    /// per-member writes.
+    pub fn observe_class_transfer(
+        &mut self,
+        members: &[u32],
+        bits: u64,
+        secs: f64,
+    ) {
+        assert!(!members.is_empty());
+        if self.noisy {
+            for &w in members {
+                self.observe_transfer(w as usize, bits, secs);
+            }
+            return;
+        }
+        let s = self.class_slot(members);
+        self.slots[s][0].observe_transfer(bits, secs);
     }
 
     /// One path of a bonded worker carried `bits` (its water-filling
@@ -215,13 +307,29 @@ impl FabricMonitor {
         secs: f64,
     ) {
         if secs > 0.0 && bits > 0.0 {
-            self.workers[worker][path].observe_bandwidth(bits / secs);
+            let s = self.own_slot(worker);
+            self.slots[s][path].observe_bandwidth(bits / secs);
         }
     }
 
     /// Latency sample for one worker's link (path 0).
     pub fn observe_latency_for(&mut self, worker: usize, secs: f64) {
-        self.workers[worker][0].observe_latency(secs);
+        let s = self.own_slot(worker);
+        self.slots[s][0].observe_latency(secs);
+    }
+
+    /// Class-level form of [`Self::observe_latency_for`] — same contract
+    /// as [`Self::observe_class_transfer`].
+    pub fn observe_class_latency(&mut self, members: &[u32], secs: f64) {
+        assert!(!members.is_empty());
+        if self.noisy {
+            for &w in members {
+                self.observe_latency_for(w as usize, secs);
+            }
+            return;
+        }
+        let s = self.class_slot(members);
+        self.slots[s][0].observe_latency(secs);
     }
 
     /// Latency sample for one path of a bonded worker.
@@ -231,7 +339,8 @@ impl FabricMonitor {
         path: usize,
         secs: f64,
     ) {
-        self.workers[worker][path].observe_latency(secs);
+        let s = self.own_slot(worker);
+        self.slots[s][path].observe_latency(secs);
     }
 
     pub fn observe_compute(&mut self, secs: f64) {
@@ -240,18 +349,40 @@ impl FabricMonitor {
 
     /// Broadcast a bandwidth probe to every path (tests / active probing).
     pub fn observe_bandwidth(&mut self, bps: f64) {
-        for w in &mut self.workers {
-            for m in w {
-                m.observe_bandwidth(bps);
+        if self.noisy {
+            for w in 0..self.slot_of.len() {
+                let s = self.own_slot(w);
+                for m in &mut self.slots[s] {
+                    m.observe_bandwidth(bps);
+                }
+            }
+        } else {
+            for (s, slot) in self.slots.iter_mut().enumerate() {
+                if self.slot_members[s] > 0 {
+                    for m in slot {
+                        m.observe_bandwidth(bps);
+                    }
+                }
             }
         }
     }
 
     /// Broadcast a latency probe to every path (tests / active probing).
     pub fn observe_latency(&mut self, secs: f64) {
-        for w in &mut self.workers {
-            for m in w {
-                m.observe_latency(secs);
+        if self.noisy {
+            for w in 0..self.slot_of.len() {
+                let s = self.own_slot(w);
+                for m in &mut self.slots[s] {
+                    m.observe_latency(secs);
+                }
+            }
+        } else {
+            for (s, slot) in self.slots.iter_mut().enumerate() {
+                if self.slot_members[s] > 0 {
+                    for m in slot {
+                        m.observe_latency(secs);
+                    }
+                }
             }
         }
     }
@@ -261,7 +392,7 @@ impl FabricMonitor {
     /// bonded worker (the water-filling scheduler really does extract the
     /// aggregate rate, so DeCo should plan on it).
     pub fn worker_bandwidth(&self, worker: usize) -> Option<f64> {
-        let paths = &self.workers[worker];
+        let paths = &self.slots[self.slot_of[worker]];
         if paths.len() == 1 {
             return paths[0].bandwidth();
         }
@@ -286,7 +417,7 @@ impl FabricMonitor {
     /// carry zero weight; if no path has both, fall back to the min over
     /// latency estimates.
     pub fn worker_latency(&self, worker: usize) -> Option<f64> {
-        let paths = &self.workers[worker];
+        let paths = &self.slots[self.slot_of[worker]];
         if paths.len() == 1 {
             return paths[0].latency();
         }
@@ -546,6 +677,137 @@ mod tests {
         }
         assert!(fm.worker_bandwidth(0).unwrap() < 3e7);
         assert!(fm.bandwidth().unwrap() < 3e7);
+    }
+
+    #[test]
+    fn class_observation_matches_per_worker_bitwise() {
+        // two timeline classes, then a split: the O(classes) observation
+        // path must leave every estimator bitwise identical to the
+        // per-worker stream
+        let n = 6;
+        let mut per = FabricMonitor::new(n, 0.3, 7);
+        let mut cls = FabricMonitor::new(n, 0.3, 7);
+        let observe = |per: &mut FabricMonitor,
+                       cls: &mut FabricMonitor,
+                       members: &[u32],
+                       k: u64,
+                       c: u64| {
+            let bits = 1_000_000 + k * 10_007 + c * 331;
+            let secs = 0.01 + k as f64 * 1e-4 + c as f64 * 1e-3;
+            let lat = 0.1 + c as f64 * 0.05;
+            for &w in members {
+                per.observe_transfer(w as usize, bits, secs);
+                per.observe_latency_for(w as usize, lat);
+            }
+            cls.observe_class_transfer(members, bits, secs);
+            cls.observe_class_latency(members, lat);
+        };
+        for k in 0..20u64 {
+            observe(&mut per, &mut cls, &[0, 2, 4], k, 0);
+            observe(&mut per, &mut cls, &[1, 3, 5], k, 1);
+        }
+        // class {0, 2, 4} splits — {0, 4} and {2} diverge from here on
+        for k in 20..40u64 {
+            observe(&mut per, &mut cls, &[0, 4], k, 0);
+            observe(&mut per, &mut cls, &[2], k, 2);
+            observe(&mut per, &mut cls, &[1, 3, 5], k, 1);
+        }
+        for w in 0..n {
+            assert_eq!(
+                per.link(w).bandwidth().unwrap().to_bits(),
+                cls.link(w).bandwidth().unwrap().to_bits(),
+                "worker {w} bandwidth"
+            );
+            assert_eq!(
+                per.link(w).latency().unwrap().to_bits(),
+                cls.link(w).latency().unwrap().to_bits(),
+                "worker {w} latency"
+            );
+        }
+        assert_eq!(
+            per.bandwidth().unwrap().to_bits(),
+            cls.bandwidth().unwrap().to_bits()
+        );
+        assert_eq!(
+            per.latency().unwrap().to_bits(),
+            cls.latency().unwrap().to_bits()
+        );
+        assert_eq!(
+            per.mean_bandwidth().unwrap().to_bits(),
+            cls.mean_bandwidth().unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn class_observation_matches_per_worker_at_1024() {
+        // the scale point the sweeps care about: one class of 1024, split
+        // into halves mid-stream, still bitwise against per-worker
+        let n = 1024usize;
+        let all: Vec<u32> = (0..n as u32).collect();
+        let (lo, hi) = all.split_at(n / 2);
+        let mut per = FabricMonitor::new(n, 0.3, 3);
+        let mut cls = FabricMonitor::new(n, 0.3, 3);
+        for k in 0..10u64 {
+            let bits = 2_000_000 + k * 77_003;
+            let secs = 0.02 + k as f64 * 1e-4;
+            for w in 0..n {
+                per.observe_transfer(w, bits, secs);
+                per.observe_latency_for(w, 0.2);
+            }
+            cls.observe_class_transfer(&all, bits, secs);
+            cls.observe_class_latency(&all, 0.2);
+        }
+        for k in 0..10u64 {
+            let bits = 3_000_000 + k * 13_007;
+            let secs = 0.03 + k as f64 * 2e-4;
+            for (part, shift) in [(lo, 0.0), (hi, 0.1)] {
+                for &w in part {
+                    per.observe_transfer(w as usize, bits, secs + shift);
+                    per.observe_latency_for(w as usize, 0.2 + shift);
+                }
+                cls.observe_class_transfer(part, bits, secs + shift);
+                cls.observe_class_latency(part, 0.2 + shift);
+            }
+        }
+        for w in 0..n {
+            assert_eq!(
+                per.link(w).bandwidth().unwrap().to_bits(),
+                cls.link(w).bandwidth().unwrap().to_bits()
+            );
+            assert_eq!(
+                per.link(w).latency().unwrap().to_bits(),
+                cls.link(w).latency().unwrap().to_bits()
+            );
+        }
+        assert_eq!(
+            per.bandwidth().unwrap().to_bits(),
+            cls.bandwidth().unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn noisy_class_observation_preserves_per_worker_streams() {
+        // with measurement noise the class path must fall back to
+        // per-member updates so every worker keeps its own RNG stream
+        let mut per = FabricMonitor::new(2, 0.3, 5).with_noise(0.2);
+        let mut cls = FabricMonitor::new(2, 0.3, 5).with_noise(0.2);
+        assert!(!cls.noiseless());
+        for _ in 0..10 {
+            per.observe_transfer(0, 5_000_000, 0.5);
+            per.observe_transfer(1, 5_000_000, 0.5);
+            cls.observe_class_transfer(&[0, 1], 5_000_000, 0.5);
+        }
+        for w in 0..2 {
+            assert_eq!(
+                per.link(w).bandwidth().unwrap().to_bits(),
+                cls.link(w).bandwidth().unwrap().to_bits()
+            );
+        }
+        // different seeds really do produce different per-worker values
+        assert_ne!(
+            cls.link(0).bandwidth().unwrap().to_bits(),
+            cls.link(1).bandwidth().unwrap().to_bits()
+        );
     }
 
     #[test]

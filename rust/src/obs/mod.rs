@@ -1,0 +1,1018 @@
+//! Observability — deterministic, virtual-time-keyed structured tracing
+//! (DESIGN.md §Observability).
+//!
+//! The paper's whole argument is about *where time goes* — compression
+//! cost vs. transfer time vs. staleness-amplified error — yet a CSV of
+//! `(iter, loss, time)` rows can't show how much of a run's makespan was
+//! compute, LAN transfer, WAN transfer, or slowest-worker wait, nor why
+//! DeCo picked a particular `(δ, τ)` at each re-plan. This module is that
+//! missing layer:
+//!
+//! * a [`TraceSink`] trait with a zero-overhead [`NullSink`] default —
+//!   every emission site in the training loop is guarded by
+//!   [`TraceSink::enabled`], so disabled tracing never builds an event;
+//! * typed events ([`TraceEvent`]): per-worker per-iteration phase spans
+//!   ([`TickTrace`], derived from the exact per-link arrival times the
+//!   clock already computes), per-path transfer spans on bonded links,
+//!   churn events from `elastic`, class split / aggregator-election
+//!   events from the shared-timeline class engine ([`ClockEvent`]), and a
+//!   re-plan decision log from `strategy` ([`ReplanRecord`]);
+//! * two exporters: Chrome/Perfetto trace-event JSON
+//!   ([`perfetto_trace`] — spans on virtual time, one track per worker /
+//!   region / path) and the streaming stall-[`Attribution`] report
+//!   (per-phase totals whose sum equals the run's makespan exactly).
+//!
+//! Determinism contract: every timestamp is **virtual** (the clock's
+//! Eq.-19 recurrence), never wall clock, so a traced run serializes
+//! byte-identically across reruns and worker-pool sizes. The Perfetto
+//! export goes through [`crate::util::Json`] (BTreeMap-ordered keys) to
+//! keep the bytes canonical.
+
+use crate::deco::DecoInput;
+use crate::elastic::ChurnEvent;
+use crate::metrics::format_table;
+use crate::util::Json;
+use std::collections::BTreeSet;
+
+// ---------------------------------------------------------------------------
+// Span taxonomy
+// ---------------------------------------------------------------------------
+
+/// One phase of the per-iteration timeline (DESIGN.md §Observability).
+///
+/// A worker's iteration tiles into the first five phases; in the two-tier
+/// topology the winning region's partial then rides the WAN phases. The
+/// stall-attribution chain relabels terminal aggregation wait as
+/// [`Phase::StragglerWait`] — time the *fastest* chain spent waiting on
+/// everyone else.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// forward/backward + compress + error-feedback compute
+    Compute,
+    /// gradient ready but the (shared) uplink is still busy
+    QueueWait,
+    /// bits on the LAN wire (bonded workers: the water-filled window)
+    LanTransfer,
+    /// end-to-end link latency `b`
+    Propagation,
+    /// arrived; waiting for the tick's slowest worker
+    AggWait,
+    /// region partial waits for its slowest member
+    RegionSyncWait,
+    /// region partial ready but the WAN uplink is still busy
+    WanQueue,
+    /// bits on the WAN wire
+    WanTransfer,
+    /// WAN end-to-end latency
+    WanPropagation,
+    /// region partial arrived; waiting for the slowest region
+    WanAggWait,
+    /// attribution only: the fastest chain waiting on stragglers
+    StragglerWait,
+}
+
+impl Phase {
+    /// Number of phases (sizes the attribution accumulator).
+    pub const COUNT: usize = 11;
+
+    /// All phases, in taxonomy order.
+    pub const ALL: [Phase; Phase::COUNT] = [
+        Phase::Compute,
+        Phase::QueueWait,
+        Phase::LanTransfer,
+        Phase::Propagation,
+        Phase::AggWait,
+        Phase::RegionSyncWait,
+        Phase::WanQueue,
+        Phase::WanTransfer,
+        Phase::WanPropagation,
+        Phase::WanAggWait,
+        Phase::StragglerWait,
+    ];
+
+    /// Stable display name (also the Perfetto event name).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::QueueWait => "queue_wait",
+            Phase::LanTransfer => "lan_transfer",
+            Phase::Propagation => "propagation",
+            Phase::AggWait => "agg_wait",
+            Phase::RegionSyncWait => "region_sync_wait",
+            Phase::WanQueue => "wan_queue",
+            Phase::WanTransfer => "wan_transfer",
+            Phase::WanPropagation => "wan_propagation",
+            Phase::WanAggWait => "wan_agg_wait",
+            Phase::StragglerWait => "straggler_wait",
+        }
+    }
+
+    fn index(self) -> usize {
+        Phase::ALL.iter().position(|&p| p == self).unwrap()
+    }
+}
+
+/// A half-open `[t0, t1)` phase interval on the virtual timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    pub phase: Phase,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+impl Span {
+    pub fn dur(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// Build the five worker-phase spans from raw tick boundaries, forcing
+/// the boundary sequence monotone (float rounding can put `tm − tx` a
+/// hair before `ts`; bonded workers legitimately report per-path busy
+/// seconds that sum past the window, collapsing `QueueWait` to zero
+/// width). The spans always tile `[compute_start, tc_k]` contiguously.
+pub fn worker_spans(
+    compute_start: f64,
+    ts: f64,
+    start: f64,
+    tm: f64,
+    tc_w: f64,
+    tc_k: f64,
+) -> [Span; 5] {
+    let mut b = [compute_start, ts, start, tm, tc_w, tc_k];
+    for i in 1..b.len() {
+        b[i] = b[i].max(b[i - 1]);
+    }
+    let phases = [
+        Phase::Compute,
+        Phase::QueueWait,
+        Phase::LanTransfer,
+        Phase::Propagation,
+        Phase::AggWait,
+    ];
+    std::array::from_fn(|i| Span { phase: phases[i], t0: b[i], t1: b[i + 1] })
+}
+
+/// One path of a bonded worker's transfer window (detail under the
+/// worker's `LanTransfer` span; water-filling means paths overlap).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PathSpanRec {
+    pub path: u32,
+    /// fractional water-filling share carried by this path
+    pub bits: f64,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+/// One worker's fully-tiled iteration timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerTrace {
+    pub worker: u32,
+    /// region id in the two-tier topology, `None` on a flat fabric
+    pub region: Option<u32>,
+    /// aggregators don't send on the LAN: their middle spans are empty
+    pub aggregator: bool,
+    pub spans: [Span; 5],
+    /// per-path windows for bonded workers (empty on single-path links)
+    pub paths: Vec<PathSpanRec>,
+}
+
+/// One region's WAN timeline boundaries for a tick (two-tier only).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RegionTrace {
+    pub region: u32,
+    /// slowest member arrival (`RegionSyncWait` ends here)
+    pub sync: f64,
+    /// WAN wire becomes free for this region's partial
+    pub wan_start: f64,
+    /// WAN transmission ends
+    pub wan_tm: f64,
+    /// WAN arrival (`wan_tm` + WAN latency)
+    pub wan_tc: f64,
+    /// active members whose gradients fed the partial
+    pub senders: usize,
+}
+
+impl RegionTrace {
+    /// The region's five WAN-phase spans, tiling `[ts, tc]`.
+    pub fn spans(&self, ts: f64, tc: f64) -> [Span; 5] {
+        let mut b =
+            [ts, self.sync, self.wan_start, self.wan_tm, self.wan_tc, tc];
+        for i in 1..b.len() {
+            b[i] = b[i].max(b[i - 1]);
+        }
+        let phases = [
+            Phase::RegionSyncWait,
+            Phase::WanQueue,
+            Phase::WanTransfer,
+            Phase::WanPropagation,
+            Phase::WanAggWait,
+        ];
+        std::array::from_fn(|i| Span {
+            phase: phases[i],
+            t0: b[i],
+            t1: b[i + 1],
+        })
+    }
+}
+
+/// Everything the clock resolved for one training iteration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TickTrace {
+    pub iter: usize,
+    /// send-ready time `TS_k` (compute started at `ts − t_comp`)
+    pub ts: f64,
+    pub t_comp: f64,
+    /// global arrival `TC_k` — the tournament winner
+    pub tc: f64,
+    /// active workers only, ascending by id
+    pub workers: Vec<WorkerTrace>,
+    /// active regions only (two-tier), ascending by id
+    pub regions: Vec<RegionTrace>,
+}
+
+// ---------------------------------------------------------------------------
+// Control-plane events
+// ---------------------------------------------------------------------------
+
+/// Structural events from the shared-timeline class engine
+/// (DESIGN.md §Perf): class splits and aggregator elections.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClockEvent {
+    /// `members` workers split out of `from_class` into `new_class`
+    ClassSplit {
+        from_class: usize,
+        new_class: usize,
+        members: usize,
+        active: bool,
+    },
+    /// a region elected a new aggregator (churn-composed re-election)
+    AggregatorElected { region: u32, old: Option<u32>, new: u32 },
+}
+
+/// One tier of a DeCo re-plan: the monitor inputs the solver saw and the
+/// `(τ, δ, ln φ)` it chose.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierReplan {
+    pub input: DecoInput,
+    pub tau: usize,
+    pub delta: f64,
+    pub log_phi: f64,
+}
+
+/// A re-plan decision: per-tier solves plus the closed-form predicted
+/// round time (`timesim::model::t_avg_closed_form` on the LAN tier).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplanRecord {
+    pub lan: TierReplan,
+    /// WAN tier in the two-tier topology
+    pub wan: Option<TierReplan>,
+    /// solver-predicted steady-state seconds per iteration
+    pub predicted_round: f64,
+}
+
+/// A typed trace event on the virtual timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    Tick(TickTrace),
+    Churn { t: f64, iter: usize, event: ChurnEvent },
+    Clock { t: f64, iter: usize, event: ClockEvent },
+    Replan { t: f64, iter: usize, rec: ReplanRecord },
+}
+
+// ---------------------------------------------------------------------------
+// Sinks
+// ---------------------------------------------------------------------------
+
+/// Receives trace events from the training loop. Emission sites must
+/// guard event *construction* behind [`TraceSink::enabled`] so the
+/// [`NullSink`] keeps the hot path allocation- and branch-cheap.
+pub trait TraceSink {
+    /// `false` ⇒ the caller must skip building events entirely.
+    fn enabled(&self) -> bool {
+        true
+    }
+    fn record(&mut self, ev: &TraceEvent);
+}
+
+/// The zero-overhead default: reports disabled, drops everything.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn record(&mut self, _ev: &TraceEvent) {}
+}
+
+/// Buffers every event in memory (exporters consume the buffer).
+#[derive(Clone, Debug, Default)]
+pub struct BufferTracer {
+    events: Vec<TraceEvent>,
+}
+
+impl BufferTracer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn into_events(self) -> Vec<TraceEvent> {
+        self.events
+    }
+}
+
+impl TraceSink for BufferTracer {
+    fn record(&mut self, ev: &TraceEvent) {
+        self.events.push(ev.clone());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stall attribution
+// ---------------------------------------------------------------------------
+
+/// Streaming stall-attribution accumulator (DESIGN.md §Observability).
+///
+/// Decomposes the run's makespan into per-phase totals by walking, each
+/// tick, the *fastest* chain — the fastest worker on a flat fabric; the
+/// fastest member of the fastest region in the two-tier topology — and
+/// relabeling its terminal aggregation wait [`Phase::StragglerWait`].
+/// Because the chain's bottom (`ts − t_comp`) never exceeds the running
+/// arrival horizon and its pieces tile contiguously up to `TC_k`, the
+/// clipped per-phase totals sum *exactly* to the final horizon (the
+/// makespan), even when churn makes `TC_k` non-monotone.
+#[derive(Clone, Debug, Default)]
+pub struct Attribution {
+    totals: [f64; Phase::COUNT],
+    /// running max of `TC_k` — equals the makespan after the last tick
+    horizon: f64,
+    ticks: usize,
+}
+
+impl Attribution {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `[t0, t1)` clipped against the horizon (pieces already swept
+    /// by an earlier, slower tick contribute nothing).
+    fn add(&mut self, phase: Phase, t0: f64, t1: f64) {
+        let lo = t0.max(self.horizon);
+        if t1 > lo {
+            self.totals[phase.index()] += t1 - lo;
+        }
+    }
+
+    /// Attribute one tick from its full [`TickTrace`].
+    pub fn record_tick(&mut self, tk: &TickTrace) {
+        if tk.regions.is_empty() {
+            match fastest_worker(&tk.workers, None, false) {
+                Some(w) => {
+                    for s in &w.spans[..4] {
+                        self.add(s.phase, s.t0, s.t1);
+                    }
+                    let last = &w.spans[4];
+                    self.add(Phase::StragglerWait, last.t0, last.t1);
+                }
+                // no active senders: the whole window is a stall
+                None => self.add(Phase::StragglerWait, self.horizon, tk.tc),
+            }
+        } else {
+            let r = tk
+                .regions
+                .iter()
+                .min_by(|x, y| {
+                    (x.wan_tc, x.region)
+                        .partial_cmp(&(y.wan_tc, y.region))
+                        .unwrap()
+                })
+                .unwrap();
+            // fastest *sending* member of the fastest region; an
+            // aggregator-only region contributes its aggregator's
+            // compute span and chains from `ts`
+            let m = fastest_worker(&tk.workers, Some(r.region), false)
+                .or_else(|| fastest_worker(&tk.workers, Some(r.region), true));
+            let tc_m = match m {
+                Some(w) => {
+                    for s in &w.spans[..4] {
+                        self.add(s.phase, s.t0, s.t1);
+                    }
+                    w.spans[3].t1
+                }
+                None => tk.ts,
+            };
+            self.add(Phase::RegionSyncWait, tc_m, r.sync.max(tc_m));
+            let chain = [
+                (Phase::WanQueue, r.sync.max(tc_m), r.wan_start),
+                (Phase::WanTransfer, r.wan_start, r.wan_tm),
+                (Phase::WanPropagation, r.wan_tm, r.wan_tc),
+                (Phase::StragglerWait, r.wan_tc, tk.tc),
+            ];
+            let mut lo = r.sync.max(tc_m);
+            for (phase, t0, t1) in chain {
+                lo = lo.max(t0);
+                let hi = t1.max(lo);
+                self.add(phase, lo, hi);
+                lo = hi;
+            }
+        }
+        self.horizon = self.horizon.max(tk.tc);
+        self.ticks += 1;
+    }
+
+    /// O(1) flat-fabric path for the 100k-worker sweeps: attribute one
+    /// tick straight from the fastest worker's raw boundaries (as
+    /// returned by the clock), skipping the [`TickTrace`] build.
+    pub fn record_flat(
+        &mut self,
+        ts: f64,
+        t_comp: f64,
+        tm: f64,
+        tc_w: f64,
+        tx_secs: f64,
+        tc: f64,
+    ) {
+        let start = (tm - tx_secs).max(ts).min(tm);
+        let spans = worker_spans(ts - t_comp, ts, start, tm, tc_w, tc);
+        for s in &spans[..4] {
+            self.add(s.phase, s.t0, s.t1);
+        }
+        self.add(Phase::StragglerWait, spans[4].t0, spans[4].t1);
+        self.horizon = self.horizon.max(tc);
+        self.ticks += 1;
+    }
+
+    /// Seconds attributed to one phase.
+    pub fn total(&self, phase: Phase) -> f64 {
+        self.totals[phase.index()]
+    }
+
+    /// The run's makespan: the running max of tick arrivals.
+    pub fn makespan(&self) -> f64 {
+        self.horizon
+    }
+
+    pub fn ticks(&self) -> usize {
+        self.ticks
+    }
+
+    /// Sum of all per-phase totals (equals [`Self::makespan`] up to
+    /// float accumulation).
+    pub fn attributed(&self) -> f64 {
+        self.totals.iter().sum()
+    }
+
+    /// Fraction of the makespan spent in `phase` (0 on an empty run).
+    pub fn fraction(&self, phase: Phase) -> f64 {
+        if self.horizon > 0.0 {
+            self.total(phase) / self.horizon
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction waiting on stragglers (terminal wait + region sync).
+    pub fn straggler_fraction(&self) -> f64 {
+        self.fraction(Phase::StragglerWait)
+            + self.fraction(Phase::RegionSyncWait)
+    }
+
+    /// Fraction on the wire (queue + transfer + propagation, both tiers).
+    pub fn transfer_fraction(&self) -> f64 {
+        [
+            Phase::QueueWait,
+            Phase::LanTransfer,
+            Phase::Propagation,
+            Phase::WanQueue,
+            Phase::WanTransfer,
+            Phase::WanPropagation,
+        ]
+        .iter()
+        .map(|&p| self.fraction(p))
+        .sum()
+    }
+
+    /// Fraction computing (forward/backward + compress + EF).
+    pub fn compute_fraction(&self) -> f64 {
+        self.fraction(Phase::Compute)
+    }
+
+    /// The stall-attribution report as an aligned text table.
+    pub fn table(&self) -> String {
+        let mut rows: Vec<Vec<String>> = Phase::ALL
+            .iter()
+            .filter(|&&p| !matches!(p, Phase::AggWait | Phase::WanAggWait))
+            .map(|&p| {
+                vec![
+                    p.name().to_string(),
+                    format!("{:.6}", self.total(p)),
+                    format!("{:.4}", self.fraction(p)),
+                ]
+            })
+            .collect();
+        rows.push(vec![
+            "makespan".to_string(),
+            format!("{:.6}", self.horizon),
+            format!("{:.4}", if self.horizon > 0.0 { 1.0 } else { 0.0 }),
+        ]);
+        format_table(&["phase", "seconds", "fraction"], &rows)
+    }
+}
+
+impl TraceSink for Attribution {
+    fn record(&mut self, ev: &TraceEvent) {
+        if let TraceEvent::Tick(tk) = ev {
+            self.record_tick(tk);
+        }
+    }
+}
+
+/// Min by `(propagation-end, worker id)` over (optionally) one region's
+/// senders or aggregators.
+fn fastest_worker<'a>(
+    workers: &'a [WorkerTrace],
+    region: Option<u32>,
+    aggregator: bool,
+) -> Option<&'a WorkerTrace> {
+    workers
+        .iter()
+        .filter(|w| region.is_none() || w.region == region)
+        .filter(|w| w.aggregator == aggregator)
+        .min_by(|x, y| {
+            (x.spans[3].t1, x.worker)
+                .partial_cmp(&(y.spans[3].t1, y.worker))
+                .unwrap()
+        })
+}
+
+// ---------------------------------------------------------------------------
+// Perfetto export
+// ---------------------------------------------------------------------------
+
+const PID_WORKERS: f64 = 0.0;
+const PID_REGIONS: f64 = 1.0;
+const PID_CONTROL: f64 = 2.0;
+const PID_PATHS: f64 = 3.0;
+
+fn us(t: f64) -> Json {
+    Json::num(t * 1e6)
+}
+
+fn meta(name: &str, pid: f64, tid: Option<f64>, label: &str) -> Json {
+    let mut pairs = vec![
+        ("args", Json::obj(vec![("name", Json::str(label))])),
+        ("name", Json::str(name)),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid)),
+    ];
+    if let Some(tid) = tid {
+        pairs.push(("tid", Json::num(tid)));
+    }
+    Json::obj(pairs)
+}
+
+fn complete(
+    name: &str,
+    cat: &str,
+    pid: f64,
+    tid: f64,
+    t0: f64,
+    t1: f64,
+    args: Json,
+) -> Json {
+    Json::obj(vec![
+        ("args", args),
+        ("cat", Json::str(cat)),
+        ("dur", us(t1 - t0)),
+        ("name", Json::str(name)),
+        ("ph", Json::str("X")),
+        ("pid", Json::num(pid)),
+        ("tid", Json::num(tid)),
+        ("ts", us(t0)),
+    ])
+}
+
+fn instant(name: &str, cat: &str, tid: f64, t: f64, args: Json) -> Json {
+    Json::obj(vec![
+        ("args", args),
+        ("cat", Json::str(cat)),
+        ("name", Json::str(name)),
+        ("ph", Json::str("i")),
+        ("pid", Json::num(PID_CONTROL)),
+        ("s", Json::str("t")),
+        ("tid", Json::num(tid)),
+        ("ts", us(t)),
+    ])
+}
+
+fn tier_args(prefix: &str, t: &TierReplan, pairs: &mut Vec<(String, Json)>) {
+    pairs.push((format!("{prefix}a"), Json::num(t.input.a)));
+    pairs.push((format!("{prefix}b"), Json::num(t.input.b)));
+    pairs.push((format!("{prefix}delta"), Json::num(t.delta)));
+    pairs.push((format!("{prefix}log_phi"), Json::num(t.log_phi)));
+    pairs.push((format!("{prefix}s_g"), Json::num(t.input.s_g)));
+    pairs.push((format!("{prefix}t_comp"), Json::num(t.input.t_comp)));
+    pairs.push((format!("{prefix}tau"), Json::num(t.tau as f64)));
+}
+
+/// Export a trace as Chrome/Perfetto trace-event JSON: `"ph":"X"`
+/// complete spans on virtual time (µs), one track per worker (pid 0),
+/// region (pid 1), and bonded path (pid 3); churn / class / re-plan
+/// instants on the control process (pid 2). Output bytes are canonical:
+/// fixed emission order + BTreeMap key order.
+pub fn perfetto_trace(events: &[TraceEvent]) -> Json {
+    let mut workers: BTreeSet<u32> = BTreeSet::new();
+    let mut regions: BTreeSet<u32> = BTreeSet::new();
+    let mut bonded: BTreeSet<u32> = BTreeSet::new();
+    for ev in events {
+        if let TraceEvent::Tick(tk) = ev {
+            for w in &tk.workers {
+                workers.insert(w.worker);
+                if !w.paths.is_empty() {
+                    bonded.insert(w.worker);
+                }
+            }
+            for r in &tk.regions {
+                regions.insert(r.region);
+            }
+        }
+    }
+
+    let mut out: Vec<Json> = Vec::new();
+    out.push(meta("process_name", PID_WORKERS, None, "workers"));
+    for &w in &workers {
+        out.push(meta(
+            "thread_name",
+            PID_WORKERS,
+            Some(w as f64),
+            &format!("worker {w}"),
+        ));
+    }
+    if !regions.is_empty() {
+        out.push(meta("process_name", PID_REGIONS, None, "regions"));
+        for &r in &regions {
+            out.push(meta(
+                "thread_name",
+                PID_REGIONS,
+                Some(r as f64),
+                &format!("region {r}"),
+            ));
+        }
+    }
+    out.push(meta("process_name", PID_CONTROL, None, "control"));
+    for (tid, label) in [(0.0, "churn"), (1.0, "classes"), (2.0, "replan")] {
+        out.push(meta("thread_name", PID_CONTROL, Some(tid), label));
+    }
+    if !bonded.is_empty() {
+        out.push(meta("process_name", PID_PATHS, None, "bond paths"));
+        for &w in &bonded {
+            out.push(meta(
+                "thread_name",
+                PID_PATHS,
+                Some(w as f64),
+                &format!("worker {w} paths"),
+            ));
+        }
+    }
+
+    for ev in events {
+        match ev {
+            TraceEvent::Tick(tk) => {
+                let iter_args =
+                    Json::obj(vec![("iter", Json::num(tk.iter as f64))]);
+                for w in &tk.workers {
+                    for s in &w.spans {
+                        if s.t1 > s.t0 {
+                            out.push(complete(
+                                s.phase.name(),
+                                "worker",
+                                PID_WORKERS,
+                                w.worker as f64,
+                                s.t0,
+                                s.t1,
+                                iter_args.clone(),
+                            ));
+                        }
+                    }
+                    for p in &w.paths {
+                        if p.t1 > p.t0 {
+                            out.push(complete(
+                                &format!("path {}", p.path),
+                                "path",
+                                PID_PATHS,
+                                w.worker as f64,
+                                p.t0,
+                                p.t1,
+                                Json::obj(vec![
+                                    ("bits", Json::num(p.bits)),
+                                    ("iter", Json::num(tk.iter as f64)),
+                                ]),
+                            ));
+                        }
+                    }
+                }
+                for r in &tk.regions {
+                    for s in &r.spans(tk.ts, tk.tc) {
+                        if s.t1 > s.t0 {
+                            out.push(complete(
+                                s.phase.name(),
+                                "region",
+                                PID_REGIONS,
+                                r.region as f64,
+                                s.t0,
+                                s.t1,
+                                iter_args.clone(),
+                            ));
+                        }
+                    }
+                }
+            }
+            TraceEvent::Churn { t, iter, event } => {
+                out.push(instant(
+                    &format!("{event:?}"),
+                    "churn",
+                    0.0,
+                    *t,
+                    Json::obj(vec![("iter", Json::num(*iter as f64))]),
+                ));
+            }
+            TraceEvent::Clock { t, iter, event } => {
+                out.push(instant(
+                    &format!("{event:?}"),
+                    "clock",
+                    1.0,
+                    *t,
+                    Json::obj(vec![("iter", Json::num(*iter as f64))]),
+                ));
+            }
+            TraceEvent::Replan { t, iter, rec } => {
+                let mut pairs: Vec<(String, Json)> = vec![
+                    ("iter".to_string(), Json::num(*iter as f64)),
+                    (
+                        "predicted_round".to_string(),
+                        Json::num(rec.predicted_round),
+                    ),
+                ];
+                tier_args("lan_", &rec.lan, &mut pairs);
+                if let Some(w) = &rec.wan {
+                    tier_args("wan_", w, &mut pairs);
+                }
+                let args = Json::Obj(pairs.into_iter().collect());
+                out.push(instant("replan", "replan", 2.0, *t, args));
+            }
+        }
+    }
+
+    Json::obj(vec![("traceEvents", Json::arr(out))])
+}
+
+/// [`perfetto_trace`] serialized to canonical bytes.
+pub fn perfetto_string(events: &[TraceEvent]) -> String {
+    perfetto_trace(events).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_tick(
+        iter: usize,
+        ts: f64,
+        t_comp: f64,
+        ticks: &[(f64, f64, f64)],
+        tc: f64,
+    ) -> TickTrace {
+        let workers = ticks
+            .iter()
+            .enumerate()
+            .map(|(i, &(tm, tc_w, tx))| WorkerTrace {
+                worker: i as u32,
+                region: None,
+                aggregator: false,
+                spans: worker_spans(
+                    ts - t_comp,
+                    ts,
+                    (tm - tx).max(ts).min(tm),
+                    tm,
+                    tc_w,
+                    tc,
+                ),
+                paths: Vec::new(),
+            })
+            .collect();
+        TickTrace { iter, ts, t_comp, tc, workers, regions: Vec::new() }
+    }
+
+    #[test]
+    fn worker_spans_tile_and_clamp() {
+        let s = worker_spans(0.0, 0.2, 0.25, 0.5, 0.7, 1.0);
+        assert_eq!(s[0].t0, 0.0);
+        assert_eq!(s[4].t1, 1.0);
+        for w in s.windows(2) {
+            assert_eq!(w[0].t1, w[1].t0, "contiguous");
+        }
+        // bonded-style: start before ts collapses QueueWait to zero
+        let s = worker_spans(0.0, 0.2, 0.1, 0.5, 0.7, 1.0);
+        assert_eq!(s[1].dur(), 0.0);
+        assert_eq!(s[2].t0, 0.2);
+        assert_eq!(s[2].t1, 0.5);
+    }
+
+    #[test]
+    fn flat_attribution_sums_to_makespan() {
+        let mut a = Attribution::new();
+        // tick 1: ts=0.2 (t_comp 0.2), fastest worker arrives 0.5, tc 0.8
+        a.record_tick(&flat_tick(
+            1,
+            0.2,
+            0.2,
+            &[(0.3, 0.5, 0.1), (0.6, 0.8, 0.2)],
+            0.8,
+        ));
+        // tick 2 overlaps tick 1's horizon
+        a.record_tick(&flat_tick(
+            2,
+            0.6,
+            0.2,
+            &[(0.9, 1.1, 0.2), (1.0, 1.4, 0.3)],
+            1.4,
+        ));
+        let sum = a.attributed();
+        let span = a.makespan();
+        assert!((sum - span).abs() < 1e-12, "{sum} vs {span}");
+        assert!(a.total(Phase::Compute) > 0.0);
+        assert!(a.total(Phase::StragglerWait) > 0.0);
+    }
+
+    #[test]
+    fn non_monotone_tc_contributes_nothing_new() {
+        let mut a = Attribution::new();
+        a.record_tick(&flat_tick(1, 0.2, 0.2, &[(0.5, 0.9, 0.2)], 0.9));
+        let before = a.attributed();
+        // a later tick that finishes earlier (post-churn speedup) is
+        // entirely below the horizon
+        a.record_tick(&flat_tick(2, 0.3, 0.1, &[(0.4, 0.5, 0.1)], 0.5));
+        assert_eq!(a.attributed(), before);
+        assert_eq!(a.makespan(), 0.9);
+    }
+
+    #[test]
+    fn record_flat_matches_record_tick() {
+        let mut by_tick = Attribution::new();
+        let mut by_flat = Attribution::new();
+        let ticks = [
+            (0.2, 0.2, 0.35, 0.55, 0.1, 0.8),
+            (0.6, 0.2, 0.95, 1.15, 0.2, 1.3),
+        ];
+        for (i, &(ts, t_comp, tm, tc_w, tx, tc)) in ticks.iter().enumerate() {
+            by_tick.record_tick(&flat_tick(
+                i + 1,
+                ts,
+                t_comp,
+                &[(tm, tc_w, tx), (tm + 0.1, tc, tx)],
+                tc,
+            ));
+            by_flat.record_flat(ts, t_comp, tm, tc_w, tx, tc);
+        }
+        for p in Phase::ALL {
+            assert_eq!(
+                by_tick.total(p).to_bits(),
+                by_flat.total(p).to_bits(),
+                "{p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_tier_attribution_sums_to_makespan() {
+        let ts = 0.2;
+        let t_comp = 0.2;
+        let tc = 2.0;
+        let mk = |w: u32, region, aggregator, tm: f64, tc_w: f64| WorkerTrace {
+            worker: w,
+            region: Some(region),
+            aggregator,
+            spans: if aggregator {
+                worker_spans(ts - t_comp, ts, ts, ts, ts, tc)
+            } else {
+                worker_spans(ts - t_comp, ts, ts, tm, tc_w, tc)
+            },
+            paths: Vec::new(),
+        };
+        let tk = TickTrace {
+            iter: 1,
+            ts,
+            t_comp,
+            tc,
+            workers: vec![
+                mk(0, 0, true, 0.0, 0.0),
+                mk(1, 0, false, 0.3, 0.4),
+                mk(2, 1, true, 0.0, 0.0),
+                mk(3, 1, false, 0.35, 0.5),
+            ],
+            regions: vec![
+                RegionTrace {
+                    region: 0,
+                    sync: 0.5,
+                    wan_start: 0.6,
+                    wan_tm: 1.0,
+                    wan_tc: 1.3,
+                    senders: 1,
+                },
+                RegionTrace {
+                    region: 1,
+                    sync: 0.5,
+                    wan_start: 0.6,
+                    wan_tm: 1.6,
+                    wan_tc: 2.0,
+                    senders: 1,
+                },
+            ],
+        };
+        let mut a = Attribution::new();
+        a.record_tick(&tk);
+        assert!((a.attributed() - 2.0).abs() < 1e-12);
+        // region 0 is the fastest chain; waiting for region 1 is stall
+        assert!((a.total(Phase::StragglerWait) - 0.7).abs() < 1e-12);
+        assert!((a.total(Phase::WanTransfer) - 0.4).abs() < 1e-12);
+        assert!((a.total(Phase::RegionSyncWait) - 0.1).abs() < 1e-12);
+        let fsum = a.straggler_fraction()
+            + a.transfer_fraction()
+            + a.compute_fraction();
+        assert!((fsum - 1.0).abs() < 1e-12, "fractions partition: {fsum}");
+    }
+
+    #[test]
+    fn table_lists_all_chain_phases() {
+        let mut a = Attribution::new();
+        a.record_flat(0.2, 0.2, 0.5, 0.7, 0.2, 1.0);
+        let t = a.table();
+        for p in ["compute", "lan_transfer", "straggler_wait", "makespan"] {
+            assert!(t.contains(p), "missing {p} in:\n{t}");
+        }
+    }
+
+    #[test]
+    fn null_sink_is_disabled_buffer_records() {
+        let mut null = NullSink;
+        assert!(!null.enabled());
+        let ev = TraceEvent::Clock {
+            t: 1.0,
+            iter: 3,
+            event: ClockEvent::AggregatorElected {
+                region: 0,
+                old: Some(1),
+                new: 2,
+            },
+        };
+        null.record(&ev);
+        let mut buf = BufferTracer::new();
+        assert!(buf.enabled());
+        buf.record(&ev);
+        assert_eq!(buf.events(), &[ev]);
+    }
+
+    #[test]
+    fn perfetto_round_trips_and_is_deterministic() {
+        let tk = flat_tick(1, 0.2, 0.2, &[(0.5, 0.7, 0.2)], 1.0);
+        let events = vec![
+            TraceEvent::Tick(tk),
+            TraceEvent::Churn {
+                t: 0.9,
+                iter: 1,
+                event: ChurnEvent::Leave { worker: 0 },
+            },
+            TraceEvent::Replan {
+                t: 1.0,
+                iter: 2,
+                rec: ReplanRecord {
+                    lan: TierReplan {
+                        input: DecoInput {
+                            s_g: 1e8,
+                            a: 2e7,
+                            b: 0.2,
+                            t_comp: 0.2,
+                        },
+                        tau: 2,
+                        delta: 0.25,
+                        log_phi: -1.0,
+                    },
+                    wan: None,
+                    predicted_round: 0.21,
+                },
+            },
+        ];
+        let s1 = perfetto_string(&events);
+        let s2 = perfetto_string(&events);
+        assert_eq!(s1, s2, "byte-identical across serializations");
+        let parsed = Json::parse(&s1).expect("emitted JSON parses");
+        assert_eq!(parsed, perfetto_trace(&events), "round-trip");
+        let evs = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(evs.len() > 5);
+    }
+}

@@ -16,6 +16,8 @@
 
 use crate::deco::{solve, DecoInput, DecoOutput};
 use crate::netsim::FabricMonitor;
+use crate::obs::{ReplanRecord, TierReplan};
+use crate::timesim::{t_avg_closed_form, PipelineParams};
 
 /// Which aggregate of the per-link monitors a strategy plans on.
 ///
@@ -180,6 +182,43 @@ pub trait Strategy: Send {
         let (tau, delta) = self.params(ctx);
         TierParams::flat(tau, delta)
     }
+
+    /// Take the decision record of the most recent re-plan, if one
+    /// happened since the last call — the tracing layer's re-plan log
+    /// (DESIGN.md §Observability). Static strategies never re-plan and
+    /// keep the default `None`.
+    fn take_replan(&mut self) -> Option<ReplanRecord> {
+        None
+    }
+}
+
+/// Assemble a [`ReplanRecord`] from per-tier solves: the monitor inputs
+/// the solver saw, the `(τ, δ, ln φ)` it chose, and Theorem 3's
+/// closed-form round-time prediction at the solved LAN point.
+fn replan_record(
+    lan_in: DecoInput,
+    lan: DecoOutput,
+    wan: Option<(DecoInput, DecoOutput)>,
+) -> ReplanRecord {
+    let predicted_round = t_avg_closed_form(&PipelineParams {
+        a: lan_in.a,
+        b: lan_in.b,
+        delta: lan.delta,
+        tau: lan.tau,
+        t_comp: lan_in.t_comp,
+        s_g: lan_in.s_g,
+    });
+    let tier = |input: DecoInput, out: DecoOutput| TierReplan {
+        input,
+        tau: out.tau,
+        delta: out.delta,
+        log_phi: out.log_phi,
+    };
+    ReplanRecord {
+        lan: tier(lan_in, lan),
+        wan: wan.map(|(i, o)| tier(i, o)),
+        predicted_round,
+    }
 }
 
 /// Serde-friendly strategy selector for configs / CLI.
@@ -213,7 +252,7 @@ impl StrategyKind {
             Self::Accordion { delta_low, delta_high } => {
                 Box::new(Accordion::new(*delta_low, *delta_high))
             }
-            Self::CocktailSgd => Box::new(CocktailSgd { chosen: None }),
+            Self::CocktailSgd => Box::new(CocktailSgd::new()),
             Self::DecoSgd { update_every } => {
                 Box::new(DecoSgd::new(*update_every))
             }
@@ -329,8 +368,16 @@ impl Strategy for Accordion {
 
 /// CocktailSGD baseline per the paper's appendix: fixed (τ, δ) chosen by one
 /// DeCo solve at t=1 (E = ∞).
+#[derive(Default)]
 pub struct CocktailSgd {
     chosen: Option<DecoOutput>,
+    last_replan: Option<ReplanRecord>,
+}
+
+impl CocktailSgd {
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
 impl Strategy for CocktailSgd {
@@ -339,10 +386,18 @@ impl Strategy for CocktailSgd {
     }
 
     fn params(&mut self, ctx: &StrategyCtx) -> (usize, f64) {
-        let out = *self
-            .chosen
-            .get_or_insert_with(|| solve(&ctx.deco_input()));
+        if self.chosen.is_none() {
+            let input = ctx.deco_input();
+            let out = solve(&input);
+            self.chosen = Some(out);
+            self.last_replan = Some(replan_record(input, out, None));
+        }
+        let out = self.chosen.unwrap();
         (out.tau, out.delta)
+    }
+
+    fn take_replan(&mut self) -> Option<ReplanRecord> {
+        self.last_replan.take()
     }
 }
 
@@ -355,6 +410,7 @@ pub struct DecoSgd {
     /// waiting for the next `E` boundary
     event_triggered: bool,
     seen_epoch: u64,
+    last_replan: Option<ReplanRecord>,
 }
 
 impl DecoSgd {
@@ -364,6 +420,7 @@ impl DecoSgd {
             current: None,
             event_triggered: false,
             seen_epoch: 0,
+            last_replan: None,
         }
     }
 
@@ -396,10 +453,17 @@ impl Strategy for DecoSgd {
             || ctx.iter % self.update_every == 1
             || epoch_moved
         {
-            self.current = Some(solve(&ctx.deco_input()));
+            let input = ctx.deco_input();
+            let out = solve(&input);
+            self.current = Some(out);
+            self.last_replan = Some(replan_record(input, out, None));
         }
         let out = self.current.unwrap();
         (out.tau, out.delta)
+    }
+
+    fn take_replan(&mut self) -> Option<ReplanRecord> {
+        self.last_replan.take()
     }
 }
 
@@ -412,11 +476,17 @@ pub struct DecoTwoTier {
     update_every: usize,
     current: Option<TierParams>,
     seen_epoch: u64,
+    last_replan: Option<ReplanRecord>,
 }
 
 impl DecoTwoTier {
     pub fn new(update_every: usize) -> Self {
-        Self { update_every: update_every.max(1), current: None, seen_epoch: 0 }
+        Self {
+            update_every: update_every.max(1),
+            current: None,
+            seen_epoch: 0,
+            last_replan: None,
+        }
     }
 
     pub fn current(&self) -> Option<TierParams> {
@@ -445,21 +515,28 @@ impl Strategy for DecoTwoTier {
 
     fn params_tiered(&mut self, ctx: &StrategyCtx) -> TierParams {
         if self.refresh_due(ctx) {
-            let lan = solve(&ctx.deco_input());
+            let lan_in = ctx.deco_input();
+            let lan = solve(&lan_in);
             let wan = ctx.wan.as_ref().map(|w| {
                 let t_comp = ctx
                     .monitor
                     .compute_time()
                     .unwrap_or(ctx.fallback.t_comp);
-                solve(&w.deco_input(ctx.s_g, t_comp, ctx.plan))
+                let wan_in = w.deco_input(ctx.s_g, t_comp, ctx.plan);
+                (wan_in, solve(&wan_in))
             });
             self.current = Some(TierParams {
                 tau: lan.tau,
                 delta: lan.delta,
-                wan: wan.map(|w| (w.tau, w.delta)),
+                wan: wan.map(|(_, o)| (o.tau, o.delta)),
             });
+            self.last_replan = Some(replan_record(lan_in, lan, wan));
         }
         self.current.unwrap()
+    }
+
+    fn take_replan(&mut self) -> Option<ReplanRecord> {
+        self.last_replan.take()
     }
 }
 
@@ -492,7 +569,7 @@ mod tests {
     #[test]
     fn cocktail_freezes_first_solution() {
         let mut m = FabricMonitor::new(1, 0.9, 0);
-        let mut s = CocktailSgd { chosen: None };
+        let mut s = CocktailSgd::new();
         let first = s.params(&ctx(&m, 1));
         // bandwidth collapses afterwards; cocktail must not react
         for _ in 0..50 {

@@ -1,0 +1,242 @@
+//! Observability-layer integration tests (DESIGN.md §Observability):
+//!
+//! * span tiling — on real flat and two-tier runs, every worker's phase
+//!   spans are non-overlapping, contiguous, within the tick, and sum to
+//!   the tick's arrival delta (±1e-9 relative);
+//! * transparency — a `NullSink` run is bit-identical to a traced run's
+//!   training output (model bits, records, virtual times);
+//! * determinism — the Perfetto export is byte-identical across reruns
+//!   and pool sizes, and the stall attribution accounts for the whole
+//!   makespan.
+
+use deco::coordinator::{TrainLoop, TrainParams};
+use deco::deco::DecoInput;
+use deco::metrics::sink::BufferSink;
+use deco::metrics::RunResult;
+use deco::netsim::{BandwidthTrace, Fabric};
+use deco::obs::{perfetto_string, Attribution, BufferTracer, TraceEvent};
+use deco::optim::Quadratic;
+use deco::strategy::StrategyKind;
+use deco::topo::{RegionTopo, Topology};
+
+const S_G: f64 = 1e8;
+const T_COMP: f64 = 0.2;
+
+fn params(max_iters: usize) -> TrainParams {
+    TrainParams {
+        gamma: 0.005,
+        max_iters,
+        log_every: 10,
+        t_comp_override: Some(T_COMP),
+        s_g_override: Some(S_G),
+        fallback: DecoInput { s_g: S_G, a: 2e7, b: 0.2, t_comp: T_COMP },
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+fn quad() -> Quadratic {
+    Quadratic::new(256, 4, 1.0, 0.2, 0.3, 0.3, 11)
+}
+
+fn flat_fabric() -> Fabric {
+    Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2)
+}
+
+fn two_tier() -> (Fabric, Topology) {
+    let fabric = Fabric::homogeneous(4, BandwidthTrace::constant(1e9), 0.005);
+    let topo = Topology::TwoTier {
+        regions: vec![
+            RegionTopo::new(vec![0, 1], 0),
+            RegionTopo::new(vec![2, 3], 2),
+        ],
+        wan: Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.3),
+    };
+    (fabric, topo)
+}
+
+fn run_traced(
+    fabric: Fabric,
+    topo: Topology,
+    kind: StrategyKind,
+    threads: usize,
+) -> (Vec<f32>, RunResult, Vec<TraceEvent>) {
+    let mut p = params(60);
+    p.threads = Some(threads);
+    let mut tl =
+        TrainLoop::try_with_topology(quad(), kind.build(), fabric, topo, p)
+            .unwrap();
+    let mut sink = BufferSink::new();
+    let mut tracer = BufferTracer::new();
+    let mut res = tl.run_traced("obs", &mut sink, &mut tracer).unwrap();
+    res.records = sink.into_records();
+    (tl.model().to_vec(), res, tracer.into_events())
+}
+
+/// Every worker's five spans tile [ts − t_comp, tc] exactly: contiguous,
+/// non-overlapping, monotone, and their durations sum to the arrival
+/// delta within 1e-9 relative.
+fn assert_spans_tile(events: &[TraceEvent]) {
+    let mut ticks = 0usize;
+    for ev in events {
+        let TraceEvent::Tick(tt) = ev else { continue };
+        ticks += 1;
+        let lo = tt.ts - tt.t_comp;
+        let delta = tt.tc - lo;
+        for wt in &tt.workers {
+            let spans = &wt.spans;
+            assert_eq!(
+                spans[0].t0.to_bits(),
+                lo.to_bits(),
+                "iter {} worker {}: first span must start at compute",
+                tt.iter,
+                wt.worker
+            );
+            for i in 1..spans.len() {
+                assert_eq!(
+                    spans[i].t0.to_bits(),
+                    spans[i - 1].t1.to_bits(),
+                    "iter {} worker {}: span {i} not contiguous",
+                    tt.iter,
+                    wt.worker
+                );
+            }
+            for s in spans {
+                assert!(s.t1 >= s.t0, "negative span at iter {}", tt.iter);
+            }
+            assert_eq!(
+                spans[4].t1.to_bits(),
+                tt.tc.to_bits(),
+                "iter {} worker {}: last span must end at the arrival",
+                tt.iter,
+                wt.worker
+            );
+            let sum: f64 = spans.iter().map(|s| s.dur()).sum();
+            assert!(
+                (sum - delta).abs() <= 1e-9 * delta.max(1.0),
+                "iter {} worker {}: spans sum {sum} vs delta {delta}",
+                tt.iter,
+                wt.worker
+            );
+        }
+    }
+    assert!(ticks > 0, "the trace must contain tick events");
+}
+
+#[test]
+fn flat_run_spans_tile_the_tick() {
+    let (_, _, events) = run_traced(
+        flat_fabric(),
+        Topology::Flat,
+        StrategyKind::DecoSgd { update_every: 20 },
+        1,
+    );
+    assert_spans_tile(&events);
+}
+
+#[test]
+fn two_tier_run_spans_tile_the_tick() {
+    let (fabric, topo) = two_tier();
+    let (_, _, events) = run_traced(
+        fabric,
+        topo,
+        StrategyKind::DecoTwoTier { update_every: 20 },
+        1,
+    );
+    assert_spans_tile(&events);
+    // region tracks exist on a two-tier run
+    let has_regions = events.iter().any(|ev| {
+        matches!(ev, TraceEvent::Tick(tt) if !tt.regions.is_empty())
+    });
+    assert!(has_regions, "two-tier ticks must carry region traces");
+}
+
+#[test]
+fn tracing_is_transparent_to_training() {
+    let kind = StrategyKind::DecoSgd { update_every: 20 };
+    let mut p = params(60);
+    p.threads = Some(1);
+    let mut tl = TrainLoop::try_with_topology(
+        quad(),
+        kind.clone().build(),
+        flat_fabric(),
+        Topology::Flat,
+        p,
+    )
+    .unwrap();
+    let plain = tl.run("obs");
+    let model = tl.model().to_vec();
+
+    let (tmodel, traced, _) =
+        run_traced(flat_fabric(), Topology::Flat, kind, 1);
+    assert_eq!(model.len(), tmodel.len());
+    for (i, (a, b)) in model.iter().zip(&tmodel).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "model diverges at {i}");
+    }
+    assert_eq!(plain.total_iters, traced.total_iters);
+    assert_eq!(plain.total_time.to_bits(), traced.total_time.to_bits());
+    assert_eq!(plain.records.len(), traced.records.len());
+    for (ra, rb) in plain.records.iter().zip(&traced.records) {
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "iter {}", ra.iter);
+        assert_eq!(ra.time.to_bits(), rb.time.to_bits(), "iter {}", ra.iter);
+    }
+}
+
+#[test]
+fn perfetto_export_is_deterministic_across_pool_sizes() {
+    let kind = StrategyKind::DecoSgd { update_every: 20 };
+    let (_, _, serial) =
+        run_traced(flat_fabric(), Topology::Flat, kind.clone(), 1);
+    let (_, _, pooled) = run_traced(flat_fabric(), Topology::Flat, kind, 4);
+    let a = perfetto_string(&serial);
+    let b = perfetto_string(&pooled);
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "trace bytes must not depend on the pool size");
+    // the trace carries the re-plan decision log
+    let replans = serial
+        .iter()
+        .filter(|ev| matches!(ev, TraceEvent::Replan { .. }))
+        .count();
+    assert!(replans > 0, "DeCo runs must log re-plan decisions");
+}
+
+#[test]
+fn attribution_accounts_for_the_whole_run() {
+    for (fabric, topo, kind) in [
+        (
+            flat_fabric(),
+            Topology::Flat,
+            StrategyKind::DecoSgd { update_every: 20 },
+        ),
+        {
+            let (f, t) = two_tier();
+            (f, t, StrategyKind::DecoTwoTier { update_every: 20 })
+        },
+    ] {
+        let (_, res, events) = run_traced(fabric, topo, kind, 1);
+        let mut attr = Attribution::new();
+        for ev in &events {
+            if let TraceEvent::Tick(tt) = ev {
+                attr.record_tick(tt);
+            }
+        }
+        assert!(attr.makespan() > 0.0);
+        assert!(
+            (attr.makespan() - res.total_time).abs()
+                <= 1e-9 * res.total_time,
+            "makespan {} vs run virtual time {}",
+            attr.makespan(),
+            res.total_time
+        );
+        let gap = (attr.attributed() - attr.makespan()).abs();
+        assert!(
+            gap <= 1e-6 * attr.makespan(),
+            "attribution lost {gap}s of {}s",
+            attr.makespan()
+        );
+        let f = attr.straggler_fraction()
+            + attr.transfer_fraction()
+            + attr.compute_fraction();
+        assert!((f - 1.0).abs() < 1e-9, "fractions sum to {f}");
+    }
+}

@@ -20,6 +20,10 @@
 #                         n in {1k, 10k, 100k} vs the O(n) singleton
 #                         reference engine at {1k, 10k} (the per-tick cost
 #                         of the class engine must stay flat in n)
+#   BENCH_obs.json      — clock hot-loop tick with tracing disabled
+#                         (NullSink) vs fully traced at n in {16, 1k}
+#                         (the null series must stay inside the untraced
+#                         tick envelope — the zero-overhead contract)
 #
 # scripts/bench_check.sh gates the BENCH_*.json headlines against the
 # checked-in perf_budgets.json ceilings.
@@ -43,7 +47,8 @@ topo_jsonl="$(mktemp)"
 trace_jsonl="$(mktemp)"
 bond_jsonl="$(mktemp)"
 scale_jsonl="$(mktemp)"
-trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl" "$bond_jsonl" "$scale_jsonl"' EXIT
+obs_jsonl="$(mktemp)"
+trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl" "$bond_jsonl" "$scale_jsonl" "$obs_jsonl"' EXIT
 
 consolidate() {
   # consolidate <jsonl> <out.json>
@@ -89,3 +94,7 @@ consolidate "$bond_jsonl" BENCH_bond.json
 echo "### cargo bench --bench bench_scale"
 DECO_BENCH_JSON="$scale_jsonl" cargo bench --bench bench_scale
 consolidate "$scale_jsonl" BENCH_scale.json
+
+echo "### cargo bench --bench bench_obs"
+DECO_BENCH_JSON="$obs_jsonl" cargo bench --bench bench_obs
+consolidate "$obs_jsonl" BENCH_obs.json
