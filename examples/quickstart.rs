@@ -2,8 +2,10 @@
 //! iterations with DeCo-SGD on a simulated WAN, print what DeCo chose,
 //! wire two regions into a two-tier topology and show the per-tier
 //! plan (DESIGN.md §Topology), ride a 2-path bonded worker through a
-//! scripted path outage (DESIGN.md §Bonding), then trace a 2-worker run
-//! and print where its time went (DESIGN.md §Observability).
+//! scripted path outage (DESIGN.md §Bonding), trace a 2-worker run and
+//! print where its time went (DESIGN.md §Observability), then audit a
+//! run on a moving OU trace — predicted vs realized round times,
+//! hindsight-oracle regret, and estimator calibration (§Audit).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -19,7 +21,7 @@ use deco::exp::ExpEnv;
 use deco::netsim::{
     BandwidthTrace, Bond, DegradeWindow, Fabric, Link, TraceKind,
 };
-use deco::obs::{Attribution, TraceEvent};
+use deco::obs::{audit_events, Attribution, TraceEvent};
 use deco::optim::Quadratic;
 use deco::strategy::StrategyKind;
 use deco::topo::{lan_input, wan_input, TwoTierPlan};
@@ -244,6 +246,39 @@ fn main() -> Result<()> {
         res.total_iters,
         attr.makespan(),
         attr.table()
+    );
+
+    // 6. Were the plans any good? Audit a 2-worker run on a *moving* OU
+    // bandwidth trace (DESIGN.md §Observability → Audit): join each
+    // re-plan with the virtual time it governed, re-solve each window
+    // against the realized bandwidth for the hindsight-oracle regret,
+    // and score the monitor's estimates against the ground-truth trace
+    // means. The same report ships via `repro audit <config>`.
+    let audit_cfg = ExperimentConfig {
+        network: NetworkConfig::homogeneous(
+            TraceKind::Ou {
+                mean_bps: 2e7,
+                sigma_bps: 8e6,
+                theta: 0.2,
+                seed: 3,
+            },
+            0.2,
+        ),
+        strategy: StrategyKind::DecoSgd { update_every: 15 },
+        stop: StopConfig {
+            max_iters: 90,
+            loss_target: None,
+            max_virtual_time: None,
+        },
+        ..trace_cfg
+    };
+    let (_, events) = ExpEnv::run_traced(&audit_cfg)?;
+    let truth = audit_cfg.network.build_fabric(audit_cfg.workers)?;
+    let report = audit_events(&events, &truth);
+    println!(
+        "\nplan audit for a 2-worker run on an OU trace (mean 20 Mbps, \
+         sigma 8 Mbps):\n{}",
+        report.table()
     );
     Ok(())
 }

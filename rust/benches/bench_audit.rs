@@ -1,0 +1,67 @@
+//! Plan-audit fold overhead (DESIGN.md §Observability → Audit): per-tick
+//! cost of the clock hot loop bare vs with the O(1) streaming `PlanAudit`
+//! fold attached (a re-plan + closed-form prediction every 20 ticks, one
+//! `tick()` fold per tick — the `exp scale` wiring). The fold series must
+//! stay inside the untraced tick envelope; it does O(1) arithmetic and no
+//! allocation per tick.
+//!
+//! `scripts/bench.sh` consolidates these into `BENCH_audit.json`.
+
+use deco::coordinator::VirtualClock;
+use deco::netsim::{BandwidthTrace, Fabric};
+use deco::obs::PlanAudit;
+use deco::timesim::{t_avg_closed_form, PipelineParams};
+use deco::util::bench::{black_box, Bench};
+
+/// Rebuild the clock periodically so the TC history stays bounded while
+/// the bench harness spins millions of ticks.
+const RESET_EVERY: usize = 100_000;
+const T_COMP: f64 = 0.05;
+
+fn fabric(n: usize) -> Fabric {
+    Fabric::with_straggler(n, BandwidthTrace::constant(1e8), 0.05, 0.25, 2.0)
+}
+
+fn bench_tick(b: &Bench, name: &str, n: usize, fold: bool) {
+    let mut clock = VirtualClock::new(fabric(n));
+    let (a_bot, b_bot) = clock.fabric().bottleneck(0.0);
+    let mut audit = PlanAudit::streaming();
+    let mut k = 0usize;
+    b.bench(name, || {
+        if clock.iters() >= RESET_EVERY {
+            clock = VirtualClock::new(fabric(n));
+            audit = PlanAudit::streaming();
+        }
+        k += 1;
+        let tau = k % 4;
+        let bits = 1_000_000 + (k as u64 % 7) * 250_000;
+        if fold && k % 20 == 1 {
+            let predicted = t_avg_closed_form(&PipelineParams {
+                a: a_bot,
+                b: b_bot,
+                delta: 1.0,
+                tau,
+                t_comp: T_COMP,
+                s_g: bits as f64,
+            });
+            audit.replan(clock.now(), k, predicted, None);
+        }
+        let tick = clock.tick(T_COMP, tau, bits);
+        if fold {
+            audit.tick(tick.tc);
+        }
+        black_box(tick.tc);
+    });
+    if fold {
+        black_box(audit.summary().iters);
+    }
+}
+
+fn main() {
+    println!("== bench_audit (streaming plan-audit fold vs bare clock) ==");
+    let b = Bench::new("audit");
+    for &n in &[16usize, 1_000] {
+        bench_tick(&b, &format!("tick/bare_n{n}"), n, false);
+        bench_tick(&b, &format!("tick/fold_n{n}"), n, true);
+    }
+}

@@ -375,6 +375,12 @@ impl<O: GradOracle> TrainLoop<O> {
         &self.clock
     }
 
+    /// The ground-truth fabric the run is priced on — what the audit
+    /// layer scores monitor estimates and plan predictions against.
+    pub fn fabric(&self) -> &Fabric {
+        self.clock.fabric()
+    }
+
     /// Pool size this loop runs its phases on.
     pub fn threads(&self) -> usize {
         self.pool.threads()

@@ -17,7 +17,8 @@ use anyhow::Result;
 use super::campaign::{run_campaign, CampaignOutcome, CampaignSpec};
 use crate::coordinator::VirtualClock;
 use crate::netsim::{BandwidthTrace, Fabric};
-use crate::obs::Attribution;
+use crate::obs::{Attribution, PlanAudit};
+use crate::timesim::{t_avg_closed_form, PipelineParams};
 
 /// Reference-scan verification ceiling: above this the O(n·ticks)
 /// singleton engine is the whole cost of the cell, so big cells trust the
@@ -52,14 +53,19 @@ const T_COMP: f64 = 0.05;
 /// (τ, bits, mask) schedule and return the per-tick sync arrivals' last
 /// value via the clock itself. With `attr`, each tick's fastest-worker
 /// boundaries feed the streaming stall [`Attribution`] through its O(1)
-/// flat path — the sweep stays O(classes) per tick.
+/// flat path — the sweep stays O(classes) per tick. With `audit`, each
+/// tick is priced against the closed-form prediction on the fabric's
+/// t=0 bottleneck through the O(1) streaming [`PlanAudit`] fold (one
+/// window per tick — the plan-bias columns of the campaign CSV).
 fn drive(
     clock: &mut VirtualClock,
     scenario: &str,
     n: usize,
     ticks: usize,
     mut attr: Option<&mut Attribution>,
+    mut audit: Option<&mut PlanAudit>,
 ) {
+    let (a_bot, b_bot) = clock.fabric().bottleneck(0.0);
     // churn toggles the first n/16 workers every 17 ticks — one class
     // split on the first departure, stable class count afterwards
     let block = (n / 16).clamp(1, n - 1);
@@ -74,7 +80,21 @@ fn drive(
         let tau = k % 4;
         let bits = 1_000_000 + (k as u64 % 7) * 250_000;
         let active = if scenario == "churn" { Some(&mask[..]) } else { None };
+        if let Some(au) = audit.as_deref_mut() {
+            let predicted = t_avg_closed_form(&PipelineParams {
+                a: a_bot,
+                b: b_bot,
+                delta: 1.0,
+                tau,
+                t_comp: T_COMP,
+                s_g: bits as f64,
+            });
+            au.replan(clock.now(), k, predicted, None);
+        }
         let tick = clock.tick_members(T_COMP, tau, bits, active);
+        if let Some(au) = audit.as_deref_mut() {
+            au.tick(tick.tc);
+        }
         if let Some(a) = attr.as_deref_mut() {
             if let Some(wt) = clock.fastest_last() {
                 a.record_flat(
@@ -90,7 +110,9 @@ fn drive(
 fn run_cell(n: usize, scenario: &str, ticks: usize) -> Result<String> {
     let mut clock = VirtualClock::new(fabric_for(scenario, n));
     let mut attr = Attribution::new();
-    drive(&mut clock, scenario, n, ticks, Some(&mut attr));
+    let mut audit = PlanAudit::streaming();
+    drive(&mut clock, scenario, n, ticks, Some(&mut attr), Some(&mut audit));
+    audit.finish();
     let tx_sum: f64 = clock.tx_totals().iter().sum();
     let (now, classes) = (clock.now(), clock.timeline_classes());
 
@@ -98,7 +120,7 @@ fn run_cell(n: usize, scenario: &str, ticks: usize) -> Result<String> {
     if ref_checked {
         let mut reference =
             VirtualClock::new(fabric_for(scenario, n)).with_reference_scan();
-        drive(&mut reference, scenario, n, ticks, None);
+        drive(&mut reference, scenario, n, ticks, None, None);
         anyhow::ensure!(
             reference.now().to_bits() == now.to_bits(),
             "class engine diverged from the reference scan \
@@ -112,12 +134,16 @@ fn run_cell(n: usize, scenario: &str, ticks: usize) -> Result<String> {
              (n={n} scenario={scenario}: {ref_tx} vs {tx_sum})"
         );
     }
+    let plan = audit.summary();
     Ok(format!(
         "{n},{scenario},{ticks},{classes},{now:.6},{tx_sum:.6},{:.6},{:.6},\
-         {:.6},{}",
+         {:.6},{:.6},{:.6},{:.6},{}",
         attr.straggler_fraction(),
         attr.transfer_fraction(),
         attr.compute_fraction(),
+        plan.mean_predicted(),
+        plan.mean_realized(),
+        plan.bias(),
         u8::from(ref_checked)
     ))
 }
@@ -149,10 +175,11 @@ pub fn main(
         dir,
         name: "scale".into(),
         fingerprint: format!(
-            "scale-v2 sizes={sizes:?} ticks={ticks} scenarios={SCENARIOS:?}"
+            "scale-v3 sizes={sizes:?} ticks={ticks} scenarios={SCENARIOS:?}"
         ),
         header: "n,scenario,ticks,classes,virtual_time,tx_total,\
-                 straggler_frac,transfer_frac,compute_frac,ref_checked"
+                 straggler_frac,transfer_frac,compute_frac,predicted_round,\
+                 realized_round,plan_bias,ref_checked"
             .into(),
         cells,
         max_cells,
@@ -200,17 +227,39 @@ mod tests {
     #[test]
     fn class_counts_stay_tiny_under_sharing() {
         let mut uniform = VirtualClock::new(fabric_for("uniform", 2048));
-        drive(&mut uniform, "uniform", 2048, 50, None);
+        drive(&mut uniform, "uniform", 2048, 50, None, None);
         assert_eq!(uniform.timeline_classes(), 1);
 
         let mut straggler = VirtualClock::new(fabric_for("straggler", 2048));
-        drive(&mut straggler, "straggler", 2048, 50, None);
+        drive(&mut straggler, "straggler", 2048, 50, None, None);
         assert_eq!(straggler.timeline_classes(), 2);
 
         let mut churn = VirtualClock::new(fabric_for("churn", 2048));
-        drive(&mut churn, "churn", 2048, 50, None);
+        drive(&mut churn, "churn", 2048, 50, None, None);
         // one split when the churn block first departs; stable afterwards
         assert_eq!(churn.timeline_classes(), 2);
+    }
+
+    #[test]
+    fn audit_fold_realized_time_tracks_the_sweep_makespan() {
+        for scenario in SCENARIOS {
+            let mut clock = VirtualClock::new(fabric_for(scenario, 128));
+            let mut audit = PlanAudit::streaming();
+            drive(&mut clock, scenario, 128, 60, None, Some(&mut audit));
+            audit.finish();
+            let s = *audit.summary();
+            // one window per tick, the first opening at t=0 — realized
+            // time is exactly the sweep makespan
+            assert_eq!((s.windows, s.iters), (60, 60));
+            assert!(
+                (s.real_time - clock.now()).abs() <= 1e-9 * clock.now(),
+                "{scenario}: realized {} vs makespan {}",
+                s.real_time,
+                clock.now()
+            );
+            assert!(s.mean_predicted() > 0.0);
+            assert!(s.mean_realized() > 0.0);
+        }
     }
 
     #[test]
@@ -218,7 +267,7 @@ mod tests {
         for scenario in SCENARIOS {
             let mut clock = VirtualClock::new(fabric_for(scenario, 128));
             let mut attr = Attribution::new();
-            drive(&mut clock, scenario, 128, 60, Some(&mut attr));
+            drive(&mut clock, scenario, 128, 60, Some(&mut attr), None);
             assert_eq!(attr.ticks(), 60);
             assert!(attr.makespan() > 0.0);
             let gap = (attr.attributed() - attr.makespan()).abs();

@@ -9,6 +9,8 @@
 //!           [--fast] [--dir PATH] [--max-cells N]
 //! repro train --config cfg.json [--out run.csv]
 //! repro trace cfg.json [--out trace.json]
+//! repro audit cfg.json [--out audit.csv] [--json audit.json]
+//!             [--trace trace.json]
 //! repro deco --a BPS --b S --t-comp S --s-g BITS
 //! repro artifacts
 //! ```
@@ -17,7 +19,10 @@ use anyhow::{anyhow, bail, ensure, Result};
 use deco::config::ExperimentConfig;
 use deco::deco::{solve, DecoInput};
 use deco::exp;
-use deco::obs::{perfetto_string, Attribution, TraceEvent};
+use deco::obs::{
+    audit_events, perfetto_audit_string, perfetto_string, Attribution,
+    PlanAudit, TraceEvent, TraceSink,
+};
 use deco::util::Json;
 
 /// Minimal flag parser: `--key value...` plus positional args.
@@ -105,6 +110,15 @@ USAGE:
       prints the stall-attribution report — per-phase totals summing to
       the run's makespan. Deterministic: byte-identical across reruns
       and pool sizes.
+  repro audit cfg.json [--out audit.csv] [--json audit.json]
+                       [--trace trace.json]
+      run an analytic config traced, then audit the plans: per-window
+      predicted-vs-realized round times, hindsight-oracle regret
+      (re-solved on the realized bandwidth), and FabricMonitor
+      calibration against the ground-truth traces. Prints aligned
+      tables, writes a per-window CSV (and optionally canonical JSON /
+      a Perfetto trace with predicted-vs-realized counter tracks).
+      Deterministic: byte-identical across reruns and pool sizes.
   repro deco --a BPS --b SECONDS --t-comp SECONDS --s-g BITS
   repro artifacts
 ";
@@ -257,6 +271,59 @@ fn main() -> Result<()> {
                 attr.ticks(),
                 text.len()
             );
+        }
+        "audit" => {
+            let config = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .or_else(|| args.flag_str("config"))
+                .ok_or_else(|| anyhow!("audit needs a config path\n{USAGE}"))?;
+            let cfg = ExperimentConfig::from_json_file(config)?;
+            let (res, events) = exp::ExpEnv::run_traced(&cfg)?;
+            // ground truth: the same seeded fabric the run was priced on
+            let fabric = cfg.network.build_fabric(cfg.workers)?;
+            let report = audit_events(&events, &fabric);
+            // contract check: the O(1) streaming fold must agree with the
+            // buffered audit bit-for-bit
+            let mut streaming = PlanAudit::streaming();
+            for ev in &events {
+                streaming.record(ev);
+            }
+            streaming.finish();
+            ensure!(
+                *streaming.summary() == report.summary,
+                "streaming audit fold diverged from the buffered audit"
+            );
+            println!(
+                "{}: {} iters, {:.1}s virtual, final loss {:.5}",
+                res.method,
+                res.total_iters,
+                res.total_time,
+                res.final_loss()
+            );
+            println!("{}", report.table());
+            let out = args.flag_str("out").unwrap_or("audit.csv");
+            std::fs::write(out, report.csv())?;
+            println!(
+                "audit: {} windows over {} iters -> {out}",
+                report.summary.windows, report.summary.iters
+            );
+            if let Some(path) = args.flag_str("json") {
+                let text = report.json().to_string();
+                let parsed = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+                ensure!(
+                    parsed.to_string() == text,
+                    "audit JSON did not round-trip through util::Json"
+                );
+                std::fs::write(path, &text)?;
+                println!("wrote {path}");
+            }
+            if let Some(path) = args.flag_str("trace") {
+                let text = perfetto_audit_string(&events, &fabric);
+                std::fs::write(path, &text)?;
+                println!("wrote {path} ({} bytes)", text.len());
+            }
         }
         "deco" => {
             let a = args.req_f64("a")?;

@@ -13,5 +13,5 @@ pub mod trace;
 pub use bond::{Bond, BondSchedule};
 pub use fabric::Fabric;
 pub use link::Link;
-pub use monitor::{FabricMonitor, NetworkMonitor};
+pub use monitor::{FabricMonitor, NetworkMonitor, SlotEstimate};
 pub use trace::{BandwidthTrace, DegradeWindow, TraceKind};

@@ -102,6 +102,28 @@ impl NetworkMonitor {
     }
 }
 
+/// Snapshot of one estimator slot's effective views at a re-plan instant
+/// (recorded into [`crate::obs::ReplanRecord`] for the audit layer): the
+/// optimistic worker views DeCo plans on plus the pessimistic band
+/// (min path bandwidth / max path latency) that brackets a bonded
+/// worker's true effective pair. Single-path workers carry a degenerate
+/// band (`bw == bw_pess`, `lat == lat_pess`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlotEstimate {
+    /// representative worker: the slot's lowest-indexed active member
+    pub worker: u32,
+    /// active workers sharing this estimator slot
+    pub members: u32,
+    /// optimistic effective bandwidth (Σ over bonded paths), bits/s
+    pub bw: f64,
+    /// optimistic effective latency (bandwidth-weighted over paths), s
+    pub lat: f64,
+    /// pessimistic bandwidth (min over bonded paths), bits/s
+    pub bw_pess: f64,
+    /// pessimistic latency (max over bonded paths), s
+    pub lat_pess: f64,
+}
+
 /// Per-path estimators plus the aggregate views DeCo plans on.
 ///
 /// Storage is slot-indirected (DESIGN.md §Observability): workers whose
@@ -438,6 +460,86 @@ impl FabricMonitor {
             return None;
         }
         Some(if den > 0.0 { num / den } else { min })
+    }
+
+    /// One worker's **pessimistic** bandwidth estimate: identical to
+    /// [`Self::worker_bandwidth`] on single-path workers; on a bonded
+    /// worker the **min** over available path estimates — the floor the
+    /// bond delivers if every path but the weakest goes dark. Together
+    /// with the optimistic Σ view this brackets the band the audit layer
+    /// scores the planner's inputs against (DESIGN.md §Observability).
+    pub fn worker_bandwidth_pessimistic(&self, worker: usize) -> Option<f64> {
+        let paths = &self.slots[self.slot_of[worker]];
+        if paths.len() == 1 {
+            return paths[0].bandwidth();
+        }
+        paths.iter().filter_map(|m| m.bandwidth()).reduce(f64::min)
+    }
+
+    /// One worker's **pessimistic** latency estimate: identical to
+    /// [`Self::worker_latency`] on single-path workers; on a bonded
+    /// worker the **max** over available path latency estimates — what
+    /// the bond pays when the slowest path carries the tail bits.
+    pub fn worker_latency_pessimistic(&self, worker: usize) -> Option<f64> {
+        let paths = &self.slots[self.slot_of[worker]];
+        if paths.len() == 1 {
+            return paths[0].latency();
+        }
+        paths.iter().filter_map(|m| m.latency()).reduce(f64::max)
+    }
+
+    /// Pessimistic aggregate bandwidth: the bottleneck (min over active
+    /// workers) of the per-worker pessimistic views. Equals
+    /// [`Self::bandwidth`] bit-for-bit when no worker is bonded.
+    pub fn bandwidth_pessimistic(&self) -> Option<f64> {
+        self.active_views(|i| self.worker_bandwidth_pessimistic(i))
+            .reduce(f64::min)
+    }
+
+    /// Pessimistic aggregate latency: the bottleneck (max over active
+    /// workers) of the per-worker pessimistic views. Equals
+    /// [`Self::latency`] bit-for-bit when no worker is bonded.
+    pub fn latency_pessimistic(&self) -> Option<f64> {
+        self.active_views(|i| self.worker_latency_pessimistic(i))
+            .reduce(f64::max)
+    }
+
+    /// Per-slot snapshot of the effective worker views at this instant —
+    /// one entry per estimator slot with at least one active member and
+    /// both a bandwidth and a latency estimate, ordered by each slot's
+    /// lowest-indexed active member (deterministic). Shared slots emit
+    /// one entry carrying their member count, so the snapshot is O(live
+    /// classes) entries on class-sharing runs.
+    pub fn slot_estimates(&self) -> Vec<SlotEstimate> {
+        let mut members = vec![0u32; self.slots.len()];
+        for w in 0..self.slot_of.len() {
+            if self.active[w] {
+                members[self.slot_of[w]] += 1;
+            }
+        }
+        let mut seen = vec![false; self.slots.len()];
+        let mut out = Vec::new();
+        for w in 0..self.slot_of.len() {
+            let s = self.slot_of[w];
+            if !self.active[w] || seen[s] {
+                continue;
+            }
+            seen[s] = true;
+            let (Some(bw), Some(lat)) =
+                (self.worker_bandwidth(w), self.worker_latency(w))
+            else {
+                continue;
+            };
+            out.push(SlotEstimate {
+                worker: w as u32,
+                members: members[s],
+                bw,
+                lat,
+                bw_pess: self.worker_bandwidth_pessimistic(w).unwrap_or(bw),
+                lat_pess: self.worker_latency_pessimistic(w).unwrap_or(lat),
+            });
+        }
+        out
     }
 
     /// Active workers' effective views in worker order — the stream every
@@ -808,6 +910,95 @@ mod tests {
             cls.link(0).bandwidth().unwrap().to_bits(),
             cls.link(1).bandwidth().unwrap().to_bits()
         );
+    }
+
+    #[test]
+    fn pessimistic_views_match_optimistic_on_single_path() {
+        // no bonds anywhere: the pessimistic band is degenerate and
+        // bitwise equal to the optimistic aggregates
+        let mut fm = FabricMonitor::new(3, 0.5, 0);
+        for _ in 0..20 {
+            fm.observe_transfer(0, 10_000_000, 1.0);
+            fm.observe_transfer(1, 100_000_000, 1.0);
+            fm.observe_transfer(2, 100_000_000, 1.0);
+            fm.observe_latency_for(0, 0.6);
+            fm.observe_latency_for(1, 0.1);
+            fm.observe_latency_for(2, 0.1);
+        }
+        assert_eq!(
+            fm.bandwidth().unwrap().to_bits(),
+            fm.bandwidth_pessimistic().unwrap().to_bits()
+        );
+        assert_eq!(
+            fm.latency().unwrap().to_bits(),
+            fm.latency_pessimistic().unwrap().to_bits()
+        );
+        for w in 0..3 {
+            assert_eq!(
+                fm.worker_bandwidth(w).unwrap().to_bits(),
+                fm.worker_bandwidth_pessimistic(w).unwrap().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn bonded_pessimistic_band_brackets_the_optimistic_view() {
+        let mut fm = FabricMonitor::with_paths(&[2, 1], 0.5, 0);
+        for _ in 0..30 {
+            fm.observe_path_transfer(0, 0, 100_000_000.0, 1.0); // 1e8
+            fm.observe_path_transfer(0, 1, 20_000_000.0, 1.0); // 2e7
+            fm.observe_path_latency(0, 0, 0.05);
+            fm.observe_path_latency(0, 1, 0.3);
+            fm.observe_transfer(1, 50_000_000, 1.0);
+            fm.observe_latency_for(1, 0.1);
+        }
+        // worker 0's band: [min path, Σ paths] for bandwidth, and
+        // latency's pessimistic max above the weighted mean
+        let bw_opt = fm.worker_bandwidth(0).unwrap();
+        let bw_pess = fm.worker_bandwidth_pessimistic(0).unwrap();
+        assert!((bw_pess - 2e7).abs() < 1.0, "min path, got {bw_pess}");
+        assert!(bw_pess < bw_opt);
+        let lat_pess = fm.worker_latency_pessimistic(0).unwrap();
+        assert!((lat_pess - 0.3).abs() < 1e-12, "max path, got {lat_pess}");
+        assert!(lat_pess > fm.worker_latency(0).unwrap());
+        // aggregates: optimistic bottleneck is worker 1 (5e7 < 1.2e8) but
+        // the pessimistic bottleneck is worker 0's thin path (2e7)
+        assert!((fm.bandwidth().unwrap() - 5e7).abs() < 1.0);
+        assert!((fm.bandwidth_pessimistic().unwrap() - 2e7).abs() < 1.0);
+        assert!((fm.latency_pessimistic().unwrap() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slot_estimates_snapshot_is_deduplicated_and_ordered() {
+        let n = 4;
+        let mut fm = FabricMonitor::new(n, 0.3, 0);
+        // workers {0,2} share one observation history via the class path,
+        // {1,3} another; both collapse to one slot each
+        for k in 0..10u64 {
+            let bits = 1_000_000 + k * 331;
+            fm.observe_class_transfer(&[0, 2], bits, 0.01);
+            fm.observe_class_latency(&[0, 2], 0.1);
+            fm.observe_class_transfer(&[1, 3], bits * 2, 0.01);
+            fm.observe_class_latency(&[1, 3], 0.2);
+        }
+        let snap = fm.slot_estimates();
+        assert_eq!(snap.len(), 2, "one entry per shared slot");
+        assert_eq!((snap[0].worker, snap[0].members), (0, 2));
+        assert_eq!((snap[1].worker, snap[1].members), (1, 2));
+        assert!(snap[0].bw < snap[1].bw);
+        // degenerate band on single-path workers
+        assert_eq!(snap[0].bw.to_bits(), snap[0].bw_pess.to_bits());
+        assert_eq!(snap[0].lat.to_bits(), snap[0].lat_pess.to_bits());
+        // deactivating one member shrinks the count; a whole slot out
+        // drops the entry
+        fm.set_active(2, false);
+        let snap = fm.slot_estimates();
+        assert_eq!(snap.len(), 2);
+        assert_eq!((snap[0].worker, snap[0].members), (0, 1));
+        fm.set_active(0, false);
+        let snap = fm.slot_estimates();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].worker, 1);
     }
 
     #[test]

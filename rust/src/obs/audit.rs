@@ -1,0 +1,949 @@
+//! Plan audit — predicted-vs-realized round times, hindsight-oracle
+//! regret, and estimator calibration (DESIGN.md §Observability → Audit).
+//!
+//! DeCo's whole claim is that the closed-form round-time model picks
+//! `(τ, δ)` well; PR 8's trace stream records each decision
+//! ([`ReplanRecord`]) without ever checking it against what the virtual
+//! clock delivered. This module closes the prediction → outcome loop:
+//!
+//! * **Plan audit** ([`PlanAudit`]): joins each re-plan with the realized
+//!   virtual-time outcomes of the iterations it governed into per-window
+//!   records ([`PlanWindow`]) — predicted vs realized seconds/iter,
+//!   signed bias, relative error — plus a run-level calibration fold
+//!   ([`AuditSummary`]). Window `i` spans `[t_replan_i, t_replan_{i+1})`
+//!   (the last closes at its final tick's arrival); because the training
+//!   loop emits `Replan` at `clock.now()` — the previous tick's arrival —
+//!   the windows tile `[first_replan, makespan]` bitwise, and realized
+//!   time sums exactly to the clock's total over that range. The fold is
+//!   O(1) per tick (the [`PlanAudit::streaming`] form — same budget class
+//!   as [`super::Attribution::record_flat`], so `exp scale` can afford
+//!   it) and the buffered form replays the identical per-event updates,
+//!   so the two agree bit-for-bit by construction.
+//! * **Hindsight-oracle regret** ([`oracle_regret`]): re-solve each
+//!   window against the *realized* bandwidth over it — the exact
+//!   prefix-integral trace means, not estimates — to get the oracle
+//!   `(τ, δ)` and its round time; report per-window and cumulative
+//!   regret of the executed plan. At the solved point the closed form is
+//!   bubble-free (`T_avg = T_comp`), so on a constant trace regret is
+//!   ≈ 0 and any gap is exactly what adaptation lost.
+//! * **Estimator calibration** ([`calibrate`]): score the
+//!   [`crate::netsim::FabricMonitor`] estimates captured in each
+//!   [`ReplanRecord`] against ground-truth trace means over the window
+//!   they governed — signed bias, RMSE, ±10% coverage — per estimator
+//!   slot and aggregated, plus the bonded `[pess, opt]` band coverage
+//!   (how often the PR-6 optimistic Σ-bandwidth view bracketed reality).
+//!
+//! Conventions: bias is `realized − predicted` (positive = the plan was
+//! optimistic / under-predicted). Bonded workers' ground truth follows
+//! the planner's own optimistic convention — Σ path trace means, min
+//! path latency — so the regret charges the *plan*, not the convention;
+//! the pessimistic band shows when that convention itself misled. On a
+//! two-tier topology the audit scores the LAN-tier solve only (the flat
+//! view the worker pipeline realizes).
+
+use super::{ReplanRecord, TraceEvent, TraceSink};
+use crate::deco::{solve, DecoInput};
+use crate::metrics::format_table;
+use crate::netsim::Fabric;
+use crate::timesim::{t_avg_closed_form, PipelineParams};
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------------
+// Plan windows
+// ---------------------------------------------------------------------------
+
+/// One plan window: the iterations a single re-plan governed, joined with
+/// their realized virtual-time span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanWindow {
+    /// ordinal among closed non-empty windows (0-based, re-plan order)
+    pub index: usize,
+    /// first governed iteration (the tick whose solve opened the window)
+    pub iter_first: usize,
+    /// governed iterations (ticks priced inside the window)
+    pub iters: usize,
+    /// re-plan instant — the previous tick's arrival
+    pub t_start: f64,
+    /// the window's last tick arrival (== the next re-plan's instant)
+    pub t_end: f64,
+    /// solver-predicted steady-state seconds per iteration
+    pub predicted: f64,
+    /// the decision record (`None` when the fold was fed raw predictions
+    /// without records, as `exp scale` does)
+    pub rec: Option<ReplanRecord>,
+}
+
+impl PlanWindow {
+    /// Realized seconds per governed iteration.
+    pub fn realized(&self) -> f64 {
+        (self.t_end - self.t_start) / self.iters as f64
+    }
+
+    /// Signed bias (s/iter): realized − predicted. Positive = the plan
+    /// under-predicted (was optimistic).
+    pub fn bias(&self) -> f64 {
+        self.realized() - self.predicted
+    }
+
+    /// Bias relative to the realized round time (0 when degenerate).
+    pub fn rel_err(&self) -> f64 {
+        let r = self.realized();
+        if r > 0.0 {
+            self.bias() / r
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run-level plan-calibration fold. Every field is updated by the same
+/// O(1) per-window close whether the audit streams or buffers, so the
+/// two paths agree bit-for-bit.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AuditSummary {
+    /// closed windows that governed at least one tick
+    pub windows: usize,
+    /// total governed iterations
+    pub iters: usize,
+    /// first re-plan instant (start of the audited range)
+    pub first_t: f64,
+    /// last governed tick arrival (end of the audited range)
+    pub last_t: f64,
+    /// Σ predicted · iters (predicted seconds over the audited range)
+    pub pred_time: f64,
+    /// Σ (t_end − t_start) (== `last_t − first_t` up to float addition)
+    pub real_time: f64,
+    /// Σ per-window bias² — feeds [`Self::rmse`]
+    pub bias_sq_sum: f64,
+    /// windows that over-predicted (realized < predicted)
+    pub over: usize,
+    /// windows that under-predicted (realized > predicted)
+    pub under: usize,
+    /// largest-magnitude signed per-window bias (s/iter)
+    pub worst_bias: f64,
+    /// index of the worst window
+    pub worst_index: usize,
+}
+
+impl AuditSummary {
+    /// Iteration-weighted mean predicted round time (s/iter).
+    pub fn mean_predicted(&self) -> f64 {
+        if self.iters > 0 {
+            self.pred_time / self.iters as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Iteration-weighted mean realized round time (s/iter).
+    pub fn mean_realized(&self) -> f64 {
+        if self.iters > 0 {
+            self.real_time / self.iters as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Run-level signed bias (s/iter): mean realized − mean predicted.
+    pub fn bias(&self) -> f64 {
+        self.mean_realized() - self.mean_predicted()
+    }
+
+    /// Per-window RMSE of realized − predicted (s/iter).
+    pub fn rmse(&self) -> f64 {
+        if self.windows > 0 {
+            (self.bias_sq_sum / self.windows as f64).sqrt()
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The window currently accumulating ticks.
+#[derive(Clone, Debug)]
+struct OpenWindow {
+    iter_first: usize,
+    iters: usize,
+    t_start: f64,
+    t_end: f64,
+    predicted: f64,
+    rec: Option<ReplanRecord>,
+}
+
+/// The plan-audit fold: feed it re-plans and tick arrivals (directly via
+/// [`Self::replan`] / [`Self::tick`], or as a [`TraceSink`]), then
+/// [`Self::finish`]. The streaming form keeps only the [`AuditSummary`]
+/// — O(1) memory, O(1) per tick; the buffered form retains every
+/// [`PlanWindow`] for the regret and calibration passes.
+#[derive(Clone, Debug, Default)]
+pub struct PlanAudit {
+    summary: AuditSummary,
+    open: Option<OpenWindow>,
+    retained: Option<Vec<PlanWindow>>,
+}
+
+impl PlanAudit {
+    /// O(1)-memory streaming fold: summary only, records dropped.
+    pub fn streaming() -> Self {
+        Self::default()
+    }
+
+    /// Replay a buffered trace, retaining every closed window. The
+    /// per-event updates are the exact calls a streaming fold makes, so
+    /// `PlanAudit::buffered(events).summary()` equals the streaming
+    /// summary bit-for-bit.
+    pub fn buffered(events: &[TraceEvent]) -> Self {
+        let mut a = Self { retained: Some(Vec::new()), ..Self::default() };
+        for ev in events {
+            a.record(ev);
+        }
+        a.finish();
+        a
+    }
+
+    /// A re-plan fired at virtual time `t` before pricing iteration
+    /// `iter`: close the open window at `t` and open the next one.
+    /// `rec` is retained only by the buffered form.
+    pub fn replan(
+        &mut self,
+        t: f64,
+        iter: usize,
+        predicted: f64,
+        rec: Option<ReplanRecord>,
+    ) {
+        self.close(t);
+        self.open = Some(OpenWindow {
+            iter_first: iter,
+            iters: 0,
+            t_start: t,
+            t_end: t,
+            predicted,
+            rec: if self.retained.is_some() { rec } else { None },
+        });
+    }
+
+    /// A tick arrived at `tc`. Ticks before the first re-plan are outside
+    /// every window and contribute nothing.
+    pub fn tick(&mut self, tc: f64) {
+        if let Some(o) = self.open.as_mut() {
+            o.iters += 1;
+            o.t_end = tc;
+        }
+    }
+
+    /// Close the run: the open window ends at its last tick's arrival.
+    /// Idempotent; a window that governed no tick is dropped.
+    pub fn finish(&mut self) {
+        if let Some(end) = self.open.as_ref().map(|o| o.t_end) {
+            self.close(end);
+        }
+    }
+
+    fn close(&mut self, t_end: f64) {
+        let Some(o) = self.open.take() else { return };
+        if o.iters == 0 {
+            return;
+        }
+        let s = &mut self.summary;
+        if s.windows == 0 {
+            s.first_t = o.t_start;
+        }
+        s.last_t = t_end;
+        let realized = (t_end - o.t_start) / o.iters as f64;
+        let bias = realized - o.predicted;
+        s.iters += o.iters;
+        s.pred_time += o.predicted * o.iters as f64;
+        s.real_time += t_end - o.t_start;
+        s.bias_sq_sum += bias * bias;
+        if bias < 0.0 {
+            s.over += 1;
+        } else if bias > 0.0 {
+            s.under += 1;
+        }
+        if s.windows == 0 || bias.abs() > s.worst_bias.abs() {
+            s.worst_bias = bias;
+            s.worst_index = s.windows;
+        }
+        let index = s.windows;
+        s.windows += 1;
+        if let Some(ws) = self.retained.as_mut() {
+            ws.push(PlanWindow {
+                index,
+                iter_first: o.iter_first,
+                iters: o.iters,
+                t_start: o.t_start,
+                t_end,
+                predicted: o.predicted,
+                rec: o.rec,
+            });
+        }
+    }
+
+    pub fn summary(&self) -> &AuditSummary {
+        &self.summary
+    }
+
+    /// Closed windows (empty in the streaming form).
+    pub fn windows(&self) -> &[PlanWindow] {
+        self.retained.as_deref().unwrap_or(&[])
+    }
+}
+
+impl TraceSink for PlanAudit {
+    fn record(&mut self, ev: &TraceEvent) {
+        match ev {
+            TraceEvent::Replan { t, iter, rec } => {
+                let keep =
+                    self.retained.is_some().then(|| rec.clone());
+                self.replan(*t, *iter, rec.predicted_round, keep);
+            }
+            TraceEvent::Tick(tk) => self.tick(tk.tc),
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ground truth + hindsight oracle
+// ---------------------------------------------------------------------------
+
+/// One worker's realized `(bandwidth, latency)` over `[t0, t1)`: the
+/// exact trace mean (prefix-integral difference) on single-path links;
+/// on bonded workers the planner's optimistic convention — Σ path means,
+/// min path latency.
+fn worker_realized(fabric: &Fabric, w: usize, t0: f64, t1: f64) -> (f64, f64) {
+    match fabric.bond(w) {
+        Some(bond) => {
+            let bw: f64 =
+                bond.paths().iter().map(|p| p.trace().mean_over(t0, t1)).sum();
+            let lat = bond
+                .paths()
+                .iter()
+                .map(|p| p.latency())
+                .fold(f64::INFINITY, f64::min);
+            (bw, lat)
+        }
+        None => {
+            let l = fabric.link(w);
+            (l.trace().mean_over(t0, t1), l.latency())
+        }
+    }
+}
+
+/// The realized LAN-tier bottleneck `(a, b)` over `[t0, t1)`: min worker
+/// bandwidth, max worker latency — the pair that actually gated the
+/// synchronous aggregation, from the exact prefix integrals.
+pub fn realized_lan_bottleneck(
+    fabric: &Fabric,
+    t0: f64,
+    t1: f64,
+) -> (f64, f64) {
+    let mut a = f64::INFINITY;
+    let mut b: f64 = 0.0;
+    for w in 0..fabric.workers() {
+        let (bw, lat) = worker_realized(fabric, w, t0, t1);
+        a = a.min(bw);
+        b = b.max(lat);
+    }
+    (a, b)
+}
+
+/// Hindsight-oracle verdict for one plan window.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowRegret {
+    pub index: usize,
+    /// realized bottleneck bandwidth over the window (bits/s)
+    pub realized_a: f64,
+    /// realized bottleneck latency over the window (s)
+    pub realized_b: f64,
+    /// oracle `(τ, δ)` re-solved against the realized window
+    pub oracle_tau: usize,
+    pub oracle_delta: f64,
+    /// the oracle plan's steady-state round time (s/iter)
+    pub oracle_round: f64,
+    /// realized − oracle seconds per iteration
+    pub regret: f64,
+    /// governed iterations (weights the cumulative sum)
+    pub iters: usize,
+}
+
+/// Per-window and cumulative hindsight regret.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RegretReport {
+    pub windows: Vec<WindowRegret>,
+    /// Σ regret · iters — seconds of makespan lost to imperfect plans
+    pub cumulative: f64,
+}
+
+/// Re-solve every window against the bandwidth the fabric *realized*
+/// over it (exact prefix-integral means — the PR-5 engine) and report
+/// the executed plan's regret versus that hindsight oracle. Windows
+/// without a [`ReplanRecord`] (streaming-fed) or with a degenerate
+/// realized bottleneck are skipped.
+pub fn oracle_regret(windows: &[PlanWindow], fabric: &Fabric) -> RegretReport {
+    let mut rep = RegretReport::default();
+    for w in windows {
+        let Some(rec) = &w.rec else { continue };
+        let (a, b) = realized_lan_bottleneck(fabric, w.t_start, w.t_end);
+        if !(a.is_finite() && a > 0.0) {
+            continue;
+        }
+        let inp = DecoInput {
+            s_g: rec.lan.input.s_g,
+            a,
+            b,
+            t_comp: rec.lan.input.t_comp,
+        };
+        let out = solve(&inp);
+        let oracle_round = t_avg_closed_form(&PipelineParams {
+            a,
+            b,
+            delta: out.delta,
+            tau: out.tau,
+            t_comp: inp.t_comp,
+            s_g: inp.s_g,
+        });
+        let regret = w.realized() - oracle_round;
+        rep.cumulative += regret * w.iters as f64;
+        rep.windows.push(WindowRegret {
+            index: w.index,
+            realized_a: a,
+            realized_b: b,
+            oracle_tau: out.tau,
+            oracle_delta: out.delta,
+            oracle_round,
+            regret,
+            iters: w.iters,
+        });
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------------
+// Estimator calibration
+// ---------------------------------------------------------------------------
+
+/// Calibration of one estimator slot against ground truth, accumulated
+/// over every window whose [`ReplanRecord`] snapshotted it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationRow {
+    /// the slot's representative worker; `u32::MAX` on the aggregate row
+    pub worker: u32,
+    /// (window, slot) scores folded into this row
+    pub samples: usize,
+    /// mean estimated bandwidth (bits/s)
+    pub mean_est: f64,
+    /// mean ground-truth bandwidth over the windows (bits/s)
+    pub mean_true: f64,
+    /// mean signed bias: estimate − truth (bits/s)
+    pub bias: f64,
+    /// RMSE of estimate − truth (bits/s)
+    pub rmse: f64,
+    /// fraction of windows with |est − truth| ≤ 10% of truth
+    pub coverage: f64,
+    /// fraction of windows whose truth lay inside the worker's
+    /// `[pessimistic, optimistic]` bandwidth band (degenerate — and so
+    /// rarely covering — on single-path workers under a moving trace)
+    pub band_coverage: f64,
+    /// mean signed latency bias: estimate − truth (s)
+    pub lat_bias: f64,
+}
+
+/// Per-slot rows (ascending representative worker) plus the aggregate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationReport {
+    pub links: Vec<CalibrationRow>,
+    /// every (window, slot) score folded together (`worker == u32::MAX`)
+    pub all: CalibrationRow,
+}
+
+#[derive(Clone, Copy, Default)]
+struct CalAcc {
+    n: usize,
+    est_sum: f64,
+    true_sum: f64,
+    err_sum: f64,
+    err_sq_sum: f64,
+    covered: usize,
+    in_band: usize,
+    lat_err_sum: f64,
+}
+
+impl CalAcc {
+    fn row(&self, worker: u32) -> CalibrationRow {
+        let n = self.n.max(1) as f64;
+        CalibrationRow {
+            worker,
+            samples: self.n,
+            mean_est: self.est_sum / n,
+            mean_true: self.true_sum / n,
+            bias: self.err_sum / n,
+            rmse: (self.err_sq_sum / n).sqrt(),
+            coverage: self.covered as f64 / n,
+            band_coverage: self.in_band as f64 / n,
+            lat_bias: self.lat_err_sum / n,
+        }
+    }
+}
+
+/// Score every estimator snapshot in the windows' [`ReplanRecord`]s
+/// against the ground-truth trace means over the window each governed —
+/// the estimates were made *at* `t_start` for the window ahead, so this
+/// measures exactly the error the planner acted on. Slot-shared
+/// estimates (class granularity) score once per slot against the
+/// representative worker's links.
+pub fn calibrate(windows: &[PlanWindow], fabric: &Fabric) -> CalibrationReport {
+    let mut per: BTreeMap<u32, CalAcc> = BTreeMap::new();
+    let mut all = CalAcc::default();
+    for w in windows {
+        let Some(rec) = &w.rec else { continue };
+        for l in &rec.links {
+            let (truth, lat_truth) =
+                worker_realized(fabric, l.worker as usize, w.t_start, w.t_end);
+            if !(truth.is_finite() && truth > 0.0) {
+                continue;
+            }
+            let err = l.bw - truth;
+            let (lo, hi) = (l.bw_pess.min(l.bw), l.bw_pess.max(l.bw));
+            // single-path bands are zero-width, and the EWMA's observed
+            // bits/secs differs from the prefix-integral mean by float
+            // rounding even on a constant trace — bracket with relative
+            // slack so the degenerate band still covers exact agreement
+            let eps = 1e-9 * truth;
+            for acc in [per.entry(l.worker).or_default(), &mut all] {
+                acc.n += 1;
+                acc.est_sum += l.bw;
+                acc.true_sum += truth;
+                acc.err_sum += err;
+                acc.err_sq_sum += err * err;
+                acc.covered += usize::from(err.abs() <= 0.1 * truth);
+                acc.in_band +=
+                    usize::from(lo - eps <= truth && truth <= hi + eps);
+                acc.lat_err_sum += l.lat - lat_truth;
+            }
+        }
+    }
+    CalibrationReport {
+        links: per.iter().map(|(&w, acc)| acc.row(w)).collect(),
+        all: all.row(u32::MAX),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The full report (what `repro audit` prints and writes)
+// ---------------------------------------------------------------------------
+
+/// Plan audit + hindsight regret + estimator calibration for one traced
+/// run, with deterministic table / CSV / JSON renderings.
+#[derive(Clone, Debug)]
+pub struct AuditReport {
+    pub summary: AuditSummary,
+    pub windows: Vec<PlanWindow>,
+    pub regret: RegretReport,
+    pub calibration: CalibrationReport,
+}
+
+/// Run the buffered audit over a trace and score it against `fabric`
+/// (the ground truth the run was priced on — rebuild it from the same
+/// config; traces are seeded, so the sample paths replay identically).
+pub fn audit_events(events: &[TraceEvent], fabric: &Fabric) -> AuditReport {
+    let plan = PlanAudit::buffered(events);
+    let windows = plan.windows().to_vec();
+    let regret = oracle_regret(&windows, fabric);
+    let calibration = calibrate(&windows, fabric);
+    AuditReport { summary: *plan.summary(), windows, regret, calibration }
+}
+
+impl AuditReport {
+    /// The aligned plan-audit + calibration tables.
+    pub fn table(&self) -> String {
+        let s = &self.summary;
+        let plan_rows = vec![
+            vec!["plan windows".into(), s.windows.to_string()],
+            vec!["governed iters".into(), s.iters.to_string()],
+            vec![
+                "audited range (s)".into(),
+                format!("{:.6} .. {:.6}", s.first_t, s.last_t),
+            ],
+            vec![
+                "mean predicted (s/iter)".into(),
+                format!("{:.6}", s.mean_predicted()),
+            ],
+            vec![
+                "mean realized (s/iter)".into(),
+                format!("{:.6}", s.mean_realized()),
+            ],
+            vec!["plan bias (s/iter)".into(), format!("{:.6}", s.bias())],
+            vec!["window rmse (s/iter)".into(), format!("{:.6}", s.rmse())],
+            vec![
+                "over / under windows".into(),
+                format!("{} / {}", s.over, s.under),
+            ],
+            vec![
+                "worst window".into(),
+                format!("#{} ({:+.6} s/iter)", s.worst_index, s.worst_bias),
+            ],
+            vec![
+                "oracle regret (s)".into(),
+                format!("{:.6}", self.regret.cumulative),
+            ],
+        ];
+        let mut out = format_table(&["plan audit", "value"], &plan_rows);
+        let cal_rows: Vec<Vec<String>> = self
+            .calibration
+            .links
+            .iter()
+            .chain(std::iter::once(&self.calibration.all))
+            .map(|r| {
+                vec![
+                    if r.worker == u32::MAX {
+                        "all".into()
+                    } else {
+                        format!("w{}", r.worker)
+                    },
+                    r.samples.to_string(),
+                    format!("{:.3}", r.mean_est / 1e6),
+                    format!("{:.3}", r.mean_true / 1e6),
+                    format!("{:+.3}", r.bias / 1e6),
+                    format!("{:.3}", r.rmse / 1e6),
+                    format!("{:.2}", r.coverage),
+                    format!("{:.2}", r.band_coverage),
+                    format!("{:+.4}", r.lat_bias),
+                ]
+            })
+            .collect();
+        out.push('\n');
+        out.push_str(&format_table(
+            &[
+                "link",
+                "wins",
+                "est Mbps",
+                "true Mbps",
+                "bias",
+                "rmse",
+                "cov10%",
+                "band",
+                "lat bias s",
+            ],
+            &cal_rows,
+        ));
+        out
+    }
+
+    /// Deterministic per-window CSV (regret columns joined by index).
+    pub fn csv(&self) -> String {
+        let regret: BTreeMap<usize, &WindowRegret> =
+            self.regret.windows.iter().map(|r| (r.index, r)).collect();
+        let mut out = String::from(
+            "window,iter_first,iters,t_start,t_end,predicted,realized,bias,\
+             rel_err,realized_a,oracle_tau,oracle_delta,oracle_round,regret\n",
+        );
+        for w in &self.windows {
+            let r = regret.get(&w.index);
+            out.push_str(&format!(
+                "{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{}\n",
+                w.index,
+                w.iter_first,
+                w.iters,
+                w.t_start,
+                w.t_end,
+                w.predicted,
+                w.realized(),
+                w.bias(),
+                w.rel_err(),
+                r.map_or("".into(), |r| format!("{:.6}", r.realized_a)),
+                r.map_or("".into(), |r| r.oracle_tau.to_string()),
+                r.map_or("".into(), |r| format!("{:.6}", r.oracle_delta)),
+                r.map_or("".into(), |r| format!("{:.6}", r.oracle_round)),
+                r.map_or("".into(), |r| format!("{:.6}", r.regret)),
+            ));
+        }
+        out
+    }
+
+    /// Canonical JSON (BTreeMap-ordered keys — byte-deterministic).
+    pub fn json(&self) -> Json {
+        let s = &self.summary;
+        let cal: Vec<Json> = self
+            .calibration
+            .links
+            .iter()
+            .chain(std::iter::once(&self.calibration.all))
+            .map(|r| {
+                Json::obj(vec![
+                    ("band_coverage", Json::num(r.band_coverage)),
+                    ("bias", Json::num(r.bias)),
+                    ("coverage", Json::num(r.coverage)),
+                    ("lat_bias", Json::num(r.lat_bias)),
+                    ("mean_est", Json::num(r.mean_est)),
+                    ("mean_true", Json::num(r.mean_true)),
+                    ("rmse", Json::num(r.rmse)),
+                    ("samples", Json::num(r.samples as f64)),
+                    (
+                        "worker",
+                        if r.worker == u32::MAX {
+                            Json::str("all")
+                        } else {
+                            Json::num(r.worker as f64)
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("calibration", Json::arr(cal)),
+            ("cumulative_regret", Json::num(self.regret.cumulative)),
+            ("governed_iters", Json::num(s.iters as f64)),
+            ("mean_predicted", Json::num(s.mean_predicted())),
+            ("mean_realized", Json::num(s.mean_realized())),
+            ("plan_bias", Json::num(s.bias())),
+            ("window_rmse", Json::num(s.rmse())),
+            ("windows", Json::num(s.windows as f64)),
+            ("worst_bias", Json::num(s.worst_bias)),
+            ("worst_index", Json::num(s.worst_index as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::BandwidthTrace;
+    use crate::obs::{TickTrace, TierReplan};
+
+    fn rec(a: f64, b: f64, predicted: f64) -> ReplanRecord {
+        ReplanRecord {
+            lan: TierReplan {
+                input: DecoInput { s_g: 1e8, a, b, t_comp: 0.2 },
+                tau: 1,
+                delta: 0.5,
+                log_phi: -1.0,
+            },
+            wan: None,
+            predicted_round: predicted,
+            pessimistic: None,
+            links: Vec::new(),
+        }
+    }
+
+    fn tick_ev(iter: usize, tc: f64) -> TraceEvent {
+        TraceEvent::Tick(TickTrace {
+            iter,
+            ts: tc - 0.1,
+            t_comp: 0.1,
+            tc,
+            workers: Vec::new(),
+            regions: Vec::new(),
+        })
+    }
+
+    fn replan_ev(t: f64, iter: usize, predicted: f64) -> TraceEvent {
+        TraceEvent::Replan { t, iter, rec: rec(2e7, 0.2, predicted) }
+    }
+
+    #[test]
+    fn windows_tile_and_summary_folds() {
+        // replan@0 (pred 0.5) -> ticks at 0.6, 1.2; replan@1.2 (pred
+        // 0.58) -> ticks at 1.8, 2.4, 3.1
+        let events = vec![
+            replan_ev(0.0, 1, 0.5),
+            tick_ev(1, 0.6),
+            tick_ev(2, 1.2),
+            replan_ev(1.2, 3, 0.58),
+            tick_ev(3, 1.8),
+            tick_ev(4, 2.4),
+            tick_ev(5, 3.1),
+        ];
+        let a = PlanAudit::buffered(&events);
+        let ws = a.windows();
+        assert_eq!(ws.len(), 2);
+        assert_eq!((ws[0].iter_first, ws[0].iters), (1, 2));
+        assert_eq!((ws[1].iter_first, ws[1].iters), (3, 3));
+        // exact tiling: window 0 ends where window 1 starts, bitwise
+        assert_eq!(ws[0].t_end.to_bits(), ws[1].t_start.to_bits());
+        let s = a.summary();
+        assert_eq!((s.windows, s.iters), (2, 5));
+        assert_eq!(s.first_t, 0.0);
+        assert_eq!(s.last_t, 3.1);
+        assert!((s.real_time - 3.1).abs() < 1e-12);
+        // window 0 realized 0.6 vs pred 0.5 (under-predicted); window 1
+        // realized 1.9/3 vs 0.58 (over-predicted)
+        assert!((ws[0].bias() - 0.1).abs() < 1e-12);
+        assert!(ws[1].bias() < 0.0);
+        assert_eq!((s.over, s.under), (1, 1));
+        assert_eq!(s.worst_index, 0);
+        assert!((s.worst_bias - 0.1).abs() < 1e-12);
+        assert!(s.rmse() > 0.0);
+    }
+
+    #[test]
+    fn streaming_matches_buffered_bitwise() {
+        let mut events = vec![replan_ev(0.0, 1, 0.31)];
+        let mut t = 0.0;
+        for k in 1..=40usize {
+            t += 0.3 + 0.01 * (k % 5) as f64;
+            if k % 10 == 1 && k > 1 {
+                events.push(replan_ev(t - 0.3, k, 0.3 + 0.002 * k as f64));
+            }
+            events.push(tick_ev(k, t));
+        }
+        let buffered = PlanAudit::buffered(&events);
+        let mut streaming = PlanAudit::streaming();
+        for ev in &events {
+            streaming.record(ev);
+        }
+        streaming.finish();
+        assert!(streaming.windows().is_empty(), "streaming keeps no windows");
+        assert_eq!(streaming.summary(), buffered.summary());
+        // bitwise, not just PartialEq on the floats
+        assert_eq!(
+            streaming.summary().real_time.to_bits(),
+            buffered.summary().real_time.to_bits()
+        );
+        assert_eq!(
+            streaming.summary().bias_sq_sum.to_bits(),
+            buffered.summary().bias_sq_sum.to_bits()
+        );
+    }
+
+    #[test]
+    fn ticks_before_first_replan_and_empty_windows_are_dropped() {
+        let events = vec![
+            tick_ev(1, 0.5), // pre-plan: outside every window
+            replan_ev(0.5, 2, 0.4),
+            tick_ev(2, 0.9),
+            replan_ev(0.9, 3, 0.4), // governs nothing (run ends)
+        ];
+        let a = PlanAudit::buffered(&events);
+        assert_eq!(a.windows().len(), 1);
+        assert_eq!(a.summary().iters, 1);
+        assert_eq!(a.summary().first_t, 0.5);
+        assert_eq!(a.summary().last_t, 0.9);
+    }
+
+    #[test]
+    fn no_replans_is_a_vacuous_audit() {
+        let events = vec![tick_ev(1, 0.5), tick_ev(2, 1.0)];
+        let a = PlanAudit::buffered(&events);
+        assert_eq!(a.summary(), &AuditSummary::default());
+        assert!(a.windows().is_empty());
+    }
+
+    #[test]
+    fn oracle_regret_is_zero_when_the_plan_was_perfect() {
+        // constant 2e7 fabric; the plan solved on the true (a, b) and the
+        // realized rounds hit T_comp exactly -> regret == 0
+        let fabric =
+            Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.2);
+        let inp = DecoInput { s_g: 1e8, a: 2e7, b: 0.2, t_comp: 0.2 };
+        let out = solve(&inp);
+        let pred = t_avg_closed_form(&PipelineParams {
+            a: inp.a,
+            b: inp.b,
+            delta: out.delta,
+            tau: out.tau,
+            t_comp: inp.t_comp,
+            s_g: inp.s_g,
+        });
+        assert!((pred - 0.2).abs() < 1e-12, "bubble-free at the optimum");
+        let windows = vec![PlanWindow {
+            index: 0,
+            iter_first: 1,
+            iters: 10,
+            t_start: 1.0,
+            t_end: 1.0 + 10.0 * pred,
+            predicted: pred,
+            rec: Some(rec(2e7, 0.2, pred)),
+        }];
+        let rep = oracle_regret(&windows, &fabric);
+        assert_eq!(rep.windows.len(), 1);
+        let w = &rep.windows[0];
+        assert!((w.realized_a - 2e7).abs() < 1e-6);
+        assert!((w.oracle_round - 0.2).abs() < 1e-12);
+        assert!(w.regret.abs() < 1e-12, "regret {}", w.regret);
+        assert!(rep.cumulative.abs() < 1e-9);
+    }
+
+    #[test]
+    fn oracle_regret_charges_slow_realized_rounds() {
+        let fabric =
+            Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.2);
+        // same plan, but the realized window ran 50% slower than the
+        // oracle round
+        let windows = vec![PlanWindow {
+            index: 0,
+            iter_first: 1,
+            iters: 10,
+            t_start: 1.0,
+            t_end: 4.0, // 0.3 s/iter vs oracle 0.2
+            predicted: 0.2,
+            rec: Some(rec(2e7, 0.2, 0.2)),
+        }];
+        let rep = oracle_regret(&windows, &fabric);
+        assert!((rep.windows[0].regret - 0.1).abs() < 1e-9);
+        assert!((rep.cumulative - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibration_scores_estimates_against_trace_means() {
+        use crate::netsim::SlotEstimate;
+        let fabric =
+            Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.2);
+        let slot = |w: u32, bw: f64| SlotEstimate {
+            worker: w,
+            members: 1,
+            bw,
+            lat: 0.2,
+            bw_pess: bw,
+            lat_pess: 0.2,
+        };
+        let mut r = rec(2e7, 0.2, 0.2);
+        // worker 0 estimates truth exactly; worker 1 is 25% high
+        r.links = vec![slot(0, 2e7), slot(1, 2.5e7)];
+        let windows = vec![PlanWindow {
+            index: 0,
+            iter_first: 1,
+            iters: 10,
+            t_start: 1.0,
+            t_end: 3.0,
+            predicted: 0.2,
+            rec: Some(r),
+        }];
+        let cal = calibrate(&windows, &fabric);
+        assert_eq!(cal.links.len(), 2);
+        let (w0, w1) = (&cal.links[0], &cal.links[1]);
+        assert_eq!((w0.worker, w1.worker), (0, 1));
+        assert!(w0.bias.abs() < 1.0 && w0.coverage == 1.0);
+        assert!(w0.band_coverage == 1.0, "exact estimate is in the band");
+        assert!((w1.bias - 5e6).abs() < 1.0);
+        assert_eq!(w1.coverage, 0.0);
+        assert_eq!(w1.band_coverage, 0.0);
+        let all = &cal.all;
+        assert_eq!(all.samples, 2);
+        assert!((all.bias - 2.5e6).abs() < 1.0);
+        assert!((all.coverage - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_renders_deterministically() {
+        let fabric =
+            Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.2);
+        let events = vec![
+            replan_ev(0.0, 1, 0.5),
+            tick_ev(1, 0.6),
+            tick_ev(2, 1.2),
+            replan_ev(1.2, 3, 0.58),
+            tick_ev(3, 1.8),
+        ];
+        let a = audit_events(&events, &fabric);
+        let b = audit_events(&events, &fabric);
+        assert_eq!(a.csv(), b.csv());
+        assert_eq!(a.json().to_string(), b.json().to_string());
+        assert_eq!(a.table(), b.table());
+        assert!(a.table().contains("plan bias"));
+        assert!(a.csv().lines().count() == 3, "header + 2 windows");
+        let parsed = Json::parse(&a.json().to_string()).unwrap();
+        assert_eq!(parsed.to_string(), a.json().to_string());
+    }
+}

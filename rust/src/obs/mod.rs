@@ -31,8 +31,17 @@
 use crate::deco::DecoInput;
 use crate::elastic::ChurnEvent;
 use crate::metrics::format_table;
+use crate::netsim::{Fabric, SlotEstimate};
 use crate::util::Json;
 use std::collections::BTreeSet;
+
+pub mod audit;
+
+pub use audit::{
+    audit_events, calibrate, oracle_regret, realized_lan_bottleneck,
+    AuditReport, AuditSummary, CalibrationReport, CalibrationRow, PlanAudit,
+    PlanWindow, RegretReport, WindowRegret,
+};
 
 // ---------------------------------------------------------------------------
 // Span taxonomy
@@ -262,13 +271,22 @@ pub struct TierReplan {
 
 /// A re-plan decision: per-tier solves plus the closed-form predicted
 /// round time (`timesim::model::t_avg_closed_form` on the LAN tier).
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ReplanRecord {
     pub lan: TierReplan,
     /// WAN tier in the two-tier topology
     pub wan: Option<TierReplan>,
     /// solver-predicted steady-state seconds per iteration
     pub predicted_round: f64,
+    /// pessimistic `(a, b)` aggregate at the solve instant — min path
+    /// bandwidth / max path latency per bonded worker, bottlenecked over
+    /// workers. Diverges from the optimistic `lan.input` view only when a
+    /// worker is bonded; the audit layer reports when the optimistic bond
+    /// view misled the plan (DESIGN.md §Observability).
+    pub pessimistic: Option<(f64, f64)>,
+    /// per-slot estimator snapshot at the solve instant — what the
+    /// calibration layer scores against ground-truth trace means
+    pub links: Vec<SlotEstimate>,
 }
 
 /// A typed trace event on the virtual timeline.
@@ -620,12 +638,41 @@ fn tier_args(prefix: &str, t: &TierReplan, pairs: &mut Vec<(String, Json)>) {
     pairs.push((format!("{prefix}tau"), Json::num(t.tau as f64)));
 }
 
+/// A `"ph":"C"` counter sample on the control process — Perfetto renders
+/// each `name` as a counter track with one series per args key.
+fn counter(name: &str, tid: f64, t: f64, args: Json) -> Json {
+    Json::obj(vec![
+        ("args", args),
+        ("cat", Json::str("audit")),
+        ("name", Json::str(name)),
+        ("ph", Json::str("C")),
+        ("pid", Json::num(PID_CONTROL)),
+        ("tid", Json::num(tid)),
+        ("ts", us(t)),
+    ])
+}
+
 /// Export a trace as Chrome/Perfetto trace-event JSON: `"ph":"X"`
 /// complete spans on virtual time (µs), one track per worker (pid 0),
 /// region (pid 1), and bonded path (pid 3); churn / class / re-plan
-/// instants on the control process (pid 2). Output bytes are canonical:
-/// fixed emission order + BTreeMap key order.
+/// instants plus the plan-audit counter tracks on the control process
+/// (pid 2). Output bytes are canonical: fixed emission order + BTreeMap
+/// key order.
 pub fn perfetto_trace(events: &[TraceEvent]) -> Json {
+    perfetto_events(events, None)
+}
+
+/// [`perfetto_trace`] plus a ground-truth series in the estimator
+/// counter track: the realized bottleneck bandwidth over each plan
+/// window, computed from the fabric's exact prefix integrals
+/// ([`realized_lan_bottleneck`]). `fabric` must be (a rebuild of) the
+/// fabric the traced run priced — traces are seeded, so rebuilding from
+/// the same config replays the identical sample paths.
+pub fn perfetto_audit_trace(events: &[TraceEvent], fabric: &Fabric) -> Json {
+    perfetto_events(events, Some(fabric))
+}
+
+fn perfetto_events(events: &[TraceEvent], truth: Option<&Fabric>) -> Json {
     let mut workers: BTreeSet<u32> = BTreeSet::new();
     let mut regions: BTreeSet<u32> = BTreeSet::new();
     let mut bonded: BTreeSet<u32> = BTreeSet::new();
@@ -665,7 +712,13 @@ pub fn perfetto_trace(events: &[TraceEvent]) -> Json {
         }
     }
     out.push(meta("process_name", PID_CONTROL, None, "control"));
-    for (tid, label) in [(0.0, "churn"), (1.0, "classes"), (2.0, "replan")] {
+    for (tid, label) in [
+        (0.0, "churn"),
+        (1.0, "classes"),
+        (2.0, "replan"),
+        (3.0, "plan audit"),
+        (4.0, "estimator"),
+    ] {
         out.push(meta("thread_name", PID_CONTROL, Some(tid), label));
     }
     if !bonded.is_empty() {
@@ -768,12 +821,47 @@ pub fn perfetto_trace(events: &[TraceEvent]) -> Json {
         }
     }
 
+    // plan-audit counter tracks (pid 2, tids 3/4): one predicted-vs-
+    // realized sample per closed plan window at the window's open
+    // instant, and the estimate-vs-truth bandwidth band next to it. A
+    // trace without re-plans (or whose re-plans governed no tick) emits
+    // no counters.
+    let plan = PlanAudit::buffered(events);
+    for w in plan.windows() {
+        out.push(counter(
+            "round s/iter",
+            3.0,
+            w.t_start,
+            Json::obj(vec![
+                ("predicted", Json::num(w.predicted)),
+                ("realized", Json::num(w.realized())),
+            ]),
+        ));
+        let Some(rec) = &w.rec else { continue };
+        let mut pairs: Vec<(String, Json)> =
+            vec![("est".to_string(), Json::num(rec.lan.input.a / 1e6))];
+        if let Some((bw, _)) = rec.pessimistic {
+            pairs.push(("pess".to_string(), Json::num(bw / 1e6)));
+        }
+        if let Some(fabric) = truth {
+            let (a, _) = realized_lan_bottleneck(fabric, w.t_start, w.t_end);
+            pairs.push(("true".to_string(), Json::num(a / 1e6)));
+        }
+        let args = Json::Obj(pairs.into_iter().collect());
+        out.push(counter("bandwidth Mbps", 4.0, w.t_start, args));
+    }
+
     Json::obj(vec![("traceEvents", Json::arr(out))])
 }
 
 /// [`perfetto_trace`] serialized to canonical bytes.
 pub fn perfetto_string(events: &[TraceEvent]) -> String {
     perfetto_trace(events).to_string()
+}
+
+/// [`perfetto_audit_trace`] serialized to canonical bytes.
+pub fn perfetto_audit_string(events: &[TraceEvent], fabric: &Fabric) -> String {
+    perfetto_audit_trace(events, fabric).to_string()
 }
 
 #[cfg(test)]
@@ -1004,6 +1092,8 @@ mod tests {
                     },
                     wan: None,
                     predicted_round: 0.21,
+                    pessimistic: None,
+                    links: Vec::new(),
                 },
             },
         ];

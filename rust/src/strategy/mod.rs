@@ -193,9 +193,12 @@ pub trait Strategy: Send {
 }
 
 /// Assemble a [`ReplanRecord`] from per-tier solves: the monitor inputs
-/// the solver saw, the `(τ, δ, ln φ)` it chose, and Theorem 3's
-/// closed-form round-time prediction at the solved LAN point.
+/// the solver saw, the `(τ, δ, ln φ)` it chose, Theorem 3's closed-form
+/// round-time prediction at the solved LAN point, and the estimator
+/// snapshot (per-slot views + pessimistic bond band) the audit layer
+/// scores against ground truth (DESIGN.md §Observability → Audit).
 fn replan_record(
+    ctx: &StrategyCtx,
     lan_in: DecoInput,
     lan: DecoOutput,
     wan: Option<(DecoInput, DecoOutput)>,
@@ -218,6 +221,11 @@ fn replan_record(
         lan: tier(lan_in, lan),
         wan: wan.map(|(i, o)| tier(i, o)),
         predicted_round,
+        pessimistic: ctx
+            .monitor
+            .bandwidth_pessimistic()
+            .zip(ctx.monitor.latency_pessimistic()),
+        links: ctx.monitor.slot_estimates(),
     }
 }
 
@@ -390,7 +398,7 @@ impl Strategy for CocktailSgd {
             let input = ctx.deco_input();
             let out = solve(&input);
             self.chosen = Some(out);
-            self.last_replan = Some(replan_record(input, out, None));
+            self.last_replan = Some(replan_record(ctx, input, out, None));
         }
         let out = self.chosen.unwrap();
         (out.tau, out.delta)
@@ -456,7 +464,7 @@ impl Strategy for DecoSgd {
             let input = ctx.deco_input();
             let out = solve(&input);
             self.current = Some(out);
-            self.last_replan = Some(replan_record(input, out, None));
+            self.last_replan = Some(replan_record(ctx, input, out, None));
         }
         let out = self.current.unwrap();
         (out.tau, out.delta)
@@ -530,7 +538,7 @@ impl Strategy for DecoTwoTier {
                 delta: lan.delta,
                 wan: wan.map(|(_, o)| (o.tau, o.delta)),
             });
-            self.last_replan = Some(replan_record(lan_in, lan, wan));
+            self.last_replan = Some(replan_record(ctx, lan_in, lan, wan));
         }
         self.current.unwrap()
     }

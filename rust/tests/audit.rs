@@ -1,0 +1,265 @@
+//! Plan-audit integration tests (DESIGN.md §Observability → Audit):
+//!
+//! * tiling — on real traced runs, plan windows exactly tile
+//!   `[first_replan, makespan]`: bitwise-contiguous boundaries, realized
+//!   time summing to the clock's total (±1e-9 relative);
+//! * exactness — a constant-trace DeCo run has ≈0 plan bias and ≈0
+//!   hindsight-oracle regret (the closed form is exact there, and the
+//!   noiseless monitor estimates are perfectly calibrated);
+//! * sensitivity — an OU-trace run shows nonzero bias and positive
+//!   cumulative regret (the instantaneous estimate is wrong about the
+//!   window it governs);
+//! * equivalence — the O(1) streaming fold matches the buffered audit
+//!   bit-for-bit, and the audit-annotated Perfetto export is
+//!   byte-identical across pool sizes.
+
+use deco::coordinator::{TrainLoop, TrainParams};
+use deco::deco::DecoInput;
+use deco::metrics::sink::BufferSink;
+use deco::metrics::RunResult;
+use deco::netsim::{BandwidthTrace, Fabric, TraceKind};
+use deco::obs::{
+    audit_events, perfetto_audit_string, BufferTracer, PlanAudit, TraceEvent,
+    TraceSink,
+};
+use deco::optim::Quadratic;
+use deco::strategy::StrategyKind;
+use deco::topo::Topology;
+
+const S_G: f64 = 1e8;
+const T_COMP: f64 = 0.2;
+
+fn params(max_iters: usize) -> TrainParams {
+    TrainParams {
+        gamma: 0.005,
+        max_iters,
+        log_every: 10,
+        t_comp_override: Some(T_COMP),
+        s_g_override: Some(S_G),
+        fallback: DecoInput { s_g: S_G, a: 2e7, b: 0.2, t_comp: T_COMP },
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+fn quad() -> Quadratic {
+    Quadratic::new(256, 4, 1.0, 0.2, 0.3, 0.3, 11)
+}
+
+fn constant_fabric() -> Fabric {
+    Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2)
+}
+
+fn ou_fabric() -> Fabric {
+    Fabric::homogeneous(
+        4,
+        BandwidthTrace::new(TraceKind::Ou {
+            mean_bps: 2e7,
+            sigma_bps: 8e6,
+            theta: 0.2,
+            seed: 3,
+        }),
+        0.2,
+    )
+}
+
+/// Traced DeCo run; returns the consumed loop (for its ground-truth
+/// fabric), the result, and the event buffer.
+fn run_traced(
+    fabric: Fabric,
+    update_every: usize,
+    iters: usize,
+    threads: usize,
+) -> (TrainLoop<Quadratic>, RunResult, Vec<TraceEvent>) {
+    let mut p = params(iters);
+    p.threads = Some(threads);
+    let mut tl = TrainLoop::try_with_topology(
+        quad(),
+        StrategyKind::DecoSgd { update_every }.build(),
+        fabric,
+        Topology::Flat,
+        p,
+    )
+    .unwrap();
+    let mut sink = BufferSink::new();
+    let mut tracer = BufferTracer::new();
+    let mut res = tl.run_traced("audit", &mut sink, &mut tracer).unwrap();
+    res.records = sink.into_records();
+    (tl, res, tracer.into_events())
+}
+
+/// Property: plan windows tile `[first_replan, makespan]` — boundaries
+/// are bitwise-contiguous and realized time sums to the clock's total.
+fn assert_windows_tile(events: &[TraceEvent], res: &RunResult) {
+    let audit = PlanAudit::buffered(events);
+    let ws = audit.windows();
+    assert!(ws.len() >= 2, "need several plan windows, got {}", ws.len());
+    for pair in ws.windows(2) {
+        assert_eq!(
+            pair[0].t_end.to_bits(),
+            pair[1].t_start.to_bits(),
+            "windows {} and {} must share a boundary bitwise",
+            pair[0].index,
+            pair[1].index
+        );
+    }
+    let s = audit.summary();
+    assert_eq!(s.first_t, 0.0, "the first re-plan fires at t=0");
+    assert!(
+        (s.last_t - res.total_time).abs() <= 1e-9 * res.total_time,
+        "last window closes at {} vs makespan {}",
+        s.last_t,
+        res.total_time
+    );
+    let realized_sum: f64 = ws.iter().map(|w| w.t_end - w.t_start).sum();
+    let span = s.last_t - s.first_t;
+    assert!(
+        (realized_sum - span).abs() <= 1e-9 * span,
+        "realized sum {realized_sum} vs audited span {span}"
+    );
+    assert!(
+        (s.real_time - span).abs() <= 1e-9 * span,
+        "summary real_time {} vs audited span {span}",
+        s.real_time
+    );
+    let iters: usize = ws.iter().map(|w| w.iters).sum();
+    assert_eq!(iters, res.total_iters, "every tick belongs to one window");
+}
+
+#[test]
+fn windows_tile_the_run_on_constant_and_ou_traces() {
+    let (_, res, events) = run_traced(constant_fabric(), 20, 60, 1);
+    assert_windows_tile(&events, &res);
+    let (_, res, events) = run_traced(ou_fabric(), 15, 90, 1);
+    assert_windows_tile(&events, &res);
+}
+
+#[test]
+fn constant_trace_has_near_zero_bias_and_regret() {
+    let (tl, _, events) = run_traced(constant_fabric(), 20, 60, 1);
+    let report = audit_events(&events, tl.fabric());
+    let s = &report.summary;
+    assert!(s.windows >= 2);
+    // steady-state windows are exact: the solver's closed form equals
+    // the realized round bit-for-bit once the pipeline is filled
+    for w in &report.windows[1..] {
+        assert!(
+            w.bias().abs() <= 1e-6 * w.realized(),
+            "window {} bias {} on a constant trace",
+            w.index,
+            w.bias()
+        );
+    }
+    // only window 0 carries the pipeline-fill transient (b + tx once)
+    assert!(
+        s.bias().abs() <= 0.05 * s.mean_realized(),
+        "run-level bias {} vs realized {}",
+        s.bias(),
+        s.mean_realized()
+    );
+    // the executed plan IS the hindsight oracle here
+    assert!(
+        report.regret.cumulative >= -1e-6,
+        "regret can't be meaningfully negative: {}",
+        report.regret.cumulative
+    );
+    assert!(
+        report.regret.cumulative <= 0.05 * s.real_time,
+        "cumulative regret {} vs realized {}",
+        report.regret.cumulative,
+        s.real_time
+    );
+    // noiseless estimates on a constant trace are perfectly calibrated
+    // homogeneous noiseless workers share one timeline class, hence one
+    // estimator slot — the calibration reports at class granularity
+    let cal = &report.calibration;
+    assert!(cal.all.samples > 0, "calibration needs estimator snapshots");
+    assert_eq!(cal.links.len(), 1, "one row per estimator slot");
+    for row in cal.links.iter().chain(std::iter::once(&cal.all)) {
+        assert!(
+            row.bias.abs() <= 1e-6 * row.mean_true,
+            "link {} bias {}",
+            row.worker,
+            row.bias
+        );
+        assert_eq!(row.coverage, 1.0);
+        assert_eq!(row.band_coverage, 1.0);
+        assert!(row.lat_bias.abs() <= 1e-9);
+    }
+}
+
+#[test]
+fn ou_trace_shows_bias_and_positive_regret() {
+    let (tl, _, events) = run_traced(ou_fabric(), 15, 90, 1);
+    let report = audit_events(&events, tl.fabric());
+    let s = &report.summary;
+    assert!(s.windows >= 3);
+    assert!(
+        s.bias().abs() > 1e-6,
+        "an OU trace must show nonzero plan bias, got {}",
+        s.bias()
+    );
+    assert!(s.rmse() > 0.0);
+    assert!(
+        report.regret.cumulative > 0.0,
+        "hindsight regret must be positive under a moving trace, got {}",
+        report.regret.cumulative
+    );
+    // the estimator is wrong about the window ahead — nonzero RMSE
+    assert!(report.calibration.all.samples > 0);
+    assert!(report.calibration.all.rmse > 0.0);
+}
+
+#[test]
+fn streaming_fold_matches_buffered_audit_bitwise() {
+    for (fabric, e, n) in
+        [(constant_fabric(), 20, 60), (ou_fabric(), 15, 90)]
+    {
+        let (_, _, events) = run_traced(fabric, e, n, 1);
+        let buffered = PlanAudit::buffered(&events);
+        let mut streaming = PlanAudit::streaming();
+        for ev in &events {
+            streaming.record(ev);
+        }
+        streaming.finish();
+        assert_eq!(streaming.summary(), buffered.summary());
+        let (a, b) = (streaming.summary(), buffered.summary());
+        for (x, y) in [
+            (a.pred_time, b.pred_time),
+            (a.real_time, b.real_time),
+            (a.bias_sq_sum, b.bias_sq_sum),
+            (a.worst_bias, b.worst_bias),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "fold fields must be bitwise");
+        }
+    }
+}
+
+#[test]
+fn audit_perfetto_export_is_identical_across_pool_sizes() {
+    let (tl, _, serial) = run_traced(ou_fabric(), 15, 60, 1);
+    let (_, _, pooled) = run_traced(ou_fabric(), 15, 60, 4);
+    let a = perfetto_audit_string(&serial, tl.fabric());
+    let b = perfetto_audit_string(&pooled, tl.fabric());
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "audit trace bytes must not depend on the pool size");
+    assert!(
+        a.contains("round s/iter") && a.contains("bandwidth Mbps"),
+        "audit export must carry the counter tracks"
+    );
+    // counter samples live on the control-plane process
+    assert!(a.contains("\"ph\":\"C\""), "counter events must be present");
+}
+
+#[test]
+fn audit_report_renderings_are_deterministic() {
+    let (tl, _, events) = run_traced(ou_fabric(), 15, 60, 1);
+    let x = audit_events(&events, tl.fabric());
+    let y = audit_events(&events, tl.fabric());
+    assert_eq!(x.csv(), y.csv());
+    assert_eq!(x.table(), y.table());
+    assert_eq!(x.json().to_string(), y.json().to_string());
+    assert!(x.csv().starts_with("window,iter_first,iters,"));
+    // one CSV row per window plus the header
+    assert_eq!(x.csv().lines().count(), x.windows.len() + 1);
+}

@@ -24,6 +24,10 @@
 #                         (NullSink) vs fully traced at n in {16, 1k}
 #                         (the null series must stay inside the untraced
 #                         tick envelope — the zero-overhead contract)
+#   BENCH_audit.json    — clock hot-loop tick bare vs with the O(1)
+#                         streaming plan-audit fold at n in {16, 1k}
+#                         (the fold series must stay inside the untraced
+#                         tick envelope)
 #
 # scripts/bench_check.sh gates the BENCH_*.json headlines against the
 # checked-in perf_budgets.json ceilings.
@@ -48,7 +52,8 @@ trace_jsonl="$(mktemp)"
 bond_jsonl="$(mktemp)"
 scale_jsonl="$(mktemp)"
 obs_jsonl="$(mktemp)"
-trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl" "$bond_jsonl" "$scale_jsonl" "$obs_jsonl"' EXIT
+audit_jsonl="$(mktemp)"
+trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl" "$bond_jsonl" "$scale_jsonl" "$obs_jsonl" "$audit_jsonl"' EXIT
 
 consolidate() {
   # consolidate <jsonl> <out.json>
@@ -98,3 +103,7 @@ consolidate "$scale_jsonl" BENCH_scale.json
 echo "### cargo bench --bench bench_obs"
 DECO_BENCH_JSON="$obs_jsonl" cargo bench --bench bench_obs
 consolidate "$obs_jsonl" BENCH_obs.json
+
+echo "### cargo bench --bench bench_audit"
+DECO_BENCH_JSON="$audit_jsonl" cargo bench --bench bench_audit
+consolidate "$audit_jsonl" BENCH_audit.json
