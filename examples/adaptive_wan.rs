@@ -28,6 +28,7 @@ fn main() -> Result<()> {
         fabric: FabricSpec::Straggler { frac: 0.5, mult: 2.0 },
         topology: deco::config::TopologySpec::Flat,
         bonds: Vec::new(),
+        losses: Vec::new(),
     };
     let fabric = net.build_fabric(4)?;
     let (a_bot, b_bot) = fabric.bottleneck(0.0);

@@ -3,9 +3,12 @@
 //! wire two regions into a two-tier topology and show the per-tier
 //! plan (DESIGN.md §Topology), ride a 2-path bonded worker through a
 //! scripted path outage (DESIGN.md §Bonding), trace a 2-worker run and
-//! print where its time went (DESIGN.md §Observability), then audit a
+//! print where its time went (DESIGN.md §Observability), audit a
 //! run on a moving OU trace — predicted vs realized round times,
-//! hindsight-oracle regret, and estimator calibration (§Audit).
+//! hindsight-oracle regret, and estimator calibration (§Audit) — and
+//! finally push the same pair of workers through a scripted message-loss
+//! burst and watch retransmissions surface as their own phase in the
+//! stall-attribution table (§Robustness).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -17,6 +20,7 @@ use deco::config::{
 };
 use deco::coordinator::{TrainLoop, TrainParams, VirtualClock};
 use deco::deco::{solve, DecoInput};
+use deco::elastic::{ChurnEvent, ChurnSpec, TimedEvent};
 use deco::exp::ExpEnv;
 use deco::netsim::{
     BandwidthTrace, Bond, DegradeWindow, Fabric, Link, TraceKind,
@@ -97,6 +101,7 @@ fn main() -> Result<()> {
             region_wan: Vec::new(),
         },
         bonds: Vec::new(),
+        losses: Vec::new(),
     };
     let fabric = net.build_fabric(workers)?;
     let topology = net.build_topology(workers, &fabric)?;
@@ -279,6 +284,54 @@ fn main() -> Result<()> {
         "\nplan audit for a 2-worker run on an OU trace (mean 20 Mbps, \
          sigma 8 Mbps):\n{}",
         report.table()
+    );
+
+    // 7. Lossy transport (DESIGN.md §Robustness): the same pair of
+    // workers, but a scripted burst makes worker 0's link drop 60% of
+    // its messages from t = 3 s for 40 s. Lost gradients are
+    // retransmitted with exponential backoff, the loss-aware planner
+    // deflates its goodput estimate and sets an aggregation deadline,
+    // and the stall-attribution report grows a `retransmit` phase so
+    // the episode is visible in the time budget. `repro exp lossy`
+    // runs the full sweep this is a slice of.
+    let lossy_cfg = ExperimentConfig {
+        strategy: StrategyKind::DecoLossy { update_every: 20, quantile: 0.9 },
+        network: NetworkConfig::homogeneous(
+            TraceKind::Constant { bps: 2e7 },
+            0.2,
+        ),
+        stop: StopConfig {
+            max_iters: 80,
+            loss_target: None,
+            max_virtual_time: None,
+        },
+        churn: ChurnSpec::Scripted {
+            events: vec![TimedEvent {
+                t: 3.0,
+                event: ChurnEvent::LossBurst {
+                    worker: 0,
+                    rate: 0.6,
+                    secs: 40.0,
+                },
+            }],
+        },
+        ..audit_cfg
+    };
+    let (res, events) = ExpEnv::run_traced(&lossy_cfg)?;
+    let mut attr = Attribution::new();
+    for ev in &events {
+        if let TraceEvent::Tick(tt) = ev {
+            attr.record_tick(tt);
+        }
+    }
+    println!(
+        "\nstall attribution with a scripted loss burst (worker 0 drops \
+         60% of messages 3 s..43 s; {} iters, {:.1}s makespan, {:.1}% of \
+         it spent retransmitting):\n{}",
+        res.total_iters,
+        attr.makespan(),
+        attr.retransmit_fraction() * 100.0,
+        attr.table()
     );
     Ok(())
 }

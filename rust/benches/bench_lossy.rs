@@ -1,0 +1,86 @@
+//! Lossy-transport pricing overhead (DESIGN.md §Robustness): per-tick
+//! cost of the clock hot loop when every worker carries a message-loss
+//! process — attempt-by-attempt retransmission pricing with exponential
+//! backoff, i.i.d. and bursty Gilbert–Elliott — and when a binding
+//! aggregation deadline adds the cut scan, against the lossless baseline
+//! on the same straggler fabric. Lossy workers price as singleton
+//! timeline classes, so the lossy series is O(n · attempts) by design;
+//! the lossless baseline must stay inside the class-engine envelope.
+//!
+//! `scripts/bench.sh` consolidates these into `BENCH_lossy.json`.
+
+use deco::coordinator::VirtualClock;
+use deco::netsim::{BandwidthTrace, Fabric, LossProcess};
+use deco::util::bench::{black_box, Bench};
+
+/// Rebuild the clock periodically so the TC history stays bounded while
+/// the bench harness spins millions of ticks.
+const RESET_EVERY: usize = 100_000;
+const T_COMP: f64 = 0.05;
+
+fn fabric(n: usize, loss: Option<&LossProcess>) -> Fabric {
+    // straggler keeps two live classes in the lossless baseline; with
+    // loss every worker is a singleton class (per-worker draws)
+    let mut f = Fabric::with_straggler(
+        n,
+        BandwidthTrace::constant(1e8),
+        0.05,
+        0.25,
+        2.0,
+    );
+    if let Some(p) = loss {
+        for w in 0..n {
+            f.set_loss(w, p.clone());
+        }
+    }
+    f
+}
+
+fn bench_tick(
+    b: &Bench,
+    name: &str,
+    n: usize,
+    loss: Option<&LossProcess>,
+    deadline: Option<f64>,
+) {
+    let mk = || {
+        let mut c = VirtualClock::new(fabric(n, loss));
+        c.set_deadline(deadline);
+        c
+    };
+    let mut clock = mk();
+    let mut k = 0usize;
+    b.bench(name, || {
+        if clock.iters() >= RESET_EVERY {
+            clock = mk();
+        }
+        k += 1;
+        let bits = 1_000_000 + (k as u64 % 7) * 250_000;
+        let tick = clock.tick(T_COMP, k % 4, bits);
+        black_box(tick.tc);
+    });
+}
+
+fn main() {
+    println!(
+        "== bench_lossy (retransmission pricing + deadline cut vs \
+         lossless clock hot loop) =="
+    );
+    let b = Bench::new("lossy");
+    let iid = LossProcess::iid(0.3, 0xBE);
+    let bursty = LossProcess::gilbert_elliott(0.02, 0.9, 0.1, 15.0, 0xBE);
+    for &n in &[4usize, 16] {
+        bench_tick(&b, &format!("tick/lossless_n{n}"), n, None, None);
+        bench_tick(&b, &format!("tick/iid30_n{n}"), n, Some(&iid), None);
+        bench_tick(&b, &format!("tick/bursty_n{n}"), n, Some(&bursty), None);
+        // a deadline tight enough to bind on retransmit rounds, so the
+        // cut scan + late-set bookkeeping is actually on the path
+        bench_tick(
+            &b,
+            &format!("tick/iid30_deadline_n{n}"),
+            n,
+            Some(&iid),
+            Some(0.1),
+        );
+    }
+}

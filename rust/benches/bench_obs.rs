@@ -56,6 +56,7 @@ fn bench_tick(b: &Bench, name: &str, n: usize, tracer: &mut dyn TraceSink) {
                             wt.tc,
                             tc,
                         ),
+                        retx_secs: wt.retx_secs,
                         paths: Vec::new(),
                     }
                 })

@@ -9,7 +9,8 @@
 use crate::deco::DecoInput;
 use crate::elastic::{ChurnEvent, ChurnSpec, DrainPolicy, TimedEvent};
 use crate::netsim::{
-    BandwidthTrace, Bond, DegradeWindow, Fabric, Link, TraceKind,
+    BandwidthTrace, Bond, DegradeWindow, Fabric, Link, LossKind, LossProcess,
+    TraceKind,
 };
 use crate::strategy::StrategyKind;
 use crate::topo::{elect, RegionTopo, Topology};
@@ -86,6 +87,19 @@ pub struct BondSpec {
     pub paths: Vec<PathSpec>,
 }
 
+/// A lossy WAN attachment (DESIGN.md §Robustness): `worker`'s messages
+/// are dropped per `kind` and retransmitted on an exponential backoff
+/// with base timeout `rto_s`. Legacy configs (no `losses` key) build
+/// exactly the lossless fabric they always did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LossSpec {
+    pub worker: usize,
+    pub kind: LossKind,
+    pub seed: u64,
+    /// retransmission timeout base (s); `None` = the netsim default
+    pub rto_s: Option<f64>,
+}
+
 /// One region's own WAN link, overriding the shared two-tier WAN
 /// trace/latency (DESIGN.md §Topology).
 #[derive(Clone, Debug, PartialEq)]
@@ -126,6 +140,9 @@ pub struct NetworkConfig {
     /// (DESIGN.md §Bonding); empty = every worker single-path, exactly the
     /// pre-bonding behavior
     pub bonds: Vec<BondSpec>,
+    /// lossy WAN attachments applied last (DESIGN.md §Robustness); empty =
+    /// every worker lossless, exactly the pre-loss behavior
+    pub losses: Vec<LossSpec>,
 }
 
 impl NetworkConfig {
@@ -137,6 +154,7 @@ impl NetworkConfig {
             fabric: FabricSpec::Homogeneous,
             topology: TopologySpec::Flat,
             bonds: Vec::new(),
+            losses: Vec::new(),
         }
     }
 
@@ -235,6 +253,58 @@ impl NetworkConfig {
                 ));
             }
             fabric.set_bond(b.worker, Bond::new(links));
+        }
+        for (li, l) in self.losses.iter().enumerate() {
+            if l.worker >= n {
+                return Err(anyhow!(
+                    "loss spec {li} names worker {} but the run has {n}",
+                    l.worker
+                ));
+            }
+            if self.losses[..li].iter().any(|o| o.worker == l.worker) {
+                return Err(anyhow!(
+                    "worker {} appears in more than one loss spec",
+                    l.worker
+                ));
+            }
+            let in_unit = |v: f64| v.is_finite() && (0.0..=1.0).contains(&v);
+            let mut proc = match l.kind {
+                LossKind::Iid { p } => {
+                    if !in_unit(p) {
+                        return Err(anyhow!(
+                            "loss spec {li} needs p in [0, 1] (got {p})"
+                        ));
+                    }
+                    LossProcess::iid(p, l.seed)
+                }
+                LossKind::GilbertElliott { p_good, p_bad, pi_bad, dwell_s } => {
+                    if !(in_unit(p_good) && in_unit(p_bad) && in_unit(pi_bad))
+                    {
+                        return Err(anyhow!(
+                            "loss spec {li} needs p_good/p_bad/pi_bad in \
+                             [0, 1] (got {p_good}/{p_bad}/{pi_bad})"
+                        ));
+                    }
+                    if !(dwell_s.is_finite() && dwell_s > 0.0) {
+                        return Err(anyhow!(
+                            "loss spec {li} needs finite dwell_s > 0 \
+                             (got {dwell_s})"
+                        ));
+                    }
+                    LossProcess::gilbert_elliott(
+                        p_good, p_bad, pi_bad, dwell_s, l.seed,
+                    )
+                }
+            };
+            if let Some(rto) = l.rto_s {
+                if !(rto.is_finite() && rto > 0.0) {
+                    return Err(anyhow!(
+                        "loss spec {li} needs finite rto_s > 0 (got {rto})"
+                    ));
+                }
+                proc = proc.with_rto(rto);
+            }
+            fabric.set_loss(l.worker, proc);
         }
         Ok(fabric)
     }
@@ -353,6 +423,41 @@ impl NetworkConfig {
                 })),
             ));
         }
+        if !self.losses.is_empty() {
+            pairs.push((
+                "losses",
+                Json::arr(self.losses.iter().map(|l| {
+                    let mut lp = vec![(
+                        "worker",
+                        Json::num(l.worker as f64),
+                    )];
+                    match l.kind {
+                        LossKind::Iid { p } => {
+                            lp.push(("kind", Json::str("iid")));
+                            lp.push(("p", Json::num(p)));
+                        }
+                        LossKind::GilbertElliott {
+                            p_good,
+                            p_bad,
+                            pi_bad,
+                            dwell_s,
+                        } => {
+                            lp.push(("kind", Json::str("gilbert_elliott")));
+                            lp.push(("p_good", Json::num(p_good)));
+                            lp.push(("p_bad", Json::num(p_bad)));
+                            lp.push(("pi_bad", Json::num(pi_bad)));
+                            lp.push(("dwell_s", Json::num(dwell_s)));
+                        }
+                    }
+                    // string, not number: see the churn Random seed note
+                    lp.push(("seed", Json::str(l.seed.to_string())));
+                    if let Some(rto) = l.rto_s {
+                        lp.push(("rto_s", Json::num(rto)));
+                    }
+                    Json::obj(lp)
+                })),
+            ));
+        }
         Json::obj(pairs)
     }
 
@@ -387,6 +492,45 @@ impl NetworkConfig {
                 bonds
             }
         };
+        let losses = match j.get("losses") {
+            None => Vec::new(),
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("'losses' not an array"))?;
+                let mut losses = Vec::with_capacity(arr.len());
+                for l in arr {
+                    let kind = match l.req_str("kind").map_err(err)? {
+                        "iid" => LossKind::Iid {
+                            p: l.req_f64("p").map_err(err)?,
+                        },
+                        "gilbert_elliott" => LossKind::GilbertElliott {
+                            p_good: l.req_f64("p_good").map_err(err)?,
+                            p_bad: l.req_f64("p_bad").map_err(err)?,
+                            pi_bad: l.req_f64("pi_bad").map_err(err)?,
+                            dwell_s: l.req_f64("dwell_s").map_err(err)?,
+                        },
+                        other => {
+                            return Err(anyhow!(
+                                "unknown loss kind '{other}'"
+                            ))
+                        }
+                    };
+                    losses.push(LossSpec {
+                        worker: l.req_usize("worker").map_err(err)?,
+                        kind,
+                        seed: seed_from_json(l, "seed")?,
+                        rto_s: match l.get("rto_s") {
+                            None => None,
+                            Some(v) => Some(v.as_f64().ok_or_else(|| {
+                                anyhow!("'rto_s' must be a number")
+                            })?),
+                        },
+                    });
+                }
+                losses
+            }
+        };
         Ok(Self {
             trace: trace_from_json(j.req("trace").map_err(err)?)?,
             latency_s: j.req_f64("latency_s").map_err(err)?,
@@ -399,6 +543,7 @@ impl NetworkConfig {
                 None => TopologySpec::Flat,
             },
             bonds,
+            losses,
         })
     }
 }
@@ -706,6 +851,12 @@ pub fn churn_to_json(c: &ChurnSpec) -> Json {
                             pairs.push(("frac", Json::num(*frac)));
                             pairs.push(("secs", Json::num(*secs)));
                         }
+                        ChurnEvent::LossBurst { worker, rate, secs } => {
+                            pairs.push(("event", Json::str("loss_burst")));
+                            pairs.push(("worker", Json::num(*worker as f64)));
+                            pairs.push(("rate", Json::num(*rate)));
+                            pairs.push(("secs", Json::num(*secs)));
+                        }
                     }
                     Json::obj(pairs)
                 })),
@@ -790,6 +941,11 @@ pub fn churn_from_json(j: &Json) -> Result<ChurnSpec> {
                         frac: e.req_f64("frac").map_err(err)?,
                         secs: e.req_f64("secs").map_err(err)?,
                     },
+                    "loss_burst" => ChurnEvent::LossBurst {
+                        worker,
+                        rate: e.req_f64("rate").map_err(err)?,
+                        secs: e.req_f64("secs").map_err(err)?,
+                    },
                     other => {
                         return Err(anyhow!("unknown churn event '{other}'"))
                     }
@@ -844,6 +1000,11 @@ pub fn strategy_to_json(s: &StrategyKind) -> Json {
             ("kind", Json::str("deco_two_tier")),
             ("update_every", Json::num(*update_every as f64)),
         ]),
+        StrategyKind::DecoLossy { update_every, quantile } => Json::obj(vec![
+            ("kind", Json::str("deco_lossy")),
+            ("update_every", Json::num(*update_every as f64)),
+            ("quantile", Json::num(*quantile)),
+        ]),
     }
 }
 
@@ -867,6 +1028,18 @@ pub fn strategy_from_json(j: &Json) -> Result<StrategyKind> {
         "deco_event" => StrategyKind::DecoEvent {
             update_every: j.req_usize("update_every").map_err(err)?,
         },
+        "deco_lossy" => {
+            let quantile = j.req_f64("quantile").map_err(err)?;
+            if !(quantile.is_finite() && 0.0 < quantile && quantile < 1.0) {
+                return Err(anyhow!(
+                    "deco_lossy needs quantile in (0, 1) (got {quantile})"
+                ));
+            }
+            StrategyKind::DecoLossy {
+                update_every: j.req_usize("update_every").map_err(err)?,
+                quantile,
+            }
+        }
         "deco_two_tier" => StrategyKind::DecoTwoTier {
             update_every: j.req_usize("update_every").map_err(err)?,
         },
@@ -1022,6 +1195,7 @@ pub fn wan_network(mean_bps: f64, latency_s: f64, seed: u64) -> NetworkConfig {
         fabric: FabricSpec::Homogeneous,
         topology: TopologySpec::Flat,
         bonds: Vec::new(),
+        losses: Vec::new(),
     }
 }
 
@@ -1079,10 +1253,18 @@ mod tests {
             StrategyKind::DecoSgd { update_every: 5 },
             StrategyKind::DecoEvent { update_every: 7 },
             StrategyKind::DecoTwoTier { update_every: 9 },
+            StrategyKind::DecoLossy { update_every: 11, quantile: 0.9 },
         ] {
             let j = strategy_to_json(&s);
             assert_eq!(strategy_from_json(&j).unwrap(), s);
         }
+        // a quantile outside (0, 1) is rejected at parse time, before the
+        // builder's assert could panic mid-run
+        let bad = strategy_to_json(&StrategyKind::DecoLossy {
+            update_every: 11,
+            quantile: 1.0,
+        });
+        assert!(strategy_from_json(&bad).is_err());
     }
 
     #[test]
@@ -1126,6 +1308,14 @@ mod tests {
                             path: 0,
                             frac: 0.4,
                             secs: 12.0,
+                        },
+                    },
+                    TimedEvent {
+                        t: 150.0,
+                        event: ChurnEvent::LossBurst {
+                            worker: 1,
+                            rate: 0.8,
+                            secs: 25.0,
                         },
                     },
                 ],
@@ -1267,6 +1457,7 @@ mod tests {
             fabric: FabricSpec::Homogeneous,
             topology: TopologySpec::Flat,
             bonds: Vec::new(),
+            losses: Vec::new(),
         };
         assert_eq!(c.nominal_bps(), 2e8);
         // scaled traces report the scaled nominal
@@ -1549,6 +1740,99 @@ mod tests {
         )
         .unwrap();
         assert!(NetworkConfig::from_json(&legacy).unwrap().bonds.is_empty());
+    }
+
+    #[test]
+    fn losses_roundtrip_and_build_into_the_fabric() {
+        let mut c = wan_network(1e8, 0.2, 1);
+        // no losses: the key is omitted and legacy configs parse to empty
+        assert!(!c.to_json().to_string_pretty().contains("losses"));
+        let legacy = Json::parse(
+            "{\"trace\": {\"kind\": \"constant\", \"bps\": 1e8}, \
+             \"latency_s\": 0.2}",
+        )
+        .unwrap();
+        assert!(NetworkConfig::from_json(&legacy).unwrap().losses.is_empty());
+
+        c.losses = vec![
+            LossSpec {
+                worker: 0,
+                kind: LossKind::Iid { p: 0.3 },
+                seed: 42,
+                rto_s: Some(0.1),
+            },
+            LossSpec {
+                worker: 2,
+                kind: LossKind::GilbertElliott {
+                    p_good: 0.02,
+                    p_bad: 0.9,
+                    pi_bad: 0.25,
+                    dwell_s: 20.0,
+                },
+                seed: u64::MAX, // string-seed path must stay lossless
+                rto_s: None,
+            },
+        ];
+        let back = NetworkConfig::from_json(
+            &Json::parse(&c.to_json().to_string_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.losses, c.losses);
+
+        let fabric = c.build_fabric(4).unwrap();
+        let p0 = fabric.loss(0).expect("worker 0 lossy");
+        assert_eq!(p0.rate_at(0, 5.0), 0.3);
+        assert_eq!(p0.rto_s(), 0.1);
+        assert!(fabric.loss(2).is_some());
+        assert!(fabric.loss(1).is_none());
+        // a p = 0 i.i.d. spec builds the lossless fabric (structural no-op)
+        let mut zero = wan_network(1e8, 0.2, 1);
+        zero.losses = vec![LossSpec {
+            worker: 1,
+            kind: LossKind::Iid { p: 0.0 },
+            seed: 1,
+            rto_s: None,
+        }];
+        assert!(zero.build_fabric(4).unwrap().loss(1).is_none());
+
+        // invalid specs error instead of panicking
+        for (worker, kind, rto_s) in [
+            (9, LossKind::Iid { p: 0.3 }, None),
+            (0, LossKind::Iid { p: 1.5 }, None),
+            (0, LossKind::Iid { p: 0.3 }, Some(0.0)),
+            (
+                0,
+                LossKind::GilbertElliott {
+                    p_good: 0.02,
+                    p_bad: 0.9,
+                    pi_bad: 0.25,
+                    dwell_s: 0.0,
+                },
+                None,
+            ),
+        ] {
+            let mut bad = wan_network(1e8, 0.2, 1);
+            bad.losses = vec![LossSpec { worker, kind, seed: 1, rto_s }];
+            assert!(bad.build_fabric(4).is_err());
+        }
+        // duplicate worker
+        let mut dup = wan_network(1e8, 0.2, 1);
+        dup.losses = vec![
+            LossSpec {
+                worker: 0,
+                kind: LossKind::Iid { p: 0.3 },
+                seed: 1,
+                rto_s: None,
+            },
+            LossSpec {
+                worker: 0,
+                kind: LossKind::Iid { p: 0.4 },
+                seed: 2,
+                rto_s: None,
+            },
+        ];
+        let e = dup.build_fabric(4).unwrap_err().to_string();
+        assert!(e.contains("more than one loss spec"), "{e}");
     }
 
     #[test]

@@ -32,7 +32,7 @@
 use std::sync::Arc;
 
 use super::arrival::{ArrivalTree, EMPTY_KEY};
-use crate::netsim::{Bond, Fabric, Link};
+use crate::netsim::{Bond, Fabric, Link, LossProcess};
 use crate::obs::ClockEvent;
 use crate::topo::{elect_eligible, RegionTopo, Topology};
 
@@ -90,6 +90,9 @@ struct ClassState {
     link: Link,
     /// multi-path bond (forces a singleton class)
     bond: Option<Arc<Bond>>,
+    /// message-loss process (forces a singleton class — loss draws key on
+    /// the worker id, so lossy timelines are genuinely per-worker)
+    loss: Option<Arc<LossProcess>>,
     /// ascending member worker ids; never empty
     members: Vec<u32>,
     /// members transmit this tick (classes split on mixed masks, so the
@@ -119,11 +122,17 @@ struct ClassState {
 }
 
 impl ClassState {
-    fn new(link: Link, bond: Option<Arc<Bond>>, worker: u32) -> Self {
+    fn new(
+        link: Link,
+        bond: Option<Arc<Bond>>,
+        loss: Option<Arc<LossProcess>>,
+        worker: u32,
+    ) -> Self {
         let k = bond.as_ref().map_or(0, |b| b.k());
         Self {
             link,
             bond,
+            loss,
             members: vec![worker],
             active: true,
             sent_last: false,
@@ -160,6 +169,15 @@ pub struct VirtualClock {
     ts_prev: f64,
     /// bounded ring over the sync-arrival history TC_k
     tc: TcRing,
+    /// aggregation deadline D (DESIGN.md §Robustness): the sync of
+    /// iteration k completes at `max(fastest, min(slowest, TS_k + D))`
+    /// instead of waiting for the slowest arrival; `None` = wait-for-all
+    /// (bit-identical — the cut logic never runs)
+    deadline: Option<f64>,
+    /// workers whose arrival missed the last tick's deadline cut (their
+    /// gradients are absorbed next round by the pipeline); always empty
+    /// while `deadline` is `None`
+    late_buf: Vec<u32>,
     /// lazily materialized per-worker views (`worker_ticks`/`tx_totals`)
     worker_last: Vec<WorkerTick>,
     tx_cache: Vec<f64>,
@@ -182,6 +200,9 @@ pub struct Tick {
     pub tc: f64,
     /// pure transmission duration of the slowest-arriving worker's message
     pub tx_secs: f64,
+    /// retransmission seconds (failed attempts + backoff gaps) of the
+    /// gating worker's message; 0 on lossless runs
+    pub retx_secs: f64,
 }
 
 /// One worker's timeline entry for the last tick.
@@ -191,8 +212,16 @@ pub struct WorkerTick {
     pub tm: f64,
     /// arrival TC_k^i = TM_k^i + b_i
     pub tc: f64,
-    /// pure transmission duration of this worker's message
+    /// pure transmission duration of this worker's message (the *final*
+    /// attempt's wire time under loss, so `bits / tx_secs` stays the
+    /// link's true rate for the bandwidth estimators)
     pub tx_secs: f64,
+    /// seconds lost to failed attempts + backoff gaps before the final
+    /// attempt started (0 on lossless transfers)
+    pub retx_secs: f64,
+    /// transmission attempts (1 = first try landed; 0 = no transfer
+    /// this tick, e.g. masked out)
+    pub attempts: u32,
 }
 
 /// One path's timeline entry for a bonded worker's last tick
@@ -252,7 +281,39 @@ fn tick_bonded(
         tm = tm.max(sched.tx_end[p]);
         tx_secs += sched.tx_secs[p];
     }
-    WorkerTick { tm, tc: sched.arrival, tx_secs }
+    WorkerTick { tm, tc: sched.arrival, tx_secs, retx_secs: 0.0, attempts: 1 }
+}
+
+/// The lossy counterpart of [`tick_bonded`]: the whole payload is
+/// retransmitted on loss (DESIGN.md §Robustness), so the final attempt's
+/// water-filling schedule is what lands in the per-path timelines.
+fn tick_bonded_lossy(
+    bond: &Bond,
+    loss: &LossProcess,
+    worker: u32,
+    msg: u64,
+    path_tm_prev: &mut [f64],
+    path_last: &mut [PathTick],
+    ts: f64,
+    bits: u64,
+) -> WorkerTick {
+    let starts: Vec<f64> =
+        path_tm_prev.iter().map(|&tm| tm.max(ts)).collect();
+    let (sched, attempts, retx_secs) =
+        loss.price_bonded(bond, worker, msg, &starts, bits);
+    let mut tm = f64::NEG_INFINITY;
+    let mut tx_secs = 0.0;
+    for p in 0..bond.k() {
+        path_tm_prev[p] = sched.tx_end[p];
+        path_last[p] = PathTick {
+            tm: sched.tx_end[p],
+            bits: sched.bits[p],
+            tx_secs: sched.tx_secs[p],
+        };
+        tm = tm.max(sched.tx_end[p]);
+        tx_secs += sched.tx_secs[p];
+    }
+    WorkerTick { tm, tc: sched.arrival, tx_secs, retx_secs, attempts }
 }
 
 /// One region's timeline entry for the last two-tier tick
@@ -306,11 +367,14 @@ impl VirtualClock {
         let mut map: Vec<Option<u32>> =
             vec![None; fabric.link_class_count()];
         for w in 0..n {
-            if let Some(bond) = fabric.bond_arc(w) {
+            let loss = fabric.loss_arc(w).cloned();
+            if fabric.bond_arc(w).is_some() || loss.is_some() {
+                // bonded and lossy workers price per-worker: singleton
                 class_of[w] = classes.len() as u32;
                 classes.push(ClassState::new(
                     fabric.link(w).clone(),
-                    Some(bond.clone()),
+                    fabric.bond_arc(w).cloned(),
+                    loss,
                     w as u32,
                 ));
                 continue;
@@ -328,6 +392,7 @@ impl VirtualClock {
                     classes.push(ClassState::new(
                         fabric.link(w).clone(),
                         None,
+                        None,
                         w as u32,
                     ));
                 }
@@ -344,6 +409,8 @@ impl VirtualClock {
             tree,
             ts_prev: 0.0,
             tc: TcRing::new(),
+            deadline: None,
+            late_buf: Vec::new(),
             worker_last: vec![WorkerTick::default(); n],
             tx_cache: vec![0.0; n],
             views_dirty: false,
@@ -483,6 +550,36 @@ impl VirtualClock {
     /// counterpart of [`Self::tx_totals`]).
     pub fn wan_tx_totals(&self) -> &[f64] {
         self.two_tier.as_ref().map_or(&[], |tt| &tt.wan_tx_total)
+    }
+
+    /// Set the aggregation deadline D (DESIGN.md §Robustness): each sync
+    /// completes at `max(fastest, min(slowest, TS_k + D))` — the clamp to
+    /// the fastest arrival guarantees at least one gradient lands, so an
+    /// absurdly tight D degrades to "take whatever arrived first", never
+    /// to an empty aggregation. `None` (the default) is wait-for-all,
+    /// bit-identical to the pre-deadline clock. Infinite or non-positive
+    /// deadlines are rejected to keep `None` the one spelling of
+    /// wait-for-all.
+    pub fn set_deadline(&mut self, deadline: Option<f64>) {
+        if let Some(d) = deadline {
+            assert!(d > 0.0 && d.is_finite(), "deadline {d} must be finite > 0");
+        }
+        self.deadline = deadline;
+        if deadline.is_none() {
+            self.late_buf.clear();
+        }
+    }
+
+    pub fn deadline(&self) -> Option<f64> {
+        self.deadline
+    }
+
+    /// Workers whose arrival missed the last tick's deadline cut, in
+    /// ascending worker order. Their gradients were *not* aggregated this
+    /// round; the pipeline absorbs them next round at +1 staleness
+    /// (DESIGN.md §Robustness). Empty on wait-for-all runs.
+    pub fn late_workers(&self) -> &[u32] {
+        &self.late_buf
     }
 
     /// Enable/disable the structural event log (class splits, aggregator
@@ -783,26 +880,58 @@ impl VirtualClock {
     ) -> Tick {
         self.reconcile_mask(active);
         let ts = self.next_ts(t_comp, tau);
+        // 0-based message id of this iteration: the loss draws key on it,
+        // so pricing is identical across engines and evaluation orders
+        let msg = self.tc.len() as u64;
         for c in 0..self.classes.len() {
             let cls = &mut self.classes[c];
             if !cls.active {
                 continue;
             }
             let wt = if let Some(bond) = cls.bond.clone() {
-                tick_bonded(
-                    &bond,
-                    &mut cls.path_tm_prev,
-                    &mut cls.path_last,
-                    ts,
-                    bits,
-                )
+                match cls.loss.clone() {
+                    Some(lp) => tick_bonded_lossy(
+                        &bond,
+                        &lp,
+                        cls.members[0],
+                        msg,
+                        &mut cls.path_tm_prev,
+                        &mut cls.path_last,
+                        ts,
+                        bits,
+                    ),
+                    None => tick_bonded(
+                        &bond,
+                        &mut cls.path_tm_prev,
+                        &mut cls.path_last,
+                        ts,
+                        bits,
+                    ),
+                }
             } else {
                 let start = cls.tm_prev.max(ts);
-                let tm = cls.link.transfer_end(start, bits);
-                WorkerTick {
-                    tm,
-                    tc: tm + cls.link.latency(),
-                    tx_secs: tm - start,
+                match &cls.loss {
+                    Some(lp) => {
+                        let out =
+                            lp.price(&cls.link, cls.members[0], msg, start, bits);
+                        WorkerTick {
+                            tm: out.tm,
+                            tc: out.tm + cls.link.latency(),
+                            tx_secs: out.tx_secs,
+                            retx_secs: out.retx_secs,
+                            attempts: out.attempts,
+                        }
+                    }
+                    None => {
+                        let tm = cls.link.transfer_end(start, bits);
+                        WorkerTick {
+                            tm,
+                            tc: tm + cls.link.latency(),
+                            tx_secs: tm - start,
+                            retx_secs: 0.0,
+                            attempts: 1,
+                        }
+                    }
                 }
             };
             cls.tm_prev = wt.tm;
@@ -810,6 +939,13 @@ impl VirtualClock {
             cls.last = wt;
             cls.sent_last = true;
             self.tree.set(c, (wt.tc, cls.members[0]));
+            if self.log_events && wt.attempts > 1 {
+                self.events.push(ClockEvent::Retransmit {
+                    worker: cls.members[0],
+                    attempts: wt.attempts,
+                    retx_secs: wt.retx_secs,
+                });
+            }
         }
         let w = self.tree.winner();
         debug_assert!(
@@ -819,10 +955,67 @@ impl VirtualClock {
         #[cfg(debug_assertions)]
         self.assert_winner_matches_scan(w);
         let slowest = self.classes[w].last;
+        self.late_buf.clear();
+        let (tc_k, gate) = match self.deadline {
+            Some(d) if ts + d < slowest.tc => self.deadline_cut(ts + d),
+            _ => (slowest.tc, slowest),
+        };
         self.ts_prev = ts;
-        self.tc.push(slowest.tc);
+        self.tc.push(tc_k);
         self.views_dirty = true;
-        Tick { ts, tm: slowest.tm, tc: slowest.tc, tx_secs: slowest.tx_secs }
+        Tick {
+            ts,
+            tm: gate.tm,
+            tc: tc_k,
+            tx_secs: gate.tx_secs,
+            retx_secs: gate.retx_secs,
+        }
+    }
+
+    /// Apply a binding deadline cut at `cut < slowest arrival`: the sync
+    /// completes at `max(fastest arrival, cut)`, classes that arrive later
+    /// are reported late (their gradients get absorbed next round), and
+    /// the *gating* on-time class — last arrival ≤ the cut, ties to the
+    /// smaller min member, mirroring the wait-for-all tie-break — supplies
+    /// the tick's (tm, tx, retx) view. The fastest clamp guarantees the
+    /// gate exists. Links are NOT preempted: every in-flight transfer keeps
+    /// its `tm_prev`, so late workers' links stay busy into the next round
+    /// exactly as the queueing recurrence demands.
+    fn deadline_cut(&mut self, cut: f64) -> (f64, WorkerTick) {
+        let mut fastest = f64::INFINITY;
+        for cls in &self.classes {
+            if cls.active && cls.sent_last {
+                fastest = fastest.min(cls.last.tc);
+            }
+        }
+        let tc_k = cut.max(fastest);
+        let mut gate: Option<(f64, u32, WorkerTick)> = None;
+        for cls in &self.classes {
+            if !(cls.active && cls.sent_last) {
+                continue;
+            }
+            if cls.last.tc <= tc_k {
+                let (t, m) = (cls.last.tc, cls.min_member());
+                let better = match gate {
+                    None => true,
+                    Some((bt, bm, _)) => t > bt || (t == bt && m < bm),
+                };
+                if better {
+                    gate = Some((t, m, cls.last));
+                }
+            } else {
+                self.late_buf.extend_from_slice(&cls.members);
+            }
+        }
+        self.late_buf.sort_unstable();
+        if self.log_events && !self.late_buf.is_empty() {
+            self.events.push(ClockEvent::DeadlineCut {
+                cut: tc_k,
+                late: self.late_buf.len(),
+            });
+        }
+        let (_, _, wt) = gate.expect("fastest clamp guarantees a gate");
+        (tc_k, wt)
     }
 
     /// The retired O(n) scan, kept as the debug-build reference for the
@@ -872,6 +1065,7 @@ impl VirtualClock {
         self.reconcile_mask(active);
         self.rebuild_region_groups();
         let ts = self.next_ts(t_comp, tau);
+        let msg = self.tc.len() as u64;
         // class pass: active aggregators hand off locally (timeline
         // advances with TS, no wire), every other active class ships
         // lan_bits over its link/bond
@@ -887,25 +1081,65 @@ impl VirtualClock {
                 for p in cls.path_last.iter_mut() {
                     *p = PathTick::default();
                 }
-                cls.last = WorkerTick { tm: ts, tc: ts, tx_secs: 0.0 };
+                cls.last = WorkerTick {
+                    tm: ts,
+                    tc: ts,
+                    tx_secs: 0.0,
+                    retx_secs: 0.0,
+                    attempts: 1,
+                };
                 cls.sent_last = true;
                 continue;
             }
             let wt = if let Some(bond) = cls.bond.clone() {
-                tick_bonded(
-                    &bond,
-                    &mut cls.path_tm_prev,
-                    &mut cls.path_last,
-                    ts,
-                    lan_bits,
-                )
+                match cls.loss.clone() {
+                    Some(lp) => tick_bonded_lossy(
+                        &bond,
+                        &lp,
+                        cls.members[0],
+                        msg,
+                        &mut cls.path_tm_prev,
+                        &mut cls.path_last,
+                        ts,
+                        lan_bits,
+                    ),
+                    None => tick_bonded(
+                        &bond,
+                        &mut cls.path_tm_prev,
+                        &mut cls.path_last,
+                        ts,
+                        lan_bits,
+                    ),
+                }
             } else {
                 let start = cls.tm_prev.max(ts);
-                let tm = cls.link.transfer_end(start, lan_bits);
-                WorkerTick {
-                    tm,
-                    tc: tm + cls.link.latency(),
-                    tx_secs: tm - start,
+                match &cls.loss {
+                    Some(lp) => {
+                        let out = lp.price(
+                            &cls.link,
+                            cls.members[0],
+                            msg,
+                            start,
+                            lan_bits,
+                        );
+                        WorkerTick {
+                            tm: out.tm,
+                            tc: out.tm + cls.link.latency(),
+                            tx_secs: out.tx_secs,
+                            retx_secs: out.retx_secs,
+                            attempts: out.attempts,
+                        }
+                    }
+                    None => {
+                        let tm = cls.link.transfer_end(start, lan_bits);
+                        WorkerTick {
+                            tm,
+                            tc: tm + cls.link.latency(),
+                            tx_secs: tm - start,
+                            retx_secs: 0.0,
+                            attempts: 1,
+                        }
+                    }
                 }
             };
             cls.tm_prev = wt.tm;
@@ -960,14 +1194,57 @@ impl VirtualClock {
             any_region = true;
         }
         assert!(any_region, "no region had an active member");
+        self.late_buf.clear();
+        // two-tier deadline: the *global* aggregation is cut at TS_k + D
+        // over region partials (clamped to the fastest partial). Late
+        // partials are a pricing-level approximation here — region-level
+        // EF absorption would need per-region optimizer state, so the
+        // late set is not reported for absorb on two-tier runs
+        // (DESIGN.md §Robustness)
+        let (tc_k, gate) = match self.deadline {
+            Some(d) if ts + d < slowest.wan_tc => {
+                let cut = ts + d;
+                let mut fastest = f64::INFINITY;
+                for rt in &tt.region_last {
+                    if rt.active {
+                        fastest = fastest.min(rt.wan_tc);
+                    }
+                }
+                let tc_k = cut.max(fastest);
+                let mut gate = RegionTick::default();
+                let mut found = false;
+                let mut late = 0usize;
+                for rt in &tt.region_last {
+                    if !rt.active {
+                        continue;
+                    }
+                    if rt.wan_tc <= tc_k {
+                        if !found || rt.wan_tc > gate.wan_tc {
+                            gate = *rt;
+                            found = true;
+                        }
+                    } else {
+                        late += 1;
+                    }
+                }
+                debug_assert!(found, "fastest clamp guarantees a gate");
+                if self.log_events && late > 0 {
+                    self.events
+                        .push(ClockEvent::DeadlineCut { cut: tc_k, late });
+                }
+                (tc_k, gate)
+            }
+            _ => (slowest.wan_tc, slowest),
+        };
         self.ts_prev = ts;
-        self.tc.push(slowest.wan_tc);
+        self.tc.push(tc_k);
         self.views_dirty = true;
         Tick {
             ts,
-            tm: slowest.wan_tm,
-            tc: slowest.wan_tc,
-            tx_secs: slowest.wan_tx_secs,
+            tm: gate.wan_tm,
+            tc: tc_k,
+            tx_secs: gate.wan_tx_secs,
+            retx_secs: 0.0,
         }
     }
 
@@ -1427,5 +1704,150 @@ mod tests {
         let wt = bonded.worker_ticks()[0];
         let pts = bonded.path_ticks(0);
         assert!((wt.tx_secs - (pts[0].tx_secs + pts[1].tx_secs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rate_zero_loss_is_structurally_lossless() {
+        use crate::netsim::LossProcess;
+        // a rate-0 process is dropped at the fabric layer, so the clock
+        // keeps its shared classes and every bit matches the plain run
+        let link = Link::new(BandwidthTrace::constant(5e7), 0.1);
+        let mut lossy_fabric = Fabric::replicate(link.clone(), 4);
+        lossy_fabric.set_loss(1, LossProcess::iid(0.0, 42));
+        assert!(!lossy_fabric.has_loss());
+        let mut plain = VirtualClock::new(Fabric::replicate(link, 4));
+        let mut lossy = VirtualClock::new(lossy_fabric);
+        assert_eq!(plain.timeline_classes(), lossy.timeline_classes());
+        for k in 1..=200usize {
+            let bits = 900_000 + (k as u64 % 5) * 200_000;
+            let a = plain.tick(0.05, k % 3, bits);
+            let b = lossy.tick(0.05, k % 3, bits);
+            assert_eq!(a.tc.to_bits(), b.tc.to_bits(), "k={k}");
+            assert_eq!(a.tm.to_bits(), b.tm.to_bits(), "k={k}");
+            assert_eq!(b.retx_secs, 0.0);
+        }
+    }
+
+    #[test]
+    fn lossy_worker_delays_sync_and_reports_retransmits() {
+        use crate::netsim::LossProcess;
+        let link = Link::new(BandwidthTrace::constant(5e7), 0.1);
+        let mut fabric = Fabric::replicate(link.clone(), 3);
+        fabric.set_loss(0, LossProcess::iid(0.6, 11).with_rto(0.3));
+        let mut plain = VirtualClock::new(Fabric::replicate(link, 3));
+        let mut lossy = VirtualClock::new(fabric.clone());
+        let mut reference = VirtualClock::new(fabric).with_reference_scan();
+        lossy.set_event_log(true);
+        let mut any_retx = false;
+        for k in 1..=100usize {
+            let bits = 2_000_000u64;
+            let a = plain.tick(0.05, 1, bits);
+            let b = lossy.tick(0.05, 1, bits);
+            let c = reference.tick(0.05, 1, bits);
+            // loss never speeds a sync up, and the engines agree exactly
+            assert!(b.tc >= a.tc, "k={k}");
+            assert_eq!(b.tc.to_bits(), c.tc.to_bits(), "k={k}");
+            assert_eq!(b.tm.to_bits(), c.tm.to_bits(), "k={k}");
+            let wt = lossy.worker_ticks()[0];
+            assert_eq!(
+                wt.retx_secs.to_bits(),
+                reference.worker_ticks()[0].retx_secs.to_bits()
+            );
+            if wt.attempts > 1 {
+                any_retx = true;
+                assert!(wt.retx_secs > 0.0);
+            }
+        }
+        assert!(any_retx, "p=0.6 over 100 ticks must retransmit");
+        let events = lossy.drain_events();
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, ClockEvent::Retransmit { worker: 0, .. })));
+    }
+
+    #[test]
+    fn slack_deadline_is_bit_identical_to_wait_for_all() {
+        let fabric = || {
+            Fabric::with_straggler(
+                4,
+                BandwidthTrace::constant(1e8),
+                0.1,
+                0.25,
+                2.0,
+            )
+        };
+        let mut plain = VirtualClock::new(fabric());
+        let mut dl = VirtualClock::new(fabric());
+        let mut dl_ref = VirtualClock::new(fabric()).with_reference_scan();
+        dl.set_deadline(Some(1e9)); // never binds
+        dl_ref.set_deadline(Some(1e9));
+        for k in 1..=200usize {
+            let bits = 3_000_000 + (k as u64 % 4) * 500_000;
+            let a = plain.tick(0.05, k % 3, bits);
+            let b = dl.tick(0.05, k % 3, bits);
+            let c = dl_ref.tick(0.05, k % 3, bits);
+            assert_eq!(a.tc.to_bits(), b.tc.to_bits(), "k={k}");
+            assert_eq!(a.tm.to_bits(), b.tm.to_bits(), "k={k}");
+            assert_eq!(a.tx_secs.to_bits(), b.tx_secs.to_bits(), "k={k}");
+            assert_eq!(a.tc.to_bits(), c.tc.to_bits(), "k={k} (reference)");
+            assert!(dl.late_workers().is_empty());
+        }
+    }
+
+    #[test]
+    fn binding_deadline_cuts_at_ts_plus_d_and_reports_late_workers() {
+        // straggler: ~4x transfer time + 2x latency; healthy workers land
+        // well before it, so a deadline between the two cuts every round
+        let bits = 4_000_000u64;
+        let fabric = Fabric::with_straggler(
+            4,
+            BandwidthTrace::constant(1e8),
+            0.1,
+            0.25,
+            2.0,
+        );
+        let mut wait = VirtualClock::new(fabric.clone());
+        let mut dl = VirtualClock::new(fabric.clone());
+        let mut dl_ref = VirtualClock::new(fabric).with_reference_scan();
+        // healthy: 0.04s tx + 0.1 lat = 0.14 after TS; straggler: 0.16 + 0.2
+        let d = 0.2;
+        dl.set_deadline(Some(d));
+        dl_ref.set_deadline(Some(d));
+        dl.set_event_log(true);
+        for k in 1..=50usize {
+            let a = wait.tick(0.05, 1, bits);
+            let b = dl.tick(0.05, 1, bits);
+            let c = dl_ref.tick(0.05, 1, bits);
+            // the cut binds: sync at TS + D, strictly before wait-for-all
+            assert!(b.tc < a.tc, "k={k}");
+            assert_eq!(b.tc.to_bits(), (b.ts + d).to_bits(), "k={k}");
+            assert_eq!(dl.late_workers(), &[0], "straggler is late");
+            // engines agree bit-for-bit under the cut
+            assert_eq!(b.tc.to_bits(), c.tc.to_bits(), "k={k}");
+            assert_eq!(b.tm.to_bits(), c.tm.to_bits(), "k={k}");
+            assert_eq!(dl_ref.late_workers(), &[0]);
+            // the gate is an on-time arrival: tm ≤ tc
+            assert!(b.tm <= b.tc);
+        }
+        // deadline runs strictly ahead in virtual time
+        assert!(dl.now() < wait.now());
+        let events = dl.drain_events();
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, ClockEvent::DeadlineCut { late: 1, .. })));
+        // a cut so tight nothing could land clamps to the fastest arrival
+        let fabric = Fabric::with_straggler(
+            2,
+            BandwidthTrace::constant(1e8),
+            0.1,
+            0.25,
+            2.0,
+        );
+        let mut tight = VirtualClock::new(fabric);
+        tight.set_deadline(Some(1e-6));
+        let t = tight.tick(0.05, 0, bits);
+        let fastest = tight.worker_ticks()[1].tc;
+        assert_eq!(t.tc.to_bits(), fastest.to_bits(), "clamped to fastest");
+        assert_eq!(tight.late_workers(), &[0]);
     }
 }

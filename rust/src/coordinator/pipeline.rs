@@ -40,8 +40,8 @@ use crate::metrics::sink::{BufferSink, MetricsSink};
 use crate::metrics::{Record, RegionRecord, RunResult};
 use crate::netsim::{Fabric, FabricMonitor, Link};
 use crate::obs::{
-    worker_spans, NullSink, PathSpanRec, RegionTrace, TickTrace, TraceEvent,
-    TraceSink, WorkerTrace,
+    worker_spans, ClockEvent, NullSink, PathSpanRec, RegionTrace, TickTrace,
+    TraceEvent, TraceSink, WorkerTrace,
 };
 use crate::optim::GradOracle;
 use crate::strategy::{PlanBasis, Strategy, StrategyCtx, WanCtx};
@@ -227,6 +227,13 @@ pub struct TrainLoop<O: GradOracle> {
     /// fault-window close times, each an epoch bump for re-planning
     window_ends: Vec<f64>,
     window_cursor: usize,
+    /// deadline-bounded aggregation (DESIGN.md §Robustness): a worker
+    /// whose arrival the clock cut past the deadline has its message held
+    /// here — NOT dropped — and folded into the next round's apply, so the
+    /// late gradient lands with +1 effective staleness. All-`None` forever
+    /// on a wait-for-all run (the bit-identity path).
+    pending: Vec<Option<SparseVec>>,
+    pending_count: usize,
 }
 
 impl<O: GradOracle> TrainLoop<O> {
@@ -355,6 +362,8 @@ impl<O: GradOracle> TrainLoop<O> {
             churn_cursor: 0,
             window_ends,
             window_cursor: 0,
+            pending: (0..n).map(|_| None).collect(),
+            pending_count: 0,
         };
         if tl.clock.is_two_tier() {
             tl.mask_aggregator_monitors();
@@ -435,7 +444,8 @@ impl<O: GradOracle> TrainLoop<O> {
                 ChurnEvent::LinkOutage { .. }
                 | ChurnEvent::LinkDegrade { .. }
                 | ChurnEvent::PathOutage { .. }
-                | ChurnEvent::PathDegrade { .. } => {
+                | ChurnEvent::PathDegrade { .. }
+                | ChurnEvent::LossBurst { .. } => {
                     self.membership.bump();
                 }
             }
@@ -711,13 +721,17 @@ impl<O: GradOracle> TrainLoop<O> {
             // it at δ_wan through the region's own EF state (the second
             // compression stage — DESIGN.md §Topology), and the leader
             // applies the region messages.
+            // The flat-topology apply runs AFTER the clock tick below: the
+            // deadline cut decides which arrivals made this round, and the
+            // cut-off workers' messages are stashed for the next one. The
+            // two-tier reduction stays here — its WAN message sizes feed
+            // the tick, and its deadline is pricing-only (see `tick_topo`).
             let mut wan_kept_total = 0usize;
             let mut wan_msgs = 0usize;
-            if any {
-                let gamma = self.params.gamma;
-                let scale = 1.0 / n_members as f32;
-                let pool = if par_shards { &self.pool } else { &serial };
-                if two_tier {
+            let gamma = self.params.gamma;
+            let scale = 1.0 / n_members as f32;
+            let apool = if par_shards { &self.pool } else { &serial };
+            if any && two_tier {
                     // region reduce + WAN-boundary EF/compress, one region
                     // per pool thread (each RegionState owns everything its
                     // phase touches; outputs land in per-region state, so
@@ -774,7 +788,7 @@ impl<O: GradOracle> TrainLoop<O> {
                     }
                     let region_states = &self.region_states;
                     apply_messages(
-                        pool,
+                        apool,
                         &mut self.agg,
                         &mut self.x,
                         gamma,
@@ -786,17 +800,6 @@ impl<O: GradOracle> TrainLoop<O> {
                                 .map(|rs| &rs.msg)
                         },
                     );
-                } else {
-                    let workers = &self.workers;
-                    apply_messages(
-                        pool,
-                        &mut self.agg,
-                        &mut self.x,
-                        gamma,
-                        scale,
-                        || workers.iter().filter_map(|ws| ws.message()),
-                    );
-                }
             }
 
             // 5. price the iteration over the member set and feed the
@@ -828,6 +831,9 @@ impl<O: GradOracle> TrainLoop<O> {
                 let scale = self.s_g / (dim as f64 * 32.0);
                 (proxy_bits as f64 * scale) as u64
             };
+            // the strategy's aggregation deadline (None = wait for all);
+            // must be armed before the tick so the cut prices this round
+            self.clock.set_deadline(tiers.deadline);
             let tick = if two_tier {
                 self.clock.tick_topo(
                     t_comp,
@@ -844,6 +850,57 @@ impl<O: GradOracle> TrainLoop<O> {
                     Some(&self.member_mask),
                 )
             };
+            // flat apply, deadline-aware: fold in last round's held-back
+            // messages, skip workers the cut left late (their messages are
+            // stashed below and land next round — +1 staleness, never
+            // dropped). With no deadline the iterator degenerates to
+            // exactly the historical per-worker message stream.
+            if !two_tier {
+                if any || self.pending_count > 0 {
+                    let workers = &self.workers;
+                    let pending = &self.pending;
+                    let late = self.clock.late_workers();
+                    apply_messages(
+                        apool,
+                        &mut self.agg,
+                        &mut self.x,
+                        gamma,
+                        scale,
+                        || {
+                            workers.iter().flat_map(move |ws| {
+                                let held = pending[ws.id].as_ref();
+                                let cur = ws.message().filter(|_| {
+                                    late.binary_search(&(ws.id as u32))
+                                        .is_err()
+                                });
+                                held.into_iter().chain(cur)
+                            })
+                        },
+                    );
+                }
+                if self.pending_count > 0 {
+                    self.pending_count = 0;
+                    for p in self.pending.iter_mut() {
+                        *p = None;
+                    }
+                }
+                for &w in self.clock.late_workers() {
+                    let w = w as usize;
+                    if let Some(msg) = self.workers[w].message() {
+                        self.pending[w] = Some(msg.clone());
+                        self.pending_count += 1;
+                        if tracing {
+                            tracer.record(&TraceEvent::Clock {
+                                t: tick.tc,
+                                iter: t,
+                                event: ClockEvent::LateAbsorb {
+                                    worker: w as u32,
+                                },
+                            });
+                        }
+                    }
+                }
+            }
             if tracing {
                 let tt = self.tick_trace(t, t_comp, &tick, &region_of);
                 tracer.record(&TraceEvent::Tick(tt));
@@ -878,6 +935,22 @@ impl<O: GradOracle> TrainLoop<O> {
                                 cv.last.tx_secs,
                             );
                         }
+                        // lossy workers (always singleton classes) report
+                        // their delivery attempt count — the loss-rate
+                        // estimator loss-aware DeCo plans on
+                        if cv.active
+                            && cv.sent_last
+                            && self
+                                .clock
+                                .fabric()
+                                .loss(cv.members[0] as usize)
+                                .is_some()
+                        {
+                            self.monitor.observe_attempts(
+                                cv.members[0] as usize,
+                                f64::from(cv.last.attempts),
+                            );
+                        }
                     }
                 } else {
                     for i in 0..n {
@@ -901,6 +974,11 @@ impl<O: GradOracle> TrainLoop<O> {
                                 self.monitor
                                     .observe_transfer(i, bits, wt.tx_secs);
                             }
+                        }
+                        if self.clock.fabric().loss(i).is_some() {
+                            let wt = self.clock.worker_ticks()[i];
+                            self.monitor
+                                .observe_attempts(i, f64::from(wt.attempts));
                         }
                     }
                 }
@@ -1075,6 +1153,7 @@ impl<O: GradOracle> TrainLoop<O> {
                     wt.tc,
                     tc,
                 ),
+                retx_secs: wt.retx_secs,
                 paths,
             });
         }
@@ -1279,6 +1358,97 @@ mod tests {
         // the CSV writer emits the per-region header (hard-error checked)
         let csv = res.to_csv();
         assert!(csv.lines().next().unwrap().contains("region1_wan_bits"));
+    }
+
+    #[test]
+    fn deadline_bounded_rounds_absorb_the_straggler_and_finish_sooner() {
+        use crate::strategy::TierParams;
+        // τ=0, δ=1 with a pinned aggregation deadline: D-SGD whose round
+        // closes at min(slowest arrival, TS + D)
+        struct DeadlineSgd(Option<f64>);
+        impl Strategy for DeadlineSgd {
+            fn name(&self) -> &'static str {
+                "deadline-sgd"
+            }
+            fn params(&mut self, _ctx: &StrategyCtx) -> (usize, f64) {
+                (0, 1.0)
+            }
+            fn params_tiered(&mut self, _ctx: &StrategyCtx) -> TierParams {
+                TierParams { tau: 0, delta: 1.0, wan: None, deadline: self.0 }
+            }
+        }
+        let fabric = || {
+            // worker 0 is a 4x straggler: fast arrivals at ~5.2 s past the
+            // sync start, the straggler at ~20.2 s
+            Fabric::with_straggler(
+                4,
+                BandwidthTrace::constant(2e7),
+                0.2,
+                0.25,
+                4.0,
+            )
+        };
+        let run = |deadline: Option<f64>| {
+            let mut tl = TrainLoop::with_fabric(
+                quad(),
+                Box::new(DeadlineSgd(deadline)),
+                fabric(),
+                TrainParams { max_iters: 4000, ..params() },
+            );
+            tl.run("quad")
+        };
+        let l0 = {
+            let q = quad();
+            let x = q.init();
+            q.loss(&x)
+        };
+        let wfa = run(None);
+        let cut = run(Some(6.0));
+        // the binding deadline caps every round at T_comp + 6.0 while
+        // wait-for-all pays the straggler's full 20.2 s arrival
+        assert!(
+            cut.total_time < 0.5 * wfa.total_time,
+            "cut {} vs wait-for-all {}",
+            cut.total_time,
+            wfa.total_time
+        );
+        // the straggler's gradients are absorbed (+1 staleness), not
+        // dropped: the run still converges
+        assert!(
+            cut.final_loss() < 0.7 * l0,
+            "{l0} -> {}",
+            cut.final_loss()
+        );
+        // a deadline no arrival ever crosses is bit-identical to
+        // wait-for-all — pricing AND model trajectory
+        let slack = run(Some(1e9));
+        assert_eq!(slack.total_time.to_bits(), wfa.total_time.to_bits());
+        assert_eq!(
+            slack.final_loss().to_bits(),
+            wfa.final_loss().to_bits()
+        );
+        assert_eq!(slack.records.len(), wfa.records.len());
+    }
+
+    #[test]
+    fn lossy_fabric_run_monitors_the_loss_rate() {
+        use crate::netsim::LossProcess;
+        let mut fabric =
+            Fabric::homogeneous(4, BandwidthTrace::constant(2e7), 0.2);
+        fabric.set_loss(1, LossProcess::iid(0.4, 7));
+        let mut tl = TrainLoop::with_fabric(
+            quad(),
+            StrategyKind::DecoLossy { update_every: 10, quantile: 0.9 }
+                .build(),
+            fabric,
+            TrainParams { max_iters: 300, ..params() },
+        );
+        let res = tl.run("quad");
+        assert_eq!(res.total_iters, 300, "no divergence under loss");
+        // worker 1 retries ~1/(1-0.4) times per message; the attempt
+        // stream inverts back to the loss rate the planner consumes
+        let p = tl.monitor().loss_rate().expect("attempt samples observed");
+        assert!(p > 0.1 && p < 0.7, "estimated loss rate {p}");
     }
 
     #[test]

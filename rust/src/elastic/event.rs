@@ -22,8 +22,14 @@
 
 use std::sync::Arc;
 
-use crate::netsim::{DegradeWindow, Fabric};
+use crate::netsim::{DegradeWindow, Fabric, LossBurstWindow, LossProcess};
 use anyhow::{anyhow, Result};
+
+/// Seed base for burst-only loss processes minted by [`bake_windows`]
+/// (workers that have scripted bursts but no configured loss process).
+///
+/// [`bake_windows`]: ChurnTimeline::bake_windows
+const BURST_SEED: u64 = 0xB0B5_7B57;
 
 /// One membership or link fault (times live on the [`TimedEvent`]).
 #[derive(Clone, Debug, PartialEq)]
@@ -47,6 +53,11 @@ pub enum ChurnEvent {
     PathOutage { worker: usize, path: usize, secs: f64 },
     /// One path of a bonded worker runs at `frac`× bandwidth for `secs`.
     PathDegrade { worker: usize, path: usize, frac: f64, secs: f64 },
+    /// The worker's WAN path drops messages at (at least) `rate` for
+    /// `secs`: baked into the fabric's [`crate::netsim::LossProcess`] as a
+    /// scripted burst window, so every attempt sent inside the window rides
+    /// the timeout/backoff retransmission ladder.
+    LossBurst { worker: usize, rate: f64, secs: f64 },
 }
 
 impl ChurnEvent {
@@ -57,7 +68,8 @@ impl ChurnEvent {
             | Self::LinkOutage { worker, .. }
             | Self::LinkDegrade { worker, .. }
             | Self::PathOutage { worker, .. }
-            | Self::PathDegrade { worker, .. } => worker,
+            | Self::PathDegrade { worker, .. }
+            | Self::LossBurst { worker, .. } => worker,
         }
     }
 }
@@ -215,6 +227,16 @@ impl ChurnTimeline {
                         ));
                     }
                 }
+                ChurnEvent::LossBurst { rate, secs, .. } => {
+                    if !(secs.is_finite() && secs > 0.0) {
+                        return Err(anyhow!(
+                            "loss burst duration {secs} invalid"
+                        ));
+                    }
+                    if !(rate.is_finite() && (0.0..=1.0).contains(&rate)) {
+                        return Err(anyhow!("loss burst rate {rate} invalid"));
+                    }
+                }
             }
         }
         Ok(())
@@ -278,12 +300,34 @@ impl ChurnTimeline {
             .collect()
     }
 
+    /// The scripted loss-burst windows this schedule puts on `worker`'s
+    /// loss process.
+    pub fn loss_bursts_for(&self, worker: usize) -> Vec<LossBurstWindow> {
+        self.events
+            .iter()
+            .filter_map(|ev| match ev.event {
+                ChurnEvent::LossBurst { worker: w, rate, secs }
+                    if w == worker =>
+                {
+                    Some(LossBurstWindow {
+                        start_s: ev.t,
+                        end_s: ev.t + secs,
+                        rate,
+                    })
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
     /// Bake every outage/degrade window into the fabric's links, so the
     /// clock's transfer integration, the per-link monitors, and the
     /// bottleneck/mean fabric views all see the same time-varying picture.
     /// Bonded workers get their windows baked per path, so a path-scoped
     /// fault shifts bits to the survivors while a worker-level fault takes
-    /// the whole attachment down.
+    /// the whole attachment down. Loss bursts attach to the worker's
+    /// [`LossProcess`] (extending its window list, or seeding a burst-only
+    /// process on an otherwise-lossless worker).
     pub fn bake_windows(&self, fabric: &mut Fabric) {
         for w in 0..fabric.workers() {
             if let Some(mut bond) = fabric.bond(w).cloned() {
@@ -305,6 +349,17 @@ impl ChurnTimeline {
                     fabric.set_link(w, link);
                 }
             }
+            let mut bursts = self.loss_bursts_for(w);
+            if !bursts.is_empty() {
+                let base = fabric.loss(w).cloned().unwrap_or_else(|| {
+                    // burst-only worker: a zero base whose burst draws are
+                    // still seeded deterministically per worker
+                    LossProcess::iid(0.0, BURST_SEED ^ ((w as u64) << 17))
+                });
+                bursts.extend_from_slice(base.bursts());
+                // zero-rate bursts on a lossless base fall out at set_loss
+                fabric.set_loss(w, base.with_bursts(bursts));
+            }
         }
     }
 
@@ -319,7 +374,8 @@ impl ChurnTimeline {
                 ChurnEvent::LinkOutage { secs, .. }
                 | ChurnEvent::LinkDegrade { secs, .. }
                 | ChurnEvent::PathOutage { secs, .. }
-                | ChurnEvent::PathDegrade { secs, .. } => Some(ev.t + secs),
+                | ChurnEvent::PathDegrade { secs, .. }
+                | ChurnEvent::LossBurst { secs, .. } => Some(ev.t + secs),
                 _ => None,
             })
             .collect();
@@ -413,6 +469,74 @@ mod tests {
         assert_eq!(fabric.link(0).bandwidth_at(12.0), 1e8);
         assert!(fabric.link(0).trace().as_constant().is_some());
         assert!(fabric.link(1).trace().as_constant().is_none());
+    }
+
+    #[test]
+    fn loss_bursts_validate_bake_and_merge() {
+        let burst = |t: f64, worker: usize, rate: f64, secs: f64| TimedEvent {
+            t,
+            event: ChurnEvent::LossBurst { worker, rate, secs },
+        };
+        // degenerate params are rejected
+        assert!(
+            ChurnTimeline::validated(vec![burst(1.0, 0, 1.5, 5.0)], 2)
+                .is_err()
+        );
+        assert!(
+            ChurnTimeline::validated(vec![burst(1.0, 0, 0.5, 0.0)], 2)
+                .is_err()
+        );
+        assert!(ChurnTimeline::validated(vec![burst(1.0, 3, 0.5, 5.0)], 2)
+            .is_err());
+
+        let tl = ChurnTimeline::validated(
+            vec![burst(10.0, 1, 0.8, 5.0), burst(40.0, 1, 0.5, 2.0)],
+            3,
+        )
+        .unwrap();
+        assert_eq!(tl.loss_bursts_for(1).len(), 2);
+        assert!(tl.loss_bursts_for(0).is_empty());
+        // burst closes count as window ends (re-plan triggers)
+        assert_eq!(tl.window_ends(), vec![15.0, 42.0]);
+
+        // baking onto a lossless fabric mints a burst-only process: lossy
+        // exactly inside the windows, lossless elsewhere
+        let mut fabric = Fabric::replicate(
+            Link::new(BandwidthTrace::constant(1e8), 0.1),
+            3,
+        );
+        tl.bake_windows(&mut fabric);
+        assert!(fabric.loss(0).is_none());
+        let proc = fabric.loss(1).expect("burst-bearing worker is lossy");
+        assert_eq!(proc.rate_at(1, 12.0), 0.8);
+        assert_eq!(proc.rate_at(1, 41.0), 0.5);
+        assert_eq!(proc.rate_at(1, 20.0), 0.0);
+
+        // baking onto an already-lossy worker keeps its base process and
+        // extends the window list
+        let mut fabric2 = Fabric::replicate(
+            Link::new(BandwidthTrace::constant(1e8), 0.1),
+            3,
+        );
+        fabric2.set_loss(1, LossProcess::iid(0.1, 7));
+        tl.bake_windows(&mut fabric2);
+        let merged = fabric2.loss(1).unwrap();
+        assert_eq!(merged.rate_at(1, 12.0), 0.8);
+        assert_eq!(merged.rate_at(1, 20.0), 0.1);
+        assert_eq!(merged.bursts().len(), 2);
+
+        // an all-zero-rate burst on a lossless base is a structural no-op
+        let zero = ChurnTimeline::validated(
+            vec![burst(10.0, 1, 0.0, 5.0)],
+            3,
+        )
+        .unwrap();
+        let mut fabric3 = Fabric::replicate(
+            Link::new(BandwidthTrace::constant(1e8), 0.1),
+            3,
+        );
+        zero.bake_windows(&mut fabric3);
+        assert!(fabric3.loss(1).is_none());
     }
 
     #[test]

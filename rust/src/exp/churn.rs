@@ -100,6 +100,7 @@ fn base_fabric(workers: usize) -> anyhow::Result<Fabric> {
         fabric: FabricSpec::Straggler { frac: STRAG_FRAC, mult: STRAG_MULT },
         topology: crate::config::TopologySpec::Flat,
         bonds: Vec::new(),
+        losses: Vec::new(),
     };
     net.build_fabric(workers)
 }

@@ -73,6 +73,7 @@ pub fn severity_fabric(
         fabric: fabric_spec,
         topology: crate::config::TopologySpec::Flat,
         bonds: Vec::new(),
+        losses: Vec::new(),
     };
     net.build_fabric(workers)
 }

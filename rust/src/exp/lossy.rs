@@ -1,0 +1,355 @@
+//! `exp lossy` — lossy transport study (beyond the paper: it assumes the
+//! WAN delivers every gradient; real cross-region paths drop messages, and
+//! retransmission turns a loss rate into a latency *tail*).
+//!
+//! Worker 0's WAN path drops messages; every drop costs a timeout plus an
+//! exponentially backed-off retry, priced exactly through the prefix
+//! integral (DESIGN.md §Robustness). The sweep crosses loss scenarios
+//! (clean / i.i.d. / Gilbert–Elliott bursty) with three arms:
+//!
+//! * **D-SGD (wait-for-all)** / **DeCo (wait-for-all)** — every round
+//!   completes at the *slowest* arrival, so one message riding a loss
+//!   burst through the capped backoff ladder stalls the whole pipeline
+//!   for the full retransmit tail;
+//! * **DeCo (deadline)** — loss-aware DeCo: plans (τ, δ) against the
+//!   retransmit-inflated bandwidth `a·(1−p̂)` and cuts each round at an
+//!   adaptive quantile deadline; late gradients are absorbed next round
+//!   (+1 staleness), never dropped.
+//!
+//! The headline is the `max_gap_s` column (longest virtual-time gap
+//! between consecutive progress records): under bursty loss the
+//! wait-for-all arms' gap grows to the burst dwell while the deadline
+//! arm's stays near its per-round deadline — and on a clean fabric the
+//! deadline arm is bit-identical to wait-for-all DeCo (the `p = 0`
+//! contract `tests/properties.rs` checks at the engine level).
+//!
+//! Deterministic by construction: constant traces, pinned T_comp, the
+//! analytic quadratic oracle, hash-seeded loss draws — the CI runs
+//! `repro exp lossy --fast` twice and byte-compares the CSV.
+
+use crate::coordinator::{TrainLoop, TrainParams};
+use crate::deco::DecoInput;
+use crate::exp::bonded::max_gap;
+use crate::exp::{results_dir, speedup};
+use crate::metrics::{format_table, RunResult};
+use crate::netsim::{BandwidthTrace, Fabric, LossProcess};
+use crate::optim::Quadratic;
+use crate::strategy::{PlanBasis, StrategyKind};
+use crate::util::WorkerPool;
+
+/// Every link: healthy 100 Mbps / 50 ms — loss, not bandwidth, is the
+/// variable under study.
+const BPS: f64 = 1e8;
+const LAT: f64 = 0.05;
+/// Pinned per-iteration compute time (s).
+const T_COMP: f64 = 0.2;
+/// Pinned gradient size (bits): 0.2 s per full gradient, so one capped
+/// 12-attempt backoff ladder (~15 s at RTO 0.1 s) dwarfs the clean round.
+const S_G: f64 = 2e7;
+const GAMMA: f32 = 0.02;
+/// Same loss target as the quadratic TaskSpec.
+const TARGET: f64 = 0.18;
+/// DeCo refresh period (iterations). Long enough that the loss-rate EWMA
+/// at each re-plan reflects the mixture, not the last burst.
+const UPDATE_EVERY: usize = 75;
+/// Deadline quantile: cover 90% of per-message retransmit ladders.
+const QUANTILE: f64 = 0.9;
+/// Retransmission timeout base (s) for every lossy scenario.
+const RTO_S: f64 = 0.1;
+/// Monitor smoothing: slow enough that one burst's attempt samples do not
+/// swing the planned deadline.
+const ALPHA: f64 = 0.1;
+/// Seed of the loss draws (independent of the training seed).
+const LOSS_SEED: u64 = 0x10557;
+/// Bursty scenario: bad dwell cells of this many seconds...
+const DWELL_S: f64 = 15.0;
+/// ...hit with this stationary probability...
+const PI_BAD: f64 = 0.1;
+/// ...during which attempts are lost at `P_BAD` (calm cells: `P_GOOD`).
+const P_BAD: f64 = 0.9;
+const P_GOOD: f64 = 0.02;
+
+/// The loss process worker 0's WAN path runs under, per scenario.
+pub fn loss_for(scenario: &str) -> Option<LossProcess> {
+    match scenario {
+        "clean" => None,
+        "iid 30%" => Some(LossProcess::iid(0.3, LOSS_SEED).with_rto(RTO_S)),
+        "bursty" => Some(
+            LossProcess::gilbert_elliott(
+                P_GOOD, P_BAD, PI_BAD, DWELL_S, LOSS_SEED,
+            )
+            .with_rto(RTO_S),
+        ),
+        other => unreachable!("unknown scenario {other}"),
+    }
+}
+
+const SCENARIOS: [&str; 3] = ["clean", "iid 30%", "bursty"];
+
+/// The arm ladder. Labels are comma-free — they land in the CSV verbatim.
+fn arms() -> Vec<(&'static str, StrategyKind)> {
+    vec![
+        ("D-SGD (wait-for-all)", StrategyKind::DSgd),
+        (
+            "DeCo (wait-for-all)",
+            StrategyKind::DecoEvent { update_every: UPDATE_EVERY },
+        ),
+        (
+            "DeCo (deadline)",
+            StrategyKind::DecoLossy {
+                update_every: UPDATE_EVERY,
+                quantile: QUANTILE,
+            },
+        ),
+    ]
+}
+
+/// One training run of `kind` with worker 0 behind `loss`. `log_every` is
+/// 1 so `max_gap` resolves individual stalled rounds, not 5-round windows.
+pub fn run_one(
+    loss: Option<&LossProcess>,
+    kind: StrategyKind,
+    workers: usize,
+    dim: usize,
+    max_iters: usize,
+    seed: u64,
+) -> anyhow::Result<RunResult> {
+    let mut fabric =
+        Fabric::homogeneous(workers, BandwidthTrace::constant(BPS), LAT);
+    if let Some(proc) = loss {
+        fabric.set_loss(0, proc.clone());
+    }
+    let oracle = Quadratic::new(dim, workers, 0.5, 0.1, 0.3, 0.2, seed);
+    let params = TrainParams {
+        gamma: GAMMA,
+        max_iters,
+        log_every: 1,
+        loss_target: Some(TARGET),
+        t_comp_override: Some(T_COMP),
+        s_g_override: Some(S_G),
+        monitor_alpha: ALPHA,
+        seed,
+        fallback: DecoInput { s_g: S_G, a: BPS, b: LAT, t_comp: T_COMP },
+        plan: PlanBasis::Bottleneck,
+        // runs fan out run-level over the pool; each inner loop is serial
+        threads: Some(1),
+        ..Default::default()
+    };
+    let mut tl = TrainLoop::try_with_fabric(oracle, kind.build(), fabric, params)?;
+    Ok(tl.run("quadratic"))
+}
+
+/// The full sweep: returns `(csv, table_rows)`. Deterministic in
+/// `(scale, workers, dim, seed)` — the CI byte-compares two `--fast` runs.
+pub fn sweep(
+    scale: f64,
+    workers: usize,
+    dim: usize,
+    seed: u64,
+) -> anyhow::Result<(String, Vec<Vec<String>>)> {
+    let max_iters = ((4000.0 * scale) as usize).max(50);
+    let arms = arms();
+    let n_combos = SCENARIOS.len() * arms.len();
+    let pool = WorkerPool::new(WorkerPool::default_threads().min(n_combos));
+    eprintln!("[lossy] {n_combos} runs across {} threads", pool.threads());
+    let results = pool.map(n_combos, |i| {
+        let loss = loss_for(SCENARIOS[i / arms.len()]);
+        let (_, kind) = &arms[i % arms.len()];
+        run_one(loss.as_ref(), kind.clone(), workers, dim, max_iters, seed)
+    });
+    let mut results = results.into_iter();
+    let mut csv = String::from(
+        "scenario,strategy,time_to_target,total_iters,max_gap_s,mean_loss\n",
+    );
+    let mut rows = Vec::new();
+    for scenario in SCENARIOS {
+        let mut cells = vec![scenario.to_string()];
+        let mut times: Vec<Option<f64>> = Vec::new();
+        for (arm, _) in &arms {
+            let res = results.next().expect("one result per combo")?;
+            let t = res.time_to_loss(TARGET);
+            let gap = max_gap(&res);
+            // realized mean loss rate of the scenario process over this
+            // run's span — the CSV-level predicted-vs-realized anchor
+            let mean_loss = loss_for(scenario)
+                .map(|p| p.mean_rate_over(0, 0.0, res.total_time))
+                .unwrap_or(0.0);
+            csv.push_str(&format!(
+                "{scenario},{arm},{},{},{gap:.2},{mean_loss:.4}\n",
+                t.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+                res.total_iters
+            ));
+            cells.push(
+                t.map(|v| format!("{v:.1}s ({gap:.1}s gap)"))
+                    .unwrap_or_else(|| format!("- ({gap:.1}s gap)")),
+            );
+            times.push(t);
+        }
+        // the deadline arm's win over wait-for-all DeCo
+        cells.push(speedup(times[1], times[2]));
+        rows.push(cells);
+    }
+    Ok((csv, rows))
+}
+
+pub fn main(
+    scale: f64,
+    workers: usize,
+    seed: u64,
+    fast: bool,
+) -> anyhow::Result<()> {
+    let (dim, scale) = if fast { (256, scale.min(0.05)) } else { (4096, scale) };
+    println!(
+        "exp lossy — message loss × retransmission on a {workers}-worker \
+         fabric\n(worker 0's WAN drops messages: i.i.d. vs Gilbert–Elliott \
+         {DWELL_S:.0} s dwells at p_bad = {P_BAD}; RTO {RTO_S} s doubling; \
+         time-to-loss {TARGET} on the quadratic; DeCo E = {UPDATE_EVERY}, \
+         deadline quantile {QUANTILE})\n",
+    );
+    let (csv, rows) = sweep(scale, workers, dim, seed)?;
+    println!(
+        "{}",
+        format_table(
+            &[
+                "scenario",
+                "D-SGD (wait-for-all)",
+                "DeCo (wait-for-all)",
+                "DeCo (deadline)",
+                "vs wait-for-all",
+            ],
+            &rows
+        )
+    );
+    let path = results_dir().join("lossy.csv");
+    std::fs::write(&path, csv)?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_processes_shape() {
+        assert!(loss_for("clean").is_none());
+        let iid = loss_for("iid 30%").unwrap();
+        assert!(!iid.is_lossless());
+        assert_eq!(iid.rto_s(), RTO_S);
+        let bursty = loss_for("bursty").unwrap();
+        assert!(!bursty.is_lossless());
+        // the bursty process really mixes both dwell states over a long
+        // horizon: mean rate strictly between p_good and p_bad
+        let mean = bursty.mean_rate_over(0, 0.0, 10_000.0);
+        assert!(
+            mean > P_GOOD && mean < P_BAD,
+            "bursty mean rate {mean} outside ({P_GOOD}, {P_BAD})"
+        );
+    }
+
+    #[test]
+    fn clean_deadline_deco_is_bit_identical_to_wait_for_all() {
+        // the p = 0 contract at experiment level: with no loss process the
+        // deadline arm plans no deadline and replays wait-for-all DeCo
+        // bit-for-bit
+        let wfa = run_one(
+            None,
+            StrategyKind::DecoEvent { update_every: UPDATE_EVERY },
+            4,
+            256,
+            400,
+            7,
+        )
+        .unwrap();
+        let dl = run_one(
+            None,
+            StrategyKind::DecoLossy {
+                update_every: UPDATE_EVERY,
+                quantile: QUANTILE,
+            },
+            4,
+            256,
+            400,
+            7,
+        )
+        .unwrap();
+        assert_eq!(wfa.total_iters, dl.total_iters);
+        assert_eq!(wfa.total_time.to_bits(), dl.total_time.to_bits());
+        assert_eq!(wfa.records.len(), dl.records.len());
+        for (a, b) in wfa.records.iter().zip(&dl.records) {
+            assert_eq!(a.time.to_bits(), b.time.to_bits());
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn deadline_deco_bounds_the_gap_under_bursty_loss() {
+        // the headline, small edition: under Gilbert–Elliott bursts the
+        // wait-for-all arms ride the full retransmit ladder of every bad
+        // dwell (gap ~ the 15 s dwell), the deadline arm cuts each round
+        // at its planned quantile deadline and absorbs the late gradient
+        // next round
+        let bursty = loss_for("bursty").unwrap();
+        let dsgd = run_one(
+            Some(&bursty),
+            StrategyKind::DSgd,
+            4,
+            512,
+            3000,
+            7,
+        )
+        .unwrap();
+        let wfa = run_one(
+            Some(&bursty),
+            StrategyKind::DecoEvent { update_every: UPDATE_EVERY },
+            4,
+            512,
+            3000,
+            7,
+        )
+        .unwrap();
+        let dl = run_one(
+            Some(&bursty),
+            StrategyKind::DecoLossy {
+                update_every: UPDATE_EVERY,
+                quantile: QUANTILE,
+            },
+            4,
+            512,
+            3000,
+            7,
+        )
+        .unwrap();
+        assert!(
+            max_gap(&dsgd) > 10.0,
+            "wait-for-all D-SGD should stall on the retransmit tail: \
+             gap {:.1}s",
+            max_gap(&dsgd)
+        );
+        assert!(
+            max_gap(&wfa) > 10.0,
+            "wait-for-all DeCo should stall on the retransmit tail: \
+             gap {:.1}s",
+            max_gap(&wfa)
+        );
+        assert!(
+            max_gap(&dl) < 8.0,
+            "deadline DeCo should cut, not stall: gap {:.1}s",
+            max_gap(&dl)
+        );
+        assert!(
+            max_gap(&dl) < 0.6 * max_gap(&wfa).min(max_gap(&dsgd)),
+            "deadline gap {:.1}s vs wait-for-all {:.1}s / {:.1}s",
+            max_gap(&dl),
+            max_gap(&wfa),
+            max_gap(&dsgd)
+        );
+        // staleness absorption must not cost convergence on the quadratic
+        assert!(
+            dl.time_to_loss(TARGET).is_some(),
+            "deadline arm should still reach the target \
+             (final loss {:.3})",
+            dl.final_loss()
+        );
+    }
+}

@@ -28,6 +28,9 @@
 //! |        | timeline classes vs the O(n) reference scan,     |
 //! |        | resumable via the campaign manifest (beyond the  |
 //! |        | paper)                                           |
+//! | lossy  | message loss × retransmission: deadline-bounded  |
+//! |        | partial aggregation vs wait-for-all under bursty |
+//! |        | Gilbert–Elliott drops (beyond the paper)         |
 
 pub mod ablation;
 pub mod bonded;
@@ -39,6 +42,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod hetero;
+pub mod lossy;
 pub mod phi;
 pub mod runner;
 pub mod scale;

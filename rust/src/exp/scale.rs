@@ -98,7 +98,13 @@ fn drive(
         if let Some(a) = attr.as_deref_mut() {
             if let Some(wt) = clock.fastest_last() {
                 a.record_flat(
-                    tick.ts, T_COMP, wt.tm, wt.tc, wt.tx_secs, tick.tc,
+                    tick.ts,
+                    T_COMP,
+                    wt.tm,
+                    wt.tc,
+                    wt.tx_secs,
+                    wt.retx_secs,
+                    tick.tc,
                 );
             }
         }

@@ -124,6 +124,7 @@ fn network(n: usize, regions: usize, ratio: f64, flat: bool) -> NetworkConfig {
             }
         },
         bonds: Vec::new(),
+        losses: Vec::new(),
     }
 }
 

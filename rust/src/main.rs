@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! repro exp <fig1|fig2|fig4|fig5|fig6|table1|thm3|phi|hetero|churn|topo|
-//!            bonded|scale|all>
+//!            bonded|scale|lossy|all>
 //!           [--scale F] [--tasks t1 t2] [--nodes 4 8] [--workers N]
 //!           [--task NAME] [--t-comp F] [--mult F] [--seed N]
 //!           [--fast] [--dir PATH] [--max-cells N]
@@ -88,7 +88,7 @@ USAGE:
   repro exp <id> [--scale F] [--tasks T..] [--nodes N..] [--workers N]
                  [--task NAME] [--t-comp F] [--mult F] [--seed N]
       ids: fig1 fig2 fig4 fig5 fig6 table1 thm3 phi ablation hetero churn
-           topo bonded scale all
+           topo bonded scale lossy all
       hetero: straggler severity x strategy sweep on a per-worker fabric
               (--workers N, --mult F = straggler latency multiplier)
       churn:  worker churn x link outages x strategy on the elastic fabric —
@@ -103,6 +103,12 @@ USAGE:
       scale:  100k-worker clock-engine campaign, resumable via a manifest
               (--fast shrinks n for CI, --dir PATH overrides results/,
               --max-cells N pauses after N cells to demonstrate resume)
+      lossy:  message loss x retransmission — deadline-bounded partial
+              aggregation vs wait-for-all under i.i.d. and bursty
+              Gilbert-Elliott drops (--workers N, --seed N, --fast
+              shrinks the sweep for CI)
+  repro --help | repro <cmd> --help
+      print this usage and exit 0
   repro train --config cfg.json [--out run.csv]
   repro trace cfg.json [--out trace.json]
       run an analytic config with virtual-time tracing: writes a
@@ -131,6 +137,12 @@ fn main() -> Result<()> {
     }
     let cmd = argv[0].as_str();
     let args = Args::parse(&argv[1..]);
+    // `repro <cmd> --help` anywhere prints usage and exits 0 (the
+    // top-level `repro --help` hits the match arm below)
+    if args.flag_present("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
     match cmd {
         "exp" => {
             let id = args
@@ -180,6 +192,15 @@ fn main() -> Result<()> {
                 "bonded" => {
                     let seed = args.flag_usize("seed").unwrap_or(7) as u64;
                     exp::bonded::main(scale, workers, seed)?;
+                }
+                "lossy" => {
+                    let seed = args.flag_usize("seed").unwrap_or(7) as u64;
+                    exp::lossy::main(
+                        scale,
+                        workers,
+                        seed,
+                        args.flag_present("fast"),
+                    )?;
                 }
                 "scale" => {
                     exp::scale::main(
@@ -394,6 +415,16 @@ mod tests {
         assert_eq!(a.flag_f64("s_g"), Some(3.9e9));
         assert!(a.req_f64("t_comp").is_ok());
         assert!(a.req_f64("missing").is_err());
+    }
+
+    #[test]
+    fn help_is_a_bare_switch_on_any_command() {
+        // `repro exp lossy --help` must short-circuit to USAGE: the
+        // parser surfaces it as a present (valueless) flag
+        let a = parse("exp lossy --help");
+        assert!(a.flag_present("help"));
+        assert_eq!(a.positional, vec!["exp", "lossy"]);
+        assert!(!parse("exp lossy --fast").flag_present("help"));
     }
 
     #[test]

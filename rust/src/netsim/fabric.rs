@@ -29,6 +29,7 @@ use std::sync::Arc;
 
 use super::bond::Bond;
 use super::link::Link;
+use super::loss::LossProcess;
 use super::trace::BandwidthTrace;
 
 #[derive(Clone, Debug)]
@@ -41,6 +42,11 @@ pub struct Fabric {
     /// on a classic single-path fabric. A bonded worker's link class
     /// mirrors its path 0, so legacy single-link views stay meaningful.
     bonds: Vec<Option<Arc<Bond>>>,
+    /// per-worker message-loss processes (DESIGN.md §Robustness); `None`
+    /// everywhere on a lossless fabric. Loss pricing is per-worker (the
+    /// draws key on the worker id), so a lossy worker leaves the uniform
+    /// fast path just like a bonded one.
+    losses: Vec<Option<Arc<LossProcess>>>,
     /// every link shares one trace config and latency — cached at
     /// construction so hot paths (`sync_arrival`, the virtual clock) can
     /// price one transfer instead of n when the answer is provably shared
@@ -64,7 +70,13 @@ impl Fabric {
             }
         }
         let uniform = class_links.len() == 1;
-        Self { class_links, class_of, bonds: vec![None; n], uniform }
+        Self {
+            class_links,
+            class_of,
+            bonds: vec![None; n],
+            losses: vec![None; n],
+            uniform,
+        }
     }
 
     /// Class predicate: identical latency (bit equality) and identical
@@ -168,7 +180,9 @@ impl Fabric {
                 }
             }
         }
-        self.uniform = !self.has_bonds() && self.class_links.len() == 1;
+        self.uniform = !self.has_bonds()
+            && !self.has_loss()
+            && self.class_links.len() == 1;
     }
 
     /// Attach a multi-path [`Bond`] to one worker. The worker's link class
@@ -193,6 +207,33 @@ impl Fabric {
 
     pub fn has_bonds(&self) -> bool {
         self.bonds.iter().any(Option::is_some)
+    }
+
+    /// Attach a message-loss process to one worker's transport
+    /// (DESIGN.md §Robustness). A trivially lossless process (rate 0,
+    /// no bursts) is not stored at all, so "loss rate 0" is *structurally*
+    /// identical to today's lossless fabric — not merely numerically.
+    pub fn set_loss(&mut self, worker: usize, loss: LossProcess) {
+        if loss.is_lossless() {
+            self.losses[worker] = None;
+        } else {
+            self.losses[worker] = Some(Arc::new(loss));
+            self.uniform = false;
+        }
+    }
+
+    pub fn loss(&self, worker: usize) -> Option<&LossProcess> {
+        self.losses[worker].as_deref()
+    }
+
+    /// The `Arc` handle behind [`Self::loss`] — what the clock's class
+    /// engine stores so per-cell fabric clones share loss processes.
+    pub fn loss_arc(&self, worker: usize) -> Option<&Arc<LossProcess>> {
+        self.losses[worker].as_ref()
+    }
+
+    pub fn has_loss(&self) -> bool {
+        self.losses.iter().any(Option::is_some)
     }
 
     /// Path count per worker: 1 for classic single-link workers, the

@@ -1,0 +1,516 @@
+//! Message-loss processes with timeout → exponential-backoff
+//! retransmission (DESIGN.md §Robustness).
+//!
+//! A [`LossProcess`] decides, per (worker, message, attempt), whether a
+//! gradient message is lost in flight. Pricing wraps the exact
+//! prefix-integral engine: attempt `k` is priced by
+//! [`crate::netsim::Link::transfer_end`] from its start instant; a lost
+//! attempt's retry restarts `transfer_end` at the *backoff instant*
+//! `tm_k + rto·2^k`, so every failed attempt occupies the link for its
+//! full (exactly integrated) wire time and the payload re-enters the
+//! queue after the timeout. The final (successful) attempt defines the
+//! message's `tm`; everything before it — failed wire time plus backoff
+//! gaps — is reported separately as `retx_secs` so the stall-attribution
+//! report can carve a Retransmit phase out of the round without
+//! disturbing the makespan tiling, and so the monitors keep estimating
+//! the *link's* true rate from the final attempt's `bits / tx_secs`.
+//!
+//! Determinism: loss draws are pure seeded hashes of
+//! `(seed, worker, message, attempt)` — no sequential RNG state — so
+//! pricing is a pure function of its inputs, identical across the class
+//! engine, the reference scan, and any evaluation order. The
+//! Gilbert–Elliott variant discretizes the two-state chain onto fixed
+//! dwell cells: cell `⌊t/dwell_s⌋` of each worker is independently `Bad`
+//! with the stationary probability `pi_bad` (a pure hash of the cell
+//! index), and the loss rate within a cell is `p_bad` or `p_good`. That
+//! keeps the process bursty at the dwell timescale while staying O(1)
+//! per query and exactly replayable.
+//!
+//! Degenerate contract: a rate-0 process never rejects a draw, so every
+//! message succeeds on attempt 1 with `tm` equal to the lossless
+//! `transfer_end` bit-for-bit — and the simulator only ever *consults* a
+//! loss process where one is attached, so "no process" ≡ "rate 0" ≡
+//! today's lossless path.
+
+use super::bond::{Bond, BondSchedule};
+use super::link::Link;
+
+/// Default retransmission timeout base (s): attempt `k`'s retry starts
+/// `rto·2^k` after the failed attempt's wire time ends.
+pub const DEFAULT_RTO_S: f64 = 0.2;
+/// Backoff exponent cap: backoff never exceeds `rto·2^MAX_BACKOFF_EXP`.
+pub const MAX_BACKOFF_EXP: u32 = 6;
+/// Attempt cap — a termination guarantee under rate-1.0 bursts (models
+/// an eventual out-of-band recovery path). With exponential backoff the
+/// capped worst case is minutes, not forever.
+pub const MAX_ATTEMPTS: u32 = 12;
+
+const SALT_DRAW: u64 = 0x9E3779B97F4A7C15;
+const SALT_MSG: u64 = 0xD1B54A32D192ED03;
+const SALT_ATTEMPT: u64 = 0xA0761D6478BD642F;
+const SALT_STATE: u64 = 0xE7037ED1A0B428DB;
+
+/// SplitMix64 finalizer — the pure mixing step behind every draw.
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Uniform in [0, 1) from four mixed words.
+fn hash01(seed: u64, a: u64, b: u64, c: u64) -> f64 {
+    let x = mix(
+        seed ^ a.wrapping_mul(SALT_DRAW)
+            ^ b.wrapping_mul(SALT_MSG)
+            ^ c.wrapping_mul(SALT_ATTEMPT),
+    );
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// The loss model one worker's transport runs under.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LossKind {
+    /// Every attempt is lost independently with probability `p`.
+    Iid { p: f64 },
+    /// Discretized Gilbert–Elliott: each dwell cell of `dwell_s` seconds
+    /// is independently `Bad` with the stationary probability `pi_bad`;
+    /// attempts sent during a bad cell are lost with `p_bad`, otherwise
+    /// `p_good`. Bursty at the dwell timescale, O(1) per query.
+    GilbertElliott { p_good: f64, p_bad: f64, pi_bad: f64, dwell_s: f64 },
+}
+
+/// A scripted loss-rate spike (from `ChurnEvent::LossBurst`): while
+/// `t ∈ [start_s, end_s)` the worker's loss rate is at least `rate`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LossBurstWindow {
+    pub start_s: f64,
+    pub end_s: f64,
+    pub rate: f64,
+}
+
+/// A per-worker message-loss process with retransmission parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LossProcess {
+    kind: LossKind,
+    seed: u64,
+    rto_s: f64,
+    bursts: Vec<LossBurstWindow>,
+}
+
+/// One fully priced lossy transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LossyOutcome {
+    /// final (successful) attempt's transmission end — the link's next
+    /// busy-from time
+    pub tm: f64,
+    /// final attempt's wire seconds (`tm − last attempt start`)
+    pub tx_secs: f64,
+    /// seconds lost to failed attempts + backoff gaps before the final
+    /// attempt started (0 when attempt 1 succeeded)
+    pub retx_secs: f64,
+    /// total attempts (1 = no loss)
+    pub attempts: u32,
+}
+
+impl LossProcess {
+    /// i.i.d. loss with probability `p` per attempt.
+    pub fn iid(p: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "loss rate {p} out of [0, 1]");
+        Self { kind: LossKind::Iid { p }, seed, rto_s: DEFAULT_RTO_S, bursts: Vec::new() }
+    }
+
+    /// Discretized Gilbert–Elliott bursty loss (see the module docs).
+    pub fn gilbert_elliott(
+        p_good: f64,
+        p_bad: f64,
+        pi_bad: f64,
+        dwell_s: f64,
+        seed: u64,
+    ) -> Self {
+        for (name, v) in
+            [("p_good", p_good), ("p_bad", p_bad), ("pi_bad", pi_bad)]
+        {
+            assert!((0.0..=1.0).contains(&v), "{name} = {v} out of [0, 1]");
+        }
+        assert!(dwell_s > 0.0 && dwell_s.is_finite(), "dwell_s {dwell_s}");
+        Self {
+            kind: LossKind::GilbertElliott { p_good, p_bad, pi_bad, dwell_s },
+            seed,
+            rto_s: DEFAULT_RTO_S,
+            bursts: Vec::new(),
+        }
+    }
+
+    /// Override the retransmission timeout base.
+    pub fn with_rto(mut self, rto_s: f64) -> Self {
+        assert!(rto_s > 0.0 && rto_s.is_finite());
+        self.rto_s = rto_s;
+        self
+    }
+
+    /// Attach scripted loss-burst windows (how `elastic` bakes
+    /// `ChurnEvent::LossBurst` in).
+    pub fn with_bursts(mut self, mut bursts: Vec<LossBurstWindow>) -> Self {
+        bursts.sort_by(|a, b| a.start_s.total_cmp(&b.start_s));
+        self.bursts = bursts;
+        self
+    }
+
+    pub fn kind(&self) -> &LossKind {
+        &self.kind
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn rto_s(&self) -> f64 {
+        self.rto_s
+    }
+
+    pub fn bursts(&self) -> &[LossBurstWindow] {
+        &self.bursts
+    }
+
+    /// Whether every draw trivially succeeds — the degenerate process
+    /// that is bit-identical to no process at all.
+    pub fn is_lossless(&self) -> bool {
+        let base = match self.kind {
+            LossKind::Iid { p } => p == 0.0,
+            LossKind::GilbertElliott { p_good, p_bad, pi_bad, .. } => {
+                p_good == 0.0 && (p_bad == 0.0 || pi_bad == 0.0)
+            }
+        };
+        base && self.bursts.iter().all(|b| b.rate == 0.0)
+    }
+
+    /// Backoff before retry `attempt + 1` (exponential, capped).
+    pub fn backoff(&self, attempt: u32) -> f64 {
+        self.rto_s * f64::from(1u32 << attempt.min(MAX_BACKOFF_EXP))
+    }
+
+    /// The loss rate worker `worker` sees at time `t` (base process,
+    /// spiked by any covering burst window).
+    pub fn rate_at(&self, worker: u32, t: f64) -> f64 {
+        let mut p = match self.kind {
+            LossKind::Iid { p } => p,
+            LossKind::GilbertElliott { p_good, p_bad, pi_bad, dwell_s } => {
+                let cell = (t.max(0.0) / dwell_s) as u64;
+                let bad = hash01(
+                    self.seed ^ SALT_STATE,
+                    u64::from(worker),
+                    cell,
+                    0,
+                ) < pi_bad;
+                if bad {
+                    p_bad
+                } else {
+                    p_good
+                }
+            }
+        };
+        for b in &self.bursts {
+            if b.start_s <= t && t < b.end_s {
+                p = p.max(b.rate);
+            }
+        }
+        p
+    }
+
+    /// Pure seeded draw: is attempt `attempt` of message `msg` from
+    /// `worker`, sent at `t`, lost?
+    pub fn lost(&self, worker: u32, msg: u64, attempt: u32, t: f64) -> bool {
+        let p = self.rate_at(worker, t);
+        if p <= 0.0 {
+            return false;
+        }
+        if p >= 1.0 {
+            return true;
+        }
+        hash01(self.seed, u64::from(worker), msg, u64::from(attempt)) < p
+    }
+
+    /// Price one lossy transfer on a single-path link: attempt-by-attempt
+    /// `transfer_end` with backoff restarts. `bits = 0` messages carry no
+    /// payload and cannot be lost (they price exactly as today).
+    pub fn price(
+        &self,
+        link: &Link,
+        worker: u32,
+        msg: u64,
+        start: f64,
+        bits: u64,
+    ) -> LossyOutcome {
+        let mut attempt = 0u32;
+        let mut s = start;
+        loop {
+            let tm = link.transfer_end(s, bits);
+            if bits == 0
+                || attempt + 1 >= MAX_ATTEMPTS
+                || !self.lost(worker, msg, attempt, s)
+            {
+                return LossyOutcome {
+                    tm,
+                    tx_secs: tm - s,
+                    retx_secs: s - start,
+                    attempts: attempt + 1,
+                };
+            }
+            s = tm + self.backoff(attempt);
+            attempt += 1;
+        }
+    }
+
+    /// Bonded form: the *whole payload* is retransmitted on loss (the
+    /// water-filling split is per attempt). Each path becomes free at its
+    /// attempt `tx_end`, and the retry starts `backoff` later on every
+    /// path. Returns the final attempt's schedule plus the attempt count
+    /// and the earliest-path delay accumulated before it.
+    pub fn price_bonded(
+        &self,
+        bond: &Bond,
+        worker: u32,
+        msg: u64,
+        starts: &[f64],
+        bits: u64,
+    ) -> (BondSchedule, u32, f64) {
+        let first_min =
+            starts.iter().copied().fold(f64::INFINITY, f64::min);
+        let mut attempt = 0u32;
+        let mut cur: Vec<f64> = starts.to_vec();
+        loop {
+            let sched = bond.schedule(&cur, bits);
+            let sent_at =
+                cur.iter().copied().fold(f64::INFINITY, f64::min);
+            if bits == 0
+                || attempt + 1 >= MAX_ATTEMPTS
+                || !self.lost(worker, msg, attempt, sent_at)
+            {
+                let retx = sent_at - first_min;
+                return (sched, attempt + 1, retx);
+            }
+            let back = self.backoff(attempt);
+            for (c, &e) in cur.iter_mut().zip(&sched.tx_end) {
+                *c = e + back;
+            }
+            attempt += 1;
+        }
+    }
+
+    /// Realized mean loss rate over `[t0, t1)` — the audit layer's ground
+    /// truth (exact for the piecewise-constant rate process: integrates
+    /// over dwell-cell and burst-window breakpoints).
+    pub fn mean_rate_over(&self, worker: u32, t0: f64, t1: f64) -> f64 {
+        if !(t1 > t0) {
+            return self.rate_at(worker, t0);
+        }
+        let mut cuts = vec![t0, t1];
+        if let LossKind::GilbertElliott { dwell_s, .. } = self.kind {
+            let mut c = (t0 / dwell_s).floor() * dwell_s + dwell_s;
+            // dwell cells shorter than 1e-6 of the span would blow up the
+            // breakpoint list; the grid is fine enough below that
+            let max_cuts = 4_000_000usize;
+            let mut n = 0;
+            while c < t1 && n < max_cuts {
+                cuts.push(c);
+                c += dwell_s;
+                n += 1;
+            }
+        }
+        for b in &self.bursts {
+            if b.start_s > t0 && b.start_s < t1 {
+                cuts.push(b.start_s);
+            }
+            if b.end_s > t0 && b.end_s < t1 {
+                cuts.push(b.end_s);
+            }
+        }
+        cuts.sort_by(f64::total_cmp);
+        let mut acc = 0.0;
+        for w in cuts.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            if hi > lo {
+                acc += self.rate_at(worker, 0.5 * (lo + hi)) * (hi - lo);
+            }
+        }
+        acc / (t1 - t0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{BandwidthTrace, TraceKind};
+
+    fn link(bps: f64, lat: f64) -> Link {
+        Link::new(BandwidthTrace::constant(bps), lat)
+    }
+
+    #[test]
+    fn rate_zero_prices_bit_identical_to_lossless() {
+        let lp = LossProcess::iid(0.0, 7);
+        assert!(lp.is_lossless());
+        let links = [
+            link(1e8, 0.1),
+            Link::new(
+                BandwidthTrace::new(TraceKind::Sine {
+                    mean_bps: 5e7,
+                    amp_bps: 2e7,
+                    period_s: 3.0,
+                }),
+                0.25,
+            ),
+        ];
+        for l in &links {
+            for bits in [0u64, 1, 4_000_000, 900_000_000] {
+                for start in [0.0, 1.75, 42.0] {
+                    let out = lp.price(l, 3, 11, start, bits);
+                    assert_eq!(
+                        out.tm.to_bits(),
+                        l.transfer_end(start, bits).to_bits()
+                    );
+                    assert_eq!(out.attempts, 1);
+                    assert_eq!(out.retx_secs, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn draws_are_pure_and_seeded() {
+        let lp = LossProcess::iid(0.4, 99);
+        for (w, m, a) in [(0u32, 0u64, 0u32), (1, 5, 2), (7, 1000, 3)] {
+            assert_eq!(lp.lost(w, m, a, 1.0), lp.lost(w, m, a, 1.0));
+        }
+        // a different seed flips at least one of many draws
+        let other = LossProcess::iid(0.4, 100);
+        let diff = (0..200u64)
+            .any(|m| lp.lost(0, m, 0, 0.0) != other.lost(0, m, 0, 0.0));
+        assert!(diff, "seeds must drive the draws");
+        // the empirical rate tracks p
+        let hits = (0..10_000u64)
+            .filter(|&m| lp.lost(0, m, 0, 0.0))
+            .count();
+        let frac = hits as f64 / 10_000.0;
+        assert!((frac - 0.4).abs() < 0.02, "empirical rate {frac}");
+    }
+
+    #[test]
+    fn retransmission_never_makes_an_arrival_earlier() {
+        let l = link(1e8, 0.05);
+        for seed in 0..20u64 {
+            let lp = LossProcess::iid(0.5, seed).with_rto(0.1);
+            for msg in 0..50u64 {
+                let out = lp.price(&l, 0, msg, 1.0, 10_000_000);
+                let lossless = l.transfer_end(1.0, 10_000_000);
+                assert!(
+                    out.tm >= lossless,
+                    "lossy tm {} < lossless {lossless}",
+                    out.tm
+                );
+                if out.attempts == 1 {
+                    assert_eq!(out.tm.to_bits(), lossless.to_bits());
+                    assert_eq!(out.retx_secs, 0.0);
+                } else {
+                    assert!(out.retx_secs > 0.0);
+                }
+                // tx_secs is the FINAL attempt's wire time only
+                assert!((out.tx_secs - 0.1).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let lp = LossProcess::iid(0.5, 0).with_rto(0.25);
+        assert_eq!(lp.backoff(0), 0.25);
+        assert_eq!(lp.backoff(1), 0.5);
+        assert_eq!(lp.backoff(3), 2.0);
+        assert_eq!(lp.backoff(MAX_BACKOFF_EXP + 5), lp.backoff(MAX_BACKOFF_EXP));
+    }
+
+    #[test]
+    fn rate_one_terminates_at_the_attempt_cap() {
+        let lp = LossProcess::iid(1.0, 0).with_rto(0.01);
+        let out = lp.price(&link(1e8, 0.0), 0, 0, 0.0, 1_000_000);
+        assert_eq!(out.attempts, MAX_ATTEMPTS);
+        assert!(out.retx_secs > 0.0);
+        // and each failed attempt occupied the link for its full wire time
+        assert!(out.tm > (MAX_ATTEMPTS as f64) * 0.01);
+    }
+
+    #[test]
+    fn gilbert_elliott_is_bursty_at_the_dwell_scale() {
+        let lp = LossProcess::gilbert_elliott(0.0, 0.9, 0.3, 10.0, 5);
+        // rate is constant within a dwell cell, varies across cells
+        let mut bad_cells = 0;
+        for c in 0..200u64 {
+            let t = c as f64 * 10.0 + 5.0;
+            let r = lp.rate_at(0, t);
+            assert_eq!(r, lp.rate_at(0, t + 3.0), "constant within a cell");
+            assert!(r == 0.0 || r == 0.9);
+            bad_cells += usize::from(r > 0.0);
+        }
+        let frac = bad_cells as f64 / 200.0;
+        assert!((frac - 0.3).abs() < 0.1, "bad-cell fraction {frac}");
+        // independent per worker
+        let differs = (0..50u64).any(|c| {
+            let t = c as f64 * 10.0 + 5.0;
+            lp.rate_at(0, t) != lp.rate_at(1, t)
+        });
+        assert!(differs, "workers must draw independent state streams");
+    }
+
+    #[test]
+    fn burst_windows_spike_the_rate() {
+        let lp = LossProcess::iid(0.05, 0).with_bursts(vec![LossBurstWindow {
+            start_s: 10.0,
+            end_s: 20.0,
+            rate: 0.8,
+        }]);
+        assert_eq!(lp.rate_at(0, 5.0), 0.05);
+        assert_eq!(lp.rate_at(0, 10.0), 0.8);
+        assert_eq!(lp.rate_at(0, 19.99), 0.8);
+        assert_eq!(lp.rate_at(0, 20.0), 0.05, "[start, end) like DegradeWindow");
+        assert!(!lp.is_lossless());
+        // mean over a covering span mixes the two rates exactly
+        let m = lp.mean_rate_over(0, 0.0, 40.0);
+        assert!((m - (0.05 * 30.0 + 0.8 * 10.0) / 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_rate_over_matches_iid_and_ge_cells() {
+        let iid = LossProcess::iid(0.2, 0);
+        assert!((iid.mean_rate_over(0, 3.0, 50.0) - 0.2).abs() < 1e-12);
+        let ge = LossProcess::gilbert_elliott(0.01, 0.9, 0.25, 5.0, 9);
+        // integrate by hand over the dwell grid
+        let (t0, t1) = (2.5, 102.5);
+        let mut acc = 0.0;
+        let mut t = t0;
+        while t < t1 {
+            let end = ((t / 5.0).floor() * 5.0 + 5.0).min(t1);
+            acc += ge.rate_at(2, 0.5 * (t + end)) * (end - t);
+            t = end;
+        }
+        let want = acc / (t1 - t0);
+        assert!((ge.mean_rate_over(2, t0, t1) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bonded_pricing_retransmits_the_whole_payload() {
+        use crate::netsim::Bond;
+        let bond = Bond::new(vec![link(1e8, 0.05), link(2e7, 0.3)]);
+        let lossless = bond.schedule(&[0.0, 0.0], 50_000_000);
+        let lp0 = LossProcess::iid(0.0, 3);
+        let (s0, a0, r0) = lp0.price_bonded(&bond, 0, 0, &[0.0, 0.0], 50_000_000);
+        assert_eq!(s0.arrival.to_bits(), lossless.arrival.to_bits());
+        assert_eq!((a0, r0), (1, 0.0));
+        // force losses: the final schedule starts later, never earlier
+        let lp = LossProcess::iid(0.97, 3).with_rto(0.1);
+        let (s, attempts, retx) =
+            lp.price_bonded(&bond, 0, 0, &[0.0, 0.0], 50_000_000);
+        assert!(attempts > 1);
+        assert!(retx > 0.0);
+        assert!(s.arrival > lossless.arrival);
+    }
+}

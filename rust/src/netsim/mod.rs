@@ -7,11 +7,13 @@
 pub mod bond;
 pub mod fabric;
 pub mod link;
+pub mod loss;
 pub mod monitor;
 pub mod trace;
 
 pub use bond::{Bond, BondSchedule};
 pub use fabric::Fabric;
 pub use link::Link;
+pub use loss::{LossBurstWindow, LossKind, LossProcess, LossyOutcome};
 pub use monitor::{FabricMonitor, NetworkMonitor, SlotEstimate};
 pub use trace::{BandwidthTrace, DegradeWindow, TraceKind};

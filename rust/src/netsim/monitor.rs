@@ -31,6 +31,10 @@ pub struct NetworkMonitor {
     bw: Ewma,
     lat: Ewma,
     comp: Ewma,
+    /// mean transmission attempts per delivered message (lossy transport,
+    /// DESIGN.md §Robustness): 1.0 on a clean link, `1/(1-p)` in
+    /// expectation under i.i.d. loss rate `p`
+    att: Ewma,
     /// multiplicative measurement noise (0 = exact)
     pub(crate) noise: f64,
     rng: Rng,
@@ -44,6 +48,7 @@ impl NetworkMonitor {
             bw: Ewma::new(alpha),
             lat: Ewma::new(alpha),
             comp: Ewma::new(alpha),
+            att: Ewma::new(alpha),
             noise: 0.0,
             rng: Rng::new(seed),
         }
@@ -86,6 +91,14 @@ impl NetworkMonitor {
         self.comp.update(secs);
     }
 
+    /// A delivered message took `attempts` transmissions (1 = no loss).
+    /// Deliberately noise-free: attempt counts are exact in any transport.
+    pub fn observe_attempts(&mut self, attempts: f64) {
+        if attempts >= 1.0 {
+            self.att.update(attempts);
+        }
+    }
+
     /// Estimated bandwidth `a` (bits/s).
     pub fn bandwidth(&self) -> Option<f64> {
         self.bw.get()
@@ -99,6 +112,17 @@ impl NetworkMonitor {
     /// Estimated per-iteration compute time `T_comp` (s).
     pub fn compute_time(&self) -> Option<f64> {
         self.comp.get()
+    }
+
+    /// Mean attempts per delivered message (`None` before any sample).
+    pub fn attempts(&self) -> Option<f64> {
+        self.att.get()
+    }
+
+    /// Estimated message-loss rate, inverted from the attempt EWMA: a
+    /// geometric attempt count with mean `m` implies `p = 1 - 1/m`.
+    pub fn loss_rate(&self) -> Option<f64> {
+        self.att.get().map(|m| (1.0 - 1.0 / m.max(1.0)).clamp(0.0, 1.0))
     }
 }
 
@@ -369,6 +393,15 @@ impl FabricMonitor {
         self.comp.update(secs);
     }
 
+    /// Worker `worker` delivered its gradient in `attempts` transmissions
+    /// (path 0 — the retransmission loop rides the whole bond, so bonded
+    /// workers record on their first path too). Lossy workers are always
+    /// singleton timeline classes, so there is no class-level form.
+    pub fn observe_attempts(&mut self, worker: usize, attempts: f64) {
+        let s = self.own_slot(worker);
+        self.slots[s][0].observe_attempts(attempts);
+    }
+
     /// Broadcast a bandwidth probe to every path (tests / active probing).
     pub fn observe_bandwidth(&mut self, bps: f64) {
         if self.noisy {
@@ -592,6 +625,17 @@ impl FabricMonitor {
 
     pub fn compute_time(&self) -> Option<f64> {
         self.comp.get()
+    }
+
+    /// Aggregate message-loss estimate: the **worst** (max) per-worker
+    /// loss rate over active workers with an attempt sample — the rate
+    /// that gates the synchronous aggregation, mirroring the bottleneck
+    /// `(a, b)` views. `None` until some worker has retried or delivered
+    /// first-try (clean workers that have reported attempts pull the
+    /// aggregate toward 0 only for themselves; max keeps the planner
+    /// honest about the lossiest link).
+    pub fn loss_rate(&self) -> Option<f64> {
+        self.active_views(|i| self.link(i).loss_rate()).reduce(f64::max)
     }
 }
 
@@ -999,6 +1043,40 @@ mod tests {
         let snap = fm.slot_estimates();
         assert_eq!(snap.len(), 1);
         assert_eq!(snap[0].worker, 1);
+    }
+
+    #[test]
+    fn attempt_samples_invert_to_a_loss_rate() {
+        let mut m = NetworkMonitor::new(0.3, 0);
+        assert!(m.loss_rate().is_none());
+        // mean attempts 2.0 under i.i.d. loss p = 0.5
+        for _ in 0..200 {
+            m.observe_attempts(2.0);
+        }
+        let p = m.loss_rate().unwrap();
+        assert!((p - 0.5).abs() < 1e-9, "p = {p}");
+        // clean link: attempts 1.0 -> p = 0 exactly
+        let mut clean = NetworkMonitor::new(0.3, 0);
+        clean.observe_attempts(1.0);
+        assert_eq!(clean.loss_rate().unwrap(), 0.0);
+        // degenerate samples ignored
+        clean.observe_attempts(0.0);
+        assert_eq!(clean.loss_rate().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn fabric_loss_rate_is_the_worst_active_worker() {
+        let mut fm = FabricMonitor::new(3, 0.5, 0);
+        assert!(fm.loss_rate().is_none());
+        for _ in 0..100 {
+            fm.observe_attempts(0, 1.0); // clean
+            fm.observe_attempts(1, 4.0); // p = 0.75
+        }
+        let p = fm.loss_rate().unwrap();
+        assert!((p - 0.75).abs() < 1e-6, "p = {p}");
+        // the lossy worker departs: aggregate snaps to the clean links
+        fm.set_active(1, false);
+        assert_eq!(fm.loss_rate().unwrap(), 0.0);
     }
 
     #[test]

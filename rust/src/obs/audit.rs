@@ -421,6 +421,58 @@ pub fn oracle_regret(windows: &[PlanWindow], fabric: &Fabric) -> RegretReport {
 }
 
 // ---------------------------------------------------------------------------
+// Loss audit (predicted vs realized message-loss rate)
+// ---------------------------------------------------------------------------
+
+/// Predicted-vs-realized message-loss rate for one plan window — the
+/// lossy-transport analogue of the bandwidth calibration: the planner's
+/// attempt-count EWMA ([`crate::netsim::NetworkMonitor::loss_rate`])
+/// snapshotted at the re-plan, against the seeded loss processes' exact
+/// mean rate over the window it governed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowLoss {
+    pub index: usize,
+    /// the planner's loss estimate at the re-plan (`None` when the
+    /// strategy carried no loss model)
+    pub predicted: Option<f64>,
+    /// realized loss rate over the window: max over lossy workers of the
+    /// process mean — the same worst-link convention the planner's
+    /// fabric-level estimate folds over
+    pub realized: f64,
+    /// the aggregation deadline the plan armed (`None` = wait-for-all)
+    pub deadline: Option<f64>,
+}
+
+/// Realized fabric-level loss rate over `[t0, t1)`: max over lossy
+/// workers of each process's exact mean rate (burst windows included).
+fn realized_loss_rate(fabric: &Fabric, t0: f64, t1: f64) -> f64 {
+    (0..fabric.workers())
+        .filter_map(|w| fabric.loss(w).map(|l| l.mean_rate_over(w as u32, t0, t1)))
+        .fold(0.0, f64::max)
+}
+
+/// Score each window's loss prediction against the ground-truth process
+/// means. Empty on a lossless fabric and for streaming-fed windows
+/// (no [`ReplanRecord`] to read the prediction from).
+pub fn loss_audit(windows: &[PlanWindow], fabric: &Fabric) -> Vec<WindowLoss> {
+    if !fabric.has_loss() {
+        return Vec::new();
+    }
+    windows
+        .iter()
+        .filter_map(|w| {
+            let rec = w.rec.as_ref()?;
+            Some(WindowLoss {
+                index: w.index,
+                predicted: rec.predicted_loss,
+                realized: realized_loss_rate(fabric, w.t_start, w.t_end),
+                deadline: rec.deadline,
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
 // Estimator calibration
 // ---------------------------------------------------------------------------
 
@@ -542,6 +594,8 @@ pub struct AuditReport {
     pub windows: Vec<PlanWindow>,
     pub regret: RegretReport,
     pub calibration: CalibrationReport,
+    /// per-window predicted-vs-realized loss rates (empty when lossless)
+    pub loss: Vec<WindowLoss>,
 }
 
 /// Run the buffered audit over a trace and score it against `fabric`
@@ -552,7 +606,8 @@ pub fn audit_events(events: &[TraceEvent], fabric: &Fabric) -> AuditReport {
     let windows = plan.windows().to_vec();
     let regret = oracle_regret(&windows, fabric);
     let calibration = calibrate(&windows, fabric);
-    AuditReport { summary: *plan.summary(), windows, regret, calibration }
+    let loss = loss_audit(&windows, fabric);
+    AuditReport { summary: *plan.summary(), windows, regret, calibration, loss }
 }
 
 impl AuditReport {
@@ -589,6 +644,25 @@ impl AuditReport {
                 format!("{:.6}", self.regret.cumulative),
             ],
         ];
+        let mut plan_rows = plan_rows;
+        if !self.loss.is_empty() {
+            let n = self.loss.len() as f64;
+            let realized = self.loss.iter().map(|l| l.realized).sum::<f64>() / n;
+            let preds: Vec<f64> =
+                self.loss.iter().filter_map(|l| l.predicted).collect();
+            let predicted = if preds.is_empty() {
+                "-".into()
+            } else {
+                format!(
+                    "{:.4}",
+                    preds.iter().sum::<f64>() / preds.len() as f64
+                )
+            };
+            plan_rows.push(vec![
+                "mean loss pred / real".into(),
+                format!("{predicted} / {realized:.4}"),
+            ]);
+        }
         let mut out = format_table(&["plan audit", "value"], &plan_rows);
         let cal_rows: Vec<Vec<String>> = self
             .calibration
@@ -631,18 +705,24 @@ impl AuditReport {
         out
     }
 
-    /// Deterministic per-window CSV (regret columns joined by index).
+    /// Deterministic per-window CSV (regret and loss columns joined by
+    /// index; the loss columns are empty on a lossless fabric).
     pub fn csv(&self) -> String {
         let regret: BTreeMap<usize, &WindowRegret> =
             self.regret.windows.iter().map(|r| (r.index, r)).collect();
+        let loss: BTreeMap<usize, &WindowLoss> =
+            self.loss.iter().map(|l| (l.index, l)).collect();
         let mut out = String::from(
             "window,iter_first,iters,t_start,t_end,predicted,realized,bias,\
-             rel_err,realized_a,oracle_tau,oracle_delta,oracle_round,regret\n",
+             rel_err,realized_a,oracle_tau,oracle_delta,oracle_round,regret,\
+             predicted_loss,realized_loss,deadline\n",
         );
         for w in &self.windows {
             let r = regret.get(&w.index);
+            let l = loss.get(&w.index);
             out.push_str(&format!(
-                "{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{}\n",
+                "{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{},{},{},\
+                 {},{},{}\n",
                 w.index,
                 w.iter_first,
                 w.iters,
@@ -657,6 +737,11 @@ impl AuditReport {
                 r.map_or("".into(), |r| format!("{:.6}", r.oracle_delta)),
                 r.map_or("".into(), |r| format!("{:.6}", r.oracle_round)),
                 r.map_or("".into(), |r| format!("{:.6}", r.regret)),
+                l.and_then(|l| l.predicted)
+                    .map_or(String::new(), |p| format!("{p:.6}")),
+                l.map_or(String::new(), |l| format!("{:.6}", l.realized)),
+                l.and_then(|l| l.deadline)
+                    .map_or(String::new(), |d| format!("{d:.6}")),
             ));
         }
         out
@@ -695,6 +780,7 @@ impl AuditReport {
             ("calibration", Json::arr(cal)),
             ("cumulative_regret", Json::num(self.regret.cumulative)),
             ("governed_iters", Json::num(s.iters as f64)),
+            ("loss_windows", Json::num(self.loss.len() as f64)),
             ("mean_predicted", Json::num(s.mean_predicted())),
             ("mean_realized", Json::num(s.mean_realized())),
             ("plan_bias", Json::num(s.bias())),
@@ -724,6 +810,8 @@ mod tests {
             predicted_round: predicted,
             pessimistic: None,
             links: Vec::new(),
+            predicted_loss: None,
+            deadline: None,
         }
     }
 
@@ -926,6 +1014,52 @@ mod tests {
     }
 
     #[test]
+    fn loss_audit_joins_predictions_with_process_means() {
+        use crate::netsim::LossProcess;
+        let mut fabric =
+            Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.2);
+        fabric.set_loss(0, LossProcess::iid(0.3, 42));
+        let mut r = rec(2e7, 0.2, 0.2);
+        r.predicted_loss = Some(0.25);
+        r.deadline = Some(2.0);
+        let windows = vec![
+            PlanWindow {
+                index: 0,
+                iter_first: 1,
+                iters: 10,
+                t_start: 1.0,
+                t_end: 3.0,
+                predicted: 0.2,
+                rec: Some(r),
+            },
+            PlanWindow {
+                index: 1,
+                iter_first: 11,
+                iters: 5,
+                t_start: 3.0,
+                t_end: 4.0,
+                predicted: 0.2,
+                rec: None,
+            },
+        ];
+        let audit = loss_audit(&windows, &fabric);
+        assert_eq!(audit.len(), 1, "record-less windows are skipped");
+        let l = &audit[0];
+        assert_eq!(l.index, 0);
+        assert_eq!(l.predicted, Some(0.25));
+        assert!(
+            (l.realized - 0.3).abs() < 1e-12,
+            "i.i.d. mean rate is the base rate, got {}",
+            l.realized
+        );
+        assert_eq!(l.deadline, Some(2.0));
+        // lossless fabric -> vacuous loss audit
+        let clean =
+            Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.2);
+        assert!(loss_audit(&windows, &clean).is_empty());
+    }
+
+    #[test]
     fn report_renders_deterministically() {
         let fabric =
             Fabric::homogeneous(2, BandwidthTrace::constant(2e7), 0.2);
@@ -943,6 +1077,11 @@ mod tests {
         assert_eq!(a.table(), b.table());
         assert!(a.table().contains("plan bias"));
         assert!(a.csv().lines().count() == 3, "header + 2 windows");
+        // the loss columns exist but stay empty on a lossless fabric
+        let header = a.csv().lines().next().unwrap().to_string();
+        assert!(header.ends_with("predicted_loss,realized_loss,deadline"));
+        assert!(a.loss.is_empty());
+        assert!(!a.table().contains("mean loss pred / real"));
         let parsed = Json::parse(&a.json().to_string()).unwrap();
         assert_eq!(parsed.to_string(), a.json().to_string());
     }

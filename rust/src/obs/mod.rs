@@ -38,9 +38,10 @@ use std::collections::BTreeSet;
 pub mod audit;
 
 pub use audit::{
-    audit_events, calibrate, oracle_regret, realized_lan_bottleneck,
-    AuditReport, AuditSummary, CalibrationReport, CalibrationRow, PlanAudit,
-    PlanWindow, RegretReport, WindowRegret,
+    audit_events, calibrate, loss_audit, oracle_regret,
+    realized_lan_bottleneck, AuditReport, AuditSummary, CalibrationReport,
+    CalibrationRow, PlanAudit, PlanWindow, RegretReport, WindowLoss,
+    WindowRegret,
 };
 
 // ---------------------------------------------------------------------------
@@ -60,6 +61,10 @@ pub enum Phase {
     Compute,
     /// gradient ready but the (shared) uplink is still busy
     QueueWait,
+    /// failed attempts + backoff gaps before the final (successful)
+    /// transmission attempt started (lossy transport,
+    /// DESIGN.md §Robustness); carved out of the tail of `QueueWait`
+    Retransmit,
     /// bits on the LAN wire (bonded workers: the water-filled window)
     LanTransfer,
     /// end-to-end link latency `b`
@@ -82,12 +87,13 @@ pub enum Phase {
 
 impl Phase {
     /// Number of phases (sizes the attribution accumulator).
-    pub const COUNT: usize = 11;
+    pub const COUNT: usize = 12;
 
     /// All phases, in taxonomy order.
     pub const ALL: [Phase; Phase::COUNT] = [
         Phase::Compute,
         Phase::QueueWait,
+        Phase::Retransmit,
         Phase::LanTransfer,
         Phase::Propagation,
         Phase::AggWait,
@@ -104,6 +110,7 @@ impl Phase {
         match self {
             Phase::Compute => "compute",
             Phase::QueueWait => "queue_wait",
+            Phase::Retransmit => "retransmit",
             Phase::LanTransfer => "lan_transfer",
             Phase::Propagation => "propagation",
             Phase::AggWait => "agg_wait",
@@ -182,8 +189,26 @@ pub struct WorkerTrace {
     /// aggregators don't send on the LAN: their middle spans are empty
     pub aggregator: bool,
     pub spans: [Span; 5],
+    /// seconds of the `QueueWait` span's tail spent on failed
+    /// transmission attempts + backoff gaps (lossy transport); 0 on
+    /// lossless links. Exporters carve this out as [`Phase::Retransmit`]
+    /// via [`split_retransmit`], keeping the tiling exact.
+    pub retx_secs: f64,
     /// per-path windows for bonded workers (empty on single-path links)
     pub paths: Vec<PathSpanRec>,
+}
+
+/// Split a `QueueWait` span into (queue proper, retransmit tail): the
+/// final attempt started at `span.t1`, so the `retx` seconds of failed
+/// attempts + backoff immediately precede it. Clamped so both halves stay
+/// inside the original span — the tiling invariant is preserved exactly.
+pub fn split_retransmit(span: Span, retx: f64) -> (Span, Span) {
+    debug_assert_eq!(span.phase, Phase::QueueWait);
+    let mid = (span.t1 - retx.max(0.0)).clamp(span.t0, span.t1);
+    (
+        Span { phase: Phase::QueueWait, t0: span.t0, t1: mid },
+        Span { phase: Phase::Retransmit, t0: mid, t1: span.t1 },
+    )
 }
 
 /// One region's WAN timeline boundaries for a tick (two-tier only).
@@ -257,6 +282,15 @@ pub enum ClockEvent {
     },
     /// a region elected a new aggregator (churn-composed re-election)
     AggregatorElected { region: u32, old: Option<u32>, new: u32 },
+    /// a worker's message needed `attempts` transmission attempts; the
+    /// failed ones + backoff gaps cost `retx_secs` (DESIGN.md §Robustness)
+    Retransmit { worker: u32, attempts: u32, retx_secs: f64 },
+    /// the aggregation deadline cut this sync at `cut` with `late`
+    /// arrivals still in flight
+    DeadlineCut { cut: f64, late: usize },
+    /// a gradient that missed an earlier deadline was absorbed into this
+    /// round's aggregation at +1 staleness
+    LateAbsorb { worker: u32 },
 }
 
 /// One tier of a DeCo re-plan: the monitor inputs the solver saw and the
@@ -287,6 +321,12 @@ pub struct ReplanRecord {
     /// per-slot estimator snapshot at the solve instant — what the
     /// calibration layer scores against ground-truth trace means
     pub links: Vec<SlotEstimate>,
+    /// the loss rate the planner assumed (loss-aware DeCo only; `None`
+    /// for loss-blind strategies) — the audit layer scores it against the
+    /// realized rate from the fabric's loss processes
+    pub predicted_loss: Option<f64>,
+    /// the aggregation deadline the plan set (`None` = wait-for-all)
+    pub deadline: Option<f64>,
 }
 
 /// A typed trace event on the virtual timeline.
@@ -392,7 +432,13 @@ impl Attribution {
             match fastest_worker(&tk.workers, None, false) {
                 Some(w) => {
                     for s in &w.spans[..4] {
-                        self.add(s.phase, s.t0, s.t1);
+                        if s.phase == Phase::QueueWait && w.retx_secs > 0.0 {
+                            let (q, r) = split_retransmit(*s, w.retx_secs);
+                            self.add(q.phase, q.t0, q.t1);
+                            self.add(r.phase, r.t0, r.t1);
+                        } else {
+                            self.add(s.phase, s.t0, s.t1);
+                        }
                     }
                     let last = &w.spans[4];
                     self.add(Phase::StragglerWait, last.t0, last.t1);
@@ -418,7 +464,13 @@ impl Attribution {
             let tc_m = match m {
                 Some(w) => {
                     for s in &w.spans[..4] {
-                        self.add(s.phase, s.t0, s.t1);
+                        if s.phase == Phase::QueueWait && w.retx_secs > 0.0 {
+                            let (q, r) = split_retransmit(*s, w.retx_secs);
+                            self.add(q.phase, q.t0, q.t1);
+                            self.add(r.phase, r.t0, r.t1);
+                        } else {
+                            self.add(s.phase, s.t0, s.t1);
+                        }
                     }
                     w.spans[3].t1
                 }
@@ -453,12 +505,19 @@ impl Attribution {
         tm: f64,
         tc_w: f64,
         tx_secs: f64,
+        retx_secs: f64,
         tc: f64,
     ) {
         let start = (tm - tx_secs).max(ts).min(tm);
         let spans = worker_spans(ts - t_comp, ts, start, tm, tc_w, tc);
         for s in &spans[..4] {
-            self.add(s.phase, s.t0, s.t1);
+            if s.phase == Phase::QueueWait && retx_secs > 0.0 {
+                let (q, r) = split_retransmit(*s, retx_secs);
+                self.add(q.phase, q.t0, q.t1);
+                self.add(r.phase, r.t0, r.t1);
+            } else {
+                self.add(s.phase, s.t0, s.t1);
+            }
         }
         self.add(Phase::StragglerWait, spans[4].t0, spans[4].t1);
         self.horizon = self.horizon.max(tc);
@@ -518,6 +577,13 @@ impl Attribution {
     /// Fraction computing (forward/backward + compress + EF).
     pub fn compute_fraction(&self) -> f64 {
         self.fraction(Phase::Compute)
+    }
+
+    /// Fraction of the makespan the gating chain spent on failed
+    /// transmission attempts + backoff (0 on lossless runs) —
+    /// the headline robustness figure (DESIGN.md §Robustness).
+    pub fn retransmit_fraction(&self) -> f64 {
+        self.fraction(Phase::Retransmit)
     }
 
     /// The stall-attribution report as an aligned text table.
@@ -739,7 +805,17 @@ fn perfetto_events(events: &[TraceEvent], truth: Option<&Fabric>) -> Json {
                 let iter_args =
                     Json::obj(vec![("iter", Json::num(tk.iter as f64))]);
                 for w in &tk.workers {
+                    let mut emit: Vec<Span> = Vec::with_capacity(6);
                     for s in &w.spans {
+                        if s.phase == Phase::QueueWait && w.retx_secs > 0.0 {
+                            let (q, r) = split_retransmit(*s, w.retx_secs);
+                            emit.push(q);
+                            emit.push(r);
+                        } else {
+                            emit.push(*s);
+                        }
+                    }
+                    for s in &emit {
                         if s.t1 > s.t0 {
                             out.push(complete(
                                 s.phase.name(),
@@ -890,6 +966,7 @@ mod tests {
                     tc_w,
                     tc,
                 ),
+                retx_secs: 0.0,
                 paths: Vec::new(),
             })
             .collect();
@@ -965,7 +1042,7 @@ mod tests {
                 &[(tm, tc_w, tx), (tm + 0.1, tc, tx)],
                 tc,
             ));
-            by_flat.record_flat(ts, t_comp, tm, tc_w, tx, tc);
+            by_flat.record_flat(ts, t_comp, tm, tc_w, tx, 0.0, tc);
         }
         for p in Phase::ALL {
             assert_eq!(
@@ -990,6 +1067,7 @@ mod tests {
             } else {
                 worker_spans(ts - t_comp, ts, ts, tm, tc_w, tc)
             },
+            retx_secs: 0.0,
             paths: Vec::new(),
         };
         let tk = TickTrace {
@@ -1038,11 +1116,53 @@ mod tests {
     #[test]
     fn table_lists_all_chain_phases() {
         let mut a = Attribution::new();
-        a.record_flat(0.2, 0.2, 0.5, 0.7, 0.2, 1.0);
+        a.record_flat(0.2, 0.2, 0.5, 0.7, 0.2, 0.0, 1.0);
         let t = a.table();
-        for p in ["compute", "lan_transfer", "straggler_wait", "makespan"] {
+        for p in [
+            "compute",
+            "lan_transfer",
+            "retransmit",
+            "straggler_wait",
+            "makespan",
+        ] {
             assert!(t.contains(p), "missing {p} in:\n{t}");
         }
+    }
+
+    #[test]
+    fn retransmit_split_preserves_the_tiling() {
+        // queue span [0.2, 0.5]: 0.2 s of it was retransmission
+        let (q, r) = split_retransmit(
+            Span { phase: Phase::QueueWait, t0: 0.2, t1: 0.5 },
+            0.2,
+        );
+        assert_eq!((q.t0, q.t1), (0.2, 0.3));
+        assert_eq!((r.t0, r.t1), (0.3, 0.5));
+        assert_eq!(r.phase, Phase::Retransmit);
+        // retx larger than the span clamps, never inverts
+        let (q, r) = split_retransmit(
+            Span { phase: Phase::QueueWait, t0: 0.2, t1: 0.5 },
+            5.0,
+        );
+        assert_eq!(q.dur(), 0.0);
+        assert_eq!((r.t0, r.t1), (0.2, 0.5));
+    }
+
+    #[test]
+    fn flat_attribution_with_retransmit_still_sums_to_makespan() {
+        let mut a = Attribution::new();
+        // ts=0.2, final attempt starts 0.6 (tm 0.8, tx 0.2), of the queue
+        // window [0.2, 0.6] the last 0.3 s were failed attempts + backoff
+        a.record_flat(0.2, 0.2, 0.8, 1.0, 0.2, 0.3, 1.2);
+        assert!((a.attributed() - a.makespan()).abs() < 1e-12);
+        assert!((a.total(Phase::Retransmit) - 0.3).abs() < 1e-12);
+        assert!((a.total(Phase::QueueWait) - 0.1).abs() < 1e-12);
+        assert!(a.retransmit_fraction() > 0.0);
+        // zero retx attributes nothing to the retransmit phase
+        let mut b = Attribution::new();
+        b.record_flat(0.2, 0.2, 0.8, 1.0, 0.2, 0.0, 1.2);
+        assert_eq!(b.total(Phase::Retransmit), 0.0);
+        assert!((b.attributed() - b.makespan()).abs() < 1e-12);
     }
 
     #[test]
@@ -1094,6 +1214,8 @@ mod tests {
                     predicted_round: 0.21,
                     pessimistic: None,
                     links: Vec::new(),
+                    predicted_loss: None,
+                    deadline: None,
                 },
             },
         ];

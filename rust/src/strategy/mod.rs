@@ -15,6 +15,7 @@
 //!   (a, b, T_comp).
 
 use crate::deco::{solve, DecoInput, DecoOutput};
+use crate::netsim::loss::{DEFAULT_RTO_S, MAX_ATTEMPTS, MAX_BACKOFF_EXP};
 use crate::netsim::FabricMonitor;
 use crate::obs::{ReplanRecord, TierReplan};
 use crate::timesim::{t_avg_closed_form, PipelineParams};
@@ -123,12 +124,18 @@ pub struct TierParams {
     /// the WAN uncompressed with no extra delay share (and on a flat
     /// topology there is no WAN tier at all)
     pub wan: Option<(usize, f64)>,
+    /// aggregation deadline (seconds past the sync start, DESIGN.md
+    /// §Robustness): the coordinator closes the round at
+    /// `min(slowest arrival, TS + deadline)` and absorbs late gradients
+    /// into the stragglers' delay queues next round. `None` = wait for
+    /// all arrivals (bit-identical to the historical semantics).
+    pub deadline: Option<f64>,
 }
 
 impl TierParams {
     /// A tier-blind decision (flat topologies, legacy strategies).
     pub fn flat(tau: usize, delta: f64) -> Self {
-        Self { tau, delta, wan: None }
+        Self { tau, delta, wan: None, deadline: None }
     }
 
     /// End-to-end staleness the worker delay queues realize: each tier's
@@ -202,6 +209,8 @@ fn replan_record(
     lan_in: DecoInput,
     lan: DecoOutput,
     wan: Option<(DecoInput, DecoOutput)>,
+    predicted_loss: Option<f64>,
+    deadline: Option<f64>,
 ) -> ReplanRecord {
     let predicted_round = t_avg_closed_form(&PipelineParams {
         a: lan_in.a,
@@ -226,6 +235,8 @@ fn replan_record(
             .bandwidth_pessimistic()
             .zip(ctx.monitor.latency_pessimistic()),
         links: ctx.monitor.slot_estimates(),
+        predicted_loss,
+        deadline,
     }
 }
 
@@ -249,6 +260,14 @@ pub enum StrategyKind {
     /// re-election included). Falls back to plain DeCo-SGD behaviour on a
     /// flat topology.
     DecoTwoTier { update_every: usize },
+    /// Loss-aware DeCo (DESIGN.md §Robustness): plans on the monitored
+    /// message-loss rate `p̂` by (1) inflating the effective bandwidth
+    /// input `a ← a·(1−p̂)` — the `1/(1−p̂)` expected-retransmission tax —
+    /// and (2) emitting a quantile-`q` aggregation deadline so one
+    /// worker's retransmit tail cannot stall the round. Event-triggered
+    /// like `DecoEvent`, refreshed every E iterations and on every
+    /// membership-epoch move (loss bursts bump the epoch).
+    DecoLossy { update_every: usize, quantile: f64 },
 }
 
 impl StrategyKind {
@@ -270,6 +289,9 @@ impl StrategyKind {
             Self::DecoTwoTier { update_every } => {
                 Box::new(DecoTwoTier::new(*update_every))
             }
+            Self::DecoLossy { update_every, quantile } => {
+                Box::new(DecoLossy::new(*update_every, *quantile))
+            }
         }
     }
 
@@ -283,6 +305,7 @@ impl StrategyKind {
             Self::DecoSgd { .. } => "DeCo-SGD",
             Self::DecoEvent { .. } => "DeCo-SGD (event)",
             Self::DecoTwoTier { .. } => "DeCo-SGD (2-tier)",
+            Self::DecoLossy { .. } => "DeCo-SGD (lossy)",
         }
     }
 
@@ -398,7 +421,8 @@ impl Strategy for CocktailSgd {
             let input = ctx.deco_input();
             let out = solve(&input);
             self.chosen = Some(out);
-            self.last_replan = Some(replan_record(ctx, input, out, None));
+            self.last_replan =
+                Some(replan_record(ctx, input, out, None, None, None));
         }
         let out = self.chosen.unwrap();
         (out.tau, out.delta)
@@ -464,7 +488,8 @@ impl Strategy for DecoSgd {
             let input = ctx.deco_input();
             let out = solve(&input);
             self.current = Some(out);
-            self.last_replan = Some(replan_record(ctx, input, out, None));
+            self.last_replan =
+                Some(replan_record(ctx, input, out, None, None, None));
         }
         let out = self.current.unwrap();
         (out.tau, out.delta)
@@ -537,8 +562,128 @@ impl Strategy for DecoTwoTier {
                 tau: lan.tau,
                 delta: lan.delta,
                 wan: wan.map(|(_, o)| (o.tau, o.delta)),
+                deadline: None,
             });
-            self.last_replan = Some(replan_record(ctx, lan_in, lan, wan));
+            self.last_replan =
+                Some(replan_record(ctx, lan_in, lan, wan, None, None));
+        }
+        self.current.unwrap()
+    }
+
+    fn take_replan(&mut self) -> Option<ReplanRecord> {
+        self.last_replan.take()
+    }
+}
+
+/// Aggregation deadline covering the quantile-`q` retransmission tail of
+/// a link with message-loss rate `p`: `A(q)` attempts of wire time (one
+/// attempt = `attempt_secs`, the solved-δ transfer at the TRUE link rate)
+/// plus the exponential backoff spent between them, plus half an attempt
+/// of slack so the cut never lands mid-delivery of the common case.
+/// `None` when `p = 0` — no loss, wait for all (the bit-identity path).
+pub fn lossy_deadline(
+    p: f64,
+    q: f64,
+    attempt_secs: f64,
+    rto_s: f64,
+) -> Option<f64> {
+    if p <= 0.0 {
+        return None;
+    }
+    let p = p.min(0.95);
+    let q = q.clamp(0.5, 0.9999);
+    // P(delivered within A attempts) = 1 − p^A ≥ q  ⇒  A ≥ ln(1−q)/ln(p)
+    let a = (((1.0 - q).ln() / p.ln()).ceil().max(1.0) as u32)
+        .min(MAX_ATTEMPTS);
+    let mut backoff = 0.0;
+    for i in 0..a.saturating_sub(1) {
+        backoff += rto_s * f64::from(1u32 << i.min(MAX_BACKOFF_EXP));
+    }
+    Some(f64::from(a) * attempt_secs + backoff + 0.5 * attempt_secs)
+}
+
+/// Loss-aware DeCo (DESIGN.md §Robustness). Two changes over plain
+/// event-triggered DeCo, both driven by the monitored loss rate `p̂`
+/// ([`FabricMonitor::loss_rate`], inverted from delivered-message attempt
+/// counts):
+///
+/// 1. **Retransmit tax** — each delivered message costs `1/(1−p̂)`
+///    transmissions in expectation, so the solver sees the effective
+///    goodput `a·(1−p̂)` and sizes (τ, δ) for the bandwidth the lossy
+///    link actually delivers.
+/// 2. **Quantile deadline** — [`lossy_deadline`] bounds the round at the
+///    q-quantile of the retransmission tail; stragglers past it are
+///    absorbed as +1 staleness instead of stalling every worker.
+pub struct DecoLossy {
+    update_every: usize,
+    quantile: f64,
+    current: Option<TierParams>,
+    seen_epoch: u64,
+    last_replan: Option<ReplanRecord>,
+}
+
+impl DecoLossy {
+    pub fn new(update_every: usize, quantile: f64) -> Self {
+        assert!(
+            quantile > 0.0 && quantile < 1.0,
+            "deadline quantile must lie in (0, 1), got {quantile}"
+        );
+        Self {
+            update_every: update_every.max(1),
+            quantile,
+            current: None,
+            seen_epoch: 0,
+            last_replan: None,
+        }
+    }
+
+    pub fn current(&self) -> Option<TierParams> {
+        self.current
+    }
+}
+
+impl Strategy for DecoLossy {
+    fn name(&self) -> &'static str {
+        "DeCo-SGD (lossy)"
+    }
+
+    fn params(&mut self, ctx: &StrategyCtx) -> (usize, f64) {
+        let tp = self.params_tiered(ctx);
+        (tp.tau, tp.delta)
+    }
+
+    fn params_tiered(&mut self, ctx: &StrategyCtx) -> TierParams {
+        let epoch_moved = ctx.membership_epoch != self.seen_epoch;
+        self.seen_epoch = ctx.membership_epoch;
+        if self.current.is_none()
+            || ctx.iter % self.update_every == 1
+            || epoch_moved
+        {
+            let raw = ctx.deco_input();
+            let p = ctx.monitor.loss_rate().unwrap_or(0.0).min(0.95);
+            // p = 0 multiplies by exactly 1.0 — the solve input is
+            // bitwise the lossless one, so the plan (and the run) is too
+            let input = DecoInput { a: raw.a * (1.0 - p), ..raw };
+            let out = solve(&input);
+            // one attempt rides the true link rate `a`; only the
+            // *expected repeat count* is a planning construct
+            let attempt_secs = out.delta * raw.s_g / raw.a + raw.b;
+            let deadline =
+                lossy_deadline(p, self.quantile, attempt_secs, DEFAULT_RTO_S);
+            self.current = Some(TierParams {
+                tau: out.tau,
+                delta: out.delta,
+                wan: None,
+                deadline,
+            });
+            self.last_replan = Some(replan_record(
+                ctx,
+                input,
+                out,
+                None,
+                Some(p),
+                deadline,
+            ));
         }
         self.current.unwrap()
     }
@@ -650,6 +795,10 @@ mod tests {
         let mut kinds = StrategyKind::paper_baselines();
         kinds.push(StrategyKind::DecoEvent { update_every: 20 });
         kinds.push(StrategyKind::DecoTwoTier { update_every: 20 });
+        kinds.push(StrategyKind::DecoLossy {
+            update_every: 20,
+            quantile: 0.99,
+        });
         for k in kinds {
             let mut s = k.build();
             let m = FabricMonitor::new(1, 0.3, 0);
@@ -696,7 +845,12 @@ mod tests {
         let flat = TierParams::flat(3, 0.1);
         assert_eq!(flat.total_tau(), 3);
         assert_eq!(flat.wan_delta(), 1.0);
-        let two = TierParams { tau: 1, delta: 0.5, wan: Some((4, 0.02)) };
+        let two = TierParams {
+            tau: 1,
+            delta: 0.5,
+            wan: Some((4, 0.02)),
+            deadline: None,
+        };
         assert_eq!(two.total_tau(), 5);
         assert_eq!(two.wan_delta(), 0.02);
     }
@@ -776,6 +930,73 @@ mod tests {
         let tp = tiered.params_tiered(&ctx(&m, 1));
         assert_eq!(tp.wan, None, "no WAN ctx -> tier-blind plan");
         assert_eq!((tp.tau, tp.delta), (tau_p, delta_p));
+    }
+
+    #[test]
+    fn lossy_deadline_quantile_math() {
+        // p = 0.5, q = 0.875: 1 − 0.5^A ≥ 0.875 ⇔ A = 3 exactly.
+        // Backoff between 3 attempts: rto·(1 + 2) = 3·rto.
+        let c = 2.0;
+        let rto = 0.2;
+        let d = lossy_deadline(0.5, 0.875, c, rto).unwrap();
+        assert!((d - (3.0 * c + 3.0 * rto + 0.5 * c)).abs() < 1e-12, "{d}");
+        // a tighter quantile demands a longer deadline
+        assert!(lossy_deadline(0.5, 0.99, c, rto).unwrap() > d);
+        // heavier loss demands a longer deadline
+        assert!(lossy_deadline(0.8, 0.875, c, rto).unwrap() > d);
+        // lossless: no deadline at all (wait-for-all bit-identity)
+        assert_eq!(lossy_deadline(0.0, 0.99, c, rto), None);
+        assert_eq!(lossy_deadline(-1.0, 0.99, c, rto), None);
+        // attempts stay bounded even at absurd (p, q)
+        let worst = lossy_deadline(0.999, 0.9999, c, rto).unwrap();
+        assert!(worst.is_finite());
+    }
+
+    #[test]
+    fn lossy_deco_plans_on_the_monitored_loss_rate() {
+        let mut m = FabricMonitor::new(2, 0.9, 0);
+        for _ in 0..30 {
+            m.observe_bandwidth(5e8);
+            m.observe_latency(0.1);
+            m.observe_compute(0.5);
+        }
+        // clean monitor: bit-identical plan to plain DeCo, no deadline
+        let mut lossy = DecoLossy::new(20, 0.99);
+        let mut plain = DecoSgd::new(20);
+        let tp0 = lossy.params_tiered(&ctx(&m, 1));
+        assert_eq!((tp0.tau, tp0.delta), plain.params(&ctx(&m, 1)));
+        assert_eq!(tp0.deadline, None);
+        let rec = lossy.take_replan().unwrap();
+        assert_eq!(rec.predicted_loss, Some(0.0));
+        assert_eq!(rec.deadline, None);
+        // worker 1 starts retrying every message twice: p̂ → 0.5, and the
+        // re-solve (on the epoch trigger) compresses harder against the
+        // halved effective bandwidth and emits a finite deadline
+        for _ in 0..200 {
+            m.observe_attempts(1, 2.0);
+        }
+        let moved = StrategyCtx { membership_epoch: 1, ..ctx(&m, 5) };
+        let tp1 = lossy.params_tiered(&moved);
+        assert!(
+            tp1.delta <= tp0.delta,
+            "δ must not grow when goodput halves: {} -> {}",
+            tp0.delta,
+            tp1.delta
+        );
+        let d = tp1.deadline.expect("lossy plan carries a deadline");
+        assert!(d.is_finite() && d > 0.0);
+        let rec = lossy.take_replan().unwrap();
+        let p = rec.predicted_loss.unwrap();
+        assert!((p - 0.5).abs() < 1e-6, "p̂ = {p}");
+        assert_eq!(rec.deadline, Some(d));
+        // frozen between boundaries with a stable epoch
+        assert_eq!(
+            lossy.params_tiered(&StrategyCtx {
+                membership_epoch: 1,
+                ..ctx(&m, 6)
+            }),
+            tp1
+        );
     }
 
     #[test]

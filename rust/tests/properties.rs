@@ -8,7 +8,8 @@ use deco::coordinator::{TrainLoop, TrainParams, VirtualClock, WorkerState};
 use deco::deco::solve::{delta_star, solve, tau_range, DecoInput};
 use deco::metrics::sink::CsvSink;
 use deco::netsim::{
-    BandwidthTrace, Bond, DegradeWindow, Fabric, Link, TraceKind,
+    BandwidthTrace, Bond, DegradeWindow, Fabric, Link, LossBurstWindow,
+    LossProcess, TraceKind,
 };
 use deco::optim::Quadratic;
 use deco::strategy::StrategyKind;
@@ -1114,6 +1115,319 @@ fn prop_path_degrade_never_speeds_the_bond() {
             return Err(format!(
                 "degrading path {p} sped the bond: {slowed} < {healthy}"
             ));
+        }
+        Ok(())
+    });
+}
+
+// ---- lossy transport + deadline-bounded aggregation (DESIGN.md
+// §Robustness) ----
+
+/// A random seeded loss process: i.i.d. or bursty Gilbert–Elliott, with a
+/// random retransmission timeout.
+fn gen_loss(g: &mut Gen) -> LossProcess {
+    let seed = g.rng.next_u64();
+    let p = if g.bool() {
+        LossProcess::iid(g.f64(0.05, 0.7), seed)
+    } else {
+        LossProcess::gilbert_elliott(
+            g.f64(0.0, 0.1),
+            g.f64(0.5, 0.95),
+            g.f64(0.05, 0.5),
+            g.f64(0.5, 10.0),
+            seed,
+        )
+    };
+    p.with_rto(g.f64(0.05, 0.5))
+}
+
+#[test]
+fn prop_retransmission_never_prices_earlier() {
+    // lost attempts only ever push the arrival later: a first-attempt
+    // success is bit-identical to the lossless transfer, any
+    // retransmission lands at or after it (transfer_end is monotone in
+    // its start) and books positive retransmit time, and empty payloads
+    // cannot be lost — on single links and bonds alike
+    forall("retransmission_never_earlier", 80, |g| {
+        let link = gen_scan_link(g);
+        let loss = gen_loss(g);
+        let worker = g.size(0, 7) as u32;
+        let msg = g.rng.next_u64() % 1000;
+        let start = g.f64(0.0, 100.0);
+        let bits = g.size(1, 500_000_000) as u64;
+        let base = link.transfer_end(start, bits);
+        let out = loss.price(&link, worker, msg, start, bits);
+        if out.attempts < 1 || out.attempts > 12 {
+            return Err(format!("attempts {} out of range", out.attempts));
+        }
+        if out.attempts == 1 {
+            if out.tm.to_bits() != base.to_bits() || out.retx_secs != 0.0 {
+                return Err(format!(
+                    "first-attempt success must price losslessly \
+                     ({} vs {base}, retx {})",
+                    out.tm, out.retx_secs
+                ));
+            }
+        } else {
+            if out.tm < base - 1e-6 {
+                return Err(format!(
+                    "retransmitted arrival {} precedes lossless {base} \
+                     ({} attempts)",
+                    out.tm, out.attempts
+                ));
+            }
+            if out.retx_secs <= 0.0 {
+                return Err(format!(
+                    "{} attempts booked retx {}",
+                    out.attempts, out.retx_secs
+                ));
+            }
+        }
+        let zero = loss.price(&link, worker, msg, start, 0);
+        if zero.attempts != 1 || zero.retx_secs != 0.0 {
+            return Err("bits=0 messages cannot be lost".into());
+        }
+        // same contract through the bonded water-filling scheduler
+        let bond = gen_bond(g, 2);
+        let starts = vec![start; 2];
+        let clean = bond.schedule(&starts, bits);
+        let (sched, attempts, retx) =
+            loss.price_bonded(&bond, worker, msg, &starts, bits);
+        if attempts == 1 {
+            if sched.arrival.to_bits() != clean.arrival.to_bits()
+                || retx != 0.0
+            {
+                return Err(
+                    "bonded first-attempt success must price losslessly"
+                        .into(),
+                );
+            }
+        } else if sched.arrival < clean.arrival - 1e-6 {
+            return Err(format!(
+                "bonded retransmitted arrival {} precedes lossless {}",
+                sched.arrival, clean.arrival
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rate_zero_loss_and_slack_deadline_are_identity() {
+    // the two robustness knobs at their neutral settings must be
+    // structural no-ops: a rate-0 loss process (even one carrying rate-0
+    // burst windows) and a deadline too slack to ever bind leave every
+    // tick bit-identical to the plain clock — on the shared-class engine
+    // and the reference scan alike, under random churn masks
+    forall("rate_zero_and_slack_deadline_identity", 30, |g| {
+        let n = [3usize, 16][g.size(0, 1)];
+        let nproto = g.size(1, 2);
+        let protos: Vec<Link> =
+            (0..nproto).map(|_| gen_scan_link(g)).collect();
+        let links: Vec<Link> = (0..n)
+            .map(|_| protos[g.size(0, nproto - 1)].clone())
+            .collect();
+        let mut fabric = Fabric::new(links);
+        if g.bool() {
+            fabric.set_bond(0, gen_bond(g, 2));
+        }
+        let mut variant_fabric = fabric.clone();
+        let s = g.f64(0.0, 20.0);
+        variant_fabric.set_loss(
+            g.size(0, n - 1),
+            LossProcess::iid(0.0, g.rng.next_u64()).with_bursts(vec![
+                LossBurstWindow {
+                    start_s: s,
+                    end_s: s + g.f64(0.5, 10.0),
+                    rate: 0.0,
+                },
+            ]),
+        );
+        if variant_fabric.has_loss() {
+            return Err("rate-0 loss must be dropped structurally".into());
+        }
+        let mut plain = VirtualClock::new(fabric.clone());
+        let mut variant = VirtualClock::new(variant_fabric.clone());
+        let mut plain_ref =
+            VirtualClock::new(fabric).with_reference_scan();
+        let mut variant_ref =
+            VirtualClock::new(variant_fabric).with_reference_scan();
+        variant.set_deadline(Some(1e12));
+        variant_ref.set_deadline(Some(1e12));
+        let mut mask = vec![true; n];
+        let ticks = g.size(5, 20);
+        for k in 1..=ticks {
+            if g.bool() {
+                flip_one_keeping_nonempty(g, &mut mask);
+            }
+            let active = if g.bool() { Some(&mask[..]) } else { None };
+            let t_comp = g.f64(0.01, 0.5);
+            let tau = g.size(0, 4);
+            let bits = g.size(0, 20_000_000) as u64;
+            let a = plain.tick_members(t_comp, tau, bits, active);
+            let others = [
+                variant.tick_members(t_comp, tau, bits, active),
+                plain_ref.tick_members(t_comp, tau, bits, active),
+                variant_ref.tick_members(t_comp, tau, bits, active),
+            ];
+            for (i, b) in others.iter().enumerate() {
+                if a.ts.to_bits() != b.ts.to_bits()
+                    || a.tm.to_bits() != b.tm.to_bits()
+                    || a.tc.to_bits() != b.tc.to_bits()
+                    || a.tx_secs.to_bits() != b.tx_secs.to_bits()
+                    || b.retx_secs != 0.0
+                {
+                    return Err(format!(
+                        "k={k} n={n}: clock {i} diverged from plain"
+                    ));
+                }
+            }
+            if !variant.late_workers().is_empty() {
+                return Err(format!(
+                    "k={k}: slack deadline marked workers late"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lossy_deadline_clock_matches_reference_scan() {
+    // the shared-timeline engine and the O(n) reference scan must stay
+    // bit-identical under genuine message loss (lossy workers price as
+    // singleton classes keyed on worker id and message id) and a binding
+    // aggregation deadline — every tick report, late set, and per-worker
+    // retransmit view
+    forall("lossy_deadline_vs_reference_scan", 25, |g| {
+        let n = [3usize, 16][g.size(0, 1)];
+        let proto = gen_scan_link(g);
+        let links: Vec<Link> = (0..n).map(|_| proto.clone()).collect();
+        let mut fabric = Fabric::new(links);
+        for _ in 0..g.size(1, 3) {
+            fabric.set_loss(g.size(0, n - 1), gen_loss(g));
+        }
+        if g.bool() {
+            fabric.set_bond(n - 1, gen_bond(g, 2));
+        }
+        let mut shared = VirtualClock::new(fabric.clone());
+        let mut reference = VirtualClock::new(fabric).with_reference_scan();
+        let deadline = if g.bool() { Some(g.f64(0.05, 2.0)) } else { None };
+        shared.set_deadline(deadline);
+        reference.set_deadline(deadline);
+        let mut mask = vec![true; n];
+        let ticks = g.size(5, 25);
+        for k in 1..=ticks {
+            if g.bool() {
+                flip_one_keeping_nonempty(g, &mut mask);
+            }
+            let active = if g.bool() { Some(&mask[..]) } else { None };
+            let t_comp = g.f64(0.01, 0.5);
+            let tau = g.size(0, 4);
+            let bits = g.size(0, 20_000_000) as u64;
+            let a = shared.tick_members(t_comp, tau, bits, active);
+            let b = reference.tick_members(t_comp, tau, bits, active);
+            for (name, x, y) in [
+                ("ts", a.ts, b.ts),
+                ("tm", a.tm, b.tm),
+                ("tc", a.tc, b.tc),
+                ("tx", a.tx_secs, b.tx_secs),
+                ("retx", a.retx_secs, b.retx_secs),
+            ] {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!(
+                        "k={k} n={n}: {name} diverged ({x} vs {y})"
+                    ));
+                }
+            }
+            if shared.late_workers() != reference.late_workers() {
+                return Err(format!(
+                    "k={k}: late sets diverged ({:?} vs {:?})",
+                    shared.late_workers(),
+                    reference.late_workers()
+                ));
+            }
+        }
+        let sw = shared.worker_ticks();
+        let rw = reference.worker_ticks();
+        for w in 0..n {
+            if sw[w].tc.to_bits() != rw[w].tc.to_bits()
+                || sw[w].retx_secs.to_bits() != rw[w].retx_secs.to_bits()
+                || sw[w].attempts != rw[w].attempts
+            {
+                return Err(format!("worker {w} lossy view diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lossy_deadline_train_serial_equals_pooled() {
+    // a full lossy + deadline-bounded DeCo training run must be
+    // bit-identical at every worker-pool size (t_comp pinned): the
+    // sharded reduction, late-gradient absorption, and attempt-count
+    // monitoring are all deterministic in worker order, never in thread
+    // schedule
+    forall("lossy_deadline_serial_vs_pooled", 8, |g| {
+        let workers = g.size(2, 4);
+        let dim = 4096 + g.size(0, 512);
+        let mut fabric =
+            Fabric::homogeneous(workers, BandwidthTrace::constant(1e8), 0.05);
+        fabric.set_loss(0, gen_loss(g));
+        let kind = StrategyKind::DecoLossy {
+            update_every: g.size(1, 10),
+            quantile: 0.9,
+        };
+        let p = TrainParams {
+            gamma: 0.005,
+            max_iters: g.size(40, 100),
+            log_every: g.size(1, 5),
+            t_comp_override: Some(0.05),
+            s_g_override: Some(1e8),
+            fallback: DecoInput { s_g: 1e8, a: 2e7, b: 0.2, t_comp: 0.05 },
+            seed: g.seed,
+            threads: Some(1),
+            ..Default::default()
+        };
+        let seed = g.seed;
+        let quad =
+            || Quadratic::new(dim, workers, 1.0, 0.2, 0.3, 0.3, seed);
+        let mut serial_tl = TrainLoop::with_fabric(
+            quad(),
+            kind.build(),
+            fabric.clone(),
+            p.clone(),
+        );
+        let serial = serial_tl.run("prop");
+        let pooled_p = TrainParams { threads: Some(3), ..p };
+        let mut pooled_tl =
+            TrainLoop::with_fabric(quad(), kind.build(), fabric, pooled_p);
+        let pooled = pooled_tl.run("prop");
+        if serial.total_iters != pooled.total_iters
+            || serial.total_time.to_bits() != pooled.total_time.to_bits()
+        {
+            return Err(format!(
+                "totals diverged: {} iters / {}s vs {} iters / {}s",
+                serial.total_iters,
+                serial.total_time,
+                pooled.total_iters,
+                pooled.total_time
+            ));
+        }
+        if serial.records.len() != pooled.records.len() {
+            return Err("record counts diverged".into());
+        }
+        for (i, (a, b)) in
+            serial.records.iter().zip(&pooled.records).enumerate()
+        {
+            if a.time.to_bits() != b.time.to_bits()
+                || a.loss.to_bits() != b.loss.to_bits()
+                || a.tau != b.tau
+                || a.delta.to_bits() != b.delta.to_bits()
+            {
+                return Err(format!("record {i} diverged across pools"));
+            }
         }
         Ok(())
     });

@@ -28,6 +28,10 @@
 #                         streaming plan-audit fold at n in {16, 1k}
 #                         (the fold series must stay inside the untraced
 #                         tick envelope)
+#   BENCH_lossy.json    — clock hot-loop tick with per-worker message
+#                         loss (i.i.d. / bursty retransmission pricing)
+#                         and a binding deadline cut vs the lossless
+#                         baseline at n in {4, 16}
 #
 # scripts/bench_check.sh gates the BENCH_*.json headlines against the
 # checked-in perf_budgets.json ceilings.
@@ -53,7 +57,8 @@ bond_jsonl="$(mktemp)"
 scale_jsonl="$(mktemp)"
 obs_jsonl="$(mktemp)"
 audit_jsonl="$(mktemp)"
-trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl" "$bond_jsonl" "$scale_jsonl" "$obs_jsonl" "$audit_jsonl"' EXIT
+lossy_jsonl="$(mktemp)"
+trap 'rm -f "$jsonl" "$fab_jsonl" "$ela_jsonl" "$topo_jsonl" "$trace_jsonl" "$bond_jsonl" "$scale_jsonl" "$obs_jsonl" "$audit_jsonl" "$lossy_jsonl"' EXIT
 
 consolidate() {
   # consolidate <jsonl> <out.json>
@@ -107,3 +112,7 @@ consolidate "$obs_jsonl" BENCH_obs.json
 echo "### cargo bench --bench bench_audit"
 DECO_BENCH_JSON="$audit_jsonl" cargo bench --bench bench_audit
 consolidate "$audit_jsonl" BENCH_audit.json
+
+echo "### cargo bench --bench bench_lossy"
+DECO_BENCH_JSON="$lossy_jsonl" cargo bench --bench bench_lossy
+consolidate "$lossy_jsonl" BENCH_lossy.json

@@ -7,39 +7,93 @@
 # only a subset of bench targets ran.
 #
 #   scripts/bench.sh && scripts/bench_check.sh
+#
+# `--record` re-baselines instead of gating: every budgeted benchmark that
+# has a measured median in BENCH_*.json gets its ceiling rewritten to that
+# median (rounded up to two significant figures so the checked-in numbers
+# stay readable); entries without a fresh measurement keep their old
+# ceiling, and the note + tolerance fields pass through untouched.
+#
+#   scripts/bench.sh && scripts/bench_check.sh --record
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+MODE="check"
+if [ "${1:-}" = "--record" ]; then
+  MODE="record"
+elif [ -n "${1:-}" ]; then
+  echo "usage: scripts/bench_check.sh [--record]" >&2
+  exit 2
+fi
+export BENCH_CHECK_MODE="$MODE"
 
 python3 - <<'PY'
 import glob
 import json
+import math
 import sys
+import os
 
 budgets = json.load(open("perf_budgets.json"))
 ceilings = budgets["budgets_ns"]
 tol = budgets.get("tolerance", 1.2)
-seen = 0
-failures = []
+
+# measured medians per budgeted name; a name measured by more than one
+# BENCH file keeps its slowest median (the conservative baseline)
+measured = {}
 for path in sorted(glob.glob("BENCH_*.json")):
     data = json.load(open(path))
     for r in data.get("results", []):
         name = r.get("name")
         if name not in ceilings:
             continue
-        seen += 1
-        limit = ceilings[name] * tol
         med = float(r["median_ns"])
-        status = "ok" if med <= limit else "FAIL"
-        # headroom: how many times under the gate the median sits (<1 =
-        # over budget) — watch this shrink before it ever fails
-        headroom = limit / med if med > 0 else float("inf")
+        measured[name] = max(med, measured.get(name, 0.0))
+
+if os.environ.get("BENCH_CHECK_MODE") == "record":
+    recorded = 0
+    for name, med in sorted(measured.items()):
+        if med <= 0:
+            continue
+        # round UP to 2 significant figures: a readable ceiling that never
+        # undercuts the measurement it came from
+        exp = math.floor(math.log10(med))
+        quantum = 10 ** max(exp - 1, 0)
+        ceiling = int(math.ceil(med / quantum) * quantum)
         print(
-            f"[bench_check] {status:4} {name:<44} "
-            f"median {med:>14.1f} ns  ceiling {ceilings[name]:.0f} x {tol}"
-            f"  headroom {headroom:6.1f}x"
+            f"[bench_check] record {name:<44} "
+            f"median {med:>14.1f} ns  ceiling {ceilings[name]} -> {ceiling}"
         )
-        if med > limit:
-            failures.append(name)
+        ceilings[name] = ceiling
+        recorded += 1
+    kept = len(ceilings) - recorded
+    # note + tolerance (and any future fields) pass through untouched
+    with open("perf_budgets.json", "w") as f:
+        json.dump(budgets, f, indent=2)
+        f.write("\n")
+    print(
+        f"[bench_check] recorded {recorded} ceiling(s) from measured "
+        f"medians ({kept} kept — no fresh measurement)"
+    )
+    sys.exit(0)
+
+seen = 0
+failures = []
+for name in sorted(measured):
+    med = measured[name]
+    seen += 1
+    limit = ceilings[name] * tol
+    status = "ok" if med <= limit else "FAIL"
+    # headroom: how many times under the gate the median sits (<1 =
+    # over budget) — watch this shrink before it ever fails
+    headroom = limit / med if med > 0 else float("inf")
+    print(
+        f"[bench_check] {status:4} {name:<44} "
+        f"median {med:>14.1f} ns  ceiling {ceilings[name]:.0f} x {tol}"
+        f"  headroom {headroom:6.1f}x"
+    )
+    if med > limit:
+        failures.append(name)
 if seen == 0:
     print(
         "[bench_check] no budgeted benchmarks found in BENCH_*.json — "
